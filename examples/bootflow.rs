@@ -1,0 +1,83 @@
+//! Autonomous boot from SPI flash with GPT (paper §II-A).
+//!
+//! Builds a real GPT disk image (protective MBR, CRC-checked header,
+//! partition table, Cheshire boot-type GUID), attaches it as the SPI NOR
+//! flash, walks the GPT **through the simulated SPI datapath** (every byte
+//! costs SPI clock cycles), loads the boot partition into RPC DRAM, and
+//! releases the core — which prints over the UART and halts.
+//!
+//! ```text
+//! cargo run --release --example bootflow
+//! ```
+
+use cheshire::asm::{reg::*, Asm};
+use cheshire::periph::bootrom::BOOT_TYPE_GUID;
+use cheshire::periph::gpt;
+use cheshire::platform::memmap::{DRAM_BASE, UART_BASE};
+use cheshire::platform::{CheshireConfig, Soc};
+use cheshire::sim::Stats;
+
+fn main() {
+    // payload: banner + halt
+    let mut a = Asm::new(DRAM_BASE);
+    a.li(S0, UART_BASE as i64);
+    let msg = b"GPT boot: payload alive\n";
+    for (i, &c) in msg.iter().enumerate() {
+        a.li(T0, c as i64);
+        a.sw(T0, S0, 0);
+        let lbl = format!("p{i}");
+        a.label(&lbl);
+        a.lw(T1, S0, 0x08);
+        a.andi(T1, T1, 0x20);
+        a.beq(T1, ZERO, &lbl);
+    }
+    a.ebreak();
+    let payload = a.finish();
+
+    // a second dummy partition makes the GPT walk non-trivial
+    let disk = gpt::build_disk(&[
+        gpt::PartSpec { type_guid: [0x55; 16], name: "u-boot-env", data: &[0xee; 1024] },
+        gpt::PartSpec { type_guid: BOOT_TYPE_GUID, name: "zsl", data: &payload },
+    ]);
+    println!("disk image: {} KiB, 2 partitions", disk.len() / 1024);
+
+    let mut cfg = CheshireConfig::neo();
+    cfg.boot_mode = cheshire::periph::soc_ctrl::BOOT_SPI_FLASH;
+    let mut soc = Soc::new(cfg);
+    soc.spi.borrow_mut().flash.image = disk;
+
+    // Boot-ROM loader model: GPT parse over the SPI datapath.
+    let (image, spi_cycles) = {
+        let mut spi = soc.spi.borrow_mut();
+        let mut stats = Stats::new();
+        let mut total = 0u64;
+        let image = gpt::load_boot_partition(|off, len| {
+            let (d, c) = spi.read_blocking(off as u32, len, &mut stats);
+            total += c;
+            d
+        })
+        .expect("GPT parse + boot partition load");
+        (image, total)
+    };
+    println!("loaded {} bytes of boot partition over SPI in {} SPI cycles", image.len(), spi_cycles);
+
+    soc.dram_write(0, &image);
+    soc.run_cycles(spi_cycles); // charge the SPI time
+    {
+        let mut sc = soc.soc_ctrl.borrow_mut();
+        sc.scratch[0] = DRAM_BASE as u32;
+        sc.scratch[1] = (DRAM_BASE >> 32) as u32;
+        sc.boot_done = 1;
+    }
+    let cycles = soc.run(10_000_000);
+    assert!(soc.cpu.halted, "payload did not run");
+    let out = soc.uart.borrow().tx_string();
+    println!("UART: {}", out.trim());
+    assert!(out.contains("payload alive"));
+    println!(
+        "total boot cycles: {} ({:.2} ms @200 MHz)",
+        spi_cycles + cycles,
+        (spi_cycles + cycles) as f64 / 200e3
+    );
+    println!("bootflow OK");
+}

@@ -1,0 +1,72 @@
+//! Quickstart: boot the simulated Cheshire platform, run a bare-metal
+//! program that exercises UART + SPM + DRAM, and print the stats.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use cheshire::asm::{reg::*, Asm};
+use cheshire::platform::memmap::{DRAM_BASE, SPM_BASE, UART_BASE};
+use cheshire::platform::{CheshireConfig, Soc};
+
+fn main() {
+    // 1. Instantiate Neo (the paper's silicon demonstrator configuration).
+    let mut soc = Soc::new(CheshireConfig::neo());
+
+    // 2. Assemble a program: print a banner, compute a checksum over SPM,
+    //    store it to DRAM, halt. No external toolchain needed.
+    let mut a = Asm::new(DRAM_BASE);
+    a.li(S0, UART_BASE as i64);
+    let msg = b"hello from cheshire\n";
+    for (i, &c) in msg.iter().enumerate() {
+        a.li(T0, c as i64);
+        a.sw(T0, S0, 0);
+        let lbl = format!("poll{i}");
+        a.label(&lbl);
+        a.lw(T1, S0, 0x08);
+        a.andi(T1, T1, 0x20); // LSR.THRE
+        a.beq(T1, ZERO, &lbl);
+    }
+    // checksum 256 bytes of SPM
+    a.li(S1, SPM_BASE as i64);
+    a.li(S2, 0);
+    a.li(T2, 32);
+    a.label("sum");
+    a.ld(T0, S1, 0);
+    a.add(S2, S2, T0);
+    a.addi(S1, S1, 8);
+    a.addi(T2, T2, -1);
+    a.bne(T2, ZERO, "sum");
+    a.li(T3, (DRAM_BASE + 0x1000) as u32 as i64);
+    a.sd(S2, T3, 0);
+    a.fence();
+    a.ebreak();
+    let img = a.finish();
+
+    // 3. Stage a known pattern in SPM and preload the program (JTAG-style).
+    for i in 0..256usize {
+        soc.llc.spm_raw_mut()[i] = (i % 7) as u8;
+    }
+    soc.preload(&img, DRAM_BASE);
+
+    // 4. Run to completion.
+    let cycles = soc.run(10_000_000);
+    assert!(soc.cpu.halted, "program did not halt");
+    let sum = u64::from_le_bytes(soc.dram_read(0x1000, 8).try_into().unwrap());
+    let expect: u64 = (0..32)
+        .map(|w| u64::from_le_bytes(soc.llc.spm_raw()[w * 8..w * 8 + 8].try_into().unwrap()))
+        .fold(0u64, |a, b| a.wrapping_add(b));
+
+    println!("UART: {}", soc.uart.borrow().tx_string().trim());
+    println!("checksum: {sum:#x} (expected {expect:#x})");
+    assert_eq!(sum, expect);
+    println!("cycles: {cycles}  instructions: {}", soc.stats.get("cpu.instr"));
+    println!(
+        "L1 D$: {} hits / {} misses   RPC DRAM: {} fragments, protocol clean: {}",
+        soc.stats.get("cpu.dcache_hit"),
+        soc.stats.get("cpu.dcache_miss"),
+        soc.stats.get("rpc.fragments"),
+        soc.stats.get("rpc.dev_violations") == 0
+    );
+    println!("quickstart OK");
+}

@@ -1,0 +1,96 @@
+"""AOT lowering: JAX/Pallas models → HLO text artifacts for the Rust runtime.
+
+Run once at build time (``make artifacts``); Python never executes on the
+simulation path. HLO **text** (not ``.serialize()``) is the interchange
+format: jax ≥ 0.5 emits protos with 64-bit instruction ids which the
+image's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts produced (names consumed by ``rust/src/runtime``):
+* ``matmul{T}.hlo.txt``       — O = A·B tile kernel, T ∈ {16, 32, 64}
+* ``matmul_acc{T}.hlo.txt``   — O = A·B + C accumulating tile kernel
+* ``twomm{T}.hlo.txt``        — F = (A·B)·C fused 2MM model
+* ``mlp_int8.hlo.txt``        — tinyML int8 MLP (i32-boxed operands)
+
+Usage: python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+TILE_SIZES = (16, 32, 64)
+MLP_SHAPES = (8, 64, 32)  # batch, hidden-in, hidden-out
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(out_dir: str, name: str, fn, *specs) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  {name:16} {len(text):>8} chars -> {path}")
+    return path
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    print(f"AOT-lowering artifacts into {args.out}")
+
+    for t in TILE_SIZES:
+        f32 = jax.ShapeDtypeStruct((t, t), jnp.float32)
+        emit(args.out, f"matmul{t}", lambda a, b: (model.tile_matmul(a, b),), f32, f32)
+        emit(
+            args.out,
+            f"matmul_acc{t}",
+            lambda a, b, c: (model.tile_matmul_acc(a, b, c),),
+            f32,
+            f32,
+            f32,
+        )
+        emit(
+            args.out,
+            f"twomm{t}",
+            lambda a, b, c: (model.twomm(a, b, c),),
+            f32,
+            f32,
+            f32,
+        )
+
+    b, h_in, h_out = MLP_SHAPES
+    xi = jax.ShapeDtypeStruct((b, h_in), jnp.int32)
+    w1 = jax.ShapeDtypeStruct((h_in, h_in), jnp.int32)
+    w2 = jax.ShapeDtypeStruct((h_in, h_out), jnp.int32)
+    emit(
+        args.out,
+        "mlp_int8",
+        lambda x, a, c: (model.mlp_int8(x, a, c),),
+        xi,
+        w1,
+        w2,
+    )
+    print("done")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

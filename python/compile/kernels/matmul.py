@@ -1,0 +1,128 @@
+"""Layer-1 Pallas kernels: the DSA's tile compute.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): Cheshire's SPM-tiling
+strategy — "keeping reusable matrix tiles in SPM" — maps onto Pallas
+BlockSpecs: each kernel invocation owns VMEM-resident tiles exactly as the
+DSA owns SPM-resident tiles staged by the DMA. Tile sizes are chosen so a
+double-buffered working set fits Neo's 128 KiB SPM (3 × 64×64 f32 tiles =
+48 KiB; ×2 for double buffering = 96 KiB), and are padded internally to
+TPU-friendly (8, 128) granularity by Pallas.
+
+All kernels use ``interpret=True``: the CPU PJRT client cannot execute
+Mosaic custom-calls, and the interpreted lowering produces plain HLO that
+the Rust runtime loads. Real-TPU performance is *estimated* from the
+BlockSpec footprint in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One tile: O = A @ B, accumulated in f32."""
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _matmul_acc_kernel(a_ref, b_ref, c_ref, o_ref):
+    """One tile with accumulation: O = A @ B + C.
+
+    The accumulating form is what makes k-loop tiling composable at the
+    Rust coordinator: partial products stay in the SPM-resident C tile.
+    """
+    o_ref[...] = (
+        jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+        + c_ref[...]
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul(a, b, interpret=True):
+    """Single-tile matmul O = A·B (tile fully VMEM/SPM resident)."""
+    n, k = a.shape
+    k2, m = b.shape
+    assert k == k2, "inner dimensions must agree"
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=interpret,
+    )(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul_acc(a, b, c, interpret=True):
+    """Accumulating tile matmul O = A·B + C."""
+    n, m = c.shape
+    return pl.pallas_call(
+        _matmul_acc_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=interpret,
+    )(a, b, c)
+
+
+def matmul_blocked(a, b, block=64, interpret=True):
+    """Multi-tile matmul with an explicit BlockSpec grid.
+
+    This is the VMEM-scheduled analogue of the coordinator's DMA loop: the
+    grid iterates (i, j, k); Pallas stages A(i,k), B(k,j) blocks into VMEM
+    (≙ DMA into SPM) and accumulates into the O(i,j) block across the k
+    axis — the same schedule `rust/src/coordinator` executes beat-level.
+    """
+    n, kdim = a.shape
+    _, m = b.shape
+    assert n % block == 0 and m % block == 0 and kdim % block == 0
+
+    def kernel(a_ref, b_ref, o_ref):
+        @pl.when(pl.program_id(2) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += jnp.dot(
+            a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+        )
+
+    grid = (n // block, m // block, kdim // block)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block, block), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=interpret,
+    )(a, b)
+
+
+def _int8_matmul_kernel(a_ref, b_ref, o_ref):
+    """Quantized tile: int8 operands (boxed as i32), int32 accumulator.
+
+    Mirrors the PULP-NN-class int8 GEMM the paper cites as DSA motivation
+    [15]; the i32 boxing exists because the Rust `xla` crate's Literal API
+    cannot construct i8 buffers.
+    """
+    a8 = a_ref[...].astype(jnp.int8)
+    b8 = b_ref[...].astype(jnp.int8)
+    o_ref[...] = jax.lax.dot_general(
+        a8,
+        b8,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def int8_matmul(a_i32, b_i32, interpret=True):
+    """Quantized tile matmul: int8 semantics, i32 transport."""
+    n, _ = a_i32.shape
+    _, m = b_i32.shape
+    return pl.pallas_call(
+        _int8_matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.int32),
+        interpret=interpret,
+    )(a_i32, b_i32)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+contract (pytest asserts allclose kernel-vs-ref before artifacts ship)."""
+
+import jax.numpy as jnp
+
+
+def matmul(a, b):
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def matmul_acc(a, b, c):
+    return jnp.dot(a, b, preferred_element_type=jnp.float32) + c
+
+
+def int8_matmul(a_i32, b_i32):
+    a8 = a_i32.astype(jnp.int8)
+    b8 = b_i32.astype(jnp.int8)
+    return jnp.dot(a8.astype(jnp.int32), b8.astype(jnp.int32))
+
+
+def twomm(a, b, c):
+    """Polybench 2MM: F = (A·B)·C."""
+    return jnp.dot(jnp.dot(a, b), c)
+
+
+def mlp_int8(x_i32, w1_i32, w2_i32, shift=7):
+    """TinyML int8 MLP layer pair with ReLU + requantization."""
+    h = jnp.dot(
+        x_i32.astype(jnp.int8).astype(jnp.int32),
+        w1_i32.astype(jnp.int8).astype(jnp.int32),
+    )
+    h = jnp.maximum(h, 0) >> shift
+    h = jnp.clip(h, -128, 127)
+    return jnp.dot(h, w2_i32.astype(jnp.int8).astype(jnp.int32))

@@ -1,0 +1,39 @@
+"""Layer-2 JAX models: the DSA compute graphs, built from the L1 kernels.
+
+Two model families, matching the paper's workload narrative:
+* ``twomm`` — polybench 2MM (the paper's compute-intensive power workload)
+  expressed as two chained Pallas tile matmuls.
+* ``mlp_int8`` — a tinyML int8 MLP layer pair (the PULP-NN/TFLM class of
+  DSA the paper positions Cheshire as a host for [15, 16]).
+
+``aot.py`` lowers jitted instances of these (plus the raw tile kernels the
+Rust DSA model calls per tile) to HLO text once at build time.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import matmul as K
+
+
+def twomm(a, b, c, interpret=True):
+    """F = (A·B)·C with the intermediate staying 'in SPM' (VMEM tile)."""
+    e = K.matmul(a, b, interpret=interpret)
+    return K.matmul(e, c, interpret=interpret)
+
+
+def mlp_int8(x_i32, w1_i32, w2_i32, interpret=True):
+    """TinyML MLP: int8 GEMM → ReLU → requantize (>>7) → int8 GEMM."""
+    h = K.int8_matmul(x_i32, w1_i32, interpret=interpret)
+    h = jnp.maximum(h, 0) >> 7
+    h = jnp.clip(h, -128, 127)
+    return K.int8_matmul(h, w2_i32, interpret=interpret)
+
+
+def tile_matmul(a, b, interpret=True):
+    """The DSA's single-tile job: O = A·B."""
+    return K.matmul(a, b, interpret=interpret)
+
+
+def tile_matmul_acc(a, b, c, interpret=True):
+    """The DSA's accumulating tile job: O = A·B + C."""
+    return K.matmul_acc(a, b, c, interpret=interpret)

@@ -1,0 +1,109 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracle.
+
+Hypothesis sweeps shapes and value distributions; fixed-seed cases pin the
+tile sizes the Rust DSA actually uses. This is the CORE build-time
+correctness signal — `make artifacts` only ships kernels these tests cover.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as K
+from compile.kernels import ref
+
+
+def rand(shape, seed, scale=1.0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(dtype)
+
+
+@pytest.mark.parametrize("t", [16, 32, 64])
+def test_matmul_matches_ref_fixed_tiles(t):
+    a = rand((t, t), 1)
+    b = rand((t, t), 2)
+    got = K.matmul(a, b)
+    want = ref.matmul(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("t", [16, 32, 64])
+def test_matmul_acc_matches_ref_fixed_tiles(t):
+    a = rand((t, t), 3)
+    b = rand((t, t), 4)
+    c = rand((t, t), 5)
+    got = K.matmul_acc(a, b, c)
+    want = ref.matmul_acc(a, b, c)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 48),
+    k=st.integers(1, 48),
+    m=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_shape_sweep(n, k, m, seed):
+    a = rand((n, k), seed)
+    b = rand((k, m), seed + 1)
+    got = K.matmul(a, b)
+    want = ref.matmul(a, b)
+    assert got.shape == (n, m)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_matmul_acc_value_sweep(n, seed, scale):
+    a = rand((n, n), seed, scale)
+    b = rand((n, n), seed + 1, scale)
+    c = rand((n, n), seed + 2, scale * scale)
+    got = K.matmul_acc(a, b, c)
+    want = ref.matmul_acc(a, b, c)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * scale * scale)
+
+
+def test_matmul_blocked_equals_monolithic():
+    n = 128
+    a = rand((n, n), 7)
+    b = rand((n, n), 8)
+    got = K.matmul_blocked(a, b, block=64)
+    want = ref.matmul(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([8, 16, 32]), seed=st.integers(0, 2**31 - 1))
+def test_int8_matmul_exact(n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-128, 128, (n, n), dtype=np.int32)
+    b = rng.integers(-128, 128, (n, n), dtype=np.int32)
+    got = K.int8_matmul(a, b)
+    want = ref.int8_matmul(a, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_int8_matmul_wraps_like_int8():
+    # values beyond int8 range must wrap (the i32 boxing is transport only)
+    a = np.full((4, 4), 130, dtype=np.int32)  # wraps to -126
+    b = np.eye(4, dtype=np.int32)
+    got = np.asarray(K.int8_matmul(a, b))
+    assert (got == -126).all()
+
+
+def test_special_values_propagate():
+    a = np.zeros((8, 8), np.float32)
+    a[0, 0] = np.inf
+    b = np.eye(8, dtype=np.float32)
+    got = np.asarray(K.matmul(a, b))
+    assert np.isinf(got[0, 0])
+    a[0, 0] = np.nan
+    got = np.asarray(K.matmul(a, b))
+    assert np.isnan(got[0, 0])

@@ -1,0 +1,73 @@
+"""L2 model correctness + AOT artifact round-trip checks."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(shape, seed, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(dtype)
+
+
+@pytest.mark.parametrize("t", [16, 32, 64])
+def test_twomm_matches_ref(t):
+    a, b, c = (rand((t, t), s) for s in (1, 2, 3))
+    got = model.twomm(a, b, c)
+    want = ref.twomm(a, b, c)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_mlp_int8_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    b, h_in, h_out = 8, 64, 32
+    x = rng.integers(-128, 128, (b, h_in), dtype=np.int32)
+    w1 = rng.integers(-128, 128, (h_in, h_in), dtype=np.int32)
+    w2 = rng.integers(-128, 128, (h_in, h_out), dtype=np.int32)
+    got = model.mlp_int8(x, w1, w2)
+    want = ref.mlp_int8(x, w1, w2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_model_shapes():
+    a = rand((32, 32), 1)
+    assert model.tile_matmul(a, a).shape == (32, 32)
+    assert model.tile_matmul_acc(a, a, a).shape == (32, 32)
+    assert model.twomm(a, a, a).shape == (32, 32)
+
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "matmul64.hlo.txt")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_artifacts_are_valid_hlo_text():
+    """Every artifact must parse as HLO text and mention an ENTRY."""
+    names = [f for f in os.listdir(ARTIFACTS) if f.endswith(".hlo.txt")]
+    assert len(names) >= 10, f"expected full artifact set, got {names}"
+    for f in names:
+        text = open(os.path.join(ARTIFACTS, f)).read()
+        assert "ENTRY" in text, f"{f} does not look like HLO text"
+        assert "HloModule" in text
+
+
+def test_lowered_twomm_has_single_fusion_chain():
+    """L2 perf check: the 2MM graph must not recompute E (one dot per mm)."""
+    t = 64
+    spec = jax.ShapeDtypeStruct((t, t), jnp.float32)
+    lowered = jax.jit(lambda a, b, c: model.twomm(a, b, c)).lower(spec, spec, spec)
+    hlo = lowered.compiler_ir("hlo").as_hlo_text()
+    assert hlo.count("dot(") <= 2, "2MM must lower to exactly two dots"

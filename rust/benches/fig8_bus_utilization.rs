@@ -1,0 +1,116 @@
+//! Fig. 8 — "Relative RPC DRAM bus utilization on reads and writes."
+//!
+//! The DMA issues read-only and write-only transfers at increasing burst
+//! sizes (8 B … 64 KiB) against the full RPC stack; utilization is
+//! α = useful bytes / (4 B/cycle × window), i.e. the fraction of the
+//! peak 800 MB/s DDR rate attained at 200 MHz. Paper shape: both curves
+//! plateau near α = 1 for bursts ≥2 KiB (the splitter granularity); reads
+//! run ~1.3× higher than writes on average (reads forward ASAP, writes
+//! defer until buffered).
+
+use cheshire::axi::port::{axi_bus, AxiBus};
+use cheshire::axi::types::{full_strb, Ar, Aw, Burst, W};
+use cheshire::model::benchkit::{f2, f3, Table};
+use cheshire::rpc::RpcSubsystem;
+use cheshire::sim::Stats;
+
+/// Stream ~256 KiB in `burst`-byte logical transfers (split into ≤2 KiB
+/// AXI bursts); return utilization α over the active window.
+fn run(burst: u64, write: bool) -> f64 {
+    let bus: AxiBus = axi_bus(32);
+    let mut rpc = RpcSubsystem::neo(0x8000_0000);
+    let mut stats = Stats::new();
+    let mut now = 0u64;
+    for _ in 0..200 {
+        rpc.tick(&bus, now, &mut stats);
+        now += 1;
+    }
+    let total: u64 = (256 * 1024u64).max(burst * 8);
+    let t0 = now;
+    let mut sent = 0u64; // bytes whose AW/AR has been issued
+    let mut outstanding = 0i64;
+    let mut w_left = 0u64;
+    let deadline = now + 60_000_000;
+    while (sent < total || outstanding > 0) && now < deadline {
+        // the DMA issues discrete *transfers* of `burst` bytes: AXI bursts
+        // within one transfer pipeline, but a new transfer starts only when
+        // the previous one completed (paper: "the DMA is programmed to
+        // issue write and read transfers at increasing burst sizes") —
+        // this is what exposes the write path's buffering latency.
+        let new_transfer = sent % burst == 0;
+        let may_issue = if new_transfer { outstanding == 0 } else { outstanding < 2 };
+        if sent < total && may_issue {
+            // next AXI burst: the logical burst size capped at 2 KiB and
+            // at the logical-burst boundary (back-to-back within a burst)
+            let into = sent % burst;
+            let this = (burst - into).min(2048);
+            let addr = 0x8000_0000 + sent % (16 << 20);
+            if write {
+                if w_left == 0 && bus.aw.borrow().can_push() {
+                    bus.aw.borrow_mut().push(Aw { id: 1, addr, len: (this / 8 - 1) as u8, size: 3, burst: Burst::Incr, qos: 0 });
+                    w_left = this / 8;
+                    sent += this;
+                    outstanding += 1;
+                }
+            } else if bus.ar.borrow().can_push() {
+                bus.ar.borrow_mut().push(Ar { id: 1, addr, len: (this / 8 - 1) as u8, size: 3, burst: Burst::Incr, qos: 0 });
+                sent += this;
+                outstanding += 1;
+            }
+        }
+        if w_left > 0 && bus.w.borrow().can_push() {
+            w_left -= 1;
+            bus.w.borrow_mut().push(W { data: vec![0x5a; 8], strb: full_strb(8), last: w_left == 0 });
+        }
+        while let Some(r) = bus.r.borrow_mut().pop() {
+            if r.last {
+                outstanding -= 1;
+            }
+        }
+        while bus.b.borrow_mut().pop().is_some() {
+            outstanding -= 1;
+        }
+        rpc.tick(&bus, now, &mut stats);
+        now += 1;
+    }
+    let window = (now - t0) as f64;
+    let useful = (stats.get("rpc.useful_rd_bytes") + stats.get("rpc.useful_wr_bytes")) as f64;
+    useful / (4.0 * window)
+}
+
+/// Ablation: sweep the frontend's split boundary by retiming the device
+/// page constraint — shows why 2 KiB (the RPC page) is the natural knee.
+fn splitter_ablation() {
+    // emulate smaller effective pages by issuing transfers of exactly the
+    // candidate boundary size back to back (the frontend still splits at
+    // 2 KiB; sub-page transfers show the added per-fragment overhead)
+    let mut t = Table::new(
+        "Ablation — effective fragment size vs read utilization",
+        &["fragment B", "α read"],
+    );
+    for frag in [256u64, 512, 1024, 2048] {
+        t.row(&[frag.to_string(), f3(run(frag, false))]);
+    }
+    t.print();
+    println!("the 2 KiB RPC page is the utilization knee: smaller fragments pay\nACT/RD/PRE + preamble per fragment (paper §II-B splitter rationale)");
+}
+
+fn main() {
+    let mut t = Table::new(
+        "Fig. 8 — RPC DRAM bus utilization vs burst size (paper: plateau ≥2 KiB, reads ≈1.3× writes on avg)",
+        &["burst B", "α read", "α write", "rd/wr"],
+    );
+    let mut ratios = Vec::new();
+    for burst in [8u64, 32, 128, 512, 2048, 8192, 65536] {
+        let ar = run(burst, false);
+        let aw = run(burst, true);
+        ratios.push(ar / aw);
+        t.row(&[burst.to_string(), f3(ar), f3(aw), f2(ar / aw)]);
+    }
+    t.print();
+    let avg = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    println!("average read/write utilization ratio: {avg:.2} (paper: ~1.3)");
+    let big_rd = run(65536, false);
+    println!("peak read throughput: {:.0} MB/s (paper: 750 MB/s)", big_rd * 800.0);
+    splitter_ablation();
+}

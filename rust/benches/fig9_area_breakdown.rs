@@ -1,0 +1,36 @@
+//! Fig. 9 — "Area breakdown of Cheshire implemented in TSMC65 and relative
+//! contribution of the crossbar for different numbers of DSA port pairs."
+//!
+//! Paper anchors: CVA6 dominates in all configurations; the RPC DRAM
+//! controller is ≤7.6 %; the crossbar grows from 3.6 % (no DSA ports) to
+//! 10.6 % (8 pairs), increasing total area by at most 7.8 %.
+
+use cheshire::model::benchkit::{f1, Table};
+use cheshire::model::AreaModel;
+use cheshire::platform::CheshireConfig;
+
+fn main() {
+    let neo_total = AreaModel::cheshire(&CheshireConfig::neo()).total();
+    let mut t = Table::new(
+        "Fig. 9 — Cheshire area vs DSA port pairs (kGE, TSMC65)",
+        &["pairs", "total", "cva6 %", "llc %", "rpc %", "xbar %", "rest %", "Δtotal %"],
+    );
+    for pairs in [0usize, 1, 2, 4, 8] {
+        let mut cfg = CheshireConfig::neo();
+        cfg.dsa_port_pairs = pairs;
+        let b = AreaModel::cheshire(&cfg);
+        t.row(&[
+            pairs.to_string(),
+            f1(b.total()),
+            f1(100.0 * b.frac("cva6")),
+            f1(100.0 * b.frac("llc_spm")),
+            f1(100.0 * b.frac("rpc_ctrl")),
+            f1(100.0 * b.frac("axi_xbar")),
+            f1(100.0 * (b.frac("rest") + b.frac("d2d") + b.frac("debug_irq"))),
+            f1(100.0 * (b.total() / neo_total - 1.0)),
+        ]);
+    }
+    t.print();
+    println!("paper: xbar 3.6% -> 10.6%; total growth <= 7.8%; CVA6 dominates; rpc <= 7.6%");
+    println!("\nNeo (0 pairs) detailed breakdown:\n{}", AreaModel::cheshire(&CheshireConfig::neo()).table());
+}

@@ -1,0 +1,378 @@
+//! A small RV64 assembler.
+//!
+//! Workload programs (paper Fig. 11: WFI, NOP, 2MM, MEM) and the boot ROM
+//! stub live in-tree as Rust builder code — no external RISC-V toolchain
+//! is needed to reproduce the experiments. Encodings follow the RISC-V
+//! unprivileged/privileged specs for the RV64IMFD+Zicsr subset the CVA6
+//! model executes.
+
+use std::collections::HashMap;
+
+/// Integer register names.
+pub mod reg {
+    pub const ZERO: u8 = 0;
+    pub const RA: u8 = 1;
+    pub const SP: u8 = 2;
+    pub const GP: u8 = 3;
+    pub const TP: u8 = 4;
+    pub const T0: u8 = 5;
+    pub const T1: u8 = 6;
+    pub const T2: u8 = 7;
+    pub const S0: u8 = 8;
+    pub const S1: u8 = 9;
+    pub const A0: u8 = 10;
+    pub const A1: u8 = 11;
+    pub const A2: u8 = 12;
+    pub const A3: u8 = 13;
+    pub const A4: u8 = 14;
+    pub const A5: u8 = 15;
+    pub const A6: u8 = 16;
+    pub const A7: u8 = 17;
+    pub const S2: u8 = 18;
+    pub const S3: u8 = 19;
+    pub const S4: u8 = 20;
+    pub const S5: u8 = 21;
+    pub const S6: u8 = 22;
+    pub const S7: u8 = 23;
+    pub const S8: u8 = 24;
+    pub const S9: u8 = 25;
+    pub const S10: u8 = 26;
+    pub const S11: u8 = 27;
+    pub const T3: u8 = 28;
+    pub const T4: u8 = 29;
+    pub const T5: u8 = 30;
+    pub const T6: u8 = 31;
+    // FP registers use the same indices in the F-register file
+    pub const FT0: u8 = 0;
+    pub const FT1: u8 = 1;
+    pub const FT2: u8 = 2;
+    pub const FA0: u8 = 10;
+    pub const FA1: u8 = 11;
+    pub const FA2: u8 = 12;
+    pub const FA3: u8 = 13;
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Fix {
+    Branch,
+    Jal,
+    /// auipc+addi pair (la)
+    PcrelHi,
+    PcrelLo(usize),
+}
+
+/// The assembler: emit instructions, define labels, resolve at `finish`.
+pub struct Asm {
+    pub base: u64,
+    words: Vec<u32>,
+    labels: HashMap<String, usize>,
+    fixups: Vec<(usize, String, Fix)>,
+}
+
+fn enc_r(op: u32, rd: u8, f3: u32, rs1: u8, rs2: u8, f7: u32) -> u32 {
+    op | ((rd as u32) << 7) | (f3 << 12) | ((rs1 as u32) << 15) | ((rs2 as u32) << 20) | (f7 << 25)
+}
+fn enc_i(op: u32, rd: u8, f3: u32, rs1: u8, imm: i32) -> u32 {
+    op | ((rd as u32) << 7) | (f3 << 12) | ((rs1 as u32) << 15) | (((imm as u32) & 0xfff) << 20)
+}
+fn enc_s(op: u32, f3: u32, rs1: u8, rs2: u8, imm: i32) -> u32 {
+    let i = imm as u32;
+    op | ((i & 0x1f) << 7) | (f3 << 12) | ((rs1 as u32) << 15) | ((rs2 as u32) << 20) | (((i >> 5) & 0x7f) << 25)
+}
+fn enc_b(op: u32, f3: u32, rs1: u8, rs2: u8, imm: i32) -> u32 {
+    let i = imm as u32;
+    op | (((i >> 11) & 1) << 7)
+        | (((i >> 1) & 0xf) << 8)
+        | (f3 << 12)
+        | ((rs1 as u32) << 15)
+        | ((rs2 as u32) << 20)
+        | (((i >> 5) & 0x3f) << 25)
+        | (((i >> 12) & 1) << 31)
+}
+fn enc_u(op: u32, rd: u8, imm: i64) -> u32 {
+    op | ((rd as u32) << 7) | ((imm as u32) & 0xffff_f000)
+}
+fn enc_j(op: u32, rd: u8, imm: i32) -> u32 {
+    let i = imm as u32;
+    op | ((rd as u32) << 7)
+        | (((i >> 12) & 0xff) << 12)
+        | (((i >> 11) & 1) << 20)
+        | (((i >> 1) & 0x3ff) << 21)
+        | (((i >> 20) & 1) << 31)
+}
+fn enc_r4(op: u32, rd: u8, f3: u32, rs1: u8, rs2: u8, rs3: u8, fmt: u32) -> u32 {
+    op | ((rd as u32) << 7) | (f3 << 12) | ((rs1 as u32) << 15) | ((rs2 as u32) << 20) | (fmt << 25) | ((rs3 as u32) << 27)
+}
+
+impl Asm {
+    pub fn new(base: u64) -> Self {
+        Self { base, words: Vec::new(), labels: HashMap::new(), fixups: Vec::new() }
+    }
+
+    pub fn here(&self) -> u64 {
+        self.base + self.words.len() as u64 * 4
+    }
+
+    pub fn label(&mut self, name: &str) {
+        self.labels.insert(name.to_string(), self.words.len());
+    }
+
+    fn emit(&mut self, w: u32) -> &mut Self {
+        self.words.push(w);
+        self
+    }
+
+    // ---- RV64I ----
+    pub fn lui(&mut self, rd: u8, imm: i64) -> &mut Self { self.emit(enc_u(0x37, rd, imm)) }
+    pub fn auipc(&mut self, rd: u8, imm: i64) -> &mut Self { self.emit(enc_u(0x17, rd, imm)) }
+    pub fn jal(&mut self, rd: u8, target: &str) -> &mut Self {
+        self.fixups.push((self.words.len(), target.into(), Fix::Jal));
+        self.emit(enc_j(0x6f, rd, 0))
+    }
+    pub fn jalr(&mut self, rd: u8, rs1: u8, imm: i32) -> &mut Self { self.emit(enc_i(0x67, rd, 0, rs1, imm)) }
+    fn br(&mut self, f3: u32, rs1: u8, rs2: u8, target: &str) -> &mut Self {
+        self.fixups.push((self.words.len(), target.into(), Fix::Branch));
+        self.emit(enc_b(0x63, f3, rs1, rs2, 0))
+    }
+    pub fn beq(&mut self, a: u8, b: u8, t: &str) -> &mut Self { self.br(0, a, b, t) }
+    pub fn bne(&mut self, a: u8, b: u8, t: &str) -> &mut Self { self.br(1, a, b, t) }
+    pub fn blt(&mut self, a: u8, b: u8, t: &str) -> &mut Self { self.br(4, a, b, t) }
+    pub fn bge(&mut self, a: u8, b: u8, t: &str) -> &mut Self { self.br(5, a, b, t) }
+    pub fn bltu(&mut self, a: u8, b: u8, t: &str) -> &mut Self { self.br(6, a, b, t) }
+    pub fn bgeu(&mut self, a: u8, b: u8, t: &str) -> &mut Self { self.br(7, a, b, t) }
+    pub fn lb(&mut self, rd: u8, rs1: u8, imm: i32) -> &mut Self { self.emit(enc_i(0x03, rd, 0, rs1, imm)) }
+    pub fn lh(&mut self, rd: u8, rs1: u8, imm: i32) -> &mut Self { self.emit(enc_i(0x03, rd, 1, rs1, imm)) }
+    pub fn lw(&mut self, rd: u8, rs1: u8, imm: i32) -> &mut Self { self.emit(enc_i(0x03, rd, 2, rs1, imm)) }
+    pub fn ld(&mut self, rd: u8, rs1: u8, imm: i32) -> &mut Self { self.emit(enc_i(0x03, rd, 3, rs1, imm)) }
+    pub fn lbu(&mut self, rd: u8, rs1: u8, imm: i32) -> &mut Self { self.emit(enc_i(0x03, rd, 4, rs1, imm)) }
+    pub fn lhu(&mut self, rd: u8, rs1: u8, imm: i32) -> &mut Self { self.emit(enc_i(0x03, rd, 5, rs1, imm)) }
+    pub fn lwu(&mut self, rd: u8, rs1: u8, imm: i32) -> &mut Self { self.emit(enc_i(0x03, rd, 6, rs1, imm)) }
+    pub fn sb(&mut self, rs2: u8, rs1: u8, imm: i32) -> &mut Self { self.emit(enc_s(0x23, 0, rs1, rs2, imm)) }
+    pub fn sh(&mut self, rs2: u8, rs1: u8, imm: i32) -> &mut Self { self.emit(enc_s(0x23, 1, rs1, rs2, imm)) }
+    pub fn sw(&mut self, rs2: u8, rs1: u8, imm: i32) -> &mut Self { self.emit(enc_s(0x23, 2, rs1, rs2, imm)) }
+    pub fn sd(&mut self, rs2: u8, rs1: u8, imm: i32) -> &mut Self { self.emit(enc_s(0x23, 3, rs1, rs2, imm)) }
+    pub fn addi(&mut self, rd: u8, rs1: u8, imm: i32) -> &mut Self { self.emit(enc_i(0x13, rd, 0, rs1, imm)) }
+    pub fn slti(&mut self, rd: u8, rs1: u8, imm: i32) -> &mut Self { self.emit(enc_i(0x13, rd, 2, rs1, imm)) }
+    pub fn sltiu(&mut self, rd: u8, rs1: u8, imm: i32) -> &mut Self { self.emit(enc_i(0x13, rd, 3, rs1, imm)) }
+    pub fn xori(&mut self, rd: u8, rs1: u8, imm: i32) -> &mut Self { self.emit(enc_i(0x13, rd, 4, rs1, imm)) }
+    pub fn ori(&mut self, rd: u8, rs1: u8, imm: i32) -> &mut Self { self.emit(enc_i(0x13, rd, 6, rs1, imm)) }
+    pub fn andi(&mut self, rd: u8, rs1: u8, imm: i32) -> &mut Self { self.emit(enc_i(0x13, rd, 7, rs1, imm)) }
+    pub fn slli(&mut self, rd: u8, rs1: u8, sh: u8) -> &mut Self { self.emit(enc_i(0x13, rd, 1, rs1, sh as i32)) }
+    pub fn srli(&mut self, rd: u8, rs1: u8, sh: u8) -> &mut Self { self.emit(enc_i(0x13, rd, 5, rs1, sh as i32)) }
+    pub fn srai(&mut self, rd: u8, rs1: u8, sh: u8) -> &mut Self { self.emit(enc_i(0x13, rd, 5, rs1, sh as i32 | 0x400)) }
+    pub fn add(&mut self, rd: u8, a: u8, b: u8) -> &mut Self { self.emit(enc_r(0x33, rd, 0, a, b, 0)) }
+    pub fn sub(&mut self, rd: u8, a: u8, b: u8) -> &mut Self { self.emit(enc_r(0x33, rd, 0, a, b, 0x20)) }
+    pub fn sll(&mut self, rd: u8, a: u8, b: u8) -> &mut Self { self.emit(enc_r(0x33, rd, 1, a, b, 0)) }
+    pub fn slt(&mut self, rd: u8, a: u8, b: u8) -> &mut Self { self.emit(enc_r(0x33, rd, 2, a, b, 0)) }
+    pub fn sltu(&mut self, rd: u8, a: u8, b: u8) -> &mut Self { self.emit(enc_r(0x33, rd, 3, a, b, 0)) }
+    pub fn xor(&mut self, rd: u8, a: u8, b: u8) -> &mut Self { self.emit(enc_r(0x33, rd, 4, a, b, 0)) }
+    pub fn srl(&mut self, rd: u8, a: u8, b: u8) -> &mut Self { self.emit(enc_r(0x33, rd, 5, a, b, 0)) }
+    pub fn sra(&mut self, rd: u8, a: u8, b: u8) -> &mut Self { self.emit(enc_r(0x33, rd, 5, a, b, 0x20)) }
+    pub fn or(&mut self, rd: u8, a: u8, b: u8) -> &mut Self { self.emit(enc_r(0x33, rd, 6, a, b, 0)) }
+    pub fn and(&mut self, rd: u8, a: u8, b: u8) -> &mut Self { self.emit(enc_r(0x33, rd, 7, a, b, 0)) }
+    pub fn addiw(&mut self, rd: u8, rs1: u8, imm: i32) -> &mut Self { self.emit(enc_i(0x1b, rd, 0, rs1, imm)) }
+    pub fn slliw(&mut self, rd: u8, rs1: u8, sh: u8) -> &mut Self { self.emit(enc_i(0x1b, rd, 1, rs1, sh as i32)) }
+    pub fn addw(&mut self, rd: u8, a: u8, b: u8) -> &mut Self { self.emit(enc_r(0x3b, rd, 0, a, b, 0)) }
+    pub fn subw(&mut self, rd: u8, a: u8, b: u8) -> &mut Self { self.emit(enc_r(0x3b, rd, 0, a, b, 0x20)) }
+    pub fn fence(&mut self) -> &mut Self { self.emit(0x0ff0_000f) }
+    pub fn fence_i(&mut self) -> &mut Self { self.emit(0x0000_100f) }
+    pub fn ecall(&mut self) -> &mut Self { self.emit(0x0000_0073) }
+    pub fn ebreak(&mut self) -> &mut Self { self.emit(0x0010_0073) }
+    pub fn wfi(&mut self) -> &mut Self { self.emit(0x1050_0073) }
+    pub fn mret(&mut self) -> &mut Self { self.emit(0x3020_0073) }
+    pub fn nop(&mut self) -> &mut Self { self.addi(0, 0, 0) }
+
+    // ---- Zicsr ----
+    pub fn csrrw(&mut self, rd: u8, csr: u16, rs1: u8) -> &mut Self { self.emit(enc_i(0x73, rd, 1, rs1, csr as i32)) }
+    pub fn csrrs(&mut self, rd: u8, csr: u16, rs1: u8) -> &mut Self { self.emit(enc_i(0x73, rd, 2, rs1, csr as i32)) }
+    pub fn csrrc(&mut self, rd: u8, csr: u16, rs1: u8) -> &mut Self { self.emit(enc_i(0x73, rd, 3, rs1, csr as i32)) }
+    pub fn csrrwi(&mut self, rd: u8, csr: u16, z: u8) -> &mut Self { self.emit(enc_i(0x73, rd, 5, z, csr as i32)) }
+
+    // ---- M ----
+    pub fn mul(&mut self, rd: u8, a: u8, b: u8) -> &mut Self { self.emit(enc_r(0x33, rd, 0, a, b, 1)) }
+    pub fn mulh(&mut self, rd: u8, a: u8, b: u8) -> &mut Self { self.emit(enc_r(0x33, rd, 1, a, b, 1)) }
+    pub fn div(&mut self, rd: u8, a: u8, b: u8) -> &mut Self { self.emit(enc_r(0x33, rd, 4, a, b, 1)) }
+    pub fn divu(&mut self, rd: u8, a: u8, b: u8) -> &mut Self { self.emit(enc_r(0x33, rd, 5, a, b, 1)) }
+    pub fn rem(&mut self, rd: u8, a: u8, b: u8) -> &mut Self { self.emit(enc_r(0x33, rd, 6, a, b, 1)) }
+    pub fn remu(&mut self, rd: u8, a: u8, b: u8) -> &mut Self { self.emit(enc_r(0x33, rd, 7, a, b, 1)) }
+    pub fn mulw(&mut self, rd: u8, a: u8, b: u8) -> &mut Self { self.emit(enc_r(0x3b, rd, 0, a, b, 1)) }
+
+    // ---- D (double-precision FP) ----
+    pub fn fld(&mut self, rd: u8, rs1: u8, imm: i32) -> &mut Self { self.emit(enc_i(0x07, rd, 3, rs1, imm)) }
+    pub fn fsd(&mut self, rs2: u8, rs1: u8, imm: i32) -> &mut Self { self.emit(enc_s(0x27, 3, rs1, rs2, imm)) }
+    pub fn fadd_d(&mut self, rd: u8, a: u8, b: u8) -> &mut Self { self.emit(enc_r(0x53, rd, 7, a, b, 0x01)) }
+    pub fn fsub_d(&mut self, rd: u8, a: u8, b: u8) -> &mut Self { self.emit(enc_r(0x53, rd, 7, a, b, 0x05)) }
+    pub fn fmul_d(&mut self, rd: u8, a: u8, b: u8) -> &mut Self { self.emit(enc_r(0x53, rd, 7, a, b, 0x09)) }
+    pub fn fdiv_d(&mut self, rd: u8, a: u8, b: u8) -> &mut Self { self.emit(enc_r(0x53, rd, 7, a, b, 0x0d)) }
+    /// fmadd.d rd = a*b + c
+    pub fn fmadd_d(&mut self, rd: u8, a: u8, b: u8, c: u8) -> &mut Self { self.emit(enc_r4(0x43, rd, 7, a, b, c, 1)) }
+    pub fn fmv_d_x(&mut self, rd: u8, rs1: u8) -> &mut Self { self.emit(enc_r(0x53, rd, 0, rs1, 0, 0x79)) }
+    pub fn fmv_x_d(&mut self, rd: u8, rs1: u8) -> &mut Self { self.emit(enc_r(0x53, rd, 0, rs1, 0, 0x71)) }
+    pub fn fcvt_d_l(&mut self, rd: u8, rs1: u8) -> &mut Self { self.emit(enc_r(0x53, rd, 7, rs1, 2, 0x69)) }
+    pub fn feq_d(&mut self, rd: u8, a: u8, b: u8) -> &mut Self { self.emit(enc_r(0x53, rd, 2, a, b, 0x51)) }
+    pub fn flt_d(&mut self, rd: u8, a: u8, b: u8) -> &mut Self { self.emit(enc_r(0x53, rd, 1, a, b, 0x51)) }
+    pub fn fsgnj_d(&mut self, rd: u8, a: u8, b: u8) -> &mut Self { self.emit(enc_r(0x53, rd, 0, a, b, 0x11)) }
+
+    // ---- pseudo-instructions ----
+    /// Load a 64-bit immediate (li): lui/addiw + shift-or chain.
+    pub fn li(&mut self, rd: u8, v: i64) -> &mut Self {
+        if v >= -2048 && v < 2048 {
+            return self.addi(rd, 0, v as i32);
+        }
+        if v >= i32::MIN as i64 && v <= i32::MAX as i64 {
+            let hi = ((v.wrapping_add(0x800)) >> 12) << 12;
+            let lo = v - hi;
+            self.lui(rd, hi);
+            if lo != 0 {
+                self.addiw(rd, rd, lo as i32);
+            }
+            return self;
+        }
+        // general 64-bit: build upper 32, shift, or lower
+        let hi32 = v >> 32;
+        let lo32 = v & 0xffff_ffff;
+        self.li(rd, hi32);
+        self.slli(rd, rd, 32);
+        // or in lo32 via temporary t6 if needed
+        if lo32 != 0 {
+            let hi = ((lo32.wrapping_add(0x800)) >> 12) & 0xfffff;
+            let lo = (lo32 as i64) - ((hi << 12) as i32 as i64);
+            if hi != 0 {
+                self.lui(reg::T6, (hi << 12) as i32 as i64);
+                self.srli(reg::T6, reg::T6, 0); // keep 32-bit semantics simple
+                // clear sign-extension artifacts
+                self.slli(reg::T6, reg::T6, 32);
+                self.srli(reg::T6, reg::T6, 32);
+                self.or(rd, rd, reg::T6);
+            }
+            if lo != 0 {
+                self.addi(rd, rd, lo as i32);
+            }
+        }
+        self
+    }
+
+    /// la: pc-relative address of a label.
+    pub fn la(&mut self, rd: u8, target: &str) -> &mut Self {
+        let at = self.words.len();
+        self.fixups.push((at, target.into(), Fix::PcrelHi));
+        self.emit(enc_u(0x17, rd, 0)); // auipc
+        self.fixups.push((at + 1, target.into(), Fix::PcrelLo(at)));
+        self.emit(enc_i(0x13, rd, 0, rd, 0)) // addi
+    }
+
+    pub fn j(&mut self, target: &str) -> &mut Self {
+        self.jal(0, target)
+    }
+    pub fn call(&mut self, target: &str) -> &mut Self {
+        self.jal(reg::RA, target)
+    }
+    pub fn ret(&mut self) -> &mut Self {
+        self.jalr(0, reg::RA, 0)
+    }
+    pub fn mv(&mut self, rd: u8, rs: u8) -> &mut Self {
+        self.addi(rd, rs, 0)
+    }
+
+    /// Resolve fixups and return the binary image.
+    pub fn finish(mut self) -> Vec<u8> {
+        for (at, name, kind) in std::mem::take(&mut self.fixups) {
+            let target = *self
+                .labels
+                .get(&name)
+                .unwrap_or_else(|| panic!("undefined label {name}"));
+            let pc = self.base + at as u64 * 4;
+            let dest = self.base + target as u64 * 4;
+            let off = dest.wrapping_sub(pc) as i64;
+            match kind {
+                Fix::Branch => {
+                    assert!((-4096..4096).contains(&off), "branch to {name} out of range ({off})");
+                    let old = self.words[at];
+                    self.words[at] = enc_b(old & 0x7f, (old >> 12) & 7, ((old >> 15) & 31) as u8, ((old >> 20) & 31) as u8, off as i32);
+                }
+                Fix::Jal => {
+                    assert!((-(1 << 20)..(1 << 20)).contains(&off), "jal to {name} out of range");
+                    let old = self.words[at];
+                    self.words[at] = enc_j(old & 0x7f, ((old >> 7) & 31) as u8, off as i32);
+                }
+                Fix::PcrelHi => {
+                    let hi = ((off + 0x800) >> 12) << 12;
+                    let old = self.words[at];
+                    self.words[at] = enc_u(old & 0x7f, ((old >> 7) & 31) as u8, hi);
+                }
+                Fix::PcrelLo(hi_at) => {
+                    let hi_pc = self.base + hi_at as u64 * 4;
+                    let off2 = dest.wrapping_sub(hi_pc) as i64;
+                    let hi = ((off2 + 0x800) >> 12) << 12;
+                    let lo = (off2 - hi) as i32;
+                    let old = self.words[at];
+                    self.words[at] = enc_i(old & 0x7f, ((old >> 7) & 31) as u8, (old >> 12) & 7, ((old >> 15) & 31) as u8, lo);
+                }
+            }
+        }
+        self.words.iter().flat_map(|w| w.to_le_bytes()).collect()
+    }
+
+    pub fn len_bytes(&self) -> usize {
+        self.words.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::reg::*;
+    use super::*;
+
+    #[test]
+    fn encodes_known_instructions() {
+        let mut a = Asm::new(0);
+        a.addi(A0, ZERO, 42);
+        a.add(A1, A0, A0);
+        a.wfi();
+        let img = a.finish();
+        let w: Vec<u32> = img.chunks(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+        assert_eq!(w[0], 0x02a0_0513); // addi a0, zero, 42
+        assert_eq!(w[1], 0x00a5_05b3); // add a1, a0, a0
+        assert_eq!(w[2], 0x1050_0073); // wfi
+    }
+
+    #[test]
+    fn branch_fixups_resolve_backward_and_forward() {
+        let mut a = Asm::new(0x1000);
+        a.label("top");
+        a.addi(T0, T0, 1);
+        a.bne(T0, T1, "top"); // backward: -4
+        a.beq(T0, T1, "end"); // forward: +8
+        a.nop();
+        a.label("end");
+        let img = a.finish();
+        let w: Vec<u32> = img.chunks(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+        // bne t0,t1,-4 : imm=-4
+        assert_eq!(w[1], enc_b(0x63, 1, T0, T1, -4));
+        assert_eq!(w[2], enc_b(0x63, 0, T0, T1, 8));
+    }
+
+    #[test]
+    fn li_small_and_32bit() {
+        let mut a = Asm::new(0);
+        a.li(A0, 7);
+        assert_eq!(a.len_bytes(), 4);
+        let mut a = Asm::new(0);
+        a.li(A0, 0x12345);
+        let img = a.finish();
+        assert!(img.len() >= 8); // lui + addiw
+    }
+
+    #[test]
+    fn la_is_pc_relative() {
+        let mut a = Asm::new(0x8000_0000);
+        a.la(A0, "data");
+        a.nop();
+        a.label("data");
+        let img = a.finish();
+        let w: Vec<u32> = img.chunks(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+        // auipc a0, 0 ; addi a0, a0, 12
+        assert_eq!(w[0] & 0x7f, 0x17);
+        assert_eq!((w[1] >> 20) & 0xfff, 12);
+    }
+}

@@ -1,0 +1,155 @@
+//! Datawidth conversion (paper Fig. 5, second frontend stage).
+//!
+//! "After serialization, a datawidth converter converts the RPC DRAM
+//! interface's configured datawidth (64 b in the case of Neo) to RPC's
+//! 256 b word size."
+//!
+//! The converters here are *packing* helpers operating on byte/strobe
+//! streams; the frontend charges one cycle per narrow beat, which is the
+//! timing-relevant behaviour (the wide side is rate-matched by buffering).
+
+/// Packs narrow beats (e.g. 8 B AXI) into wide words (e.g. 32 B RPC),
+/// carrying strobes along. Handles an initial offset within the first wide
+/// word (unaligned transfers, resolved later by the mask unit).
+pub struct UpConverter {
+    wide: usize,
+    buf: Vec<u8>,
+    strb: Vec<bool>,
+    fill: usize,
+}
+
+impl UpConverter {
+    /// `wide`: wide word size in bytes. `offset`: starting byte offset
+    /// within the first wide word.
+    pub fn new(wide: usize, offset: usize) -> Self {
+        assert!(offset < wide);
+        Self { wide, buf: vec![0; wide], strb: vec![false; wide], fill: offset }
+    }
+
+    /// Feed one narrow beat (`data.len()` bytes, strobe bitmask covering the
+    /// *lane* positions, `lane0` = start lane within the narrow bus).
+    /// Returns a completed wide word when one fills up.
+    pub fn push(&mut self, data: &[u8], strb: u64, lane0: usize, nbytes: usize) -> Option<(Vec<u8>, Vec<bool>)> {
+        for i in 0..nbytes {
+            let lane = lane0 + i;
+            let en = lane < data.len() && (strb >> lane) & 1 == 1;
+            self.buf[self.fill] = if en { data[lane] } else { 0 };
+            self.strb[self.fill] = en;
+            self.fill += 1;
+            if self.fill == self.wide {
+                let out = (std::mem::replace(&mut self.buf, vec![0; self.wide]),
+                           std::mem::replace(&mut self.strb, vec![false; self.wide]));
+                self.fill = 0;
+                return Some(out);
+            }
+        }
+        None
+    }
+
+    /// Flush a partial word (end of transfer), padding with disabled bytes.
+    pub fn flush(&mut self) -> Option<(Vec<u8>, Vec<bool>)> {
+        if self.fill == 0 {
+            return None;
+        }
+        self.fill = 0;
+        Some((
+            std::mem::replace(&mut self.buf, vec![0; self.wide]),
+            std::mem::replace(&mut self.strb, vec![false; self.wide]),
+        ))
+    }
+}
+
+/// Unpacks wide words into narrow beats (read path).
+pub struct DownConverter {
+    narrow: usize,
+    word: Vec<u8>,
+    pos: usize,
+}
+
+impl DownConverter {
+    /// `offset`: byte offset of the first useful byte within the first word.
+    pub fn new(narrow: usize, offset: usize) -> Self {
+        Self { narrow, word: Vec::new(), pos: offset }
+    }
+
+    pub fn feed(&mut self, word: Vec<u8>) {
+        debug_assert!(self.word.is_empty() || self.pos >= self.word.len());
+        if self.pos >= self.word.len() && !self.word.is_empty() {
+            self.pos -= self.word.len();
+        }
+        self.word = word;
+    }
+
+    /// True if a narrow beat can be produced without more words.
+    pub fn ready(&self) -> bool {
+        !self.word.is_empty() && self.pos < self.word.len()
+    }
+
+    /// Produce the next narrow beat (up to `nbytes` useful bytes placed at
+    /// `lane0`). Returns (beat, consumed_word): `consumed_word` is true when
+    /// the wide word is exhausted and `feed` must be called again.
+    pub fn next_beat(&mut self, lane0: usize, nbytes: usize) -> (Vec<u8>, bool) {
+        let mut beat = vec![0u8; self.narrow];
+        for i in 0..nbytes {
+            if self.pos < self.word.len() && lane0 + i < self.narrow {
+                beat[lane0 + i] = self.word[self.pos];
+                self.pos += 1;
+            }
+        }
+        let consumed = self.pos >= self.word.len();
+        (beat, consumed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn up_packs_8b_beats_into_32b_words() {
+        let mut up = UpConverter::new(32, 0);
+        let mut words = Vec::new();
+        for k in 0..8u8 {
+            let beat: Vec<u8> = (0..8).map(|i| k * 8 + i).collect();
+            if let Some((w, s)) = up.push(&beat, 0xff, 0, 8) {
+                assert!(s.iter().all(|&b| b));
+                words.push(w);
+            }
+        }
+        assert_eq!(words.len(), 2);
+        assert_eq!(words[0], (0..32).collect::<Vec<u8>>());
+        assert_eq!(words[1], (32..64).collect::<Vec<u8>>());
+    }
+
+    #[test]
+    fn up_with_offset_pads_head() {
+        let mut up = UpConverter::new(8, 5);
+        // 3 bytes fill the word
+        let (w, s) = up.push(&[1, 2, 3, 0, 0, 0, 0, 0], 0x7, 0, 3).unwrap();
+        assert_eq!(&w[5..], &[1, 2, 3]);
+        assert_eq!(&s[..5], &[false; 5]);
+        assert_eq!(&s[5..], &[true; 3]);
+    }
+
+    #[test]
+    fn up_flush_emits_partial() {
+        let mut up = UpConverter::new(8, 0);
+        assert!(up.push(&[9, 9, 0, 0, 0, 0, 0, 0], 0x3, 0, 2).is_none());
+        let (w, s) = up.flush().unwrap();
+        assert_eq!(&w[..2], &[9, 9]);
+        assert_eq!(s.iter().filter(|&&b| b).count(), 2);
+        assert!(up.flush().is_none());
+    }
+
+    #[test]
+    fn down_unpacks_with_offset() {
+        let mut down = DownConverter::new(8, 3);
+        down.feed((0..16).collect());
+        let (b0, consumed) = down.next_beat(0, 8);
+        assert!(!consumed);
+        assert_eq!(b0, vec![3, 4, 5, 6, 7, 8, 9, 10]);
+        let (b1, consumed) = down.next_beat(0, 8);
+        assert!(consumed, "13 of 16 bytes read, 5 remain < 8 → consumed at 16");
+        assert_eq!(&b1[..5], &[11, 12, 13, 14, 15]);
+    }
+}

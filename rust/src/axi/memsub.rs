@@ -1,0 +1,242 @@
+//! A memory-backed AXI4 subordinate.
+//!
+//! Services bursts from a flat byte array with a configurable fixed access
+//! latency; used for the SPM path, boot ROM backing, and as the golden
+//! endpoint in interconnect tests. One beat per cycle once the latency has
+//! elapsed — i.e. an idealized SRAM macro behind an AXI interface.
+
+use super::port::AxiBus;
+use super::types::{beat_addr, Ar, Aw, Resp, B, R};
+use crate::sim::Stats;
+use std::collections::VecDeque;
+
+#[derive(Debug)]
+enum RdState {
+    Idle,
+    Latency { ar: Ar, left: u32 },
+    Stream { ar: Ar, beat: u32 },
+}
+
+/// Memory subordinate.
+pub struct MemSub {
+    base: u64,
+    data: Vec<u8>,
+    width: usize,
+    latency: u32,
+    rd: RdState,
+    /// Writes in flight: accepted AW waiting for beats.
+    wr: VecDeque<(Aw, u32)>,
+    /// A B response that could not be pushed last cycle (backpressure).
+    pending_b: Option<B>,
+    /// True if this region rejects writes (e.g. boot ROM).
+    pub read_only: bool,
+    /// Stats key prefix for accounting (e.g. "spm").
+    pub stat_key: &'static str,
+}
+
+impl MemSub {
+    pub fn new(base: u64, size: usize, width: usize, latency: u32) -> Self {
+        Self {
+            base,
+            data: vec![0; size],
+            width,
+            latency,
+            rd: RdState::Idle,
+            wr: VecDeque::new(),
+            pending_b: None,
+            read_only: false,
+            stat_key: "memsub",
+        }
+    }
+
+    pub fn mem(&self) -> &[u8] {
+        &self.data
+    }
+
+    pub fn mem_mut(&mut self) -> &mut [u8] {
+        &mut self.data
+    }
+
+    /// Direct (zero-time) load used for program/data preloading at reset,
+    /// mirroring JTAG preload on the real chip.
+    pub fn preload(&mut self, offset: usize, bytes: &[u8]) {
+        self.data[offset..offset + bytes.len()].copy_from_slice(bytes);
+    }
+
+    fn off(&self, addr: u64) -> Option<usize> {
+        let o = addr.checked_sub(self.base)? as usize;
+        (o < self.data.len()).then_some(o)
+    }
+
+    /// Advance one cycle against the subordinate side of `bus`.
+    pub fn tick(&mut self, bus: &AxiBus, stats: &mut Stats) {
+        // --- writes: accept AW, consume beats, respond B on last ---
+        if let Some(b) = self.pending_b.take() {
+            if !bus.b.borrow_mut().push(b.clone()) {
+                self.pending_b = Some(b);
+            }
+        }
+        {
+            // range-checked acceptance: leave foreign transactions for other
+            // subordinates sharing the bus (test harnesses); SLVERR for
+            // in-window but out-of-backing addresses is handled per beat.
+            let addressed = matches!(bus.aw.borrow().peek(), Some(a) if a.addr >= self.base && a.addr < self.base + self.data.len() as u64);
+            if addressed {
+                let aw = bus.aw.borrow_mut().pop().unwrap();
+                self.wr.push_back((aw, 0));
+            }
+        }
+        let mut finished: Option<(u32, Resp)> = None;
+        if self.pending_b.is_none() {
+            if let Some(&(ref aw, beat)) = self.wr.front().map(|x| x) {
+                let (id, a_addr, a_size, a_burst) = (aw.id, aw.addr, aw.size, aw.burst);
+                if let Some(w) = bus.w.borrow_mut().pop() {
+                    let addr = beat_addr(a_addr, a_size, a_burst, beat);
+                    let resp = if self.read_only {
+                        Resp::SlvErr
+                    } else if let Some(off) = self.off(addr) {
+                        let n = (1usize << a_size).min(self.width);
+                        let lane0 = (addr as usize) % self.width;
+                        for i in 0..n {
+                            let lane = lane0 + i;
+                            if lane < w.data.len() && (w.strb >> lane) & 1 == 1 && off + i < self.data.len() {
+                                self.data[off + i] = w.data[lane];
+                            }
+                        }
+                        stats.add("memsub.wr_bytes", n as u64);
+                        Resp::Okay
+                    } else {
+                        Resp::SlvErr
+                    };
+                    self.wr.front_mut().unwrap().1 = beat + 1;
+                    if w.last {
+                        finished = Some((id, resp));
+                    }
+                }
+            }
+        }
+        if let Some((id, resp)) = finished {
+            self.wr.pop_front();
+            let b = B { id, resp };
+            if !bus.b.borrow_mut().push(b.clone()) {
+                // backpressure: retry the response next cycle
+                self.pending_b = Some(b);
+            }
+        }
+
+        // --- reads: latency then one beat per cycle ---
+        match std::mem::replace(&mut self.rd, RdState::Idle) {
+            RdState::Idle => {
+                let addressed = matches!(bus.ar.borrow().peek(), Some(a) if a.addr >= self.base && a.addr < self.base + self.data.len() as u64);
+                if addressed {
+                    let ar = bus.ar.borrow_mut().pop().unwrap();
+                    self.rd = RdState::Latency { ar, left: self.latency };
+                }
+            }
+            RdState::Latency { ar, left } => {
+                if left == 0 {
+                    self.rd = RdState::Stream { ar, beat: 0 };
+                    // fall through next cycle (keeps latency ≥1 honest)
+                } else {
+                    self.rd = RdState::Latency { ar, left: left - 1 };
+                }
+            }
+            RdState::Stream { ar, beat } => {
+                if bus.r.borrow().can_push() {
+                    let addr = beat_addr(ar.addr, ar.size, ar.burst, beat);
+                    let mut data = vec![0u8; self.width];
+                    let resp = if let Some(off) = self.off(addr) {
+                        let n = (1usize << ar.size).min(self.width);
+                        let lane0 = (addr as usize) % self.width;
+                        for i in 0..n {
+                            if off + i < self.data.len() && lane0 + i < self.width {
+                                data[lane0 + i] = self.data[off + i];
+                            }
+                        }
+                        stats.add("memsub.rd_bytes", n as u64);
+                        Resp::Okay
+                    } else {
+                        Resp::SlvErr
+                    };
+                    let last = beat == ar.len as u32;
+                    bus.r.borrow_mut().push(R { id: ar.id, data, resp, last });
+                    if !last {
+                        self.rd = RdState::Stream { ar, beat: beat + 1 };
+                    }
+                } else {
+                    self.rd = RdState::Stream { ar, beat };
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axi::port::axi_bus;
+    use crate::axi::types::{full_strb, Burst, W};
+
+    #[test]
+    fn write_then_read_roundtrip() {
+        let bus = axi_bus(4);
+        let mut mem = MemSub::new(0x100, 0x100, 8, 2);
+        let mut stats = Stats::new();
+        bus.aw.borrow_mut().push(Aw { id: 0, addr: 0x108, len: 0, size: 3, burst: Burst::Incr, qos: 0 });
+        bus.w.borrow_mut().push(W { data: vec![9; 8], strb: full_strb(8), last: true });
+        for _ in 0..10 {
+            mem.tick(&bus, &mut stats);
+        }
+        assert!(bus.b.borrow_mut().pop().is_some());
+        bus.ar.borrow_mut().push(Ar { id: 1, addr: 0x108, len: 0, size: 3, burst: Burst::Incr, qos: 0 });
+        for _ in 0..10 {
+            mem.tick(&bus, &mut stats);
+        }
+        let r = bus.r.borrow_mut().pop().unwrap();
+        assert_eq!(r.data, vec![9; 8]);
+        assert!(r.last);
+    }
+
+    #[test]
+    fn strobes_mask_bytes() {
+        let bus = axi_bus(4);
+        let mut mem = MemSub::new(0, 0x40, 8, 0);
+        let mut stats = Stats::new();
+        mem.preload(0, &[0xff; 16]);
+        bus.aw.borrow_mut().push(Aw { id: 0, addr: 0, len: 0, size: 3, burst: Burst::Incr, qos: 0 });
+        bus.w.borrow_mut().push(W { data: vec![0; 8], strb: 0b0000_1111, last: true });
+        for _ in 0..5 {
+            mem.tick(&bus, &mut stats);
+        }
+        assert_eq!(&mem.mem()[0..8], &[0, 0, 0, 0, 0xff, 0xff, 0xff, 0xff]);
+    }
+
+    #[test]
+    fn read_only_rejects_writes() {
+        let bus = axi_bus(4);
+        let mut mem = MemSub::new(0, 0x40, 8, 0);
+        mem.read_only = true;
+        let mut stats = Stats::new();
+        bus.aw.borrow_mut().push(Aw { id: 0, addr: 0, len: 0, size: 3, burst: Burst::Incr, qos: 0 });
+        bus.w.borrow_mut().push(W { data: vec![1; 8], strb: 0xff, last: true });
+        for _ in 0..5 {
+            mem.tick(&bus, &mut stats);
+        }
+        assert_eq!(bus.b.borrow_mut().pop().unwrap().resp, Resp::SlvErr);
+        assert_eq!(mem.mem()[0], 0);
+    }
+
+    #[test]
+    fn narrow_transfer_addresses_lanes() {
+        let bus = axi_bus(4);
+        let mut mem = MemSub::new(0, 0x40, 8, 0);
+        let mut stats = Stats::new();
+        // 4-byte write at offset 4 must land in bytes 4..8.
+        bus.aw.borrow_mut().push(Aw { id: 0, addr: 4, len: 0, size: 2, burst: Burst::Incr, qos: 0 });
+        bus.w.borrow_mut().push(W { data: vec![7; 8], strb: 0b1111_0000, last: true });
+        for _ in 0..5 {
+            mem.tick(&bus, &mut stats);
+        }
+        assert_eq!(&mem.mem()[0..8], &[0, 0, 0, 0, 7, 7, 7, 7]);
+    }
+}

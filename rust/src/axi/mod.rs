@@ -1,0 +1,32 @@
+//! AXI4 interconnect substrate (paper §II-A, Fig. 1).
+//!
+//! Cheshire's on-chip fabric is an AXI4 crossbar [19] with configurable
+//! address width, data width, and DSA manager/subordinate port counts;
+//! simpler subordinates hang off a lightweight Regbus demultiplexer [21].
+//! This module models that fabric at *beat level* with valid/ready
+//! handshakes, which is what makes the Fig. 8 utilization curves and the
+//! 8-cycle/32 B latency claim reproducible rather than asserted.
+//!
+//! Submodules:
+//! * [`types`] — channel payloads (AW/W/B/AR/R), bursts, responses.
+//! * [`port`] — an [`AxiBus`] bundles the five channels of one port.
+//! * [`xbar`] — the all-to-all crossbar with round-robin arbitration and
+//!   ID-prefix response routing.
+//! * [`regbus`] — the Regbus demux + AXI-to-Regbus bridge.
+//! * [`memsub`] — a simple memory-backed AXI subordinate (tests, SPM).
+//! * [`serializer`] — in-order transaction serializer (RPC frontend stage 1).
+//! * [`dwc`] — datawidth converter (RPC frontend stage 2).
+//! * [`splitter`] — burst splitter at RPC's 2 KiB page boundary (stage 4).
+
+pub mod types;
+pub mod port;
+pub mod xbar;
+pub mod regbus;
+pub mod memsub;
+pub mod serializer;
+pub mod dwc;
+pub mod splitter;
+
+pub use port::{axi_bus, AxiBus};
+pub use types::{Ar, Aw, Burst, Resp, B, R, W};
+pub use xbar::{AddrRange, Xbar, XbarCfg};

@@ -1,0 +1,253 @@
+//! Regbus: the lightweight register interface [21] (paper §II-A).
+//!
+//! "Simpler subordinates without burst or out-of-order transaction support
+//! are attached through a lightweight, extensible Regbus demultiplexer,
+//! minimizing the crossbar's area and energy footprint."
+//!
+//! We model it as a single-outstanding 32-bit request/response protocol. An
+//! [`Axi2Reg`] bridge converts single-beat AXI4 accesses into Regbus
+//! requests; a [`RegDemux`] routes them by address to [`RegDevice`]s (UART,
+//! SPI, I2C, GPIO, SoC control, controller register files, …).
+
+use super::port::AxiBus;
+use super::types::{Resp, B, R};
+use crate::sim::Stats;
+
+/// A register-mapped peripheral: 32-bit single-cycle reads/writes at word
+/// granularity, plus a per-cycle `tick` for internal state (baud counters,
+/// shift registers, …) and an interrupt line.
+pub trait RegDevice {
+    /// Word read at byte offset `off` (within the device's window).
+    fn reg_read(&mut self, off: u64) -> Result<u32, ()>;
+    /// Word write at byte offset `off`.
+    fn reg_write(&mut self, off: u64, data: u32) -> Result<(), ()>;
+    /// Advance internal state one cycle.
+    fn tick(&mut self, _stats: &mut Stats) {}
+    /// Current interrupt request level.
+    fn irq(&self) -> bool {
+        false
+    }
+}
+
+/// Shared peripherals: the SoC keeps a handle for host-side inspection
+/// (UART logs, SPI flash images) while the demux owns the routing slot.
+impl<T: RegDevice> RegDevice for std::rc::Rc<std::cell::RefCell<T>> {
+    fn reg_read(&mut self, off: u64) -> Result<u32, ()> {
+        self.borrow_mut().reg_read(off)
+    }
+    fn reg_write(&mut self, off: u64, data: u32) -> Result<(), ()> {
+        self.borrow_mut().reg_write(off, data)
+    }
+    fn tick(&mut self, stats: &mut Stats) {
+        self.borrow_mut().tick(stats)
+    }
+    fn irq(&self) -> bool {
+        self.borrow().irq()
+    }
+}
+
+/// One mapping entry of the demux.
+pub struct RegMapEntry {
+    pub base: u64,
+    pub size: u64,
+    pub dev: Box<dyn RegDevice>,
+}
+
+/// The Regbus demultiplexer: owns its devices, routes by address.
+pub struct RegDemux {
+    pub entries: Vec<RegMapEntry>,
+}
+
+impl RegDemux {
+    pub fn new(entries: Vec<RegMapEntry>) -> Self {
+        Self { entries }
+    }
+
+    /// Route a read; `Err(())` on no-match or device error.
+    pub fn read(&mut self, addr: u64) -> Result<u32, ()> {
+        for e in &mut self.entries {
+            if addr >= e.base && addr < e.base + e.size {
+                return e.dev.reg_read(addr - e.base);
+            }
+        }
+        Err(())
+    }
+
+    pub fn write(&mut self, addr: u64, data: u32) -> Result<(), ()> {
+        for e in &mut self.entries {
+            if addr >= e.base && addr < e.base + e.size {
+                return e.dev.reg_write(addr - e.base, data);
+            }
+        }
+        Err(())
+    }
+
+    pub fn tick(&mut self, stats: &mut Stats) {
+        for e in &mut self.entries {
+            e.dev.tick(stats);
+        }
+    }
+
+    /// IRQ levels of all devices, in map order (wired to the PLIC).
+    pub fn irqs(&self) -> Vec<bool> {
+        self.entries.iter().map(|e| e.dev.irq()).collect()
+    }
+
+    /// Borrow a device by index for host-side inspection (e.g. reading the
+    /// UART's transmitted bytes in tests/examples).
+    pub fn dev_mut(&mut self, idx: usize) -> &mut dyn RegDevice {
+        &mut *self.entries[idx].dev
+    }
+}
+
+/// AXI4-to-Regbus bridge: an AXI subordinate accepting single-beat accesses
+/// of ≤4 bytes and forwarding them to the demux with one cycle of latency.
+pub struct Axi2Reg {
+    busy: Option<Pending>,
+}
+
+enum Pending {
+    Read { id: u32, addr: u64, lane0: usize },
+    WriteAddr { id: u32, addr: u64 },
+}
+
+impl Axi2Reg {
+    pub fn new() -> Self {
+        Self { busy: None }
+    }
+
+    pub fn tick(&mut self, bus: &AxiBus, demux: &mut RegDemux, stats: &mut Stats) {
+        demux.tick(stats);
+        match self.busy.take() {
+            None => {
+                // Prefer writes (register writes are control-critical).
+                if let Some(aw) = bus.aw.borrow_mut().pop() {
+                    assert_eq!(aw.len, 0, "Regbus accepts single-beat only");
+                    self.busy = Some(Pending::WriteAddr { id: aw.id, addr: aw.addr });
+                } else if let Some(ar) = bus.ar.borrow_mut().pop() {
+                    assert_eq!(ar.len, 0, "Regbus accepts single-beat only");
+                    let lane0 = (ar.addr as usize) & 0x7;
+                    self.busy = Some(Pending::Read { id: ar.id, addr: ar.addr, lane0 });
+                }
+            }
+            Some(Pending::WriteAddr { id, addr }) => {
+                if let Some(w) = bus.w.borrow_mut().pop() {
+                    // Assemble the ≤4-byte word from the strobed lanes.
+                    let lane0 = (addr as usize) & !0x3 & 0x7;
+                    let mut val = 0u32;
+                    for i in 0..4 {
+                        let lane = lane0 + i;
+                        if lane < w.data.len() && (w.strb >> lane) & 1 == 1 {
+                            val |= (w.data[lane] as u32) << (8 * i);
+                        }
+                    }
+                    let resp = if demux.write(addr & !0x3, val).is_ok() {
+                        Resp::Okay
+                    } else {
+                        Resp::SlvErr
+                    };
+                    stats.bump("regbus.wr");
+                    bus.b.borrow_mut().push(B { id, resp });
+                } else {
+                    self.busy = Some(Pending::WriteAddr { id, addr });
+                }
+            }
+            Some(Pending::Read { id, addr, lane0 }) => {
+                if bus.r.borrow().can_push() {
+                    let width = 8;
+                    let mut data = vec![0u8; width];
+                    let resp = match demux.read(addr & !0x3) {
+                        Ok(v) => {
+                            let word_lane = lane0 & !0x3;
+                            for i in 0..4 {
+                                if word_lane + i < width {
+                                    data[word_lane + i] = (v >> (8 * i)) as u8;
+                                }
+                            }
+                            Resp::Okay
+                        }
+                        Err(()) => Resp::SlvErr,
+                    };
+                    stats.bump("regbus.rd");
+                    bus.r.borrow_mut().push(R { id, data, resp, last: true });
+                } else {
+                    self.busy = Some(Pending::Read { id, addr, lane0 });
+                }
+            }
+        }
+    }
+}
+
+impl Default for Axi2Reg {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axi::port::axi_bus;
+    use crate::axi::types::{Ar, Aw, Burst, W};
+
+    /// A two-register scratch device.
+    struct Scratch {
+        regs: [u32; 2],
+    }
+    impl RegDevice for Scratch {
+        fn reg_read(&mut self, off: u64) -> Result<u32, ()> {
+            self.regs.get((off / 4) as usize).copied().ok_or(())
+        }
+        fn reg_write(&mut self, off: u64, data: u32) -> Result<(), ()> {
+            match self.regs.get_mut((off / 4) as usize) {
+                Some(r) => {
+                    *r = data;
+                    Ok(())
+                }
+                None => Err(()),
+            }
+        }
+    }
+
+    fn setup() -> (AxiBus, Axi2Reg, RegDemux, Stats) {
+        let bus = axi_bus(2);
+        let demux = RegDemux::new(vec![RegMapEntry {
+            base: 0x0300_0000,
+            size: 8,
+            dev: Box::new(Scratch { regs: [0; 2] }),
+        }]);
+        (bus, Axi2Reg::new(), demux, Stats::new())
+    }
+
+    #[test]
+    fn write_then_read_register() {
+        let (bus, mut bridge, mut demux, mut stats) = setup();
+        bus.aw.borrow_mut().push(Aw { id: 1, addr: 0x0300_0004, len: 0, size: 2, burst: Burst::Incr, qos: 0 });
+        // 64-bit bus: address 0x...4 puts the word in lanes 4..8
+        let mut data = vec![0u8; 8];
+        data[4..8].copy_from_slice(&0xdead_beefu32.to_le_bytes());
+        bus.w.borrow_mut().push(W { data, strb: 0xf0, last: true });
+        for _ in 0..5 {
+            bridge.tick(&bus, &mut demux, &mut stats);
+        }
+        assert_eq!(bus.b.borrow_mut().pop().unwrap().resp, Resp::Okay);
+
+        bus.ar.borrow_mut().push(Ar { id: 2, addr: 0x0300_0004, len: 0, size: 2, burst: Burst::Incr, qos: 0 });
+        for _ in 0..5 {
+            bridge.tick(&bus, &mut demux, &mut stats);
+        }
+        let r = bus.r.borrow_mut().pop().unwrap();
+        let v = u32::from_le_bytes(r.data[4..8].try_into().unwrap());
+        assert_eq!(v, 0xdead_beef);
+    }
+
+    #[test]
+    fn unmapped_register_errors() {
+        let (bus, mut bridge, mut demux, mut stats) = setup();
+        bus.ar.borrow_mut().push(Ar { id: 0, addr: 0x0300_0100, len: 0, size: 2, burst: Burst::Incr, qos: 0 });
+        for _ in 0..5 {
+            bridge.tick(&bus, &mut demux, &mut stats);
+        }
+        assert_eq!(bus.r.borrow_mut().pop().unwrap().resp, Resp::SlvErr);
+    }
+}

@@ -1,0 +1,90 @@
+//! Transfer splitter (paper Fig. 5 / §II-B).
+//!
+//! "The splitter splits NSRRP transactions at 2 KiB boundaries to comply
+//! with the RPC protocol." RPC DRAM pages are 2 KiB; a burst may not cross
+//! a page, so the frontend fragments transfers at page boundaries. The
+//! split points also bound how much write data must be buffered before a
+//! (non-stallable) write command may launch — which is exactly why write
+//! bus utilization trails reads in Fig. 8.
+
+/// A contiguous byte-range fragment of a transfer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Fragment {
+    pub addr: u64,
+    pub bytes: u64,
+}
+
+/// Split `[addr, addr+bytes)` at multiples of `boundary` (power of two).
+pub fn split_at_boundary(addr: u64, bytes: u64, boundary: u64) -> Vec<Fragment> {
+    assert!(boundary.is_power_of_two());
+    let mut out = Vec::new();
+    let mut a = addr;
+    let mut left = bytes;
+    while left > 0 {
+        let room = boundary - (a & (boundary - 1));
+        let n = room.min(left);
+        out.push(Fragment { addr: a, bytes: n });
+        a += n;
+        left -= n;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const B2K: u64 = 2048;
+
+    #[test]
+    fn aligned_small_transfer_is_unsplit() {
+        let f = split_at_boundary(0x8000_0000, 64, B2K);
+        assert_eq!(f, vec![Fragment { addr: 0x8000_0000, bytes: 64 }]);
+    }
+
+    #[test]
+    fn exact_page_is_unsplit() {
+        let f = split_at_boundary(0x8000_0800, B2K, B2K);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].bytes, B2K);
+    }
+
+    #[test]
+    fn crossing_transfer_splits() {
+        let f = split_at_boundary(0x8000_07F0, 0x20, B2K);
+        assert_eq!(
+            f,
+            vec![
+                Fragment { addr: 0x8000_07F0, bytes: 0x10 },
+                Fragment { addr: 0x8000_0800, bytes: 0x10 },
+            ]
+        );
+    }
+
+    #[test]
+    fn large_burst_fragments_per_page() {
+        let f = split_at_boundary(0x8000_0000, 64 * 1024, B2K);
+        assert_eq!(f.len(), 32);
+        assert!(f.iter().all(|fr| fr.bytes == B2K));
+        // fragments are contiguous and cover the range
+        let mut a = 0x8000_0000u64;
+        for fr in &f {
+            assert_eq!(fr.addr, a);
+            a += fr.bytes;
+        }
+        assert_eq!(a, 0x8000_0000 + 64 * 1024);
+    }
+
+    #[test]
+    fn never_crosses_boundary() {
+        for addr in (0..4096u64).step_by(97) {
+            for bytes in [1u64, 7, 32, 100, 2048, 5000] {
+                for fr in split_at_boundary(addr, bytes, B2K) {
+                    let first_page = fr.addr / B2K;
+                    let last_page = (fr.addr + fr.bytes - 1) / B2K;
+                    assert_eq!(first_page, last_page, "fragment {fr:?} crosses page");
+                }
+            }
+        }
+    }
+}

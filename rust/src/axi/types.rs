@@ -1,0 +1,140 @@
+//! AXI4 channel payload types.
+//!
+//! Faithful to the subset Cheshire uses: INCR (and FIXED) bursts, narrow
+//! transfers via `size`, byte strobes, multi-ID managers, OKAY/SLVERR/DECERR
+//! responses. WRAP bursts are accepted by the decoder but normalized to INCR
+//! by the single manager that would emit them (CVA6 refills aligned lines).
+
+/// Burst type (AxBURST).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Burst {
+    Fixed,
+    Incr,
+    Wrap,
+}
+
+/// Response code (xRESP).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Resp {
+    Okay,
+    SlvErr,
+    DecErr,
+}
+
+/// Write-address channel beat.
+#[derive(Debug, Clone)]
+pub struct Aw {
+    pub id: u32,
+    pub addr: u64,
+    /// Beats in burst minus one (AxLEN), 0..=255.
+    pub len: u8,
+    /// log2(bytes per beat) (AxSIZE).
+    pub size: u8,
+    pub burst: Burst,
+    /// Quality of service — carried but (per paper §II-B) not yet used for
+    /// prioritization: "we plan to implement transfer prioritization using
+    /// AXI4's QoS signals in future versions".
+    pub qos: u8,
+}
+
+/// Read-address channel beat.
+#[derive(Debug, Clone)]
+pub struct Ar {
+    pub id: u32,
+    pub addr: u64,
+    pub len: u8,
+    pub size: u8,
+    pub burst: Burst,
+    pub qos: u8,
+}
+
+/// Write-data channel beat. `data.len()` equals the bus width in bytes;
+/// `strb` is a bitmask (bit *i* covers `data[i]`), supporting buses ≤64 B.
+#[derive(Debug, Clone)]
+pub struct W {
+    pub data: Vec<u8>,
+    pub strb: u64,
+    pub last: bool,
+}
+
+/// Write-response channel beat.
+#[derive(Debug, Clone)]
+pub struct B {
+    pub id: u32,
+    pub resp: Resp,
+}
+
+/// Read-data channel beat.
+#[derive(Debug, Clone)]
+pub struct R {
+    pub id: u32,
+    pub data: Vec<u8>,
+    pub resp: Resp,
+    pub last: bool,
+}
+
+impl Aw {
+    /// Total bytes addressed by this burst (aligned transfers).
+    pub fn bytes(&self) -> u64 {
+        (self.len as u64 + 1) << self.size
+    }
+    /// Number of beats.
+    pub fn beats(&self) -> u32 {
+        self.len as u32 + 1
+    }
+}
+
+impl Ar {
+    pub fn bytes(&self) -> u64 {
+        (self.len as u64 + 1) << self.size
+    }
+    pub fn beats(&self) -> u32 {
+        self.len as u32 + 1
+    }
+}
+
+/// Full strobe mask for a `width`-byte bus.
+pub fn full_strb(width: usize) -> u64 {
+    if width >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << width) - 1
+    }
+}
+
+/// Address of beat `i` of a burst starting at `addr` with beat size
+/// `1 << size`, for INCR bursts. FIXED bursts stay at `addr`.
+pub fn beat_addr(addr: u64, size: u8, burst: Burst, i: u32) -> u64 {
+    match burst {
+        Burst::Fixed => addr,
+        _ => addr + ((i as u64) << size),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_byte_accounting() {
+        let aw = Aw { id: 0, addr: 0x80000000, len: 7, size: 3, burst: Burst::Incr, qos: 0 };
+        assert_eq!(aw.bytes(), 64);
+        assert_eq!(aw.beats(), 8);
+        let ar = Ar { id: 0, addr: 0, len: 0, size: 2, burst: Burst::Incr, qos: 0 };
+        assert_eq!(ar.bytes(), 4);
+    }
+
+    #[test]
+    fn strobe_masks() {
+        assert_eq!(full_strb(8), 0xff);
+        assert_eq!(full_strb(4), 0xf);
+        assert_eq!(full_strb(64), u64::MAX);
+    }
+
+    #[test]
+    fn beat_addresses() {
+        assert_eq!(beat_addr(0x100, 3, Burst::Incr, 0), 0x100);
+        assert_eq!(beat_addr(0x100, 3, Burst::Incr, 2), 0x110);
+        assert_eq!(beat_addr(0x100, 3, Burst::Fixed, 5), 0x100);
+    }
+}

@@ -1,0 +1,481 @@
+//! The AXI4 crossbar (paper Fig. 1, [19]).
+//!
+//! All-to-all M×S crossbar with:
+//! * address-map decode to subordinate ports (plus DECERR default path),
+//! * per-subordinate round-robin arbitration on AW and AR,
+//! * AXI4-legal write-data routing (no W interleaving at a subordinate:
+//!   W streams follow granted-AW order),
+//! * ID-prefix response routing (`sub_id = mgr_idx << ID_BITS | mgr_id`),
+//!   so managers keep their ID space and responses find their way back.
+//!
+//! The paper's configurability knobs — address width, data width, number of
+//! DSA manager/subordinate port pairs — map to [`XbarCfg`]; the area model
+//! (`crate::model::area`) consumes the same struct to reproduce Fig. 9.
+
+use super::port::AxiBus;
+use super::types::{Resp, B, R};
+use crate::sim::Stats;
+use std::collections::VecDeque;
+
+/// Bits of manager-local ID space preserved through the crossbar.
+pub const ID_BITS: u32 = 8;
+
+/// One entry of the crossbar address map.
+#[derive(Debug, Clone)]
+pub struct AddrRange {
+    pub base: u64,
+    pub size: u64,
+    pub sub: usize,
+}
+
+impl AddrRange {
+    pub fn contains(&self, addr: u64) -> bool {
+        addr >= self.base && addr < self.base + self.size
+    }
+}
+
+/// Crossbar configuration (mirrors the paper's configurability claims).
+#[derive(Debug, Clone)]
+pub struct XbarCfg {
+    /// Data width in bytes (Neo: 8 = 64 b).
+    pub data_bytes: usize,
+    /// Address width in bits (Neo: 48).
+    pub addr_bits: u32,
+    /// Number of manager ports attached.
+    pub n_managers: usize,
+    /// Number of subordinate ports attached.
+    pub n_subordinates: usize,
+}
+
+/// Decode-error bookkeeping: a write that decoded to nowhere must still
+/// drain its W beats and then produce a DECERR B response.
+#[derive(Debug)]
+enum ErrJob {
+    /// Drain W beats until `last`, then respond DECERR on B with `id`.
+    DrainWrite { mgr: usize, id: u32 },
+    /// Emit `beats` DECERR R beats with `id`.
+    ReadBeats { mgr: usize, id: u32, beats: u32 },
+}
+
+/// The crossbar component. `mgr` ports are the buses whose manager side is
+/// some component (CPU, DMA, DSA); `sub` ports are buses whose subordinate
+/// side is a memory/peripheral. The crossbar is the subordinate of the
+/// former and the manager of the latter.
+pub struct Xbar {
+    pub cfg: XbarCfg,
+    mgr: Vec<AxiBus>,
+    sub: Vec<AxiBus>,
+    map: Vec<AddrRange>,
+    /// Per-subordinate queue of managers whose granted write streams are
+    /// pending W routing (front = stream currently being forwarded).
+    w_route: Vec<VecDeque<usize>>,
+    /// Per-manager queue of subordinate targets for its in-flight write
+    /// streams (front = target of the W beats currently at the head).
+    w_target: Vec<VecDeque<usize>>,
+    /// Round-robin pointers per subordinate for AW and AR arbitration.
+    rr_aw: Vec<usize>,
+    rr_ar: Vec<usize>,
+    err: VecDeque<ErrJob>,
+}
+
+impl Xbar {
+    pub fn new(cfg: XbarCfg, mgr: Vec<AxiBus>, sub: Vec<AxiBus>, map: Vec<AddrRange>) -> Self {
+        assert_eq!(cfg.n_managers, mgr.len());
+        assert_eq!(cfg.n_subordinates, sub.len());
+        for r in &map {
+            assert!(r.sub < sub.len(), "address map points past subordinate list");
+        }
+        let ns = sub.len();
+        let nm = mgr.len();
+        Self {
+            cfg,
+            mgr,
+            sub,
+            map,
+            w_route: (0..ns).map(|_| VecDeque::new()).collect(),
+            w_target: (0..nm).map(|_| VecDeque::new()).collect(),
+            rr_aw: vec![0; ns],
+            rr_ar: vec![0; ns],
+            err: VecDeque::new(),
+        }
+    }
+
+    fn decode(&self, addr: u64) -> Option<usize> {
+        self.map.iter().find(|r| r.contains(addr)).map(|r| r.sub)
+    }
+
+    /// Advance the crossbar by one cycle.
+    pub fn tick(&mut self, stats: &mut Stats) {
+        self.route_aw(stats);
+        self.route_w(stats);
+        self.route_ar(stats);
+        self.route_b(stats);
+        self.route_r(stats);
+        self.service_errors();
+    }
+
+    /// AW arbitration: decode each manager's head-of-line AW once (O(M)),
+    /// then grant per subordinate round-robin (O(S)) — the restructuring
+    /// from O(M×S) peeks is the §Perf L3 hot-path fix.
+    fn route_aw(&mut self, stats: &mut Stats) {
+        let nm = self.mgr.len();
+        // head-of-line decode per manager: usize::MAX = no AW pending
+        let mut want = [usize::MAX; 64];
+        for m in 0..nm {
+            let dec = {
+                let aw = self.mgr[m].aw.borrow();
+                aw.peek().map(|a| self.decode(a.addr))
+            };
+            match dec {
+                None => {}
+                Some(Some(sub)) => want[m] = sub,
+                Some(None) => {
+                    let a = self.mgr[m].aw.borrow_mut().pop().unwrap();
+                    stats.bump("xbar.aw_decerr");
+                    self.w_target[m].push_back(usize::MAX); // error drain
+                    self.err.push_back(ErrJob::DrainWrite { mgr: m, id: a.id });
+                }
+            }
+        }
+        for s in 0..self.sub.len() {
+            if !want[..nm].contains(&s) || !self.sub[s].aw.borrow().can_push() {
+                continue;
+            }
+            for off in 0..nm {
+                let m = (self.rr_aw[s] + off) % nm;
+                if want[m] == s {
+                    let mut a = self.mgr[m].aw.borrow_mut().pop().unwrap();
+                    a.id = ((m as u32) << ID_BITS) | (a.id & ((1 << ID_BITS) - 1));
+                    self.sub[s].aw.borrow_mut().push(a);
+                    self.w_route[s].push_back(m);
+                    self.w_target[m].push_back(s);
+                    self.rr_aw[s] = (m + 1) % nm;
+                    stats.bump("xbar.aw");
+                    break;
+                }
+            }
+        }
+    }
+
+    /// W routing: each subordinate forwards beats only from the manager at
+    /// the front of its granted-write queue (no interleaving).
+    fn route_w(&mut self, stats: &mut Stats) {
+        for s in 0..self.sub.len() {
+            // Forward as many beats as fit this cycle from the current stream
+            // (one per cycle keeps beat-level timing honest).
+            let Some(&m) = self.w_route[s].front() else { continue };
+            if !self.sub[s].w.borrow().can_push() {
+                continue;
+            }
+            // The manager's front write-target must be this subordinate;
+            // otherwise its W head belongs to an earlier stream elsewhere.
+            if self.w_target[m].front() != Some(&s) {
+                continue;
+            }
+            let beat = self.mgr[m].w.borrow_mut().pop();
+            if let Some(beat) = beat {
+                let last = beat.last;
+                self.sub[s].w.borrow_mut().push(beat);
+                stats.bump("xbar.w");
+                if last {
+                    self.w_route[s].pop_front();
+                    self.w_target[m].pop_front();
+                }
+            }
+        }
+    }
+
+    /// AR arbitration (like AW: O(M) decode + O(S) grant).
+    fn route_ar(&mut self, stats: &mut Stats) {
+        let nm = self.mgr.len();
+        let mut want = [usize::MAX; 64];
+        for m in 0..nm {
+            let dec = {
+                let ar = self.mgr[m].ar.borrow();
+                ar.peek().map(|a| (self.decode(a.addr), a.id, a.beats()))
+            };
+            match dec {
+                None => {}
+                Some((Some(sub), _, _)) => want[m] = sub,
+                Some((None, id, beats)) => {
+                    self.mgr[m].ar.borrow_mut().pop();
+                    stats.bump("xbar.ar_decerr");
+                    self.err.push_back(ErrJob::ReadBeats { mgr: m, id, beats });
+                }
+            }
+        }
+        for s in 0..self.sub.len() {
+            if !want[..nm].contains(&s) || !self.sub[s].ar.borrow().can_push() {
+                continue;
+            }
+            for off in 0..nm {
+                let m = (self.rr_ar[s] + off) % nm;
+                if want[m] == s {
+                    let mut a = self.mgr[m].ar.borrow_mut().pop().unwrap();
+                    a.id = ((m as u32) << ID_BITS) | (a.id & ((1 << ID_BITS) - 1));
+                    self.sub[s].ar.borrow_mut().push(a);
+                    self.rr_ar[s] = (m + 1) % nm;
+                    stats.bump("xbar.ar");
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Route B responses back by ID prefix.
+    fn route_b(&mut self, stats: &mut Stats) {
+        for s in 0..self.sub.len() {
+            let Some(m) = self.sub[s].b.borrow().peek().map(|b| (b.id >> ID_BITS) as usize)
+            else {
+                continue;
+            };
+            if m >= self.mgr.len() || !self.mgr[m].b.borrow().can_push() {
+                continue;
+            }
+            let mut b = self.sub[s].b.borrow_mut().pop().unwrap();
+            b.id &= (1 << ID_BITS) - 1;
+            self.mgr[m].b.borrow_mut().push(b);
+            stats.bump("xbar.b");
+        }
+    }
+
+    /// Route R beats back by ID prefix.
+    fn route_r(&mut self, stats: &mut Stats) {
+        for s in 0..self.sub.len() {
+            let Some(m) = self.sub[s].r.borrow().peek().map(|r| (r.id >> ID_BITS) as usize)
+            else {
+                continue;
+            };
+            if m >= self.mgr.len() || !self.mgr[m].r.borrow().can_push() {
+                continue;
+            }
+            let mut r = self.sub[s].r.borrow_mut().pop().unwrap();
+            r.id &= (1 << ID_BITS) - 1;
+            self.mgr[m].r.borrow_mut().push(r);
+            stats.bump("xbar.r");
+        }
+    }
+
+    /// Progress decode-error jobs: drain orphan W streams, emit DECERR.
+    fn service_errors(&mut self) {
+        let Some(job) = self.err.front_mut() else { return };
+        match job {
+            ErrJob::DrainWrite { mgr, id } => {
+                let m = *mgr;
+                // Only drain if this manager's front write target is the
+                // error drain (usize::MAX), else beats belong elsewhere.
+                if self.w_target[m].front() != Some(&usize::MAX) {
+                    return;
+                }
+                let beat = self.mgr[m].w.borrow_mut().pop();
+                if let Some(beat) = beat {
+                    if beat.last {
+                        let id = *id;
+                        if self.mgr[m].b.borrow_mut().push(B { id, resp: Resp::DecErr }) {
+                            self.w_target[m].pop_front();
+                            self.err.pop_front();
+                        } else {
+                            // retry the B next cycle; W already drained
+                            *job = ErrJob::DrainWrite { mgr: m, id };
+                            self.w_target[m].pop_front();
+                            self.err[0] = ErrJob::ReadBeats { mgr: m, id, beats: 0 };
+                        }
+                    }
+                }
+            }
+            ErrJob::ReadBeats { mgr, id, beats } => {
+                let m = *mgr;
+                if *beats == 0 {
+                    // degenerate: pending B from a drained write
+                    let id = *id;
+                    if self.mgr[m].b.borrow_mut().push(B { id, resp: Resp::DecErr }) {
+                        self.err.pop_front();
+                    }
+                    return;
+                }
+                let width = self.cfg.data_bytes;
+                if self.mgr[m].r.borrow().can_push() {
+                    *beats -= 1;
+                    let last = *beats == 0;
+                    let id = *id;
+                    self.mgr[m].r.borrow_mut().push(R {
+                        id,
+                        data: vec![0; width],
+                        resp: Resp::DecErr,
+                        last,
+                    });
+                    if last {
+                        self.err.pop_front();
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axi::memsub::MemSub;
+    use crate::axi::port::axi_bus;
+    use crate::axi::types::{full_strb, Aw, Ar, Burst, W};
+
+    fn cfg(nm: usize, ns: usize) -> XbarCfg {
+        XbarCfg { data_bytes: 8, addr_bits: 48, n_managers: nm, n_subordinates: ns }
+    }
+
+    /// One manager, one memory: write a burst, read it back through the xbar.
+    #[test]
+    fn single_manager_roundtrip() {
+        let m0 = axi_bus(4);
+        let s0 = axi_bus(4);
+        let mut xbar = Xbar::new(
+            cfg(1, 1),
+            vec![m0.clone()],
+            vec![s0.clone()],
+            vec![AddrRange { base: 0x8000_0000, size: 0x1000, sub: 0 }],
+        );
+        let mut mem = MemSub::new(0x8000_0000, 0x1000, 8, 1);
+        let mut stats = Stats::new();
+
+        m0.aw.borrow_mut().push(Aw { id: 1, addr: 0x8000_0100, len: 1, size: 3, burst: Burst::Incr, qos: 0 });
+        m0.w.borrow_mut().push(W { data: (0..8).collect(), strb: full_strb(8), last: false });
+        m0.w.borrow_mut().push(W { data: (8..16).collect(), strb: full_strb(8), last: true });
+
+        for _ in 0..50 {
+            xbar.tick(&mut stats);
+            mem.tick(&s0, &mut stats);
+        }
+        let b = m0.b.borrow_mut().pop().expect("write response");
+        assert_eq!(b.id, 1);
+        assert_eq!(b.resp, Resp::Okay);
+
+        m0.ar.borrow_mut().push(Ar { id: 2, addr: 0x8000_0100, len: 1, size: 3, burst: Burst::Incr, qos: 0 });
+        for _ in 0..50 {
+            xbar.tick(&mut stats);
+            mem.tick(&s0, &mut stats);
+        }
+        let r0 = m0.r.borrow_mut().pop().expect("first beat");
+        let r1 = m0.r.borrow_mut().pop().expect("second beat");
+        assert_eq!(r0.id, 2);
+        assert_eq!(r0.data, (0..8).collect::<Vec<u8>>());
+        assert!(!r0.last);
+        assert_eq!(r1.data, (8..16).collect::<Vec<u8>>());
+        assert!(r1.last);
+    }
+
+    /// Two managers writing to the same memory must not interleave W beats.
+    #[test]
+    fn two_managers_no_w_interleave() {
+        let m0 = axi_bus(4);
+        let m1 = axi_bus(4);
+        let s0 = axi_bus(4);
+        let mut xbar = Xbar::new(
+            cfg(2, 1),
+            vec![m0.clone(), m1.clone()],
+            vec![s0.clone()],
+            vec![AddrRange { base: 0, size: 0x1000, sub: 0 }],
+        );
+        let mut mem = MemSub::new(0, 0x1000, 8, 1);
+        let mut stats = Stats::new();
+
+        for (m, base, val) in [(&m0, 0x100u64, 0xaau8), (&m1, 0x200, 0x55)] {
+            m.aw.borrow_mut().push(Aw { id: 0, addr: base, len: 3, size: 3, burst: Burst::Incr, qos: 0 });
+            for i in 0..4 {
+                m.w.borrow_mut().push(W { data: vec![val; 8], strb: full_strb(8), last: i == 3 });
+            }
+        }
+        for _ in 0..100 {
+            xbar.tick(&mut stats);
+            mem.tick(&s0, &mut stats);
+        }
+        assert!(m0.b.borrow_mut().pop().is_some());
+        assert!(m1.b.borrow_mut().pop().is_some());
+        assert_eq!(mem.mem()[0x100..0x120], vec![0xaa; 32][..]);
+        assert_eq!(mem.mem()[0x200..0x220], vec![0x55; 32][..]);
+    }
+
+    /// Reads to unmapped space return DECERR with the right beat count.
+    #[test]
+    fn decode_error_read() {
+        let m0 = axi_bus(4);
+        let s0 = axi_bus(4);
+        let mut xbar = Xbar::new(
+            cfg(1, 1),
+            vec![m0.clone()],
+            vec![s0.clone()],
+            vec![AddrRange { base: 0, size: 0x100, sub: 0 }],
+        );
+        let mut stats = Stats::new();
+        m0.ar.borrow_mut().push(Ar { id: 5, addr: 0xdead_0000, len: 2, size: 3, burst: Burst::Incr, qos: 0 });
+        for _ in 0..20 {
+            xbar.tick(&mut stats);
+        }
+        let mut beats = 0;
+        let mut last_seen = false;
+        while let Some(r) = m0.r.borrow_mut().pop() {
+            assert_eq!(r.resp, Resp::DecErr);
+            assert_eq!(r.id, 5);
+            beats += 1;
+            last_seen = r.last;
+        }
+        assert_eq!(beats, 3);
+        assert!(last_seen);
+        assert_eq!(stats.get("xbar.ar_decerr"), 1);
+    }
+
+    /// Writes to unmapped space drain W and return DECERR on B.
+    #[test]
+    fn decode_error_write() {
+        let m0 = axi_bus(4);
+        let s0 = axi_bus(4);
+        let mut xbar = Xbar::new(
+            cfg(1, 1),
+            vec![m0.clone()],
+            vec![s0.clone()],
+            vec![AddrRange { base: 0, size: 0x100, sub: 0 }],
+        );
+        let mut stats = Stats::new();
+        m0.aw.borrow_mut().push(Aw { id: 9, addr: 0xdead_0000, len: 1, size: 3, burst: Burst::Incr, qos: 0 });
+        m0.w.borrow_mut().push(W { data: vec![0; 8], strb: 0xff, last: false });
+        m0.w.borrow_mut().push(W { data: vec![0; 8], strb: 0xff, last: true });
+        for _ in 0..20 {
+            xbar.tick(&mut stats);
+        }
+        let b = m0.b.borrow_mut().pop().expect("decerr B");
+        assert_eq!(b.resp, Resp::DecErr);
+        assert_eq!(b.id, 9);
+    }
+
+    /// Two subordinates: traffic routes by address; responses come home.
+    #[test]
+    fn two_subordinates_route_by_address() {
+        let m0 = axi_bus(4);
+        let s0 = axi_bus(4);
+        let s1 = axi_bus(4);
+        let mut xbar = Xbar::new(
+            cfg(1, 2),
+            vec![m0.clone()],
+            vec![s0.clone(), s1.clone()],
+            vec![
+                AddrRange { base: 0x1000, size: 0x1000, sub: 0 },
+                AddrRange { base: 0x2000, size: 0x1000, sub: 1 },
+            ],
+        );
+        let mut mem0 = MemSub::new(0x1000, 0x1000, 8, 1);
+        let mut mem1 = MemSub::new(0x2000, 0x1000, 8, 1);
+        let mut stats = Stats::new();
+        for (addr, v) in [(0x1000u64, 1u8), (0x2000, 2)] {
+            m0.aw.borrow_mut().push(Aw { id: 0, addr, len: 0, size: 3, burst: Burst::Incr, qos: 0 });
+            m0.w.borrow_mut().push(W { data: vec![v; 8], strb: 0xff, last: true });
+        }
+        for _ in 0..100 {
+            xbar.tick(&mut stats);
+            mem0.tick(&s0, &mut stats);
+            mem1.tick(&s1, &mut stats);
+        }
+        assert_eq!(mem0.mem()[0], 1);
+        assert_eq!(mem1.mem()[0], 2);
+        assert_eq!(m0.b.borrow().len(), 2);
+    }
+}

@@ -1,0 +1,223 @@
+//! L1 cache model (CVA6's 32 KiB, 8-way set-associative caches).
+//!
+//! Functional write-back, write-allocate cache with tree-LRU replacement.
+//! The CPU drives it synchronously: `probe` classifies an access, the CPU
+//! then performs the AXI refill/writeback and calls `refill`. Timing (miss
+//! stall cycles) lives in the CPU model; this module owns state + stats so
+//! hit/miss energy is attributable per the Fig. 11 power breakdown.
+
+use crate::sim::Stats;
+
+pub const LINE: usize = 64;
+
+/// Result of a cache probe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Probe {
+    Hit,
+    /// Miss requiring a refill; if `victim_dirty` the victim line must be
+    /// written back first (address/data via `victim`).
+    Miss { victim_dirty: bool },
+}
+
+struct Line {
+    tag: u64,
+    valid: bool,
+    dirty: bool,
+}
+
+/// One L1 cache (I$ or D$).
+pub struct L1Cache {
+    sets: usize,
+    ways: usize,
+    lines: Vec<Line>,
+    data: Vec<u8>,
+    lru: Vec<u64>, // per-set LRU counters (per way), simple aging
+    tick: u64,
+    pub stat_hit: &'static str,
+    pub stat_miss: &'static str,
+}
+
+impl L1Cache {
+    /// `size` bytes, `ways`-associative, 64 B lines.
+    pub fn new(size: usize, ways: usize, stat_hit: &'static str, stat_miss: &'static str) -> Self {
+        let sets = size / (ways * LINE);
+        assert!(sets.is_power_of_two(), "set count must be a power of two");
+        Self {
+            sets,
+            ways,
+            lines: (0..sets * ways).map(|_| Line { tag: 0, valid: false, dirty: false }).collect(),
+            data: vec![0; size],
+            lru: vec![0; sets * ways],
+            tick: 0,
+            stat_hit,
+            stat_miss,
+        }
+    }
+
+    #[inline]
+    fn set_of(&self, addr: u64) -> usize {
+        ((addr as usize) / LINE) & (self.sets - 1)
+    }
+
+    #[inline]
+    fn tag_of(&self, addr: u64) -> u64 {
+        addr / (LINE * self.sets) as u64
+    }
+
+    fn find(&self, addr: u64) -> Option<usize> {
+        let set = self.set_of(addr);
+        let tag = self.tag_of(addr);
+        (0..self.ways)
+            .map(|w| set * self.ways + w)
+            .find(|&i| self.lines[i].valid && self.lines[i].tag == tag)
+    }
+
+    /// Classify an access without performing it.
+    pub fn probe(&mut self, addr: u64, stats: &mut Stats) -> Probe {
+        self.tick += 1;
+        if let Some(i) = self.find(addr) {
+            self.lru[i] = self.tick;
+            stats.bump(self.stat_hit);
+            Probe::Hit
+        } else {
+            stats.bump(self.stat_miss);
+            let v = self.victim_idx(addr);
+            Probe::Miss { victim_dirty: self.lines[v].valid && self.lines[v].dirty }
+        }
+    }
+
+    fn victim_idx(&self, addr: u64) -> usize {
+        let set = self.set_of(addr);
+        // invalid way first, else least-recently used
+        (0..self.ways)
+            .map(|w| set * self.ways + w)
+            .min_by_key(|&i| if self.lines[i].valid { (1, self.lru[i]) } else { (0, 0) })
+            .unwrap()
+    }
+
+    /// Address + data of the victim line that `refill(addr, …)` will evict.
+    pub fn victim(&self, addr: u64) -> Option<(u64, Vec<u8>)> {
+        let i = self.victim_idx(addr);
+        if !self.lines[i].valid {
+            return None;
+        }
+        let set = self.set_of(addr);
+        let way = i - set * self.ways;
+        let vaddr = (self.lines[i].tag * self.sets as u64 + set as u64) * LINE as u64;
+        let off = (set * self.ways + way) * LINE;
+        Some((vaddr, self.data[off..off + LINE].to_vec()))
+    }
+
+    /// Install a line fetched from memory.
+    pub fn refill(&mut self, addr: u64, line: &[u8]) {
+        assert_eq!(line.len(), LINE);
+        let i = self.victim_idx(addr);
+        let off = i * LINE;
+        self.data[off..off + LINE].copy_from_slice(line);
+        self.lines[i] = Line { tag: self.tag_of(addr), valid: true, dirty: false };
+        self.tick += 1;
+        self.lru[i] = self.tick;
+    }
+
+    /// Read bytes from a *hit* line (caller must have seen `Probe::Hit`).
+    pub fn read(&self, addr: u64, buf: &mut [u8]) {
+        let i = self.find(addr).expect("read on miss");
+        let off = i * LINE + (addr as usize & (LINE - 1));
+        buf.copy_from_slice(&self.data[off..off + buf.len()]);
+    }
+
+    /// Write bytes into a *hit* line, marking it dirty.
+    pub fn write(&mut self, addr: u64, buf: &[u8]) {
+        let i = self.find(addr).expect("write on miss");
+        let off = i * LINE + (addr as usize & (LINE - 1));
+        self.data[off..off + buf.len()].copy_from_slice(buf);
+        self.lines[i].dirty = true;
+    }
+
+    /// Invalidate everything (used by fence.i / SPM reconfiguration tests).
+    pub fn invalidate_all(&mut self) {
+        for l in &mut self.lines {
+            l.valid = false;
+            l.dirty = false;
+        }
+    }
+
+    /// All dirty lines as (address, data) — for flush operations.
+    pub fn dirty_lines(&self) -> Vec<(u64, Vec<u8>)> {
+        let mut out = Vec::new();
+        for set in 0..self.sets {
+            for way in 0..self.ways {
+                let i = set * self.ways + way;
+                if self.lines[i].valid && self.lines[i].dirty {
+                    let addr = (self.lines[i].tag * self.sets as u64 + set as u64) * LINE as u64;
+                    out.push((addr, self.data[i * LINE..i * LINE + LINE].to_vec()));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk() -> (L1Cache, Stats) {
+        (L1Cache::new(32 * 1024, 8, "l1d.hit", "l1d.miss"), Stats::new())
+    }
+
+    #[test]
+    fn miss_then_hit() {
+        let (mut c, mut s) = mk();
+        assert!(matches!(c.probe(0x8000_0040, &mut s), Probe::Miss { victim_dirty: false }));
+        c.refill(0x8000_0040, &[7u8; LINE]);
+        assert_eq!(c.probe(0x8000_0040, &mut s), Probe::Hit);
+        let mut b = [0u8; 8];
+        c.read(0x8000_0048, &mut b);
+        assert_eq!(b, [7u8; 8]);
+        assert_eq!(s.get("l1d.hit"), 1);
+        assert_eq!(s.get("l1d.miss"), 1);
+    }
+
+    #[test]
+    fn write_marks_dirty_and_evicts() {
+        let (mut c, mut s) = mk();
+        c.refill(0x0, &[0u8; LINE]);
+        c.probe(0x0, &mut s);
+        c.write(0x0, &[0xaa; 8]);
+        assert_eq!(c.dirty_lines().len(), 1);
+        // fill the set: set 0 repeats every 4 KiB (64 sets × 64 B)
+        let set_stride = 32 * 1024 / 8; // sets * LINE
+        for k in 1..8 {
+            c.refill((k * set_stride) as u64, &[k as u8; LINE]);
+        }
+        // 9th line in set 0 must evict the dirty LRU line (addr 0)
+        assert!(matches!(c.probe((8 * set_stride) as u64, &mut s), Probe::Miss { victim_dirty: true }));
+        let (vaddr, vdata) = c.victim((8 * set_stride) as u64).unwrap();
+        assert_eq!(vaddr, 0);
+        assert_eq!(&vdata[..8], &[0xaa; 8]);
+    }
+
+    #[test]
+    fn lru_prefers_least_recent() {
+        let (mut c, mut s) = mk();
+        let set_stride = 32 * 1024 / 8;
+        for k in 0..8 {
+            c.refill((k * set_stride) as u64, &[k as u8; LINE]);
+        }
+        // touch lines 1..8, leaving 0 least-recent
+        for k in 1..8 {
+            assert_eq!(c.probe((k * set_stride) as u64, &mut s), Probe::Hit);
+        }
+        let (vaddr, _) = c.victim((8 * set_stride) as u64).map(|v| v).unwrap();
+        assert_eq!(vaddr, 0);
+    }
+
+    #[test]
+    fn invalidate_clears() {
+        let (mut c, mut s) = mk();
+        c.refill(0x40, &[1u8; LINE]);
+        c.invalidate_all();
+        assert!(matches!(c.probe(0x40, &mut s), Probe::Miss { .. }));
+    }
+}

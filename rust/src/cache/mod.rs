@@ -1,0 +1,14 @@
+//! Cache hierarchy: CVA6's L1 caches and Cheshire's configurable LLC/SPM.
+//!
+//! * [`l1`] — 32 KiB 8-way write-back L1 data/instruction caches (Neo's
+//!   CVA6 configuration, paper §III-A), driven synchronously by the CPU
+//!   model which turns misses into AXI refill/writeback bursts.
+//! * [`llc`] — the last-level cache in front of RPC DRAM whose ways can be
+//!   individually reconfigured as scratchpad memory (SPM) at runtime
+//!   (paper §II-A) through a memory-mapped register file.
+
+pub mod l1;
+pub mod llc;
+
+pub use l1::L1Cache;
+pub use llc::{Llc, LlcCfg};

@@ -1,0 +1,783 @@
+//! Functional RV64IMFD+Zicsr core (M-mode).
+//!
+//! Executes one instruction per `step`. Memory accesses go through [`Bus`]
+//! and may return [`MemErr::Stall`]; the core then restores its pre-step
+//! architectural state and reports [`StepOutcome::Stalled`], letting the
+//! timing wrapper resolve the miss and retry — instructions never commit
+//! partially. This retry discipline is what lets the same core run over a
+//! cycle-accurate memory system without a microarchitectural pipeline
+//! model.
+
+/// Memory access error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemErr {
+    /// Access needs time (cache miss / MMIO in flight): retry this
+    /// instruction later.
+    Stall,
+    /// Bus error → trap.
+    Fault,
+}
+
+/// The memory interface the core executes against.
+pub trait Bus {
+    fn load(&mut self, addr: u64, size: usize) -> Result<u64, MemErr>;
+    fn store(&mut self, addr: u64, val: u64, size: usize) -> Result<(), MemErr>;
+    fn fetch(&mut self, addr: u64) -> Result<u32, MemErr>;
+    /// FENCE (`instr == false`) / FENCE.I (`instr == true`) visibility
+    /// hook. Cheshire's DMA is non-coherent with the L1s, so FENCE flushes
+    /// dirty lines — which takes bus time, hence the `Stall` option.
+    fn fence(&mut self, _instr: bool) -> Result<(), MemErr> {
+        Ok(())
+    }
+}
+
+/// Why a step ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// Instruction retired; extra latency cycles beyond 1 (mul/div/fp),
+    /// plus whether it was a floating-point instruction (power model).
+    Retired { extra_cycles: u32, fp: bool },
+    /// Memory stalled; architectural state unchanged — retry.
+    Stalled,
+    /// WFI executed: sleep until an interrupt is pending.
+    Wfi,
+    /// Trap taken (already redirected to mtvec).
+    Trapped(Trap),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trap {
+    IllegalInstr(u32),
+    LoadFault(u64),
+    StoreFault(u64),
+    Ecall,
+    Ebreak,
+    /// Asynchronous interrupt, cause number (3 msi, 7 mti, 11 mei).
+    Interrupt(u64),
+}
+
+/// M-mode CSR file (the subset CVA6/Linux bring-up uses).
+#[derive(Debug, Clone, Default)]
+pub struct Csrs {
+    pub mstatus: u64,
+    pub mie: u64,
+    pub mip: u64,
+    pub mtvec: u64,
+    pub mepc: u64,
+    pub mcause: u64,
+    pub mtval: u64,
+    pub mscratch: u64,
+    pub mhartid: u64,
+    pub mcycle: u64,
+    pub minstret: u64,
+}
+
+const MSTATUS_MIE: u64 = 1 << 3;
+const MSTATUS_MPIE: u64 = 1 << 7;
+
+/// The architectural core.
+#[derive(Clone)]
+pub struct CpuCore {
+    pub x: [u64; 32],
+    pub f: [u64; 32],
+    pub pc: u64,
+    pub csr: Csrs,
+}
+
+impl CpuCore {
+    pub fn new(pc: u64, hartid: u64) -> Self {
+        let mut c = Self { x: [0; 32], f: [0; 32], pc, csr: Csrs::default() };
+        c.csr.mhartid = hartid;
+        c
+    }
+
+    #[inline]
+    fn wx(&mut self, rd: usize, v: u64) {
+        if rd != 0 {
+            self.x[rd] = v;
+        }
+    }
+
+    /// Take an interrupt if one is pending, enabled, and globally allowed.
+    /// Returns the cause if redirected.
+    pub fn maybe_interrupt(&mut self) -> Option<u64> {
+        if self.csr.mstatus & MSTATUS_MIE == 0 {
+            return None;
+        }
+        let pend = self.csr.mip & self.csr.mie;
+        if pend == 0 {
+            return None;
+        }
+        // priority: MEI(11) > MSI(3) > MTI(7)
+        let cause = if pend & (1 << 11) != 0 {
+            11
+        } else if pend & (1 << 3) != 0 {
+            3
+        } else if pend & (1 << 7) != 0 {
+            7
+        } else {
+            return None;
+        };
+        self.enter_trap((1 << 63) | cause, self.pc, 0);
+        Some(cause)
+    }
+
+    fn enter_trap(&mut self, cause: u64, epc: u64, tval: u64) {
+        self.csr.mepc = epc;
+        self.csr.mcause = cause;
+        self.csr.mtval = tval;
+        // MPIE ← MIE, MIE ← 0
+        let mie = (self.csr.mstatus >> 3) & 1;
+        self.csr.mstatus = (self.csr.mstatus & !(MSTATUS_MIE | MSTATUS_MPIE)) | (mie << 7);
+        self.pc = self.csr.mtvec & !0x3;
+    }
+
+    fn csr_read(&self, addr: u16) -> Result<u64, ()> {
+        Ok(match addr {
+            0x300 => self.csr.mstatus,
+            0x304 => self.csr.mie,
+            0x305 => self.csr.mtvec,
+            0x340 => self.csr.mscratch,
+            0x341 => self.csr.mepc,
+            0x342 => self.csr.mcause,
+            0x343 => self.csr.mtval,
+            0x344 => self.csr.mip,
+            0xb00 | 0xc00 => self.csr.mcycle,
+            0xb02 | 0xc02 => self.csr.minstret,
+            0xf14 => self.csr.mhartid,
+            0x301 => 0x8000_0000_0014_112d, // misa: RV64IMFDC-ish
+            _ => return Err(()),
+        })
+    }
+
+    fn csr_write(&mut self, addr: u16, v: u64) -> Result<(), ()> {
+        match addr {
+            0x300 => self.csr.mstatus = v,
+            0x304 => self.csr.mie = v,
+            0x305 => self.csr.mtvec = v,
+            0x340 => self.csr.mscratch = v,
+            0x341 => self.csr.mepc = v,
+            0x342 => self.csr.mcause = v,
+            0x343 => self.csr.mtval = v,
+            0x344 => self.csr.mip = v & (1 << 3), // software bit writable
+            0xb00 => self.csr.mcycle = v,
+            0xb02 => self.csr.minstret = v,
+            _ => return Err(()),
+        }
+        Ok(())
+    }
+
+    /// Execute one instruction. On `Stalled`, state is unchanged.
+    pub fn step(&mut self, bus: &mut dyn Bus) -> StepOutcome {
+        let snap_x = self.x;
+        let snap_f = self.f;
+        let snap_pc = self.pc;
+        let out = self.exec(bus);
+        if matches!(out, StepOutcome::Stalled) {
+            self.x = snap_x;
+            self.f = snap_f;
+            self.pc = snap_pc;
+        } else if !matches!(out, StepOutcome::Trapped(_)) {
+            self.csr.minstret = self.csr.minstret.wrapping_add(1);
+        }
+        out
+    }
+
+    fn exec(&mut self, bus: &mut dyn Bus) -> StepOutcome {
+        let pc = self.pc;
+        let inst = match bus.fetch(pc) {
+            Ok(i) => i,
+            Err(MemErr::Stall) => return StepOutcome::Stalled,
+            Err(MemErr::Fault) => {
+                self.enter_trap(1, pc, pc);
+                return StepOutcome::Trapped(Trap::LoadFault(pc));
+            }
+        };
+        let op = inst & 0x7f;
+        let rd = ((inst >> 7) & 31) as usize;
+        let f3 = (inst >> 12) & 7;
+        let rs1 = ((inst >> 15) & 31) as usize;
+        let rs2 = ((inst >> 20) & 31) as usize;
+        let f7 = inst >> 25;
+        let imm_i = (inst as i32) >> 20;
+        let imm_s = (((inst & 0xfe00_0000) as i32) >> 20) | (((inst >> 7) & 0x1f) as i32);
+        let imm_b = ((((inst >> 31) & 1) << 12)
+            | (((inst >> 7) & 1) << 11)
+            | (((inst >> 25) & 0x3f) << 5)
+            | (((inst >> 8) & 0xf) << 1)) as i32;
+        let imm_b = (imm_b << 19) >> 19;
+        let imm_u = (inst & 0xffff_f000) as i32 as i64;
+        let imm_j = ((((inst >> 31) & 1) << 20)
+            | (((inst >> 12) & 0xff) << 12)
+            | (((inst >> 20) & 1) << 11)
+            | (((inst >> 21) & 0x3ff) << 1)) as i32;
+        let imm_j = (imm_j << 11) >> 11;
+        let mut extra = 0u32;
+        let mut next = pc.wrapping_add(4);
+
+        macro_rules! load {
+            ($addr:expr, $size:expr) => {
+                match bus.load($addr, $size) {
+                    Ok(v) => v,
+                    Err(MemErr::Stall) => return StepOutcome::Stalled,
+                    Err(MemErr::Fault) => {
+                        self.enter_trap(5, pc, $addr);
+                        return StepOutcome::Trapped(Trap::LoadFault($addr));
+                    }
+                }
+            };
+        }
+        macro_rules! store {
+            ($addr:expr, $v:expr, $size:expr) => {
+                match bus.store($addr, $v, $size) {
+                    Ok(()) => {}
+                    Err(MemErr::Stall) => return StepOutcome::Stalled,
+                    Err(MemErr::Fault) => {
+                        self.enter_trap(7, pc, $addr);
+                        return StepOutcome::Trapped(Trap::StoreFault($addr));
+                    }
+                }
+            };
+        }
+
+        match op {
+            0x37 => self.wx(rd, imm_u as u64),                        // lui
+            0x17 => self.wx(rd, pc.wrapping_add(imm_u as u64)),       // auipc
+            0x6f => {
+                self.wx(rd, next);
+                next = pc.wrapping_add(imm_j as i64 as u64);
+            }
+            0x67 => {
+                let t = self.x[rs1].wrapping_add(imm_i as i64 as u64) & !1;
+                self.wx(rd, next);
+                next = t;
+            }
+            0x63 => {
+                let (a, b) = (self.x[rs1], self.x[rs2]);
+                let taken = match f3 {
+                    0 => a == b,
+                    1 => a != b,
+                    4 => (a as i64) < (b as i64),
+                    5 => (a as i64) >= (b as i64),
+                    6 => a < b,
+                    7 => a >= b,
+                    _ => {
+                        self.enter_trap(2, pc, inst as u64);
+                        return StepOutcome::Trapped(Trap::IllegalInstr(inst));
+                    }
+                };
+                if taken {
+                    next = pc.wrapping_add(imm_b as i64 as u64);
+                    extra = 1; // CVA6 taken-branch bubble
+                }
+            }
+            0x03 => {
+                let a = self.x[rs1].wrapping_add(imm_i as i64 as u64);
+                let v = match f3 {
+                    0 => load!(a, 1) as i8 as i64 as u64,
+                    1 => load!(a, 2) as i16 as i64 as u64,
+                    2 => load!(a, 4) as i32 as i64 as u64,
+                    3 => load!(a, 8),
+                    4 => load!(a, 1),
+                    5 => load!(a, 2),
+                    6 => load!(a, 4),
+                    _ => {
+                        self.enter_trap(2, pc, inst as u64);
+                        return StepOutcome::Trapped(Trap::IllegalInstr(inst));
+                    }
+                };
+                self.wx(rd, v);
+            }
+            0x23 => {
+                let a = self.x[rs1].wrapping_add(imm_s as i64 as u64);
+                let sz = 1usize << f3;
+                store!(a, self.x[rs2], sz);
+            }
+            0x13 => {
+                let a = self.x[rs1];
+                let v = match f3 {
+                    0 => a.wrapping_add(imm_i as i64 as u64),
+                    1 => a << (imm_i & 0x3f),
+                    2 => ((a as i64) < (imm_i as i64)) as u64,
+                    3 => (a < imm_i as i64 as u64) as u64,
+                    4 => a ^ (imm_i as i64 as u64),
+                    5 => {
+                        if imm_i & 0x400 != 0 {
+                            ((a as i64) >> (imm_i & 0x3f)) as u64
+                        } else {
+                            a >> (imm_i & 0x3f)
+                        }
+                    }
+                    6 => a | (imm_i as i64 as u64),
+                    7 => a & (imm_i as i64 as u64),
+                    _ => unreachable!(),
+                };
+                self.wx(rd, v);
+            }
+            0x1b => {
+                let a = self.x[rs1] as i32;
+                let v = match f3 {
+                    0 => a.wrapping_add(imm_i) as i64 as u64,
+                    1 => (a << (imm_i & 0x1f)) as i64 as u64,
+                    5 => {
+                        if imm_i & 0x400 != 0 {
+                            (a >> (imm_i & 0x1f)) as i64 as u64
+                        } else {
+                            (((a as u32) >> (imm_i & 0x1f)) as i32) as i64 as u64
+                        }
+                    }
+                    _ => {
+                        self.enter_trap(2, pc, inst as u64);
+                        return StepOutcome::Trapped(Trap::IllegalInstr(inst));
+                    }
+                };
+                self.wx(rd, v);
+            }
+            0x33 => {
+                let (a, b) = (self.x[rs1], self.x[rs2]);
+                let v = if f7 == 1 {
+                    // M extension
+                    extra = if f3 >= 4 { 20 } else { 2 }; // div vs mul latency
+                    match f3 {
+                        0 => a.wrapping_mul(b),
+                        1 => (((a as i64 as i128) * (b as i64 as i128)) >> 64) as u64,
+                        2 => (((a as i64 as i128) * (b as u128 as i128)) >> 64) as u64,
+                        3 => (((a as u128) * (b as u128)) >> 64) as u64,
+                        4 => {
+                            if b == 0 { u64::MAX } else { ((a as i64).wrapping_div(b as i64)) as u64 }
+                        }
+                        5 => {
+                            if b == 0 { u64::MAX } else { a / b }
+                        }
+                        6 => {
+                            if b == 0 { a } else { ((a as i64).wrapping_rem(b as i64)) as u64 }
+                        }
+                        7 => {
+                            if b == 0 { a } else { a % b }
+                        }
+                        _ => unreachable!(),
+                    }
+                } else {
+                    match (f3, f7) {
+                        (0, 0) => a.wrapping_add(b),
+                        (0, 0x20) => a.wrapping_sub(b),
+                        (1, 0) => a << (b & 0x3f),
+                        (2, 0) => ((a as i64) < (b as i64)) as u64,
+                        (3, 0) => (a < b) as u64,
+                        (4, 0) => a ^ b,
+                        (5, 0) => a >> (b & 0x3f),
+                        (5, 0x20) => ((a as i64) >> (b & 0x3f)) as u64,
+                        (6, 0) => a | b,
+                        (7, 0) => a & b,
+                        _ => {
+                            self.enter_trap(2, pc, inst as u64);
+                            return StepOutcome::Trapped(Trap::IllegalInstr(inst));
+                        }
+                    }
+                };
+                self.wx(rd, v);
+            }
+            0x3b => {
+                let (a, b) = (self.x[rs1] as i32, self.x[rs2] as i32);
+                let v = if f7 == 1 {
+                    extra = if f3 >= 4 { 20 } else { 2 };
+                    match f3 {
+                        0 => a.wrapping_mul(b) as i64 as u64,
+                        4 => {
+                            if b == 0 { u64::MAX } else { a.wrapping_div(b) as i64 as u64 }
+                        }
+                        5 => {
+                            if b == 0 { u64::MAX } else { (((a as u32) / (b as u32)) as i32) as i64 as u64 }
+                        }
+                        6 => {
+                            if b == 0 { a as i64 as u64 } else { a.wrapping_rem(b) as i64 as u64 }
+                        }
+                        7 => {
+                            if b == 0 { a as i64 as u64 } else { (((a as u32) % (b as u32)) as i32) as i64 as u64 }
+                        }
+                        _ => {
+                            self.enter_trap(2, pc, inst as u64);
+                            return StepOutcome::Trapped(Trap::IllegalInstr(inst));
+                        }
+                    }
+                } else {
+                    match (f3, f7) {
+                        (0, 0) => a.wrapping_add(b) as i64 as u64,
+                        (0, 0x20) => a.wrapping_sub(b) as i64 as u64,
+                        (1, 0) => (a << (b & 0x1f)) as i64 as u64,
+                        (5, 0) => (((a as u32) >> (b & 0x1f)) as i32) as i64 as u64,
+                        (5, 0x20) => (a >> (b & 0x1f)) as i64 as u64,
+                        _ => {
+                            self.enter_trap(2, pc, inst as u64);
+                            return StepOutcome::Trapped(Trap::IllegalInstr(inst));
+                        }
+                    }
+                };
+                self.wx(rd, v);
+            }
+            0x0f => {
+                // fence (f3=0) / fence.i (f3=1): conservative cache sync
+                match bus.fence(f3 == 1) {
+                    Ok(()) => extra = 3,
+                    Err(MemErr::Stall) => return StepOutcome::Stalled,
+                    Err(MemErr::Fault) => {
+                        self.enter_trap(5, pc, 0);
+                        return StepOutcome::Trapped(Trap::LoadFault(pc));
+                    }
+                }
+            }
+            0x07 if f3 == 3 => {
+                // fld
+                let a = self.x[rs1].wrapping_add(imm_i as i64 as u64);
+                let v = load!(a, 8);
+                self.f[rd] = v;
+            }
+            0x27 if f3 == 3 => {
+                // fsd
+                let a = self.x[rs1].wrapping_add(imm_s as i64 as u64);
+                store!(a, self.f[rs2], 8);
+            }
+            0x43 => {
+                // fmadd.d rd = rs1*rs2 + rs3
+                let rs3 = (inst >> 27) as usize;
+                let (a, b, c) = (f64::from_bits(self.f[rs1]), f64::from_bits(self.f[rs2]), f64::from_bits(self.f[rs3]));
+                self.f[rd] = (a.mul_add(b, c)).to_bits();
+                extra = 4;
+            }
+            0x53 => {
+                let (a, b) = (f64::from_bits(self.f[rs1]), f64::from_bits(self.f[rs2]));
+                extra = 3;
+                match f7 {
+                    0x01 => self.f[rd] = (a + b).to_bits(),
+                    0x05 => self.f[rd] = (a - b).to_bits(),
+                    0x09 => self.f[rd] = (a * b).to_bits(),
+                    0x0d => {
+                        self.f[rd] = (a / b).to_bits();
+                        extra = 20;
+                    }
+                    0x11 => {
+                        // fsgnj.d family (fmv.d when rs1==rs2)
+                        let v = match f3 {
+                            0 => (self.f[rs1] & !(1 << 63)) | (self.f[rs2] & (1 << 63)),
+                            1 => (self.f[rs1] & !(1 << 63)) | ((!self.f[rs2]) & (1 << 63)),
+                            2 => self.f[rs1] ^ (self.f[rs2] & (1 << 63)),
+                            _ => {
+                                self.enter_trap(2, pc, inst as u64);
+                                return StepOutcome::Trapped(Trap::IllegalInstr(inst));
+                            }
+                        };
+                        self.f[rd] = v;
+                    }
+                    0x51 => {
+                        let v = match f3 {
+                            0 => (a <= b) as u64,
+                            1 => (a < b) as u64,
+                            2 => (a == b) as u64,
+                            _ => 0,
+                        };
+                        self.wx(rd, v);
+                    }
+                    0x69 => {
+                        // fcvt.d.w/l
+                        let v = match rs2 {
+                            0 => self.x[rs1] as i32 as f64,
+                            1 => self.x[rs1] as u32 as f64,
+                            2 => self.x[rs1] as i64 as f64,
+                            3 => self.x[rs1] as f64,
+                            _ => 0.0,
+                        };
+                        self.f[rd] = v.to_bits();
+                    }
+                    0x61 => {
+                        // fcvt.w/l.d
+                        let v = match rs2 {
+                            0 => a as i32 as i64 as u64,
+                            2 => a as i64 as u64,
+                            _ => a as u64,
+                        };
+                        self.wx(rd, v);
+                    }
+                    0x79 => self.f[rd] = self.x[rs1], // fmv.d.x
+                    0x71 => self.wx(rd, self.f[rs1]), // fmv.x.d
+                    _ => {
+                        self.enter_trap(2, pc, inst as u64);
+                        return StepOutcome::Trapped(Trap::IllegalInstr(inst));
+                    }
+                }
+            }
+            0x73 => {
+                match (f3, inst) {
+                    (0, 0x0000_0073) => {
+                        self.enter_trap(11, pc, 0);
+                        return StepOutcome::Trapped(Trap::Ecall);
+                    }
+                    (0, 0x0010_0073) => {
+                        self.enter_trap(3, pc, 0);
+                        return StepOutcome::Trapped(Trap::Ebreak);
+                    }
+                    (0, 0x1050_0073) => {
+                        self.pc = next;
+                        return StepOutcome::Wfi;
+                    }
+                    (0, 0x3020_0073) => {
+                        // mret
+                        let mpie = (self.csr.mstatus >> 7) & 1;
+                        self.csr.mstatus =
+                            (self.csr.mstatus & !MSTATUS_MIE) | (mpie << 3) | MSTATUS_MPIE;
+                        next = self.csr.mepc;
+                    }
+                    _ => {
+                        // Zicsr
+                        let csr = (inst >> 20) as u16;
+                        let old = match self.csr_read(csr) {
+                            Ok(v) => v,
+                            Err(()) => {
+                                self.enter_trap(2, pc, inst as u64);
+                                return StepOutcome::Trapped(Trap::IllegalInstr(inst));
+                            }
+                        };
+                        let src = if f3 >= 5 { rs1 as u64 } else { self.x[rs1] };
+                        let newv = match f3 & 3 {
+                            1 => Some(src),
+                            2 => (src != 0).then(|| old | src),
+                            3 => (src != 0).then(|| old & !src),
+                            _ => None,
+                        };
+                        if let Some(v) = newv {
+                            if self.csr_write(csr, v).is_err() {
+                                self.enter_trap(2, pc, inst as u64);
+                                return StepOutcome::Trapped(Trap::IllegalInstr(inst));
+                            }
+                        }
+                        self.wx(rd, old);
+                    }
+                }
+            }
+            _ => {
+                self.enter_trap(2, pc, inst as u64);
+                return StepOutcome::Trapped(Trap::IllegalInstr(inst));
+            }
+        }
+        self.pc = next;
+        StepOutcome::Retired { extra_cycles: extra, fp: matches!(op, 0x07 | 0x27 | 0x43 | 0x53) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::{reg::*, Asm};
+
+    /// Flat test memory with no stalls.
+    struct Flat {
+        mem: Vec<u8>,
+    }
+    impl Bus for Flat {
+        fn load(&mut self, addr: u64, size: usize) -> Result<u64, MemErr> {
+            let a = addr as usize;
+            if a + size > self.mem.len() {
+                return Err(MemErr::Fault);
+            }
+            let mut v = 0u64;
+            for i in 0..size {
+                v |= (self.mem[a + i] as u64) << (8 * i);
+            }
+            Ok(v)
+        }
+        fn store(&mut self, addr: u64, val: u64, size: usize) -> Result<(), MemErr> {
+            let a = addr as usize;
+            if a + size > self.mem.len() {
+                return Err(MemErr::Fault);
+            }
+            for i in 0..size {
+                self.mem[a + i] = (val >> (8 * i)) as u8;
+            }
+            Ok(())
+        }
+        fn fetch(&mut self, addr: u64) -> Result<u32, MemErr> {
+            self.load(addr, 4).map(|v| v as u32)
+        }
+    }
+
+    fn run(asm: Asm, steps: usize) -> (CpuCore, Flat) {
+        let img = asm.finish();
+        let mut mem = Flat { mem: vec![0; 0x10000] };
+        mem.mem[..img.len()].copy_from_slice(&img);
+        let mut cpu = CpuCore::new(0, 0);
+        for _ in 0..steps {
+            match cpu.step(&mut mem) {
+                StepOutcome::Wfi => break,
+                StepOutcome::Trapped(t) => panic!("unexpected trap {t:?} at pc={:#x}", cpu.pc),
+                _ => {}
+            }
+        }
+        (cpu, mem)
+    }
+
+    #[test]
+    fn arithmetic_and_branches() {
+        let mut a = Asm::new(0);
+        // sum 1..=10 into a0
+        a.li(A0, 0);
+        a.li(T0, 1);
+        a.li(T1, 11);
+        a.label("loop");
+        a.add(A0, A0, T0);
+        a.addi(T0, T0, 1);
+        a.bne(T0, T1, "loop");
+        a.wfi();
+        let (cpu, _) = run(a, 200);
+        assert_eq!(cpu.x[A0 as usize], 55);
+    }
+
+    #[test]
+    fn loads_stores_all_widths() {
+        let mut a = Asm::new(0);
+        a.li(T0, 0x1000);
+        a.li(T1, -2i64); // 0xffff_fffe pattern
+        a.sd(T1, T0, 0);
+        a.lb(A0, T0, 0);
+        a.lbu(A1, T0, 0);
+        a.lw(A2, T0, 0);
+        a.lwu(A3, T0, 0);
+        a.ld(A4, T0, 0);
+        a.wfi();
+        let (cpu, _) = run(a, 100);
+        assert_eq!(cpu.x[A0 as usize], (-2i64) as u64);
+        assert_eq!(cpu.x[A1 as usize], 0xfe);
+        assert_eq!(cpu.x[A2 as usize], (-2i64) as u64);
+        assert_eq!(cpu.x[A3 as usize], 0xffff_fffe);
+        assert_eq!(cpu.x[A4 as usize], (-2i64) as u64);
+    }
+
+    #[test]
+    fn mul_div_rem() {
+        let mut a = Asm::new(0);
+        a.li(T0, 7);
+        a.li(T1, -3i64);
+        a.mul(A0, T0, T1);
+        a.div(A1, T0, T1);
+        a.rem(A2, T0, T1);
+        a.li(T2, 0);
+        a.divu(A3, T0, T2); // div by zero → all ones
+        a.wfi();
+        let (cpu, _) = run(a, 100);
+        assert_eq!(cpu.x[A0 as usize] as i64, -21);
+        assert_eq!(cpu.x[A1 as usize] as i64, -2);
+        assert_eq!(cpu.x[A2 as usize] as i64, 1);
+        assert_eq!(cpu.x[A3 as usize], u64::MAX);
+    }
+
+    #[test]
+    fn double_precision_fma() {
+        let mut a = Asm::new(0);
+        // f0 = 2.5, f1 = 4.0, f2 = 1.0 ; f3 = f0*f1 + f2 = 11.0
+        a.li(T0, (2.5f64).to_bits() as i64);
+        a.fmv_d_x(FT0, T0);
+        a.li(T1, (4.0f64).to_bits() as i64);
+        a.fmv_d_x(FT1, T1);
+        a.li(T2, (1.0f64).to_bits() as i64);
+        a.fmv_d_x(FT2, T2);
+        a.fmadd_d(3, FT0, FT1, FT2);
+        a.fmv_x_d(A0, 3);
+        a.wfi();
+        let (cpu, _) = run(a, 100);
+        assert_eq!(f64::from_bits(cpu.x[A0 as usize]), 11.0);
+    }
+
+    #[test]
+    fn csr_and_trap_roundtrip() {
+        let mut a = Asm::new(0);
+        a.la(T0, "handler");
+        a.csrrw(ZERO, 0x305, T0); // mtvec
+        a.ecall();
+        a.label("after");
+        a.li(A1, 99);
+        a.wfi();
+        a.label("handler");
+        a.csrrs(A0, 0x342, ZERO); // mcause
+        a.csrrs(T1, 0x341, ZERO); // mepc
+        a.addi(T1, T1, 4);
+        a.csrrw(ZERO, 0x341, T1);
+        a.mret();
+        let img = a.finish();
+        let mut mem = Flat { mem: vec![0; 0x10000] };
+        mem.mem[..img.len()].copy_from_slice(&img);
+        let mut cpu = CpuCore::new(0, 0);
+        for _ in 0..100 {
+            match cpu.step(&mut mem) {
+                StepOutcome::Wfi => break,
+                _ => {}
+            }
+        }
+        assert_eq!(cpu.x[A0 as usize], 11, "mcause = ecall from M");
+        assert_eq!(cpu.x[A1 as usize], 99, "resumed after mret");
+    }
+
+    #[test]
+    fn interrupt_redirects_when_enabled() {
+        let mut cpu = CpuCore::new(0x100, 0);
+        cpu.csr.mtvec = 0x800;
+        cpu.csr.mie = 1 << 7;
+        cpu.csr.mstatus = 1 << 3;
+        cpu.csr.mip = 1 << 7;
+        let cause = cpu.maybe_interrupt().expect("interrupt taken");
+        assert_eq!(cause, 7);
+        assert_eq!(cpu.pc, 0x800);
+        assert_eq!(cpu.csr.mepc, 0x100);
+        assert_eq!(cpu.csr.mcause, (1 << 63) | 7);
+        // disabled now
+        assert!(cpu.maybe_interrupt().is_none());
+    }
+
+    /// Stalls must be side-effect free: a bus that stalls the first N
+    /// attempts yields the same result as one that never stalls.
+    struct Flaky {
+        inner: Flat,
+        stalls: u32,
+    }
+    impl Bus for Flaky {
+        fn load(&mut self, addr: u64, size: usize) -> Result<u64, MemErr> {
+            if self.stalls > 0 {
+                self.stalls -= 1;
+                return Err(MemErr::Stall);
+            }
+            self.inner.load(addr, size)
+        }
+        fn store(&mut self, addr: u64, val: u64, size: usize) -> Result<(), MemErr> {
+            if self.stalls > 0 {
+                self.stalls -= 1;
+                return Err(MemErr::Stall);
+            }
+            self.inner.store(addr, val, size)
+        }
+        fn fetch(&mut self, addr: u64) -> Result<u32, MemErr> {
+            self.inner.fetch(addr)
+        }
+    }
+
+    #[test]
+    fn stalled_instructions_retry_cleanly() {
+        let mut a = Asm::new(0);
+        a.li(T0, 0x2000);
+        a.li(T1, 0x1234);
+        a.sd(T1, T0, 0);
+        a.ld(A0, T0, 0);
+        a.wfi();
+        let img = a.finish();
+        let mut mem = Flaky { inner: Flat { mem: vec![0; 0x10000] }, stalls: 7 };
+        mem.inner.mem[..img.len()].copy_from_slice(&img);
+        let mut cpu = CpuCore::new(0, 0);
+        let mut retired = 0;
+        for _ in 0..200 {
+            match cpu.step(&mut mem) {
+                StepOutcome::Wfi => break,
+                StepOutcome::Retired { .. } => retired += 1,
+                StepOutcome::Stalled => {}
+                StepOutcome::Trapped(t) => panic!("{t:?}"),
+            }
+        }
+        assert_eq!(cpu.x[A0 as usize], 0x1234);
+        assert!(retired >= 5);
+    }
+}

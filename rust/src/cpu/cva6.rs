@@ -1,0 +1,527 @@
+//! CVA6 timing wrapper: L1 caches + AXI manager port + CPI accounting.
+//!
+//! Neo's configuration (paper §III-A): 32 KiB 8-way L1 I$ and D$, in-order
+//! single-issue core. The wrapper advances one cycle per `tick`:
+//! instructions retire at CPI ≈ 1 plus functional-unit latencies; cache
+//! misses block (CVA6-style) while the refill/writeback runs as a real
+//! beat-level AXI burst on the manager port; MMIO runs as single-beat
+//! uncached AXI. WFI parks the core, which is Fig. 11's power baseline
+//! ("idling without fetching or decoding instructions").
+
+use super::core::{Bus, CpuCore, MemErr, StepOutcome};
+use crate::axi::port::AxiBus;
+use crate::axi::types::{full_strb, Ar, Aw, Burst, W};
+use crate::cache::l1::{L1Cache, Probe, LINE};
+use crate::sim::Stats;
+use std::collections::VecDeque;
+
+const ID_IFILL: u32 = 0x20;
+const ID_DFILL: u32 = 0x21;
+const ID_WB: u32 = 0x22;
+const ID_MMIO_R: u32 = 0x23;
+const ID_MMIO_W: u32 = 0x24;
+/// Marker address for a completed fence in the result buffer.
+const FENCE_DONE: u64 = u64::MAX;
+
+#[derive(Debug, Clone)]
+pub struct Cva6Cfg {
+    pub boot_pc: u64,
+    pub icache_bytes: usize,
+    pub dcache_bytes: usize,
+    pub ways: usize,
+    /// Address ranges the L1s may cache (DRAM, SPM, boot ROM).
+    pub cacheable: Vec<(u64, u64)>,
+}
+
+impl Cva6Cfg {
+    pub fn neo(boot_pc: u64) -> Self {
+        Self {
+            boot_pc,
+            icache_bytes: 32 * 1024,
+            dcache_bytes: 32 * 1024,
+            ways: 8,
+            cacheable: vec![
+                (0x0100_0000, 0x0004_0000), // boot ROM
+                (0x7000_0000, 0x0002_0000), // SPM window
+                (0x8000_0000, 0x0200_0000), // DRAM
+            ],
+        }
+    }
+}
+
+/// What the adapter asked the wrapper to do.
+enum MemReq {
+    Refill { line: u64, icache: bool, victim: Option<(u64, Vec<u8>)> },
+    MmioLoad { addr: u64, size: usize },
+    MmioStore { addr: u64, val: u64, size: usize },
+    Flush,
+}
+
+enum CState {
+    Run,
+    /// Counting down functional-unit latency.
+    Busy(u32),
+    /// Waiting for refill beats (+ optional writeback B).
+    WaitRefill { line: u64, icache: bool, got: Vec<u8>, wb_left: u32, b_wait: bool },
+    WaitMmioR,
+    WaitMmioB { addr: u64 },
+    /// Writing back dirty lines for a FENCE, then invalidating.
+    Flush { lines: VecDeque<(u64, Vec<u8>)>, beats_left: u32, b_wait: u32 },
+    Wfi,
+}
+
+pub struct Cva6 {
+    pub core: CpuCore,
+    pub cfg: Cva6Cfg,
+    icache: L1Cache,
+    dcache: L1Cache,
+    /// Outgoing writeback beats, streamed one per cycle with back-pressure.
+    wb_q: VecDeque<W>,
+    state: CState,
+    /// Completed MMIO/fence result for instruction retry.
+    result: Option<(u64, u64)>,
+    /// True once the core has executed an instruction that halted the
+    /// simulation harness (ebreak) — used by run loops.
+    pub halted: bool,
+}
+
+impl Cva6 {
+    pub fn new(cfg: Cva6Cfg) -> Self {
+        Self {
+            core: CpuCore::new(cfg.boot_pc, 0),
+            icache: L1Cache::new(cfg.icache_bytes, cfg.ways, "cpu.icache_hit", "cpu.icache_miss"),
+            dcache: L1Cache::new(cfg.dcache_bytes, cfg.ways, "cpu.dcache_hit", "cpu.dcache_miss"),
+            wb_q: VecDeque::new(),
+            state: CState::Run,
+            result: None,
+            halted: false,
+            cfg,
+        }
+    }
+
+    /// Interrupt lines sampled every cycle (CLINT + PLIC).
+    pub fn set_irqs(&mut self, msip: bool, mtip: bool, meip: bool) {
+        let mut mip = self.core.csr.mip & !((1 << 3) | (1 << 7) | (1 << 11));
+        if msip {
+            mip |= 1 << 3;
+        }
+        if mtip {
+            mip |= 1 << 7;
+        }
+        if meip {
+            mip |= 1 << 11;
+        }
+        self.core.csr.mip = mip;
+    }
+
+    pub fn is_wfi(&self) -> bool {
+        matches!(self.state, CState::Wfi)
+    }
+
+    /// One clock cycle.
+    pub fn tick(&mut self, bus: &AxiBus, stats: &mut Stats) {
+        self.core.csr.mcycle = self.core.csr.mcycle.wrapping_add(1);
+        // drain pending writeback beats (one per cycle, with back-pressure)
+        if !self.wb_q.is_empty() && bus.w.borrow().can_push() {
+            let w = self.wb_q.pop_front().unwrap();
+            bus.w.borrow_mut().push(w);
+        }
+        match std::mem::replace(&mut self.state, CState::Run) {
+            CState::Wfi => {
+                stats.bump("cpu.wfi_cycles");
+                if self.core.csr.mip & self.core.csr.mie != 0 {
+                    self.state = CState::Run; // wake; interrupt taken next
+                } else {
+                    self.state = CState::Wfi;
+                }
+            }
+            CState::Busy(n) => {
+                stats.bump("cpu.busy_cycles");
+                self.state = if n <= 1 { CState::Run } else { CState::Busy(n - 1) };
+            }
+            CState::WaitRefill { line, icache, mut got, wb_left, mut b_wait } => {
+                stats.bump("cpu.miss_cycles");
+                if b_wait {
+                    if let Some(_b) = bus.b.borrow_mut().pop() {
+                        b_wait = false;
+                    }
+                }
+                while let Some(r) = {
+                    let ok = matches!(bus.r.borrow().peek(), Some(r) if r.id == if icache { ID_IFILL } else { ID_DFILL });
+                    if ok { bus.r.borrow_mut().pop() } else { None }
+                } {
+                    got.extend_from_slice(&r.data);
+                    if r.last {
+                        break;
+                    }
+                }
+                if got.len() >= LINE && self.wb_q.is_empty() && !b_wait {
+                    got.truncate(LINE);
+                    if icache {
+                        self.icache.refill(line, &got);
+                    } else {
+                        self.dcache.refill(line, &got);
+                    }
+                    self.state = CState::Run;
+                } else {
+                    self.state = CState::WaitRefill { line, icache, got, wb_left, b_wait };
+                }
+            }
+            CState::WaitMmioR => {
+                stats.bump("cpu.mmio_cycles");
+                let got = {
+                    let ok = matches!(bus.r.borrow().peek(), Some(r) if r.id == ID_MMIO_R);
+                    if ok { bus.r.borrow_mut().pop() } else { None }
+                };
+                if let Some(r) = got {
+                    let v = u64::from_le_bytes(r.data[..8].try_into().unwrap());
+                    self.result = Some((u64::MAX - 1, v)); // addr check done by adapter
+                    self.state = CState::Run;
+                } else {
+                    self.state = CState::WaitMmioR;
+                }
+            }
+            CState::WaitMmioB { addr } => {
+                stats.bump("cpu.mmio_cycles");
+                if bus.b.borrow_mut().pop().is_some() {
+                    self.result = Some((addr, 0));
+                    self.state = CState::Run;
+                } else {
+                    self.state = CState::WaitMmioB { addr };
+                }
+            }
+            CState::Flush { mut lines, mut beats_left, mut b_wait } => {
+                stats.bump("cpu.flush_cycles");
+                while bus.b.borrow_mut().pop().is_some() {
+                    b_wait -= 1;
+                }
+                if self.wb_q.is_empty() {
+                    if let Some((addr, data)) = lines.pop_front() {
+                        if bus.aw.borrow().can_push() {
+                            bus.aw.borrow_mut().push(Aw { id: ID_WB, addr, len: (LINE / 8 - 1) as u8, size: 3, burst: Burst::Incr, qos: 0 });
+                            for i in 0..LINE / 8 {
+                                self.wb_q.push_back(W { data: data[i * 8..(i + 1) * 8].to_vec(), strb: full_strb(8), last: i == LINE / 8 - 1 });
+                            }
+                            b_wait += 1;
+                            stats.bump("cpu.flush_wb");
+                        } else {
+                            lines.push_front((addr, data));
+                        }
+                    }
+                }
+                let _ = &mut beats_left;
+                if lines.is_empty() && b_wait == 0 && self.wb_q.is_empty() {
+                    self.dcache.invalidate_all();
+                    self.result = Some((FENCE_DONE, 0));
+                    self.state = CState::Run;
+                } else {
+                    self.state = CState::Flush { lines, beats_left: 0, b_wait };
+                }
+            }
+            CState::Run => {
+                // take interrupts at instruction boundary
+                if self.core.maybe_interrupt().is_some() {
+                    stats.bump("cpu.irq_taken");
+                }
+                let mut req: Option<MemReq> = None;
+                let outcome = {
+                    let mut adapter = Adapter {
+                        icache: &mut self.icache,
+                        dcache: &mut self.dcache,
+                        cacheable: &self.cfg.cacheable,
+                        result: &mut self.result,
+                        req: &mut req,
+                        stats,
+                    };
+                    self.core.step(&mut adapter)
+                };
+                match outcome {
+                    StepOutcome::Retired { extra_cycles, fp } => {
+                        stats.bump("cpu.instr");
+                        stats.bump("cpu.active_cycles");
+                        if fp {
+                            stats.bump("cpu.fp_instr");
+                        }
+                        if extra_cycles > 0 {
+                            self.state = CState::Busy(extra_cycles);
+                        }
+                    }
+                    StepOutcome::Wfi => {
+                        stats.bump("cpu.instr");
+                        self.state = CState::Wfi;
+                    }
+                    StepOutcome::Trapped(t) => {
+                        stats.bump("cpu.traps");
+                        if matches!(t, super::core::Trap::Ebreak) {
+                            self.halted = true;
+                        }
+                    }
+                    StepOutcome::Stalled => {
+                        stats.bump("cpu.active_cycles");
+                        match req {
+                            Some(MemReq::Refill { line, icache, victim }) => {
+                                let id = if icache { ID_IFILL } else { ID_DFILL };
+                                let wb_left = 0;
+                                let mut b_wait = false;
+                                if let Some((vaddr, vdata)) = victim {
+                                    bus.aw.borrow_mut().push(Aw { id: ID_WB, addr: vaddr, len: (LINE / 8 - 1) as u8, size: 3, burst: Burst::Incr, qos: 0 });
+                                    for i in 0..LINE / 8 {
+                                        self.wb_q.push_back(W { data: vdata[i * 8..(i + 1) * 8].to_vec(), strb: full_strb(8), last: i == LINE / 8 - 1 });
+                                    }
+                                    b_wait = true;
+                                    stats.bump("cpu.writebacks");
+                                }
+                                bus.ar.borrow_mut().push(Ar { id, addr: line, len: (LINE / 8 - 1) as u8, size: 3, burst: Burst::Incr, qos: 0 });
+                                self.state = CState::WaitRefill { line, icache, got: Vec::with_capacity(LINE), wb_left, b_wait };
+                            }
+                            Some(MemReq::MmioLoad { addr, size }) => {
+                                let _ = size;
+                                bus.ar.borrow_mut().push(Ar { id: ID_MMIO_R, addr, len: 0, size: 3, burst: Burst::Incr, qos: 0 });
+                                self.result = None;
+                                self.state = CState::WaitMmioR;
+                            }
+                            Some(MemReq::MmioStore { addr, val, size }) => {
+                                bus.aw.borrow_mut().push(Aw { id: ID_MMIO_W, addr, len: 0, size: size.trailing_zeros() as u8, burst: Burst::Incr, qos: 0 });
+                                let lane0 = (addr as usize) & 7;
+                                let mut data = vec![0u8; 8];
+                                let mut strb = 0u64;
+                                for i in 0..size {
+                                    data[lane0 + i] = (val >> (8 * i)) as u8;
+                                    strb |= 1 << (lane0 + i);
+                                }
+                                bus.w.borrow_mut().push(W { data, strb, last: true });
+                                self.state = CState::WaitMmioB { addr };
+                            }
+                            Some(MemReq::Flush) => {
+                                let lines: VecDeque<_> = self.dcache.dirty_lines().into();
+                                stats.add("cpu.fence_lines", lines.len() as u64);
+                                self.state = CState::Flush { lines, beats_left: 0, b_wait: 0 };
+                            }
+                            None => {
+                                // spurious stall (shouldn't happen)
+                                stats.bump("cpu.spurious_stall");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The per-step bus adapter: classifies accesses, performs cache hits
+/// inline, requests misses/MMIO from the wrapper.
+struct Adapter<'a> {
+    icache: &'a mut L1Cache,
+    dcache: &'a mut L1Cache,
+    cacheable: &'a [(u64, u64)],
+    result: &'a mut Option<(u64, u64)>,
+    req: &'a mut Option<MemReq>,
+    stats: &'a mut Stats,
+}
+
+impl Adapter<'_> {
+    fn is_cacheable(&self, addr: u64) -> bool {
+        self.cacheable.iter().any(|&(b, s)| addr >= b && addr < b + s)
+    }
+}
+
+impl Bus for Adapter<'_> {
+    fn fetch(&mut self, addr: u64) -> Result<u32, MemErr> {
+        if !self.is_cacheable(addr) {
+            return Err(MemErr::Fault);
+        }
+        match self.icache.probe(addr, self.stats) {
+            Probe::Hit => {
+                let mut b = [0u8; 4];
+                self.icache.read(addr, &mut b);
+                Ok(u32::from_le_bytes(b))
+            }
+            Probe::Miss { .. } => {
+                *self.req = Some(MemReq::Refill { line: addr & !(LINE as u64 - 1), icache: true, victim: None });
+                Err(MemErr::Stall)
+            }
+        }
+    }
+
+    fn load(&mut self, addr: u64, size: usize) -> Result<u64, MemErr> {
+        if self.is_cacheable(addr) {
+            match self.dcache.probe(addr, self.stats) {
+                Probe::Hit => {
+                    let mut b = [0u8; 8];
+                    self.dcache.read(addr, &mut b[..size]);
+                    Ok(u64::from_le_bytes(b))
+                }
+                Probe::Miss { victim_dirty } => {
+                    let victim = if victim_dirty { self.dcache.victim(addr) } else { None };
+                    *self.req = Some(MemReq::Refill { line: addr & !(LINE as u64 - 1), icache: false, victim });
+                    Err(MemErr::Stall)
+                }
+            }
+        } else {
+            // MMIO: one-shot result buffer filled by the wrapper
+            if let Some((_, v)) = self.result.take() {
+                let lane0 = (addr as usize) & 7;
+                return Ok((v >> (8 * lane0)) & mask(size));
+            }
+            *self.req = Some(MemReq::MmioLoad { addr, size });
+            Err(MemErr::Stall)
+        }
+    }
+
+    fn store(&mut self, addr: u64, val: u64, size: usize) -> Result<(), MemErr> {
+        if self.is_cacheable(addr) {
+            match self.dcache.probe(addr, self.stats) {
+                Probe::Hit => {
+                    let bytes = val.to_le_bytes();
+                    self.dcache.write(addr, &bytes[..size]);
+                    Ok(())
+                }
+                Probe::Miss { victim_dirty } => {
+                    let victim = if victim_dirty { self.dcache.victim(addr) } else { None };
+                    *self.req = Some(MemReq::Refill { line: addr & !(LINE as u64 - 1), icache: false, victim });
+                    Err(MemErr::Stall)
+                }
+            }
+        } else {
+            if let Some((a, _)) = *self.result {
+                if a == addr {
+                    self.result.take();
+                    return Ok(());
+                }
+            }
+            *self.req = Some(MemReq::MmioStore { addr, val, size });
+            Err(MemErr::Stall)
+        }
+    }
+
+    fn fence(&mut self, instr: bool) -> Result<(), MemErr> {
+        if instr {
+            self.icache.invalidate_all();
+            return Ok(());
+        }
+        if let Some((a, _)) = *self.result {
+            if a == FENCE_DONE {
+                self.result.take();
+                return Ok(());
+            }
+        }
+        if self.dcache.dirty_lines().is_empty() {
+            self.dcache.invalidate_all();
+            return Ok(());
+        }
+        *self.req = Some(MemReq::Flush);
+        Err(MemErr::Stall)
+    }
+}
+
+fn mask(size: usize) -> u64 {
+    if size >= 8 {
+        u64::MAX
+    } else {
+        (1u64 << (8 * size)) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::{reg::*, Asm};
+    use crate::axi::memsub::MemSub;
+    use crate::axi::port::axi_bus;
+
+    /// Build a tiny system: CVA6 + one memory on a shared bus (no xbar).
+    fn mini_system(prog: Asm) -> (Cva6, AxiBus, MemSub) {
+        let img = prog.finish();
+        let bus = axi_bus(8);
+        let mut mem = MemSub::new(0x8000_0000, 0x10000, 8, 1);
+        mem.preload(0, &img);
+        let mut cfg = Cva6Cfg::neo(0x8000_0000);
+        cfg.cacheable = vec![(0x8000_0000, 0x10000)];
+        (Cva6::new(cfg), bus, mem)
+    }
+
+    #[test]
+    fn runs_program_through_caches_and_axi() {
+        let mut a = Asm::new(0x8000_0000);
+        a.li(T0, 0x8000_2000);
+        a.li(T1, 0xbeef);
+        a.sd(T1, T0, 0);
+        a.ld(A0, T0, 0);
+        a.wfi();
+        let (mut cpu, bus, mut mem) = mini_system(a);
+        let mut stats = Stats::new();
+        for _ in 0..3000 {
+            cpu.tick(&bus, &mut stats);
+            mem.tick(&bus, &mut stats);
+            if cpu.is_wfi() {
+                break;
+            }
+        }
+        assert!(cpu.is_wfi(), "program should reach WFI");
+        assert_eq!(cpu.core.x[A0 as usize], 0xbeef);
+        assert!(stats.get("cpu.icache_miss") >= 1);
+        assert!(stats.get("cpu.dcache_miss") >= 1);
+        assert!(stats.get("cpu.dcache_hit") >= 1, "second access hits");
+    }
+
+    #[test]
+    fn mmio_load_store_roundtrip() {
+        // place an "MMIO" memory outside the cacheable range
+        let mut a = Asm::new(0x8000_0000);
+        a.li(T0, 0x9000_0000u32 as i64 & 0xffff_ffff);
+        a.li(T1, 0x55);
+        a.sw(T1, T0, 0);
+        a.lw(A0, T0, 0);
+        a.wfi();
+        let (mut cpu, bus, mut mem) = mini_system(a);
+        let mut mmio = MemSub::new(0x9000_0000, 0x1000, 8, 0);
+        let mmio_bus = bus.clone(); // same bus: both memories filter by range
+        let mut stats = Stats::new();
+        for _ in 0..3000 {
+            cpu.tick(&bus, &mut stats);
+            mem.tick(&bus, &mut stats);
+            mmio.tick(&mmio_bus, &mut stats);
+            if cpu.is_wfi() {
+                break;
+            }
+        }
+        assert!(cpu.is_wfi());
+        assert_eq!(cpu.core.x[A0 as usize], 0x55);
+    }
+
+    #[test]
+    fn wfi_wakes_on_timer_interrupt() {
+        let mut a = Asm::new(0x8000_0000);
+        a.la(T0, "handler");
+        a.csrrw(ZERO, 0x305, T0);
+        a.li(T1, 1 << 7); // MTIE
+        a.csrrw(ZERO, 0x304, T1);
+        a.li(T1, 1 << 3); // MIE
+        a.csrrs(ZERO, 0x300, T1);
+        a.wfi();
+        a.label("spin");
+        a.j("spin");
+        a.label("handler");
+        a.li(A0, 0x77);
+        a.ebreak();
+        let (mut cpu, bus, mut mem) = mini_system(a);
+        let mut stats = Stats::new();
+        let mut fired = false;
+        for c in 0..5000 {
+            if c == 2000 {
+                cpu.set_irqs(false, true, false);
+                fired = true;
+            }
+            cpu.tick(&bus, &mut stats);
+            mem.tick(&bus, &mut stats);
+            if cpu.halted {
+                break;
+            }
+        }
+        assert!(fired);
+        assert!(cpu.halted, "handler must run after wake");
+        assert_eq!(cpu.core.x[A0 as usize], 0x77);
+        assert!(stats.get("cpu.wfi_cycles") > 500);
+    }
+}

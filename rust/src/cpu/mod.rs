@@ -1,0 +1,21 @@
+//! The application-class host processor model (CVA6 [17], paper §II-A).
+//!
+//! Cheshire is built around a single RV64GC CVA6; Neo configures it with
+//! 32 KiB 8-way L1 data and instruction caches (§III-A). The model splits
+//! into:
+//!
+//! * [`core`] — a functional RV64IMFD+Zicsr instruction-set simulator with
+//!   M-mode CSRs, traps and interrupts. Memory accesses go through a
+//!   [`core::Bus`] trait and may *stall*, in which case the instruction
+//!   retries side-effect-free (the core snapshots architectural state).
+//! * [`cva6`] — the timing wrapper: L1 I/D caches, miss handling as real
+//!   beat-level AXI refill/writeback bursts on the core's manager port,
+//!   MMIO as single-beat AXI, WFI sleep, CPI accounting for the power
+//!   model (fetch/decode activity is what separates NOP from WFI power in
+//!   Fig. 11).
+
+pub mod core;
+pub mod cva6;
+
+pub use core::{Bus, CpuCore, StepOutcome, Trap};
+pub use cva6::{Cva6, Cva6Cfg};

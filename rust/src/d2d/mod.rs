@@ -1,0 +1,135 @@
+//! Digital die-to-die (D2D) link (paper §I, §II-A).
+//!
+//! "we provide a configurable AXI4 interconnect and a digital die-to-die
+//! (D2D) interface" — the path for chiplet DSA integration and one of the
+//! passive-preload boot sources. The model forwards AXI channel beats
+//! between an on-die port and an off-die port through serializing lanes:
+//! each beat costs `ceil(payload_bits / (lanes × 2))` cycles (DDR lanes)
+//! plus a fixed link latency, and the link counts pad activity for the IO
+//! power model.
+
+use crate::axi::port::AxiBus;
+use crate::sim::{Cycle, Stats};
+use std::collections::VecDeque;
+
+/// One direction of the link: beats in flight with their delivery time.
+struct Pipe<T> {
+    q: VecDeque<(Cycle, T)>,
+    /// The link is busy serializing until this cycle.
+    busy_until: Cycle,
+}
+
+impl<T> Pipe<T> {
+    fn new() -> Self {
+        Self { q: VecDeque::new(), busy_until: 0 }
+    }
+}
+
+/// The D2D link bridging `a` (on-die, subordinate side faces the xbar)
+/// and `b` (off-die, manager side drives the remote system).
+pub struct D2dLink {
+    pub lanes: u32,
+    pub latency: Cycle,
+    aw: Pipe<crate::axi::types::Aw>,
+    w: Pipe<crate::axi::types::W>,
+    ar: Pipe<crate::axi::types::Ar>,
+    b: Pipe<crate::axi::types::B>,
+    r: Pipe<crate::axi::types::R>,
+}
+
+impl D2dLink {
+    pub fn new(lanes: u32, latency: Cycle) -> Self {
+        Self {
+            lanes,
+            latency,
+            aw: Pipe::new(),
+            w: Pipe::new(),
+            ar: Pipe::new(),
+            b: Pipe::new(),
+            r: Pipe::new(),
+        }
+    }
+
+    fn ser_cycles(&self, bits: u64) -> u64 {
+        bits.div_ceil(self.lanes as u64 * 2) // DDR lanes
+    }
+
+    /// Forward one cycle of traffic: `a` → `b` for AW/W/AR, `b` → `a` for
+    /// B/R.
+    pub fn tick(&mut self, a: &AxiBus, b: &AxiBus, now: Cycle, stats: &mut Stats) {
+        let lat = self.latency;
+        let lanes = self.lanes as u64;
+        macro_rules! fwd {
+            ($pipe:expr, $from:expr, $to:expr, $bits:expr) => {
+                if now >= $pipe.busy_until {
+                    if let Some(x) = $from.borrow_mut().pop() {
+                        let ser = ($bits as u64).div_ceil(lanes * 2);
+                        $pipe.busy_until = now + ser;
+                        $pipe.q.push_back((now + ser + lat, x));
+                        stats.add("d2d.pad_cycles", ser * lanes);
+                    }
+                }
+                while let Some((t, _)) = $pipe.q.front() {
+                    if *t <= now && $to.borrow().can_push() {
+                        let (_, x) = $pipe.q.pop_front().unwrap();
+                        $to.borrow_mut().push(x);
+                    } else {
+                        break;
+                    }
+                }
+            };
+        }
+        fwd!(self.aw, a.aw, b.aw, 96);
+        fwd!(self.w, a.w, b.w, 64 + 8 + 1);
+        fwd!(self.ar, a.ar, b.ar, 96);
+        fwd!(self.b, b.b, a.b, 8);
+        fwd!(self.r, b.r, a.r, 64 + 8);
+        let _ = self.ser_cycles(0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axi::memsub::MemSub;
+    use crate::axi::port::axi_bus;
+    use crate::axi::types::{full_strb, Ar, Aw, Burst, W};
+
+    #[test]
+    fn transactions_cross_the_link_with_latency() {
+        let a = axi_bus(8);
+        let b = axi_bus(8);
+        let mut link = D2dLink::new(8, 4);
+        let mut mem = MemSub::new(0, 0x1000, 8, 1);
+        let mut stats = Stats::new();
+        a.aw.borrow_mut().push(Aw { id: 0, addr: 0x40, len: 0, size: 3, burst: Burst::Incr, qos: 0 });
+        a.w.borrow_mut().push(W { data: vec![3; 8], strb: full_strb(8), last: true });
+        let mut now = 0;
+        let mut done_at = None;
+        for _ in 0..200 {
+            link.tick(&a, &b, now, &mut stats);
+            mem.tick(&b, &mut stats);
+            if a.b.borrow_mut().pop().is_some() && done_at.is_none() {
+                done_at = Some(now);
+            }
+            now += 1;
+        }
+        assert!(done_at.is_some(), "write completed across link");
+        assert!(done_at.unwrap() > 10, "serialization + latency take time");
+        assert_eq!(mem.mem()[0x40], 3);
+
+        a.ar.borrow_mut().push(Ar { id: 1, addr: 0x40, len: 0, size: 3, burst: Burst::Incr, qos: 0 });
+        let mut got = false;
+        for _ in 0..200 {
+            link.tick(&a, &b, now, &mut stats);
+            mem.tick(&b, &mut stats);
+            if let Some(r) = a.r.borrow_mut().pop() {
+                assert_eq!(r.data[0], 3);
+                got = true;
+            }
+            now += 1;
+        }
+        assert!(got);
+        assert!(stats.get("d2d.pad_cycles") > 0);
+    }
+}

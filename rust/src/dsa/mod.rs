@@ -1,0 +1,38 @@
+//! The DSA plug-in interface (the paper's raison d'être).
+//!
+//! "a lightweight and modular 64-bit Linux-capable host platform designed
+//! for the seamless plug-in of domain-specific accelerators … The AXI4
+//! crossbar provides a configurable number of Manager and Subordinate
+//! ports toward a DSA." (§I, Fig. 1)
+//!
+//! A [`DsaPlugin`] receives one crossbar port pair:
+//! * a **manager** bus — the DSA masters the fabric (fetches operands,
+//!   writes results, anywhere in the address map), and
+//! * a **subordinate** bus — the host programs the DSA through its
+//!   `0x6000_0000 + pair × 16 MiB` window.
+//!
+//! Two plug-ins ship in-tree:
+//! * [`matmul::MatmulDsa`] — a tinyML matrix accelerator in the spirit of
+//!   the PULP-NN / TFLM engines the paper cites as DSA motivation
+//!   [15, 16]. Its *compute* is the AOT-compiled Pallas kernel executed
+//!   through PJRT (`crate::runtime`); its *memory traffic* (operand
+//!   fetch, result drain) runs beat-accurately through the simulated
+//!   fabric. This is the three-layer integration point.
+//! * [`traffic::TrafficGen`] — a synthetic load generator for interconnect
+//!   stress tests and the crossbar-scaling experiments.
+
+pub mod matmul;
+pub mod traffic;
+
+use crate::axi::port::AxiBus;
+use crate::sim::{Cycle, Stats};
+
+/// A domain-specific accelerator attached to one crossbar port pair.
+pub trait DsaPlugin {
+    fn name(&self) -> &'static str;
+    /// Advance one cycle. `mgr` is the DSA's manager port into the fabric,
+    /// `sub` the host-facing subordinate port of its register window.
+    fn tick(&mut self, mgr: &AxiBus, sub: &AxiBus, now: Cycle, stats: &mut Stats);
+    /// True when the accelerator has outstanding work.
+    fn busy(&self) -> bool;
+}

@@ -1,0 +1,139 @@
+//! Synthetic-traffic DSA: a programmable load generator.
+//!
+//! Used by the crossbar-scaling experiments (Fig. 9 context: "as we
+//! increase the number of DSA ports…") and interconnect stress tests: it
+//! issues a configurable mix of read/write bursts at a configurable
+//! intensity through its manager port, modeling a DSA that saturates its
+//! attachment point.
+
+use super::DsaPlugin;
+use crate::axi::port::AxiBus;
+use crate::axi::types::{full_strb, Ar, Aw, Burst, W};
+use crate::sim::{Cycle, Stats};
+
+pub struct TrafficGen {
+    /// Target address window.
+    pub base: u64,
+    pub size: u64,
+    /// Burst bytes (multiple of 8, ≤ 2048).
+    pub burst: u64,
+    /// Fraction of writes in [0,256).
+    pub write_ratio: u8,
+    /// Issue a new burst every `period` cycles.
+    pub period: u64,
+    /// Total bursts to issue (0 = unlimited).
+    pub count: u64,
+    issued: u64,
+    next_at: Cycle,
+    seed: u64,
+    w_beats_left: u32,
+    pub completed_reads: u64,
+    pub completed_writes: u64,
+}
+
+impl TrafficGen {
+    pub fn new(base: u64, size: u64, burst: u64, write_ratio: u8, period: u64, count: u64) -> Self {
+        Self {
+            base,
+            size,
+            burst: burst.clamp(8, 2048) & !7,
+            write_ratio,
+            period: period.max(1),
+            count,
+            issued: 0,
+            next_at: 0,
+            seed: 0x243f_6a88_85a3_08d3,
+            w_beats_left: 0,
+            completed_reads: 0,
+            completed_writes: 0,
+        }
+    }
+
+    fn rand(&mut self) -> u64 {
+        let mut x = self.seed;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.seed = x;
+        x.wrapping_mul(0x2545_f491_4f6c_dd1d)
+    }
+}
+
+impl DsaPlugin for TrafficGen {
+    fn name(&self) -> &'static str {
+        "traffic-gen"
+    }
+
+    fn busy(&self) -> bool {
+        self.count == 0 || self.issued < self.count
+    }
+
+    fn tick(&mut self, mgr: &AxiBus, _sub: &AxiBus, now: Cycle, stats: &mut Stats) {
+        // drain responses
+        while let Some(r) = mgr.r.borrow_mut().pop() {
+            if r.last {
+                self.completed_reads += 1;
+            }
+        }
+        while mgr.b.borrow_mut().pop().is_some() {
+            self.completed_writes += 1;
+        }
+        // stream pending write beats
+        if self.w_beats_left > 0 && mgr.w.borrow().can_push() {
+            self.w_beats_left -= 1;
+            mgr.w.borrow_mut().push(W {
+                data: vec![0xa5; 8],
+                strb: full_strb(8),
+                last: self.w_beats_left == 0,
+            });
+        }
+        if now < self.next_at || (self.count != 0 && self.issued >= self.count) {
+            return;
+        }
+        let max_off = self.size.saturating_sub(self.burst).max(1);
+        let addr = self.base + (self.rand() % max_off) & !7;
+        let beats = (self.burst / 8) as u8;
+        let write = (self.rand() & 0xff) < self.write_ratio as u64;
+        if write {
+            if self.w_beats_left == 0 && mgr.aw.borrow().can_push() {
+                mgr.aw.borrow_mut().push(Aw { id: 0x05, addr, len: beats - 1, size: 3, burst: Burst::Incr, qos: 0 });
+                self.w_beats_left = beats as u32;
+                self.issued += 1;
+                self.next_at = now + self.period;
+                stats.bump("dsa.traffic_wr");
+            }
+        } else if mgr.ar.borrow().can_push() {
+            mgr.ar.borrow_mut().push(Ar { id: 0x05, addr, len: beats - 1, size: 3, burst: Burst::Incr, qos: 0 });
+            self.issued += 1;
+            self.next_at = now + self.period;
+            stats.bump("dsa.traffic_rd");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axi::memsub::MemSub;
+    use crate::axi::port::axi_bus;
+
+    #[test]
+    fn generates_bounded_traffic() {
+        let mut tg = TrafficGen::new(0, 0x10000, 64, 128, 4, 50);
+        let mgr = axi_bus(8);
+        let sub = axi_bus(2);
+        let mut mem = MemSub::new(0, 0x10000, 8, 1);
+        let mut stats = Stats::new();
+        for now in 0..50_000u64 {
+            tg.tick(&mgr, &sub, now, &mut stats);
+            mem.tick(&mgr, &mut stats);
+            if !tg.busy() && tg.completed_reads + tg.completed_writes >= 50 {
+                break;
+            }
+        }
+        assert_eq!(tg.issued, 50);
+        assert_eq!(tg.completed_reads + tg.completed_writes, 50, "all bursts completed");
+        assert!(stats.get("dsa.traffic_rd") > 0);
+        assert!(stats.get("dsa.traffic_wr") > 0);
+    }
+}

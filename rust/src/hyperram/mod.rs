@@ -1,0 +1,292 @@
+//! HyperRAM (HyperBus) baseline — the competing low-pin-count memory the
+//! paper compares against (§II-B Background, §III-B):
+//!
+//! "Cypress' HyperRAM requires only 12 switching IOs for an 8-bit shared
+//! bus. However, transfer rates are limited to 400 MB/s at 200 MHz or
+//! less, and its self-refresh precludes advanced controller-side
+//! scheduling." HULK-V [13] and Vega [12] integrate HyperBus interfaces;
+//! Cheshire's RPC DRAM claims ~2× their peak bandwidth at comparable
+//! energy per byte.
+//!
+//! The model: an AXI4 subordinate with a HyperBus-timed datapath — 8 b DDR
+//! bus (2 B/cycle), a command/address (CA) phase of 3 cycles, an initial
+//! access latency, and periodic *self-refresh collisions* that stall the
+//! interface (the device refreshes autonomously; the controller cannot
+//! schedule around it, unlike our RPC manager).
+
+use crate::axi::port::AxiBus;
+use crate::axi::serializer::Serializer;
+use crate::axi::serializer::SerTxn;
+use crate::axi::types::{beat_addr, Resp, B, R};
+use crate::sim::{Cycle, Stats};
+use std::collections::VecDeque;
+
+/// Number of switching IOs of a HyperBus interface (8 DQ + RWDS + CS +
+/// CK + RESET).
+pub const SWITCHING_IOS: u32 = 12;
+
+/// HyperBus timing at 200 MHz.
+#[derive(Debug, Clone)]
+pub struct HyperTiming {
+    /// CA phase: 48 bits over 8 b DDR = 3 cycles.
+    pub t_ca: u64,
+    /// Initial access latency (t_ACC), doubled on refresh collision.
+    pub t_acc: u64,
+    /// Bytes per bus cycle (8 b DDR = 2 B).
+    pub bytes_per_cycle: u64,
+    /// Device-internal refresh interval and stall (self-refresh).
+    pub t_refi: u64,
+    pub t_ref_stall: u64,
+    /// Maximum linear burst before the controller must re-issue CS
+    /// (chip-select low time limit).
+    pub max_burst: u64,
+}
+
+impl HyperTiming {
+    pub fn c200() -> Self {
+        Self { t_ca: 3, t_acc: 6, bytes_per_cycle: 2, t_refi: 800, t_ref_stall: 12, max_burst: 1024 }
+    }
+}
+
+/// One in-flight HyperBus transaction.
+#[derive(Debug)]
+struct HyperOp {
+    txn: SerTxn,
+    /// Remaining (addr, bytes) chunks.
+    chunks: VecDeque<(u64, u64)>,
+    /// Assembled read bytes awaiting beat emission.
+    rbuf: VecDeque<u8>,
+    beat: u32,
+    /// Write staging: collected bytes.
+    wbuf: Vec<u8>,
+    wvalid: Vec<bool>,
+    collected: usize,
+    beats_seen: u32,
+    /// Busy until (current chunk completes).
+    busy_until: Cycle,
+    chunk_inflight: bool,
+}
+
+/// HyperRAM controller + device in one component (self-refreshing device).
+pub struct HyperRam {
+    base: u64,
+    storage: Vec<u8>,
+    t: HyperTiming,
+    ser: Serializer,
+    op: Option<HyperOp>,
+    next_refresh: Cycle,
+    refresh_until: Cycle,
+}
+
+impl HyperRam {
+    pub fn new(base: u64, size: usize) -> Self {
+        Self {
+            base,
+            storage: vec![0; size],
+            t: HyperTiming::c200(),
+            ser: Serializer::new(8),
+            op: None,
+            next_refresh: 0,
+            refresh_until: 0,
+        }
+    }
+
+    pub fn raw(&self) -> &[u8] {
+        &self.storage
+    }
+
+    pub fn raw_mut(&mut self) -> &mut [u8] {
+        &mut self.storage
+    }
+
+    pub fn tick(&mut self, bus: &AxiBus, now: Cycle, stats: &mut Stats) {
+        // autonomous self-refresh: the device stalls the bus; the
+        // controller cannot reschedule around it (paper: "precludes
+        // advanced controller-side scheduling")
+        if now >= self.next_refresh {
+            self.refresh_until = now + self.t.t_ref_stall;
+            self.next_refresh = now + self.t.t_refi;
+            stats.bump("hyper.self_refresh");
+        }
+        self.ser.tick(bus);
+        if self.op.is_none() {
+            if let Some(txn) = self.ser.pop() {
+                let bytes = (txn.len as u64 + 1) << txn.size;
+                let mut chunks = VecDeque::new();
+                let mut a = txn.addr - self.base;
+                let mut left = bytes;
+                while left > 0 {
+                    let n = left.min(self.t.max_burst - (a % self.t.max_burst));
+                    chunks.push_back((a, n));
+                    a += n;
+                    left -= n;
+                }
+                stats.bump("hyper.txns");
+                self.op = Some(HyperOp {
+                    chunks,
+                    rbuf: VecDeque::new(),
+                    beat: 0,
+                    wbuf: vec![0; bytes as usize],
+                    wvalid: vec![false; bytes as usize],
+                    collected: 0,
+                    beats_seen: 0,
+                    busy_until: 0,
+                    chunk_inflight: false,
+                    txn,
+                });
+            }
+        }
+        let Some(op) = &mut self.op else { return };
+
+        // collect write beats (one per cycle)
+        if op.txn.write && op.beats_seen <= op.txn.len as u32 {
+            if let Some(w) = bus.w.borrow_mut().pop() {
+                let nbytes = 1usize << op.txn.size;
+                let a = beat_addr(op.txn.addr, op.txn.size, crate::axi::types::Burst::Incr, op.beats_seen);
+                let lane0 = (a as usize) & 7;
+                let off = (a - op.txn.addr) as usize;
+                for i in 0..nbytes {
+                    let lane = lane0 + i;
+                    if lane < w.data.len() && (w.strb >> lane) & 1 == 1 {
+                        op.wbuf[off + i] = w.data[lane];
+                        op.wvalid[off + i] = true;
+                    }
+                }
+                op.collected = op.collected.max(off + nbytes);
+                op.beats_seen += 1;
+            }
+        }
+
+        let stalled = now < self.refresh_until;
+
+        // launch the next chunk when free
+        if !op.chunk_inflight && !stalled && now >= op.busy_until {
+            if let Some(&(a, n)) = op.chunks.front() {
+                let ready = if op.txn.write {
+                    op.collected as u64 >= (a - (op.txn.addr - self.base)) + n
+                } else {
+                    true
+                };
+                if ready {
+                    let data_cycles = (n + self.t.bytes_per_cycle - 1) / self.t.bytes_per_cycle;
+                    let lat = self.t.t_ca + self.t.t_acc + data_cycles;
+                    op.busy_until = now + lat;
+                    op.chunk_inflight = true;
+                    stats.add("hyper.db_data_cycles", data_cycles);
+                    stats.add("hyper.db_cmd_cycles", self.t.t_ca);
+                    stats.add("hyper.io_pad_cycles", (data_cycles + self.t.t_ca) * SWITCHING_IOS as u64);
+                    stats.add(
+                        if op.txn.write { "hyper.useful_wr_bytes" } else { "hyper.useful_rd_bytes" },
+                        n,
+                    );
+                }
+            }
+        }
+
+        // complete a chunk
+        if op.chunk_inflight && now >= op.busy_until {
+            let (a, n) = op.chunks.pop_front().unwrap();
+            op.chunk_inflight = false;
+            let off = a as usize;
+            if op.txn.write {
+                let rel = (a - (op.txn.addr - self.base)) as usize;
+                for i in 0..n as usize {
+                    if op.wvalid[rel + i] {
+                        self.storage[off + i] = op.wbuf[rel + i];
+                    }
+                }
+                if op.chunks.is_empty() {
+                    bus.b.borrow_mut().push(B { id: op.txn.id, resp: Resp::Okay });
+                }
+            } else {
+                for i in 0..n as usize {
+                    op.rbuf.push_back(self.storage[off + i]);
+                }
+            }
+        }
+
+        // emit read beats / retire
+        if !op.txn.write {
+            let nbytes = 1usize << op.txn.size;
+            if op.rbuf.len() >= nbytes && bus.r.borrow().can_push() {
+                let a = beat_addr(op.txn.addr, op.txn.size, crate::axi::types::Burst::Incr, op.beat);
+                let lane0 = (a as usize) & 7;
+                let mut data = vec![0u8; 8];
+                for i in 0..nbytes {
+                    data[lane0 + i] = op.rbuf.pop_front().unwrap();
+                }
+                let last = op.beat == op.txn.len as u32;
+                bus.r.borrow_mut().push(R { id: op.txn.id, data, resp: Resp::Okay, last });
+                op.beat += 1;
+                if last {
+                    self.op = None;
+                }
+            }
+        } else if op.chunks.is_empty() && !op.chunk_inflight {
+            self.op = None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axi::port::axi_bus;
+    use crate::axi::types::{full_strb, Ar, Aw, Burst, W};
+
+    fn run(h: &mut HyperRam, bus: &AxiBus, now: &mut Cycle, stats: &mut Stats, n: u64) {
+        for _ in 0..n {
+            h.tick(bus, *now, stats);
+            *now += 1;
+        }
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut h = HyperRam::new(0x9000_0000, 0x10000);
+        let bus = axi_bus(8);
+        let (mut now, mut stats) = (0, Stats::new());
+        bus.aw.borrow_mut().push(Aw { id: 1, addr: 0x9000_0100, len: 3, size: 3, burst: Burst::Incr, qos: 0 });
+        for i in 0..4u8 {
+            bus.w.borrow_mut().push(W { data: vec![i + 1; 8], strb: full_strb(8), last: i == 3 });
+        }
+        run(&mut h, &bus, &mut now, &mut stats, 200);
+        assert!(bus.b.borrow_mut().pop().is_some());
+        assert_eq!(&h.raw()[0x100..0x108], &[1; 8]);
+
+        bus.ar.borrow_mut().push(Ar { id: 2, addr: 0x9000_0100, len: 3, size: 3, burst: Burst::Incr, qos: 0 });
+        run(&mut h, &bus, &mut now, &mut stats, 200);
+        let mut beats = 0;
+        while let Some(r) = bus.r.borrow_mut().pop() {
+            assert_eq!(r.data, vec![beats as u8 + 1; 8]);
+            beats += 1;
+        }
+        assert_eq!(beats, 4);
+    }
+
+    /// HyperRAM's peak throughput must stay at its 400 MB/s ceiling:
+    /// 2 B/cycle at 200 MHz even for ideal large bursts.
+    #[test]
+    fn peak_bandwidth_capped_at_2_bytes_per_cycle() {
+        let mut h = HyperRam::new(0, 0x20000);
+        let bus = axi_bus(16);
+        let (mut now, mut stats) = (0u64, Stats::new());
+        let t0 = now;
+        for k in 0..8 {
+            bus.ar.borrow_mut().push(Ar { id: 0, addr: k * 2048, len: 255, size: 3, burst: Burst::Incr, qos: 0 });
+        }
+        let mut beats = 0;
+        while beats < 8 * 256 && now < 60_000 {
+            h.tick(&bus, now, &mut stats);
+            while bus.r.borrow_mut().pop().is_some() {
+                beats += 1;
+            }
+            now += 1;
+        }
+        assert_eq!(beats, 8 * 256, "all beats returned");
+        let bytes = 8.0 * 2048.0;
+        let bpc = bytes / (now - t0) as f64;
+        assert!(bpc <= 2.0, "bytes/cycle {bpc:.2} must be ≤ 2 (400 MB/s @200 MHz)");
+        assert!(bpc > 1.2, "should approach the ceiling, got {bpc:.2}");
+    }
+}

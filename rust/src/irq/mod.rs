@@ -1,0 +1,272 @@
+//! RISC-V-compliant interrupt controllers (paper §II-A).
+//!
+//! "It includes all hardware necessary to boot and run a GPOS like Linux
+//! autonomously, such as RISC-V-compliant core-local and platform
+//! interrupt controllers … the interrupt controllers support a
+//! configurable number of external sources and targets."
+//!
+//! * [`Clint`] — core-local interruptor: `mtime`/`mtimecmp` timer and
+//!   software interrupts (msip), SiFive-compatible register layout.
+//! * [`Plic`] — platform-level interrupt controller: N sources with
+//!   enables, priorities, claim/complete; configurable targets.
+
+use crate::axi::regbus::RegDevice;
+use crate::sim::Stats;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// CLINT register layout (offsets): msip@0x0000, mtimecmp@0x4000,
+/// mtime@0xbff8 (each 2×32 b words, little-endian pairs).
+pub struct Clint {
+    pub msip: bool,
+    pub mtime: u64,
+    pub mtimecmp: u64,
+    /// mtime increments once every `divider` cycles (RTC prescaler).
+    pub divider: u32,
+    phase: u32,
+}
+
+impl Clint {
+    pub fn new() -> Self {
+        Self { msip: false, mtime: 0, mtimecmp: u64::MAX, divider: 1, phase: 0 }
+    }
+
+    pub fn mtip(&self) -> bool {
+        self.mtime >= self.mtimecmp
+    }
+}
+
+impl Default for Clint {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RegDevice for Clint {
+    fn reg_read(&mut self, off: u64) -> Result<u32, ()> {
+        Ok(match off {
+            0x0000 => self.msip as u32,
+            0x4000 => self.mtimecmp as u32,
+            0x4004 => (self.mtimecmp >> 32) as u32,
+            0xbff8 => self.mtime as u32,
+            0xbffc => (self.mtime >> 32) as u32,
+            _ => return Err(()),
+        })
+    }
+
+    fn reg_write(&mut self, off: u64, v: u32) -> Result<(), ()> {
+        match off {
+            0x0000 => self.msip = v & 1 == 1,
+            0x4000 => self.mtimecmp = (self.mtimecmp & !0xffff_ffff) | v as u64,
+            0x4004 => self.mtimecmp = (self.mtimecmp & 0xffff_ffff) | ((v as u64) << 32),
+            0xbff8 => self.mtime = (self.mtime & !0xffff_ffff) | v as u64,
+            0xbffc => self.mtime = (self.mtime & 0xffff_ffff) | ((v as u64) << 32),
+            _ => return Err(()),
+        }
+        Ok(())
+    }
+
+    fn tick(&mut self, _stats: &mut Stats) {
+        self.phase += 1;
+        if self.phase >= self.divider {
+            self.phase = 0;
+            self.mtime = self.mtime.wrapping_add(1);
+        }
+    }
+}
+
+/// Shared source-level handle so peripherals can raise PLIC lines.
+pub type IrqLines = Rc<RefCell<Vec<bool>>>;
+
+/// PLIC with one target context (CVA6 M-mode external interrupt).
+pub struct Plic {
+    pub lines: IrqLines,
+    pending: Vec<bool>,
+    enabled: Vec<bool>,
+    priority: Vec<u32>,
+    claimed: Vec<bool>,
+    threshold: u32,
+}
+
+impl Plic {
+    pub fn new(n_sources: usize) -> (Self, IrqLines) {
+        let lines: IrqLines = Rc::new(RefCell::new(vec![false; n_sources]));
+        (
+            Self {
+                lines: lines.clone(),
+                pending: vec![false; n_sources],
+                enabled: vec![false; n_sources],
+                priority: vec![1; n_sources],
+                claimed: vec![false; n_sources],
+                threshold: 0,
+            },
+            lines,
+        )
+    }
+
+    /// Latch level-triggered lines into pending (gateway).
+    pub fn sample(&mut self) {
+        let lines = self.lines.borrow();
+        for (i, &l) in lines.iter().enumerate() {
+            if l && !self.claimed[i] {
+                self.pending[i] = true;
+            }
+        }
+    }
+
+    /// External-interrupt level for the hart.
+    pub fn meip(&self) -> bool {
+        self.pending
+            .iter()
+            .zip(&self.enabled)
+            .zip(&self.priority)
+            .any(|((&p, &e), &pr)| p && e && pr > self.threshold)
+    }
+
+    fn best(&self) -> Option<usize> {
+        self.pending
+            .iter()
+            .zip(&self.enabled)
+            .zip(&self.priority)
+            .enumerate()
+            .filter(|(_, ((&p, &e), &pr))| p && e && pr > self.threshold)
+            .max_by_key(|(_, ((_, _), &pr))| pr)
+            .map(|(i, _)| i)
+    }
+}
+
+/// PLIC register map (simplified, word offsets):
+/// 0x0000 + 4*i : priority of source i
+/// 0x1000       : pending bitmap (sources 0..32)
+/// 0x2000       : enable bitmap
+/// 0x200000     : threshold
+/// 0x200004     : claim/complete
+impl RegDevice for Plic {
+    fn reg_read(&mut self, off: u64) -> Result<u32, ()> {
+        let n = self.pending.len();
+        Ok(match off {
+            o if o < 0x1000 => {
+                let i = (o / 4) as usize;
+                if i < n {
+                    self.priority[i]
+                } else {
+                    return Err(());
+                }
+            }
+            0x1000 => self.pending.iter().enumerate().fold(0u32, |acc, (i, &p)| acc | ((p as u32) << i)),
+            0x2000 => self.enabled.iter().enumerate().fold(0u32, |acc, (i, &e)| acc | ((e as u32) << i)),
+            0x20_0000 => self.threshold,
+            0x20_0004 => {
+                // claim: highest-priority pending
+                match self.best() {
+                    Some(i) => {
+                        self.pending[i] = false;
+                        self.claimed[i] = true;
+                        (i + 1) as u32 // PLIC sources are 1-based
+                    }
+                    None => 0,
+                }
+            }
+            _ => return Err(()),
+        })
+    }
+
+    fn reg_write(&mut self, off: u64, v: u32) -> Result<(), ()> {
+        let n = self.pending.len();
+        match off {
+            o if o < 0x1000 => {
+                let i = (o / 4) as usize;
+                if i < n {
+                    self.priority[i] = v;
+                } else {
+                    return Err(());
+                }
+            }
+            0x2000 => {
+                for i in 0..n.min(32) {
+                    self.enabled[i] = (v >> i) & 1 == 1;
+                }
+            }
+            0x20_0000 => self.threshold = v,
+            0x20_0004 => {
+                // complete
+                let i = v as usize;
+                if i >= 1 && i <= n {
+                    self.claimed[i - 1] = false;
+                }
+            }
+            _ => return Err(()),
+        }
+        Ok(())
+    }
+
+    fn tick(&mut self, _stats: &mut Stats) {
+        self.sample();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clint_timer_fires() {
+        let mut c = Clint::new();
+        let mut s = Stats::new();
+        c.reg_write(0x4000, 100).unwrap();
+        c.reg_write(0x4004, 0).unwrap();
+        for _ in 0..99 {
+            c.tick(&mut s);
+        }
+        assert!(!c.mtip());
+        c.tick(&mut s);
+        assert!(c.mtip());
+        // reading mtime through registers
+        assert_eq!(c.reg_read(0xbff8).unwrap(), 100);
+    }
+
+    #[test]
+    fn clint_msip_software_interrupt() {
+        let mut c = Clint::new();
+        assert!(!c.msip);
+        c.reg_write(0x0, 1).unwrap();
+        assert!(c.msip);
+        c.reg_write(0x0, 0).unwrap();
+        assert!(!c.msip);
+    }
+
+    #[test]
+    fn plic_claim_complete_cycle() {
+        let (mut p, lines) = Plic::new(4);
+        let mut s = Stats::new();
+        p.reg_write(0x2000, 0b0100).unwrap(); // enable source 2
+        p.reg_write(0x8, 5).unwrap(); // priority of source 2
+        lines.borrow_mut()[2] = true;
+        p.tick(&mut s);
+        assert!(p.meip());
+        let claim = p.reg_read(0x20_0004).unwrap();
+        assert_eq!(claim, 3, "claim returns source+1");
+        assert!(!p.meip(), "claimed source stops asserting");
+        // while claimed, the still-high line must not re-pend
+        p.tick(&mut s);
+        assert!(!p.meip());
+        lines.borrow_mut()[2] = false;
+        p.reg_write(0x20_0004, 3).unwrap(); // complete
+        p.tick(&mut s);
+        assert!(!p.meip());
+    }
+
+    #[test]
+    fn plic_threshold_masks_low_priority() {
+        let (mut p, lines) = Plic::new(2);
+        let mut s = Stats::new();
+        p.reg_write(0x2000, 0b11).unwrap();
+        p.reg_write(0x0, 1).unwrap();
+        p.reg_write(0x20_0000, 3).unwrap(); // threshold 3 > priority 1
+        lines.borrow_mut()[0] = true;
+        p.tick(&mut s);
+        assert!(!p.meip());
+        p.reg_write(0x0, 7).unwrap();
+        assert!(p.meip());
+    }
+}

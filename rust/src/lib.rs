@@ -1,0 +1,38 @@
+//! # Cheshire — a lightweight, Linux-capable RISC-V host platform for DSA plug-in
+//!
+//! Cycle-accurate reproduction of the Cheshire platform (Ottaviano et al., 2023)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the platform itself: a cycle-stepped simulator of
+//!   every block in the paper (CVA6-class RV64 host, AXI4 crossbar, LLC/SPM,
+//!   RPC DRAM controller + PHY, DMA engine, peripherals) plus the offload
+//!   *coordinator* that choreographs DSA plug-in data movement.
+//! * **Layer 2** — the DSA compute graphs (polybench 2MM, tinyML MLP) written in
+//!   JAX (`python/compile/model.py`), AOT-lowered to HLO text at build time.
+//! * **Layer 1** — Pallas tile kernels (`python/compile/kernels/`) whose BlockSpec
+//!   tiling mirrors the paper's DRAM↔SPM DMA schedule.
+//!
+//! Python never runs at simulation time: `runtime::XlaRuntime` loads the
+//! pre-compiled artifacts via the PJRT C API and executes them from the hot path.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-figure experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod sim;
+pub mod axi;
+pub mod mem;
+pub mod cache;
+pub mod rpc;
+pub mod hyperram;
+pub mod dma;
+pub mod asm;
+pub mod cpu;
+pub mod irq;
+pub mod periph;
+pub mod model;
+pub mod platform;
+pub mod workloads;
+pub mod dsa;
+pub mod d2d;
+pub mod coordinator;
+pub mod runtime;

@@ -1,0 +1,219 @@
+//! `cheshire` — the platform launcher.
+//!
+//! Subcommands:
+//! * `info [--config cfg.toml] [--dsa N]` — print the configuration, the
+//!   memory map, and the area breakdown (Fig. 9 row for this config).
+//! * `run <workload> [--cycles N] [--freq-mhz F] [--config cfg.toml]` —
+//!   run one of the paper's workloads (wfi | nop | twomm | mem) on the
+//!   simulated platform and report cycles, stats and the Fig. 11 power
+//!   split.
+//! * `offload [--n N] [--tile T] [--artifacts DIR]` — tiled matmul through
+//!   the DSA plug-in (DMA + SPM + Pallas-compiled kernel via PJRT).
+//! * `boot` — autonomous SPI-flash GPT boot flow.
+
+use cheshire::asm::reg::*;
+use cheshire::asm::Asm;
+use cheshire::coordinator::OffloadCoordinator;
+use cheshire::dsa::matmul::MatmulDsa;
+use cheshire::model::{AreaModel, PowerModel};
+use cheshire::periph::gpt;
+use cheshire::platform::cli::Args;
+use cheshire::platform::memmap::*;
+use cheshire::platform::{CheshireConfig, Soc};
+use cheshire::runtime::XlaRuntime;
+use cheshire::sim::Stats;
+use cheshire::workloads;
+use std::rc::Rc;
+
+fn load_config(args: &Args) -> CheshireConfig {
+    let mut cfg = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).expect("read config file");
+            CheshireConfig::from_toml(&text).expect("parse config")
+        }
+        None => CheshireConfig::neo(),
+    };
+    if let Some(f) = args.get("freq-mhz") {
+        cfg.freq_hz = f.parse::<f64>().expect("freq") * 1e6;
+    }
+    if let Some(n) = args.get("dsa") {
+        cfg.dsa_port_pairs = n.parse().expect("dsa pairs");
+    }
+    cfg
+}
+
+fn main() {
+    let args = Args::from_env(&["info", "run", "offload", "boot"], &["stats"]);
+    match args.subcommand.as_deref() {
+        Some("info") => info(&args),
+        Some("run") => run(&args),
+        Some("offload") => offload(&args),
+        Some("boot") => boot(&args),
+        _ => {
+            eprintln!("usage: cheshire <info|run|offload|boot> [options]");
+            eprintln!("  run <wfi|nop|twomm|mem> [--cycles N] [--freq-mhz F]");
+            eprintln!("  offload [--n 128] [--tile 64] [--artifacts artifacts/]");
+            eprintln!("  boot");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn info(args: &Args) {
+    let cfg = load_config(args);
+    println!("Cheshire configuration: {cfg:#?}");
+    let b = AreaModel::cheshire(&cfg);
+    println!("\nArea breakdown (TSMC65, kGE):\n{}", b.table());
+}
+
+fn run(args: &Args) {
+    let which = args.positionals.first().map(|s| s.as_str()).unwrap_or("nop");
+    let cfg = load_config(args);
+    let freq = cfg.freq_hz;
+    let mut soc = Soc::new(cfg);
+    let cycles = args.get_u64("cycles", 2_000_000);
+    let img = match which {
+        "wfi" => workloads::wfi_program(DRAM_BASE),
+        "nop" => workloads::nop_program(DRAM_BASE),
+        "twomm" => {
+            let n = args.get_u64("n", 32) as usize;
+            let l = workloads::TwoMmLayout::new(n);
+            let mk = |seed: u64| -> Vec<u8> {
+                (0..n * n)
+                    .flat_map(|i| (((i as f64 * 0.61 + seed as f64) % 3.0) - 1.5).to_le_bytes())
+                    .collect()
+            };
+            soc.dram_write((l.a - DRAM_BASE) as usize, &mk(1));
+            soc.dram_write((l.b - DRAM_BASE) as usize, &mk(2));
+            soc.dram_write((l.c - DRAM_BASE) as usize, &mk(3));
+            workloads::twomm_program(DRAM_BASE, &l)
+        }
+        "mem" => workloads::mem_program(DRAM_BASE, 64 * 1024, 8, 2048),
+        other => {
+            eprintln!("unknown workload {other}");
+            std::process::exit(2);
+        }
+    };
+    soc.preload(&img, DRAM_BASE);
+    let used = soc.run(cycles);
+    let pm = PowerModel::neo();
+    let p = pm.power(&soc.stats, used, freq);
+    println!("workload={which} cycles={used} freq={:.0} MHz", freq / 1e6);
+    println!(
+        "power: CORE {:.1} mW  IO {:.1} mW  RAM {:.1} mW  TOTAL {:.1} mW",
+        p.core_mw,
+        p.io_mw,
+        p.ram_mw,
+        p.total()
+    );
+    if args.flag("stats") {
+        println!("\n{}", soc.stats.report());
+    }
+}
+
+fn offload(args: &Args) {
+    let tile = args.get_u64("tile", 64) as usize;
+    let n = args.get_u64("n", 128) as usize;
+    let dir = args.get("artifacts").unwrap_or("artifacts").to_string();
+    let runtime = XlaRuntime::load_dir(std::path::Path::new(&dir)).ok().map(Rc::new);
+    let artifact = format!("matmul_acc{tile}");
+    let have = runtime.as_ref().map(|r| r.has(&artifact)).unwrap_or(false);
+    println!(
+        "offload: n={n} tile={tile} kernel={} ({})",
+        artifact,
+        if have { "Pallas via PJRT" } else { "native fallback — run `make artifacts`" }
+    );
+    let mut soc = Soc::new(CheshireConfig::with_dsa(1));
+    soc.plug_dsa(0, Box::new(MatmulDsa::new(runtime, &artifact)));
+    let mk = |seed: u64| -> Vec<f32> {
+        (0..n * n).map(|i| (((i as u64 * 131 + seed * 17) % 29) as f32) * 0.1 - 1.4).collect()
+    };
+    let (a, b) = (mk(1), mk(2));
+    let bytes = |m: &[f32]| m.iter().flat_map(|v| v.to_le_bytes()).collect::<Vec<u8>>();
+    soc.dram_write(0x10_0000, &bytes(&a));
+    soc.dram_write(0x40_0000, &bytes(&b));
+    let mut coord = OffloadCoordinator::new(tile);
+    let report = coord.matmul(&mut soc, n, 0x10_0000, 0x40_0000, 0x70_0000);
+    let raw = soc.dram_read(0x70_0000, n * n * 4);
+    let got: Vec<f32> = raw.chunks(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+    let mut max_err = 0f32;
+    for i in 0..n {
+        for j in 0..n {
+            let want: f32 = (0..n).map(|k| a[i * n + k] * b[k * n + j]).sum();
+            max_err = max_err.max((got[i * n + j] - want).abs());
+        }
+    }
+    let secs = report.cycles as f64 / soc.clock.freq_hz;
+    println!(
+        "done: {} tiles, {} cycles ({:.2} ms @200 MHz), {:.1} MB DMA, DSA util {:.1}%, max |err| = {:.2e}",
+        report.tiles,
+        report.cycles,
+        secs * 1e3,
+        report.dma_bytes as f64 / 1e6,
+        report.dsa_utilization * 100.0,
+        max_err
+    );
+    assert!(max_err < 1e-2, "verification failed");
+    println!("verification OK");
+}
+
+fn boot(_args: &Args) {
+    // Payload: print a banner over the UART, then halt.
+    let mut a = Asm::new(DRAM_BASE);
+    a.li(S0, UART_BASE as i64);
+    let msg = b"CHESHIRE BOOT OK\n";
+    for (i, &c) in msg.iter().enumerate() {
+        a.li(T0, c as i64);
+        a.sw(T0, S0, 0);
+        let lbl = format!("poll{i}");
+        a.label(&lbl);
+        a.lw(T1, S0, 0x08);
+        a.andi(T1, T1, 0x20);
+        a.beq(T1, ZERO, &lbl);
+    }
+    a.ebreak();
+    let payload = a.finish();
+    let disk = gpt::build_disk(&[gpt::PartSpec {
+        type_guid: cheshire::periph::bootrom::BOOT_TYPE_GUID,
+        name: "zsl",
+        data: &payload,
+    }]);
+    let mut cfg = CheshireConfig::neo();
+    cfg.boot_mode = cheshire::periph::soc_ctrl::BOOT_SPI_FLASH;
+    let mut soc = Soc::new(cfg);
+    soc.spi.borrow_mut().flash.image = disk;
+
+    // Boot-ROM loader model: GPT walk through the SPI datapath (real GPT
+    // bytes, real SPI cycle counts).
+    let t0 = soc.clock.now();
+    let (image, spi_cycles) = {
+        let mut spi = soc.spi.borrow_mut();
+        let mut stats = Stats::new();
+        let mut total_cycles = 0u64;
+        let image = gpt::load_boot_partition(|off, len| {
+            let (d, c) = spi.read_blocking(off as u32, len, &mut stats);
+            total_cycles += c;
+            d
+        })
+        .expect("GPT boot");
+        (image, total_cycles)
+    };
+    soc.dram_write(0, &image);
+    // charge the SPI time to the platform clock, then release the core
+    soc.run_cycles(spi_cycles);
+    {
+        let mut sc = soc.soc_ctrl.borrow_mut();
+        sc.scratch[0] = DRAM_BASE as u32;
+        sc.scratch[1] = (DRAM_BASE >> 32) as u32;
+        sc.boot_done = 1;
+    }
+    soc.run(10_000_000);
+    let out = soc.uart.borrow().tx_string();
+    println!(
+        "boot flow: {} cycles total ({} on SPI), UART says: {}",
+        soc.clock.now() - t0,
+        spi_cycles,
+        out.trim()
+    );
+    assert!(out.contains("CHESHIRE BOOT OK"));
+}

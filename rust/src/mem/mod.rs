@@ -1,0 +1,71 @@
+//! On-chip SRAM primitives.
+//!
+//! Thin byte-array SRAM with access accounting — the building block for the
+//! L1 caches, the LLC data/tag arrays, the SPM, and the RPC frontend's
+//! read/write buffers. Access counts feed the CORE-domain power model
+//! (`crate::model::power`), mirroring how SRAM macro switching dominates
+//! Neo's core power in memory-heavy workloads (paper Fig. 11).
+
+use crate::sim::Stats;
+
+/// A single-port SRAM macro model.
+pub struct Sram {
+    data: Vec<u8>,
+    /// Stats key under which accesses are counted.
+    pub stat_key: &'static str,
+}
+
+impl Sram {
+    pub fn new(size: usize, stat_key: &'static str) -> Self {
+        Self { data: vec![0; size], stat_key }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Read `buf.len()` bytes at `off`, counting one access.
+    pub fn read(&self, off: usize, buf: &mut [u8], stats: &mut Stats) {
+        buf.copy_from_slice(&self.data[off..off + buf.len()]);
+        stats.add(self.stat_key, 1);
+        stats.add("sram.rd_bytes", buf.len() as u64);
+    }
+
+    /// Write `buf` at `off`, counting one access.
+    pub fn write(&mut self, off: usize, buf: &[u8], stats: &mut Stats) {
+        self.data[off..off + buf.len()].copy_from_slice(buf);
+        stats.add(self.stat_key, 1);
+        stats.add("sram.wr_bytes", buf.len() as u64);
+    }
+
+    /// Zero-cost raw view (preloading, inspection — not counted).
+    pub fn raw(&self) -> &[u8] {
+        &self.data
+    }
+
+    pub fn raw_mut(&mut self) -> &mut [u8] {
+        &mut self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sram_read_write_counts() {
+        let mut s = Sram::new(64, "test.sram");
+        let mut stats = Stats::new();
+        s.write(8, &[1, 2, 3, 4], &mut stats);
+        let mut buf = [0u8; 4];
+        s.read(8, &mut buf, &mut stats);
+        assert_eq!(buf, [1, 2, 3, 4]);
+        assert_eq!(stats.get("test.sram"), 2);
+        assert_eq!(stats.get("sram.rd_bytes"), 4);
+        assert_eq!(stats.get("sram.wr_bytes"), 4);
+    }
+}

@@ -1,0 +1,185 @@
+//! Area model in kGE (NAND2-equivalent gates), TSMC 65 nm.
+//!
+//! Anchors from the paper:
+//! * Fig. 9 — CVA6 dominates Cheshire; the RPC DRAM controller accounts
+//!   for ≤7.6 %; the crossbar grows 3.6 % → 10.6 % from zero to eight DSA
+//!   manager/subordinate port pairs, increasing total area by ≤7.8 %.
+//! * Fig. 10 — within the RPC interface, the manager + command/timing FSMs
+//!   + PHY occupy only ~3.5 kGE (~1 %); the AXI4 buffers and AXI interface
+//!   dominate (Neo over-provisions 8 KiB read + 8 KiB write buffers).
+//! * §III-C — the whole controller is 6.3 % of the area of a full-pin-count
+//!   65 nm DDR3 controller [25].
+
+use crate::platform::config::CheshireConfig;
+
+/// GE-equivalent area of one SRAM bit in 65 nm (macro, incl. periphery).
+pub const GE_PER_SRAM_BIT: f64 = 0.6;
+
+/// One named component of a breakdown.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub name: &'static str,
+    pub kge: f64,
+}
+
+/// A named area breakdown.
+#[derive(Debug, Clone)]
+pub struct Breakdown {
+    pub entries: Vec<Entry>,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> f64 {
+        self.entries.iter().map(|e| e.kge).sum()
+    }
+
+    pub fn frac(&self, name: &str) -> f64 {
+        self.entries.iter().filter(|e| e.name == name).map(|e| e.kge).sum::<f64>() / self.total()
+    }
+
+    pub fn table(&self) -> String {
+        let tot = self.total();
+        let mut s = String::new();
+        for e in &self.entries {
+            s.push_str(&format!("{:<22} {:>9.1} kGE  {:>5.1} %\n", e.name, e.kge, 100.0 * e.kge / tot));
+        }
+        s.push_str(&format!("{:<22} {:>9.1} kGE\n", "TOTAL", tot));
+        s
+    }
+}
+
+/// The platform area model.
+pub struct AreaModel;
+
+impl AreaModel {
+    /// CVA6 with Neo's 32+32 KiB L1s (logic + cache arrays + tags).
+    pub fn cva6(icache: usize, dcache: usize) -> f64 {
+        let logic = 2400.0; // pipeline, double-precision FPU, MMU, CSR
+        let arrays = ((icache + dcache) * 8) as f64 * GE_PER_SRAM_BIT / 1000.0;
+        let tags = 0.12 * arrays;
+        logic + arrays + tags
+    }
+
+    /// The AXI4 crossbar: all-to-all M×S switching fabric + per-port
+    /// overhead, scaled by data width.
+    pub fn xbar(n_mgr: usize, n_sub: usize, data_bytes: usize) -> f64 {
+        let w = data_bytes as f64 / 8.0;
+        117.5 + 2.764 * (n_mgr as f64) * (n_sub as f64) * w
+    }
+
+    /// LLC/SPM: data arrays + tags + way-control logic.
+    pub fn llc(size: usize, ways: usize) -> f64 {
+        let arrays = (size * 8) as f64 * GE_PER_SRAM_BIT / 1000.0;
+        let tags = 0.10 * arrays;
+        let ctl = 45.0 + 4.0 * ways as f64;
+        arrays + tags + ctl
+    }
+
+    /// RPC DRAM interface, split per Fig. 10.
+    pub fn rpc_interface(rd_buf: usize, wr_buf: usize) -> Breakdown {
+        let buf_bits = ((rd_buf + wr_buf) * 8) as f64;
+        Breakdown {
+            entries: vec![
+                Entry { name: "axi_buffer", kge: buf_bits * GE_PER_SRAM_BIT / 1000.0 + 35.0 },
+                Entry { name: "axi_interface", kge: 130.0 },
+                Entry { name: "manager", kge: 1.2 },
+                Entry { name: "cmd_timing_fsm", kge: 1.5 },
+                Entry { name: "phy", kge: 0.8 },
+            ],
+        }
+    }
+
+    /// Full-platform breakdown for a configuration (Fig. 9 bars).
+    pub fn cheshire(cfg: &CheshireConfig) -> Breakdown {
+        let rpc = Self::rpc_interface(cfg.rpc_rd_buf, cfg.rpc_wr_buf).total();
+        // base managers: CVA6 I+D, DMA, VGA, debug; base subordinates:
+        // LLC/DRAM, regbus bridge, boot ROM, SPM window, D2D
+        let nm = 4 + cfg.dsa_port_pairs;
+        let ns = 5 + cfg.dsa_port_pairs;
+        Breakdown {
+            entries: vec![
+                Entry { name: "cva6", kge: Self::cva6(cfg.icache_bytes, cfg.dcache_bytes) },
+                Entry { name: "llc_spm", kge: Self::llc(cfg.llc_bytes, cfg.llc_ways) },
+                Entry { name: "rpc_ctrl", kge: rpc },
+                Entry { name: "axi_xbar", kge: Self::xbar(nm, ns, cfg.data_bytes) },
+                Entry { name: "rest", kge: 700.0 }, // DMA, peripherals, adapters (paper: "Rest")
+                Entry { name: "d2d", kge: 60.0 },
+                Entry { name: "debug_irq", kge: 100.0 },
+            ],
+        }
+    }
+
+    /// The DDR3 controller comparator [25]: our controller is claimed at
+    /// 6.3 % of its area.
+    pub fn ddr3_controller_kge() -> f64 {
+        // anchored so Neo's RPC interface lands at the claimed 6.3 % ratio
+        3920.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::config::CheshireConfig;
+
+    #[test]
+    fn neo_percentages_match_paper_anchors() {
+        let neo = AreaModel::cheshire(&CheshireConfig::neo());
+        // CVA6 dominates
+        let cva6 = neo.frac("cva6");
+        assert!(
+            neo.entries.iter().all(|e| e.name == "cva6" || e.kge <= cva6 * neo.total()),
+            "CVA6 must be the largest component"
+        );
+        // RPC controller ≤ 7.6 %
+        let rpc = neo.frac("rpc_ctrl");
+        assert!(rpc <= 0.076 + 0.003, "rpc_ctrl {:.1}% must be ≤7.6%", rpc * 100.0);
+        assert!(rpc > 0.05, "rpc_ctrl should still be a visible slice");
+        // crossbar ≈ 3.6 %
+        let xbar = neo.frac("axi_xbar");
+        assert!((xbar - 0.036).abs() < 0.01, "xbar {:.1}% ≈ 3.6%", xbar * 100.0);
+    }
+
+    #[test]
+    fn eight_dsa_pairs_grow_area_by_at_most_7_8_percent() {
+        let neo = AreaModel::cheshire(&CheshireConfig::neo());
+        let mut cfg8 = CheshireConfig::neo();
+        cfg8.dsa_port_pairs = 8;
+        let big = AreaModel::cheshire(&cfg8);
+        let growth = big.total() / neo.total() - 1.0;
+        assert!(growth <= 0.080, "growth {:.1}% must be ≤ ~7.8%", growth * 100.0);
+        assert!(growth > 0.05, "eight pairs should still cost real area");
+        let xbar8 = big.frac("axi_xbar");
+        assert!((xbar8 - 0.106).abs() < 0.015, "xbar @8 pairs {:.1}% ≈ 10.6%", xbar8 * 100.0);
+    }
+
+    #[test]
+    fn rpc_breakdown_matches_fig10() {
+        let b = AreaModel::rpc_interface(8 * 1024, 8 * 1024);
+        let small = b.frac("manager") + b.frac("cmd_timing_fsm") + b.frac("phy");
+        assert!((small - 0.01).abs() < 0.006, "mgr+FSM+PHY ≈1% ({:.2}%)", small * 100.0);
+        let kge: f64 = b
+            .entries
+            .iter()
+            .filter(|e| matches!(e.name, "manager" | "cmd_timing_fsm" | "phy"))
+            .map(|e| e.kge)
+            .sum();
+        assert!((kge - 3.5).abs() < 0.01, "PHY+FSMs+manager = 3.5 kGE");
+        // buffers dominate
+        assert!(b.frac("axi_buffer") > 0.4);
+    }
+
+    #[test]
+    fn ddr3_comparison_ratio() {
+        let rpc = AreaModel::rpc_interface(8 * 1024, 8 * 1024).total();
+        let ratio = rpc / AreaModel::ddr3_controller_kge();
+        assert!((ratio - 0.063).abs() < 0.01, "controller ≈6.3% of DDR3 ctrl, got {:.3}", ratio);
+    }
+
+    #[test]
+    fn buffer_sizing_ablation_shrinks_controller() {
+        let neo = AreaModel::rpc_interface(8 * 1024, 8 * 1024).total();
+        let lean = AreaModel::rpc_interface(2 * 1024, 2 * 1024).total();
+        assert!(lean < 0.8 * neo, "right-sizing buffers reclaims real area");
+    }
+}

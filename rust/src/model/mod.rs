@@ -1,0 +1,16 @@
+//! Silicon models: area (kGE) and power (event-energy), calibrated to
+//! Neo's TSMC 65 nm implementation (paper §III-C, Figs. 9–11).
+//!
+//! The simulator counts architectural events ([`crate::sim::Stats`]);
+//! these models translate them into the paper's reported quantities. The
+//! *absolute* constants are calibrated against the paper's anchors (Neo
+//! total power envelope, 250 pJ/B, component percentages); the *scaling
+//! laws* (crossbar ~ ports², buffers ~ bits, power ~ events × f) are
+//! structural and carry the reproduced trends.
+
+pub mod area;
+pub mod power;
+pub mod benchkit;
+
+pub use area::{AreaModel, Breakdown};
+pub use power::{PowerModel, PowerReport};

@@ -1,0 +1,27 @@
+//! Optional IO peripherals (paper §II-A, Fig. 1).
+//!
+//! "Cheshire provides various optional peripherals … a UART for serial
+//! communication, a GPIO module, and I2C and SPI hosts to access external
+//! peripherals … a VGA controller for display output … All peripherals
+//! seamlessly integrate through AXI4 or Regbus interfaces and provide
+//! well-established feature sets for full compatibility with existing
+//! Linux drivers."
+//!
+//! Each peripheral implements [`crate::axi::regbus::RegDevice`] and hangs
+//! off the Regbus demux, exactly like the real design.
+
+pub mod uart;
+pub mod spi;
+pub mod i2c;
+pub mod gpio;
+pub mod vga;
+pub mod bootrom;
+pub mod soc_ctrl;
+
+pub use bootrom::{build_bootrom, gpt, SpiFlash};
+pub use gpio::Gpio;
+pub use i2c::I2cEeprom;
+pub use soc_ctrl::SocCtrl;
+pub use spi::SpiHost;
+pub use uart::Uart;
+pub use vga::Vga;

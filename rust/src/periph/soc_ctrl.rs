@@ -1,0 +1,86 @@
+//! SoC control port (paper §II-A).
+//!
+//! "An additional SoC control port connects to Cheshire-external on-chip
+//! devices essential for operation, such as clock generators, IO
+//! multiplexers, or clock and power domain controllers."
+//!
+//! Register map: 0x00 CHIP_ID (RO), 0x04 BOOT_MODE, 0x08 FLL_MULT (system
+//! clock = 32 kHz ref × mult), 0x0c SCRATCH0 (boot entry point lo),
+//! 0x10 SCRATCH1 (hi), 0x14 BOOT_DONE flag, 0x18 IOMUX.
+
+use crate::axi::regbus::RegDevice;
+
+/// Boot modes (mirrors Cheshire's boot-source straps).
+pub const BOOT_JTAG_PRELOAD: u32 = 0;
+pub const BOOT_SPI_FLASH: u32 = 1;
+pub const BOOT_I2C_EEPROM: u32 = 2;
+pub const BOOT_SD_GPT: u32 = 3;
+
+pub struct SocCtrl {
+    pub boot_mode: u32,
+    pub fll_mult: u32,
+    pub scratch: [u32; 2],
+    pub boot_done: u32,
+    pub iomux: u32,
+}
+
+impl SocCtrl {
+    pub fn new(boot_mode: u32) -> Self {
+        // 32 kHz × 6104 ≈ 200 MHz (Neo locks its FLL from a 32 kHz ref)
+        Self { boot_mode, fll_mult: 6104, scratch: [0; 2], boot_done: 0, iomux: 0 }
+    }
+
+    pub fn sys_freq_hz(&self) -> f64 {
+        32_768.0 * self.fll_mult as f64
+    }
+}
+
+impl RegDevice for SocCtrl {
+    fn reg_read(&mut self, off: u64) -> Result<u32, ()> {
+        Ok(match off {
+            0x00 => 0x0c5e_0001, // "CHE" chip id, v1
+            0x04 => self.boot_mode,
+            0x08 => self.fll_mult,
+            0x0c => self.scratch[0],
+            0x10 => self.scratch[1],
+            0x14 => self.boot_done,
+            0x18 => self.iomux,
+            _ => return Err(()),
+        })
+    }
+
+    fn reg_write(&mut self, off: u64, v: u32) -> Result<(), ()> {
+        match off {
+            0x04 => self.boot_mode = v,
+            0x08 => self.fll_mult = v.max(1),
+            0x0c => self.scratch[0] = v,
+            0x10 => self.scratch[1] = v,
+            0x14 => self.boot_done = v,
+            0x18 => self.iomux = v,
+            _ => return Err(()),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fll_mult_sets_frequency() {
+        let mut s = SocCtrl::new(BOOT_JTAG_PRELOAD);
+        assert!((s.sys_freq_hz() - 200.0e6).abs() < 0.5e6, "default ≈200 MHz");
+        s.reg_write(0x08, 9918).unwrap();
+        assert!((s.sys_freq_hz() - 325.0e6).abs() < 0.5e6, "max spec ≈325 MHz");
+    }
+
+    #[test]
+    fn scratch_carries_entry_point() {
+        let mut s = SocCtrl::new(BOOT_SPI_FLASH);
+        s.reg_write(0x0c, 0x8000_0000u32 as u32).unwrap();
+        s.reg_write(0x10, 0).unwrap();
+        assert_eq!(s.reg_read(0x0c).unwrap(), 0x8000_0000);
+        assert_eq!(s.reg_read(0x04).unwrap(), BOOT_SPI_FLASH);
+    }
+}

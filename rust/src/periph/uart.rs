@@ -1,0 +1,124 @@
+//! UART (16550-style subset).
+//!
+//! Register map (word offsets): 0x00 THR/RBR, 0x04 IER, 0x08 LSR,
+//! 0x0c baud divisor. Transmission takes `10 × divisor` cycles per frame
+//! (8N1), so back-to-back prints exercise the LSR polling loop real
+//! firmware uses. Output is captured in `tx_log` for tests/examples
+//! ("user interaction may happen through UART", §III-A).
+
+use crate::axi::regbus::RegDevice;
+use crate::sim::Stats;
+use std::collections::VecDeque;
+
+pub struct Uart {
+    /// Captured transmitted bytes.
+    pub tx_log: Vec<u8>,
+    /// Host-injected receive queue.
+    pub rx_fifo: VecDeque<u8>,
+    shifting: Option<(u8, u32)>,
+    pub divisor: u32,
+    ier: u32,
+}
+
+const LSR_DR: u32 = 1 << 0; // data ready
+const LSR_THRE: u32 = 1 << 5; // transmitter holding register empty
+
+impl Uart {
+    pub fn new() -> Self {
+        Self { tx_log: Vec::new(), rx_fifo: VecDeque::new(), shifting: None, divisor: 16, ier: 0 }
+    }
+
+    pub fn tx_string(&self) -> String {
+        String::from_utf8_lossy(&self.tx_log).into_owned()
+    }
+}
+
+impl Default for Uart {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RegDevice for Uart {
+    fn reg_read(&mut self, off: u64) -> Result<u32, ()> {
+        Ok(match off {
+            0x00 => self.rx_fifo.pop_front().unwrap_or(0) as u32,
+            0x04 => self.ier,
+            0x08 => {
+                let mut v = 0;
+                if !self.rx_fifo.is_empty() {
+                    v |= LSR_DR;
+                }
+                if self.shifting.is_none() {
+                    v |= LSR_THRE;
+                }
+                v
+            }
+            0x0c => self.divisor,
+            _ => return Err(()),
+        })
+    }
+
+    fn reg_write(&mut self, off: u64, v: u32) -> Result<(), ()> {
+        match off {
+            0x00 => {
+                if self.shifting.is_some() {
+                    // overrun: real UARTs drop/garble; we drop
+                    return Ok(());
+                }
+                self.shifting = Some((v as u8, 10 * self.divisor));
+            }
+            0x04 => self.ier = v,
+            0x0c => self.divisor = v.max(1),
+            _ => return Err(()),
+        }
+        Ok(())
+    }
+
+    fn tick(&mut self, stats: &mut Stats) {
+        if let Some((byte, n)) = self.shifting {
+            if n <= 1 {
+                self.tx_log.push(byte);
+                self.shifting = None;
+                stats.bump("uart.tx_bytes");
+            } else {
+                self.shifting = Some((byte, n - 1));
+            }
+        }
+    }
+
+    fn irq(&self) -> bool {
+        (self.ier & 1 != 0) && !self.rx_fifo.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transmits_after_frame_time() {
+        let mut u = Uart::new();
+        let mut s = Stats::new();
+        u.reg_write(0x0c, 2).unwrap();
+        u.reg_write(0x00, b'A' as u32).unwrap();
+        assert_eq!(u.reg_read(0x08).unwrap() & LSR_THRE, 0, "busy while shifting");
+        for _ in 0..20 {
+            u.tick(&mut s);
+        }
+        assert_eq!(u.tx_log, b"A");
+        assert_ne!(u.reg_read(0x08).unwrap() & LSR_THRE, 0);
+    }
+
+    #[test]
+    fn rx_and_irq() {
+        let mut u = Uart::new();
+        u.rx_fifo.push_back(b'x');
+        assert!(!u.irq(), "irq masked by default");
+        u.reg_write(0x04, 1).unwrap();
+        assert!(u.irq());
+        assert_eq!(u.reg_read(0x08).unwrap() & LSR_DR, LSR_DR);
+        assert_eq!(u.reg_read(0x00).unwrap(), b'x' as u32);
+        assert!(!u.irq());
+    }
+}

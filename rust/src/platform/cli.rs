@@ -1,0 +1,90 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! and subcommands — enough for the `cheshire` launcher and the bench
+//! binaries.
+
+use std::collections::HashMap;
+
+/// Parsed arguments: subcommand, options, positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: HashMap<String, String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (not including argv[0]).
+    /// `flags` lists boolean options that never consume a value.
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I, subcommands: &[&str], flags: &[&str]) -> Self {
+        let mut a = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if flags.contains(&key) {
+                    a.options.insert(key.to_string(), "true".to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    a.options.insert(key.to_string(), v);
+                } else {
+                    a.options.insert(key.to_string(), "true".to_string());
+                }
+            } else if a.subcommand.is_none() && subcommands.contains(&arg.as_str()) {
+                a.subcommand = Some(arg);
+            } else {
+                a.positionals.push(arg);
+            }
+        }
+        a
+    }
+
+    pub fn from_env(subcommands: &[&str], flags: &[&str]) -> Self {
+        Self::parse(std::env::args().skip(1), subcommands, flags)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), &["run", "bench"], &["fast"])
+    }
+
+    #[test]
+    fn parses_subcommand_options_positionals() {
+        let a = parse(&["run", "--freq", "325", "--fast", "prog.bin", "--n=64"]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("freq"), Some("325"));
+        assert_eq!(a.get_u64("n", 0), 64);
+        assert!(a.flag("fast"));
+        assert_eq!(a.positionals, vec!["prog.bin"]);
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let a = parse(&["bench"]);
+        assert_eq!(a.get_u64("iters", 7), 7);
+        assert_eq!(a.get_f64("x", 1.5), 1.5);
+        assert!(!a.flag("fast"));
+    }
+}

@@ -1,0 +1,295 @@
+//! Platform configuration + a minimal TOML-subset loader.
+//!
+//! The paper's configurability claims map 1:1 onto [`CheshireConfig`]:
+//! "The crossbar's address width, data width, and the number of AXI4 DSA
+//! manager and subordinate ports are configurable", the LLC is sized and
+//! way-partitioned, the RPC frontend buffers are sized, peripherals are
+//! optional. Presets ship as TOML files under `configs/` (parsed by the
+//! in-tree subset parser — the full `toml` crate is unavailable offline).
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheshireConfig {
+    /// System clock in Hz (Neo: 200 MHz nominal, 325 MHz max).
+    pub freq_hz: f64,
+    /// Crossbar data width in bytes / address bits.
+    pub data_bytes: usize,
+    pub addr_bits: u32,
+    /// DSA manager/subordinate port pairs on the crossbar (Neo: 0).
+    pub dsa_port_pairs: usize,
+    /// CVA6 L1 caches.
+    pub icache_bytes: usize,
+    pub dcache_bytes: usize,
+    pub l1_ways: usize,
+    /// LLC geometry + initial SPM way mask.
+    pub llc_bytes: usize,
+    pub llc_ways: usize,
+    pub spm_way_mask: u32,
+    /// RPC frontend buffers.
+    pub rpc_rd_buf: usize,
+    pub rpc_wr_buf: usize,
+    /// External DRAM size.
+    pub dram_bytes: usize,
+    /// Optional peripherals.
+    pub uart: bool,
+    pub spi: bool,
+    pub i2c: bool,
+    pub gpio: bool,
+    pub vga: bool,
+    /// Boot mode (see `periph::soc_ctrl`).
+    pub boot_mode: u32,
+}
+
+impl CheshireConfig {
+    /// Neo, the silicon demonstrator (paper §III-A).
+    pub fn neo() -> Self {
+        Self {
+            freq_hz: 200.0e6,
+            data_bytes: 8,
+            addr_bits: 48,
+            dsa_port_pairs: 0,
+            icache_bytes: 32 * 1024,
+            dcache_bytes: 32 * 1024,
+            l1_ways: 8,
+            llc_bytes: 128 * 1024,
+            llc_ways: 8,
+            spm_way_mask: 0xff,
+            rpc_rd_buf: 8 * 1024,
+            rpc_wr_buf: 8 * 1024,
+            dram_bytes: 32 * 1024 * 1024,
+            uart: true,
+            spi: true,
+            i2c: true,
+            gpio: true,
+            vga: true,
+            boot_mode: 0,
+        }
+    }
+
+    /// Genesys-II FPGA profile (slower clock, same architecture).
+    pub fn fpga() -> Self {
+        Self { freq_hz: 50.0e6, ..Self::neo() }
+    }
+
+    /// Neo plus `n` DSA port pairs (heterogeneous plug-in experiments).
+    pub fn with_dsa(n: usize) -> Self {
+        Self { dsa_port_pairs: n, ..Self::neo() }
+    }
+
+    /// Load from the TOML subset: `key = value` lines under `[platform]`,
+    /// `[llc]`, `[rpc]`, `[periph]` sections.
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        let kv = parse_toml(text)?;
+        let mut c = Self::neo();
+        let get_u = |k: &str| kv.get(k).and_then(|v| v.as_u64());
+        let get_b = |k: &str| kv.get(k).and_then(|v| v.as_bool());
+        if let Some(v) = kv.get("platform.freq_mhz").and_then(|v| v.as_f64()) {
+            c.freq_hz = v * 1e6;
+        }
+        if let Some(v) = get_u("platform.data_bytes") {
+            c.data_bytes = v as usize;
+        }
+        if let Some(v) = get_u("platform.addr_bits") {
+            c.addr_bits = v as u32;
+        }
+        if let Some(v) = get_u("platform.dsa_port_pairs") {
+            c.dsa_port_pairs = v as usize;
+        }
+        if let Some(v) = get_u("platform.icache_kib") {
+            c.icache_bytes = v as usize * 1024;
+        }
+        if let Some(v) = get_u("platform.dcache_kib") {
+            c.dcache_bytes = v as usize * 1024;
+        }
+        if let Some(v) = get_u("platform.dram_mib") {
+            c.dram_bytes = v as usize * 1024 * 1024;
+        }
+        if let Some(v) = get_u("llc.size_kib") {
+            c.llc_bytes = v as usize * 1024;
+        }
+        if let Some(v) = get_u("llc.ways") {
+            c.llc_ways = v as usize;
+        }
+        if let Some(v) = get_u("llc.spm_way_mask") {
+            c.spm_way_mask = v as u32;
+        }
+        if let Some(v) = get_u("rpc.rd_buf_kib") {
+            c.rpc_rd_buf = v as usize * 1024;
+        }
+        if let Some(v) = get_u("rpc.wr_buf_kib") {
+            c.rpc_wr_buf = v as usize * 1024;
+        }
+        for (flag, field) in [("periph.uart", 0), ("periph.spi", 1), ("periph.i2c", 2), ("periph.gpio", 3), ("periph.vga", 4)] {
+            if let Some(v) = get_b(flag) {
+                match field {
+                    0 => c.uart = v,
+                    1 => c.spi = v,
+                    2 => c.i2c = v,
+                    3 => c.gpio = v,
+                    _ => c.vga = v,
+                }
+            }
+        }
+        if let Some(v) = get_u("platform.boot_mode") {
+            c.boot_mode = v as u32;
+        }
+        Ok(c)
+    }
+}
+
+/// A parsed TOML-subset value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl Value {
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Parse the TOML subset: `[section]` headers, `key = value` pairs,
+/// `#` comments, integers (with `_` separators and `0x` prefix), floats,
+/// booleans, double-quoted strings. Keys are returned as `section.key`.
+pub fn parse_toml(text: &str) -> Result<HashMap<String, Value>, String> {
+    let mut out = HashMap::new();
+    let mut section = String::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            section = name.trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", ln + 1))?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        let v = v.trim();
+        let val = if v == "true" {
+            Value::Bool(true)
+        } else if v == "false" {
+            Value::Bool(false)
+        } else if let Some(s) = v.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+            Value::Str(s.to_string())
+        } else if let Some(hex) = v.strip_prefix("0x") {
+            Value::Int(
+                i64::from_str_radix(&hex.replace('_', ""), 16)
+                    .map_err(|e| format!("line {}: {e}", ln + 1))?,
+            )
+        } else if v.contains('.') {
+            Value::Float(v.parse().map_err(|e| format!("line {}: {e}", ln + 1))?)
+        } else {
+            Value::Int(
+                v.replace('_', "")
+                    .parse()
+                    .map_err(|e| format!("line {}: bad value {v:?}: {e}", ln + 1))?,
+            )
+        };
+        out.insert(key, val);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_comments_and_types() {
+        let t = r#"
+            # a comment
+            top = 1
+            [platform]
+            freq_mhz = 200.0
+            data_bytes = 8          # trailing comment
+            mask = 0xff
+            big = 1_000_000
+            [periph]
+            vga = false
+            name = "neo"
+        "#;
+        let kv = parse_toml(t).unwrap();
+        assert_eq!(kv["top"], Value::Int(1));
+        assert_eq!(kv["platform.freq_mhz"], Value::Float(200.0));
+        assert_eq!(kv["platform.mask"], Value::Int(0xff));
+        assert_eq!(kv["platform.big"], Value::Int(1_000_000));
+        assert_eq!(kv["periph.vga"], Value::Bool(false));
+        assert_eq!(kv["periph.name"].as_str(), Some("neo"));
+    }
+
+    #[test]
+    fn bad_lines_error_with_location() {
+        assert!(parse_toml("nonsense").is_err());
+        assert!(parse_toml("[s]\nx = zzz").is_err());
+    }
+
+    #[test]
+    fn config_roundtrip_from_toml() {
+        let t = r#"
+            [platform]
+            freq_mhz = 325
+            dsa_port_pairs = 2
+            dram_mib = 32
+            [llc]
+            size_kib = 128
+            spm_way_mask = 0x0f
+            [rpc]
+            rd_buf_kib = 4
+            wr_buf_kib = 4
+            [periph]
+            vga = false
+        "#;
+        let c = CheshireConfig::from_toml(t).unwrap();
+        assert_eq!(c.freq_hz, 325.0e6);
+        assert_eq!(c.dsa_port_pairs, 2);
+        assert_eq!(c.spm_way_mask, 0x0f);
+        assert_eq!(c.rpc_rd_buf, 4096);
+        assert!(!c.vga);
+        assert!(c.uart, "unspecified fields keep Neo defaults");
+    }
+
+    #[test]
+    fn neo_preset_matches_paper() {
+        let c = CheshireConfig::neo();
+        assert_eq!(c.llc_bytes, 128 * 1024);
+        assert_eq!(c.icache_bytes, 32 * 1024);
+        assert_eq!(c.data_bytes, 8);
+        assert_eq!(c.addr_bits, 48);
+        assert_eq!(c.dsa_port_pairs, 0);
+        assert_eq!(c.rpc_rd_buf, 8 * 1024);
+    }
+}

@@ -1,0 +1,58 @@
+//! The Cheshire memory map (mirrors the open-source project's layout).
+
+/// Boot ROM (execute-in-place, read-only).
+pub const BOOTROM_BASE: u64 = 0x0100_0000;
+pub const BOOTROM_SIZE: u64 = 0x0004_0000;
+
+/// CLINT (core-local interruptor).
+pub const CLINT_BASE: u64 = 0x0204_0000;
+pub const CLINT_SIZE: u64 = 0x0001_0000;
+
+/// Regbus peripheral window.
+pub const SOC_CTRL_BASE: u64 = 0x0300_0000;
+pub const DMA_BASE: u64 = 0x0300_1000;
+pub const UART_BASE: u64 = 0x0300_2000;
+pub const I2C_BASE: u64 = 0x0300_3000;
+pub const SPI_BASE: u64 = 0x0300_4000;
+pub const GPIO_BASE: u64 = 0x0300_5000;
+pub const LLC_CFG_BASE: u64 = 0x0300_6000;
+pub const VGA_BASE: u64 = 0x0300_7000;
+pub const RPC_MGR_BASE: u64 = 0x0300_8000;
+pub const PERIPH_WIN_SIZE: u64 = 0x1000;
+
+/// PLIC.
+pub const PLIC_BASE: u64 = 0x0c00_0000;
+pub const PLIC_SIZE: u64 = 0x0040_0000;
+
+/// DSA subordinate windows (one per port pair).
+pub const DSA_BASE: u64 = 0x6000_0000;
+pub const DSA_WIN_SIZE: u64 = 0x0100_0000;
+
+/// LLC scratchpad window.
+pub const SPM_BASE: u64 = 0x7000_0000;
+
+/// External RPC DRAM.
+pub const DRAM_BASE: u64 = 0x8000_0000;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windows_do_not_overlap() {
+        let wins = [
+            (BOOTROM_BASE, BOOTROM_SIZE),
+            (CLINT_BASE, CLINT_SIZE),
+            (SOC_CTRL_BASE, 9 * PERIPH_WIN_SIZE),
+            (PLIC_BASE, PLIC_SIZE),
+            (DSA_BASE, 8 * DSA_WIN_SIZE),
+            (SPM_BASE, 128 * 1024),
+            (DRAM_BASE, 32 * 1024 * 1024),
+        ];
+        for (i, &(b1, s1)) in wins.iter().enumerate() {
+            for &(b2, s2) in wins.iter().skip(i + 1) {
+                assert!(b1 + s1 <= b2 || b2 + s2 <= b1, "windows {b1:#x}+{s1:#x} and {b2:#x}+{s2:#x} overlap");
+            }
+        }
+    }
+}

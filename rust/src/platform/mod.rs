@@ -1,0 +1,15 @@
+//! Platform assembly: configuration, memory map, SoC wiring, CLI.
+//!
+//! [`Soc`] instantiates and wires every block of Fig. 1 per a
+//! [`config::CheshireConfig`] — the same struct the area model consumes,
+//! so a configuration *is* an experiment specification. Presets mirror
+//! the paper's instances: [`config::CheshireConfig::neo`] (the 65 nm
+//! demonstrator) and an FPGA-like profile (Genesys II).
+
+pub mod config;
+pub mod memmap;
+pub mod soc;
+pub mod cli;
+
+pub use config::CheshireConfig;
+pub use soc::Soc;

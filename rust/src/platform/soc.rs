@@ -1,0 +1,424 @@
+//! The assembled Cheshire SoC (paper Fig. 1).
+//!
+//! Wires CVA6, the DMA engine, the VGA scanout, and any DSA plug-ins as
+//! crossbar managers; the LLC→RPC-DRAM path, boot ROM, Regbus bridge and
+//! DSA windows as subordinates. One [`Soc::tick`] advances the entire
+//! platform a clock cycle in a fixed, deterministic order.
+
+use crate::axi::memsub::MemSub;
+use crate::axi::port::{axi_bus, AxiBus};
+use crate::axi::regbus::{Axi2Reg, RegDemux, RegDevice, RegMapEntry};
+use crate::axi::xbar::{AddrRange, Xbar, XbarCfg};
+use crate::cache::llc::{Llc, LlcCfg, LlcRegs, WayMask};
+use crate::cpu::{Cva6, Cva6Cfg};
+use crate::dma::{DmaEngine, DmaRegs, SharedDma};
+use crate::dsa::DsaPlugin;
+use crate::irq::{Clint, Plic};
+use crate::periph::soc_ctrl::SocCtrl;
+use crate::periph::uart::Uart;
+use crate::periph::vga::{Vga, VgaScanout};
+use crate::periph::{build_bootrom, Gpio, I2cEeprom, SpiHost};
+use crate::platform::config::CheshireConfig;
+use crate::platform::memmap::*;
+use crate::rpc::manager::ManagerRegs;
+use crate::rpc::RpcSubsystem;
+use crate::sim::{Clock, Cycle, Stats};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+type Shared<T> = Rc<RefCell<T>>;
+
+pub struct Soc {
+    pub cfg: CheshireConfig,
+    pub clock: Clock,
+    pub stats: Stats,
+
+    // managers
+    pub cpu: Cva6,
+    cpu_bus: AxiBus,
+    pub dma: DmaEngine,
+    pub dma_state: SharedDma,
+    dma_bus: AxiBus,
+    vga_scan: VgaScanout,
+    vga_bus: AxiBus,
+    dbg_bus: AxiBus,
+    dsa: Vec<Option<Box<dyn DsaPlugin>>>,
+    dsa_mgr_bus: Vec<AxiBus>,
+    dsa_sub_bus: Vec<AxiBus>,
+
+    // fabric
+    xbar: Xbar,
+
+    // subordinates
+    pub llc: Llc,
+    pub llc_mask: WayMask,
+    llc_sub_bus: AxiBus,
+    llc_mgr_bus: AxiBus,
+    pub rpc: RpcSubsystem,
+    bootrom: MemSub,
+    bootrom_bus: AxiBus,
+    bridge: Axi2Reg,
+    pub regbus: RegDemux,
+    bridge_bus: AxiBus,
+
+    // shared peripheral handles
+    pub clint: Shared<Clint>,
+    pub plic: Shared<Plic>,
+    pub uart: Shared<Uart>,
+    pub spi: Shared<SpiHost>,
+    pub i2c: Shared<I2cEeprom>,
+    pub gpio: Shared<Gpio>,
+    pub soc_ctrl: Shared<SocCtrl>,
+}
+
+impl Soc {
+    pub fn new(cfg: CheshireConfig) -> Self {
+        let stats = Stats::new();
+        let clock = Clock::new(cfg.freq_hz);
+
+        // --- manager-side buses ---
+        let cpu_bus = axi_bus(4);
+        let dma_bus = axi_bus(8);
+        let vga_bus = axi_bus(4);
+        let dbg_bus = axi_bus(4); // debug-module system-bus-access port
+        let dsa_mgr_bus: Vec<AxiBus> = (0..cfg.dsa_port_pairs).map(|_| axi_bus(4)).collect();
+
+        // --- subordinate-side buses ---
+        let llc_sub_bus = axi_bus(8);
+        let bootrom_bus = axi_bus(4);
+        let bridge_bus = axi_bus(4);
+        let dsa_sub_bus: Vec<AxiBus> = (0..cfg.dsa_port_pairs).map(|_| axi_bus(4)).collect();
+
+        // --- address map ---
+        // subordinate indices: 0 = LLC (SPM + DRAM), 1 = bootrom, 2 = regbus
+        // bridge, 3.. = DSA windows.
+        let mut map = vec![
+            AddrRange { base: SPM_BASE, size: cfg.llc_bytes as u64, sub: 0 },
+            AddrRange { base: DRAM_BASE, size: cfg.dram_bytes as u64, sub: 0 },
+            AddrRange { base: BOOTROM_BASE, size: BOOTROM_SIZE, sub: 1 },
+            AddrRange { base: SOC_CTRL_BASE, size: 9 * PERIPH_WIN_SIZE, sub: 2 },
+            AddrRange { base: CLINT_BASE, size: CLINT_SIZE, sub: 2 },
+            AddrRange { base: PLIC_BASE, size: PLIC_SIZE, sub: 2 },
+        ];
+        for i in 0..cfg.dsa_port_pairs {
+            map.push(AddrRange {
+                base: DSA_BASE + (i as u64) * DSA_WIN_SIZE,
+                size: DSA_WIN_SIZE,
+                sub: 3 + i,
+            });
+        }
+
+        let mut mgr_ports = vec![cpu_bus.clone(), dma_bus.clone(), vga_bus.clone(), dbg_bus.clone()];
+        mgr_ports.extend(dsa_mgr_bus.iter().cloned());
+        let mut sub_ports = vec![llc_sub_bus.clone(), bootrom_bus.clone(), bridge_bus.clone()];
+        sub_ports.extend(dsa_sub_bus.iter().cloned());
+
+        let xbar = Xbar::new(
+            XbarCfg {
+                data_bytes: cfg.data_bytes,
+                addr_bits: cfg.addr_bits,
+                n_managers: mgr_ports.len(),
+                n_subordinates: sub_ports.len(),
+            },
+            mgr_ports,
+            sub_ports,
+            map,
+        );
+
+        // --- LLC + RPC DRAM ---
+        let (llc, llc_mask) = Llc::new(LlcCfg {
+            size: cfg.llc_bytes,
+            ways: cfg.llc_ways,
+            spm_base: SPM_BASE,
+            dram_base: DRAM_BASE,
+            dram_size: cfg.dram_bytes as u64,
+            spm_way_mask: cfg.spm_way_mask,
+        });
+        let llc_mgr_bus = axi_bus(16);
+        let mut rpc = RpcSubsystem::neo(DRAM_BASE);
+        rpc.frontend = crate::rpc::Frontend::new(DRAM_BASE, cfg.rpc_rd_buf, cfg.rpc_wr_buf);
+
+        // --- boot ROM ---
+        let mut bootrom = MemSub::new(BOOTROM_BASE, BOOTROM_SIZE as usize, cfg.data_bytes, 1);
+        bootrom.read_only = true;
+        let rom_img = build_bootrom(BOOTROM_BASE, SOC_CTRL_BASE);
+        {
+            let ro = &mut bootrom;
+            ro.read_only = false;
+            ro.preload(0, &rom_img);
+            ro.read_only = true;
+        }
+
+        // --- peripherals on the Regbus ---
+        let (dma, dma_state) = DmaEngine::new();
+        let (vga_scan, vga_state) = VgaScanout::new();
+        let clint: Shared<Clint> = Rc::new(RefCell::new(Clint::new()));
+        let (plic_raw, _lines) = Plic::new(8);
+        let plic: Shared<Plic> = Rc::new(RefCell::new(plic_raw));
+        let uart: Shared<Uart> = Rc::new(RefCell::new(Uart::new()));
+        let spi: Shared<SpiHost> = Rc::new(RefCell::new(SpiHost::new(Vec::new())));
+        let i2c: Shared<I2cEeprom> = Rc::new(RefCell::new(I2cEeprom::new(vec![0xff; 64 * 1024])));
+        let gpio: Shared<Gpio> = Rc::new(RefCell::new(Gpio::new()));
+        let soc_ctrl: Shared<SocCtrl> = Rc::new(RefCell::new(SocCtrl::new(cfg.boot_mode)));
+
+        let mut entries = vec![
+            RegMapEntry { base: SOC_CTRL_BASE, size: PERIPH_WIN_SIZE, dev: Box::new(soc_ctrl.clone()) as Box<_> },
+            RegMapEntry { base: DMA_BASE, size: PERIPH_WIN_SIZE, dev: Box::new(DmaRegs::new(dma_state.clone())) },
+            RegMapEntry { base: LLC_CFG_BASE, size: PERIPH_WIN_SIZE, dev: Box::new(LlcRegs::new(llc_mask.clone(), &llc.cfg)) },
+            RegMapEntry { base: RPC_MGR_BASE, size: PERIPH_WIN_SIZE, dev: Box::new(ManagerRegs::new(rpc.ctrl.timing_handle())) },
+            RegMapEntry { base: CLINT_BASE, size: CLINT_SIZE, dev: Box::new(clint.clone()) },
+            RegMapEntry { base: PLIC_BASE, size: PLIC_SIZE, dev: Box::new(plic.clone()) },
+        ];
+        if cfg.uart {
+            entries.push(RegMapEntry { base: UART_BASE, size: PERIPH_WIN_SIZE, dev: Box::new(uart.clone()) });
+        }
+        if cfg.spi {
+            entries.push(RegMapEntry { base: SPI_BASE, size: PERIPH_WIN_SIZE, dev: Box::new(spi.clone()) });
+        }
+        if cfg.i2c {
+            entries.push(RegMapEntry { base: I2C_BASE, size: PERIPH_WIN_SIZE, dev: Box::new(i2c.clone()) });
+        }
+        if cfg.gpio {
+            entries.push(RegMapEntry { base: GPIO_BASE, size: PERIPH_WIN_SIZE, dev: Box::new(gpio.clone()) });
+        }
+        if cfg.vga {
+            entries.push(RegMapEntry { base: VGA_BASE, size: PERIPH_WIN_SIZE, dev: Box::new(Vga::new(vga_state)) });
+        }
+        let regbus = RegDemux::new(entries);
+
+        // --- CPU ---
+        let mut cva6_cfg = Cva6Cfg::neo(BOOTROM_BASE);
+        cva6_cfg.icache_bytes = cfg.icache_bytes;
+        cva6_cfg.dcache_bytes = cfg.dcache_bytes;
+        cva6_cfg.ways = cfg.l1_ways;
+        cva6_cfg.cacheable = vec![
+            (BOOTROM_BASE, BOOTROM_SIZE),
+            (SPM_BASE, cfg.llc_bytes as u64),
+            (DRAM_BASE, cfg.dram_bytes as u64),
+        ];
+        let cpu = Cva6::new(cva6_cfg);
+
+        let n_dsa = cfg.dsa_port_pairs;
+        Self {
+            cfg,
+            clock,
+            stats,
+            cpu,
+            cpu_bus,
+            dma,
+            dma_state,
+            dma_bus,
+            vga_scan,
+            vga_bus,
+            dbg_bus,
+            dsa: (0..n_dsa).map(|_| None).collect(),
+            dsa_mgr_bus,
+            dsa_sub_bus,
+            xbar,
+            llc,
+            llc_mask,
+            llc_sub_bus,
+            llc_mgr_bus,
+            rpc,
+            bootrom,
+            bootrom_bus,
+            bridge: Axi2Reg::new(),
+            regbus,
+            bridge_bus,
+            clint,
+            plic,
+            uart,
+            spi,
+            i2c,
+            gpio,
+            soc_ctrl,
+        }
+    }
+
+    /// Attach a DSA plug-in to port pair `idx`.
+    pub fn plug_dsa(&mut self, idx: usize, dsa: Box<dyn DsaPlugin>) {
+        assert!(idx < self.cfg.dsa_port_pairs, "no such DSA port pair");
+        self.dsa[idx] = Some(dsa);
+    }
+
+    pub fn dsa_mut(&mut self, idx: usize) -> Option<&mut Box<dyn DsaPlugin>> {
+        self.dsa.get_mut(idx).and_then(|d| d.as_mut())
+    }
+
+    /// JTAG-style passive preload: image into DRAM, entry point into the
+    /// SoC-control scratch registers, BOOT_DONE raised.
+    pub fn preload(&mut self, image: &[u8], entry: u64) {
+        let off = (entry - DRAM_BASE) as usize;
+        self.rpc.dram_raw_mut()[off..off + image.len()].copy_from_slice(image);
+        let mut sc = self.soc_ctrl.borrow_mut();
+        sc.scratch[0] = entry as u32;
+        sc.scratch[1] = (entry >> 32) as u32;
+        sc.boot_done = 1;
+    }
+
+    /// Advance the platform one clock cycle.
+    pub fn tick(&mut self) {
+        let now: Cycle = self.clock.now();
+        let stats = &mut self.stats;
+
+        // managers
+        self.cpu.tick(&self.cpu_bus, stats);
+        self.dma.tick(&self.dma_bus, stats);
+        if self.cfg.vga {
+            self.vga_scan.tick(&self.vga_bus, stats);
+        }
+        for (i, d) in self.dsa.iter_mut().enumerate() {
+            if let Some(d) = d {
+                d.tick(&self.dsa_mgr_bus[i], &self.dsa_sub_bus[i], now, stats);
+            }
+        }
+
+        // fabric
+        self.xbar.tick(stats);
+
+        // subordinates
+        self.llc.tick(&self.llc_sub_bus, &self.llc_mgr_bus, stats);
+        self.rpc.tick(&self.llc_mgr_bus, now, stats);
+        self.bootrom.tick(&self.bootrom_bus, stats);
+        self.bridge.tick(&self.bridge_bus, &mut self.regbus, stats);
+
+        // drain debug-port responses (fire-and-forget writes)
+        while self.dbg_bus.b.borrow_mut().pop().is_some() {}
+        while self.dbg_bus.r.borrow_mut().pop().is_some() {}
+
+        // interrupt fabric: peripheral lines → PLIC, CLINT/PLIC → CPU
+        {
+            let mut plic = self.plic.borrow_mut();
+            {
+                let mut lines = plic.lines.borrow_mut();
+                lines[0] = self.uart.borrow().irq();
+                lines[1] = self.dma_state.borrow().irq;
+                lines[2] = self.gpio.borrow().irq();
+            }
+            plic.sample();
+            let clint = self.clint.borrow();
+            self.cpu.set_irqs(clint.msip, clint.mtip(), plic.meip());
+        }
+
+        self.clock.advance();
+    }
+
+    /// Run until the CPU halts (ebreak), up to `max_cycles`. Returns the
+    /// cycles consumed.
+    pub fn run(&mut self, max_cycles: u64) -> u64 {
+        let start = self.clock.now();
+        while !self.cpu.halted && self.clock.now() - start < max_cycles {
+            self.tick();
+        }
+        self.clock.now() - start
+    }
+
+    /// Run for exactly `n` cycles.
+    pub fn run_cycles(&mut self, n: u64) {
+        for _ in 0..n {
+            self.tick();
+        }
+    }
+
+    /// Direct SPM staging (debug-module path).
+    pub fn spm_write(&mut self, offset: usize, bytes: &[u8]) {
+        self.llc.spm_raw_mut()[offset..offset + bytes.len()].copy_from_slice(bytes);
+    }
+
+    pub fn spm_read(&self, offset: usize, len: usize) -> &[u8] {
+        &self.llc.spm_raw()[offset..offset + len]
+    }
+
+    /// Debug-module register write into a DSA window: a real single-beat
+    /// AXI write through the debug manager port and the crossbar (the
+    /// RISC-V debug module's system-bus-access path).
+    pub fn dsa_write_reg(&mut self, idx: usize, off: u64, val: u32) {
+        use crate::axi::types::{Aw, Burst, W};
+        let addr = DSA_BASE + (idx as u64) * DSA_WIN_SIZE + off;
+        let bus = &self.dbg_bus;
+        bus.aw.borrow_mut().push(Aw { id: 0x3d, addr, len: 0, size: 2, burst: Burst::Incr, qos: 0 });
+        let lane0 = (addr as usize) & 7 & !3;
+        let mut data = vec![0u8; 8];
+        data[lane0..lane0 + 4].copy_from_slice(&val.to_le_bytes());
+        bus.w.borrow_mut().push(W { data, strb: 0xf << lane0, last: true });
+    }
+
+    /// Direct DRAM staging.
+    pub fn dram_write(&mut self, offset: usize, bytes: &[u8]) {
+        self.rpc.dram_raw_mut()[offset..offset + bytes.len()].copy_from_slice(bytes);
+    }
+
+    pub fn dram_read(&self, offset: usize, len: usize) -> &[u8] {
+        &self.rpc.dram_raw()[offset..offset + len]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::{reg::*, Asm};
+
+    /// Boot the platform from the ROM: the stub must jump into a preloaded
+    /// DRAM payload which prints over the UART and halts.
+    #[test]
+    fn boots_from_rom_into_preloaded_payload() {
+        let mut soc = Soc::new(CheshireConfig::neo());
+        let mut a = Asm::new(DRAM_BASE);
+        a.li(S0, UART_BASE as i64);
+        for &c in b"hi" {
+            a.li(T0, c as i64);
+            a.sw(T0, S0, 0);
+            // poll LSR.THRE
+            a.label(&format!("poll_{c}"));
+            a.lw(T1, S0, 0x08);
+            a.andi(T1, T1, 0x20);
+            a.beq(T1, ZERO, &format!("poll_{c}"));
+        }
+        a.ebreak();
+        let img = a.finish();
+        soc.preload(&img, DRAM_BASE);
+        let cycles = soc.run(4_000_000);
+        assert!(soc.cpu.halted, "payload should halt (ran {cycles} cycles, pc={:#x})", soc.cpu.core.pc);
+        assert_eq!(soc.uart.borrow().tx_string(), "hi");
+        assert_eq!(soc.stats.get("rpc.dev_violations"), 0);
+    }
+
+    /// CPU programs the DMA over MMIO to copy SPM → DRAM, then checks data.
+    #[test]
+    fn cpu_drives_dma_copy() {
+        let mut soc = Soc::new(CheshireConfig::neo());
+        for i in 0..256usize {
+            soc.llc.spm_raw_mut()[i] = i as u8;
+        }
+        let mut a = Asm::new(DRAM_BASE);
+        a.li(S0, DMA_BASE as i64);
+        a.li(T0, SPM_BASE as i64);
+        a.sw(T0, S0, 0x00); // src lo
+        a.li(T0, (SPM_BASE >> 32) as i64);
+        a.sw(T0, S0, 0x04);
+        a.li(T0, (DRAM_BASE + 0x10000) as u32 as i64);
+        a.sw(T0, S0, 0x08);
+        a.li(T0, ((DRAM_BASE + 0x10000) >> 32) as i64);
+        a.sw(T0, S0, 0x0c);
+        a.li(T0, 256);
+        a.sw(T0, S0, 0x10); // len
+        a.li(T0, 1);
+        a.sw(T0, S0, 0x1c); // reps
+        a.li(T0, 256);
+        a.sw(T0, S0, 0x20); // max burst
+        a.li(T0, 1);
+        a.sw(T0, S0, 0x24); // launch
+        a.label("poll");
+        a.lw(T1, S0, 0x28);
+        a.andi(T1, T1, 0b10); // done
+        a.beq(T1, ZERO, "poll");
+        a.ebreak();
+        let img = a.finish();
+        soc.preload(&img, DRAM_BASE);
+        soc.run(4_000_000);
+        assert!(soc.cpu.halted, "pc={:#x}", soc.cpu.core.pc);
+        let got = soc.dram_read(0x10000, 256).to_vec();
+        assert_eq!(got, (0..=255u8).collect::<Vec<_>>());
+        assert_eq!(soc.stats.get("rpc.dev_violations"), 0);
+    }
+}

@@ -1,0 +1,97 @@
+//! Command FSM (paper Fig. 3): decomposes generic datapath commands into
+//! RPC DRAM command sequences.
+//!
+//! "For example, a generic datapath read is decomposed into 1) an activate
+//! of the corresponding bank and row, 2) a read of N consecutive RPC DRAM
+//! words, and 3) a precharge to close the bank and prepare it for the next
+//! access." The FSM also accepts *management* commands from the manager
+//! module (refresh, ZQ, init), which take priority between datapath
+//! transactions.
+
+use super::device::{DevCmd, WORDS_PER_ROW};
+use super::nsrrp::NsReq;
+
+/// Address decomposition: word address → (bank, row, col). The word
+/// address space is [bank | row | col] with 64 words (2 KiB) per row —
+/// `rows_per_bank` depends on device capacity (4096 for 32 MiB).
+pub fn map_addr(word_addr: u64, rows_per_bank: u64) -> (u8, u16, u8) {
+    let col = (word_addr % WORDS_PER_ROW) as u8;
+    let row = ((word_addr / WORDS_PER_ROW) % rows_per_bank) as u16;
+    let bank = ((word_addr / WORDS_PER_ROW / rows_per_bank) % 4) as u8;
+    (bank, row, col)
+}
+
+/// Decompose one NSRRP datapath request into the RPC command sequence.
+/// The frontend's 2 KiB splitter guarantees the burst stays in one page,
+/// so the sequence is always ACT → RD/WR → PRE (auto-close policy).
+pub fn decompose(req: &NsReq, rows_per_bank: u64) -> Vec<DevCmd> {
+    let (bank, row, col) = map_addr(req.word_addr, rows_per_bank);
+    debug_assert!(
+        col as u64 + req.n_words as u64 <= WORDS_PER_ROW,
+        "frontend splitter must keep fragments within one 2 KiB page"
+    );
+    let mut cmds = Vec::with_capacity(3);
+    cmds.push(DevCmd::Act { bank, row });
+    if req.write {
+        cmds.push(DevCmd::Wr {
+            bank,
+            col,
+            n: req.n_words as u8,
+            first_mask: req.first_mask,
+            last_mask: req.last_mask,
+        });
+    } else {
+        cmds.push(DevCmd::Rd { bank, col, n: req.n_words as u8 });
+    }
+    cmds.push(DevCmd::Pre { bank });
+    cmds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rpc::nsrrp::FULL_MASK;
+
+    const ROWS: u64 = 4096;
+
+    #[test]
+    fn address_mapping_is_bijective_on_samples() {
+        // (bank, row, col) → word_addr → same triple
+        for &(bank, row, col) in &[(0u8, 0u16, 0u8), (1, 17, 5), (3, 4095, 63), (2, 1000, 32)] {
+            let wa = ((bank as u64 * ROWS) + row as u64) * WORDS_PER_ROW + col as u64;
+            assert_eq!(map_addr(wa, ROWS), (bank, row, col));
+        }
+    }
+
+    #[test]
+    fn sequential_addresses_stay_in_row_until_page_end() {
+        let (b0, r0, c0) = map_addr(0, ROWS);
+        let (b1, r1, c1) = map_addr(63, ROWS);
+        assert_eq!((b0, r0), (b1, r1));
+        assert_eq!(c0, 0);
+        assert_eq!(c1, 63);
+        let (_, r2, c2) = map_addr(64, ROWS);
+        assert_eq!(r2, 1);
+        assert_eq!(c2, 0);
+    }
+
+    #[test]
+    fn read_decomposes_to_act_rd_pre() {
+        let req = NsReq { write: false, word_addr: 64 * 5 + 3, n_words: 4, first_mask: FULL_MASK, last_mask: FULL_MASK, tag: 0 };
+        let cmds = decompose(&req, ROWS);
+        assert_eq!(cmds.len(), 3);
+        assert!(matches!(cmds[0], DevCmd::Act { bank: 0, row: 5 }));
+        assert!(matches!(cmds[1], DevCmd::Rd { bank: 0, col: 3, n: 4 }));
+        assert!(matches!(cmds[2], DevCmd::Pre { bank: 0 }));
+    }
+
+    #[test]
+    fn write_carries_masks() {
+        let req = NsReq { write: true, word_addr: 0, n_words: 2, first_mask: 0xff, last_mask: 0xff00, tag: 0 };
+        let cmds = decompose(&req, ROWS);
+        assert!(matches!(
+            cmds[1],
+            DevCmd::Wr { first_mask: 0xff, last_mask: 0xff00, n: 2, .. }
+        ));
+    }
+}

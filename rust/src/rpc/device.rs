@@ -1,0 +1,318 @@
+//! RPC DRAM device model (Etron EM6GA16LBXA-class, 256 Mb / 32 MiB).
+//!
+//! Models the DRAM chip on Neo's bring-up board: 4 banks × 4096 rows ×
+//! 2 KiB pages, with per-bank open-row state and datasheet timing
+//! validation. The device keeps its *own* copy of the timing rules and
+//! checks every command the controller issues — protocol violations are
+//! counted in `rpc.dev_violations`, and the test suite asserts the counter
+//! stays at zero, which is how we know the controller's timing FSM honors
+//! the RPC contract (the paper verifies this against the real chip).
+
+use super::timing::TimingParams;
+use crate::sim::{Cycle, Stats};
+
+pub const WORD_BYTES: usize = 32;
+pub const PAGE_BYTES: usize = 2048;
+pub const WORDS_PER_ROW: u64 = (PAGE_BYTES / WORD_BYTES) as u64; // 64
+pub const N_BANKS: usize = 4;
+
+/// Commands as they appear on the RPC bus (decomposed by the command FSM).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DevCmd {
+    /// Power-up initialization sequence.
+    Init,
+    /// Activate `row` in `bank`.
+    Act { bank: u8, row: u16 },
+    /// Read `n` words starting at column `col` of the open row.
+    Rd { bank: u8, col: u8, n: u8 },
+    /// Write `n` words starting at `col`; masks apply to first/last word.
+    Wr { bank: u8, col: u8, n: u8, first_mask: u32, last_mask: u32 },
+    /// Precharge (close) the bank.
+    Pre { bank: u8 },
+    /// All-bank auto refresh.
+    Ref,
+    /// ZQ impedance calibration.
+    ZqCal,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Bank {
+    open_row: Option<u16>,
+    /// Earliest cycle the bank accepts RD/WR (after ACT + tRCD).
+    rw_ready_at: Cycle,
+    /// Earliest cycle the bank accepts ACT (after PRE + tRP or REF + tRFC).
+    act_ready_at: Cycle,
+}
+
+/// The DRAM chip.
+pub struct RpcDram {
+    storage: Vec<u8>,
+    banks: [Bank; N_BANKS],
+    timing: TimingParams,
+    initialized: bool,
+    last_ref: Cycle,
+    pub violations: u64,
+}
+
+impl RpcDram {
+    pub fn new(size: usize, timing: TimingParams) -> Self {
+        assert_eq!(size % (N_BANKS * PAGE_BYTES), 0);
+        Self {
+            storage: vec![0; size],
+            banks: [Bank::default(); N_BANKS],
+            timing,
+            initialized: false,
+            last_ref: 0,
+            violations: 0,
+        }
+    }
+
+    /// Rows per bank for this capacity.
+    pub fn rows_per_bank(&self) -> u64 {
+        (self.storage.len() / (N_BANKS * PAGE_BYTES)) as u64
+    }
+
+    /// Map (bank, row, col) to a byte offset. Linear layout: the word
+    /// address space is split as [bank | row | col] (high→low), matching
+    /// the command FSM's decomposition.
+    fn offset(&self, bank: u8, row: u16, col: u8) -> usize {
+        let words_per_bank = self.rows_per_bank() * WORDS_PER_ROW;
+        ((bank as u64 * words_per_bank + row as u64 * WORDS_PER_ROW + col as u64)
+            * WORD_BYTES as u64) as usize
+    }
+
+    fn violation(&mut self, stats: &mut Stats, what: &str) {
+        self.violations += 1;
+        stats.bump("rpc.dev_violations");
+        // keep a note of the first few kinds for debugging
+        if self.violations <= 4 {
+            eprintln!("rpc-dram: protocol violation: {what}");
+        }
+    }
+
+    /// Execute a command arriving at cycle `now`. Reads return their data
+    /// words (the PHY schedules their delivery times); writes take data.
+    pub fn execute(
+        &mut self,
+        cmd: DevCmd,
+        now: Cycle,
+        wdata: &[[u8; WORD_BYTES]],
+        stats: &mut Stats,
+    ) -> Vec<[u8; WORD_BYTES]> {
+        if !self.initialized && !matches!(cmd, DevCmd::Init) {
+            self.violation(stats, "command before init");
+        }
+        match cmd {
+            DevCmd::Init => {
+                self.initialized = true;
+                for b in &mut self.banks {
+                    *b = Bank::default();
+                    b.act_ready_at = now + self.timing.tinit;
+                }
+                stats.bump("rpc.dev_init");
+                Vec::new()
+            }
+            DevCmd::Act { bank, row } => {
+                let t = self.timing.clone();
+                let rows = self.rows_per_bank();
+                let b = &mut self.banks[bank as usize];
+                if b.open_row.is_some() {
+                    self.violation(stats, "ACT on open bank");
+                } else if now < self.banks[bank as usize].act_ready_at {
+                    self.violation(stats, "ACT before tRP/tRFC elapsed");
+                } else if (row as u64) >= rows {
+                    self.violation(stats, "row out of range");
+                }
+                let b = &mut self.banks[bank as usize];
+                b.open_row = Some(row);
+                b.rw_ready_at = now + t.trcd;
+                Vec::new()
+            }
+            DevCmd::Rd { bank, col, n } => {
+                self.check_rw(bank, col, n, now, stats);
+                let row = self.banks[bank as usize].open_row.unwrap_or(0);
+                let mut out = Vec::with_capacity(n as usize);
+                for k in 0..n {
+                    let off = self.offset(bank, row, col + k);
+                    let mut w = [0u8; WORD_BYTES];
+                    w.copy_from_slice(&self.storage[off..off + WORD_BYTES]);
+                    out.push(w);
+                }
+                stats.add("rpc.dev_rd_words", n as u64);
+                out
+            }
+            DevCmd::Wr { bank, col, n, first_mask, last_mask } => {
+                self.check_rw(bank, col, n, now, stats);
+                if wdata.len() != n as usize {
+                    self.violation(stats, "write data word count mismatch");
+                    return Vec::new();
+                }
+                let row = self.banks[bank as usize].open_row.unwrap_or(0);
+                for k in 0..n {
+                    let mask = if k == 0 && n == 1 {
+                        first_mask & last_mask
+                    } else if k == 0 {
+                        first_mask
+                    } else if k == n - 1 {
+                        last_mask
+                    } else {
+                        u32::MAX
+                    };
+                    let off = self.offset(bank, row, col + k);
+                    for i in 0..WORD_BYTES {
+                        if (mask >> i) & 1 == 1 {
+                            self.storage[off + i] = wdata[k as usize][i];
+                        }
+                    }
+                }
+                stats.add("rpc.dev_wr_words", n as u64);
+                Vec::new()
+            }
+            DevCmd::Pre { bank } => {
+                let trp = self.timing.trp;
+                let b = &mut self.banks[bank as usize];
+                if b.open_row.is_none() {
+                    // PRE on closed bank is legal (NOP-like) in most DRAMs;
+                    // count it as a soft event, not a violation.
+                    stats.bump("rpc.dev_pre_noop");
+                }
+                b.open_row = None;
+                b.act_ready_at = now + trp;
+                Vec::new()
+            }
+            DevCmd::Ref => {
+                let any_open = self.banks.iter().any(|b| b.open_row.is_some());
+                if any_open {
+                    self.violation(stats, "REF with open bank");
+                }
+                let trfc = self.timing.trfc;
+                for b in &mut self.banks {
+                    b.act_ready_at = (b.act_ready_at).max(now + trfc);
+                }
+                self.last_ref = now;
+                Vec::new()
+            }
+            DevCmd::ZqCal => {
+                let tzqc = self.timing.tzqc;
+                for b in &mut self.banks {
+                    b.act_ready_at = (b.act_ready_at).max(now + tzqc);
+                }
+                Vec::new()
+            }
+        }
+    }
+
+    fn check_rw(&mut self, bank: u8, col: u8, n: u8, now: Cycle, stats: &mut Stats) {
+        let b = self.banks[bank as usize];
+        if b.open_row.is_none() {
+            self.violation(stats, "RD/WR on closed bank");
+        }
+        if now < b.rw_ready_at {
+            self.violation(stats, "RD/WR before tRCD elapsed");
+        }
+        if col as u64 + n as u64 > WORDS_PER_ROW {
+            self.violation(stats, "burst crosses page boundary");
+        }
+        if n == 0 {
+            self.violation(stats, "zero-length burst");
+        }
+    }
+
+    pub fn raw(&self) -> &[u8] {
+        &self.storage
+    }
+
+    pub fn raw_mut(&mut self) -> &mut [u8] {
+        &mut self.storage
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> (RpcDram, Stats) {
+        (RpcDram::new(32 * 1024 * 1024, TimingParams::neo()), Stats::new())
+    }
+
+    #[test]
+    fn init_then_act_rd_wr_pre_sequence_is_clean() {
+        let (mut d, mut s) = dev();
+        let t = TimingParams::neo();
+        d.execute(DevCmd::Init, 0, &[], &mut s);
+        let mut now = t.tinit + 1;
+        d.execute(DevCmd::Act { bank: 0, row: 3 }, now, &[], &mut s);
+        now += t.trcd;
+        let w = [[0xabu8; 32]];
+        d.execute(DevCmd::Wr { bank: 0, col: 2, n: 1, first_mask: u32::MAX, last_mask: u32::MAX }, now, &w, &mut s);
+        let rd = d.execute(DevCmd::Rd { bank: 0, col: 2, n: 1 }, now + 1, &[], &mut s);
+        assert_eq!(rd[0], [0xab; 32]);
+        d.execute(DevCmd::Pre { bank: 0 }, now + 2, &[], &mut s);
+        assert_eq!(d.violations, 0);
+    }
+
+    #[test]
+    fn rd_before_trcd_is_violation() {
+        let (mut d, mut s) = dev();
+        let t = TimingParams::neo();
+        d.execute(DevCmd::Init, 0, &[], &mut s);
+        let now = t.tinit + 1;
+        d.execute(DevCmd::Act { bank: 1, row: 0 }, now, &[], &mut s);
+        d.execute(DevCmd::Rd { bank: 1, col: 0, n: 1 }, now + 1, &[], &mut s);
+        assert!(d.violations > 0);
+    }
+
+    #[test]
+    fn command_before_init_is_violation() {
+        let (mut d, mut s) = dev();
+        d.execute(DevCmd::Act { bank: 0, row: 0 }, 5, &[], &mut s);
+        assert!(d.violations > 0);
+    }
+
+    #[test]
+    fn masks_apply_to_first_and_last_word() {
+        let (mut d, mut s) = dev();
+        let t = TimingParams::neo();
+        d.execute(DevCmd::Init, 0, &[], &mut s);
+        let mut now = t.tinit + 1;
+        d.raw_mut()[..3 * 32].fill(0xee);
+        d.execute(DevCmd::Act { bank: 0, row: 0 }, now, &[], &mut s);
+        now += t.trcd;
+        let w = [[0x11u8; 32], [0x22; 32], [0x33; 32]];
+        // first mask: only top 16 bytes; last mask: only bottom 16 bytes
+        d.execute(
+            DevCmd::Wr { bank: 0, col: 0, n: 3, first_mask: 0xffff_0000, last_mask: 0x0000_ffff },
+            now,
+            &w,
+            &mut s,
+        );
+        assert_eq!(&d.raw()[0..16], &[0xee; 16], "first word low half preserved");
+        assert_eq!(&d.raw()[16..32], &[0x11; 16], "first word high half written");
+        assert_eq!(&d.raw()[32..64], &[0x22; 32], "middle word fully written");
+        assert_eq!(&d.raw()[64..80], &[0x33; 16], "last word low half written");
+        assert_eq!(&d.raw()[80..96], &[0xee; 16], "last word high half preserved");
+        assert_eq!(d.violations, 0);
+    }
+
+    #[test]
+    fn page_crossing_burst_is_violation() {
+        let (mut d, mut s) = dev();
+        let t = TimingParams::neo();
+        d.execute(DevCmd::Init, 0, &[], &mut s);
+        let now = t.tinit + 1;
+        d.execute(DevCmd::Act { bank: 0, row: 0 }, now, &[], &mut s);
+        d.execute(DevCmd::Rd { bank: 0, col: 60, n: 8 }, now + t.trcd, &[], &mut s);
+        assert!(d.violations > 0);
+    }
+
+    #[test]
+    fn refresh_with_open_bank_is_violation() {
+        let (mut d, mut s) = dev();
+        let t = TimingParams::neo();
+        d.execute(DevCmd::Init, 0, &[], &mut s);
+        let now = t.tinit + 1;
+        d.execute(DevCmd::Act { bank: 2, row: 7 }, now, &[], &mut s);
+        d.execute(DevCmd::Ref, now + 1, &[], &mut s);
+        assert!(d.violations > 0);
+    }
+}

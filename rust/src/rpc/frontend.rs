@@ -1,0 +1,429 @@
+//! The RPC interface's AXI4 frontend (paper Fig. 5).
+//!
+//! Pipeline: **serializer → datawidth converter → read/write buffers →
+//! 2 KiB splitter → mask unit → NSRRP**.
+//!
+//! Key behaviours reproduced from §II-B (these are what shape Fig. 8):
+//! * Transactions are handled strictly in order, FCFS across AXI IDs.
+//! * "While AXI4 allows transfers to be stalled on any beat, RPC bursts
+//!   cannot be stalled once launched. Hence, both reads and writes are
+//!   buffered. **Write** data is buffered and released once the buffer
+//!   contains all data needed for the next write. **Read** data is
+//!   forwarded to the AXI4 bus as soon as possible to minimize latency
+//!   and buffered only on AXI4 bus stalls."
+//! * Fragments never cross 2 KiB pages (splitter).
+//! * First/last byte masks are derived from AXI strobes (mask unit).
+//!
+//! Neo sizes both buffers at 8 KiB — deliberately over-provisioned in the
+//! paper ("these buffers are over-provisioned to simplify the initial
+//! design"), which Figs. 9/10 show dominating controller area. The sizes
+//! are constructor parameters so the Fig. 10 ablation can sweep them.
+
+use super::nsrrp::{NsReq, Word};
+use super::timing_fsm::Controller;
+use crate::axi::port::AxiBus;
+use crate::axi::serializer::{SerTxn, Serializer};
+use crate::axi::splitter::{split_at_boundary, Fragment};
+use crate::axi::types::{beat_addr, Resp, B, R};
+use crate::sim::{Cycle, Stats};
+use std::collections::VecDeque;
+
+const WORD: u64 = 32;
+const PAGE: u64 = 2048;
+/// AXI bus width in bytes (Neo: 64 b).
+const BUS: usize = 8;
+
+/// An in-flight write transaction being assembled from W beats.
+struct WrTxn {
+    txn: SerTxn,
+    /// Fragments still to submit (front = next).
+    frags: VecDeque<Fragment>,
+    /// Contiguous staging of the whole transaction's bytes + valid flags,
+    /// indexed from the transaction start address.
+    data: Vec<u8>,
+    valid: Vec<bool>,
+    /// Bytes collected so far (monotone; beats arrive in address order).
+    collected: usize,
+    beats_seen: u32,
+    /// Tag of the *last* fragment (B released on its completion).
+    last_tag: Option<u64>,
+}
+
+/// An in-flight read transaction.
+struct RdTxn {
+    txn: SerTxn,
+    frags: VecDeque<Fragment>,
+}
+
+/// Read-response reassembly: bytes land here (in order) and leave as beats.
+struct RdStream {
+    txn: SerTxn,
+    /// Assembled useful bytes (head/tail trimmed), consumed beat by beat.
+    buf: VecDeque<u8>,
+    /// Offset within the first word that is *not* part of the transfer.
+    skip: usize,
+    beat: u32,
+    /// Bytes still expected from the controller.
+    expect: u64,
+}
+
+/// The frontend.
+pub struct Frontend {
+    base: u64,
+    wr_buf_cap: usize,
+    rd_buf_cap: usize,
+    ser: Serializer,
+    cur_wr: Option<WrTxn>,
+    cur_rd: Option<RdTxn>,
+    /// Write fragments whose data is staged, awaiting controller accept.
+    wr_ready: VecDeque<(NsReq, Vec<Word>)>,
+    /// Bytes currently held in the write buffer (occupancy).
+    wr_buf_used: usize,
+    /// Read streams in controller order (front receives rsp words).
+    rd_streams: VecDeque<RdStream>,
+    /// Bytes currently held in the read buffer.
+    rd_buf_used: usize,
+    /// Reserved read-buffer bytes for issued-but-unreturned fragments.
+    rd_reserved: usize,
+    /// (last-fragment tag → AXI id) queue for B generation, in order.
+    b_queue: VecDeque<(u64, u32)>,
+    next_tag: u64,
+}
+
+impl Frontend {
+    pub fn new(base: u64, rd_buf: usize, wr_buf: usize) -> Self {
+        Self {
+            base,
+            wr_buf_cap: wr_buf,
+            rd_buf_cap: rd_buf,
+            ser: Serializer::new(8),
+            cur_wr: None,
+            cur_rd: None,
+            wr_ready: VecDeque::new(),
+            wr_buf_used: 0,
+            rd_streams: VecDeque::new(),
+            rd_buf_used: 0,
+            rd_reserved: 0,
+            b_queue: VecDeque::new(),
+            next_tag: 1,
+        }
+    }
+
+    /// One cycle of the whole frontend pipeline.
+    pub fn tick(&mut self, bus: &AxiBus, ctrl: &mut Controller, now: Cycle, stats: &mut Stats) {
+        self.ser.tick(bus);
+        self.start_txn(now, stats);
+        self.collect_write_beats(bus, stats);
+        self.submit_write_fragments(ctrl, now, stats);
+        self.issue_read_fragments(ctrl, now, stats);
+        self.drain_rsp(ctrl, stats);
+        self.emit_read_beats(bus, stats);
+        self.emit_b(bus, ctrl, stats);
+    }
+
+    /// Adopt the next serialized transaction when the pipe is free.
+    fn start_txn(&mut self, _now: Cycle, stats: &mut Stats) {
+        if self.cur_wr.is_some() || self.cur_rd.is_some() {
+            return;
+        }
+        let Some(txn) = self.ser.pop() else { return };
+        let bytes = (txn.len as u64 + 1) << txn.size;
+        let frags: VecDeque<Fragment> =
+            split_at_boundary(txn.addr - self.base, bytes, PAGE).into();
+        stats.bump("rpc.fe.txns");
+        stats.add("rpc.fe.fragments_total", frags.len() as u64);
+        if txn.write {
+            self.cur_wr = Some(WrTxn {
+                frags,
+                data: vec![0; bytes as usize],
+                valid: vec![false; bytes as usize],
+                collected: 0,
+                beats_seen: 0,
+                last_tag: None,
+                txn,
+            });
+        } else {
+            self.cur_rd = Some(RdTxn { frags, txn });
+        }
+    }
+
+    /// Accept one W beat per cycle into the staging buffer.
+    fn collect_write_beats(&mut self, bus: &AxiBus, stats: &mut Stats) {
+        let Some(wt) = &mut self.cur_wr else { return };
+        let beats = wt.txn.len as u32 + 1;
+        if wt.beats_seen >= beats {
+            return;
+        }
+        // buffer back-pressure: don't pull beats we can't stage
+        if self.wr_buf_used + BUS > self.wr_buf_cap {
+            stats.bump("rpc.fe.wr_buf_stall");
+            return;
+        }
+        let Some(w) = bus.w.borrow_mut().pop() else { return };
+        let nbytes = 1usize << wt.txn.size;
+        let a = beat_addr(wt.txn.addr, wt.txn.size, crate::axi::types::Burst::Incr, wt.beats_seen);
+        let lane0 = (a as usize) & (BUS - 1);
+        let off = (a - wt.txn.addr) as usize;
+        for i in 0..nbytes {
+            let lane = lane0 + i;
+            if lane < w.data.len() && (w.strb >> lane) & 1 == 1 {
+                wt.data[off + i] = w.data[lane];
+                wt.valid[off + i] = true;
+            }
+        }
+        wt.collected = wt.collected.max(off + nbytes);
+        wt.beats_seen += 1;
+        self.wr_buf_used += nbytes;
+        stats.bump("rpc.fe.w_beats");
+        debug_assert_eq!(w.last, wt.beats_seen == beats, "W last flag mismatch");
+    }
+
+    /// Release fragments whose bytes are fully staged ("released once the
+    /// buffer contains all data needed for the next write").
+    fn submit_write_fragments(&mut self, ctrl: &mut Controller, now: Cycle, stats: &mut Stats) {
+        // stage → ready queue
+        if let Some(wt) = &mut self.cur_wr {
+            while let Some(frag) = wt.frags.front() {
+                let frag_end = (frag.addr + frag.bytes - (wt.txn.addr - self.base)) as usize;
+                if wt.collected < frag_end {
+                    break;
+                }
+                let frag = wt.frags.pop_front().unwrap();
+                let tag = self.next_tag;
+                self.next_tag += 1;
+                let txn_start = wt.txn.addr - self.base;
+                let word_lo = frag.addr / WORD;
+                let word_hi = (frag.addr + frag.bytes - 1) / WORD;
+                let n_words = (word_hi - word_lo + 1) as u32;
+                let mut words = vec![[0u8; 32]; n_words as usize];
+                let mut first_mask = 0u32;
+                let mut last_mask = 0u32;
+                for k in 0..n_words as u64 {
+                    for i in 0..32u64 {
+                        let abs = (word_lo + k) * WORD + i;
+                        if abs < frag.addr || abs >= frag.addr + frag.bytes {
+                            continue;
+                        }
+                        let rel = (abs - txn_start) as usize;
+                        if wt.valid[rel] {
+                            words[k as usize][i as usize] = wt.data[rel];
+                            if k == 0 {
+                                first_mask |= 1 << i;
+                            }
+                            if k == n_words as u64 - 1 {
+                                last_mask |= 1 << i;
+                            }
+                            if k != 0 && k != n_words as u64 - 1 {
+                                // middle words must be fully strobed; RPC
+                                // has only first/last masks
+                            }
+                        } else if k != 0 && k != n_words as u64 - 1 {
+                            stats.bump("rpc.fe.mid_word_hole");
+                        }
+                    }
+                }
+                if n_words == 1 {
+                    // single-word fragment: both masks describe the word
+                    last_mask = first_mask;
+                }
+                let req = NsReq {
+                    write: true,
+                    word_addr: word_lo,
+                    n_words,
+                    first_mask,
+                    last_mask,
+                    tag,
+                };
+                let is_last_frag = wt.frags.is_empty();
+                if is_last_frag {
+                    wt.last_tag = Some(tag);
+                    self.b_queue.push_back((tag, wt.txn.id));
+                }
+                self.wr_ready.push_back((req, words));
+            }
+            // transaction fully staged?
+            let done = wt.frags.is_empty() && wt.beats_seen == wt.txn.len as u32 + 1;
+            if done {
+                self.cur_wr = None;
+            }
+        }
+        // ready queue → controller (one fragment per accept window)
+        if let Some((_req, _)) = self.wr_ready.front() {
+            if ctrl.can_accept(now) {
+                let (req, words) = self.wr_ready.pop_front().unwrap();
+                let freed: usize = words.len() * 32;
+                self.wr_buf_used = self.wr_buf_used.saturating_sub(freed.min(self.wr_buf_used));
+                ctrl.submit(&req, words, now, stats, rows_for(ctrl));
+                stats.bump("rpc.fe.wr_frag_submitted");
+            }
+        }
+    }
+
+    /// Issue read fragments in order, reserving read-buffer space first
+    /// (the NSRRP response cannot be stalled).
+    fn issue_read_fragments(&mut self, ctrl: &mut Controller, now: Cycle, stats: &mut Stats) {
+        let Some(rt) = &mut self.cur_rd else { return };
+        let Some(frag) = rt.frags.front() else { return };
+        if !ctrl.can_accept(now) {
+            return;
+        }
+        let word_lo = frag.addr / WORD;
+        let word_hi = (frag.addr + frag.bytes - 1) / WORD;
+        let n_words = (word_hi - word_lo + 1) as u32;
+        let need = (n_words * 32) as usize;
+        if self.rd_buf_used + self.rd_reserved + need > self.rd_buf_cap {
+            stats.bump("rpc.fe.rd_buf_stall");
+            return;
+        }
+        let frag = rt.frags.pop_front().unwrap();
+        let tag = self.next_tag;
+        self.next_tag += 1;
+        let mut first_mask = 0u32;
+        let mut last_mask = 0u32;
+        for i in 0..32u64 {
+            if (word_lo * WORD + i) >= frag.addr && (word_lo * WORD + i) < frag.addr + frag.bytes {
+                first_mask |= 1 << i;
+            }
+            if (word_hi * WORD + i) >= frag.addr && (word_hi * WORD + i) < frag.addr + frag.bytes {
+                last_mask |= 1 << i;
+            }
+        }
+        let req = NsReq { write: false, word_addr: word_lo, n_words, first_mask, last_mask, tag };
+        self.rd_reserved += need;
+        ctrl.submit(&req, Vec::new(), now, stats, rows_for(ctrl));
+        stats.bump("rpc.fe.rd_frag_issued");
+        // register the stream (bytes of this fragment that belong to the txn)
+        let skip = (frag.addr - word_lo * WORD) as usize;
+        let first_stream = self.rd_streams.iter().all(|s| s.txn.id != rt.txn.id)
+            && self
+                .rd_streams
+                .back()
+                .map(|s| s.expect == 0)
+                .unwrap_or(true);
+        let _ = first_stream;
+        // one stream per transaction; fragments append to it
+        if let Some(s) = self.rd_streams.back_mut() {
+            if s.txn.id == rt.txn.id && s.txn.addr == rt.txn.addr {
+                s.expect += frag.bytes;
+                if rt.frags.is_empty() {
+                    self.cur_rd = None;
+                }
+                return;
+            }
+        }
+        self.rd_streams.push_back(RdStream {
+            txn: rt.txn.clone(),
+            buf: VecDeque::new(),
+            skip,
+            beat: 0,
+            expect: frag.bytes,
+        });
+        if rt.frags.is_empty() {
+            self.cur_rd = None;
+        }
+    }
+
+    /// Pull returned words from the controller into the front stream.
+    fn drain_rsp(&mut self, ctrl: &mut Controller, stats: &mut Stats) {
+        while let Some(rsp) = ctrl.pop_rsp() {
+            let Some(s) = self.rd_streams.front_mut() else {
+                stats.bump("rpc.fe.orphan_rsp");
+                continue;
+            };
+            for i in 0..32 {
+                if s.skip > 0 {
+                    s.skip -= 1;
+                    continue;
+                }
+                if s.expect == 0 {
+                    break; // word tail beyond the transfer
+                }
+                s.buf.push_back(rsp.word[i]);
+                s.expect -= 1;
+                self.rd_buf_used += 1;
+            }
+            self.rd_reserved = self.rd_reserved.saturating_sub(32);
+        }
+    }
+
+    /// Emit one R beat per cycle, "as soon as possible".
+    fn emit_read_beats(&mut self, bus: &AxiBus, stats: &mut Stats) {
+        let Some(s) = self.rd_streams.front_mut() else { return };
+        let nbytes = 1usize << s.txn.size;
+        if s.buf.len() < nbytes && !(s.expect == 0 && !s.buf.is_empty()) {
+            if s.buf.is_empty() {
+                return;
+            }
+        }
+        if s.buf.len() < nbytes {
+            return;
+        }
+        if !bus.r.borrow().can_push() {
+            stats.bump("rpc.fe.r_stall");
+            return;
+        }
+        let a = beat_addr(s.txn.addr, s.txn.size, crate::axi::types::Burst::Incr, s.beat);
+        let lane0 = (a as usize) & (BUS - 1);
+        let mut data = vec![0u8; BUS];
+        for i in 0..nbytes {
+            data[lane0 + i] = s.buf.pop_front().unwrap();
+            self.rd_buf_used -= 1;
+        }
+        let last = s.beat == s.txn.len as u32;
+        bus.r.borrow_mut().push(R { id: s.txn.id, data, resp: Resp::Okay, last });
+        stats.bump("rpc.fe.r_beats");
+        s.beat += 1;
+        if last {
+            self.rd_streams.pop_front();
+        }
+    }
+
+    /// Release B responses when the last fragment of a write completes.
+    fn emit_b(&mut self, bus: &AxiBus, ctrl: &mut Controller, stats: &mut Stats) {
+        while let Some(done) = ctrl.pop_wr_done() {
+            if let Some(&(tag, id)) = self.b_queue.front() {
+                if tag == done.tag {
+                    self.b_queue.pop_front();
+                    bus.b.borrow_mut().push(B { id, resp: Resp::Okay });
+                    stats.bump("rpc.fe.b_responses");
+                }
+            }
+        }
+    }
+}
+
+/// Rows per bank for the attached device — Neo's 32 MiB part. (A
+/// multi-density frontend would read this from the manager's registers.)
+fn rows_for(_ctrl: &Controller) -> u64 {
+    4096
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fragment_word_count_math() {
+        // 48 bytes starting at byte 16: words 0..=1 (two words)
+        let frag = Fragment { addr: 16, bytes: 48 };
+        let word_lo = frag.addr / WORD;
+        let word_hi = (frag.addr + frag.bytes - 1) / WORD;
+        assert_eq!(word_lo, 0);
+        assert_eq!(word_hi, 1);
+    }
+
+    #[test]
+    fn read_mask_for_unaligned_head() {
+        // transfer starting at byte 8 of a word: first mask must drop the
+        // first 8 bytes
+        let frag = Fragment { addr: 8, bytes: 56 };
+        let word_lo = frag.addr / WORD;
+        let mut first_mask = 0u32;
+        for i in 0..32u64 {
+            if (word_lo * WORD + i) >= frag.addr {
+                first_mask |= 1 << i;
+            }
+        }
+        assert_eq!(first_mask, 0xffff_ff00);
+    }
+}

@@ -1,0 +1,171 @@
+//! The controller-internal manager module (paper Fig. 3, §II-B).
+//!
+//! "The manager has three responsibilities: 1) it *initializes* the RPC
+//! DRAM device on startup, 2) it periodically *refreshes* active banks,
+//! and 3) it performs *ZQ calibration* when necessary. For these tasks,
+//! the manager uses configurable timing parameters, which can be set
+//! through a memory-mapped register file."
+
+use super::timing::SharedTiming;
+#[cfg(test)]
+use super::timing::TimingParams;
+use crate::axi::regbus::RegDevice;
+use crate::sim::Cycle;
+
+/// A management operation requested of the command/timing FSM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MgmtOp {
+    Init,
+    Refresh,
+    ZqCal,
+}
+
+/// The manager: decides *when* init/refresh/ZQ must run; the timing FSM
+/// decides *how* they are placed between datapath bursts.
+pub struct Manager {
+    timing: SharedTiming,
+    initialized: bool,
+    next_refresh: Cycle,
+    next_zq: Cycle,
+    /// Refreshes postponed because the controller was mid-burst; the RPC
+    /// standard (like DDR3) allows bounded postponement — we track the
+    /// backlog and issue catch-up refreshes.
+    pub backlog: u32,
+}
+
+impl Manager {
+    pub fn new(timing: SharedTiming) -> Self {
+        Self { timing, initialized: false, next_refresh: 0, next_zq: 0, backlog: 0 }
+    }
+
+    /// The operation that should run now, if any (priority: init > refresh
+    /// > ZQ). Call `acknowledge` when the FSM actually starts it.
+    pub fn due(&mut self, now: Cycle) -> Option<MgmtOp> {
+        if !self.initialized {
+            return Some(MgmtOp::Init);
+        }
+        if now >= self.next_refresh {
+            return Some(MgmtOp::Refresh);
+        }
+        if now >= self.next_zq {
+            return Some(MgmtOp::ZqCal);
+        }
+        None
+    }
+
+    /// Mark an operation as started at `now` and schedule its successor.
+    pub fn acknowledge(&mut self, op: MgmtOp, now: Cycle) {
+        let t = self.timing.borrow();
+        match op {
+            MgmtOp::Init => {
+                self.initialized = true;
+                self.next_refresh = now + t.tinit + t.trefi;
+                self.next_zq = now + t.tinit + t.tzqi;
+            }
+            MgmtOp::Refresh => {
+                if now > self.next_refresh + t.trefi {
+                    self.backlog += 1; // we fell more than a period behind
+                }
+                self.next_refresh += t.trefi;
+                if self.next_refresh <= now {
+                    // catch-up: schedule the next one a full period out
+                    self.next_refresh = now + t.trefi;
+                }
+            }
+            MgmtOp::ZqCal => {
+                self.next_zq = now + t.tzqi;
+            }
+        }
+    }
+
+    pub fn initialized(&self) -> bool {
+        self.initialized
+    }
+}
+
+/// Memory-mapped register file exposing the timing parameters (Regbus).
+///
+/// Layout (word offsets): 0x00 tRCD, 0x04 tRP, 0x08 tCL, 0x0c tWL,
+/// 0x10 tREFI, 0x14 tRFC, 0x18 tZQI, 0x1c tZQC, 0x20 preamble,
+/// 0x24 postamble, 0x28 tCDC (RO), 0x2c magic/id (RO).
+pub struct ManagerRegs {
+    timing: SharedTiming,
+}
+
+impl ManagerRegs {
+    pub fn new(timing: SharedTiming) -> Self {
+        Self { timing }
+    }
+}
+
+impl RegDevice for ManagerRegs {
+    fn reg_read(&mut self, off: u64) -> Result<u32, ()> {
+        let t = self.timing.borrow();
+        Ok(match off {
+            0x00 => t.trcd as u32,
+            0x04 => t.trp as u32,
+            0x08 => t.tcl as u32,
+            0x0c => t.twl as u32,
+            0x10 => t.trefi as u32,
+            0x14 => t.trfc as u32,
+            0x18 => (t.tzqi & 0xffff_ffff) as u32,
+            0x1c => t.tzqc as u32,
+            0x20 => t.preamble as u32,
+            0x24 => t.postamble as u32,
+            0x28 => t.tcdc as u32,
+            0x2c => 0x5250_4331, // "RPC1"
+            _ => return Err(()),
+        })
+    }
+
+    fn reg_write(&mut self, off: u64, v: u32) -> Result<(), ()> {
+        let mut t = self.timing.borrow_mut();
+        match off {
+            0x00 => t.trcd = v as u64,
+            0x04 => t.trp = v as u64,
+            0x08 => t.tcl = v as u64,
+            0x0c => t.twl = v as u64,
+            0x10 => t.trefi = v as u64,
+            0x14 => t.trfc = v as u64,
+            0x18 => t.tzqi = v as u64,
+            0x1c => t.tzqc = v as u64,
+            0x20 => t.preamble = v as u64,
+            0x24 => t.postamble = v as u64,
+            _ => return Err(()),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rpc::timing::shared;
+
+    #[test]
+    fn init_comes_first_then_refresh_cadence() {
+        let t = shared(TimingParams::neo());
+        let trefi = t.borrow().trefi;
+        let tinit = t.borrow().tinit;
+        let mut m = Manager::new(t);
+        assert_eq!(m.due(0), Some(MgmtOp::Init));
+        m.acknowledge(MgmtOp::Init, 0);
+        assert!(m.due(tinit + 10).is_none());
+        let due_at = tinit + trefi;
+        assert_eq!(m.due(due_at), Some(MgmtOp::Refresh));
+        m.acknowledge(MgmtOp::Refresh, due_at);
+        assert!(m.due(due_at + 1).is_none());
+        assert_eq!(m.due(due_at + trefi), Some(MgmtOp::Refresh));
+    }
+
+    #[test]
+    fn regs_read_write_timing() {
+        let t = shared(TimingParams::neo());
+        let mut regs = ManagerRegs::new(t.clone());
+        assert_eq!(regs.reg_read(0x00).unwrap(), 4);
+        regs.reg_write(0x00, 6).unwrap();
+        assert_eq!(t.borrow().trcd, 6);
+        assert_eq!(regs.reg_read(0x2c).unwrap(), 0x5250_4331);
+        assert!(regs.reg_write(0x2c, 0).is_err(), "id register is RO");
+    }
+}

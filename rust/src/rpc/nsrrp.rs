@@ -1,0 +1,68 @@
+//! NSRRP — the non-stallable request-response protocol (paper §II-B).
+//!
+//! "To enable easy adaptation to on-chip protocols other than AXI4, the
+//! controller and frontend are connected through a generic interface we
+//! call non-stallable request-response protocol (NSRRP); its datawidth is
+//! 256 b or one word in the RPC DRAM standard."
+//!
+//! *Non-stallable* means: once the controller launches a request on the
+//! DRAM bus, data flows at protocol rate with no back-pressure. The
+//! frontend therefore (a) pushes a write request only after all its data
+//! words are buffered, and (b) reserves read-buffer space before issuing a
+//! read request.
+
+/// One RPC word (256 b).
+pub type Word = [u8; 32];
+
+/// Byte-valid mask for one word (bit *i* ⇔ byte *i* written).
+pub type Mask = u32;
+
+/// Full mask: all 32 bytes valid.
+pub const FULL_MASK: Mask = u32::MAX;
+
+/// A datapath request from frontend to controller. Addresses are in units
+/// of 32 B words within the device.
+#[derive(Debug, Clone)]
+pub struct NsReq {
+    pub write: bool,
+    pub word_addr: u64,
+    pub n_words: u32,
+    /// First/last-word byte masks (paper: "RPC DRAM implements unaligned
+    /// transfers by introducing a first and a last mask").
+    pub first_mask: Mask,
+    pub last_mask: Mask,
+    /// Opaque frontend tag, returned with responses/completions.
+    pub tag: u64,
+}
+
+/// A read-data word from controller to frontend.
+#[derive(Debug, Clone)]
+pub struct NsRsp {
+    pub tag: u64,
+    pub word: Word,
+    pub last: bool,
+}
+
+/// Write-completion notification (the frontend releases the AXI B response
+/// for the last fragment of a transaction once the burst is on the DRAM).
+#[derive(Debug, Clone, Copy)]
+pub struct NsWrDone {
+    pub tag: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_mask_covers_word() {
+        assert_eq!(FULL_MASK.count_ones(), 32);
+    }
+
+    #[test]
+    fn req_is_word_granular() {
+        let r = NsReq { write: false, word_addr: 64, n_words: 64, first_mask: FULL_MASK, last_mask: FULL_MASK, tag: 7 };
+        // 64 words = one full 2 KiB page
+        assert_eq!(r.n_words as u64 * 32, 2048);
+    }
+}

@@ -1,0 +1,106 @@
+//! The fully digital RPC PHY model (paper Fig. 4).
+//!
+//! "The physical interface circuit (PHY) implements a low-power,
+//! digital-only, technology-agnostic RPC DRAM physical layer without
+//! internal clock generation."
+//!
+//! The PHY's architectural effects captured here:
+//! * **DB occupancy** — data, commands, and masks are multiplexed onto the
+//!   shared 16 b DDR bus; every occupied cycle is accounted (bus
+//!   utilization, Fig. 8) and every toggled pad cycle counted (IO power,
+//!   Fig. 11). 22 switching IOs: 16 DB + 2 DQS + CS + CA + 2 aux.
+//! * **Delay lines** — the transmit side generates 90°/270° shifted
+//!   strobes, the receive side delays DQS to sample mid-eye; both delays
+//!   are runtime-configurable registers (set during bring-up).
+//! * **SDR↔DDR conversion + serialization** — a 256 b word crosses the PHY
+//!   as 8 × 32 b subwords, one DB cycle each ([`WORD_CYCLES`]).
+//! * **CDC** — read data crosses back into the controller clock domain
+//!   through a 2-stage FIFO, adding `tcdc` cycles of read latency.
+
+use super::timing::TimingParams;
+use crate::sim::Stats;
+
+/// Number of switching IOs of the interface (16 DB + DQS + DQS# + CS +
+/// serial CA + 2 clock) — used by the IO power model.
+pub const SWITCHING_IOS: u32 = 22;
+
+/// PHY configuration/state: delay line settings and pad-activity counters.
+#[derive(Debug, Clone)]
+pub struct Phy {
+    /// TX strobe delay-line tap (90° nominal at tap 8 of 16).
+    pub tx_delay_tap: u8,
+    /// RX DQS delay-line tap (sample point).
+    pub rx_delay_tap: u8,
+    /// Whether the delay lines have been calibrated (bring-up step).
+    pub calibrated: bool,
+}
+
+impl Phy {
+    pub fn new() -> Self {
+        Self { tx_delay_tap: 8, rx_delay_tap: 8, calibrated: true }
+    }
+
+    /// Account DB activity for one *command* word (serial CA pin + CS).
+    pub fn count_cmd(&self, t: &TimingParams, stats: &mut Stats) {
+        stats.add("rpc.db_cmd_cycles", t.tcmd);
+        stats.add("rpc.io_pad_cycles", t.tcmd * 4); // CA, CS, CK toggling
+    }
+
+    /// Account DB activity for mask words.
+    pub fn count_mask(&self, t: &TimingParams, stats: &mut Stats) {
+        stats.add("rpc.db_mask_cycles", t.tmask);
+        stats.add("rpc.io_pad_cycles", t.tmask * (SWITCHING_IOS as u64));
+    }
+
+    /// Account DB + strobe activity for an `n`-word data burst.
+    pub fn count_data(&self, n_words: u64, t: &TimingParams, stats: &mut Stats, write: bool) {
+        let data_cycles = n_words * TimingParams::WORD_CYCLES;
+        stats.add("rpc.db_data_cycles", data_cycles);
+        stats.add("rpc.strobe_cycles", data_cycles + t.preamble + t.postamble);
+        stats.add("rpc.io_pad_cycles", data_cycles * (SWITCHING_IOS as u64));
+        if write {
+            stats.add("rpc.wr_words", n_words);
+        } else {
+            stats.add("rpc.rd_words", n_words);
+        }
+    }
+
+    /// Total read-path latency added by the PHY (RX delay + CDC).
+    pub fn read_latency(&self, t: &TimingParams) -> u64 {
+        t.tcdc
+    }
+}
+
+impl Default for Phy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn data_accounting_scales_with_words() {
+        let phy = Phy::new();
+        let t = TimingParams::neo();
+        let mut s = Stats::new();
+        phy.count_data(64, &t, &mut s, false); // one 2 KiB page
+        assert_eq!(s.get("rpc.db_data_cycles"), 512);
+        assert_eq!(s.get("rpc.rd_words"), 64);
+        assert_eq!(s.get("rpc.strobe_cycles"), 512 + 3);
+    }
+
+    #[test]
+    fn switching_io_count_matches_paper() {
+        assert_eq!(SWITCHING_IOS, 22);
+    }
+
+    #[test]
+    fn cdc_adds_read_latency() {
+        let phy = Phy::new();
+        let t = TimingParams::neo();
+        assert_eq!(phy.read_latency(&t), t.tcdc);
+    }
+}

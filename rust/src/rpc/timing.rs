@@ -1,0 +1,102 @@
+//! RPC DRAM timing parameters.
+//!
+//! "For these tasks, the manager uses configurable timing parameters, which
+//! can be set through a memory-mapped register file." (paper §II-B). The
+//! defaults below follow the Etron EM6GA16LB datasheet scaled to Neo's
+//! 200 MHz controller clock (5 ns cycle); every parameter is runtime-
+//! configurable through [`crate::rpc::manager::ManagerRegs`].
+//!
+//! All values are in controller clock cycles.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// The timing parameter set shared by manager, timing FSM, and device.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TimingParams {
+    /// ACT to RD/WR delay (row activation).
+    pub trcd: u64,
+    /// PRE to next ACT delay on the same bank (precharge).
+    pub trp: u64,
+    /// RD command to first data (CAS latency).
+    pub tcl: u64,
+    /// WR command to first data (write latency).
+    pub twl: u64,
+    /// Average refresh interval (7.8 µs @200 MHz).
+    pub trefi: u64,
+    /// Refresh cycle time (all banks busy).
+    pub trfc: u64,
+    /// ZQ calibration interval (long; fires at init in typical windows).
+    pub tzqi: u64,
+    /// ZQ calibration duration.
+    pub tzqc: u64,
+    /// Strobe preamble cycles before read/write data (DDR3-like, §II-B).
+    pub preamble: u64,
+    /// Strobe postamble cycles after data.
+    pub postamble: u64,
+    /// DB cycles for one serial command word (32 b on a 16 b DDR bus).
+    pub tcmd: u64,
+    /// DB cycles for one mask word (first+last masks share one 32 b word).
+    pub tmask: u64,
+    /// Cycles of read-path clock-domain-crossing latency (PHY RX FIFO).
+    pub tcdc: u64,
+    /// Device initialization duration after reset.
+    pub tinit: u64,
+}
+
+impl TimingParams {
+    /// Neo's configuration at a 200 MHz controller clock.
+    pub fn neo() -> Self {
+        Self {
+            trcd: 4,      // 20 ns
+            trp: 3,       // 15 ns
+            tcl: 4,       // 20 ns
+            twl: 2,       // 10 ns
+            trefi: 1560,  // 7.8 µs
+            trfc: 22,     // 110 ns
+            tzqi: 25_600_000, // 128 ms — once per realistic sim window
+            tzqc: 128,
+            preamble: 2,
+            postamble: 1,
+            tcmd: 1,
+            tmask: 1,
+            tcdc: 2,
+            tinit: 100,   // abbreviated init (full tINIT is ms-scale)
+        }
+    }
+
+    /// DB cycles to move one 256 b word over the 16 b DDR bus: 32 B at
+    /// 4 B/cycle (16 b × 2 edges).
+    pub const WORD_CYCLES: u64 = 8;
+}
+
+/// Shared, runtime-writable handle (manager register file writes it, the
+/// timing FSM and device read it).
+pub type SharedTiming = Rc<RefCell<TimingParams>>;
+
+pub fn shared(t: TimingParams) -> SharedTiming {
+    Rc::new(RefCell::new(t))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn neo_defaults_are_sane() {
+        let t = TimingParams::neo();
+        assert!(t.trcd > 0 && t.trp > 0 && t.tcl > 0);
+        assert!(t.trefi > t.trfc, "refresh interval must exceed refresh time");
+        // 7.8 µs at 200 MHz
+        assert_eq!(t.trefi, 1560);
+        // one RPC word = 8 DB cycles
+        assert_eq!(TimingParams::WORD_CYCLES, 8);
+    }
+
+    #[test]
+    fn shared_timing_propagates_writes() {
+        let s = shared(TimingParams::neo());
+        s.borrow_mut().trcd = 9;
+        assert_eq!(s.borrow().trcd, 9);
+    }
+}

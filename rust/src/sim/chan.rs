@@ -1,0 +1,134 @@
+//! Bounded valid/ready channels.
+//!
+//! A [`Chan<T>`] models a handshaked hardware interface: the producer may push
+//! only when the channel has space (`can_push` ≙ `ready`), the consumer sees a
+//! pending element (`peek` ≙ `valid`) and pops it when it accepts. A capacity
+//! of 1 behaves like a simple register slice, larger capacities like FIFOs
+//! (e.g. the RPC frontend's 8 KiB read/write buffers, paper §III-A).
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+/// Bounded FIFO with valid/ready semantics.
+#[derive(Debug)]
+pub struct Chan<T> {
+    cap: usize,
+    q: VecDeque<T>,
+    /// Cumulative pushes, for utilization accounting.
+    pub pushed: u64,
+}
+
+impl<T> Chan<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "zero-capacity channel is not a register");
+        Self {
+            cap,
+            q: VecDeque::with_capacity(cap.min(4096)),
+            pushed: 0,
+        }
+    }
+
+    #[inline]
+    pub fn can_push(&self) -> bool {
+        self.q.len() < self.cap
+    }
+
+    /// Push if space is available; returns whether the element was accepted.
+    #[inline]
+    pub fn push(&mut self, t: T) -> bool {
+        if self.can_push() {
+            self.q.push_back(t);
+            self.pushed += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    #[inline]
+    pub fn peek(&self) -> Option<&T> {
+        self.q.front()
+    }
+
+    #[inline]
+    pub fn pop(&mut self) -> Option<T> {
+        self.q.pop_front()
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Free slots remaining.
+    #[inline]
+    pub fn space(&self) -> usize {
+        self.cap - self.q.len()
+    }
+}
+
+/// Shared handle to a channel: one end held by the producer, one by the
+/// consumer. The simulator is single-threaded, so `Rc<RefCell<_>>` suffices
+/// and keeps wiring explicit (ports are constructed once, at SoC assembly).
+pub type Link<T> = Rc<RefCell<Chan<T>>>;
+
+/// Construct a fresh link with the given capacity.
+pub fn link<T>(cap: usize) -> Link<T> {
+    Rc::new(RefCell::new(Chan::new(cap)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chan_respects_capacity() {
+        let mut c = Chan::new(2);
+        assert!(c.push(1));
+        assert!(c.push(2));
+        assert!(!c.push(3), "third push must be rejected at cap=2");
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.pop(), Some(1));
+        assert!(c.push(3));
+        assert_eq!(c.pop(), Some(2));
+        assert_eq!(c.pop(), Some(3));
+        assert_eq!(c.pop(), None);
+        assert_eq!(c.pushed, 3);
+    }
+
+    #[test]
+    fn chan_is_fifo_ordered() {
+        let mut c = Chan::new(8);
+        for i in 0..8 {
+            assert!(c.push(i));
+        }
+        for i in 0..8 {
+            assert_eq!(c.peek(), Some(&i));
+            assert_eq!(c.pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn link_is_shared() {
+        let l = link::<u32>(1);
+        l.borrow_mut().push(7);
+        assert_eq!(l.borrow_mut().pop(), Some(7));
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_panics() {
+        let _ = Chan::<u8>::new(0);
+    }
+}

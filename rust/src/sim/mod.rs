@@ -1,0 +1,85 @@
+//! Cycle-stepped simulation core.
+//!
+//! Cheshire's RTL evaluation (paper §III-B) is cycle-accurate simulation; this
+//! module provides the equivalent substrate: a global [`Clock`], bounded
+//! valid/ready channels ([`Chan`]/[`Link`]) that model handshaked hardware
+//! interfaces, and an event-counting [`Stats`] registry that the area/power
+//! models (`crate::model`) consume.
+//!
+//! Components are plain structs with a `tick(&mut self, ...)` method; the
+//! platform (`crate::platform::Soc`) calls them in a fixed order each cycle.
+//! Channels have registered (≥1-entry) capacity, so a fixed tick order yields a
+//! deterministic, RTL-like schedule: a producer's push in cycle *n* is visible
+//! to a consumer ticked earlier in the loop only in cycle *n+1*.
+
+pub mod chan;
+pub mod stats;
+
+pub use chan::{link, Chan, Link};
+pub use stats::Stats;
+
+/// Simulation time in clock cycles of the single `system` clock domain
+/// (Neo runs everything from one FLL-generated clock; paper §III-A).
+pub type Cycle = u64;
+
+/// The global clock: owns the cycle counter and derived wall-time conversion.
+#[derive(Debug, Clone)]
+pub struct Clock {
+    cycle: Cycle,
+    /// Frequency in Hz used to convert cycles → seconds for bandwidth and
+    /// power reporting (the simulation itself is frequency-independent).
+    pub freq_hz: f64,
+}
+
+impl Clock {
+    pub fn new(freq_hz: f64) -> Self {
+        Self { cycle: 0, freq_hz }
+    }
+
+    /// Neo's nominal 200 MHz system clock (paper §III).
+    pub fn neo() -> Self {
+        Self::new(200.0e6)
+    }
+
+    #[inline]
+    pub fn now(&self) -> Cycle {
+        self.cycle
+    }
+
+    #[inline]
+    pub fn advance(&mut self) {
+        self.cycle += 1;
+    }
+
+    /// Seconds elapsed since reset at the configured frequency.
+    pub fn seconds(&self) -> f64 {
+        self.cycle as f64 / self.freq_hz
+    }
+
+    /// Convert a cycle count to seconds at this clock's frequency.
+    pub fn cycles_to_s(&self, cycles: Cycle) -> f64 {
+        cycles as f64 / self.freq_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_advances_and_converts() {
+        let mut c = Clock::new(100.0e6);
+        assert_eq!(c.now(), 0);
+        for _ in 0..250 {
+            c.advance();
+        }
+        assert_eq!(c.now(), 250);
+        assert!((c.seconds() - 2.5e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn neo_clock_is_200mhz() {
+        assert_eq!(Clock::neo().freq_hz, 200.0e6);
+    }
+}
+pub mod prop;

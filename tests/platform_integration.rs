@@ -1,0 +1,215 @@
+//! Cross-module integration tests on the assembled platform.
+
+use cheshire::asm::{reg::*, Asm};
+use cheshire::dsa::matmul::MatmulDsa;
+use cheshire::dsa::traffic::TrafficGen;
+use cheshire::platform::memmap::*;
+use cheshire::platform::{CheshireConfig, Soc};
+use cheshire::runtime::XlaRuntime;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// The tinyML int8 MLP artifact executes via PJRT and matches a Rust
+/// reference implementation bit-exactly (integer arithmetic).
+#[test]
+fn mlp_int8_artifact_matches_reference() {
+    let dir = artifacts();
+    if !dir.join("mlp_int8.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = XlaRuntime::load_dir(&dir).unwrap();
+    let (b, h_in, h_out) = (8usize, 64usize, 32usize);
+    let gen = |seed: i64, n: usize| -> Vec<i32> {
+        (0..n).map(|i| ((i as i64 * 37 + seed * 13) % 256 - 128) as i32).collect()
+    };
+    let x = gen(1, b * h_in);
+    let w1 = gen(2, h_in * h_in);
+    let w2 = gen(3, h_in * h_out);
+    let got = rt
+        .run_i32("mlp_int8", &[(&x, &[b, h_in]), (&w1, &[h_in, h_in]), (&w2, &[h_in, h_out])])
+        .unwrap();
+    // reference: int8 GEMM -> relu -> >>7 -> clamp -> int8 GEMM
+    let as8 = |v: i32| v as i8 as i32;
+    let mut h = vec![0i32; b * h_in];
+    for i in 0..b {
+        for j in 0..h_in {
+            let mut acc = 0i32;
+            for k in 0..h_in {
+                acc += as8(x[i * h_in + k]) * as8(w1[k * h_in + j]);
+            }
+            h[i * h_in + j] = (acc.max(0) >> 7).clamp(-128, 127);
+        }
+    }
+    let mut want = vec![0i32; b * h_out];
+    for i in 0..b {
+        for j in 0..h_out {
+            let mut acc = 0i32;
+            for k in 0..h_in {
+                acc += h[i * h_in + k] * as8(w2[k * h_out + j]);
+            }
+            want[i * h_out + j] = acc;
+        }
+    }
+    assert_eq!(got, want, "int8 MLP must be bit-exact");
+}
+
+/// The CPU reconfigures LLC ways at runtime through the register file:
+/// shrinking the SPM makes cache ways appear and DRAM reads get cached.
+#[test]
+fn cpu_reconfigures_llc_ways_at_runtime() {
+    let mut soc = Soc::new(CheshireConfig::neo());
+    let mut a = Asm::new(DRAM_BASE);
+    // read current mask, write 0x0f (4 ways SPM / 4 ways cache)
+    a.li(S0, LLC_CFG_BASE as i64);
+    a.lw(A0, S0, 0x0); // old mask
+    a.li(T0, 0x0f);
+    a.sw(T0, S0, 0x0);
+    a.lw(A1, S0, 0x0); // new mask
+    a.ebreak();
+    let img = a.finish();
+    soc.preload(&img, DRAM_BASE);
+    soc.run(2_000_000);
+    assert!(soc.cpu.halted);
+    assert_eq!(soc.cpu.core.x[A0 as usize] as u32, 0xff, "boot mask");
+    assert_eq!(soc.cpu.core.x[A1 as usize] as u32, 0x0f, "new mask");
+    // give the LLC a tick to apply, then check the SPM shrank
+    soc.run_cycles(10);
+    assert_eq!(soc.llc.spm_bytes(), 64 * 1024);
+    assert_eq!(soc.stats.get("llc.reconfig"), 1);
+}
+
+/// The CPU reads the RPC manager's timing register file over the fabric
+/// and retunes tRCD — and the controller honors the new value without
+/// protocol violations.
+#[test]
+fn cpu_retunes_rpc_timing_registers() {
+    let mut soc = Soc::new(CheshireConfig::neo());
+    let mut a = Asm::new(DRAM_BASE);
+    a.li(S0, RPC_MGR_BASE as i64);
+    a.lw(A0, S0, 0x2c); // magic
+    a.lw(A1, S0, 0x00); // tRCD
+    a.li(T0, 6);
+    a.sw(T0, S0, 0x00); // tRCD = 6
+    // touch DRAM afterwards so the new timing is exercised
+    a.li(T1, (DRAM_BASE + 0x4000) as u32 as i64);
+    a.li(T2, 0x77);
+    a.sd(T2, T1, 0);
+    a.ld(A2, T1, 0);
+    a.ebreak();
+    soc.preload(&a.finish(), DRAM_BASE);
+    soc.run(3_000_000);
+    assert!(soc.cpu.halted);
+    assert_eq!(soc.cpu.core.x[A0 as usize] as u32, 0x5250_4331);
+    assert_eq!(soc.cpu.core.x[A1 as usize], 4, "Neo default tRCD");
+    assert_eq!(soc.cpu.core.x[A2 as usize], 0x77);
+    assert_eq!(soc.rpc.ctrl.timing().trcd, 6);
+    assert_eq!(soc.stats.get("rpc.dev_violations"), 0);
+}
+
+/// Two synthetic-traffic DSAs + the CPU hammer the fabric concurrently;
+/// everything completes and the protocol stays clean (the Fig. 9
+/// multi-port scenario, functionally).
+#[test]
+fn two_dsa_port_pairs_share_the_fabric() {
+    let mut soc = Soc::new(CheshireConfig::with_dsa(2));
+    soc.plug_dsa(0, Box::new(TrafficGen::new(DRAM_BASE, 1 << 20, 256, 128, 8, 40)));
+    soc.plug_dsa(1, Box::new(TrafficGen::new(SPM_BASE, 64 * 1024, 64, 64, 6, 40)));
+    let mut a = Asm::new(DRAM_BASE + 0x10_0000);
+    a.li(S1, 0);
+    a.li(T1, 2000);
+    a.label("work");
+    a.addi(S1, S1, 1);
+    a.blt(S1, T1, "work");
+    a.ebreak();
+    soc.preload(&a.finish(), DRAM_BASE + 0x10_0000);
+    soc.run(4_000_000);
+    assert!(soc.cpu.halted, "CPU finished under load");
+    let done = |idx: usize, soc: &mut Soc| soc.dsa_mut(idx).map(|d| !d.busy()).unwrap_or(false);
+    for _ in 0..2_000_000 {
+        if done(0, &mut soc) && done(1, &mut soc) {
+            break;
+        }
+        soc.tick();
+    }
+    assert!(done(0, &mut soc) && done(1, &mut soc), "both DSAs drained");
+    assert_eq!(soc.stats.get("rpc.dev_violations"), 0);
+    assert!(soc.stats.get("dsa.traffic_rd") + soc.stats.get("dsa.traffic_wr") == 80);
+}
+
+/// VGA scanout runs concurrently with a CPU workload: frames advance and
+/// the memory system stays correct.
+#[test]
+fn vga_scanout_coexists_with_cpu_traffic() {
+    let mut soc = Soc::new(CheshireConfig::neo());
+    let mut a = Asm::new(DRAM_BASE);
+    // enable VGA: tiny 64x8x2 framebuffer in DRAM
+    a.li(S0, VGA_BASE as i64);
+    a.li(T0, (DRAM_BASE + 0x2000) as u32 as i64);
+    a.sw(T0, S0, 0x04);
+    a.li(T0, 64);
+    a.sw(T0, S0, 0x0c);
+    a.li(T0, 8);
+    a.sw(T0, S0, 0x10);
+    a.li(T0, 2);
+    a.sw(T0, S0, 0x14);
+    a.li(T0, 1);
+    a.sw(T0, S0, 0x00); // enable
+    // busy loop writing DRAM
+    a.li(S1, 0);
+    a.li(T1, 3000);
+    a.li(T2, (DRAM_BASE + 0x8000) as u32 as i64);
+    a.label("loop");
+    a.sd(S1, T2, 0);
+    a.addi(S1, S1, 1);
+    a.blt(S1, T1, "loop");
+    a.fence();
+    a.ebreak();
+    soc.preload(&a.finish(), DRAM_BASE);
+    soc.run(30_000_000);
+    assert!(soc.cpu.halted);
+    // keep scanning a while
+    soc.run_cycles(50_000);
+    assert!(soc.stats.get("vga.scan_bytes") > 0, "scanout generated traffic");
+    let v = u64::from_le_bytes(soc.dram_read(0x8000, 8).try_into().unwrap());
+    assert_eq!(v, 2999, "CPU stores landed despite scanout");
+    assert_eq!(soc.stats.get("rpc.dev_violations"), 0);
+}
+
+/// Timer-interrupt-driven WFI wake through CLINT registers programmed by
+/// the CPU itself (the GPOS tick pattern).
+#[test]
+fn clint_timer_wakes_wfi_via_mmio_programming() {
+    let mut soc = Soc::new(CheshireConfig::neo());
+    let mut a = Asm::new(DRAM_BASE);
+    a.la(T0, "handler");
+    a.csrrw(ZERO, 0x305, T0);
+    // CLINT offsets exceed 12-bit immediates: form absolute addresses
+    a.li(S0, (CLINT_BASE + 0xbff8) as i64); // mtime
+    a.li(S2, (CLINT_BASE + 0x4000) as i64); // mtimecmp
+    // mtimecmp = mtime + 500
+    a.lw(T1, S0, 0);
+    a.addi(T1, T1, 500);
+    a.sw(T1, S2, 0);
+    a.sw(ZERO, S2, 4);
+    a.li(T1, 1 << 7);
+    a.csrrw(ZERO, 0x304, T1); // MTIE
+    a.li(T1, 1 << 3);
+    a.csrrs(ZERO, 0x300, T1); // MIE
+    a.wfi();
+    a.label("spin");
+    a.j("spin");
+    a.label("handler");
+    a.li(A0, 0xca11);
+    a.ebreak();
+    soc.preload(&a.finish(), DRAM_BASE);
+    soc.run(5_000_000);
+    assert!(soc.cpu.halted, "handler must run (pc={:#x})", soc.cpu.core.pc);
+    assert_eq!(soc.cpu.core.x[A0 as usize], 0xca11);
+    assert!(soc.stats.get("cpu.wfi_cycles") > 100, "core actually slept");
+    assert_eq!(soc.stats.get("cpu.irq_taken"), 1);
+}
