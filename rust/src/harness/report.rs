@@ -1,0 +1,161 @@
+//! Sweep aggregation: one comparative table + one JSON document for a
+//! whole scenario grid.
+//!
+//! The JSON is hand-rolled (serde is unavailable offline) and fully
+//! deterministic: scenario order is grid order, stats keys are emitted in
+//! `BTreeMap` order, and floats print with Rust's shortest-roundtrip
+//! formatting — so a parallel and a serial run of the same grid produce
+//! byte-identical documents (asserted by `tests/harness_sweep.rs`).
+
+use super::scenario::ScenarioResult;
+use crate::model::benchkit::{f1, Table};
+
+/// Aggregated results of one sweep, in grid order.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    /// Per-scenario results, in the order the grid produced them.
+    pub results: Vec<ScenarioResult>,
+}
+
+/// Escape a string for inclusion in a JSON document.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl SweepReport {
+    /// Wrap finished scenario results.
+    pub fn new(results: Vec<ScenarioResult>) -> Self {
+        Self { results }
+    }
+
+    /// Useful external-memory bytes moved, whichever backend ran.
+    fn dram_bytes(r: &ScenarioResult) -> u64 {
+        r.stats.get("rpc.useful_rd_bytes")
+            + r.stats.get("rpc.useful_wr_bytes")
+            + r.stats.get("hyper.useful_rd_bytes")
+            + r.stats.get("hyper.useful_wr_bytes")
+    }
+
+    /// Comparative summary table (one row per scenario).
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "Sweep report — one SoC instance per scenario",
+            &["scenario", "cycles", "halted", "instr", "dram B", "CORE mW", "IO mW", "RAM mW", "TOTAL mW"],
+        );
+        for r in &self.results {
+            t.row(&[
+                r.name.clone(),
+                r.cycles.to_string(),
+                if r.halted { "yes".into() } else { "-".into() },
+                r.stats.get("cpu.instr").to_string(),
+                Self::dram_bytes(r).to_string(),
+                f1(r.power.core_mw),
+                f1(r.power.io_mw),
+                f1(r.power.ram_mw),
+                f1(r.power.total()),
+            ]);
+        }
+        t
+    }
+
+    /// Serialize the whole report as a deterministic JSON document.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"scenarios\": [\n");
+        for (i, r) in self.results.iter().enumerate() {
+            out.push_str("    {\n");
+            out.push_str(&format!("      \"name\": \"{}\",\n", json_escape(&r.name)));
+            out.push_str(&format!("      \"workload\": \"{}\",\n", r.workload));
+            out.push_str(&format!("      \"backend\": \"{}\",\n", r.backend));
+            out.push_str(&format!("      \"spm_way_mask\": {},\n", r.spm_way_mask));
+            out.push_str(&format!("      \"dsa_ports\": {},\n", r.dsa_ports));
+            out.push_str(&format!("      \"freq_hz\": {},\n", r.freq_hz));
+            out.push_str(&format!("      \"cycles\": {},\n", r.cycles));
+            out.push_str(&format!("      \"halted\": {},\n", r.halted));
+            out.push_str(&format!(
+                "      \"power_mw\": {{\"core\": {}, \"io\": {}, \"ram\": {}, \"total\": {}}},\n",
+                r.power.core_mw,
+                r.power.io_mw,
+                r.power.ram_mw,
+                r.power.total()
+            ));
+            out.push_str("      \"stats\": {");
+            let mut first = true;
+            for (k, v) in r.stats.iter() {
+                if !first {
+                    out.push_str(", ");
+                }
+                first = false;
+                out.push_str(&format!("\"{}\": {}", json_escape(k), v));
+            }
+            out.push_str("}\n");
+            out.push_str(if i + 1 == self.results.len() { "    }\n" } else { "    },\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::PowerReport;
+    use crate::platform::config::MemBackend;
+    use crate::sim::Stats;
+
+    fn fake(name: &str, cycles: u64) -> ScenarioResult {
+        let mut stats = Stats::new();
+        stats.add("cpu.instr", cycles / 2);
+        stats.add("rpc.useful_wr_bytes", 4096);
+        ScenarioResult {
+            name: name.to_string(),
+            workload: "nop",
+            backend: MemBackend::Rpc,
+            spm_way_mask: 0xff,
+            dsa_ports: 0,
+            freq_hz: 200.0e6,
+            cycles,
+            halted: false,
+            power: PowerReport { core_mw: 10.0, io_mw: 1.0, ram_mw: 2.0 },
+            stats,
+        }
+    }
+
+    #[test]
+    fn json_is_deterministic_and_wellformed() {
+        let rep = SweepReport::new(vec![fake("a", 100), fake("b", 200)]);
+        let j1 = rep.to_json();
+        let j2 = rep.to_json();
+        assert_eq!(j1, j2);
+        assert!(j1.contains("\"name\": \"a\""));
+        assert!(j1.contains("\"cycles\": 200"));
+        assert!(j1.contains("\"total\": 13"));
+        // crude balance check
+        assert_eq!(j1.matches('{').count(), j1.matches('}').count());
+        assert_eq!(j1.matches('[').count(), j1.matches(']').count());
+    }
+
+    #[test]
+    fn json_escapes_special_characters() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn table_has_one_row_per_scenario() {
+        let rep = SweepReport::new(vec![fake("a", 100), fake("b", 200)]);
+        let t = rep.table();
+        assert_eq!(t.rows.len(), 2);
+        assert!(t.render().contains("TOTAL mW"));
+    }
+}

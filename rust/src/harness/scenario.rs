@@ -1,0 +1,246 @@
+//! One sweep point: a platform configuration + a workload, run to
+//! completion on a private SoC instance.
+
+use crate::dsa::traffic::TrafficGen;
+use crate::model::{PowerModel, PowerReport};
+use crate::platform::config::MemBackend;
+use crate::platform::memmap::DRAM_BASE;
+use crate::platform::{CheshireConfig, Soc};
+use crate::sim::Stats;
+use crate::workloads;
+
+/// The workloads a scenario can run — the paper's Fig. 11 set, with the
+/// knobs the benches use (window length, matrix size, DMA burst shape).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Workload {
+    /// CVA6 parked on `wfi` for a fixed measurement window.
+    Wfi {
+        /// Measurement window in cycles (the program never halts).
+        window: u64,
+    },
+    /// Straight-line `nop` loop for a fixed measurement window.
+    Nop {
+        /// Measurement window in cycles (the program never halts).
+        window: u64,
+    },
+    /// Polybench 2MM (E = A·B in SPM, F = E·C in DRAM); halts on ebreak.
+    TwoMm {
+        /// Square matrix dimension (`n×n` f64 operands).
+        n: usize,
+    },
+    /// DMA burst streaming SPM → DRAM; halts when all reps complete.
+    Mem {
+        /// Bytes per DMA transfer.
+        len: u32,
+        /// Number of back-to-back transfers.
+        reps: u32,
+        /// Largest AXI burst the DMA may issue, in bytes.
+        max_burst: u32,
+    },
+}
+
+impl Workload {
+    /// Short stable name used in scenario labels and reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Workload::Wfi { .. } => "wfi",
+            Workload::Nop { .. } => "nop",
+            Workload::TwoMm { .. } => "twomm",
+            Workload::Mem { .. } => "mem",
+        }
+    }
+
+    /// Parse a user-facing workload name with bench-calibrated defaults
+    /// (`wfi` | `nop` | `twomm` | `mem`).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "wfi" => Ok(Workload::Wfi { window: 200_000 }),
+            "nop" => Ok(Workload::Nop { window: 200_000 }),
+            "twomm" | "2mm" => Ok(Workload::TwoMm { n: 16 }),
+            "mem" => Ok(Workload::Mem { len: 16 * 1024, reps: 2, max_burst: 2048 }),
+            other => Err(format!("unknown workload {other:?} (want wfi|nop|twomm|mem)")),
+        }
+    }
+
+    /// Assemble the program image and stage its operands into `soc`'s
+    /// DRAM. Returns the image (entry point is always `DRAM_BASE`).
+    pub fn stage(&self, soc: &mut Soc) -> Vec<u8> {
+        match *self {
+            Workload::Wfi { .. } => workloads::wfi_program(DRAM_BASE),
+            Workload::Nop { .. } => workloads::nop_program(DRAM_BASE),
+            Workload::TwoMm { n } => {
+                let l = workloads::TwoMmLayout::new(n);
+                let mk = |seed: u64| -> Vec<u8> {
+                    (0..n * n)
+                        .flat_map(|i| (((i as f64 * 0.61 + seed as f64) % 3.0) - 1.5).to_le_bytes())
+                        .collect()
+                };
+                soc.dram_write((l.a - DRAM_BASE) as usize, &mk(1));
+                soc.dram_write((l.b - DRAM_BASE) as usize, &mk(2));
+                soc.dram_write((l.c - DRAM_BASE) as usize, &mk(3));
+                workloads::twomm_program(DRAM_BASE, &l)
+            }
+            Workload::Mem { len, reps, max_burst } => {
+                workloads::mem_program(DRAM_BASE, len, reps, max_burst)
+            }
+        }
+    }
+
+    /// Whether the program runs for a fixed window (`wfi`/`nop`) rather
+    /// than halting on its own (`twomm`/`mem`).
+    pub fn fixed_window(&self) -> Option<u64> {
+        match *self {
+            Workload::Wfi { window } | Workload::Nop { window } => Some(window),
+            _ => None,
+        }
+    }
+}
+
+/// A fully specified sweep point. `run` is a pure function of this
+/// struct, which is what makes the parallel sweep deterministic.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Human-readable label, unique within a sweep.
+    pub name: String,
+    /// The platform instance to build.
+    pub cfg: CheshireConfig,
+    /// The program to run on it.
+    pub workload: Workload,
+    /// Safety bound for self-halting workloads.
+    pub max_cycles: u64,
+}
+
+impl Scenario {
+    /// Build a scenario with a generated `name` of the form
+    /// `<workload>/<backend>/spm<mask>/dsa<n>`.
+    pub fn new(cfg: CheshireConfig, workload: Workload, max_cycles: u64) -> Self {
+        let name = format!(
+            "{}/{}/spm{:02x}/dsa{}",
+            workload.name(),
+            cfg.backend,
+            cfg.spm_way_mask,
+            cfg.dsa_port_pairs
+        );
+        Self { name, cfg, workload, max_cycles }
+    }
+
+    /// Build the SoC, stage the workload, run it, and distill the result.
+    ///
+    /// When the configuration has DSA port pairs, each is populated with a
+    /// [`TrafficGen`] streaming fixed-seed bursts at the top of DRAM — the
+    /// paper's "DSA saturating its attachment point" contention load — so
+    /// the `dsa` axis measures interconnect interference, not idle ports.
+    pub fn run(&self) -> ScenarioResult {
+        let mut soc = Soc::new(self.cfg.clone());
+        for i in 0..self.cfg.dsa_port_pairs {
+            // 1 KiB bursts, ~50 % writes, one burst per 64 cycles, forever,
+            // confined to the top quarter of DRAM — above the MEM
+            // workload's fixed DMA destination (offset 8 MiB) for any
+            // dram_bytes > ~11 MiB, so the dsa axis measures interconnect
+            // interference rather than destination clobbering. Never larger
+            // than DRAM itself, so the base stays in-range.
+            let window = (self.cfg.dram_bytes as u64 / 4).max(1);
+            soc.plug_dsa(
+                i,
+                Box::new(TrafficGen::new(
+                    DRAM_BASE + self.cfg.dram_bytes as u64 - window,
+                    window,
+                    1024,
+                    128,
+                    64,
+                    0,
+                )),
+            );
+        }
+        let img = self.workload.stage(&mut soc);
+        soc.preload(&img, DRAM_BASE);
+        let (cycles, halted) = match self.workload.fixed_window() {
+            Some(window) => {
+                soc.run_cycles(window);
+                (window, false)
+            }
+            None => {
+                let used = soc.run(self.max_cycles);
+                (used, soc.cpu.halted)
+            }
+        };
+        // cycles.max(1): a degenerate zero-cycle window must not put
+        // NaN/inf power values into the JSON report
+        let power = PowerModel::neo().power(&soc.stats, cycles.max(1), self.cfg.freq_hz);
+        ScenarioResult {
+            name: self.name.clone(),
+            workload: self.workload.name(),
+            backend: self.cfg.backend,
+            spm_way_mask: self.cfg.spm_way_mask,
+            dsa_ports: self.cfg.dsa_port_pairs,
+            freq_hz: self.cfg.freq_hz,
+            cycles,
+            halted,
+            power,
+            stats: soc.stats.clone(),
+        }
+    }
+}
+
+/// Everything a sweep needs to compare one finished scenario against the
+/// others: identity, outcome, the power split, and the full event counts.
+#[derive(Debug, Clone)]
+pub struct ScenarioResult {
+    /// Scenario label (see [`Scenario::new`]).
+    pub name: String,
+    /// Workload short name.
+    pub workload: &'static str,
+    /// Memory backend the scenario ran against.
+    pub backend: MemBackend,
+    /// LLC way mask configured as SPM.
+    pub spm_way_mask: u32,
+    /// Number of DSA port pairs (each carrying a traffic generator).
+    pub dsa_ports: usize,
+    /// Clock frequency the power numbers are reported at.
+    pub freq_hz: f64,
+    /// Cycles consumed (the fixed window for wfi/nop, actual for others).
+    pub cycles: u64,
+    /// Whether the program reached its `ebreak` (always `false` for
+    /// fixed-window workloads, which never halt by design).
+    pub halted: bool,
+    /// CORE/IO/RAM power split at `freq_hz`.
+    pub power: PowerReport,
+    /// Complete event-count registry of the run.
+    pub stats: Stats,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_parse_roundtrips_names() {
+        for name in ["wfi", "nop", "twomm", "mem"] {
+            assert_eq!(Workload::parse(name).unwrap().name(), name);
+        }
+        assert!(Workload::parse("fft").is_err());
+    }
+
+    #[test]
+    fn scenario_name_encodes_all_axes() {
+        let mut cfg = CheshireConfig::neo();
+        cfg.spm_way_mask = 0x0f;
+        cfg.dsa_port_pairs = 1;
+        cfg.backend = MemBackend::HyperRam;
+        let sc = Scenario::new(cfg, Workload::parse("mem").unwrap(), 1_000_000);
+        assert_eq!(sc.name, "mem/hyperram/spm0f/dsa1");
+    }
+
+    #[test]
+    fn nop_scenario_runs_deterministically() {
+        let cfg = CheshireConfig::neo();
+        let sc = Scenario::new(cfg, Workload::Nop { window: 20_000 }, 0);
+        let a = sc.run();
+        let b = sc.run();
+        assert_eq!(a.cycles, 20_000);
+        assert!(!a.halted);
+        assert!(a.stats.get("cpu.instr") > 10_000);
+        assert_eq!(a.stats.get("cpu.instr"), b.stats.get("cpu.instr"));
+        assert_eq!(a.cycles, b.cycles);
+    }
+}

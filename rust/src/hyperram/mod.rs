@@ -34,8 +34,9 @@ pub struct HyperTiming {
     pub t_acc: u64,
     /// Bytes per bus cycle (8 b DDR = 2 B).
     pub bytes_per_cycle: u64,
-    /// Device-internal refresh interval and stall (self-refresh).
+    /// Device-internal self-refresh interval.
     pub t_refi: u64,
+    /// Bus stall per self-refresh collision.
     pub t_ref_stall: u64,
     /// Maximum linear burst before the controller must re-issue CS
     /// (chip-select low time limit).
@@ -43,6 +44,7 @@ pub struct HyperTiming {
 }
 
 impl HyperTiming {
+    /// Datasheet timing at 200 MHz.
     pub fn c200() -> Self {
         Self { t_ca: 3, t_acc: 6, bytes_per_cycle: 2, t_refi: 800, t_ref_stall: 12, max_burst: 1024 }
     }
@@ -79,6 +81,7 @@ pub struct HyperRam {
 }
 
 impl HyperRam {
+    /// A `size`-byte device mapped at `base`, with 200 MHz HyperBus timing.
     pub fn new(base: u64, size: usize) -> Self {
         Self {
             base,
@@ -91,14 +94,18 @@ impl HyperRam {
         }
     }
 
+    /// Read-only view of the device storage (test preload/readback).
     pub fn raw(&self) -> &[u8] {
         &self.storage
     }
 
+    /// Mutable view of the device storage (test preload).
     pub fn raw_mut(&mut self) -> &mut [u8] {
         &mut self.storage
     }
 
+    /// Advance one cycle: serialize AXI bursts into HyperBus chunks,
+    /// apply CA/access/refresh timing, move data.
     pub fn tick(&mut self, bus: &AxiBus, now: Cycle, stats: &mut Stats) {
         // autonomous self-refresh: the device stalls the bus; the
         // controller cannot reschedule around it (paper: "precludes

@@ -10,22 +10,34 @@
 //! * `offload [--n N] [--tile T] [--artifacts DIR]` — tiled matmul through
 //!   the DSA plug-in (DMA + SPM + Pallas-compiled kernel via PJRT).
 //! * `boot` — autonomous SPI-flash GPT boot flow.
+//! * `sweep [--workloads a,b] [--backends rpc,hyperram] [--spm-masks m,..]
+//!   [--dsa n,..] [--threads N] [--serial] [--json PATH]` — expand the
+//!   axis lists into a configuration grid, run one SoC instance per
+//!   scenario in parallel (`crate::harness`), and emit one aggregated
+//!   table + JSON report. Defaults to the paper's §III-B comparison:
+//!   {nop, mem} × {rpc, hyperram}.
 
 use cheshire::asm::reg::*;
 use cheshire::asm::Asm;
 use cheshire::coordinator::OffloadCoordinator;
 use cheshire::dsa::matmul::MatmulDsa;
+use cheshire::harness::{self, SweepGrid, SweepReport, Workload};
 use cheshire::model::{AreaModel, PowerModel};
 use cheshire::periph::gpt;
 use cheshire::platform::cli::Args;
 use cheshire::platform::memmap::*;
-use cheshire::platform::{CheshireConfig, Soc};
+use cheshire::platform::{CheshireConfig, MemBackend, Soc};
 use cheshire::runtime::XlaRuntime;
 use cheshire::sim::Stats;
-use cheshire::workloads;
 use std::rc::Rc;
 
 fn load_config(args: &Args) -> CheshireConfig {
+    load_config_inner(args, true)
+}
+
+/// `apply_dsa` is false for `sweep`, where `--dsa` is a comma-separated
+/// axis list handled by the grid rather than a single port-pair count.
+fn load_config_inner(args: &Args, apply_dsa: bool) -> CheshireConfig {
     let mut cfg = match args.get("config") {
         Some(path) => {
             let text = std::fs::read_to_string(path).expect("read config file");
@@ -36,25 +48,120 @@ fn load_config(args: &Args) -> CheshireConfig {
     if let Some(f) = args.get("freq-mhz") {
         cfg.freq_hz = f.parse::<f64>().expect("freq") * 1e6;
     }
-    if let Some(n) = args.get("dsa") {
-        cfg.dsa_port_pairs = n.parse().expect("dsa pairs");
+    if apply_dsa {
+        if let Some(n) = args.get("dsa") {
+            cfg.dsa_port_pairs = n.parse().expect("dsa pairs");
+        }
     }
     cfg
 }
 
 fn main() {
-    let args = Args::from_env(&["info", "run", "offload", "boot"], &["stats"]);
+    let args = Args::from_env(&["info", "run", "offload", "boot", "sweep"], &["stats", "serial"]);
     match args.subcommand.as_deref() {
         Some("info") => info(&args),
         Some("run") => run(&args),
         Some("offload") => offload(&args),
         Some("boot") => boot(&args),
+        Some("sweep") => sweep(&args),
         _ => {
-            eprintln!("usage: cheshire <info|run|offload|boot> [options]");
+            eprintln!("usage: cheshire <info|run|offload|boot|sweep> [options]");
             eprintln!("  run <wfi|nop|twomm|mem> [--cycles N] [--freq-mhz F]");
             eprintln!("  offload [--n 128] [--tile 64] [--artifacts artifacts/]");
             eprintln!("  boot");
+            eprintln!("  sweep [--workloads nop,mem] [--backends rpc,hyperram]");
+            eprintln!("        [--spm-masks 0xff,0x0f] [--dsa 0,1] [--cycles N]");
+            eprintln!("        [--threads N] [--serial] [--json sweep.json|-]");
             std::process::exit(2);
+        }
+    }
+}
+
+/// Parse a comma-separated option into typed axis values.
+fn parse_axis<T>(args: &Args, key: &str, parse: impl Fn(&str) -> Result<T, String>) -> Option<Vec<T>> {
+    args.get(key).map(|csv| {
+        csv.split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| parse(s).unwrap_or_else(|e| {
+                eprintln!("--{key}: {e}");
+                std::process::exit(2);
+            }))
+            .collect()
+    })
+}
+
+fn parse_u32_maybe_hex(s: &str) -> Result<u32, String> {
+    let s = s.trim();
+    match s.strip_prefix("0x") {
+        Some(h) => u32::from_str_radix(h, 16).map_err(|e| format!("bad mask {s:?}: {e}")),
+        None => s.parse().map_err(|e| format!("bad value {s:?}: {e}")),
+    }
+}
+
+fn sweep(args: &Args) {
+    let base = load_config_inner(args, false);
+    let mut grid = SweepGrid::default_cli(base);
+    if let Some(wls) = parse_axis(args, "workloads", Workload::parse) {
+        grid.workloads = wls;
+    }
+    if let Some(bks) = parse_axis(args, "backends", MemBackend::parse) {
+        grid.backends = bks;
+    }
+    if let Some(masks) = parse_axis(args, "spm-masks", |s| parse_u32_maybe_hex(s)) {
+        grid.spm_way_masks = masks;
+    }
+    if let Some(dsa) = parse_axis(args, "dsa", |s| {
+        s.trim().parse::<usize>().map_err(|e| format!("bad dsa count {s:?}: {e}"))
+    }) {
+        grid.dsa_ports = dsa;
+    }
+    // `--cycles` is the per-scenario bound for *every* workload: halting
+    // workloads get it as their run cap, fixed-window workloads have
+    // their measurement window clamped to it. At least 1 cycle — a
+    // zero-cycle window would make the power model divide by zero.
+    grid.max_cycles = args.get_u64("cycles", grid.max_cycles).max(1);
+    for wl in &mut grid.workloads {
+        if let Workload::Wfi { window } | Workload::Nop { window } = wl {
+            *window = (*window).min(grid.max_cycles);
+        }
+    }
+    if grid.is_empty() {
+        eprintln!("sweep: empty grid (an axis has no values)");
+        std::process::exit(2);
+    }
+
+    let scenarios = grid.scenarios();
+    let n = scenarios.len();
+    let threads = if args.flag("serial") {
+        1
+    } else {
+        args.get_u64("threads", harness::default_threads() as u64) as usize
+    };
+    eprintln!("sweep: {n} scenarios on {threads} thread(s)");
+    let t0 = std::time::Instant::now();
+    let results = harness::run_parallel(scenarios, threads);
+    let wall = t0.elapsed().as_secs_f64();
+    let report = SweepReport::new(results);
+    // with `--json -` the JSON document owns stdout; the table moves to
+    // stderr so `cheshire sweep --json - > out.json` stays parseable
+    let table = report.table().render();
+    if args.get("json") == Some("-") {
+        eprint!("{table}");
+    } else {
+        print!("{table}");
+    }
+    eprintln!("sweep: {n} scenarios in {wall:.2} s wall");
+
+    let json = report.to_json();
+    match args.get("json") {
+        Some("-") => print!("{json}"),
+        Some(path) => {
+            std::fs::write(path, &json).expect("write JSON report");
+            eprintln!("sweep: JSON report written to {path}");
+        }
+        None => {
+            std::fs::write("sweep.json", &json).expect("write JSON report");
+            eprintln!("sweep: JSON report written to sweep.json");
         }
     }
 }
@@ -70,32 +177,29 @@ fn run(args: &Args) {
     let which = args.positionals.first().map(|s| s.as_str()).unwrap_or("nop");
     let cfg = load_config(args);
     let freq = cfg.freq_hz;
-    let mut soc = Soc::new(cfg);
     let cycles = args.get_u64("cycles", 2_000_000);
-    let img = match which {
-        "wfi" => workloads::wfi_program(DRAM_BASE),
-        "nop" => workloads::nop_program(DRAM_BASE),
-        "twomm" => {
-            let n = args.get_u64("n", 32) as usize;
-            let l = workloads::TwoMmLayout::new(n);
-            let mk = |seed: u64| -> Vec<u8> {
-                (0..n * n)
-                    .flat_map(|i| (((i as f64 * 0.61 + seed as f64) % 3.0) - 1.5).to_le_bytes())
-                    .collect()
-            };
-            soc.dram_write((l.a - DRAM_BASE) as usize, &mk(1));
-            soc.dram_write((l.b - DRAM_BASE) as usize, &mk(2));
-            soc.dram_write((l.c - DRAM_BASE) as usize, &mk(3));
-            workloads::twomm_program(DRAM_BASE, &l)
-        }
-        "mem" => workloads::mem_program(DRAM_BASE, 64 * 1024, 8, 2048),
+    // staging lives in harness::Workload so `run` and `sweep` simulate
+    // identical programs; only the knob defaults differ here
+    let workload = match which {
+        "wfi" => Workload::Wfi { window: cycles },
+        "nop" => Workload::Nop { window: cycles },
+        "twomm" => Workload::TwoMm { n: args.get_u64("n", 32) as usize },
+        "mem" => Workload::Mem { len: 64 * 1024, reps: 8, max_burst: 2048 },
         other => {
             eprintln!("unknown workload {other}");
             std::process::exit(2);
         }
     };
+    let mut soc = Soc::new(cfg);
+    let img = workload.stage(&mut soc);
     soc.preload(&img, DRAM_BASE);
-    let used = soc.run(cycles);
+    let used = match workload.fixed_window() {
+        Some(window) => {
+            soc.run_cycles(window);
+            window
+        }
+        None => soc.run(cycles),
+    };
     let pm = PowerModel::neo();
     let p = pm.power(&soc.stats, used, freq);
     println!("workload={which} cycles={used} freq={:.0} MHz", freq / 1e6);

@@ -18,25 +18,31 @@ pub const GE_PER_SRAM_BIT: f64 = 0.6;
 /// One named component of a breakdown.
 #[derive(Debug, Clone)]
 pub struct Entry {
+    /// Component name (matches the paper's figure labels).
     pub name: &'static str,
+    /// Area in kGE.
     pub kge: f64,
 }
 
 /// A named area breakdown.
 #[derive(Debug, Clone)]
 pub struct Breakdown {
+    /// Components, in figure order.
     pub entries: Vec<Entry>,
 }
 
 impl Breakdown {
+    /// Total area in kGE.
     pub fn total(&self) -> f64 {
         self.entries.iter().map(|e| e.kge).sum()
     }
 
+    /// Fraction of the total taken by component `name`.
     pub fn frac(&self, name: &str) -> f64 {
         self.entries.iter().filter(|e| e.name == name).map(|e| e.kge).sum::<f64>() / self.total()
     }
 
+    /// Render an aligned kGE/% table.
     pub fn table(&self) -> String {
         let tot = self.total();
         let mut s = String::new();

@@ -25,12 +25,16 @@ pub fn measure<F: FnMut()>(warmup: usize, samples: usize, mut f: F) -> f64 {
 
 /// A printable results table.
 pub struct Table {
+    /// Title printed above the table.
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Data rows (each the same length as `headers`).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with a title and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Self {
         Self {
             title: title.to_string(),
@@ -39,11 +43,13 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header count).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len());
         self.rows.push(cells.to_vec());
     }
 
+    /// Render with right-aligned, width-fitted columns.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for r in &self.rows {
@@ -71,18 +77,21 @@ impl Table {
         out
     }
 
+    /// Print the rendered table to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }
 }
 
-/// Format helpers.
+/// Format with 1 decimal place.
 pub fn f1(v: f64) -> String {
     format!("{v:.1}")
 }
+/// Format with 2 decimal places.
 pub fn f2(v: f64) -> String {
     format!("{v:.2}")
 }
+/// Format with 3 decimal places.
 pub fn f3(v: f64) -> String {
     format!("{v:.3}")
 }

@@ -23,24 +23,41 @@ use crate::sim::Stats;
 #[derive(Debug, Clone)]
 pub struct Energies {
     // CORE domain
+    /// Clock tree + always-on logic, charged every cycle.
     pub clk_tree_per_cycle: f64,
+    /// Per retired instruction.
     pub instr_retired: f64,
+    /// Per L1 I-cache access.
     pub icache_access: f64,
+    /// Per L1 D-cache access.
     pub dcache_access: f64,
+    /// Extra cost of any cache miss (L1 or LLC).
     pub cache_miss: f64,
+    /// Extra cost of a floating-point instruction.
     pub fp_instr_extra: f64,
+    /// Per SPM access.
     pub spm_access: f64,
+    /// DMA datapath, per byte moved.
     pub dma_per_byte: f64,
+    /// Crossbar switching, per data beat.
     pub xbar_per_beat: f64,
+    /// RPC controller activity, per busy DB cycle.
     pub rpc_ctrl_busy_cycle: f64,
+    /// RPC frontend buffer SRAM, per 32 B word.
     pub buffer_per_word: f64,
     // IO domain
+    /// Pad toggling, per active pad-cycle.
     pub pad_per_cycle: f64,
     // RAM domain
+    /// DRAM standby (no Deep Power Down, §III-C), per cycle.
     pub dram_background_per_cycle: f64,
+    /// Per row activation.
     pub dram_act: f64,
+    /// Per 32 B word read.
     pub dram_rd_word: f64,
+    /// Per 32 B word written.
     pub dram_wr_word: f64,
+    /// Per auto-refresh command.
     pub dram_ref: f64,
 }
 
@@ -72,22 +89,29 @@ impl Energies {
 /// Power split per domain, in milliwatts.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PowerReport {
+    /// CORE supply (core logic + SRAMs).
     pub core_mw: f64,
+    /// IO supply (pads).
     pub io_mw: f64,
+    /// RAM supply (the DRAM chip).
     pub ram_mw: f64,
 }
 
 impl PowerReport {
+    /// Sum of the three domains.
     pub fn total(&self) -> f64 {
         self.core_mw + self.io_mw + self.ram_mw
     }
 }
 
+/// Stats → power translator for one calibration point.
 pub struct PowerModel {
+    /// The per-event energy table in use.
     pub e: Energies,
 }
 
 impl PowerModel {
+    /// Neo's calibration (1.2 V core, 200 MHz reference).
     pub fn neo() -> Self {
         Self { e: Energies::neo() }
     }
@@ -105,14 +129,22 @@ impl PowerModel {
             + e.spm_access * g("llc.spm_access")
             + e.dma_per_byte * (g("dma.rd_bytes") + g("dma.wr_bytes"))
             + e.xbar_per_beat * (g("xbar.w") + g("xbar.r"))
-            + e.rpc_ctrl_busy_cycle * (g("rpc.db_data_cycles") + g("rpc.db_cmd_cycles") + g("rpc.db_mask_cycles"))
+            + e.rpc_ctrl_busy_cycle
+                * (g("rpc.db_data_cycles")
+                    + g("rpc.db_cmd_cycles")
+                    + g("rpc.db_mask_cycles")
+                    + g("hyper.db_data_cycles")
+                    + g("hyper.db_cmd_cycles"))
             + e.buffer_per_word * (g("rpc.rd_words") + g("rpc.wr_words"));
-        let io = e.pad_per_cycle * (g("rpc.io_pad_cycles") + g("d2d.pad_cycles"));
+        // the HyperRAM baseline reports its own pad/word activity under
+        // hyper.* (zero on RPC-backed runs); words are 32 B, like RPC's
+        let io = e.pad_per_cycle
+            * (g("rpc.io_pad_cycles") + g("d2d.pad_cycles") + g("hyper.io_pad_cycles"));
         let ram = e.dram_background_per_cycle * cycles as f64
             + e.dram_act * g("rpc.act")
-            + e.dram_rd_word * g("rpc.rd_words")
-            + e.dram_wr_word * g("rpc.wr_words")
-            + e.dram_ref * g("rpc.ref");
+            + e.dram_rd_word * (g("rpc.rd_words") + g("hyper.useful_rd_bytes") / 32.0)
+            + e.dram_wr_word * (g("rpc.wr_words") + g("hyper.useful_wr_bytes") / 32.0)
+            + e.dram_ref * (g("rpc.ref") + g("hyper.self_refresh"));
         (core, io, ram)
     }
 
@@ -128,7 +160,10 @@ impl PowerModel {
     /// Interface energy per useful byte (the Γ headline; write direction).
     pub fn pj_per_byte(&self, s: &Stats, cycles: u64) -> f64 {
         let (core, io, ram) = self.energy_pj(s, cycles);
-        let bytes = (s.get("rpc.useful_wr_bytes") + s.get("rpc.useful_rd_bytes")) as f64;
+        let bytes = (s.get("rpc.useful_wr_bytes")
+            + s.get("rpc.useful_rd_bytes")
+            + s.get("hyper.useful_wr_bytes")
+            + s.get("hyper.useful_rd_bytes")) as f64;
         (core + io + ram) / bytes.max(1.0)
     }
 

@@ -9,8 +9,11 @@ use std::collections::HashMap;
 /// Parsed arguments: subcommand, options, positionals.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// The recognized subcommand, if any.
     pub subcommand: Option<String>,
+    /// `--key value` / `--key=value` / `--flag` options (flags map to `"true"`).
     pub options: HashMap<String, String>,
+    /// Everything else, in order.
     pub positionals: Vec<String>,
 }
 
@@ -41,22 +44,27 @@ impl Args {
         a
     }
 
+    /// Parse the process arguments (skipping argv[0]).
     pub fn from_env(subcommands: &[&str], flags: &[&str]) -> Self {
         Self::parse(std::env::args().skip(1), subcommands, flags)
     }
 
+    /// Raw option value, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// Option parsed as `u64`, or `default` when absent/unparsable.
     pub fn get_u64(&self, key: &str, default: u64) -> u64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Option parsed as `f64`, or `default` when absent/unparsable.
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Whether a boolean flag is set.
     pub fn flag(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }

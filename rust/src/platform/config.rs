@@ -9,33 +9,83 @@
 
 use std::collections::HashMap;
 
+/// Which external-memory subsystem backs the LLC refill port.
+///
+/// The paper's §III-B comparison: Cheshire's RPC DRAM controller vs. the
+/// HyperBus (HyperRAM) interfaces integrated by HULK-V and Vega. Both are
+/// full cycle-level models ([`crate::rpc`] / [`crate::hyperram`]); the
+/// sweep harness ([`crate::harness`]) uses this axis to regenerate the
+/// bandwidth/energy comparison on identical workloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MemBackend {
+    /// Etron RPC DRAM behind the paper's controller (the Neo default).
+    #[default]
+    Rpc,
+    /// Cypress HyperRAM behind a HyperBus-timed datapath (the baseline).
+    HyperRam,
+}
+
+impl MemBackend {
+    /// Parse a user-facing name (`rpc` | `hyperram`).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "rpc" => Ok(Self::Rpc),
+            "hyperram" | "hyper" | "hyperbus" => Ok(Self::HyperRam),
+            other => Err(format!("unknown memory backend {other:?} (want rpc|hyperram)")),
+        }
+    }
+}
+
+impl std::fmt::Display for MemBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Rpc => "rpc",
+            Self::HyperRam => "hyperram",
+        })
+    }
+}
+
+/// Full platform configuration (one SoC instance).
 #[derive(Debug, Clone, PartialEq)]
 pub struct CheshireConfig {
     /// System clock in Hz (Neo: 200 MHz nominal, 325 MHz max).
     pub freq_hz: f64,
-    /// Crossbar data width in bytes / address bits.
+    /// Crossbar data width in bytes.
     pub data_bytes: usize,
+    /// Crossbar address width in bits.
     pub addr_bits: u32,
     /// DSA manager/subordinate port pairs on the crossbar (Neo: 0).
     pub dsa_port_pairs: usize,
-    /// CVA6 L1 caches.
+    /// CVA6 L1 instruction-cache size in bytes.
     pub icache_bytes: usize,
+    /// CVA6 L1 data-cache size in bytes.
     pub dcache_bytes: usize,
+    /// CVA6 L1 cache associativity (ways).
     pub l1_ways: usize,
-    /// LLC geometry + initial SPM way mask.
+    /// LLC total size in bytes.
     pub llc_bytes: usize,
+    /// LLC associativity (ways), each individually maskable as SPM.
     pub llc_ways: usize,
+    /// Initial LLC way mask: set bits are SPM ways, clear bits cache
+    /// ways (Neo boots all-SPM, `0xff`).
     pub spm_way_mask: u32,
-    /// RPC frontend buffers.
+    /// RPC frontend read-buffer size in bytes.
     pub rpc_rd_buf: usize,
+    /// RPC frontend write-buffer size in bytes.
     pub rpc_wr_buf: usize,
     /// External DRAM size.
     pub dram_bytes: usize,
-    /// Optional peripherals.
+    /// External-memory subsystem (RPC DRAM vs. HyperRAM baseline).
+    pub backend: MemBackend,
+    /// Instantiate the UART.
     pub uart: bool,
+    /// Instantiate the SPI host.
     pub spi: bool,
+    /// Instantiate the I2C host.
     pub i2c: bool,
+    /// Instantiate the GPIO block.
     pub gpio: bool,
+    /// Instantiate the VGA controller (an extra AXI manager).
     pub vga: bool,
     /// Boot mode (see `periph::soc_ctrl`).
     pub boot_mode: u32,
@@ -58,6 +108,7 @@ impl CheshireConfig {
             rpc_rd_buf: 8 * 1024,
             rpc_wr_buf: 8 * 1024,
             dram_bytes: 32 * 1024 * 1024,
+            backend: MemBackend::Rpc,
             uart: true,
             spi: true,
             i2c: true,
@@ -105,6 +156,9 @@ impl CheshireConfig {
         if let Some(v) = get_u("platform.dram_mib") {
             c.dram_bytes = v as usize * 1024 * 1024;
         }
+        if let Some(v) = kv.get("platform.backend").and_then(|v| v.as_str()) {
+            c.backend = MemBackend::parse(v)?;
+        }
         if let Some(v) = get_u("llc.size_kib") {
             c.llc_bytes = v as usize * 1024;
         }
@@ -141,19 +195,25 @@ impl CheshireConfig {
 /// A parsed TOML-subset value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// Integer literal (decimal, `0x` hex, `_` separators).
     Int(i64),
+    /// Float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// Double-quoted string.
     Str(String),
 }
 
 impl Value {
+    /// The value as a non-negative integer, if it is one.
     pub fn as_u64(&self) -> Option<u64> {
         match self {
             Value::Int(i) if *i >= 0 => Some(*i as u64),
             _ => None,
         }
     }
+    /// The value as a float (integers widen), if numeric.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Int(i) => Some(*i as f64),
@@ -161,12 +221,14 @@ impl Value {
             _ => None,
         }
     }
+    /// The value as a boolean, if it is one.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The value as a string, if it is one.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -280,6 +342,16 @@ mod tests {
         assert_eq!(c.rpc_rd_buf, 4096);
         assert!(!c.vga);
         assert!(c.uart, "unspecified fields keep Neo defaults");
+    }
+
+    #[test]
+    fn backend_parses_from_toml_and_strings() {
+        let c = CheshireConfig::from_toml("[platform]\nbackend = \"hyperram\"").unwrap();
+        assert_eq!(c.backend, MemBackend::HyperRam);
+        assert_eq!(CheshireConfig::neo().backend, MemBackend::Rpc);
+        assert_eq!(MemBackend::parse("rpc").unwrap(), MemBackend::Rpc);
+        assert!(MemBackend::parse("sdram").is_err());
+        assert_eq!(MemBackend::HyperRam.to_string(), "hyperram");
     }
 
     #[test]

@@ -1,37 +1,50 @@
 //! The Cheshire memory map (mirrors the open-source project's layout).
 
-/// Boot ROM (execute-in-place, read-only).
+/// Boot ROM base (execute-in-place, read-only).
 pub const BOOTROM_BASE: u64 = 0x0100_0000;
+/// Boot ROM window size.
 pub const BOOTROM_SIZE: u64 = 0x0004_0000;
 
-/// CLINT (core-local interruptor).
+/// CLINT (core-local interruptor) base.
 pub const CLINT_BASE: u64 = 0x0204_0000;
+/// CLINT window size.
 pub const CLINT_SIZE: u64 = 0x0001_0000;
 
-/// Regbus peripheral window.
+/// SoC control registers (first window of the Regbus peripheral block).
 pub const SOC_CTRL_BASE: u64 = 0x0300_0000;
+/// DMA engine register window.
 pub const DMA_BASE: u64 = 0x0300_1000;
+/// UART register window.
 pub const UART_BASE: u64 = 0x0300_2000;
+/// I2C host register window.
 pub const I2C_BASE: u64 = 0x0300_3000;
+/// SPI host register window.
 pub const SPI_BASE: u64 = 0x0300_4000;
+/// GPIO register window.
 pub const GPIO_BASE: u64 = 0x0300_5000;
+/// LLC way-mask configuration register window.
 pub const LLC_CFG_BASE: u64 = 0x0300_6000;
+/// VGA controller register window.
 pub const VGA_BASE: u64 = 0x0300_7000;
+/// RPC DRAM manager (timing registers) window.
 pub const RPC_MGR_BASE: u64 = 0x0300_8000;
+/// Size of each Regbus peripheral window.
 pub const PERIPH_WIN_SIZE: u64 = 0x1000;
 
-/// PLIC.
+/// PLIC (platform-level interrupt controller) base.
 pub const PLIC_BASE: u64 = 0x0c00_0000;
+/// PLIC window size.
 pub const PLIC_SIZE: u64 = 0x0040_0000;
 
-/// DSA subordinate windows (one per port pair).
+/// First DSA subordinate window (one [`DSA_WIN_SIZE`] window per pair).
 pub const DSA_BASE: u64 = 0x6000_0000;
+/// Size of each DSA subordinate window.
 pub const DSA_WIN_SIZE: u64 = 0x0100_0000;
 
-/// LLC scratchpad window.
+/// LLC scratchpad (SPM) window base.
 pub const SPM_BASE: u64 = 0x7000_0000;
 
-/// External RPC DRAM.
+/// External RPC DRAM base.
 pub const DRAM_BASE: u64 = 0x8000_0000;
 
 #[cfg(test)]

@@ -11,5 +11,5 @@ pub mod memmap;
 pub mod soc;
 pub mod cli;
 
-pub use config::CheshireConfig;
+pub use config::{CheshireConfig, MemBackend};
 pub use soc::Soc;

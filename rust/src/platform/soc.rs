@@ -13,12 +13,13 @@ use crate::cache::llc::{Llc, LlcCfg, LlcRegs, WayMask};
 use crate::cpu::{Cva6, Cva6Cfg};
 use crate::dma::{DmaEngine, DmaRegs, SharedDma};
 use crate::dsa::DsaPlugin;
+use crate::hyperram::HyperRam;
 use crate::irq::{Clint, Plic};
 use crate::periph::soc_ctrl::SocCtrl;
 use crate::periph::uart::Uart;
 use crate::periph::vga::{Vga, VgaScanout};
 use crate::periph::{build_bootrom, Gpio, I2cEeprom, SpiHost};
-use crate::platform::config::CheshireConfig;
+use crate::platform::config::{CheshireConfig, MemBackend};
 use crate::platform::memmap::*;
 use crate::rpc::manager::ManagerRegs;
 use crate::rpc::RpcSubsystem;
@@ -28,15 +29,23 @@ use std::rc::Rc;
 
 type Shared<T> = Rc<RefCell<T>>;
 
+/// The assembled platform: all managers, the crossbar, all subordinates,
+/// and the shared peripheral handles, advanced one cycle per [`Soc::tick`].
 pub struct Soc {
+    /// The configuration this instance was built from.
     pub cfg: CheshireConfig,
+    /// Global cycle counter + frequency for wall-time conversion.
     pub clock: Clock,
+    /// Event-count registry every component bumps.
     pub stats: Stats,
 
     // managers
+    /// The CVA6 host CPU (core + L1 caches + AXI manager port).
     pub cpu: Cva6,
     cpu_bus: AxiBus,
+    /// The DMA engine's bus-side half.
     pub dma: DmaEngine,
+    /// The DMA engine's register state (shared with its Regbus front door).
     pub dma_state: SharedDma,
     dma_bus: AxiBus,
     vga_scan: VgaScanout,
@@ -50,28 +59,43 @@ pub struct Soc {
     xbar: Xbar,
 
     // subordinates
+    /// The last-level cache / SPM hybrid.
     pub llc: Llc,
+    /// Runtime-reconfigurable LLC way mask (shared with `LlcRegs`).
     pub llc_mask: WayMask,
     llc_sub_bus: AxiBus,
     llc_mgr_bus: AxiBus,
+    /// The RPC DRAM subsystem (active unless `cfg.backend` selects HyperRAM).
     pub rpc: RpcSubsystem,
+    /// HyperRAM baseline backend; `Some` iff `cfg.backend == HyperRam`,
+    /// in which case it replaces `rpc` on the LLC refill port.
+    pub hyperram: Option<HyperRam>,
     bootrom: MemSub,
     bootrom_bus: AxiBus,
     bridge: Axi2Reg,
+    /// The Regbus demultiplexer all simple peripherals hang off.
     pub regbus: RegDemux,
     bridge_bus: AxiBus,
 
     // shared peripheral handles
+    /// Core-local interruptor (timer + software interrupts).
     pub clint: Shared<Clint>,
+    /// Platform-level interrupt controller.
     pub plic: Shared<Plic>,
+    /// UART handle (e.g. `uart.borrow().tx_string()` to read output).
     pub uart: Shared<Uart>,
+    /// SPI host handle (carries the boot flash model).
     pub spi: Shared<SpiHost>,
+    /// I2C EEPROM handle.
     pub i2c: Shared<I2cEeprom>,
+    /// GPIO handle.
     pub gpio: Shared<Gpio>,
+    /// SoC control registers (boot mode, scratch, BOOT_DONE).
     pub soc_ctrl: Shared<SocCtrl>,
 }
 
 impl Soc {
+    /// Build and wire every block of the platform from `cfg`.
     pub fn new(cfg: CheshireConfig) -> Self {
         let stats = Stats::new();
         let clock = Clock::new(cfg.freq_hz);
@@ -135,8 +159,23 @@ impl Soc {
             spm_way_mask: cfg.spm_way_mask,
         });
         let llc_mgr_bus = axi_bus(16);
-        let mut rpc = RpcSubsystem::neo(DRAM_BASE);
-        rpc.frontend = crate::rpc::Frontend::new(DRAM_BASE, cfg.rpc_rd_buf, cfg.rpc_wr_buf);
+        let hyperram = match cfg.backend {
+            MemBackend::Rpc => None,
+            MemBackend::HyperRam => Some(HyperRam::new(DRAM_BASE, cfg.dram_bytes)),
+        };
+        // In HyperRAM mode `rpc` stays for API compatibility but is never
+        // ticked, so its device shrinks to the minimum legal size — a
+        // parallel HyperRAM sweep must not double-allocate DRAM per SoC.
+        let rpc_dev_bytes = match cfg.backend {
+            MemBackend::Rpc => cfg.dram_bytes,
+            MemBackend::HyperRam => crate::rpc::device::N_BANKS * crate::rpc::device::PAGE_BYTES,
+        };
+        let timing = crate::rpc::TimingParams::neo();
+        let rpc = RpcSubsystem {
+            frontend: crate::rpc::Frontend::new(DRAM_BASE, cfg.rpc_rd_buf, cfg.rpc_wr_buf),
+            ctrl: crate::rpc::Controller::new(timing.clone()),
+            device: crate::rpc::RpcDram::new(rpc_dev_bytes, timing),
+        };
 
         // --- boot ROM ---
         let mut bootrom = MemSub::new(BOOTROM_BASE, BOOTROM_SIZE as usize, cfg.data_bytes, 1);
@@ -220,6 +259,7 @@ impl Soc {
             llc_sub_bus,
             llc_mgr_bus,
             rpc,
+            hyperram,
             bootrom,
             bootrom_bus,
             bridge: Axi2Reg::new(),
@@ -241,6 +281,7 @@ impl Soc {
         self.dsa[idx] = Some(dsa);
     }
 
+    /// Mutable access to the DSA plugged into port pair `idx`, if any.
     pub fn dsa_mut(&mut self, idx: usize) -> Option<&mut Box<dyn DsaPlugin>> {
         self.dsa.get_mut(idx).and_then(|d| d.as_mut())
     }
@@ -249,7 +290,7 @@ impl Soc {
     /// SoC-control scratch registers, BOOT_DONE raised.
     pub fn preload(&mut self, image: &[u8], entry: u64) {
         let off = (entry - DRAM_BASE) as usize;
-        self.rpc.dram_raw_mut()[off..off + image.len()].copy_from_slice(image);
+        self.dram_raw_mut()[off..off + image.len()].copy_from_slice(image);
         let mut sc = self.soc_ctrl.borrow_mut();
         sc.scratch[0] = entry as u32;
         sc.scratch[1] = (entry >> 32) as u32;
@@ -278,7 +319,10 @@ impl Soc {
 
         // subordinates
         self.llc.tick(&self.llc_sub_bus, &self.llc_mgr_bus, stats);
-        self.rpc.tick(&self.llc_mgr_bus, now, stats);
+        match &mut self.hyperram {
+            Some(h) => h.tick(&self.llc_mgr_bus, now, stats),
+            None => self.rpc.tick(&self.llc_mgr_bus, now, stats),
+        }
         self.bootrom.tick(&self.bootrom_bus, stats);
         self.bridge.tick(&self.bridge_bus, &mut self.regbus, stats);
 
@@ -325,6 +369,7 @@ impl Soc {
         self.llc.spm_raw_mut()[offset..offset + bytes.len()].copy_from_slice(bytes);
     }
 
+    /// Direct SPM readback (debug-module path).
     pub fn spm_read(&self, offset: usize, len: usize) -> &[u8] {
         &self.llc.spm_raw()[offset..offset + len]
     }
@@ -343,13 +388,30 @@ impl Soc {
         bus.w.borrow_mut().push(W { data, strb: 0xf << lane0, last: true });
     }
 
-    /// Direct DRAM staging.
-    pub fn dram_write(&mut self, offset: usize, bytes: &[u8]) {
-        self.rpc.dram_raw_mut()[offset..offset + bytes.len()].copy_from_slice(bytes);
+    /// Raw storage of whichever external-memory backend is active.
+    pub fn dram_raw_mut(&mut self) -> &mut [u8] {
+        match &mut self.hyperram {
+            Some(h) => h.raw_mut(),
+            None => self.rpc.dram_raw_mut(),
+        }
     }
 
+    /// Read-only view of the active external-memory backend's storage.
+    pub fn dram_raw(&self) -> &[u8] {
+        match &self.hyperram {
+            Some(h) => h.raw(),
+            None => self.rpc.dram_raw(),
+        }
+    }
+
+    /// Direct DRAM staging.
+    pub fn dram_write(&mut self, offset: usize, bytes: &[u8]) {
+        self.dram_raw_mut()[offset..offset + bytes.len()].copy_from_slice(bytes);
+    }
+
+    /// Direct DRAM readback.
     pub fn dram_read(&self, offset: usize, len: usize) -> &[u8] {
-        &self.rpc.dram_raw()[offset..offset + len]
+        &self.dram_raw()[offset..offset + len]
     }
 }
 

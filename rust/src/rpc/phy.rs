@@ -13,7 +13,7 @@
 //!   strobes, the receive side delays DQS to sample mid-eye; both delays
 //!   are runtime-configurable registers (set during bring-up).
 //! * **SDR↔DDR conversion + serialization** — a 256 b word crosses the PHY
-//!   as 8 × 32 b subwords, one DB cycle each ([`WORD_CYCLES`]).
+//!   as 8 × 32 b subwords, one DB cycle each ([`TimingParams::WORD_CYCLES`]).
 //! * **CDC** — read data crosses back into the controller clock domain
 //!   through a 2-stage FIFO, adding `tcdc` cycles of read latency.
 

@@ -1,0 +1,141 @@
+//! The real PJRT-backed runtime (compiled only with `--features pjrt`).
+//!
+//! Requires the external `xla` (xla-rs) and `anyhow` crates, which the
+//! offline container does not ship; the build instructions for a
+//! PJRT-capable host are in `DESIGN.md` §Runtime.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A loaded, compiled artifact.
+pub struct Artifact {
+    /// Registry name (the `*.hlo.txt` stem).
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The runtime: one PJRT CPU client + a registry of compiled executables.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, Artifact>,
+    /// Directory the artifacts were loaded from.
+    pub dir: PathBuf,
+}
+
+impl XlaRuntime {
+    /// Create a client and load every `*.hlo.txt` under `dir`.
+    pub fn load_dir(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        let mut rt = Self { client, artifacts: HashMap::new(), dir: dir.to_path_buf() };
+        if dir.exists() {
+            for entry in std::fs::read_dir(dir)? {
+                let path = entry?.path();
+                let fname = path.file_name().unwrap_or_default().to_string_lossy().to_string();
+                if let Some(name) = fname.strip_suffix(".hlo.txt") {
+                    rt.load_file(name, &path)
+                        .with_context(|| format!("loading artifact {fname}"))?;
+                }
+            }
+        }
+        Ok(rt)
+    }
+
+    /// Compile one HLO-text file under `name`.
+    pub fn load_file(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.artifacts.insert(name.to_string(), Artifact { name: name.to_string(), exe });
+        Ok(())
+    }
+
+    /// Names of all loaded artifacts.
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.values().map(|a| a.name.as_str()).collect()
+    }
+
+    /// Whether artifact `name` is loaded.
+    pub fn has(&self, name: &str) -> bool {
+        self.artifacts.contains_key(name)
+    }
+
+    /// Execute artifact `name` on f32 input matrices (shape-erased: the
+    /// artifact's signature defines shapes; callers pass row-major data).
+    /// Returns the flattened f32 outputs of the 1-tuple result.
+    pub fn run_f32(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        let art = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name} (have: {:?})", self.names()))?;
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape input: {e:?}"))?;
+            lits.push(lit);
+        }
+        let result = art
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Execute with int32 inputs and int32 outputs (tinyML path: the
+    /// quantized kernels take i32-boxed int8 operands — the `xla` crate's
+    /// Literal API has no i8 constructor — and cast internally).
+    pub fn run_i32(&self, name: &str, inputs: &[(&[i32], &[usize])]) -> Result<Vec<i32>> {
+        let art = self.artifacts.get(name).ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(*data).reshape(&dims).map_err(|e| anyhow!("{e:?}"))?;
+            lits.push(lit);
+        }
+        let result = art.exe.execute::<xla::Literal>(&lits).map_err(|e| anyhow!("{e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("{e:?}"))?;
+        out.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// These tests require `make artifacts` to have run; they are skipped
+    /// (not failed) when artifacts are absent so `cargo test` works in a
+    /// fresh checkout.
+    #[test]
+    fn loads_and_runs_matmul_tile_artifact() {
+        let dir = artifacts_dir();
+        if !dir.join("matmul64.hlo.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = XlaRuntime::load_dir(&dir).expect("runtime");
+        assert!(rt.has("matmul64"));
+        let n = 64;
+        let a: Vec<f32> = (0..n * n).map(|i| (i % 7) as f32 * 0.25).collect();
+        let b: Vec<f32> = (0..n * n).map(|i| ((i * 3) % 5) as f32 * 0.5).collect();
+        let got = rt.run_f32("matmul64", &[(&a, &[n, n]), (&b, &[n, n])]).expect("run");
+        // spot-check a few entries against a scalar reference
+        for &(i, j) in &[(0usize, 0usize), (3, 17), (63, 63)] {
+            let want: f32 = (0..n).map(|k| a[i * n + k] * b[k * n + j]).sum();
+            let g = got[i * n + j];
+            assert!((g - want).abs() < 1e-2, "({i},{j}): {g} vs {want}");
+        }
+    }
+}

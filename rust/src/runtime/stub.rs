@@ -1,0 +1,84 @@
+//! Offline stub of the PJRT runtime (the default build).
+//!
+//! Presents the exact [`XlaRuntime`] API of the real backend but never
+//! loads or executes artifacts: [`XlaRuntime::has`] is always `false`, so
+//! every consumer (e.g. [`crate::dsa::matmul::MatmulDsa`]) takes its
+//! native-Rust fallback path — identical numerics, identical simulated
+//! traffic, no Python or XLA anywhere. Build with `--features pjrt` (and
+//! the `xla`/`anyhow` crates available) for the real thing.
+
+use std::path::{Path, PathBuf};
+
+/// Error type of the stub runtime (mirrors `anyhow::Error` usage: callers
+/// only ever format it).
+#[derive(Debug)]
+pub struct RuntimeError(pub String);
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// Stub result alias so signatures match the `pjrt` build.
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(RuntimeError(format!(
+        "{what}: built without the `pjrt` feature — the DSA uses its native fallback"
+    )))
+}
+
+/// The stub runtime: records the artifact directory, registers nothing.
+pub struct XlaRuntime {
+    /// Directory the runtime was pointed at (kept for diagnostics).
+    pub dir: PathBuf,
+}
+
+impl XlaRuntime {
+    /// Accepts any directory and loads nothing; always `Ok`.
+    pub fn load_dir(dir: &Path) -> Result<Self> {
+        Ok(Self { dir: dir.to_path_buf() })
+    }
+
+    /// Always fails: compiling HLO needs the real PJRT backend.
+    pub fn load_file(&mut self, name: &str, _path: &Path) -> Result<()> {
+        unavailable(&format!("load_file({name})"))
+    }
+
+    /// Always empty.
+    pub fn names(&self) -> Vec<&str> {
+        Vec::new()
+    }
+
+    /// Always `false` — this is what routes consumers to native fallbacks.
+    pub fn has(&self, _name: &str) -> bool {
+        false
+    }
+
+    /// Always fails; callers must check [`Self::has`] first (they do).
+    pub fn run_f32(&self, name: &str, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        unavailable(&format!("run_f32({name})"))
+    }
+
+    /// Always fails; callers must check [`Self::has`] first (they do).
+    pub fn run_i32(&self, name: &str, _inputs: &[(&[i32], &[usize])]) -> Result<Vec<i32>> {
+        unavailable(&format!("run_i32({name})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_nothing_loaded() {
+        let rt = XlaRuntime::load_dir(Path::new("artifacts")).unwrap();
+        assert!(!rt.has("matmul64"));
+        assert!(rt.names().is_empty());
+        assert!(rt.run_f32("matmul64", &[]).is_err());
+        assert!(rt.run_i32("mlp_int8", &[]).is_err());
+    }
+}

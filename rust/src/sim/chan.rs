@@ -20,6 +20,7 @@ pub struct Chan<T> {
 }
 
 impl<T> Chan<T> {
+    /// A channel with `cap ≥ 1` slots.
     pub fn new(cap: usize) -> Self {
         assert!(cap >= 1, "zero-capacity channel is not a register");
         Self {
@@ -29,6 +30,7 @@ impl<T> Chan<T> {
         }
     }
 
+    /// Whether a push would be accepted this cycle (`ready`).
     #[inline]
     pub fn can_push(&self) -> bool {
         self.q.len() < self.cap
@@ -46,26 +48,31 @@ impl<T> Chan<T> {
         }
     }
 
+    /// The pending head element, if any (`valid`).
     #[inline]
     pub fn peek(&self) -> Option<&T> {
         self.q.front()
     }
 
+    /// Accept and remove the head element, if any.
     #[inline]
     pub fn pop(&mut self) -> Option<T> {
         self.q.pop_front()
     }
 
+    /// Elements currently queued.
     #[inline]
     pub fn len(&self) -> usize {
         self.q.len()
     }
 
+    /// Whether nothing is queued.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.q.is_empty()
     }
 
+    /// Total slot count.
     #[inline]
     pub fn capacity(&self) -> usize {
         self.cap

@@ -32,6 +32,7 @@ pub struct Clock {
 }
 
 impl Clock {
+    /// A clock at `freq_hz`, reset to cycle 0.
     pub fn new(freq_hz: f64) -> Self {
         Self { cycle: 0, freq_hz }
     }
@@ -41,11 +42,13 @@ impl Clock {
         Self::new(200.0e6)
     }
 
+    /// The current cycle.
     #[inline]
     pub fn now(&self) -> Cycle {
         self.cycle
     }
 
+    /// Step one cycle.
     #[inline]
     pub fn advance(&mut self) {
         self.cycle += 1;

@@ -9,10 +9,12 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seeded generator (seed 0 is remapped to 1).
     pub fn new(seed: u64) -> Self {
         Self { state: seed.max(1) }
     }
 
+    /// Next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.state;
@@ -33,6 +35,7 @@ impl Rng {
         lo + self.below(hi - lo + 1)
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.next_u64() & 1 == 1
     }
@@ -42,6 +45,7 @@ impl Rng {
         &xs[self.below(xs.len() as u64) as usize]
     }
 
+    /// `n` random bytes.
     pub fn bytes(&mut self, n: usize) -> Vec<u8> {
         (0..n).map(|_| self.next_u64() as u8).collect()
     }

@@ -53,6 +53,7 @@ fn hash(ptr: usize, len: usize) -> usize {
 }
 
 impl Stats {
+    /// An empty registry.
     pub fn new() -> Self {
         Self { vals: Vec::new(), names: Vec::new(), table: vec![None; TABLE], by_name: BTreeMap::new() }
     }

@@ -38,16 +38,22 @@ pub fn nop_program(base: u64) -> Vec<u8> {
 /// 2MM working-set layout in DRAM/SPM.
 #[derive(Debug, Clone, Copy)]
 pub struct TwoMmLayout {
+    /// Matrix dimension (all operands are `n×n` f64).
     pub n: usize,
+    /// DRAM address of operand A.
     pub a: u64,
+    /// DRAM address of operand B.
     pub b: u64,
+    /// DRAM address of operand C.
     pub c: u64,
+    /// DRAM address of the result F = (A·B)·C.
     pub f: u64,
     /// Intermediate E = A·B lives in SPM (the paper's "reusable tiles").
     pub e_spm: u64,
 }
 
 impl TwoMmLayout {
+    /// Lay out `n×n` operands in DRAM with E in SPM.
     pub fn new(n: usize) -> Self {
         let m = (n * n * 8) as u64;
         assert!(n * n * 8 <= 96 * 1024, "E tile must fit the SPM");

@@ -1,0 +1,99 @@
+//! Integration tests for the parallel multi-SoC sweep harness:
+//! a 2×2 grid yields four distinct reports, and parallel execution is
+//! bit-identical to serial execution (the determinism contract every
+//! future batching/sharding layer depends on).
+
+use cheshire::harness::{self, SweepGrid, SweepReport, Workload};
+use cheshire::platform::config::MemBackend;
+use cheshire::platform::CheshireConfig;
+
+/// A small but non-trivial 2×2 grid: {nop, mem} × {rpc, hyperram}.
+/// MEM drives DMA traffic into the external memory, so the backend axis
+/// actually changes timing; NOP exercises the fixed-window path.
+fn grid_2x2() -> SweepGrid {
+    let mut g = SweepGrid::new(CheshireConfig::neo());
+    g.workloads = vec![
+        Workload::Nop { window: 60_000 },
+        Workload::Mem { len: 8 * 1024, reps: 2, max_burst: 2048 },
+    ];
+    g.backends = vec![MemBackend::Rpc, MemBackend::HyperRam];
+    g.max_cycles = 8_000_000;
+    g
+}
+
+#[test]
+fn sweep_2x2_produces_four_distinct_reports() {
+    let grid = grid_2x2();
+    assert_eq!(grid.len(), 4);
+    let results = harness::run_parallel(grid.scenarios(), 4);
+    assert_eq!(results.len(), 4);
+
+    // all four scenarios are distinct, by name and by measured behavior
+    let mut names: Vec<_> = results.iter().map(|r| r.name.clone()).collect();
+    names.sort();
+    names.dedup();
+    assert_eq!(names.len(), 4, "scenario names must be unique");
+
+    // the MEM workload must complete on both backends
+    for r in results.iter().filter(|r| r.workload == "mem") {
+        assert!(r.halted, "{}: MEM must run to completion", r.name);
+        assert!(r.cycles > 0 && r.cycles < 8_000_000);
+    }
+    // the backend axis must change what the memory system reports:
+    // RPC scenarios count rpc.* events, HyperRAM scenarios hyper.* events
+    for r in &results {
+        let rpc_bytes = r.stats.get("rpc.useful_wr_bytes") + r.stats.get("rpc.useful_rd_bytes");
+        let hyper_bytes =
+            r.stats.get("hyper.useful_wr_bytes") + r.stats.get("hyper.useful_rd_bytes");
+        match r.backend {
+            MemBackend::Rpc => assert_eq!(hyper_bytes, 0, "{}", r.name),
+            MemBackend::HyperRam => assert_eq!(rpc_bytes, 0, "{}", r.name),
+        }
+        if r.workload == "mem" {
+            assert!(rpc_bytes + hyper_bytes >= 16 * 1024, "{}: DMA bytes must land", r.name);
+        }
+    }
+    // MEM on the two backends must differ in cycle count (different
+    // memory timing), which is what makes the comparison meaningful
+    let mem: Vec<_> = results.iter().filter(|r| r.workload == "mem").collect();
+    assert_eq!(mem.len(), 2);
+    assert_ne!(mem[0].cycles, mem[1].cycles, "backends should not be timing-identical");
+
+    // the aggregated report covers all four scenarios
+    let report = SweepReport::new(results);
+    assert_eq!(report.table().rows.len(), 4);
+    let json = report.to_json();
+    for n in &names {
+        assert!(json.contains(&format!("\"name\": \"{n}\"")), "JSON must cover {n}");
+    }
+}
+
+#[test]
+fn parallel_and_serial_sweeps_are_bit_identical() {
+    let grid = grid_2x2();
+    let par = harness::run_parallel(grid.scenarios(), 4);
+    let ser = harness::run_serial(grid.scenarios());
+    assert_eq!(par.len(), ser.len());
+    for (p, s) in par.iter().zip(&ser) {
+        assert_eq!(p.name, s.name);
+        assert_eq!(p.cycles, s.cycles, "{}: cycle counts must match exactly", p.name);
+        assert_eq!(p.halted, s.halted, "{}", p.name);
+        let pv: Vec<_> = p.stats.iter().collect();
+        let sv: Vec<_> = s.stats.iter().collect();
+        assert_eq!(pv, sv, "{}: full stats registries must match", p.name);
+    }
+    // and therefore the serialized reports are byte-identical
+    assert_eq!(SweepReport::new(par).to_json(), SweepReport::new(ser).to_json());
+}
+
+#[test]
+fn oversubscribed_thread_count_is_harmless() {
+    // more threads than scenarios, and threads == 1, both work
+    let grid = grid_2x2();
+    let many = harness::run_parallel(grid.scenarios(), 64);
+    let one = harness::run_parallel(grid.scenarios(), 1);
+    assert_eq!(many.len(), 4);
+    for (a, b) in many.iter().zip(&one) {
+        assert_eq!(a.cycles, b.cycles);
+    }
+}
