@@ -180,6 +180,11 @@ impl Asm {
     pub fn ebreak(&mut self) -> &mut Self { self.emit(0x0010_0073) }
     pub fn wfi(&mut self) -> &mut Self { self.emit(0x1050_0073) }
     pub fn mret(&mut self) -> &mut Self { self.emit(0x3020_0073) }
+    /// Return from an S-mode trap (privileged spec).
+    pub fn sret(&mut self) -> &mut Self { self.emit(0x1020_0073) }
+    /// Fence virtual-memory translations (`sfence.vma rs1, rs2`; the
+    /// simulated core treats every variant as a full TLB flush).
+    pub fn sfence_vma(&mut self, rs1: u8, rs2: u8) -> &mut Self { self.emit(enc_r(0x73, 0, 0, rs1, rs2, 0x09)) }
     pub fn nop(&mut self) -> &mut Self { self.addi(0, 0, 0) }
 
     // ---- Zicsr ----
@@ -187,6 +192,10 @@ impl Asm {
     pub fn csrrs(&mut self, rd: u8, csr: u16, rs1: u8) -> &mut Self { self.emit(enc_i(0x73, rd, 2, rs1, csr as i32)) }
     pub fn csrrc(&mut self, rd: u8, csr: u16, rs1: u8) -> &mut Self { self.emit(enc_i(0x73, rd, 3, rs1, csr as i32)) }
     pub fn csrrwi(&mut self, rd: u8, csr: u16, z: u8) -> &mut Self { self.emit(enc_i(0x73, rd, 5, z, csr as i32)) }
+    /// `csrrsi rd, csr, uimm` — set CSR bits from a 5-bit immediate.
+    pub fn csrrsi(&mut self, rd: u8, csr: u16, z: u8) -> &mut Self { self.emit(enc_i(0x73, rd, 6, z, csr as i32)) }
+    /// `csrrci rd, csr, uimm` — clear CSR bits from a 5-bit immediate.
+    pub fn csrrci(&mut self, rd: u8, csr: u16, z: u8) -> &mut Self { self.emit(enc_i(0x73, rd, 7, z, csr as i32)) }
 
     // ---- M ----
     pub fn mul(&mut self, rd: u8, a: u8, b: u8) -> &mut Self { self.emit(enc_r(0x33, rd, 0, a, b, 1)) }
@@ -361,6 +370,31 @@ mod tests {
         a.li(A0, 0x12345);
         let img = a.finish();
         assert!(img.len() >= 8); // lui + addiw
+    }
+
+    /// Privileged-ISA encodings against hand-checked machine words
+    /// (cross-checked with the RISC-V privileged spec encodings).
+    #[test]
+    fn privileged_encodings_match_hand_checked_words() {
+        let mut a = Asm::new(0);
+        a.csrrsi(ZERO, 0x344, 2); // csrrsi zero, mip, 2   (set SSIP)
+        a.csrrci(ZERO, 0x144, 2); // csrrci zero, sip, 2   (clear SSIP)
+        a.sret();
+        a.sfence_vma(ZERO, ZERO);
+        a.sfence_vma(A0, A1);
+        a.wfi();
+        a.mret();
+        a.csrrsi(A0, 0x300, 31); // max 5-bit immediate
+        let img = a.finish();
+        let w: Vec<u32> = img.chunks(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+        assert_eq!(w[0], 0x3441_6073); // imm=0x344, rs1(uimm)=2, f3=110
+        assert_eq!(w[1], 0x1441_7073); // imm=0x144, rs1(uimm)=2, f3=111
+        assert_eq!(w[2], 0x1020_0073); // sret
+        assert_eq!(w[3], 0x1200_0073); // sfence.vma x0, x0
+        assert_eq!(w[4], 0x12b5_0073); // sfence.vma a0, a1
+        assert_eq!(w[5], 0x1050_0073); // wfi
+        assert_eq!(w[6], 0x3020_0073); // mret
+        assert_eq!(w[7], 0x300f_e573); // csrrsi a0, mstatus, 31
     }
 
     #[test]

@@ -209,7 +209,7 @@ mod tests {
         for k in 1..8 {
             assert_eq!(c.probe((k * set_stride) as u64, &mut s), Probe::Hit);
         }
-        let (vaddr, _) = c.victim((8 * set_stride) as u64).map(|v| v).unwrap();
+        let (vaddr, _) = c.victim((8 * set_stride) as u64).unwrap();
         assert_eq!(vaddr, 0);
     }
 

@@ -1,4 +1,4 @@
-//! Functional RV64IMFD+Zicsr core (M-mode).
+//! Functional RV64IMFD+Zicsr core with M/S/U privilege and Sv39.
 //!
 //! Executes one instruction per `step`. Memory accesses go through [`Bus`]
 //! and may return [`MemErr::Stall`]; the core then restores its pre-step
@@ -7,6 +7,18 @@
 //! partially. This retry discipline is what lets the same core run over a
 //! cycle-accurate memory system without a microarchitectural pipeline
 //! model.
+//!
+//! Privilege model (the "Linux-capable" contract, paper §II-A): the core
+//! boots in M-mode with translation off, exactly as before. S- and
+//! U-mode, the supervisor CSR file (`satp`/`stvec`/`sepc`/`scause`/
+//! `stval`/`sscratch`/`sie`/`sip` views), trap delegation
+//! (`medeleg`/`mideleg`), `sret` and `sfence.vma` are layered on top.
+//! While `prv < M` and `satp.MODE = Sv39`, every fetch/load/store is
+//! translated by [`crate::mmu::Mmu`]; the page-table walker's PTE
+//! fetches go through the same [`Bus`] (and thus, on the platform,
+//! through the D-cache and AXI fabric), and may stall — the instruction
+//! then retries as a whole. Page faults raise causes 12/13/15 and honor
+//! `medeleg` like any other exception.
 
 /// Memory access error.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -52,11 +64,20 @@ pub enum Trap {
     StoreFault(u64),
     Ecall,
     Ebreak,
-    /// Asynchronous interrupt, cause number (3 msi, 7 mti, 11 mei).
+    /// Instruction page fault (cause 12), faulting VA.
+    InstrPageFault(u64),
+    /// Load page fault (cause 13), faulting VA.
+    LoadPageFault(u64),
+    /// Store page fault (cause 15), faulting VA.
+    StorePageFault(u64),
+    /// Asynchronous interrupt, cause number (3 msi, 7 mti, 11 mei,
+    /// 1 ssi, 5 sti, 9 sei).
     Interrupt(u64),
 }
 
-/// M-mode CSR file (the subset CVA6/Linux bring-up uses).
+/// Machine + supervisor CSR file (the subset CVA6/Linux bring-up uses).
+/// `sstatus`/`sie`/`sip` are architected views of `mstatus`/`mie`/`mip`
+/// and have no storage of their own.
 #[derive(Debug, Clone, Default)]
 pub struct Csrs {
     pub mstatus: u64,
@@ -67,13 +88,51 @@ pub struct Csrs {
     pub mcause: u64,
     pub mtval: u64,
     pub mscratch: u64,
+    pub medeleg: u64,
+    pub mideleg: u64,
+    pub stvec: u64,
+    pub sepc: u64,
+    pub scause: u64,
+    pub stval: u64,
+    pub sscratch: u64,
+    pub satp: u64,
     pub mhartid: u64,
     pub mcycle: u64,
     pub minstret: u64,
 }
 
+/// User privilege level.
+pub const PRV_U: u8 = 0;
+/// Supervisor privilege level.
+pub const PRV_S: u8 = 1;
+/// Machine privilege level.
+pub const PRV_M: u8 = 3;
+
+const MSTATUS_SIE: u64 = 1 << 1;
 const MSTATUS_MIE: u64 = 1 << 3;
+const MSTATUS_SPIE: u64 = 1 << 5;
 const MSTATUS_MPIE: u64 = 1 << 7;
+const MSTATUS_SPP: u64 = 1 << 8;
+const MSTATUS_MPP: u64 = 3 << 11;
+const MSTATUS_SUM: u64 = 1 << 18;
+const MSTATUS_MXR: u64 = 1 << 19;
+/// Bits software may write through the `mstatus` CSR.
+const MSTATUS_WRITABLE: u64 = MSTATUS_SIE
+    | MSTATUS_MIE
+    | MSTATUS_SPIE
+    | MSTATUS_MPIE
+    | MSTATUS_SPP
+    | MSTATUS_MPP
+    | MSTATUS_SUM
+    | MSTATUS_MXR;
+/// The `sstatus` view of `mstatus`.
+const SSTATUS_MASK: u64 = MSTATUS_SIE | MSTATUS_SPIE | MSTATUS_SPP | MSTATUS_SUM | MSTATUS_MXR;
+/// Supervisor interrupt bits (SSI/STI/SEI) — the `sie`/`sip` view and
+/// the only bits `mideleg` can delegate.
+const S_INTS: u64 = (1 << 1) | (1 << 5) | (1 << 9);
+/// Interrupt-pending bits software can set through the `mip` CSR
+/// (SSIP/MSIP/STIP); MTIP/MEIP come from the CLINT/PLIC wires.
+const MIP_WRITABLE: u64 = (1 << 1) | (1 << 3) | (1 << 5);
 
 /// The architectural core.
 #[derive(Clone)]
@@ -82,11 +141,23 @@ pub struct CpuCore {
     pub f: [u64; 32],
     pub pc: u64,
     pub csr: Csrs,
+    /// Current privilege level ([`PRV_M`] at reset).
+    pub prv: u8,
+    /// Sv39 MMU (TLBs + walker); consulted whenever `prv < M` and
+    /// `satp.MODE = Sv39`.
+    pub mmu: crate::mmu::Mmu,
 }
 
 impl CpuCore {
     pub fn new(pc: u64, hartid: u64) -> Self {
-        let mut c = Self { x: [0; 32], f: [0; 32], pc, csr: Csrs::default() };
+        let mut c = Self {
+            x: [0; 32],
+            f: [0; 32],
+            pc,
+            csr: Csrs::default(),
+            prv: PRV_M,
+            mmu: crate::mmu::Mmu::new(16),
+        };
         c.csr.mhartid = hartid;
         c
     }
@@ -98,43 +169,84 @@ impl CpuCore {
         }
     }
 
-    /// Take an interrupt if one is pending, enabled, and globally allowed.
-    /// Returns the cause if redirected.
+    /// Take an interrupt if one is pending, enabled, and allowed at the
+    /// current privilege. Non-delegated interrupts trap to M (taken when
+    /// `prv < M`, or in M with `mstatus.MIE`); `mideleg`-delegated ones
+    /// trap to S (taken when `prv < S`, or in S with `mstatus.SIE`; never
+    /// in M). Returns the cause if redirected.
     pub fn maybe_interrupt(&mut self) -> Option<u64> {
-        if self.csr.mstatus & MSTATUS_MIE == 0 {
-            return None;
-        }
         let pend = self.csr.mip & self.csr.mie;
         if pend == 0 {
             return None;
         }
-        // priority: MEI(11) > MSI(3) > MTI(7)
-        let cause = if pend & (1 << 11) != 0 {
-            11
-        } else if pend & (1 << 3) != 0 {
-            3
-        } else if pend & (1 << 7) != 0 {
-            7
+        let m_pend = pend & !self.csr.mideleg;
+        let s_pend = pend & self.csr.mideleg;
+        let take_m = m_pend != 0
+            && (self.prv < PRV_M || self.csr.mstatus & MSTATUS_MIE != 0);
+        let take_s = !take_m
+            && s_pend != 0
+            && (self.prv < PRV_S || (self.prv == PRV_S && self.csr.mstatus & MSTATUS_SIE != 0));
+        let pend = if take_m {
+            m_pend
+        } else if take_s {
+            s_pend
         } else {
             return None;
         };
-        self.enter_trap((1 << 63) | cause, self.pc, 0);
+        // priority: MEI > MSI > MTI > SEI > SSI > STI
+        let cause = *[11u64, 3, 7, 9, 1, 5].iter().find(|&&c| (pend >> c) & 1 == 1)?;
+        self.trap_to((1 << 63) | cause, self.pc, 0);
         Some(cause)
     }
 
-    fn enter_trap(&mut self, cause: u64, epc: u64, tval: u64) {
-        self.csr.mepc = epc;
-        self.csr.mcause = cause;
-        self.csr.mtval = tval;
-        // MPIE ← MIE, MIE ← 0
-        let mie = (self.csr.mstatus >> 3) & 1;
-        self.csr.mstatus = (self.csr.mstatus & !(MSTATUS_MIE | MSTATUS_MPIE)) | (mie << 7);
-        self.pc = self.csr.mtvec & !0x3;
+    /// Redirect to the trap handler for `cause` (interrupt bit included),
+    /// honoring `medeleg`/`mideleg`: traps from S/U whose delegation bit
+    /// is set vector to S-mode (`stvec`), everything else to M (`mtvec`).
+    fn trap_to(&mut self, cause: u64, epc: u64, tval: u64) {
+        let code = cause & 0x3f;
+        let deleg = if cause >> 63 != 0 { self.csr.mideleg } else { self.csr.medeleg };
+        if self.prv != PRV_M && (deleg >> code) & 1 == 1 {
+            self.csr.sepc = epc;
+            self.csr.scause = cause;
+            self.csr.stval = tval;
+            // SPIE ← SIE, SIE ← 0, SPP ← prv
+            let sie = (self.csr.mstatus >> 1) & 1;
+            let spp = (self.prv == PRV_S) as u64;
+            self.csr.mstatus = (self.csr.mstatus & !(MSTATUS_SIE | MSTATUS_SPIE | MSTATUS_SPP))
+                | (sie << 5)
+                | (spp << 8);
+            self.prv = PRV_S;
+            self.pc = self.csr.stvec & !0x3;
+        } else {
+            self.csr.mepc = epc;
+            self.csr.mcause = cause;
+            self.csr.mtval = tval;
+            // MPIE ← MIE, MIE ← 0, MPP ← prv
+            let mie = (self.csr.mstatus >> 3) & 1;
+            self.csr.mstatus = (self.csr.mstatus & !(MSTATUS_MIE | MSTATUS_MPIE | MSTATUS_MPP))
+                | (mie << 7)
+                | ((self.prv as u64) << 11);
+            self.prv = PRV_M;
+            self.pc = self.csr.mtvec & !0x3;
+        }
     }
 
     fn csr_read(&self, addr: u16) -> Result<u64, ()> {
         Ok(match addr {
+            0x100 => self.csr.mstatus & SSTATUS_MASK, // sstatus
+            // sie/sip expose only *delegated* S interrupt bits;
+            // non-delegated bits are read-only zero (priv spec §4.1.3)
+            0x104 => self.csr.mie & S_INTS & self.csr.mideleg, // sie
+            0x105 => self.csr.stvec,
+            0x140 => self.csr.sscratch,
+            0x141 => self.csr.sepc,
+            0x142 => self.csr.scause,
+            0x143 => self.csr.stval,
+            0x144 => self.csr.mip & S_INTS & self.csr.mideleg, // sip
+            0x180 => self.csr.satp,
             0x300 => self.csr.mstatus,
+            0x302 => self.csr.medeleg,
+            0x303 => self.csr.mideleg,
             0x304 => self.csr.mie,
             0x305 => self.csr.mtvec,
             0x340 => self.csr.mscratch,
@@ -145,26 +257,71 @@ impl CpuCore {
             0xb00 | 0xc00 => self.csr.mcycle,
             0xb02 | 0xc02 => self.csr.minstret,
             0xf14 => self.csr.mhartid,
-            0x301 => 0x8000_0000_0014_112d, // misa: RV64IMFDC-ish
+            0x301 => 0x8000_0000_0014_112d, // misa: RV64IMFDC-ish + S/U
             _ => return Err(()),
         })
     }
 
     fn csr_write(&mut self, addr: u16, v: u64) -> Result<(), ()> {
         match addr {
-            0x300 => self.csr.mstatus = v,
+            0x100 => {
+                self.csr.mstatus = (self.csr.mstatus & !SSTATUS_MASK) | (v & SSTATUS_MASK)
+            }
+            0x104 => {
+                // sie writes reach only delegated bits; M keeps ownership
+                // of enables for interrupts it has not handed to S
+                let m = S_INTS & self.csr.mideleg;
+                self.csr.mie = (self.csr.mie & !m) | (v & m);
+            }
+            0x105 => self.csr.stvec = v,
+            0x140 => self.csr.sscratch = v,
+            0x141 => self.csr.sepc = v,
+            0x142 => self.csr.scause = v,
+            0x143 => self.csr.stval = v,
+            // through sip only SSIP is software-writable, and only when
+            // the software interrupt is actually delegated to S
+            0x144 => {
+                let m = (1 << 1) & self.csr.mideleg;
+                self.csr.mip = (self.csr.mip & !m) | (v & m);
+            }
+            0x180 => {
+                // WARL: only Bare (0) and Sv39 (8) are implemented
+                let mode = v >> 60;
+                if mode == 0 || mode == 8 {
+                    self.csr.satp = v & ((0xf << 60) | ((1u64 << 44) - 1));
+                    self.mmu.flush();
+                }
+            }
+            0x300 => self.csr.mstatus = v & MSTATUS_WRITABLE,
+            0x302 => self.csr.medeleg = v & !(1 << 11), // ecall-from-M stays in M
+            0x303 => self.csr.mideleg = v & S_INTS,
             0x304 => self.csr.mie = v,
             0x305 => self.csr.mtvec = v,
             0x340 => self.csr.mscratch = v,
             0x341 => self.csr.mepc = v,
             0x342 => self.csr.mcause = v,
             0x343 => self.csr.mtval = v,
-            0x344 => self.csr.mip = v & (1 << 3), // software bit writable
+            0x344 => self.csr.mip = (self.csr.mip & !MIP_WRITABLE) | (v & MIP_WRITABLE),
             0xb00 => self.csr.mcycle = v,
             0xb02 => self.csr.minstret = v,
             _ => return Err(()),
         }
         Ok(())
+    }
+
+    /// Translate a virtual address, bypassing when translation is off
+    /// (M-mode, or `satp.MODE` = Bare).
+    #[inline]
+    fn xlate(
+        &mut self,
+        bus: &mut dyn Bus,
+        va: u64,
+        acc: crate::mmu::Access,
+    ) -> Result<u64, crate::mmu::XlateErr> {
+        if self.prv == PRV_M || !crate::mmu::Mmu::active(self.csr.satp) {
+            return Ok(va);
+        }
+        self.mmu.translate(bus, va, acc, self.prv, self.csr.satp, self.csr.mstatus)
     }
 
     /// Execute one instruction. On `Stalled`, state is unchanged.
@@ -184,12 +341,21 @@ impl CpuCore {
     }
 
     fn exec(&mut self, bus: &mut dyn Bus) -> StepOutcome {
+        use crate::mmu::{Access, XlateErr};
         let pc = self.pc;
-        let inst = match bus.fetch(pc) {
+        let pc_pa = match self.xlate(bus, pc, Access::Exec) {
+            Ok(pa) => pa,
+            Err(XlateErr::Stall) => return StepOutcome::Stalled,
+            Err(XlateErr::PageFault) => {
+                self.trap_to(12, pc, pc);
+                return StepOutcome::Trapped(Trap::InstrPageFault(pc));
+            }
+        };
+        let inst = match bus.fetch(pc_pa) {
             Ok(i) => i,
             Err(MemErr::Stall) => return StepOutcome::Stalled,
             Err(MemErr::Fault) => {
-                self.enter_trap(1, pc, pc);
+                self.trap_to(1, pc, pc);
                 return StepOutcome::Trapped(Trap::LoadFault(pc));
             }
         };
@@ -216,28 +382,46 @@ impl CpuCore {
         let mut next = pc.wrapping_add(4);
 
         macro_rules! load {
-            ($addr:expr, $size:expr) => {
-                match bus.load($addr, $size) {
+            ($addr:expr, $size:expr) => {{
+                let va = $addr;
+                let pa = match self.xlate(bus, va, Access::Read) {
+                    Ok(pa) => pa,
+                    Err(XlateErr::Stall) => return StepOutcome::Stalled,
+                    Err(XlateErr::PageFault) => {
+                        self.trap_to(13, pc, va);
+                        return StepOutcome::Trapped(Trap::LoadPageFault(va));
+                    }
+                };
+                match bus.load(pa, $size) {
                     Ok(v) => v,
                     Err(MemErr::Stall) => return StepOutcome::Stalled,
                     Err(MemErr::Fault) => {
-                        self.enter_trap(5, pc, $addr);
-                        return StepOutcome::Trapped(Trap::LoadFault($addr));
+                        self.trap_to(5, pc, va);
+                        return StepOutcome::Trapped(Trap::LoadFault(va));
                     }
                 }
-            };
+            }};
         }
         macro_rules! store {
-            ($addr:expr, $v:expr, $size:expr) => {
-                match bus.store($addr, $v, $size) {
+            ($addr:expr, $v:expr, $size:expr) => {{
+                let va = $addr;
+                let pa = match self.xlate(bus, va, Access::Write) {
+                    Ok(pa) => pa,
+                    Err(XlateErr::Stall) => return StepOutcome::Stalled,
+                    Err(XlateErr::PageFault) => {
+                        self.trap_to(15, pc, va);
+                        return StepOutcome::Trapped(Trap::StorePageFault(va));
+                    }
+                };
+                match bus.store(pa, $v, $size) {
                     Ok(()) => {}
                     Err(MemErr::Stall) => return StepOutcome::Stalled,
                     Err(MemErr::Fault) => {
-                        self.enter_trap(7, pc, $addr);
-                        return StepOutcome::Trapped(Trap::StoreFault($addr));
+                        self.trap_to(7, pc, va);
+                        return StepOutcome::Trapped(Trap::StoreFault(va));
                     }
                 }
-            };
+            }};
         }
 
         match op {
@@ -262,7 +446,7 @@ impl CpuCore {
                     6 => a < b,
                     7 => a >= b,
                     _ => {
-                        self.enter_trap(2, pc, inst as u64);
+                        self.trap_to(2, pc, inst as u64);
                         return StepOutcome::Trapped(Trap::IllegalInstr(inst));
                     }
                 };
@@ -282,7 +466,7 @@ impl CpuCore {
                     5 => load!(a, 2),
                     6 => load!(a, 4),
                     _ => {
-                        self.enter_trap(2, pc, inst as u64);
+                        self.trap_to(2, pc, inst as u64);
                         return StepOutcome::Trapped(Trap::IllegalInstr(inst));
                     }
                 };
@@ -327,7 +511,7 @@ impl CpuCore {
                         }
                     }
                     _ => {
-                        self.enter_trap(2, pc, inst as u64);
+                        self.trap_to(2, pc, inst as u64);
                         return StepOutcome::Trapped(Trap::IllegalInstr(inst));
                     }
                 };
@@ -370,7 +554,7 @@ impl CpuCore {
                         (6, 0) => a | b,
                         (7, 0) => a & b,
                         _ => {
-                            self.enter_trap(2, pc, inst as u64);
+                            self.trap_to(2, pc, inst as u64);
                             return StepOutcome::Trapped(Trap::IllegalInstr(inst));
                         }
                     }
@@ -396,7 +580,7 @@ impl CpuCore {
                             if b == 0 { a as i64 as u64 } else { (((a as u32) % (b as u32)) as i32) as i64 as u64 }
                         }
                         _ => {
-                            self.enter_trap(2, pc, inst as u64);
+                            self.trap_to(2, pc, inst as u64);
                             return StepOutcome::Trapped(Trap::IllegalInstr(inst));
                         }
                     }
@@ -408,7 +592,7 @@ impl CpuCore {
                         (5, 0) => (((a as u32) >> (b & 0x1f)) as i32) as i64 as u64,
                         (5, 0x20) => (a >> (b & 0x1f)) as i64 as u64,
                         _ => {
-                            self.enter_trap(2, pc, inst as u64);
+                            self.trap_to(2, pc, inst as u64);
                             return StepOutcome::Trapped(Trap::IllegalInstr(inst));
                         }
                     }
@@ -421,7 +605,7 @@ impl CpuCore {
                     Ok(()) => extra = 3,
                     Err(MemErr::Stall) => return StepOutcome::Stalled,
                     Err(MemErr::Fault) => {
-                        self.enter_trap(5, pc, 0);
+                        self.trap_to(5, pc, 0);
                         return StepOutcome::Trapped(Trap::LoadFault(pc));
                     }
                 }
@@ -462,7 +646,7 @@ impl CpuCore {
                             1 => (self.f[rs1] & !(1 << 63)) | ((!self.f[rs2]) & (1 << 63)),
                             2 => self.f[rs1] ^ (self.f[rs2] & (1 << 63)),
                             _ => {
-                                self.enter_trap(2, pc, inst as u64);
+                                self.trap_to(2, pc, inst as u64);
                                 return StepOutcome::Trapped(Trap::IllegalInstr(inst));
                             }
                         };
@@ -500,7 +684,7 @@ impl CpuCore {
                     0x79 => self.f[rd] = self.x[rs1], // fmv.d.x
                     0x71 => self.wx(rd, self.f[rs1]), // fmv.x.d
                     _ => {
-                        self.enter_trap(2, pc, inst as u64);
+                        self.trap_to(2, pc, inst as u64);
                         return StepOutcome::Trapped(Trap::IllegalInstr(inst));
                     }
                 }
@@ -508,11 +692,12 @@ impl CpuCore {
             0x73 => {
                 match (f3, inst) {
                     (0, 0x0000_0073) => {
-                        self.enter_trap(11, pc, 0);
+                        // ecall: cause depends on the calling privilege
+                        self.trap_to(8 + self.prv as u64, pc, 0);
                         return StepOutcome::Trapped(Trap::Ecall);
                     }
                     (0, 0x0010_0073) => {
-                        self.enter_trap(3, pc, 0);
+                        self.trap_to(3, pc, 0);
                         return StepOutcome::Trapped(Trap::Ebreak);
                     }
                     (0, 0x1050_0073) => {
@@ -520,19 +705,56 @@ impl CpuCore {
                         return StepOutcome::Wfi;
                     }
                     (0, 0x3020_0073) => {
-                        // mret
+                        // mret: prv ← MPP, MIE ← MPIE, MPIE ← 1, MPP ← U
+                        if self.prv != PRV_M {
+                            self.trap_to(2, pc, inst as u64);
+                            return StepOutcome::Trapped(Trap::IllegalInstr(inst));
+                        }
                         let mpie = (self.csr.mstatus >> 7) & 1;
-                        self.csr.mstatus =
-                            (self.csr.mstatus & !MSTATUS_MIE) | (mpie << 3) | MSTATUS_MPIE;
+                        let mpp = ((self.csr.mstatus >> 11) & 3) as u8;
+                        self.csr.mstatus = (self.csr.mstatus
+                            & !(MSTATUS_MIE | MSTATUS_MPP))
+                            | (mpie << 3)
+                            | MSTATUS_MPIE;
+                        self.prv = if mpp == 2 { PRV_U } else { mpp };
                         next = self.csr.mepc;
                     }
+                    (0, 0x1020_0073) => {
+                        // sret: prv ← SPP, SIE ← SPIE, SPIE ← 1, SPP ← U
+                        if self.prv < PRV_S {
+                            self.trap_to(2, pc, inst as u64);
+                            return StepOutcome::Trapped(Trap::IllegalInstr(inst));
+                        }
+                        let spie = (self.csr.mstatus >> 5) & 1;
+                        let spp = ((self.csr.mstatus >> 8) & 1) as u8;
+                        self.csr.mstatus = (self.csr.mstatus
+                            & !(MSTATUS_SIE | MSTATUS_SPP))
+                            | (spie << 1)
+                            | MSTATUS_SPIE;
+                        self.prv = spp;
+                        next = self.csr.sepc;
+                    }
+                    (0, i) if (i & 0xfe00_7fff) == 0x1200_0073 => {
+                        // sfence.vma (rs1/rs2 ignored: full TLB flush)
+                        if self.prv < PRV_S {
+                            self.trap_to(2, pc, inst as u64);
+                            return StepOutcome::Trapped(Trap::IllegalInstr(inst));
+                        }
+                        self.mmu.flush();
+                        extra = 4; // CVA6 flushes its pipeline on sfence
+                    }
                     _ => {
-                        // Zicsr
+                        // Zicsr: CSR address bits [9:8] encode the minimum
+                        // privilege required to touch it
                         let csr = (inst >> 20) as u16;
+                        if self.prv < ((csr >> 8) & 3) as u8 {
+                            self.trap_to(2, pc, inst as u64);
+                            return StepOutcome::Trapped(Trap::IllegalInstr(inst));
+                        }
                         let old = match self.csr_read(csr) {
                             Ok(v) => v,
                             Err(()) => {
-                                self.enter_trap(2, pc, inst as u64);
+                                self.trap_to(2, pc, inst as u64);
                                 return StepOutcome::Trapped(Trap::IllegalInstr(inst));
                             }
                         };
@@ -545,7 +767,7 @@ impl CpuCore {
                         };
                         if let Some(v) = newv {
                             if self.csr_write(csr, v).is_err() {
-                                self.enter_trap(2, pc, inst as u64);
+                                self.trap_to(2, pc, inst as u64);
                                 return StepOutcome::Trapped(Trap::IllegalInstr(inst));
                             }
                         }
@@ -554,7 +776,7 @@ impl CpuCore {
                 }
             }
             _ => {
-                self.enter_trap(2, pc, inst as u64);
+                self.trap_to(2, pc, inst as u64);
                 return StepOutcome::Trapped(Trap::IllegalInstr(inst));
             }
         }
@@ -779,5 +1001,211 @@ mod tests {
         }
         assert_eq!(cpu.x[A0 as usize], 0x1234);
         assert!(retired >= 5);
+    }
+
+    // ---- Sv39 / privilege tests ----
+
+    use crate::mmu::sv39::{PTE_A, PTE_D, PTE_R, PTE_V, PTE_W, PTE_X};
+
+    const RWXAD: u64 = PTE_V | PTE_R | PTE_W | PTE_X | PTE_A | PTE_D;
+
+    fn put_pte(mem: &mut Flat, addr: u64, pte: u64) {
+        mem.store(addr, pte, 8).unwrap();
+    }
+
+    /// Three-level table at 0x1000/0x2000/0x3000 with the low 16 KiB
+    /// identity-mapped as 4 KiB pages (code + the tables themselves).
+    fn identity_low_pages(mem: &mut Flat) {
+        put_pte(mem, 0x1000, ((0x2000u64 >> 12) << 10) | PTE_V);
+        put_pte(mem, 0x2000, ((0x3000u64 >> 12) << 10) | PTE_V);
+        for i in 0..4u64 {
+            put_pte(mem, 0x3000 + i * 8, ((i * 0x1000 >> 12) << 10) | RWXAD);
+        }
+    }
+
+    fn run_until_wfi(cpu: &mut CpuCore, mem: &mut Flat, max: usize) {
+        for _ in 0..max {
+            if matches!(cpu.step(mem), StepOutcome::Wfi) {
+                return;
+            }
+        }
+        panic!("no WFI after {max} steps (pc={:#x})", cpu.pc);
+    }
+
+    #[test]
+    fn s_mode_runs_translated_and_ecalls_back_to_m() {
+        let mut a = Asm::new(0);
+        a.la(T0, "m_handler");
+        a.csrrw(ZERO, 0x305, T0); // mtvec
+        a.la(T0, "s_entry");
+        a.csrrw(ZERO, 0x141, T0); // mepc
+        a.li(T0, ((8u64 << 60) | 1) as i64); // satp: Sv39, root @0x1000
+        a.csrrw(ZERO, 0x180, T0);
+        a.sfence_vma(ZERO, ZERO);
+        a.li(T0, 1 << 11); // MPP = S
+        a.csrrs(ZERO, 0x300, T0);
+        a.mret();
+        a.label("s_entry");
+        a.li(T1, 0x4000);
+        a.ld(A0, T1, 0); // VA 0x4000 → PA 0x8000
+        a.ecall();
+        a.label("m_handler");
+        a.csrrs(A1, 0x342, ZERO); // mcause
+        a.wfi();
+        let img = a.finish();
+        let mut mem = Flat { mem: vec![0; 0x10000] };
+        mem.mem[..img.len()].copy_from_slice(&img);
+        identity_low_pages(&mut mem);
+        // VA 0x4000 → PA 0x8000 (a non-identity 4 KiB leaf)
+        put_pte(&mut mem, 0x3000 + 4 * 8, ((0x8000u64 >> 12) << 10) | RWXAD);
+        mem.store(0x8000, 0x1234_5678, 8).unwrap();
+        let mut cpu = CpuCore::new(0, 0);
+        run_until_wfi(&mut cpu, &mut mem, 200);
+        assert_eq!(cpu.x[A0 as usize], 0x1234_5678, "load translated VA→PA");
+        assert_eq!(cpu.x[A1 as usize], 9, "ecall from S-mode");
+        assert_eq!(cpu.prv, PRV_M, "trap returned to M");
+        assert!(cpu.mmu.counters.itlb_miss >= 1, "fetches walked the table");
+        assert!(cpu.mmu.counters.dtlb_miss >= 1);
+        assert!(cpu.mmu.counters.itlb_hit > 0, "straight-line code hits the I-TLB");
+    }
+
+    #[test]
+    fn page_fault_delegates_to_s_handler_which_maps_and_retries() {
+        let mut a = Asm::new(0);
+        a.la(T0, "s_trap");
+        a.csrrw(ZERO, 0x105, T0); // stvec
+        a.la(T0, "s_entry");
+        a.csrrw(ZERO, 0x141, T0);
+        a.li(T0, (1 << 13) | (1 << 15)); // delegate load/store page faults
+        a.csrrw(ZERO, 0x302, T0);
+        a.li(T0, ((8u64 << 60) | 1) as i64);
+        a.csrrw(ZERO, 0x180, T0);
+        a.li(T0, 1 << 11);
+        a.csrrs(ZERO, 0x300, T0);
+        a.mret();
+        a.label("s_entry");
+        a.li(T1, 0x4000);
+        a.ld(A0, T1, 0); // faults, gets mapped, retries
+        a.wfi();
+        a.label("s_trap");
+        a.csrrs(A2, 0x142, ZERO); // scause
+        a.csrrs(A3, 0x143, ZERO); // stval
+        // map VA 0x4000 → PA 0x8000 by writing l0[4] through the
+        // identity mapping, then flush and retry the faulting load
+        a.li(T4, ((0x8000u64 >> 12) << 10) as i64);
+        a.ori(T4, T4, RWXAD as i32);
+        a.li(T5, 0x3020);
+        a.sd(T4, T5, 0);
+        a.sfence_vma(ZERO, ZERO);
+        a.sret();
+        let img = a.finish();
+        let mut mem = Flat { mem: vec![0; 0x10000] };
+        mem.mem[..img.len()].copy_from_slice(&img);
+        identity_low_pages(&mut mem);
+        mem.store(0x8000, 0xfee1_600d, 8).unwrap();
+        let mut cpu = CpuCore::new(0, 0);
+        run_until_wfi(&mut cpu, &mut mem, 300);
+        assert_eq!(cpu.x[A2 as usize], 13, "load page fault delegated to S");
+        assert_eq!(cpu.x[A3 as usize], 0x4000, "stval holds the faulting VA");
+        assert_eq!(cpu.x[A0 as usize], 0xfee1_600d, "retried load sees the new page");
+        assert_eq!(cpu.prv, PRV_S, "still in S after sret");
+        assert!(cpu.mmu.counters.faults >= 1);
+    }
+
+    #[test]
+    fn store_to_readonly_page_faults_to_m_with_cause_15() {
+        let mut a = Asm::new(0);
+        a.la(T0, "m_handler");
+        a.csrrw(ZERO, 0x305, T0);
+        a.la(T0, "s_entry");
+        a.csrrw(ZERO, 0x141, T0);
+        a.li(T0, ((8u64 << 60) | 1) as i64);
+        a.csrrw(ZERO, 0x180, T0);
+        a.li(T0, 1 << 11);
+        a.csrrs(ZERO, 0x300, T0);
+        a.mret();
+        a.label("s_entry");
+        a.li(T1, 0x4000);
+        a.sd(T1, T1, 0); // store to a read-only page
+        a.label("m_handler");
+        a.csrrs(A1, 0x342, ZERO);
+        a.csrrs(A2, 0x343, ZERO);
+        a.wfi();
+        let img = a.finish();
+        let mut mem = Flat { mem: vec![0; 0x10000] };
+        mem.mem[..img.len()].copy_from_slice(&img);
+        identity_low_pages(&mut mem);
+        put_pte(&mut mem, 0x3000 + 4 * 8, ((0x8000u64 >> 12) << 10) | (PTE_V | PTE_R | PTE_A));
+        let mut cpu = CpuCore::new(0, 0);
+        run_until_wfi(&mut cpu, &mut mem, 200);
+        assert_eq!(cpu.x[A1 as usize], 15, "store page fault, not delegated → M");
+        assert_eq!(cpu.x[A2 as usize], 0x4000);
+    }
+
+    #[test]
+    fn s_mode_cannot_touch_machine_csrs() {
+        // bare-mode S (satp = 0) so no page tables are needed
+        let mut a = Asm::new(0);
+        a.la(T0, "m_handler");
+        a.csrrw(ZERO, 0x305, T0);
+        a.la(T0, "s_entry");
+        a.csrrw(ZERO, 0x141, T0);
+        a.li(T0, 1 << 11);
+        a.csrrs(ZERO, 0x300, T0);
+        a.mret();
+        a.label("s_entry");
+        a.csrrs(A0, 0x300, ZERO); // mstatus from S → illegal instruction
+        a.label("m_handler");
+        a.csrrs(A1, 0x342, ZERO);
+        a.wfi();
+        let img = a.finish();
+        let mut mem = Flat { mem: vec![0; 0x10000] };
+        mem.mem[..img.len()].copy_from_slice(&img);
+        let mut cpu = CpuCore::new(0, 0);
+        run_until_wfi(&mut cpu, &mut mem, 100);
+        assert_eq!(cpu.x[A1 as usize], 2, "illegal-instruction trap");
+        assert_eq!(cpu.prv, PRV_M);
+    }
+
+    #[test]
+    fn sie_sip_views_expose_only_delegated_bits() {
+        let mut cpu = CpuCore::new(0, 0);
+        cpu.csr.mie = S_INTS; // M enabled all three S-level interrupts
+        cpu.csr.mip = (1 << 1) | (1 << 5); // SSIP + STIP pending
+        assert_eq!(cpu.csr_read(0x104).unwrap(), 0, "nothing delegated → sie is 0");
+        assert_eq!(cpu.csr_read(0x144).unwrap(), 0);
+        cpu.csr.mideleg = 1 << 1; // delegate SSI only
+        assert_eq!(cpu.csr_read(0x104).unwrap(), 1 << 1);
+        assert_eq!(cpu.csr_read(0x144).unwrap(), 1 << 1, "STIP stays M-private");
+        // an S write can only reach the delegated bit
+        cpu.csr_write(0x104, 0).unwrap();
+        assert_eq!(cpu.csr.mie, S_INTS & !(1 << 1), "STIE/SEIE keep M's values");
+        cpu.csr_write(0x144, 0).unwrap();
+        assert_eq!(cpu.csr.mip & (1 << 5), 1 << 5, "STIP not S-writable");
+        assert_eq!(cpu.csr.mip & (1 << 1), 0, "delegated SSIP cleared");
+    }
+
+    #[test]
+    fn delegated_software_interrupt_vectors_to_stvec() {
+        let mut cpu = CpuCore::new(0x100, 0);
+        cpu.prv = PRV_S;
+        cpu.csr.stvec = 0x900;
+        cpu.csr.mideleg = 1 << 1; // SSI → S
+        cpu.csr.mie = 1 << 1;
+        cpu.csr.mstatus = 1 << 1; // SIE
+        cpu.csr.mip = 1 << 1;
+        let cause = cpu.maybe_interrupt().expect("SSI taken");
+        assert_eq!(cause, 1);
+        assert_eq!(cpu.pc, 0x900);
+        assert_eq!(cpu.csr.sepc, 0x100);
+        assert_eq!(cpu.csr.scause, (1 << 63) | 1);
+        assert_eq!(cpu.prv, PRV_S);
+        // SIE cleared on entry → no re-take
+        assert!(cpu.maybe_interrupt().is_none());
+        // but a non-delegated M interrupt still preempts S regardless of MIE
+        cpu.csr.mie |= 1 << 7;
+        cpu.csr.mip |= 1 << 7;
+        assert_eq!(cpu.maybe_interrupt(), Some(7));
+        assert_eq!(cpu.prv, PRV_M);
     }
 }

@@ -29,6 +29,10 @@ pub struct Cva6Cfg {
     pub icache_bytes: usize,
     pub dcache_bytes: usize,
     pub ways: usize,
+    /// Entries in each of the split I/D TLBs (CVA6 ships 16, fully
+    /// associative). A sweep axis: smaller TLBs turn supervisor
+    /// workloads PTW-bound.
+    pub tlb_entries: usize,
     /// Address ranges the L1s may cache (DRAM, SPM, boot ROM).
     pub cacheable: Vec<(u64, u64)>,
 }
@@ -40,6 +44,7 @@ impl Cva6Cfg {
             icache_bytes: 32 * 1024,
             dcache_bytes: 32 * 1024,
             ways: 8,
+            tlb_entries: 16,
             cacheable: vec![
                 (0x0100_0000, 0x0004_0000), // boot ROM
                 (0x7000_0000, 0x0002_0000), // SPM window
@@ -87,8 +92,10 @@ pub struct Cva6 {
 
 impl Cva6 {
     pub fn new(cfg: Cva6Cfg) -> Self {
+        let mut core = CpuCore::new(cfg.boot_pc, 0);
+        core.mmu = crate::mmu::Mmu::new(cfg.tlb_entries);
         Self {
-            core: CpuCore::new(cfg.boot_pc, 0),
+            core,
             icache: L1Cache::new(cfg.icache_bytes, cfg.ways, "cpu.icache_hit", "cpu.icache_miss"),
             dcache: L1Cache::new(cfg.dcache_bytes, cfg.ways, "cpu.dcache_hit", "cpu.dcache_miss"),
             wb_q: VecDeque::new(),
@@ -116,6 +123,26 @@ impl Cva6 {
 
     pub fn is_wfi(&self) -> bool {
         matches!(self.state, CState::Wfi)
+    }
+
+    /// Move the MMU's event counters into the global stats registry
+    /// (`mmu.*` keys). Bare-metal runs never touch the MMU, so this adds
+    /// no keys (and no cost beyond a few zero checks) for them.
+    fn drain_mmu_stats(&mut self, stats: &mut Stats) {
+        let c = self.core.mmu.take_counters();
+        for (key, v) in [
+            ("mmu.itlb_hit", c.itlb_hit),
+            ("mmu.itlb_miss", c.itlb_miss),
+            ("mmu.dtlb_hit", c.dtlb_hit),
+            ("mmu.dtlb_miss", c.dtlb_miss),
+            ("mmu.walks", c.walks),
+            ("mmu.walk_levels", c.walk_levels),
+            ("mmu.page_faults", c.faults),
+        ] {
+            if v > 0 {
+                stats.add(key, v);
+            }
+        }
     }
 
     /// One clock cycle.
@@ -223,6 +250,9 @@ impl Cva6 {
                 if self.core.maybe_interrupt().is_some() {
                     stats.bump("cpu.irq_taken");
                 }
+                // privilege the *attempted* instruction executes at (a
+                // trap outcome switches prv before we read it back)
+                let prv = self.core.prv;
                 let mut req: Option<MemReq> = None;
                 let outcome = {
                     let mut adapter = Adapter {
@@ -231,19 +261,28 @@ impl Cva6 {
                         cacheable: &self.cfg.cacheable,
                         result: &mut self.result,
                         req: &mut req,
-                        stats,
+                        stats: &mut *stats, // reborrow: `stats` is used again below
                     };
                     self.core.step(&mut adapter)
                 };
+                self.drain_mmu_stats(stats);
                 match outcome {
                     StepOutcome::Retired { extra_cycles, fp } => {
                         stats.bump("cpu.instr");
+                        stats.bump(match prv {
+                            super::core::PRV_M => "cpu.instr_m",
+                            super::core::PRV_S => "cpu.instr_s",
+                            _ => "cpu.instr_u",
+                        });
                         stats.bump("cpu.active_cycles");
                         if fp {
                             stats.bump("cpu.fp_instr");
                         }
-                        if extra_cycles > 0 {
-                            self.state = CState::Busy(extra_cycles);
+                        // completed page-table walks charge their FSM
+                        // cycles on top of functional-unit latency
+                        let busy = extra_cycles + self.core.mmu.take_walk_penalty();
+                        if busy > 0 {
+                            self.state = CState::Busy(busy);
                         }
                     }
                     StepOutcome::Wfi => {
@@ -252,6 +291,8 @@ impl Cva6 {
                     }
                     StepOutcome::Trapped(t) => {
                         stats.bump("cpu.traps");
+                        // a fault mid-walk discards the pending penalty
+                        let _ = self.core.mmu.take_walk_penalty();
                         if matches!(t, super::core::Trap::Ebreak) {
                             self.halted = true;
                         }

@@ -5,14 +5,26 @@
 //! into:
 //!
 //! * [`core`] — a functional RV64IMFD+Zicsr instruction-set simulator with
-//!   M-mode CSRs, traps and interrupts. Memory accesses go through a
-//!   [`core::Bus`] trait and may *stall*, in which case the instruction
-//!   retries side-effect-free (the core snapshots architectural state).
+//!   M/S/U privilege levels, machine + supervisor CSR files, trap
+//!   delegation (`medeleg`/`mideleg`), and Sv39 address translation via
+//!   [`crate::mmu`]. Memory accesses go through a [`core::Bus`] trait and
+//!   may *stall*, in which case the instruction retries side-effect-free
+//!   (the core snapshots architectural state) — including mid-walk PTW
+//!   stalls.
 //! * [`cva6`] — the timing wrapper: L1 I/D caches, miss handling as real
 //!   beat-level AXI refill/writeback bursts on the core's manager port,
 //!   MMIO as single-beat AXI, WFI sleep, CPI accounting for the power
 //!   model (fetch/decode activity is what separates NOP from WFI power in
-//!   Fig. 11).
+//!   Fig. 11), plus TLB/PTW accounting: `mmu.*` stats are drained from
+//!   the core's MMU each cycle and completed walks charge extra busy
+//!   cycles on top of their real PTE-fetch memory latency.
+//!
+//! Privilege-mode contract: the core boots in M with translation off, so
+//! every pre-existing bare-metal workload is unchanged. Translation is
+//! consulted only when `prv < M` *and* `satp.MODE = Sv39`; the MMIO
+//! one-shot result protocol and the FENCE flush protocol operate on
+//! physical addresses after translation, so supervisor code may touch
+//! peripherals through identity (or any other) mappings.
 
 pub mod core;
 pub mod cva6;

@@ -6,7 +6,8 @@ use crate::platform::CheshireConfig;
 
 /// A configuration grid. Every axis is a list; [`SweepGrid::scenarios`]
 /// expands the cartesian product in a fixed order (workload-major, then
-/// backend, SPM mask, DSA), so scenario indices are stable across runs.
+/// backend, SPM mask, DSA, TLB size), so scenario indices are stable
+/// across runs.
 #[derive(Debug, Clone)]
 pub struct SweepGrid {
     /// Base configuration each point starts from (usually Neo).
@@ -19,6 +20,10 @@ pub struct SweepGrid {
     pub spm_way_masks: Vec<u32>,
     /// DSA port-pair counts to sweep (0 = host only).
     pub dsa_ports: Vec<usize>,
+    /// I/D TLB entry counts to sweep (the VM-pressure axis: supervisor
+    /// workloads go PTW-bound as this shrinks; bare-metal workloads are
+    /// insensitive to it).
+    pub tlb_entries: Vec<usize>,
     /// Safety bound handed to every scenario.
     pub max_cycles: u64,
 }
@@ -37,14 +42,16 @@ fn dedup_preserve<T: PartialEq + Clone>(xs: &[T]) -> Vec<T> {
 }
 
 impl SweepGrid {
-    /// A 1×1×1×1 grid around `base`: the Neo point, NOP workload.
+    /// A 1×1×1×1×1 grid around `base`: the Neo point, NOP workload.
     pub fn new(base: CheshireConfig) -> Self {
+        let tlb = base.tlb_entries;
         Self {
             base,
             workloads: vec![Workload::Nop { window: 200_000 }],
             backends: vec![MemBackend::Rpc],
             spm_way_masks: vec![0xff],
             dsa_ports: vec![0],
+            tlb_entries: vec![tlb],
             max_cycles: 20_000_000,
         }
     }
@@ -61,20 +68,22 @@ impl SweepGrid {
         g
     }
 
-    /// Deduplicated copies of the four axes, in first-occurrence order.
-    fn axes(&self) -> (Vec<Workload>, Vec<MemBackend>, Vec<u32>, Vec<usize>) {
+    /// Deduplicated copies of the five axes, in first-occurrence order.
+    #[allow(clippy::type_complexity)]
+    fn axes(&self) -> (Vec<Workload>, Vec<MemBackend>, Vec<u32>, Vec<usize>, Vec<usize>) {
         (
             dedup_preserve(&self.workloads),
             dedup_preserve(&self.backends),
             dedup_preserve(&self.spm_way_masks),
             dedup_preserve(&self.dsa_ports),
+            dedup_preserve(&self.tlb_entries),
         )
     }
 
     /// Number of scenarios the grid expands to (after axis dedup).
     pub fn len(&self) -> usize {
-        let (w, b, m, d) = self.axes();
-        w.len() * b.len() * m.len() * d.len()
+        let (w, b, m, d, t) = self.axes();
+        w.len() * b.len() * m.len() * d.len() * t.len()
     }
 
     /// Whether the grid is empty (any axis without values).
@@ -84,17 +93,20 @@ impl SweepGrid {
 
     /// Expand the cartesian product into concrete scenarios.
     pub fn scenarios(&self) -> Vec<Scenario> {
-        let (workloads, backends, masks, dsa_ports) = self.axes();
+        let (workloads, backends, masks, dsa_ports, tlbs) = self.axes();
         let mut out = Vec::with_capacity(self.len());
         for wl in &workloads {
             for &backend in &backends {
                 for &mask in &masks {
                     for &dsa in &dsa_ports {
-                        let mut cfg = self.base.clone();
-                        cfg.backend = backend;
-                        cfg.spm_way_mask = mask;
-                        cfg.dsa_port_pairs = dsa;
-                        out.push(Scenario::new(cfg, wl.clone(), self.max_cycles));
+                        for &tlb in &tlbs {
+                            let mut cfg = self.base.clone();
+                            cfg.backend = backend;
+                            cfg.spm_way_mask = mask;
+                            cfg.dsa_port_pairs = dsa;
+                            cfg.tlb_entries = tlb;
+                            out.push(Scenario::new(cfg, wl.clone(), self.max_cycles));
+                        }
                     }
                 }
             }
@@ -124,6 +136,18 @@ mod tests {
         names.sort();
         names.dedup();
         assert_eq!(names.len(), 16);
+    }
+
+    #[test]
+    fn tlb_axis_expands_and_names_scenarios() {
+        let mut g = SweepGrid::new(CheshireConfig::neo());
+        g.workloads = vec![Workload::Supervisor { demand_pages: 2, timer_delta: 5_000 }];
+        g.tlb_entries = vec![16, 4, 16]; // duplicate deduped
+        assert_eq!(g.len(), 2);
+        let scs = g.scenarios();
+        assert!(scs[0].name.ends_with("/tlb16"));
+        assert!(scs[1].name.ends_with("/tlb4"));
+        assert_eq!(scs[1].cfg.tlb_entries, 4);
     }
 
     #[test]

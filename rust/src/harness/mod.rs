@@ -41,6 +41,11 @@ pub fn default_threads() -> usize {
 /// `threads` scoped worker threads and return the results **in input
 /// order**, regardless of scheduling.
 ///
+/// `threads` is the worker-count cap; `0` means "one per available
+/// core" ([`default_threads`]) — the `cheshire sweep --jobs N` knob
+/// passes through here, and results are identical for every cap by the
+/// determinism contract.
+///
 /// `f` receives `(index, item)`. Items are handed out through an atomic
 /// work queue, so long scenarios don't serialize behind short ones. The
 /// `Soc` itself is `!Send` (`Rc`/`RefCell` internals) — the pattern here
@@ -59,7 +64,8 @@ where
     if n == 0 {
         return Vec::new();
     }
-    let threads = threads.max(1).min(n);
+    let threads = if threads == 0 { default_threads() } else { threads };
+    let threads = threads.min(n);
     if threads == 1 {
         return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
     }
@@ -119,5 +125,13 @@ mod tests {
     #[test]
     fn par_map_single_thread_is_plain_map() {
         assert_eq!(par_map(vec![1usize, 2, 3], 1, |i, v| i + v), vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn par_map_zero_means_available_parallelism() {
+        // 0 must behave like default_threads(), i.e. still run everything
+        let out = par_map((0..16).collect::<Vec<u64>>(), 0, |_, v| v + 1);
+        assert_eq!(out, (1..=16).collect::<Vec<u64>>());
+        assert!(default_threads() >= 1);
     }
 }

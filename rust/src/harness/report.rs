@@ -80,6 +80,7 @@ impl SweepReport {
             out.push_str(&format!("      \"backend\": \"{}\",\n", r.backend));
             out.push_str(&format!("      \"spm_way_mask\": {},\n", r.spm_way_mask));
             out.push_str(&format!("      \"dsa_ports\": {},\n", r.dsa_ports));
+            out.push_str(&format!("      \"tlb_entries\": {},\n", r.tlb_entries));
             out.push_str(&format!("      \"freq_hz\": {},\n", r.freq_hz));
             out.push_str(&format!("      \"cycles\": {},\n", r.cycles));
             out.push_str(&format!("      \"halted\": {},\n", r.halted));
@@ -124,6 +125,7 @@ mod tests {
             backend: MemBackend::Rpc,
             spm_way_mask: 0xff,
             dsa_ports: 0,
+            tlb_entries: 16,
             freq_hz: 200.0e6,
             cycles,
             halted: false,

@@ -37,6 +37,15 @@ pub enum Workload {
         /// Largest AXI burst the DMA may issue, in bytes.
         max_burst: u32,
     },
+    /// Sv39 supervisor boot flow (M firmware → page tables → S-mode →
+    /// timer IRQ through `stvec` → demand paging); halts on ebreak.
+    Supervisor {
+        /// 4 KiB pages demand-mapped on fault (page-granularity knob:
+        /// more pages = more walks per TLB entry).
+        demand_pages: u32,
+        /// CLINT ticks until the (single) timer interrupt.
+        timer_delta: u32,
+    },
 }
 
 impl Workload {
@@ -47,18 +56,24 @@ impl Workload {
             Workload::Nop { .. } => "nop",
             Workload::TwoMm { .. } => "twomm",
             Workload::Mem { .. } => "mem",
+            Workload::Supervisor { .. } => "supervisor",
         }
     }
 
     /// Parse a user-facing workload name with bench-calibrated defaults
-    /// (`wfi` | `nop` | `twomm` | `mem`).
+    /// (`wfi` | `nop` | `twomm` | `mem` | `supervisor`).
     pub fn parse(s: &str) -> Result<Self, String> {
         match s.trim().to_ascii_lowercase().as_str() {
             "wfi" => Ok(Workload::Wfi { window: 200_000 }),
             "nop" => Ok(Workload::Nop { window: 200_000 }),
             "twomm" | "2mm" => Ok(Workload::TwoMm { n: 16 }),
             "mem" => Ok(Workload::Mem { len: 16 * 1024, reps: 2, max_burst: 2048 }),
-            other => Err(format!("unknown workload {other:?} (want wfi|nop|twomm|mem)")),
+            "supervisor" | "sv39" => {
+                Ok(Workload::Supervisor { demand_pages: 8, timer_delta: 20_000 })
+            }
+            other => {
+                Err(format!("unknown workload {other:?} (want wfi|nop|twomm|mem|supervisor)"))
+            }
         }
     }
 
@@ -82,6 +97,13 @@ impl Workload {
             }
             Workload::Mem { len, reps, max_burst } => {
                 workloads::mem_program(DRAM_BASE, len, reps, max_burst)
+            }
+            Workload::Supervisor { demand_pages, timer_delta } => {
+                assert!(
+                    soc.cfg.dram_bytes >= 32 * 1024 * 1024,
+                    "supervisor workload maps 32 MiB of DRAM"
+                );
+                workloads::supervisor_program(DRAM_BASE, demand_pages, timer_delta)
             }
         }
     }
@@ -112,14 +134,15 @@ pub struct Scenario {
 
 impl Scenario {
     /// Build a scenario with a generated `name` of the form
-    /// `<workload>/<backend>/spm<mask>/dsa<n>`.
+    /// `<workload>/<backend>/spm<mask>/dsa<n>/tlb<e>`.
     pub fn new(cfg: CheshireConfig, workload: Workload, max_cycles: u64) -> Self {
         let name = format!(
-            "{}/{}/spm{:02x}/dsa{}",
+            "{}/{}/spm{:02x}/dsa{}/tlb{}",
             workload.name(),
             cfg.backend,
             cfg.spm_way_mask,
-            cfg.dsa_port_pairs
+            cfg.dsa_port_pairs,
+            cfg.tlb_entries
         );
         Self { name, cfg, workload, max_cycles }
     }
@@ -173,6 +196,7 @@ impl Scenario {
             backend: self.cfg.backend,
             spm_way_mask: self.cfg.spm_way_mask,
             dsa_ports: self.cfg.dsa_port_pairs,
+            tlb_entries: self.cfg.tlb_entries,
             freq_hz: self.cfg.freq_hz,
             cycles,
             halted,
@@ -196,6 +220,8 @@ pub struct ScenarioResult {
     pub spm_way_mask: u32,
     /// Number of DSA port pairs (each carrying a traffic generator).
     pub dsa_ports: usize,
+    /// I/D TLB entries the CVA6 ran with (the Sv39 VM-pressure axis).
+    pub tlb_entries: usize,
     /// Clock frequency the power numbers are reported at.
     pub freq_hz: f64,
     /// Cycles consumed (the fixed window for wfi/nop, actual for others).
@@ -215,7 +241,7 @@ mod tests {
 
     #[test]
     fn workload_parse_roundtrips_names() {
-        for name in ["wfi", "nop", "twomm", "mem"] {
+        for name in ["wfi", "nop", "twomm", "mem", "supervisor"] {
             assert_eq!(Workload::parse(name).unwrap().name(), name);
         }
         assert!(Workload::parse("fft").is_err());
@@ -227,8 +253,22 @@ mod tests {
         cfg.spm_way_mask = 0x0f;
         cfg.dsa_port_pairs = 1;
         cfg.backend = MemBackend::HyperRam;
+        cfg.tlb_entries = 4;
         let sc = Scenario::new(cfg, Workload::parse("mem").unwrap(), 1_000_000);
-        assert_eq!(sc.name, "mem/hyperram/spm0f/dsa1");
+        assert_eq!(sc.name, "mem/hyperram/spm0f/dsa1/tlb4");
+    }
+
+    #[test]
+    fn supervisor_scenario_boots_to_s_mode_and_halts() {
+        let cfg = CheshireConfig::neo();
+        let wl = Workload::Supervisor { demand_pages: 2, timer_delta: 5_000 };
+        let sc = Scenario::new(cfg, wl, 4_000_000);
+        let r = sc.run();
+        assert!(r.halted, "{}: supervisor must halt cleanly", r.name);
+        assert!(r.stats.get("cpu.instr_s") > 0, "S-mode instructions retired");
+        assert!(r.stats.get("mmu.walks") > 0, "page-table walks happened");
+        assert!(r.stats.get("mmu.page_faults") >= 2, "demand faults taken");
+        assert_eq!(r.stats.get("rpc.dev_violations"), 0);
     }
 
     #[test]

@@ -42,6 +42,7 @@ pub mod dma;
 pub mod asm;
 #[allow(missing_docs)]
 pub mod cpu;
+pub mod mmu;
 #[allow(missing_docs)]
 pub mod irq;
 #[allow(missing_docs)]

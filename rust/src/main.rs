@@ -4,18 +4,19 @@
 //! * `info [--config cfg.toml] [--dsa N]` — print the configuration, the
 //!   memory map, and the area breakdown (Fig. 9 row for this config).
 //! * `run <workload> [--cycles N] [--freq-mhz F] [--config cfg.toml]` —
-//!   run one of the paper's workloads (wfi | nop | twomm | mem) on the
-//!   simulated platform and report cycles, stats and the Fig. 11 power
-//!   split.
+//!   run one of the paper's workloads (wfi | nop | twomm | mem) or the
+//!   Sv39 `supervisor` boot flow on the simulated platform and report
+//!   cycles, stats and the Fig. 11 power split.
 //! * `offload [--n N] [--tile T] [--artifacts DIR]` — tiled matmul through
 //!   the DSA plug-in (DMA + SPM + Pallas-compiled kernel via PJRT).
 //! * `boot` — autonomous SPI-flash GPT boot flow.
 //! * `sweep [--workloads a,b] [--backends rpc,hyperram] [--spm-masks m,..]
-//!   [--dsa n,..] [--threads N] [--serial] [--json PATH]` — expand the
-//!   axis lists into a configuration grid, run one SoC instance per
-//!   scenario in parallel (`crate::harness`), and emit one aggregated
-//!   table + JSON report. Defaults to the paper's §III-B comparison:
-//!   {nop, mem} × {rpc, hyperram}.
+//!   [--dsa n,..] [--tlb e,..] [--jobs N] [--serial] [--json PATH]` —
+//!   expand the axis lists into a configuration grid, run one SoC
+//!   instance per scenario in parallel (`crate::harness`; `--jobs` caps
+//!   the worker count, defaulting to one per core), and emit one
+//!   aggregated table + JSON report. Defaults to the paper's §III-B
+//!   comparison: {nop, mem} × {rpc, hyperram}.
 
 use cheshire::asm::reg::*;
 use cheshire::asm::Asm;
@@ -66,12 +67,13 @@ fn main() {
         Some("sweep") => sweep(&args),
         _ => {
             eprintln!("usage: cheshire <info|run|offload|boot|sweep> [options]");
-            eprintln!("  run <wfi|nop|twomm|mem> [--cycles N] [--freq-mhz F]");
+            eprintln!("  run <wfi|nop|twomm|mem|supervisor> [--cycles N] [--freq-mhz F]");
+            eprintln!("      [--demand-pages N] [--timer-delta N]");
             eprintln!("  offload [--n 128] [--tile 64] [--artifacts artifacts/]");
             eprintln!("  boot");
             eprintln!("  sweep [--workloads nop,mem] [--backends rpc,hyperram]");
-            eprintln!("        [--spm-masks 0xff,0x0f] [--dsa 0,1] [--cycles N]");
-            eprintln!("        [--threads N] [--serial] [--json sweep.json|-]");
+            eprintln!("        [--spm-masks 0xff,0x0f] [--dsa 0,1] [--tlb 16,4] [--cycles N]");
+            eprintln!("        [--jobs N] [--serial] [--json sweep.json|-]");
             std::process::exit(2);
         }
     }
@@ -107,13 +109,18 @@ fn sweep(args: &Args) {
     if let Some(bks) = parse_axis(args, "backends", MemBackend::parse) {
         grid.backends = bks;
     }
-    if let Some(masks) = parse_axis(args, "spm-masks", |s| parse_u32_maybe_hex(s)) {
+    if let Some(masks) = parse_axis(args, "spm-masks", parse_u32_maybe_hex) {
         grid.spm_way_masks = masks;
     }
     if let Some(dsa) = parse_axis(args, "dsa", |s| {
         s.trim().parse::<usize>().map_err(|e| format!("bad dsa count {s:?}: {e}"))
     }) {
         grid.dsa_ports = dsa;
+    }
+    if let Some(tlb) = parse_axis(args, "tlb", |s| {
+        s.trim().parse::<usize>().map_err(|e| format!("bad tlb entry count {s:?}: {e}"))
+    }) {
+        grid.tlb_entries = tlb;
     }
     // `--cycles` is the per-scenario bound for *every* workload: halting
     // workloads get it as their run cap, fixed-window workloads have
@@ -132,10 +139,13 @@ fn sweep(args: &Args) {
 
     let scenarios = grid.scenarios();
     let n = scenarios.len();
+    // `--jobs N` caps the worker pool (0 / absent → one per core);
+    // `--threads` is kept as an alias for older scripts
     let threads = if args.flag("serial") {
         1
     } else {
-        args.get_u64("threads", harness::default_threads() as u64) as usize
+        let jobs = args.get_u64("jobs", args.get_u64("threads", 0));
+        if jobs == 0 { harness::default_threads() } else { jobs as usize }
     };
     eprintln!("sweep: {n} scenarios on {threads} thread(s)");
     let t0 = std::time::Instant::now();
@@ -185,6 +195,10 @@ fn run(args: &Args) {
         "nop" => Workload::Nop { window: cycles },
         "twomm" => Workload::TwoMm { n: args.get_u64("n", 32) as usize },
         "mem" => Workload::Mem { len: 64 * 1024, reps: 8, max_burst: 2048 },
+        "supervisor" => Workload::Supervisor {
+            demand_pages: args.get_u64("demand-pages", 8) as u32,
+            timer_delta: args.get_u64("timer-delta", 20_000) as u32,
+        },
         other => {
             eprintln!("unknown workload {other}");
             std::process::exit(2);

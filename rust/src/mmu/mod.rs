@@ -1,0 +1,345 @@
+//! Sv39 virtual memory: split I/D TLBs + hardware page-table walker.
+//!
+//! This is the subsystem that makes the host platform *supervisor*
+//! capable (paper §II-A: CVA6 "supports the RISC-V privileged
+//! specification … enabling it to boot a GPOS like Linux"). The core
+//! ([`crate::cpu::core`]) consults [`Mmu::translate`] on every fetch,
+//! load and store while a lower-than-M privilege runs with
+//! `satp.MODE = Sv39`:
+//!
+//! * **TLB hit** — pure lookup, no bus traffic; hit counters feed the
+//!   power model.
+//! * **TLB miss** — the walker ([`sv39::walk`]) fetches up to three PTEs
+//!   as ordinary [`crate::cpu::Bus`] loads. On the assembled platform
+//!   those travel through the CVA6 D-cache and the AXI fabric, so PTW
+//!   traffic contends with program traffic exactly like hardware. A
+//!   stalled PTE fetch aborts the walk; the core retries the whole
+//!   instruction side-effect-free (completed fetches are then L1 hits).
+//! * **Fault** — structural faults (invalid/reserved/misaligned-superpage
+//!   PTEs) and permission failures (R/W/X, U, `mstatus.SUM`,
+//!   `mstatus.MXR`, clear A, store to clear D) surface as page faults,
+//!   which the core raises as cause 12/13/15 and optionally delegates to
+//!   S-mode via `medeleg`.
+//!
+//! Timing: beyond the real memory latency of its PTE fetches, a
+//! completed walk charges [`PTW_LEVEL_CYCLES`] per level to model the
+//! walker FSM; [`crate::cpu::cva6`] drains [`Mmu::take_walk_penalty`]
+//! into busy cycles and [`Mmu::take_counters`] into [`crate::sim::Stats`]
+//! (`mmu.*` keys).
+
+pub mod sv39;
+pub mod tlb;
+
+pub use tlb::{Tlb, TlbEntry};
+
+use crate::cpu::core::Bus;
+use sv39::{WalkErr, PTE_A, PTE_D, PTE_R, PTE_U, PTE_W, PTE_X, SATP_MODE_SV39};
+
+/// Walker-FSM cycles charged per PTE level fetched (on top of the real
+/// cache/AXI latency of the fetch itself).
+pub const PTW_LEVEL_CYCLES: u32 = 2;
+
+/// The access type being translated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Access {
+    /// Instruction fetch.
+    Exec,
+    /// Data load.
+    Read,
+    /// Data store (or AMO).
+    Write,
+}
+
+/// Why a translation did not produce a physical address.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum XlateErr {
+    /// A PTE fetch needs bus time; the instruction must retry.
+    Stall,
+    /// Page fault (structural or permission); the core traps.
+    PageFault,
+}
+
+/// Event counters the timing wrapper drains into [`crate::sim::Stats`].
+///
+/// TLB hits/misses count per *attempt* (an instruction retried after a
+/// memory stall probes again), mirroring how the L1 hit/miss counters
+/// behave; walks and walk levels count once per *completed* walk.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MmuCounters {
+    /// Instruction-TLB hits.
+    pub itlb_hit: u64,
+    /// Instruction-TLB misses.
+    pub itlb_miss: u64,
+    /// Data-TLB hits.
+    pub dtlb_hit: u64,
+    /// Data-TLB misses.
+    pub dtlb_miss: u64,
+    /// Completed page-table walks.
+    pub walks: u64,
+    /// PTE fetches performed by completed walks.
+    pub walk_levels: u64,
+    /// Page faults raised (structural + permission).
+    pub faults: u64,
+}
+
+/// The memory-management unit: split I/D TLBs plus the walker state.
+#[derive(Debug, Clone)]
+pub struct Mmu {
+    /// Instruction TLB.
+    pub itlb: Tlb,
+    /// Data TLB.
+    pub dtlb: Tlb,
+    /// Counters since the last [`Mmu::take_counters`].
+    pub counters: MmuCounters,
+    walk_penalty: u32,
+}
+
+impl Mmu {
+    /// An MMU with `tlb_entries` slots in each of the I and D TLBs.
+    pub fn new(tlb_entries: usize) -> Self {
+        Self {
+            itlb: Tlb::new(tlb_entries),
+            dtlb: Tlb::new(tlb_entries),
+            counters: MmuCounters::default(),
+            walk_penalty: 0,
+        }
+    }
+
+    /// Whether `satp` enables Sv39 translation.
+    pub fn active(satp: u64) -> bool {
+        satp >> 60 == SATP_MODE_SV39
+    }
+
+    /// Flush both TLBs (`sfence.vma`, `satp` writes).
+    pub fn flush(&mut self) {
+        self.itlb.flush();
+        self.dtlb.flush();
+    }
+
+    /// Drain the accumulated walker-FSM penalty cycles.
+    pub fn take_walk_penalty(&mut self) -> u32 {
+        std::mem::replace(&mut self.walk_penalty, 0)
+    }
+
+    /// Drain the event counters.
+    pub fn take_counters(&mut self) -> MmuCounters {
+        std::mem::take(&mut self.counters)
+    }
+
+    /// Translate `va` for `acc` at privilege `prv` (0 = U, 1 = S) under
+    /// `satp`/`mstatus`. The caller gates M-mode and bare-mode bypass
+    /// (this function assumes translation is on).
+    pub fn translate(
+        &mut self,
+        bus: &mut dyn Bus,
+        va: u64,
+        acc: Access,
+        prv: u8,
+        satp: u64,
+        mstatus: u64,
+    ) -> Result<u64, XlateErr> {
+        debug_assert!(prv <= 1, "M-mode must bypass translation");
+        let hit = match acc {
+            Access::Exec => self.itlb.lookup(va),
+            _ => self.dtlb.lookup(va),
+        };
+        if let Some(e) = hit {
+            match acc {
+                Access::Exec => self.counters.itlb_hit += 1,
+                _ => self.counters.dtlb_hit += 1,
+            }
+            if !perm_ok(e.pte, acc, prv, mstatus) {
+                self.counters.faults += 1;
+                return Err(XlateErr::PageFault);
+            }
+            return Ok(e.pa(va));
+        }
+        match acc {
+            Access::Exec => self.counters.itlb_miss += 1,
+            _ => self.counters.dtlb_miss += 1,
+        }
+        let r = match sv39::walk(bus, satp, va) {
+            Ok(r) => r,
+            Err(WalkErr::Stall) => return Err(XlateErr::Stall),
+            Err(WalkErr::Fault) => {
+                self.counters.faults += 1;
+                return Err(XlateErr::PageFault);
+            }
+        };
+        self.counters.walks += 1;
+        self.counters.walk_levels += r.fetches as u64;
+        self.walk_penalty += PTW_LEVEL_CYCLES * r.fetches;
+        if sv39::superpage_misaligned(r.pte, r.level) || !perm_ok(r.pte, acc, prv, mstatus) {
+            self.counters.faults += 1;
+            return Err(XlateErr::PageFault);
+        }
+        match acc {
+            Access::Exec => self.itlb.insert(va, r.level, r.pte),
+            _ => self.dtlb.insert(va, r.level, r.pte),
+        }
+        Ok(sv39::pa_compose(r.pte, r.level, va))
+    }
+}
+
+const MSTATUS_SUM: u64 = 1 << 18;
+const MSTATUS_MXR: u64 = 1 << 19;
+
+/// Leaf-PTE permission check for `acc` at privilege `prv` (0 = U, 1 = S).
+///
+/// Encodes the privileged-spec rules the supervisor scenarios exercise:
+/// R/W/X permissions (with `MXR` making executable pages loadable), the
+/// U bit (S needs `SUM` for U data pages and may never execute them),
+/// and the software-managed A/D scheme (clear A, or a store to clear D,
+/// faults instead of being updated by hardware).
+pub fn perm_ok(pte: u64, acc: Access, prv: u8, mstatus: u64) -> bool {
+    let sum = mstatus & MSTATUS_SUM != 0;
+    let mxr = mstatus & MSTATUS_MXR != 0;
+    let rwx = match acc {
+        Access::Exec => pte & PTE_X != 0,
+        Access::Read => pte & PTE_R != 0 || (mxr && pte & PTE_X != 0),
+        Access::Write => pte & PTE_W != 0,
+    };
+    let user = if prv == 0 {
+        pte & PTE_U != 0
+    } else if pte & PTE_U != 0 {
+        acc != Access::Exec && sum
+    } else {
+        true
+    };
+    let ad = pte & PTE_A != 0 && (acc != Access::Write || pte & PTE_D != 0);
+    rwx && user && ad
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::core::MemErr;
+    use sv39::tests::{put_pte, Flat};
+    use sv39::{satp_sv39, PTE_V};
+
+    const RWXAD: u64 = PTE_V | PTE_R | PTE_W | PTE_X | PTE_A | PTE_D;
+
+    fn pte_at(m: &mut Flat, addr: u64, pte: u64) {
+        put_pte(m, addr, pte);
+    }
+
+    fn setup_4k(map_flags: u64) -> (Mmu, Flat, u64) {
+        let mut m = Flat(vec![0; 0x10000]);
+        pte_at(&mut m, 0x1000, ((0x2000u64 >> 12) << 10) | PTE_V);
+        pte_at(&mut m, 0x2000, ((0x3000u64 >> 12) << 10) | PTE_V);
+        pte_at(&mut m, 0x3000 + 4 * 8, ((0x8000u64 >> 12) << 10) | map_flags);
+        (Mmu::new(4), m, satp_sv39(0x1000))
+    }
+
+    #[test]
+    fn miss_walks_then_hits_from_tlb() {
+        let (mut mmu, mut m, satp) = setup_4k(RWXAD);
+        let pa = mmu.translate(&mut m, 0x4018, Access::Read, 1, satp, 0).unwrap();
+        assert_eq!(pa, 0x8018);
+        assert_eq!((mmu.counters.dtlb_miss, mmu.counters.walks), (1, 1));
+        assert_eq!(mmu.counters.walk_levels, 3);
+        assert_eq!(mmu.take_walk_penalty(), 3 * PTW_LEVEL_CYCLES);
+        let pa = mmu.translate(&mut m, 0x4020, Access::Write, 1, satp, 0).unwrap();
+        assert_eq!(pa, 0x8020);
+        assert_eq!(mmu.counters.dtlb_hit, 1);
+        assert_eq!(mmu.take_walk_penalty(), 0, "hits charge no walk penalty");
+        // exec goes through the I-TLB: a fresh walk
+        let pa = mmu.translate(&mut m, 0x4000, Access::Exec, 1, satp, 0).unwrap();
+        assert_eq!(pa, 0x8000);
+        assert_eq!(mmu.counters.itlb_miss, 1);
+    }
+
+    #[test]
+    fn permission_bits_enforced() {
+        // read-only page: stores fault, loads succeed
+        let (mut mmu, mut m, satp) = setup_4k(PTE_V | PTE_R | PTE_A);
+        assert!(mmu.translate(&mut m, 0x4000, Access::Read, 1, satp, 0).is_ok());
+        assert_eq!(
+            mmu.translate(&mut m, 0x4000, Access::Write, 1, satp, 0),
+            Err(XlateErr::PageFault)
+        );
+        assert_eq!(
+            mmu.translate(&mut m, 0x4000, Access::Exec, 1, satp, 0),
+            Err(XlateErr::PageFault)
+        );
+        assert!(mmu.counters.faults >= 2);
+    }
+
+    #[test]
+    fn user_bit_sum_and_mxr() {
+        let sum = 1u64 << 18;
+        let mxr = 1u64 << 19;
+        let u_page = PTE_V | PTE_R | PTE_W | PTE_X | PTE_U | PTE_A | PTE_D;
+        // S touching a U page needs SUM, and may never execute it
+        assert!(!perm_ok(u_page, Access::Read, 1, 0));
+        assert!(perm_ok(u_page, Access::Read, 1, sum));
+        assert!(!perm_ok(u_page, Access::Exec, 1, sum));
+        // U touching a non-U page always faults
+        let s_page = PTE_V | PTE_R | PTE_W | PTE_X | PTE_A | PTE_D;
+        assert!(!perm_ok(s_page, Access::Read, 0, 0));
+        assert!(perm_ok(u_page, Access::Exec, 0, 0));
+        // MXR lets loads read execute-only pages
+        let x_only = PTE_V | PTE_X | PTE_A;
+        assert!(!perm_ok(x_only, Access::Read, 1, 0));
+        assert!(perm_ok(x_only, Access::Read, 1, mxr));
+        // software A/D: clear A faults, store to clear D faults
+        let no_a = PTE_V | PTE_R | PTE_W | PTE_D;
+        assert!(!perm_ok(no_a, Access::Read, 1, 0));
+        let no_d = PTE_V | PTE_R | PTE_W | PTE_A;
+        assert!(perm_ok(no_d, Access::Read, 1, 0));
+        assert!(!perm_ok(no_d, Access::Write, 1, 0));
+    }
+
+    #[test]
+    fn stalled_walk_leaves_tlb_unfilled_and_counts_nothing_done() {
+        struct Flaky {
+            inner: Flat,
+            stalls: u32,
+        }
+        impl Bus for Flaky {
+            fn load(&mut self, addr: u64, size: usize) -> Result<u64, MemErr> {
+                if self.stalls > 0 {
+                    self.stalls -= 1;
+                    return Err(MemErr::Stall);
+                }
+                self.inner.load(addr, size)
+            }
+            fn store(&mut self, addr: u64, val: u64, size: usize) -> Result<(), MemErr> {
+                self.inner.store(addr, val, size)
+            }
+            fn fetch(&mut self, addr: u64) -> Result<u32, MemErr> {
+                self.inner.fetch(addr)
+            }
+        }
+        let (_, m, satp) = setup_4k(RWXAD);
+        let mut mmu = Mmu::new(4);
+        let mut bus = Flaky { inner: m, stalls: 2 };
+        // two stalled attempts, then success — like the core's retry loop
+        assert_eq!(
+            mmu.translate(&mut bus, 0x4000, Access::Read, 1, satp, 0),
+            Err(XlateErr::Stall)
+        );
+        assert_eq!(
+            mmu.translate(&mut bus, 0x4000, Access::Read, 1, satp, 0),
+            Err(XlateErr::Stall)
+        );
+        assert_eq!(mmu.counters.walks, 0, "aborted walks don't count");
+        let pa = mmu.translate(&mut bus, 0x4000, Access::Read, 1, satp, 0).unwrap();
+        assert_eq!(pa, 0x8000);
+        assert_eq!(mmu.counters.walks, 1);
+        assert_eq!(mmu.counters.dtlb_miss, 3, "one miss per attempt");
+    }
+
+    #[test]
+    fn flush_forces_a_rewalk() {
+        let (mut mmu, mut m, satp) = setup_4k(RWXAD);
+        mmu.translate(&mut m, 0x4000, Access::Read, 1, satp, 0).unwrap();
+        // remap the page in memory; the stale TLB still serves the old PA
+        pte_at(&mut m, 0x3000 + 4 * 8, ((0x9000u64 >> 12) << 10) | RWXAD);
+        let stale = mmu.translate(&mut m, 0x4000, Access::Read, 1, satp, 0).unwrap();
+        assert_eq!(stale, 0x8000);
+        mmu.flush();
+        let fresh = mmu.translate(&mut m, 0x4000, Access::Read, 1, satp, 0).unwrap();
+        assert_eq!(fresh, 0x9000, "sfence.vma makes the new mapping visible");
+    }
+}

@@ -1,0 +1,222 @@
+//! Sv39 page-table entry format and the page-table walker.
+//!
+//! The walker issues its PTE fetches as ordinary [`Bus`] loads, so on the
+//! full platform they travel through the CVA6 D-cache and, on a miss, as
+//! real beat-level AXI refills — PTW traffic is visible to the LLC, the
+//! RPC/HyperRAM backend, and the power model exactly like program loads.
+//! A fetch may therefore [`MemErr::Stall`]; the walk aborts and the core
+//! retries the whole instruction side-effect-free (earlier PTE lines are
+//! then L1 hits, so a walk makes forward progress on every retry).
+
+use crate::cpu::core::{Bus, MemErr};
+
+/// PTE valid bit.
+pub const PTE_V: u64 = 1 << 0;
+/// PTE read-permission bit.
+pub const PTE_R: u64 = 1 << 1;
+/// PTE write-permission bit.
+pub const PTE_W: u64 = 1 << 2;
+/// PTE execute-permission bit.
+pub const PTE_X: u64 = 1 << 3;
+/// PTE user-accessible bit.
+pub const PTE_U: u64 = 1 << 4;
+/// PTE global-mapping bit.
+pub const PTE_G: u64 = 1 << 5;
+/// PTE accessed bit (not set by hardware here: a clear A faults).
+pub const PTE_A: u64 = 1 << 6;
+/// PTE dirty bit (not set by hardware here: a store to clear D faults).
+pub const PTE_D: u64 = 1 << 7;
+
+/// `satp.MODE` value selecting Sv39 translation.
+pub const SATP_MODE_SV39: u64 = 8;
+
+/// Physical page number field of a PTE (bits 53:10, 44 bits).
+pub const PTE_PPN_MASK: u64 = ((1u64 << 44) - 1) << 10;
+
+/// Number of Sv39 levels (1 GiB / 2 MiB / 4 KiB).
+pub const LEVELS: u8 = 3;
+
+/// Build a `satp` value enabling Sv39 with the root table at `root_pa`
+/// (must be 4 KiB aligned).
+pub fn satp_sv39(root_pa: u64) -> u64 {
+    debug_assert_eq!(root_pa & 0xfff, 0, "root table must be page-aligned");
+    (SATP_MODE_SV39 << 60) | (root_pa >> 12)
+}
+
+/// Bytes mapped by a leaf at `level` (4 KiB, 2 MiB, 1 GiB).
+pub fn page_bytes(level: u8) -> u64 {
+    1u64 << (12 + 9 * level as u32)
+}
+
+/// Compose the physical address for a leaf `pte` at `level` and a virtual
+/// address `va` within its page.
+pub fn pa_compose(pte: u64, level: u8, va: u64) -> u64 {
+    let ppn = (pte & PTE_PPN_MASK) >> 10;
+    let off_mask = page_bytes(level) - 1;
+    ((ppn << 12) & !off_mask) | (va & off_mask)
+}
+
+/// A superpage leaf whose PPN is not aligned to its page size is
+/// reserved → page fault (Sv39 misaligned-superpage rule).
+pub fn superpage_misaligned(pte: u64, level: u8) -> bool {
+    let ppn = (pte & PTE_PPN_MASK) >> 10;
+    level > 0 && ppn & ((1u64 << (9 * level as u32)) - 1) != 0
+}
+
+/// Why a walk ended without producing a leaf.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WalkErr {
+    /// A PTE fetch needs bus time; retry the instruction.
+    Stall,
+    /// The table structure faults (invalid, reserved, too deep, or the
+    /// PTE fetch itself hit a bus error).
+    Fault,
+}
+
+/// A completed walk: the leaf PTE, its level, and how many PTE fetches
+/// the walk performed (timing/power accounting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WalkResult {
+    /// The leaf PTE as read from memory.
+    pub pte: u64,
+    /// Leaf level: 0 = 4 KiB, 1 = 2 MiB, 2 = 1 GiB.
+    pub level: u8,
+    /// Number of PTE loads issued (1..=3).
+    pub fetches: u32,
+}
+
+/// Walk the Sv39 table rooted at `satp` for `va`. Permission and
+/// alignment checks are the caller's job ([`super::Mmu::translate`]);
+/// this only resolves the radix-tree structure.
+pub fn walk(bus: &mut dyn Bus, satp: u64, va: u64) -> Result<WalkResult, WalkErr> {
+    // Sv39 VAs are canonical: bits 63:39 must replicate bit 38.
+    let ext = (va as i64) >> 38;
+    if ext != 0 && ext != -1 {
+        return Err(WalkErr::Fault);
+    }
+    let mut table = (satp & ((1u64 << 44) - 1)) << 12;
+    let mut fetches = 0u32;
+    for level in (0..LEVELS).rev() {
+        let idx = (va >> (12 + 9 * level as u32)) & 0x1ff;
+        let pte = match bus.load(table + idx * 8, 8) {
+            Ok(v) => v,
+            Err(MemErr::Stall) => return Err(WalkErr::Stall),
+            Err(MemErr::Fault) => return Err(WalkErr::Fault),
+        };
+        fetches += 1;
+        if pte & PTE_V == 0 || (pte & PTE_R == 0 && pte & PTE_W != 0) {
+            return Err(WalkErr::Fault); // invalid or reserved (W without R)
+        }
+        if pte & (PTE_R | PTE_X) != 0 {
+            return Ok(WalkResult { pte, level, fetches });
+        }
+        if level == 0 {
+            return Err(WalkErr::Fault); // pointer PTE at the last level
+        }
+        table = ((pte & PTE_PPN_MASK) >> 10) << 12;
+    }
+    unreachable!("loop returns at level 0")
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    /// Flat little-endian memory for walker tests (shared with the
+    /// sibling `mmu` test module).
+    pub(crate) struct Flat(pub Vec<u8>);
+    impl Bus for Flat {
+        fn load(&mut self, addr: u64, size: usize) -> Result<u64, MemErr> {
+            let a = addr as usize;
+            if a + size > self.0.len() {
+                return Err(MemErr::Fault);
+            }
+            let mut v = 0u64;
+            for (i, b) in self.0[a..a + size].iter().enumerate() {
+                v |= (*b as u64) << (8 * i);
+            }
+            Ok(v)
+        }
+        fn store(&mut self, addr: u64, val: u64, size: usize) -> Result<(), MemErr> {
+            let a = addr as usize;
+            if a + size > self.0.len() {
+                return Err(MemErr::Fault);
+            }
+            for (i, b) in self.0[a..a + size].iter_mut().enumerate() {
+                *b = (val >> (8 * i)) as u8;
+            }
+            Ok(())
+        }
+        fn fetch(&mut self, addr: u64) -> Result<u32, MemErr> {
+            self.load(addr, 4).map(|v| v as u32)
+        }
+    }
+
+    pub(crate) fn put_pte(mem: &mut Flat, addr: u64, pte: u64) {
+        mem.store(addr, pte, 8).unwrap();
+    }
+
+    pub(crate) fn leaf(pa: u64, flags: u64) -> u64 {
+        ((pa >> 12) << 10) | flags
+    }
+
+    pub(crate) fn pointer(pa: u64) -> u64 {
+        ((pa >> 12) << 10) | PTE_V
+    }
+
+    const RWXAD: u64 = PTE_V | PTE_R | PTE_W | PTE_X | PTE_A | PTE_D;
+
+    #[test]
+    fn three_level_walk_resolves_4k_leaf() {
+        let mut m = Flat(vec![0; 0x10000]);
+        // root @0x1000, l1 @0x2000, l0 @0x3000; VA 0x4000 → PA 0x8000
+        put_pte(&mut m, 0x1000, pointer(0x2000));
+        put_pte(&mut m, 0x2000, pointer(0x3000));
+        put_pte(&mut m, 0x3000 + 4 * 8, leaf(0x8000, RWXAD));
+        let r = walk(&mut m, satp_sv39(0x1000), 0x4123).unwrap();
+        assert_eq!(r.level, 0);
+        assert_eq!(r.fetches, 3);
+        assert_eq!(pa_compose(r.pte, r.level, 0x4123), 0x8123);
+    }
+
+    #[test]
+    fn megapage_and_gigapage_leaves_stop_early() {
+        let mut m = Flat(vec![0; 0x10000]);
+        put_pte(&mut m, 0x1000, pointer(0x2000)); // root[0] → l1
+        put_pte(&mut m, 0x2000 + 8, leaf(0x0020_0000, RWXAD)); // 2 MiB leaf
+        let r = walk(&mut m, satp_sv39(0x1000), 0x0020_1234).unwrap();
+        assert_eq!((r.level, r.fetches), (1, 2));
+        assert_eq!(pa_compose(r.pte, r.level, 0x0020_1234), 0x0020_1234);
+        // gigapage: root[1] is a level-2 leaf
+        put_pte(&mut m, 0x1000 + 8, leaf(0x4000_0000, RWXAD));
+        let r = walk(&mut m, satp_sv39(0x1000), 0x4000_0040).unwrap();
+        assert_eq!((r.level, r.fetches), (2, 1));
+        assert!(!superpage_misaligned(r.pte, r.level));
+    }
+
+    #[test]
+    fn invalid_reserved_and_deep_walks_fault() {
+        let mut m = Flat(vec![0; 0x10000]);
+        // invalid root entry
+        assert_eq!(walk(&mut m, satp_sv39(0x1000), 0x0), Err(WalkErr::Fault));
+        // reserved: W without R
+        put_pte(&mut m, 0x1000, PTE_V | PTE_W | PTE_A | PTE_D);
+        assert_eq!(walk(&mut m, satp_sv39(0x1000), 0x0), Err(WalkErr::Fault));
+        // pointer chain all the way to level 0 (no leaf)
+        put_pte(&mut m, 0x1000, pointer(0x2000));
+        put_pte(&mut m, 0x2000, pointer(0x3000));
+        put_pte(&mut m, 0x3000, pointer(0x4000));
+        assert_eq!(walk(&mut m, satp_sv39(0x1000), 0x0), Err(WalkErr::Fault));
+        // non-canonical VA
+        assert_eq!(walk(&mut m, satp_sv39(0x1000), 1u64 << 45), Err(WalkErr::Fault));
+    }
+
+    #[test]
+    fn misaligned_superpage_detected() {
+        // 2 MiB leaf whose PPN has low bits set
+        let pte = leaf(0x0020_1000, RWXAD);
+        assert!(superpage_misaligned(pte, 1));
+        assert!(!superpage_misaligned(pte, 0));
+        assert!(superpage_misaligned(leaf(0x0020_0000, RWXAD), 2));
+    }
+}

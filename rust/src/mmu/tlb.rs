@@ -1,0 +1,114 @@
+//! Fully-associative translation look-aside buffer.
+//!
+//! CVA6 carries small separate instruction and data TLBs (16 entries
+//! fully associative in the shipped configuration); the model mirrors
+//! that split. Replacement is round-robin — deterministic by
+//! construction, which the parallel sweep harness's bit-identity
+//! contract relies on. Superpage entries (2 MiB / 1 GiB) occupy one slot
+//! and match on their truncated VPN.
+
+use super::sv39;
+
+/// One cached translation: the leaf PTE plus its level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TlbEntry {
+    /// Virtual page number (`va >> 12`), untruncated.
+    pub vpn: u64,
+    /// Leaf level: 0 = 4 KiB, 1 = 2 MiB, 2 = 1 GiB.
+    pub level: u8,
+    /// The leaf PTE (flags + PPN) as installed by the walker.
+    pub pte: u64,
+}
+
+impl TlbEntry {
+    /// Whether this entry translates `va`.
+    pub fn covers(&self, va: u64) -> bool {
+        let shift = 9 * self.level as u32;
+        (self.vpn >> shift) == ((va >> 12) >> shift)
+    }
+
+    /// Physical address for `va` (caller must have checked [`Self::covers`]).
+    pub fn pa(&self, va: u64) -> u64 {
+        sv39::pa_compose(self.pte, self.level, va)
+    }
+}
+
+/// A fully-associative TLB with round-robin replacement.
+#[derive(Debug, Clone)]
+pub struct Tlb {
+    entries: Vec<Option<TlbEntry>>,
+    next: usize,
+}
+
+impl Tlb {
+    /// A TLB with `entries` slots (at least 1).
+    pub fn new(entries: usize) -> Self {
+        Self { entries: vec![None; entries.max(1)], next: 0 }
+    }
+
+    /// Number of slots.
+    pub fn capacity(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Look up `va`; entries are `Copy`, so hits are returned by value.
+    pub fn lookup(&self, va: u64) -> Option<TlbEntry> {
+        self.entries.iter().flatten().find(|e| e.covers(va)).copied()
+    }
+
+    /// Install a translation, evicting round-robin.
+    pub fn insert(&mut self, va: u64, level: u8, pte: u64) {
+        self.entries[self.next] = Some(TlbEntry { vpn: va >> 12, level, pte });
+        self.next = (self.next + 1) % self.entries.len();
+    }
+
+    /// Drop every entry (`sfence.vma` / `satp` write). Also resets the
+    /// replacement pointer so the flush leaves no hidden state behind.
+    pub fn flush(&mut self) {
+        for e in &mut self.entries {
+            *e = None;
+        }
+        self.next = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mmu::sv39::{PTE_A, PTE_D, PTE_R, PTE_V, PTE_W, PTE_X};
+
+    const FLAGS: u64 = PTE_V | PTE_R | PTE_W | PTE_X | PTE_A | PTE_D;
+
+    #[test]
+    fn hit_miss_and_flush() {
+        let mut t = Tlb::new(4);
+        assert!(t.lookup(0x4000).is_none());
+        t.insert(0x4000, 0, ((0x8000u64 >> 12) << 10) | FLAGS);
+        let e = t.lookup(0x4abc).unwrap();
+        assert_eq!(e.pa(0x4abc), 0x8abc);
+        assert!(t.lookup(0x5000).is_none(), "different page misses");
+        t.flush();
+        assert!(t.lookup(0x4000).is_none());
+    }
+
+    #[test]
+    fn superpage_entry_covers_whole_range() {
+        let mut t = Tlb::new(2);
+        // 2 MiB identity megapage at 0x0020_0000
+        t.insert(0x0020_0000, 1, ((0x0020_0000u64 >> 12) << 10) | FLAGS);
+        let e = t.lookup(0x0030_1234).unwrap();
+        assert_eq!(e.pa(0x0030_1234), 0x0030_1234);
+        assert!(t.lookup(0x0040_0000).is_none(), "next megapage misses");
+    }
+
+    #[test]
+    fn round_robin_replacement_is_deterministic() {
+        let mut t = Tlb::new(2);
+        t.insert(0x1000, 0, ((0x1000u64 >> 12) << 10) | FLAGS);
+        t.insert(0x2000, 0, ((0x2000u64 >> 12) << 10) | FLAGS);
+        t.insert(0x3000, 0, ((0x3000u64 >> 12) << 10) | FLAGS); // evicts 0x1000
+        assert!(t.lookup(0x1000).is_none());
+        assert!(t.lookup(0x2000).is_some());
+        assert!(t.lookup(0x3000).is_some());
+    }
+}

@@ -35,6 +35,12 @@ pub struct Energies {
     pub cache_miss: f64,
     /// Extra cost of a floating-point instruction.
     pub fp_instr_extra: f64,
+    /// Per I/D TLB lookup (CAM search; zero activity on bare-metal runs).
+    pub tlb_lookup: f64,
+    /// Per PTE fetch issued by the page-table walker (FSM + D-cache
+    /// request path; the fetched line's SRAM/DRAM energy is already
+    /// counted by the cache/memory events it generates).
+    pub ptw_level: f64,
     /// Per SPM access.
     pub spm_access: f64,
     /// DMA datapath, per byte moved.
@@ -71,6 +77,8 @@ impl Energies {
             dcache_access: 120.0,
             cache_miss: 600.0,
             fp_instr_extra: 720.0,
+            tlb_lookup: 18.0,
+            ptw_level: 240.0,
             spm_access: 85.0,
             dma_per_byte: 14.0,
             xbar_per_beat: 30.0,
@@ -126,6 +134,9 @@ impl PowerModel {
             + e.dcache_access * (g("cpu.dcache_hit") + g("cpu.dcache_miss"))
             + e.cache_miss * (g("cpu.icache_miss") + g("cpu.dcache_miss") + g("llc.miss"))
             + e.fp_instr_extra * g("cpu.fp_instr")
+            + e.tlb_lookup
+                * (g("mmu.itlb_hit") + g("mmu.itlb_miss") + g("mmu.dtlb_hit") + g("mmu.dtlb_miss"))
+            + e.ptw_level * g("mmu.walk_levels")
             + e.spm_access * g("llc.spm_access")
             + e.dma_per_byte * (g("dma.rd_bytes") + g("dma.wr_bytes"))
             + e.xbar_per_beat * (g("xbar.w") + g("xbar.r"))

@@ -62,6 +62,9 @@ pub struct CheshireConfig {
     pub dcache_bytes: usize,
     /// CVA6 L1 cache associativity (ways).
     pub l1_ways: usize,
+    /// Entries in each of the CVA6's split I/D TLBs (a sweep axis for
+    /// supervisor workloads; CVA6 ships 16, fully associative).
+    pub tlb_entries: usize,
     /// LLC total size in bytes.
     pub llc_bytes: usize,
     /// LLC associativity (ways), each individually maskable as SPM.
@@ -102,6 +105,7 @@ impl CheshireConfig {
             icache_bytes: 32 * 1024,
             dcache_bytes: 32 * 1024,
             l1_ways: 8,
+            tlb_entries: 16,
             llc_bytes: 128 * 1024,
             llc_ways: 8,
             spm_way_mask: 0xff,
@@ -152,6 +156,9 @@ impl CheshireConfig {
         }
         if let Some(v) = get_u("platform.dcache_kib") {
             c.dcache_bytes = v as usize * 1024;
+        }
+        if let Some(v) = get_u("platform.tlb_entries") {
+            c.tlb_entries = v as usize;
         }
         if let Some(v) = get_u("platform.dram_mib") {
             c.dram_bytes = v as usize * 1024 * 1024;
@@ -363,5 +370,12 @@ mod tests {
         assert_eq!(c.addr_bits, 48);
         assert_eq!(c.dsa_port_pairs, 0);
         assert_eq!(c.rpc_rd_buf, 8 * 1024);
+        assert_eq!(c.tlb_entries, 16);
+    }
+
+    #[test]
+    fn tlb_entries_load_from_toml() {
+        let c = CheshireConfig::from_toml("[platform]\ntlb_entries = 4").unwrap();
+        assert_eq!(c.tlb_entries, 4);
     }
 }

@@ -230,6 +230,7 @@ impl Soc {
         cva6_cfg.icache_bytes = cfg.icache_bytes;
         cva6_cfg.dcache_bytes = cfg.dcache_bytes;
         cva6_cfg.ways = cfg.l1_ways;
+        cva6_cfg.tlb_entries = cfg.tlb_entries;
         cva6_cfg.cacheable = vec![
             (BOOTROM_BASE, BOOTROM_SIZE),
             (SPM_BASE, cfg.llc_bytes as u64),

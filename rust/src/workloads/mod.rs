@@ -9,9 +9,15 @@
 //!   reusable matrix tiles in SPM" (polybench 2MM: E = A·B, F = E·C).
 //! * **MEM** — "writes high-throughput bursts to RPC DRAM using the DMA
 //!   engine".
+//!
+//! Plus the **SUPERVISOR** workload ([`supervisor_program`]): a
+//! miniature Linux-style boot flow exercising the Sv39/privilege
+//! subsystem end-to-end — M-mode firmware builds a page table in DRAM,
+//! delegates traps, drops to S-mode under translation, services a CLINT
+//! timer interrupt through `stvec`, and demand-maps pages on fault.
 
 use crate::asm::{reg::*, Asm};
-use crate::platform::memmap::{DMA_BASE, DRAM_BASE, SPM_BASE};
+use crate::platform::memmap::{CLINT_BASE, DMA_BASE, DRAM_BASE, SPM_BASE};
 
 /// WFI: interrupts disabled ⇒ sleeps for the whole measurement window.
 pub fn wfi_program(base: u64) -> Vec<u8> {
@@ -158,6 +164,216 @@ pub fn mem_program(base: u64, len: u32, reps: u32, max_burst: u32) -> Vec<u8> {
     a.finish()
 }
 
+/// Result block the supervisor workload publishes before halting,
+/// relative to its `base` (= `DRAM_BASE`): `[magic, timer_irqs,
+/// demand_faults, checksum]` as four u64 words.
+pub const SUPERVISOR_RESULT_OFF: u64 = 0x30_0000;
+/// Magic the supervisor writes on a clean run.
+pub const SUPERVISOR_MAGIC: u64 = 0x600D;
+/// Value the supervisor stores into every demand-mapped page; the
+/// published checksum is `demand_pages × SUPERVISOR_PAGE_VALUE`.
+pub const SUPERVISOR_PAGE_VALUE: u64 = 0x5AFE;
+/// Level-1 slot (2 MiB granule) reserved for demand paging: VA
+/// `base + 9·2 MiB`, initially unmapped.
+const DEMAND_SLOT: u64 = 9;
+/// Sv39 leaf flags: V|R|W|X|A|D (software-managed A/D, pre-set).
+const LEAF: i32 = 0xcf;
+
+/// The SUPERVISOR workload: a self-contained privilege/VM boot flow.
+///
+/// M-mode firmware (entered at `base`, which must be `DRAM_BASE`):
+/// 1. builds a three-page Sv39 table at `base + 0x1E0_0000`: two 1 GiB
+///    identity gigapages covering the boot ROM / CLINT / Regbus
+///    peripherals and the SPM window, a level-1 table mapping DRAM as
+///    identity 2 MiB megapages — except slot 9 (`base + 0x120_0000`),
+///    which points to an all-invalid 4 KiB table for demand paging;
+/// 2. delegates load/store/instruction page faults (`medeleg`) and the
+///    supervisor software interrupt (`mideleg`) to S-mode;
+/// 3. arms the CLINT timer `timer_delta` ticks ahead and installs an
+///    M-handler that converts the resulting MTI into a pending SSI
+///    (the classic pre-Sstc GPOS timer-tick relay);
+/// 4. enables Sv39 (`satp`, `sfence.vma`) and `mret`s into S-mode.
+///
+/// The S-mode supervisor then sweeps the mapped megapages (TLB
+/// pressure), touches `demand_pages` pages of the unmapped slot — each
+/// faulting into its S-handler, which maps the page identity and
+/// `sret`s to retry — waits for the delegated timer tick, publishes
+/// `[magic, timer_irqs, demand_faults, checksum]` at
+/// [`SUPERVISOR_RESULT_OFF`], fences, and halts with `ebreak`.
+///
+/// Register discipline (handlers interrupt arbitrary S code, including
+/// mid-`li` scratch sequences): S main code uses `t0`–`t3`/`s5`–`s11`
+/// only; the S trap handler clobbers `t4`–`t6`/`gp`; the M timer
+/// handler preserves its single scratch register through `mscratch`.
+pub fn supervisor_program(base: u64, demand_pages: u32, timer_delta: u32) -> Vec<u8> {
+    assert!(base == DRAM_BASE, "supervisor workload is linked for DRAM_BASE");
+    assert!((1..=512).contains(&demand_pages), "demand slot holds 512 4 KiB pages");
+    let root = base + 0x1e0_0000;
+    let l1 = root + 0x1000;
+    let l0 = root + 0x2000;
+    let result = base + SUPERVISOR_RESULT_OFF;
+
+    let mut a = Asm::new(base);
+    // ---- M-mode firmware: build the page table ----
+    a.li(S0, root as i64);
+    a.li(S1, l1 as i64);
+    a.li(S2, l0 as i64);
+    a.mv(T0, S0);
+    a.li(T1, 0x3000);
+    a.add(T1, T0, T1);
+    a.label("pt_clr"); // zero all three table pages
+    a.sd(ZERO, T0, 0);
+    a.addi(T0, T0, 8);
+    a.blt(T0, T1, "pt_clr");
+    // root[0]: 1 GiB identity gigapage at PA 0 (boot ROM, CLINT, Regbus
+    // peripherals, PLIC — translation is orthogonal to cacheability)
+    a.li(T0, LEAF as i64);
+    a.sd(T0, S0, 0);
+    // root[1]: 1 GiB identity gigapage at 0x4000_0000 (SPM, DSA windows)
+    a.li(T0, (((0x4000_0000u64 >> 12) << 10) | LEAF as u64) as i64);
+    a.sd(T0, S0, 8);
+    // root[2]: pointer to the level-1 table (DRAM lives at 2 GiB)
+    a.srli(T0, S1, 12);
+    a.slli(T0, T0, 10);
+    a.ori(T0, T0, 1);
+    a.sd(T0, S0, 16);
+    // level-1: identity 2 MiB megapages over the first 32 MiB of DRAM,
+    // except the demand slot, which points at the empty 4 KiB table
+    a.li(T2, 0);
+    a.li(T3, 16);
+    a.label("l1_loop");
+    a.li(T4, DEMAND_SLOT as i64);
+    a.beq(T2, T4, "l1_ptr");
+    a.li(T0, 0x200); // megapage stride in PPN units (2 MiB >> 12)
+    a.mul(T0, T2, T0);
+    a.li(T4, (base >> 12) as i64);
+    a.add(T0, T0, T4);
+    a.slli(T0, T0, 10);
+    a.ori(T0, T0, LEAF);
+    a.j("l1_store");
+    a.label("l1_ptr");
+    a.srli(T0, S2, 12);
+    a.slli(T0, T0, 10);
+    a.ori(T0, T0, 1);
+    a.label("l1_store");
+    a.slli(T4, T2, 3);
+    a.add(T4, T4, S1);
+    a.sd(T0, T4, 0);
+    a.addi(T2, T2, 1);
+    a.blt(T2, T3, "l1_loop");
+    // ---- delegation, vectors, timer ----
+    a.li(T0, (1 << 12) | (1 << 13) | (1 << 15));
+    a.csrrw(ZERO, 0x302, T0); // medeleg: page faults → S
+    a.li(T0, 1 << 1);
+    a.csrrw(ZERO, 0x303, T0); // mideleg: SSI → S
+    a.la(T0, "m_handler");
+    a.csrrw(ZERO, 0x305, T0); // mtvec
+    a.la(T0, "s_trap");
+    a.csrrw(ZERO, 0x105, T0); // stvec
+    a.la(T0, "s_entry");
+    a.csrrw(ZERO, 0x141, T0); // mepc
+    // S-mode counters are initialized *before* the timer is armed: with
+    // a tiny timer_delta the relayed SSI can preempt the very first
+    // S-mode instructions, and a post-arm init would zero an
+    // already-delivered tick (the one-shot relay never fires again)
+    a.li(S5, 0); // timer irqs seen (bumped by s_trap)
+    a.li(S6, 0); // demand faults mapped (bumped by s_trap)
+    a.li(S11, 0); // checksum
+    a.li(S3, (CLINT_BASE + 0xbff8) as i64); // mtime
+    a.li(S4, (CLINT_BASE + 0x4000) as i64); // mtimecmp
+    a.lw(T0, S3, 0);
+    a.li(T1, timer_delta as i64);
+    a.add(T0, T0, T1);
+    a.sw(T0, S4, 0);
+    a.sw(ZERO, S4, 4);
+    a.li(T0, (1 << 7) | (1 << 1));
+    a.csrrw(ZERO, 0x304, T0); // mie = MTIE | SSIE
+    // ---- enable Sv39 and drop to S ----
+    a.li(T0, ((8u64 << 60) | (root >> 12)) as i64);
+    a.csrrw(ZERO, 0x180, T0); // satp
+    a.sfence_vma(ZERO, ZERO);
+    a.li(T0, (1 << 11) | (1 << 1)); // MPP = S, SIE = 1
+    a.csrrs(ZERO, 0x300, T0);
+    a.mret();
+
+    // ---- M-mode timer handler: relay MTI as a pending SSI ----
+    a.label("m_handler");
+    a.csrrw(T6, 0x340, T6); // t6 ↔ mscratch (handlers may preempt any S code)
+    a.li(T6, 1 << 7);
+    a.csrrc(ZERO, 0x304, T6); // mie.MTIE = 0: one tick per arming
+    a.csrrsi(ZERO, 0x344, 2); // mip.SSIP = 1 → delegated to S
+    a.csrrw(T6, 0x340, T6);
+    a.mret();
+
+    // ---- S-mode supervisor (S5/S6/S11 pre-zeroed by the firmware) ----
+    a.label("s_entry");
+    // TLB pressure: two sweeps over the mapped megapages + SPM
+    a.li(S7, 2);
+    a.label("sweep");
+    a.li(T0, (base + 0x10_0000) as i64); // 1 MiB in: clear of the code
+    a.li(T3, 0x20_0000);
+    a.li(T1, 0);
+    a.label("touch");
+    a.lw(T2, T0, 0);
+    a.sw(T2, T0, 8);
+    a.add(T0, T0, T3);
+    a.addi(T1, T1, 1);
+    a.li(T2, 8); // megapages 0..8 (slot 9 is the demand region)
+    a.blt(T1, T2, "touch");
+    a.li(T0, SPM_BASE as i64); // gigapage hit
+    a.lw(T2, T0, 0);
+    a.addi(S7, S7, -1);
+    a.bne(S7, ZERO, "sweep");
+    // demand paging: each page faults once, gets mapped, then serves
+    // a store + readback
+    a.li(S8, (base + DEMAND_SLOT * 0x20_0000) as i64);
+    a.li(S9, demand_pages as i64);
+    a.li(S10, 0x1000);
+    a.label("demand");
+    a.lw(T0, S8, 0); // → load page fault → s_trap maps → retry
+    a.li(T1, SUPERVISOR_PAGE_VALUE as i64);
+    a.sw(T1, S8, 4);
+    a.lw(T2, S8, 4);
+    a.add(S11, S11, T2);
+    a.add(S8, S8, S10);
+    a.addi(S9, S9, -1);
+    a.bne(S9, ZERO, "demand");
+    // wait for the delegated timer tick
+    a.label("wait_irq");
+    a.beq(S5, ZERO, "wait_irq");
+    // publish [magic, irqs, faults, checksum] and halt
+    a.li(T0, result as i64);
+    a.li(T1, SUPERVISOR_MAGIC as i64);
+    a.sd(T1, T0, 0);
+    a.sd(S5, T0, 8);
+    a.sd(S6, T0, 16);
+    a.sd(S11, T0, 24);
+    a.fence();
+    a.ebreak();
+
+    // ---- S-mode trap handler: SSI ticks + demand page faults ----
+    a.label("s_trap");
+    a.csrrs(T4, 0x142, ZERO); // scause
+    a.bge(T4, ZERO, "s_pf"); // sign bit set ⇒ interrupt
+    a.csrrci(ZERO, 0x144, 2); // sip.SSIP = 0
+    a.addi(S5, S5, 1);
+    a.sret();
+    a.label("s_pf");
+    a.li(GP, l0 as i64); // (uses t6 as li scratch — dead here)
+    a.csrrs(T4, 0x143, ZERO); // stval = faulting VA
+    a.srli(T5, T4, 12); // vpn
+    a.andi(T4, T5, 0x1ff); // vpn[0]
+    a.slli(T4, T4, 3);
+    a.add(GP, GP, T4); // &l0[vpn0], via the identity megapage
+    a.slli(T6, T5, 10);
+    a.ori(T6, T6, LEAF); // identity 4 KiB leaf
+    a.sd(T6, GP, 0);
+    a.sfence_vma(ZERO, ZERO);
+    a.addi(S6, S6, 1);
+    a.sret(); // sepc unchanged → the faulting access retries
+    a.finish()
+}
+
 /// Reference double-precision 2MM used to verify the simulated run.
 pub fn twomm_reference(n: usize, a: &[f64], b: &[f64], c: &[f64]) -> Vec<f64> {
     let mut e = vec![0.0; n * n];
@@ -236,6 +452,26 @@ mod tests {
         }
         assert!(soc.stats.get("cpu.fp_instr") == 0 || true); // counted below if wired
         assert!(soc.stats.get("llc.spm_access") > 0, "E tile lives in SPM");
+    }
+
+    #[test]
+    fn supervisor_program_boots_demand_maps_and_halts() {
+        let mut soc = Soc::new(CheshireConfig::neo());
+        let demand_pages = 3u32;
+        let img = supervisor_program(DRAM_BASE, demand_pages, 5_000);
+        soc.preload(&img, DRAM_BASE);
+        soc.run(6_000_000);
+        assert!(soc.cpu.halted, "supervisor must halt (pc={:#x})", soc.cpu.core.pc);
+        let r = soc.dram_read(SUPERVISOR_RESULT_OFF as usize, 32).to_vec();
+        let word = |i: usize| u64::from_le_bytes(r[i * 8..(i + 1) * 8].try_into().unwrap());
+        assert_eq!(word(0), SUPERVISOR_MAGIC, "clean completion magic");
+        assert!(word(1) >= 1, "at least one timer tick reached S-mode");
+        assert_eq!(word(2), demand_pages as u64, "every demand page faulted once");
+        assert_eq!(word(3), demand_pages as u64 * SUPERVISOR_PAGE_VALUE, "checksum");
+        assert!(soc.stats.get("cpu.instr_s") > 0, "S-mode actually ran");
+        assert!(soc.stats.get("mmu.walks") > 0);
+        assert!(soc.stats.get("mmu.itlb_hit") > 0);
+        assert!(soc.stats.get("mmu.page_faults") >= demand_pages as u64);
     }
 
     #[test]

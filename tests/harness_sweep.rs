@@ -86,6 +86,53 @@ fn parallel_and_serial_sweeps_are_bit_identical() {
     assert_eq!(SweepReport::new(par).to_json(), SweepReport::new(ser).to_json());
 }
 
+/// The acceptance grid for the Sv39 subsystem: bare-metal × supervisor
+/// workloads across a TLB-size axis, with the parallel≡serial
+/// determinism contract extended over the new scenario class.
+#[test]
+fn supervisor_grid_sweeps_deterministically() {
+    let mut g = SweepGrid::new(CheshireConfig::neo());
+    g.workloads = vec![
+        Workload::Nop { window: 30_000 },
+        Workload::Supervisor { demand_pages: 3, timer_delta: 5_000 },
+    ];
+    g.tlb_entries = vec![16, 4];
+    g.max_cycles = 6_000_000;
+    assert_eq!(g.len(), 4);
+
+    let par = harness::run_parallel(g.scenarios(), 4);
+    let ser = harness::run_serial(g.scenarios());
+    for (p, s) in par.iter().zip(&ser) {
+        assert_eq!(p.name, s.name);
+        assert_eq!(p.cycles, s.cycles, "{}: parallel≡serial cycles", p.name);
+        let pv: Vec<_> = p.stats.iter().collect();
+        let sv: Vec<_> = s.stats.iter().collect();
+        assert_eq!(pv, sv, "{}: parallel≡serial stats", p.name);
+    }
+    assert_eq!(SweepReport::new(par.clone()).to_json(), SweepReport::new(ser).to_json());
+
+    // the supervisor scenarios boot to S-mode, survive the timer tick and
+    // the demand faults, and halt cleanly on both TLB sizes
+    let sup: Vec<_> = par.iter().filter(|r| r.workload == "supervisor").collect();
+    assert_eq!(sup.len(), 2);
+    for r in &sup {
+        assert!(r.halted, "{}: supervisor must halt", r.name);
+        assert!(r.stats.get("cpu.instr_s") > 0, "{}: reached S-mode", r.name);
+        assert!(r.stats.get("mmu.page_faults") >= 3, "{}: demand faults", r.name);
+        assert!(r.stats.get("cpu.irq_taken") >= 2, "{}: timer tick delivered", r.name);
+        assert_eq!(r.stats.get("rpc.dev_violations"), 0, "{}", r.name);
+    }
+    // the TLB axis changes behavior, not correctness
+    assert!(
+        sup[1].stats.get("mmu.walks") > sup[0].stats.get("mmu.walks"),
+        "4-entry TLB walks more than 16-entry"
+    );
+    // bare-metal scenarios never touch the MMU
+    for r in par.iter().filter(|r| r.workload == "nop") {
+        assert_eq!(r.stats.get("mmu.walks"), 0, "{}", r.name);
+    }
+}
+
 #[test]
 fn oversubscribed_thread_count_is_harmless() {
     // more threads than scenarios, and threads == 1, both work

@@ -9,7 +9,11 @@
 //! * the crossbar delivers every transaction exactly once and routes all
 //!   responses home, under multi-manager random traffic;
 //! * the DMA preserves content for random (src, dst, len, stride, reps);
-//! * the RPC controller never violates device timing under random load.
+//! * the RPC controller never violates device timing under random load;
+//! * Sv39 translation: random VA→PA walks over generated page tables
+//!   agree with an independent reference walker, superpage-alignment
+//!   faults are raised, and permission bits are enforced at every
+//!   (privilege, access, SUM/MXR) combination.
 
 use cheshire::axi::memsub::MemSub;
 use cheshire::axi::port::axi_bus;
@@ -216,4 +220,292 @@ fn rpc_timing_clean_under_random_mixed_load() {
         }
         assert_eq!(stats.get("rpc.dev_violations"), 0, "no protocol violations under random load");
     });
+}
+
+// ---- Sv39 translation properties ----
+
+mod sv39_props {
+    use cheshire::cpu::core::{Bus, MemErr};
+    use cheshire::mmu::sv39::{
+        pa_compose, satp_sv39, PTE_A, PTE_D, PTE_R, PTE_U, PTE_V, PTE_W, PTE_X,
+    };
+    use cheshire::mmu::{Access, Mmu, XlateErr};
+    use cheshire::sim::prop::{cases, Rng};
+
+    /// Flat stall-free memory hosting generated page tables.
+    struct Flat(Vec<u8>);
+    impl Bus for Flat {
+        fn load(&mut self, addr: u64, size: usize) -> Result<u64, MemErr> {
+            let a = addr as usize;
+            if a + size > self.0.len() {
+                return Err(MemErr::Fault);
+            }
+            let mut v = 0u64;
+            for (i, b) in self.0[a..a + size].iter().enumerate() {
+                v |= (*b as u64) << (8 * i);
+            }
+            Ok(v)
+        }
+        fn store(&mut self, addr: u64, val: u64, size: usize) -> Result<(), MemErr> {
+            let a = addr as usize;
+            for (i, b) in self.0[a..a + size].iter_mut().enumerate() {
+                *b = (val >> (8 * i)) as u8;
+            }
+            Ok(())
+        }
+        fn fetch(&mut self, addr: u64) -> Result<u32, MemErr> {
+            self.load(addr, 4).map(|v| v as u32)
+        }
+    }
+
+    const MEM_BYTES: usize = 1 << 20;
+    const ROOT: u64 = 0x1000;
+
+    /// A bump allocator building three-level tables in `Flat`.
+    struct TableBuilder {
+        mem: Flat,
+        next_page: u64,
+    }
+
+    impl TableBuilder {
+        fn new() -> Self {
+            let mut mem = Flat(vec![0; MEM_BYTES]);
+            // root table lives at ROOT
+            mem.0[ROOT as usize..ROOT as usize + 4096].fill(0);
+            Self { mem, next_page: ROOT + 0x1000 }
+        }
+
+        fn alloc(&mut self) -> u64 {
+            let p = self.next_page;
+            self.next_page += 0x1000;
+            assert!((p as usize) < MEM_BYTES, "table arena exhausted");
+            p
+        }
+
+        fn pte_at(&mut self, addr: u64) -> u64 {
+            self.mem.load(addr, 8).unwrap()
+        }
+
+        /// Install a leaf for `va` at `level` pointing to `pa` with `flags`,
+        /// materializing pointer levels on the way down. A slot already
+        /// holding a *leaf* (from an earlier overlapping mapping) is
+        /// replaced by a fresh pointer table, so the builder never chases
+        /// a leaf PPN outside its arena.
+        fn map(&mut self, va: u64, level: u8, pa: u64, flags: u64) {
+            let mut table = ROOT;
+            for l in ((level + 1)..3).rev() {
+                let idx = (va >> (12 + 9 * l as u32)) & 0x1ff;
+                let slot = table + idx * 8;
+                let pte = self.pte_at(slot);
+                let is_pointer = pte & PTE_V != 0 && pte & (PTE_R | PTE_W | PTE_X) == 0;
+                let next = if is_pointer {
+                    ((pte >> 10) & ((1u64 << 44) - 1)) << 12
+                } else {
+                    let t = self.alloc();
+                    self.mem.store(slot, ((t >> 12) << 10) | PTE_V, 8).unwrap();
+                    t
+                };
+                table = next;
+            }
+            let idx = (va >> (12 + 9 * level as u32)) & 0x1ff;
+            self.mem.store(table + idx * 8, ((pa >> 12) << 10) | flags, 8).unwrap();
+        }
+    }
+
+    /// Leaf-permission rules re-stated from the privileged spec, written
+    /// independently of the implementation's `perm_ok` so a bug there
+    /// cannot cancel out of the comparison.
+    fn ref_perm(pte: u64, acc: Access, prv: u8, mstatus: u64) -> bool {
+        let sum = mstatus & (1 << 18) != 0;
+        let mxr = mstatus & (1 << 19) != 0;
+        let rwx_ok = match acc {
+            Access::Exec => pte & PTE_X != 0,
+            Access::Read => pte & PTE_R != 0 || (mxr && pte & PTE_X != 0),
+            Access::Write => pte & PTE_W != 0,
+        };
+        let user_ok = if prv == 0 {
+            pte & PTE_U != 0 // U-mode requires a U page
+        } else if pte & PTE_U != 0 {
+            sum && acc != Access::Exec // S on a U page: SUM data-only
+        } else {
+            true
+        };
+        let accessed_ok = pte & PTE_A != 0;
+        let dirty_ok = acc != Access::Write || pte & PTE_D != 0;
+        rwx_ok && user_ok && accessed_ok && dirty_ok
+    }
+
+    /// Independent reference: walk + align + permission, mirroring the
+    /// privileged spec directly rather than the implementation.
+    fn reference_translate(
+        mem: &mut Flat,
+        va: u64,
+        acc: Access,
+        prv: u8,
+        mstatus: u64,
+    ) -> Result<u64, ()> {
+        let ext = (va as i64) >> 38;
+        if ext != 0 && ext != -1 {
+            return Err(());
+        }
+        let mut table = ROOT;
+        for level in (0i32..3).rev() {
+            let idx = (va >> (12 + 9 * level as u32)) & 0x1ff;
+            let pte = mem.load(table + idx * 8, 8).map_err(|_| ())?;
+            if pte & PTE_V == 0 || (pte & PTE_R == 0 && pte & PTE_W != 0) {
+                return Err(());
+            }
+            if pte & (PTE_R | PTE_X) != 0 {
+                let ppn = (pte >> 10) & ((1u64 << 44) - 1);
+                if level > 0 && ppn & ((1 << (9 * level as u32)) - 1) != 0 {
+                    return Err(());
+                }
+                if !ref_perm(pte, acc, prv, mstatus) {
+                    return Err(());
+                }
+                return Ok(pa_compose(pte, level as u8, va));
+            }
+            if level == 0 {
+                return Err(());
+            }
+            table = ((pte >> 10) & ((1u64 << 44) - 1)) << 12;
+        }
+        unreachable!()
+    }
+
+    fn random_flags(rng: &mut Rng) -> u64 {
+        let mut f = PTE_V;
+        for bit in [PTE_R, PTE_W, PTE_X, PTE_U, PTE_A, PTE_D] {
+            if rng.bool() {
+                f |= bit;
+            }
+        }
+        f
+    }
+
+    #[test]
+    fn random_walks_agree_with_reference() {
+        cases(60, 0x5739, |rng| {
+            let mut tb = TableBuilder::new();
+            // a handful of random mappings at random levels; superpage PAs
+            // are randomly (mis)aligned to exercise the alignment fault
+            let mut vas = Vec::new();
+            for _ in 0..12 {
+                let level = rng.below(3) as u8;
+                let va = (rng.below(1 << 27) << 12) & ((1 << 39) - 1);
+                let pa = if rng.below(4) == 0 {
+                    rng.below(1 << 20) << 12 // maybe misaligned for level > 0
+                } else {
+                    let align = 12 + 9 * level as u32;
+                    (rng.below(1 << 20) << 12) & !((1u64 << align) - 1)
+                };
+                let flags = random_flags(rng);
+                tb.map(va, level, pa, flags);
+                vas.push(va);
+            }
+            let mstatus = (rng.below(4)) << 18; // random SUM/MXR
+            let satp = satp_sv39(ROOT);
+            for _ in 0..40 {
+                // probe mapped VAs (with offsets) and random unmapped ones
+                let va = if rng.bool() {
+                    let base = *rng.pick(&vas);
+                    base.wrapping_add(rng.below(1 << 13)) & ((1 << 39) - 1)
+                } else {
+                    rng.below(1 << 39)
+                };
+                let acc = *rng.pick(&[Access::Read, Access::Write, Access::Exec]);
+                let prv = rng.below(2) as u8;
+                let mut mmu = Mmu::new(4);
+                let got = mmu.translate(&mut tb.mem, va, acc, prv, satp, mstatus);
+                let want = reference_translate(&mut tb.mem, va, acc, prv, mstatus);
+                match (got, want) {
+                    (Ok(pa), Ok(ref_pa)) => assert_eq!(pa, ref_pa, "va={va:#x}"),
+                    (Err(XlateErr::PageFault), Err(())) => {}
+                    (g, w) => panic!("va={va:#x} acc={acc:?} prv={prv}: {g:?} vs {w:?}"),
+                }
+                // a TLB-warm retranslation must agree with the cold one
+                let again = mmu.translate(&mut tb.mem, va, acc, prv, satp, mstatus);
+                assert_eq!(format!("{got:?}"), format!("{again:?}"), "TLB-hit path diverged");
+            }
+        });
+    }
+
+    #[test]
+    fn misaligned_superpages_always_fault() {
+        cases(40, 0xA116, |rng| {
+            let mut tb = TableBuilder::new();
+            let level = 1 + rng.below(2) as u8; // 2 MiB or 1 GiB
+            let align = 12 + 9 * level as u32;
+            let va = (rng.below(64) << align) & ((1 << 39) - 1);
+            // force misalignment: aligned base plus one 4 KiB page
+            let pa = ((rng.below(16) << align) + 0x1000) & ((1 << 30) - 1);
+            tb.map(va, level, pa, PTE_V | PTE_R | PTE_W | PTE_X | PTE_A | PTE_D);
+            let mut mmu = Mmu::new(4);
+            let got = mmu.translate(&mut tb.mem, va, Access::Read, 1, satp_sv39(ROOT), 0);
+            assert_eq!(got, Err(XlateErr::PageFault), "misaligned superpage must fault");
+        });
+    }
+
+    #[test]
+    fn permission_matrix_is_enforced_end_to_end() {
+        cases(40, 0x9E51, |rng| {
+            let mut tb = TableBuilder::new();
+            let va = (rng.below(1 << 20) << 12) & ((1 << 39) - 1);
+            let pa = rng.below(1 << 18) << 12;
+            let flags = random_flags(rng);
+            tb.map(va, 0, pa, flags);
+            let satp = satp_sv39(ROOT);
+            // reserved (W without R) and pointer-shaped (neither R nor X)
+            // leaves fault structurally before permissions are consulted
+            let structural_ok = flags & (PTE_R | PTE_X) != 0
+                && !(flags & PTE_W != 0 && flags & PTE_R == 0);
+            for acc in [Access::Read, Access::Write, Access::Exec] {
+                for prv in [0u8, 1] {
+                    for mst in [0u64, 1 << 18, 1 << 19, (1 << 18) | (1 << 19)] {
+                        let mut mmu = Mmu::new(2);
+                        let got = mmu.translate(&mut tb.mem, va, acc, prv, satp, mst);
+                        let allowed =
+                            structural_ok && ref_perm(flags | ((pa >> 12) << 10), acc, prv, mst);
+                        match got {
+                            Ok(p) => {
+                                assert!(allowed, "acc={acc:?} prv={prv} mst={mst:#x}");
+                                assert_eq!(p, pa);
+                            }
+                            Err(XlateErr::PageFault) => {
+                                assert!(!allowed, "acc={acc:?} prv={prv} mst={mst:#x}")
+                            }
+                            Err(XlateErr::Stall) => panic!("flat bus never stalls"),
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    /// `sim::prop` + the real walker: translation is a pure function of
+    /// (tables, va, acc, prv, mstatus) — two MMUs with different TLB
+    /// geometries agree on every probe.
+    #[test]
+    fn tlb_geometry_never_changes_results() {
+        cases(30, 0x7EB5, |rng| {
+            let mut tb = TableBuilder::new();
+            for _ in 0..8 {
+                let level = rng.below(3) as u8;
+                let align = 12 + 9 * level as u32;
+                let va = (rng.below(1 << 27) << 12) & ((1 << 39) - 1);
+                let pa = (rng.below(1 << 20) << 12) & !((1u64 << align) - 1);
+                tb.map(va, level, pa, PTE_V | PTE_R | PTE_W | PTE_X | PTE_A | PTE_D);
+            }
+            let satp = satp_sv39(ROOT);
+            let mut tiny = Mmu::new(1);
+            let mut big = Mmu::new(64);
+            for _ in 0..64 {
+                let va = rng.below(1 << 39);
+                let a = tiny.translate(&mut tb.mem, va, Access::Read, 1, satp, 0);
+                let b = big.translate(&mut tb.mem, va, Access::Read, 1, satp, 0);
+                assert_eq!(a, b, "va={va:#x}");
+            }
+            assert!(tiny.counters.walks >= big.counters.walks);
+        });
+    }
 }
