@@ -7,7 +7,7 @@
 
 use super::port::AxiBus;
 use super::types::{beat_addr, Ar, Aw, Resp, B, R};
-use crate::sim::Stats;
+use crate::sim::{Activity, Component, Cycle, Stats};
 use std::collections::VecDeque;
 
 #[derive(Debug)]
@@ -167,6 +167,19 @@ impl MemSub {
                     self.rd = RdState::Stream { ar, beat };
                 }
             }
+        }
+    }
+}
+
+impl Component for MemSub {
+    /// Idle when no read stream, no accepted write, and no stalled
+    /// response remain — new work arrives only via the (separately
+    /// checked) AXI channels.
+    fn activity(&self, _now: Cycle) -> Activity {
+        if matches!(self.rd, RdState::Idle) && self.wr.is_empty() && self.pending_b.is_none() {
+            Activity::Quiescent
+        } else {
+            Activity::Busy
         }
     }
 }

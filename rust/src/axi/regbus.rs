@@ -11,11 +11,17 @@
 
 use super::port::AxiBus;
 use super::types::{Resp, B, R};
-use crate::sim::Stats;
+use crate::sim::{Activity, Component, Cycle, Stats};
 
 /// A register-mapped peripheral: 32-bit single-cycle reads/writes at word
 /// granularity, plus a per-cycle `tick` for internal state (baud counters,
 /// shift registers, …) and an interrupt line.
+///
+/// The `activity`/`skip` pair mirrors [`crate::sim::Component`] for the
+/// event-horizon scheduler: a device whose `tick` is the default no-op is
+/// [`Activity::Quiescent`] by construction; devices with countdowns
+/// (UART/SPI/I2C shift timers, the CLINT prescaler) override both so
+/// elided spans reproduce per-cycle state exactly.
 pub trait RegDevice {
     /// Word read at byte offset `off` (within the device's window).
     fn reg_read(&mut self, off: u64) -> Result<u32, ()>;
@@ -27,6 +33,14 @@ pub trait RegDevice {
     fn irq(&self) -> bool {
         false
     }
+    /// Next-cycle behavior for the scheduler. The default matches the
+    /// default no-op `tick`; any device overriding `tick` must override
+    /// this (and `skip`) to keep elided runs bit-identical.
+    fn activity(&self, _now: Cycle) -> Activity {
+        Activity::Quiescent
+    }
+    /// Replay the bookkeeping of `cycles` elided ticks.
+    fn skip(&mut self, _cycles: u64) {}
 }
 
 /// Shared peripherals: the SoC keeps a handle for host-side inspection
@@ -43,6 +57,12 @@ impl<T: RegDevice> RegDevice for std::rc::Rc<std::cell::RefCell<T>> {
     }
     fn irq(&self) -> bool {
         self.borrow().irq()
+    }
+    fn activity(&self, now: Cycle) -> Activity {
+        self.borrow().activity(now)
+    }
+    fn skip(&mut self, cycles: u64) {
+        self.borrow_mut().skip(cycles)
     }
 }
 
@@ -97,6 +117,27 @@ impl RegDemux {
     /// UART's transmitted bytes in tests/examples).
     pub fn dev_mut(&mut self, idx: usize) -> &mut dyn RegDevice {
         &mut *self.entries[idx].dev
+    }
+}
+
+impl Component for RegDemux {
+    /// The Regbus block is only as idle as its least idle device.
+    fn activity(&self, now: Cycle) -> Activity {
+        let mut a = Activity::Quiescent;
+        for e in &self.entries {
+            a = a.combine(e.dev.activity(now));
+            if a == Activity::Busy {
+                break;
+            }
+        }
+        a
+    }
+
+    /// Forward the elided span to every device (prescalers, shift timers).
+    fn skip(&mut self, cycles: u64, _stats: &mut Stats) {
+        for e in &mut self.entries {
+            e.dev.skip(cycles);
+        }
     }
 }
 
@@ -181,6 +222,18 @@ impl Axi2Reg {
 impl Default for Axi2Reg {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+impl Component for Axi2Reg {
+    /// The bridge holds at most one in-flight access; with none pending it
+    /// only reacts to new AXI beats (covered by the bus-idle check).
+    fn activity(&self, _now: Cycle) -> Activity {
+        if self.busy.is_none() {
+            Activity::Quiescent
+        } else {
+            Activity::Busy
+        }
     }
 }
 

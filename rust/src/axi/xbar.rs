@@ -14,7 +14,7 @@
 
 use super::port::AxiBus;
 use super::types::{Resp, B, R};
-use crate::sim::Stats;
+use crate::sim::{Activity, Component, Cycle, Stats};
 use std::collections::VecDeque;
 
 /// Bits of manager-local ID space preserved through the crossbar.
@@ -309,6 +309,20 @@ impl Xbar {
                     }
                 }
             }
+        }
+    }
+}
+
+impl Component for Xbar {
+    /// Pure combinational routing plus two kinds of retained state: granted
+    /// write streams and decode-error jobs. With both empty (and — checked
+    /// by the platform — every attached channel idle) the crossbar is
+    /// frozen.
+    fn activity(&self, _now: Cycle) -> Activity {
+        if self.err.is_empty() && self.w_route.iter().all(|q| q.is_empty()) {
+            Activity::Quiescent
+        } else {
+            Activity::Busy
         }
     }
 }

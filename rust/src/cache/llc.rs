@@ -22,7 +22,7 @@ use crate::axi::port::AxiBus;
 use crate::axi::types::{Ar, Aw, Resp, B, R, W};
 use crate::cache::l1::{L1Cache, Probe, LINE};
 use crate::mem::Sram;
-use crate::sim::Stats;
+use crate::sim::{Activity, Component, Cycle, Stats};
 use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::rc::Rc;
@@ -461,6 +461,22 @@ impl Llc {
                 self.pending_fill = None;
                 break;
             }
+        }
+    }
+}
+
+impl Component for Llc {
+    /// Idle when both request paths are drained, no line fill is pending,
+    /// and no way reconfiguration is waiting to be applied.
+    fn activity(&self, _now: Cycle) -> Activity {
+        let idle = matches!(self.rd, RdState::Idle)
+            && matches!(self.wr, WrState::Idle)
+            && self.pending_fill.is_none()
+            && *self.mask.borrow() == self.applied_mask;
+        if idle {
+            Activity::Quiescent
+        } else {
+            Activity::Busy
         }
     }
 }

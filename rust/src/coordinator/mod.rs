@@ -61,24 +61,30 @@ impl OffloadCoordinator {
         SPM_BASE + 2 * (self.tile * self.tile * 4) as u64
     }
 
-    /// Run a DMA descriptor to completion, ticking the platform.
+    /// Run a DMA descriptor to completion. Instead of spinning the
+    /// platform one tick per poll, the wait goes through the event-horizon
+    /// engine ([`Soc::advance`]): busy transfer cycles tick for real,
+    /// and any provably idle span (e.g. the RPC controller draining a
+    /// scheduled burst) fast-forwards — with identical cycle counts.
     fn dma_run(&self, soc: &mut Soc, desc: Descriptor) -> u64 {
         let t0 = soc.clock.now();
+        let deadline = t0 + 50_000_000;
         soc.dma.launch(desc);
-        let mut guard = 0u64;
         loop {
-            soc.tick();
+            soc.advance(deadline);
             let done = { soc.dma_state.borrow().done };
             if done {
                 break;
             }
-            guard += 1;
-            assert!(guard < 50_000_000, "DMA did not complete");
+            assert!(soc.clock.now() < deadline, "DMA did not complete");
         }
         soc.clock.now() - t0
     }
 
     /// Program the DSA (port pair 0) through its register window and wait.
+    /// The compute span is a known completion deadline
+    /// ([`crate::dsa::DsaPlugin::activity`]), so the wait fast-forwards
+    /// straight to it instead of polling `busy()` every cycle.
     fn dsa_run(&self, soc: &mut Soc, a: u64, b: u64, c: u64) {
         let n = self.tile as u32;
         for (off, v) in [
@@ -97,11 +103,10 @@ impl OffloadCoordinator {
                 soc.tick();
             }
         }
-        let mut guard = 0u64;
+        let deadline = soc.clock.now() + 100_000_000;
         while soc.dsa_mut(0).map(|d| d.busy()).unwrap_or(false) {
-            soc.tick();
-            guard += 1;
-            assert!(guard < 100_000_000, "DSA did not complete");
+            soc.advance(deadline);
+            assert!(soc.clock.now() < deadline, "DSA did not complete");
         }
     }
 
@@ -110,6 +115,22 @@ impl OffloadCoordinator {
     /// DRAM_BASE.
     pub fn matmul(&mut self, soc: &mut Soc, n: usize, a_off: usize, b_off: usize, c_off: usize) -> OffloadReport {
         assert_eq!(n % self.tile, 0, "n must be a multiple of the tile size");
+        // Park the host core on an interrupt-driven `wfi` (the offload
+        // path frees CVA6 from data movement, §III-B) instead of leaving
+        // it spinning on the boot ROM's BOOT_DONE poll: a parked core is
+        // what lets the event-horizon engine elide DSA compute spans.
+        // The stub occupies the first few words of DRAM; refuse operand
+        // or result regions that would overlap it rather than silently
+        // clobbering caller data.
+        let stub = crate::workloads::wfi_program(DRAM_BASE);
+        for (which, off) in [("a_off", a_off), ("b_off", b_off), ("c_off", c_off)] {
+            assert!(
+                off >= stub.len(),
+                "coordinator: {which} ({off:#x}) overlaps the {}-byte park stub at DRAM offset 0",
+                stub.len()
+            );
+        }
+        soc.preload(&stub, DRAM_BASE);
         let t = self.tile;
         let tb = (t * t * 4) as u64;
         let nt = n / t;

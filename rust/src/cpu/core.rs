@@ -701,6 +701,13 @@ impl CpuCore {
                         return StepOutcome::Trapped(Trap::Ebreak);
                     }
                     (0, 0x1050_0073) => {
+                        // wfi: legal in M- and S-mode with mstatus.TW = 0
+                        // (we hardwire TW to 0, like CVA6's default);
+                        // U-mode execution raises illegal instruction.
+                        if self.prv < PRV_S {
+                            self.trap_to(2, pc, inst as u64);
+                            return StepOutcome::Trapped(Trap::IllegalInstr(inst));
+                        }
                         self.pc = next;
                         return StepOutcome::Wfi;
                     }
@@ -1164,6 +1171,35 @@ mod tests {
         let mut cpu = CpuCore::new(0, 0);
         run_until_wfi(&mut cpu, &mut mem, 100);
         assert_eq!(cpu.x[A1 as usize], 2, "illegal-instruction trap");
+        assert_eq!(cpu.prv, PRV_M);
+    }
+
+    /// WFI is legal in M and S (TW=0) but raises illegal instruction from
+    /// U-mode; the trap carries cause 2 and the offending encoding.
+    #[test]
+    fn wfi_is_illegal_in_u_mode() {
+        let mut a = Asm::new(0);
+        a.la(T0, "m_handler");
+        a.csrrw(ZERO, 0x305, T0); // mtvec
+        a.la(T0, "u_entry");
+        a.csrrw(ZERO, 0x141, T0); // mepc
+        // MPP = U (00): clear both MPP bits, then mret drops to U
+        a.li(T0, 3 << 11);
+        a.csrrc(ZERO, 0x300, T0);
+        a.mret();
+        a.label("u_entry");
+        a.wfi(); // → illegal instruction from U
+        a.label("m_handler");
+        a.csrrs(A0, 0x342, ZERO); // mcause
+        a.csrrs(A1, 0x343, ZERO); // mtval
+        a.wfi(); // legal again: handler runs in M
+        let img = a.finish();
+        let mut mem = Flat { mem: vec![0; 0x10000] };
+        mem.mem[..img.len()].copy_from_slice(&img);
+        let mut cpu = CpuCore::new(0, 0);
+        run_until_wfi(&mut cpu, &mut mem, 100);
+        assert_eq!(cpu.x[A0 as usize], 2, "illegal-instruction cause");
+        assert_eq!(cpu.x[A1 as usize], 0x1050_0073, "mtval holds the wfi encoding");
         assert_eq!(cpu.prv, PRV_M);
     }
 

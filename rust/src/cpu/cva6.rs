@@ -12,7 +12,7 @@ use super::core::{Bus, CpuCore, MemErr, StepOutcome};
 use crate::axi::port::AxiBus;
 use crate::axi::types::{full_strb, Ar, Aw, Burst, W};
 use crate::cache::l1::{L1Cache, Probe, LINE};
-use crate::sim::Stats;
+use crate::sim::{Activity, Component, Cycle, Stats};
 use std::collections::VecDeque;
 
 const ID_IFILL: u32 = 0x20;
@@ -350,6 +350,51 @@ impl Cva6 {
     }
 }
 
+impl Component for Cva6 {
+    /// The core is elidable only while parked: `Wfi` with nothing pending
+    /// (woken exclusively by an `mip` edge the interrupt fabric delivers at
+    /// the end of a *real* tick) or counting down functional-unit latency
+    /// (`Busy(n)`, which samples no interrupts until it re-enters `Run`).
+    fn activity(&self, now: Cycle) -> Activity {
+        if !self.wb_q.is_empty() {
+            return Activity::Busy;
+        }
+        match self.state {
+            CState::Wfi => {
+                if self.core.csr.mip & self.core.csr.mie != 0 {
+                    Activity::Busy // about to wake
+                } else {
+                    Activity::Quiescent
+                }
+            }
+            // ticks now..now+n-1 are pure countdown; the tick at now+n
+            // runs in `Run` state and must execute for real
+            CState::Busy(n) => Activity::IdleUntil(now + n as Cycle),
+            _ => Activity::Busy,
+        }
+    }
+
+    /// Replay `cycles` parked/counting ticks: `mcycle` always advances;
+    /// `Wfi` charges `cpu.wfi_cycles`, `Busy` charges `cpu.busy_cycles`
+    /// and consumes the countdown — exactly what `tick` would have done.
+    fn skip(&mut self, cycles: u64, stats: &mut Stats) {
+        self.core.csr.mcycle = self.core.csr.mcycle.wrapping_add(cycles);
+        match &mut self.state {
+            CState::Wfi => stats.add("cpu.wfi_cycles", cycles),
+            CState::Busy(n) => {
+                stats.add("cpu.busy_cycles", cycles);
+                debug_assert!(cycles <= *n as u64, "skip past a Busy deadline");
+                if cycles >= *n as u64 {
+                    self.state = CState::Run;
+                } else {
+                    *n -= cycles as u32;
+                }
+            }
+            _ => debug_assert!(false, "skip called on a busy core"),
+        }
+    }
+}
+
 /// The per-step bus adapter: classifies accesses, performs cache hits
 /// inline, requests misses/MMIO from the wrapper.
 struct Adapter<'a> {
@@ -529,6 +574,56 @@ mod tests {
         }
         assert!(cpu.is_wfi());
         assert_eq!(cpu.core.x[A0 as usize], 0x55);
+    }
+
+    /// `skip(n)` on a parked core must be bit-identical to `n` ticks:
+    /// same `mcycle`, same `cpu.wfi_cycles`, same state.
+    #[test]
+    fn skip_matches_ticked_wfi_bookkeeping() {
+        let park = || {
+            let mut a = Asm::new(0x8000_0000);
+            a.csrrwi(ZERO, 0x304, 0); // mie = 0
+            a.wfi();
+            mini_system(a)
+        };
+        let (mut ticked, bus_t, mut mem_t) = park();
+        let (mut skipped, bus_s, mut mem_s) = park();
+        let mut st = Stats::new();
+        let mut ss = Stats::new();
+        for _ in 0..2000 {
+            ticked.tick(&bus_t, &mut st);
+            mem_t.tick(&bus_t, &mut st);
+            skipped.tick(&bus_s, &mut ss);
+            mem_s.tick(&bus_s, &mut ss);
+            if ticked.is_wfi() && skipped.is_wfi() {
+                break;
+            }
+        }
+        assert!(ticked.is_wfi() && skipped.is_wfi());
+        assert_eq!(ticked.activity(0), crate::sim::Activity::Quiescent);
+        for _ in 0..500 {
+            ticked.tick(&bus_t, &mut st);
+        }
+        skipped.skip(500, &mut ss);
+        assert_eq!(ticked.core.csr.mcycle, skipped.core.csr.mcycle);
+        assert_eq!(st.get("cpu.wfi_cycles"), ss.get("cpu.wfi_cycles"));
+        assert!(skipped.is_wfi());
+    }
+
+    /// A latency countdown is an `IdleUntil` span whose skip consumes the
+    /// counter exactly like repeated ticks.
+    #[test]
+    fn busy_countdown_reports_deadline_and_skips_exactly() {
+        let mut cpu = Cva6::new(Cva6Cfg::neo(0x8000_0000));
+        cpu.state = CState::Busy(20);
+        assert_eq!(cpu.activity(100), crate::sim::Activity::IdleUntil(120));
+        let mut s = Stats::new();
+        cpu.skip(7, &mut s);
+        assert_eq!(cpu.activity(107), crate::sim::Activity::IdleUntil(120));
+        cpu.skip(13, &mut s);
+        assert!(matches!(cpu.state, CState::Run));
+        assert_eq!(s.get("cpu.busy_cycles"), 20);
+        assert_eq!(cpu.core.csr.mcycle, 20);
     }
 
     #[test]

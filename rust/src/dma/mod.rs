@@ -21,7 +21,7 @@
 use crate::axi::port::AxiBus;
 use crate::axi::regbus::RegDevice;
 use crate::axi::types::{full_strb, Ar, Aw, Burst, W};
-use crate::sim::Stats;
+use crate::sim::{Activity, Component, Cycle, Stats};
 use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::rc::Rc;
@@ -207,6 +207,26 @@ impl DmaEngine {
         // row complete?
         if cur.rd_issued == cur.bytes && cur.wr_issued == cur.bytes && cur.wr_beats_left == 0 && cur.wr_data_sent == cur.bytes {
             self.cur = None;
+        }
+    }
+}
+
+impl Component for DmaEngine {
+    /// The engine is frozen unless a transfer is staged or in flight (the
+    /// completion edge — `done`/`irq` — is raised by a tick while `busy`,
+    /// so `busy` alone pins the platform until it lands).
+    fn activity(&self, _now: Cycle) -> Activity {
+        let st = self.state.borrow();
+        let idle = !st.launch
+            && !st.busy
+            && self.cur.is_none()
+            && self.rows.is_empty()
+            && self.fifo.is_empty()
+            && self.outstanding_b == 0;
+        if idle {
+            Activity::Quiescent
+        } else {
+            Activity::Busy
         }
     }
 }

@@ -22,7 +22,7 @@ use super::DsaPlugin;
 use crate::axi::port::AxiBus;
 use crate::axi::types::{full_strb, Ar, Aw, Burst, Resp, B, R, W};
 use crate::runtime::XlaRuntime;
-use crate::sim::{Cycle, Stats};
+use crate::sim::{Activity, Cycle, Stats};
 use std::collections::VecDeque;
 use std::rc::Rc;
 
@@ -188,6 +188,25 @@ impl DsaPlugin for MatmulDsa {
 
     fn busy(&self) -> bool {
         !matches!(self.state, DState::Idle | DState::Done)
+    }
+
+    /// Idle between jobs; during compute the systolic-array completion
+    /// cycle is a known deadline (the "DSA completion" event horizon).
+    fn activity(&self, now: Cycle) -> Activity {
+        if !self.sub_rsp.is_empty() {
+            return Activity::Busy;
+        }
+        match self.state {
+            DState::Idle | DState::Done => Activity::Quiescent,
+            DState::Compute { until: Some(t) } => {
+                if now >= t {
+                    Activity::Busy
+                } else {
+                    Activity::IdleUntil(t)
+                }
+            }
+            _ => Activity::Busy,
+        }
     }
 
     fn tick(&mut self, mgr: &AxiBus, sub: &AxiBus, now: Cycle, stats: &mut Stats) {

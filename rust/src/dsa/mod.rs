@@ -25,7 +25,7 @@ pub mod matmul;
 pub mod traffic;
 
 use crate::axi::port::AxiBus;
-use crate::sim::{Cycle, Stats};
+use crate::sim::{Activity, Cycle, Stats};
 
 /// A domain-specific accelerator attached to one crossbar port pair.
 pub trait DsaPlugin {
@@ -35,4 +35,11 @@ pub trait DsaPlugin {
     fn tick(&mut self, mgr: &AxiBus, sub: &AxiBus, now: Cycle, stats: &mut Stats);
     /// True when the accelerator has outstanding work.
     fn busy(&self) -> bool;
+    /// Next-cycle behavior for the event-horizon scheduler (see
+    /// [`crate::sim::Component`]). The conservative default keeps any
+    /// plug-in that has not opted in permanently busy — correct, just
+    /// unelidable.
+    fn activity(&self, _now: Cycle) -> Activity {
+        Activity::Busy
+    }
 }

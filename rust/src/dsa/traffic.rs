@@ -9,7 +9,7 @@
 use super::DsaPlugin;
 use crate::axi::port::AxiBus;
 use crate::axi::types::{full_strb, Ar, Aw, Burst, W};
-use crate::sim::{Cycle, Stats};
+use crate::sim::{Activity, Cycle, Stats};
 
 pub struct TrafficGen {
     /// Target address window.
@@ -66,6 +66,23 @@ impl DsaPlugin for TrafficGen {
 
     fn busy(&self) -> bool {
         self.count == 0 || self.issued < self.count
+    }
+
+    /// A finished generator is frozen; a paced one is idle until its next
+    /// issue slot (responses in flight keep the platform busy via the
+    /// owning buses).
+    fn activity(&self, now: Cycle) -> Activity {
+        if self.w_beats_left > 0 {
+            return Activity::Busy;
+        }
+        if self.count != 0 && self.issued >= self.count {
+            return Activity::Quiescent;
+        }
+        if now < self.next_at {
+            Activity::IdleUntil(self.next_at)
+        } else {
+            Activity::Busy
+        }
     }
 
     fn tick(&mut self, mgr: &AxiBus, _sub: &AxiBus, now: Cycle, stats: &mut Stats) {

@@ -52,7 +52,7 @@ impl SweepReport {
     pub fn table(&self) -> Table {
         let mut t = Table::new(
             "Sweep report — one SoC instance per scenario",
-            &["scenario", "cycles", "halted", "instr", "dram B", "CORE mW", "IO mW", "RAM mW", "TOTAL mW"],
+            &["scenario", "cycles", "halted", "instr", "dram B", "CORE mW", "IO mW", "RAM mW", "TOTAL mW", "Mcyc/s"],
         );
         for r in &self.results {
             t.row(&[
@@ -65,13 +65,24 @@ impl SweepReport {
                 f1(r.power.io_mw),
                 f1(r.power.ram_mw),
                 f1(r.power.total()),
+                f1(r.sim_cycles_per_sec() / 1e6),
             ]);
         }
         t
     }
 
-    /// Serialize the whole report as a deterministic JSON document.
-    pub fn to_json(&self) -> String {
+    /// Serialize the whole report as one JSON document.
+    ///
+    /// `timing` selects between the two report flavors:
+    /// * `true` — the full report: includes the host wall-clock
+    ///   (`host_seconds`, `sim_cycles_per_sec`) and the scheduler's own
+    ///   `sched.*` counters. Deterministic in every *architectural* field,
+    ///   but host-dependent in the timing ones.
+    /// * `false` — the architectural report: drops the timing fields and
+    ///   the `sched.*` counters, leaving exactly the bits the elision
+    ///   invariant (and the parallel ≡ serial contract) promise are
+    ///   byte-identical across elided/unelided and parallel/serial runs.
+    fn render_json(&self, timing: bool) -> String {
         let mut out = String::from("{\n  \"scenarios\": [\n");
         for (i, r) in self.results.iter().enumerate() {
             out.push_str("    {\n");
@@ -84,6 +95,13 @@ impl SweepReport {
             out.push_str(&format!("      \"freq_hz\": {},\n", r.freq_hz));
             out.push_str(&format!("      \"cycles\": {},\n", r.cycles));
             out.push_str(&format!("      \"halted\": {},\n", r.halted));
+            if timing {
+                out.push_str(&format!("      \"host_seconds\": {},\n", r.host_seconds));
+                out.push_str(&format!(
+                    "      \"sim_cycles_per_sec\": {},\n",
+                    r.sim_cycles_per_sec()
+                ));
+            }
             out.push_str(&format!(
                 "      \"power_mw\": {{\"core\": {}, \"io\": {}, \"ram\": {}, \"total\": {}}},\n",
                 r.power.core_mw,
@@ -94,6 +112,9 @@ impl SweepReport {
             out.push_str("      \"stats\": {");
             let mut first = true;
             for (k, v) in r.stats.iter() {
+                if !timing && k.starts_with("sched.") {
+                    continue;
+                }
                 if !first {
                     out.push_str(", ");
                 }
@@ -105,6 +126,21 @@ impl SweepReport {
         }
         out.push_str("  ]\n}\n");
         out
+    }
+
+    /// The full JSON report: architectural results plus host wall-clock
+    /// throughput (`host_seconds`, `sim_cycles_per_sec`) and `sched.*`
+    /// scheduler counters.
+    pub fn to_json(&self) -> String {
+        self.render_json(true)
+    }
+
+    /// The architectural JSON report: timing fields and `sched.*` counters
+    /// stripped. Byte-identical across parallel/serial and (by the
+    /// event-horizon invariant) elided/`--no-elide` runs — the document CI
+    /// diffs to guard the equivalence on every push.
+    pub fn to_json_arch(&self) -> String {
+        self.render_json(false)
     }
 }
 
@@ -119,6 +155,7 @@ mod tests {
         let mut stats = Stats::new();
         stats.add("cpu.instr", cycles / 2);
         stats.add("rpc.useful_wr_bytes", 4096);
+        stats.add("sched.elided_cycles", cycles / 4);
         ScenarioResult {
             name: name.to_string(),
             workload: "nop",
@@ -130,6 +167,7 @@ mod tests {
             cycles,
             halted: false,
             power: PowerReport { core_mw: 10.0, io_mw: 1.0, ram_mw: 2.0 },
+            host_seconds: 0.125,
             stats,
         }
     }
@@ -151,6 +189,23 @@ mod tests {
     #[test]
     fn json_escapes_special_characters() {
         assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    /// The full report carries the throughput fields; the architectural
+    /// variant strips both them and every `sched.*` counter.
+    #[test]
+    fn arch_json_strips_timing_and_sched_fields() {
+        let rep = SweepReport::new(vec![fake("a", 1000)]);
+        let full = rep.to_json();
+        assert!(full.contains("\"host_seconds\": 0.125"));
+        assert!(full.contains("\"sim_cycles_per_sec\": 8000"));
+        assert!(full.contains("sched.elided_cycles"));
+        let arch = rep.to_json_arch();
+        assert!(!arch.contains("host_seconds"));
+        assert!(!arch.contains("sim_cycles_per_sec"));
+        assert!(!arch.contains("sched."));
+        assert!(arch.contains("\"cpu.instr\""), "architectural stats survive");
+        assert_eq!(arch.matches('{').count(), arch.matches('}').count());
     }
 
     #[test]

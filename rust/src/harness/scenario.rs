@@ -177,6 +177,9 @@ impl Scenario {
         }
         let img = self.workload.stage(&mut soc);
         soc.preload(&img, DRAM_BASE);
+        // timed from here: the run loop only, excluding SoC construction
+        // and staging, so cycles/sec matches `cheshire run`'s definition
+        let host_t0 = std::time::Instant::now();
         let (cycles, halted) = match self.workload.fixed_window() {
             Some(window) => {
                 soc.run_cycles(window);
@@ -201,6 +204,9 @@ impl Scenario {
             cycles,
             halted,
             power,
+            // never 0: a sub-resolution run must not divide the
+            // cycles/sec throughput metric by zero
+            host_seconds: host_t0.elapsed().as_secs_f64().max(1e-9),
             stats: soc.stats.clone(),
         }
     }
@@ -231,8 +237,21 @@ pub struct ScenarioResult {
     pub halted: bool,
     /// CORE/IO/RAM power split at `freq_hz`.
     pub power: PowerReport,
+    /// Host wall-clock seconds of the run loop itself (SoC construction
+    /// and workload staging excluded) — the perf-trajectory datum.
+    /// Host-dependent, so the deterministic report variant
+    /// ([`super::SweepReport::to_json_arch`]) omits it.
+    pub host_seconds: f64,
     /// Complete event-count registry of the run.
     pub stats: Stats,
+}
+
+impl ScenarioResult {
+    /// Simulated cycles per host second — the throughput metric the
+    /// scheduler work is measured by.
+    pub fn sim_cycles_per_sec(&self) -> f64 {
+        self.cycles as f64 / self.host_seconds
+    }
 }
 
 #[cfg(test)]

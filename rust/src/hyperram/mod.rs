@@ -18,7 +18,7 @@ use crate::axi::port::AxiBus;
 use crate::axi::serializer::Serializer;
 use crate::axi::serializer::SerTxn;
 use crate::axi::types::{beat_addr, Resp, B, R};
-use crate::sim::{Cycle, Stats};
+use crate::sim::{Activity, Component, Cycle, Stats};
 use std::collections::VecDeque;
 
 /// Number of switching IOs of a HyperBus interface (8 DQ + RWDS + CS +
@@ -231,6 +231,23 @@ impl HyperRam {
             }
         } else if op.chunks.is_empty() && !op.chunk_inflight {
             self.op = None;
+        }
+    }
+}
+
+impl Component for HyperRam {
+    /// Busy while a transaction is serialized or in flight; otherwise the
+    /// only future event is the device's autonomous self-refresh, whose
+    /// (absolute) due cycle is the deadline — the refresh accounting at
+    /// that cycle must run for real to keep `hyper.self_refresh` exact.
+    fn activity(&self, now: Cycle) -> Activity {
+        if !self.ser.is_empty() || self.op.is_some() {
+            return Activity::Busy;
+        }
+        if now >= self.next_refresh {
+            Activity::Busy
+        } else {
+            Activity::IdleUntil(self.next_refresh)
         }
     }
 }

@@ -11,7 +11,7 @@
 //!   enables, priorities, claim/complete; configurable targets.
 
 use crate::axi::regbus::RegDevice;
-use crate::sim::Stats;
+use crate::sim::{Activity, Cycle, Stats};
 use std::cell::RefCell;
 use std::rc::Rc;
 
@@ -72,6 +72,30 @@ impl RegDevice for Clint {
             self.phase = 0;
             self.mtime = self.mtime.wrapping_add(1);
         }
+    }
+
+    /// `mtime` advances linearly, so the timer's only externally visible
+    /// event is the `mtip` edge at `mtimecmp` — the platform's canonical
+    /// event-horizon deadline. Already fired (or disarmed): quiescent.
+    fn activity(&self, now: Cycle) -> Activity {
+        if self.mtimecmp == u64::MAX || self.mtime >= self.mtimecmp {
+            return Activity::Quiescent;
+        }
+        let d = self.divider.max(1) as u64;
+        let increments = self.mtimecmp - self.mtime;
+        // the increment completing during the tick at `now + k - 1` is the
+        // k-th; mtip flips on the `increments`-th
+        let ticks = (d - self.phase as u64) + (increments - 1) * d;
+        Activity::IdleUntil(now + ticks.saturating_sub(1))
+    }
+
+    /// Advance the prescaler/counter pair exactly as `cycles` ticks would:
+    /// `mtime += (phase + cycles) / divider`, phase keeps the remainder.
+    fn skip(&mut self, cycles: u64) {
+        let d = self.divider.max(1) as u64;
+        let total = self.phase as u64 + cycles;
+        self.mtime = self.mtime.wrapping_add(total / d);
+        self.phase = (total % d) as u32;
     }
 }
 
@@ -203,6 +227,22 @@ impl RegDevice for Plic {
     fn tick(&mut self, _stats: &mut Stats) {
         self.sample();
     }
+
+    /// Sampling is idempotent once every high, unclaimed line has been
+    /// latched into `pending`; only an unlatched edge would change `meip`
+    /// on the next tick.
+    fn activity(&self, _now: Cycle) -> Activity {
+        let lines = self.lines.borrow();
+        let unlatched = lines
+            .iter()
+            .enumerate()
+            .any(|(i, &l)| l && !self.claimed[i] && !self.pending[i]);
+        if unlatched {
+            Activity::Busy
+        } else {
+            Activity::Quiescent
+        }
+    }
 }
 
 #[cfg(test)]
@@ -223,6 +263,59 @@ mod tests {
         assert!(c.mtip());
         // reading mtime through registers
         assert_eq!(c.reg_read(0xbff8).unwrap(), 100);
+    }
+
+    /// The advertised deadline is exactly the last cycle the CLINT must
+    /// tick for `mtip` to flip on schedule, for any divider/phase.
+    #[test]
+    fn clint_deadline_and_skip_match_ticking() {
+        for divider in [1u32, 3, 7] {
+            for lead in [1u64, 2, 50] {
+                let mut ticked = Clint::new();
+                ticked.divider = divider;
+                let mut s = Stats::new();
+                // desync the prescaler phase
+                for _ in 0..5 {
+                    ticked.tick(&mut s);
+                }
+                ticked.mtimecmp = ticked.mtime + lead;
+                let mut skipped = Clint { msip: false, mtime: ticked.mtime, mtimecmp: ticked.mtimecmp, divider, phase: ticked.phase };
+                let now = 1000u64;
+                let Activity::IdleUntil(deadline) = ticked.activity(now) else {
+                    panic!("armed timer must report a deadline");
+                };
+                let idle = deadline - now; // elidable cycles before the must-tick
+                for _ in 0..idle {
+                    ticked.tick(&mut s);
+                    assert!(!ticked.mtip(), "mtip may not fire inside the elided span");
+                }
+                skipped.skip(idle);
+                assert_eq!(ticked.mtime, skipped.mtime, "div={divider} lead={lead}");
+                assert_eq!(ticked.phase, skipped.phase);
+                ticked.tick(&mut s); // the real tick at the deadline
+                assert!(ticked.mtip(), "mtip fires on the deadline tick");
+            }
+        }
+    }
+
+    #[test]
+    fn clint_unarmed_or_fired_is_quiescent() {
+        let mut c = Clint::new();
+        assert_eq!(c.activity(0), Activity::Quiescent, "mtimecmp = MAX");
+        c.mtimecmp = 10;
+        c.mtime = 10;
+        assert_eq!(c.activity(0), Activity::Quiescent, "already fired");
+    }
+
+    #[test]
+    fn plic_activity_tracks_unlatched_edges() {
+        let (mut p, lines) = Plic::new(2);
+        let mut s = Stats::new();
+        assert_eq!(p.activity(0), Activity::Quiescent);
+        lines.borrow_mut()[1] = true;
+        assert_eq!(p.activity(0), Activity::Busy, "edge awaiting a sample");
+        p.tick(&mut s);
+        assert_eq!(p.activity(0), Activity::Quiescent, "latched → idempotent");
     }
 
     #[test]

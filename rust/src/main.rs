@@ -54,11 +54,14 @@ fn load_config_inner(args: &Args, apply_dsa: bool) -> CheshireConfig {
             cfg.dsa_port_pairs = n.parse().expect("dsa pairs");
         }
     }
+    if args.flag("no-elide") {
+        cfg.elide_idle = false;
+    }
     cfg
 }
 
 fn main() {
-    let args = Args::from_env(&["info", "run", "offload", "boot", "sweep"], &["stats", "serial"]);
+    let args = Args::from_env(&["info", "run", "offload", "boot", "sweep"], &["stats", "serial", "no-elide"]);
     match args.subcommand.as_deref() {
         Some("info") => info(&args),
         Some("run") => run(&args),
@@ -73,7 +76,9 @@ fn main() {
             eprintln!("  boot");
             eprintln!("  sweep [--workloads nop,mem] [--backends rpc,hyperram]");
             eprintln!("        [--spm-masks 0xff,0x0f] [--dsa 0,1] [--tlb 16,4] [--cycles N]");
-            eprintln!("        [--jobs N] [--serial] [--json sweep.json|-]");
+            eprintln!("        [--jobs N] [--serial] [--json sweep.json|-] [--json-arch arch.json]");
+            eprintln!("  any subcommand: [--no-elide]  disable event-horizon idle elision");
+            eprintln!("                  (architecturally identical, reference cycle loop)");
             std::process::exit(2);
         }
     }
@@ -174,6 +179,12 @@ fn sweep(args: &Args) {
             eprintln!("sweep: JSON report written to sweep.json");
         }
     }
+    // the architectural report (timing + sched.* stripped) is what the
+    // CI equivalence guard diffs between elided and --no-elide runs
+    if let Some(path) = args.get("json-arch") {
+        std::fs::write(path, report.to_json_arch()).expect("write architectural JSON report");
+        eprintln!("sweep: architectural JSON report written to {path}");
+    }
 }
 
 fn info(args: &Args) {
@@ -207,6 +218,7 @@ fn run(args: &Args) {
     let mut soc = Soc::new(cfg);
     let img = workload.stage(&mut soc);
     soc.preload(&img, DRAM_BASE);
+    let host_t0 = std::time::Instant::now();
     let used = match workload.fixed_window() {
         Some(window) => {
             soc.run_cycles(window);
@@ -214,9 +226,16 @@ fn run(args: &Args) {
         }
         None => soc.run(cycles),
     };
+    let host_s = host_t0.elapsed().as_secs_f64().max(1e-9);
     let pm = PowerModel::neo();
     let p = pm.power(&soc.stats, used, freq);
     println!("workload={which} cycles={used} freq={:.0} MHz", freq / 1e6);
+    println!(
+        "throughput: {:.2} Msim-cycles/s host ({} of {} cycles elided)",
+        used as f64 / host_s / 1e6,
+        soc.stats.get("sched.elided_cycles"),
+        used
+    );
     println!(
         "power: CORE {:.1} mW  IO {:.1} mW  RAM {:.1} mW  TOTAL {:.1} mW",
         p.core_mw,

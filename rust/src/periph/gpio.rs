@@ -4,7 +4,7 @@
 //! (rising-edge on inputs), 0x10 IRQ_PEND (W1C).
 
 use crate::axi::regbus::RegDevice;
-use crate::sim::Stats;
+use crate::sim::{Activity, Cycle, Stats};
 
 pub struct Gpio {
     pub out: u32,
@@ -64,6 +64,16 @@ impl RegDevice for Gpio {
         let rising = self.pins_in & !self.last_in & !self.dir;
         self.irq_pend |= rising & self.irq_en;
         self.last_in = self.pins_in;
+    }
+
+    /// Edge detection is idempotent once the sampled level matches the
+    /// pins; only a pending edge needs a real tick to latch.
+    fn activity(&self, _now: Cycle) -> Activity {
+        if self.pins_in == self.last_in {
+            Activity::Quiescent
+        } else {
+            Activity::Busy
+        }
     }
 
     fn irq(&self) -> bool {

@@ -10,7 +10,7 @@
 //! 0x0c CLKDIV (SCL divider).
 
 use crate::axi::regbus::RegDevice;
-use crate::sim::Stats;
+use crate::sim::{Activity, Cycle, Stats};
 
 pub struct I2cEeprom {
     pub image: Vec<u8>,
@@ -78,6 +78,22 @@ impl RegDevice for I2cEeprom {
                     stats.bump("i2c.wr_bytes");
                 }
             }
+        }
+    }
+
+    /// The frame completes during the tick at `now + busy - 1`.
+    fn activity(&self, now: Cycle) -> Activity {
+        if self.busy == 0 {
+            Activity::Quiescent
+        } else {
+            Activity::IdleUntil(now + (self.busy - 1) as Cycle)
+        }
+    }
+
+    fn skip(&mut self, cycles: u64) {
+        if self.busy > 0 {
+            debug_assert!(cycles < self.busy as u64, "skip across an I2C frame");
+            self.busy -= cycles as u32;
         }
     }
 }

@@ -9,7 +9,7 @@
 //! out, read: last byte shifted in), 0x08 STATUS (bit0 busy), 0x0c CLKDIV.
 
 use crate::axi::regbus::RegDevice;
-use crate::sim::Stats;
+use crate::sim::{Activity, Cycle, Stats};
 
 /// SPI NOR flash with a classic 3-byte-address READ (0x03) command.
 pub struct SpiFlashDev {
@@ -126,6 +126,22 @@ impl RegDevice for SpiHost {
                     stats.bump("spi.bytes");
                 }
             }
+        }
+    }
+
+    /// The byte exchange completes during the tick at `now + busy - 1`.
+    fn activity(&self, now: Cycle) -> Activity {
+        if self.busy == 0 {
+            Activity::Quiescent
+        } else {
+            Activity::IdleUntil(now + (self.busy - 1) as Cycle)
+        }
+    }
+
+    fn skip(&mut self, cycles: u64) {
+        if self.busy > 0 {
+            debug_assert!(cycles < self.busy as u64, "skip across an SPI transfer");
+            self.busy -= cycles as u32;
         }
     }
 }

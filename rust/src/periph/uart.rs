@@ -7,7 +7,7 @@
 //! ("user interaction may happen through UART", §III-A).
 
 use crate::axi::regbus::RegDevice;
-use crate::sim::Stats;
+use crate::sim::{Activity, Cycle, Stats};
 use std::collections::VecDeque;
 
 pub struct Uart {
@@ -89,6 +89,22 @@ impl RegDevice for Uart {
 
     fn irq(&self) -> bool {
         (self.ier & 1 != 0) && !self.rx_fifo.is_empty()
+    }
+
+    /// A frame in the shift register completes (tx_log push + THRE edge)
+    /// during the tick at `now + n - 1`; everything before is countdown.
+    fn activity(&self, now: Cycle) -> Activity {
+        match self.shifting {
+            None => Activity::Quiescent,
+            Some((_, n)) => Activity::IdleUntil(now + n.saturating_sub(1) as Cycle),
+        }
+    }
+
+    fn skip(&mut self, cycles: u64) {
+        if let Some((_, n)) = &mut self.shifting {
+            debug_assert!(cycles < *n as u64, "skip across a UART frame completion");
+            *n -= cycles as u32;
+        }
     }
 }
 

@@ -12,7 +12,7 @@
 use crate::axi::port::AxiBus;
 use crate::axi::regbus::RegDevice;
 use crate::axi::types::{Ar, Burst};
-use crate::sim::Stats;
+use crate::sim::{Activity, Component, Cycle, Stats};
 use std::cell::RefCell;
 use std::rc::Rc;
 
@@ -33,14 +33,22 @@ pub struct VgaScanout {
     state: SharedVga,
     /// Byte offset of the next scanout fetch within the frame.
     offset: u64,
-    /// Pixel-clock accumulator: fetch `bytes_per_cycle` each cycle.
-    debt: f64,
+    /// Pixel-clock accumulator in millibytes (integer fixed point, so an
+    /// elided span of `n` cycles accrues *exactly* `n × rate` — a float
+    /// accumulator would drift from repeated addition and break the
+    /// elided ≡ unelided invariant).
+    debt_milli: u64,
     outstanding: u32,
 }
 
 impl VgaScanout {
     /// 25.175 MHz pixel clock at 200 MHz system clock ≈ 0.126 px/cycle.
     pub const PX_PER_CYCLE: f64 = 0.126;
+    /// The same rate as exact integer fixed point: millibytes of scanout
+    /// debt accrued per cycle per byte-per-pixel (0.126 px/cycle × 1000).
+    const MILLI_PER_CYCLE_PER_BPP: u64 = 126;
+    /// Burst grain in millibytes (64 B bursts).
+    const BURST_MILLI: u64 = 64_000;
 
     pub fn new() -> (Self, SharedVga) {
         let state: SharedVga = Rc::new(RefCell::new(VgaState {
@@ -51,7 +59,12 @@ impl VgaScanout {
             bpp: 2,
             frames: 0,
         }));
-        (Self { state: state.clone(), offset: 0, debt: 0.0, outstanding: 0 }, state)
+        (Self { state: state.clone(), offset: 0, debt_milli: 0, outstanding: 0 }, state)
+    }
+
+    /// Debt accrued per cycle at the current pixel format.
+    fn rate_milli(&self) -> u64 {
+        Self::MILLI_PER_CYCLE_PER_BPP * self.state.borrow().bpp.clamp(1, 4) as u64
     }
 
     pub fn tick(&mut self, bus: &AxiBus, stats: &mut Stats) {
@@ -68,9 +81,9 @@ impl VgaScanout {
         }
         let frame_bytes = (st.h_res * st.v_res * st.bpp) as u64;
         drop(st);
-        self.debt += Self::PX_PER_CYCLE * self.state.borrow().bpp as f64;
+        self.debt_milli += self.rate_milli();
         // issue a 64 B scanout burst whenever a burst's worth is due
-        if self.debt >= 64.0 && self.outstanding < 2 && bus.ar.borrow().can_push() {
+        if self.debt_milli >= Self::BURST_MILLI && self.outstanding < 2 && bus.ar.borrow().can_push() {
             let st = self.state.borrow();
             bus.ar.borrow_mut().push(Ar {
                 id: 0x30,
@@ -81,7 +94,7 @@ impl VgaScanout {
                 qos: 0,
             });
             drop(st);
-            self.debt -= 64.0;
+            self.debt_milli -= Self::BURST_MILLI;
             self.outstanding += 1;
             self.offset += 64;
             stats.bump("vga.bursts");
@@ -89,6 +102,39 @@ impl VgaScanout {
                 self.offset = 0;
                 self.state.borrow_mut().frames += 1;
             }
+        }
+    }
+}
+
+impl Component for VgaScanout {
+    /// Disabled scanout is frozen; an enabled one is idle exactly until
+    /// the accumulated pixel debt next reaches a burst — the "VGA
+    /// scanline" deadline. In-flight bursts pin the platform busy (their
+    /// return data is what wakes us).
+    fn activity(&self, now: Cycle) -> Activity {
+        let st = self.state.borrow();
+        if !st.enable {
+            return if self.outstanding == 0 { Activity::Quiescent } else { Activity::Busy };
+        }
+        drop(st);
+        if self.outstanding > 0 {
+            return Activity::Busy;
+        }
+        let rate = self.rate_milli();
+        if self.debt_milli + rate >= Self::BURST_MILLI {
+            return Activity::Busy; // burst due on the very next tick
+        }
+        // first tick k (1-based) with debt + k·rate ≥ burst issues it;
+        // that tick runs at cycle now + k − 1
+        let k = (Self::BURST_MILLI - self.debt_milli).div_ceil(rate);
+        Activity::IdleUntil(now + k - 1)
+    }
+
+    /// Accrue the elided span's debt in one exact multiply.
+    fn skip(&mut self, cycles: u64, _stats: &mut Stats) {
+        if self.state.borrow().enable {
+            self.debt_milli += cycles * self.rate_milli();
+            debug_assert!(self.debt_milli < Self::BURST_MILLI, "skip across a scanout burst");
         }
     }
 }
@@ -161,6 +207,36 @@ mod tests {
         // effective rate ≈ PX_PER_CYCLE × bpp bytes/cycle
         let rate = bytes / 50_000.0;
         assert!((rate - 0.252).abs() < 0.08, "scanout rate {rate:.3} B/cycle");
+    }
+
+    /// The advertised scanline deadline is exactly the cycle the next
+    /// burst issues, and skipping to it is bit-identical to ticking.
+    #[test]
+    fn activity_deadline_matches_first_burst_cycle() {
+        let mk = || {
+            let (scan, state) = VgaScanout::new();
+            let mut regs = Vga::new(state);
+            regs.reg_write(0x04, 0x1000).unwrap();
+            regs.reg_write(0x00, 1).unwrap(); // enable, bpp = 2
+            scan
+        };
+        let mut ticked = mk();
+        let mut skipped = mk();
+        let bus = axi_bus(8);
+        let mut stats = Stats::new();
+        let now = 0u64;
+        let Activity::IdleUntil(deadline) = ticked.activity(now) else {
+            panic!("fresh enabled scanout must be idle-until");
+        };
+        let idle = deadline - now;
+        for _ in 0..idle {
+            ticked.tick(&bus, &mut stats);
+        }
+        assert_eq!(stats.get("vga.bursts"), 0, "no burst inside the elided span");
+        skipped.skip(idle, &mut stats);
+        assert_eq!(ticked.debt_milli, skipped.debt_milli);
+        ticked.tick(&bus, &mut stats); // the real tick at the deadline
+        assert_eq!(stats.get("vga.bursts"), 1, "burst issues on the deadline tick");
     }
 
     #[test]

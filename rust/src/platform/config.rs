@@ -92,6 +92,12 @@ pub struct CheshireConfig {
     pub vga: bool,
     /// Boot mode (see `periph::soc_ctrl`).
     pub boot_mode: u32,
+    /// Event-horizon scheduling: when every component reports idle, jump
+    /// the clock to the earliest pending deadline instead of ticking
+    /// cycle by cycle. Architecturally invisible (elided ≡ unelided, bit
+    /// for bit — enforced by tests); disable with `--no-elide` or
+    /// `platform.elide_idle = false` to force the reference cycle loop.
+    pub elide_idle: bool,
 }
 
 impl CheshireConfig {
@@ -119,6 +125,7 @@ impl CheshireConfig {
             gpio: true,
             vga: true,
             boot_mode: 0,
+            elide_idle: true,
         }
     }
 
@@ -194,6 +201,9 @@ impl CheshireConfig {
         }
         if let Some(v) = get_u("platform.boot_mode") {
             c.boot_mode = v as u32;
+        }
+        if let Some(v) = get_b("platform.elide_idle") {
+            c.elide_idle = v;
         }
         Ok(c)
     }
@@ -377,5 +387,12 @@ mod tests {
     fn tlb_entries_load_from_toml() {
         let c = CheshireConfig::from_toml("[platform]\ntlb_entries = 4").unwrap();
         assert_eq!(c.tlb_entries, 4);
+    }
+
+    #[test]
+    fn elide_idle_defaults_on_and_loads_from_toml() {
+        assert!(CheshireConfig::neo().elide_idle, "elision is the default");
+        let c = CheshireConfig::from_toml("[platform]\nelide_idle = false").unwrap();
+        assert!(!c.elide_idle);
     }
 }

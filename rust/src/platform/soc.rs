@@ -23,9 +23,14 @@ use crate::platform::config::{CheshireConfig, MemBackend};
 use crate::platform::memmap::*;
 use crate::rpc::manager::ManagerRegs;
 use crate::rpc::RpcSubsystem;
-use crate::sim::{Clock, Cycle, Stats};
+use crate::sim::{Activity, Clock, Component, Cycle, Stats};
 use std::cell::RefCell;
 use std::rc::Rc;
+
+/// Fast-forwards shorter than this are not worth the skip bookkeeping;
+/// the engine just ticks (always correct — elision is purely an
+/// optimization on top of the reference cycle loop).
+const MIN_ELIDE: u64 = 4;
 
 type Shared<T> = Rc<RefCell<T>>;
 
@@ -289,8 +294,24 @@ impl Soc {
 
     /// JTAG-style passive preload: image into DRAM, entry point into the
     /// SoC-control scratch registers, BOOT_DONE raised.
+    ///
+    /// Panics with a descriptive message when `entry` lies outside the
+    /// DRAM window or the image would run past its end (an `entry` below
+    /// `DRAM_BASE` used to underflow into an opaque slice-index panic).
     pub fn preload(&mut self, image: &[u8], entry: u64) {
+        let dram_bytes = self.cfg.dram_bytes as u64;
+        let dram_end = DRAM_BASE + dram_bytes;
+        assert!(
+            (DRAM_BASE..dram_end).contains(&entry),
+            "preload: entry {entry:#x} outside the DRAM window [{DRAM_BASE:#x}, {dram_end:#x})"
+        );
         let off = (entry - DRAM_BASE) as usize;
+        assert!(
+            image.len() as u64 <= dram_bytes - off as u64,
+            "preload: {} byte image at entry {entry:#x} overruns the DRAM window end {dram_end:#x} by {} bytes",
+            image.len(),
+            off as u64 + image.len() as u64 - dram_bytes
+        );
         self.dram_raw_mut()[off..off + image.len()].copy_from_slice(image);
         let mut sc = self.soc_ctrl.borrow_mut();
         sc.scratch[0] = entry as u32;
@@ -333,12 +354,11 @@ impl Soc {
 
         // interrupt fabric: peripheral lines → PLIC, CLINT/PLIC → CPU
         {
+            let levels = self.plic_source_levels();
             let mut plic = self.plic.borrow_mut();
             {
                 let mut lines = plic.lines.borrow_mut();
-                lines[0] = self.uart.borrow().irq();
-                lines[1] = self.dma_state.borrow().irq;
-                lines[2] = self.gpio.borrow().irq();
+                lines[..levels.len()].copy_from_slice(&levels);
             }
             plic.sample();
             let clint = self.clint.borrow();
@@ -348,20 +368,158 @@ impl Soc {
         self.clock.advance();
     }
 
-    /// Run until the CPU halts (ebreak), up to `max_cycles`. Returns the
-    /// cycles consumed.
+    /// Current levels of the peripheral interrupt sources wired into the
+    /// PLIC, in source order — the *single* definition of that wiring,
+    /// shared by the tick fabric and the scheduler's settled check (so a
+    /// new source added here is automatically guarded against elision
+    /// sailing past its first edge).
+    fn plic_source_levels(&self) -> [bool; 3] {
+        [
+            self.uart.borrow().irq(),
+            self.dma_state.borrow().irq,
+            self.gpio.borrow().irq(),
+        ]
+    }
+
+    /// Whether every AXI channel in the platform is empty — a beat pending
+    /// anywhere means some component has routing or draining to do next
+    /// cycle, so nothing may be elided.
+    fn buses_idle(&self) -> bool {
+        self.cpu_bus.is_idle()
+            && self.dma_bus.is_idle()
+            && self.vga_bus.is_idle()
+            && self.dbg_bus.is_idle()
+            && self.llc_sub_bus.is_idle()
+            && self.llc_mgr_bus.is_idle()
+            && self.bootrom_bus.is_idle()
+            && self.bridge_bus.is_idle()
+            && self.dsa_mgr_bus.iter().all(|b| b.is_idle())
+            && self.dsa_sub_bus.iter().all(|b| b.is_idle())
+    }
+
+    /// Fold every component's [`Activity`] report (and the bus-idle check)
+    /// into the platform's combined next-cycle classification. The CPU is
+    /// polled first with an early out: an actively executing core makes
+    /// the platform busy regardless of everything else, which keeps the
+    /// poll overhead negligible on compute-bound workloads.
+    pub fn poll_activity(&self) -> Activity {
+        let now = self.clock.now();
+        let mut combined = self.cpu.activity(now);
+        if combined == Activity::Busy {
+            return Activity::Busy;
+        }
+        let parts = [
+            self.dma.activity(now),
+            self.xbar.activity(now),
+            self.llc.activity(now),
+            match &self.hyperram {
+                Some(h) => h.activity(now),
+                None => self.rpc.activity(now),
+            },
+            self.bootrom.activity(now),
+            self.bridge.activity(now),
+            self.regbus.activity(now),
+        ];
+        for a in parts {
+            combined = combined.combine(a);
+            if combined == Activity::Busy {
+                return Activity::Busy;
+            }
+        }
+        if self.cfg.vga {
+            combined = combined.combine(self.vga_scan.activity(now));
+        }
+        for d in self.dsa.iter().flatten() {
+            combined = combined.combine(d.activity(now));
+        }
+        if combined == Activity::Busy || !self.buses_idle() {
+            return Activity::Busy;
+        }
+        // The interrupt fabric runs at the end of every *real* tick:
+        // source levels onto the PLIC lines, CLINT/PLIC levels onto the
+        // CPU's mip wires. An edge that has not propagated yet (e.g. a
+        // host-injected UART RX byte or msip poke between run calls) must
+        // pin the platform busy until the fabric has carried it, or a
+        // jump could sail past the wake-up.
+        let fabric_settled = {
+            let levels = self.plic_source_levels();
+            let plic = self.plic.borrow();
+            let lines = plic.lines.borrow();
+            let clint = self.clint.borrow();
+            let mip = self.cpu.core.csr.mip;
+            lines[..levels.len()] == levels[..]
+                && (mip >> 3) & 1 == clint.msip as u64
+                && (mip >> 7) & 1 == clint.mtip() as u64
+                && (mip >> 11) & 1 == plic.meip() as u64
+        };
+        if !fabric_settled {
+            return Activity::Busy;
+        }
+        combined
+    }
+
+    /// Fast-forward the clock across `n` provably idle cycles: apply the
+    /// per-component bookkeeping (`mcycle`, CLINT `mtime`, peripheral
+    /// countdowns, VGA pixel debt, `cpu.wfi_cycles`) and jump. Only the
+    /// `sched.*` counters distinguish an elided run from the reference
+    /// loop.
+    fn skip_cycles(&mut self, n: u64) {
+        self.cpu.skip(n, &mut self.stats);
+        if self.cfg.vga {
+            self.vga_scan.skip(n, &mut self.stats);
+        }
+        self.regbus.skip(n, &mut self.stats);
+        self.clock.advance_by(n);
+        self.stats.add("sched.elided_cycles", n);
+        self.stats.bump("sched.fast_forwards");
+    }
+
+    /// Advance the platform: one real [`Soc::tick`] whenever any component
+    /// is (or may be) busy, or an event-horizon jump to the earliest
+    /// pending deadline when the whole platform is provably idle. The
+    /// jump never passes `limit` (exclusive bound of the caller's run
+    /// window). Returns the cycles advanced; 0 only when `now >= limit`.
+    pub fn advance(&mut self, limit: Cycle) -> u64 {
+        let now = self.clock.now();
+        if now >= limit {
+            return 0;
+        }
+        if !self.cfg.elide_idle {
+            self.tick();
+            return 1;
+        }
+        let n = match self.poll_activity() {
+            Activity::Busy => 1,
+            Activity::IdleUntil(deadline) => deadline.saturating_sub(now).min(limit - now).max(1),
+            Activity::Quiescent => limit - now,
+        };
+        if n < MIN_ELIDE {
+            self.tick();
+            1
+        } else {
+            self.skip_cycles(n);
+            n
+        }
+    }
+
+    /// Run until the CPU halts (ebreak), up to `max_cycles`, eliding idle
+    /// spans (unless `cfg.elide_idle` is off). Returns the cycles
+    /// consumed — identical with and without elision.
     pub fn run(&mut self, max_cycles: u64) -> u64 {
         let start = self.clock.now();
-        while !self.cpu.halted && self.clock.now() - start < max_cycles {
-            self.tick();
+        let end = start.saturating_add(max_cycles);
+        while !self.cpu.halted && self.clock.now() < end {
+            self.advance(end);
         }
         self.clock.now() - start
     }
 
-    /// Run for exactly `n` cycles.
+    /// Run for exactly `n` cycles (idle spans inside the window are
+    /// elided, with identical end state).
     pub fn run_cycles(&mut self, n: u64) {
-        for _ in 0..n {
-            self.tick();
+        let end = self.clock.now().saturating_add(n);
+        while self.clock.now() < end {
+            self.advance(end);
         }
     }
 
@@ -444,6 +602,79 @@ mod tests {
         assert!(soc.cpu.halted, "payload should halt (ran {cycles} cycles, pc={:#x})", soc.cpu.core.pc);
         assert_eq!(soc.uart.borrow().tx_string(), "hi");
         assert_eq!(soc.stats.get("rpc.dev_violations"), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the DRAM window")]
+    fn preload_rejects_entry_below_dram_base() {
+        let mut soc = Soc::new(CheshireConfig::neo());
+        soc.preload(&[0u8; 4], DRAM_BASE - 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "overruns the DRAM window")]
+    fn preload_rejects_image_past_dram_end() {
+        let mut soc = Soc::new(CheshireConfig::neo());
+        let end = DRAM_BASE + soc.cfg.dram_bytes as u64;
+        soc.preload(&[0u8; 64], end - 8);
+    }
+
+    /// The event-horizon engine must be architecturally invisible: a WFI
+    /// sleep woken by the CLINT produces the same halt cycle and UART
+    /// output with and without elision — while actually eliding.
+    #[test]
+    fn elided_timer_sleep_matches_reference_loop() {
+        let program = || {
+            let mut a = Asm::new(DRAM_BASE);
+            a.la(T0, "handler");
+            a.csrrw(ZERO, 0x305, T0);
+            a.li(S0, (CLINT_BASE + 0xbff8) as i64);
+            a.li(S2, (CLINT_BASE + 0x4000) as i64);
+            a.lw(T1, S0, 0);
+            a.li(T2, 60_000);
+            a.add(T1, T1, T2);
+            a.sw(T1, S2, 0);
+            a.sw(ZERO, S2, 4);
+            a.li(T1, 1 << 7);
+            a.csrrw(ZERO, 0x304, T1); // MTIE
+            a.li(T1, 1 << 3);
+            a.csrrs(ZERO, 0x300, T1); // MIE
+            a.wfi();
+            a.label("spin");
+            a.j("spin");
+            a.label("handler");
+            a.li(S1, UART_BASE as i64);
+            a.li(T0, b'!' as i64);
+            a.sw(T0, S1, 0);
+            a.label("drain");
+            a.lw(T1, S1, 0x08);
+            a.andi(T1, T1, 0x20);
+            a.beq(T1, ZERO, "drain");
+            a.ebreak();
+            a.finish()
+        };
+        let run_one = |elide: bool| {
+            let mut cfg = CheshireConfig::neo();
+            cfg.elide_idle = elide;
+            let mut soc = Soc::new(cfg);
+            soc.preload(&program(), DRAM_BASE);
+            let cycles = soc.run(4_000_000);
+            assert!(soc.cpu.halted, "elide={elide}: pc={:#x}", soc.cpu.core.pc);
+            (cycles, soc.uart.borrow().tx_string(), soc.stats.clone())
+        };
+        let (c1, u1, s1) = run_one(true);
+        let (c0, u0, s0) = run_one(false);
+        assert_eq!(c1, c0, "halt cycle must be identical");
+        assert_eq!(u1, u0);
+        assert!(s1.get("sched.elided_cycles") > 30_000, "the sleep was actually elided");
+        for (k, v) in s0.iter() {
+            assert_eq!(s1.get(k), v, "stat {k} must survive elision");
+        }
+        assert_eq!(
+            s1.iter().filter(|(k, _)| !k.starts_with("sched.")).count(),
+            s0.iter().count(),
+            "elision adds only sched.* keys"
+        );
     }
 
     /// CPU programs the DMA over MMIO to copy SPM → DRAM, then checks data.

@@ -109,6 +109,18 @@ impl Frontend {
         }
     }
 
+    /// Whether the whole frontend pipeline is drained: no serialized or
+    /// in-assembly transaction, no staged fragment awaiting the
+    /// controller, no read stream reassembling, no B response owed.
+    pub fn is_idle(&self) -> bool {
+        self.ser.is_empty()
+            && self.cur_wr.is_none()
+            && self.cur_rd.is_none()
+            && self.wr_ready.is_empty()
+            && self.rd_streams.is_empty()
+            && self.b_queue.is_empty()
+    }
+
     /// One cycle of the whole frontend pipeline.
     pub fn tick(&mut self, bus: &AxiBus, ctrl: &mut Controller, now: Cycle, stats: &mut Stats) {
         self.ser.tick(bus);

@@ -81,6 +81,17 @@ impl Manager {
     pub fn initialized(&self) -> bool {
         self.initialized
     }
+
+    /// Absolute cycle of the next management obligation (the controller's
+    /// event-horizon deadline): init is due immediately, then the earlier
+    /// of the refresh and ZQ-calibration schedules.
+    pub fn next_deadline(&self) -> Cycle {
+        if !self.initialized {
+            0
+        } else {
+            self.next_refresh.min(self.next_zq)
+        }
+    }
 }
 
 /// Memory-mapped register file exposing the timing parameters (Regbus).

@@ -49,7 +49,7 @@ pub use timing::TimingParams;
 pub use timing_fsm::Controller;
 
 use crate::axi::port::AxiBus;
-use crate::sim::{Cycle, Stats};
+use crate::sim::{Activity, Component, Cycle, Stats};
 
 /// The complete RPC DRAM subsystem: frontend + controller + device, as
 /// instantiated in Neo. One `tick` advances everything a cycle.
@@ -84,6 +84,18 @@ impl RpcSubsystem {
 
     pub fn dram_raw(&self) -> &[u8] {
         self.device.raw()
+    }
+}
+
+impl Component for RpcSubsystem {
+    /// The subsystem is busy while the frontend holds any transaction
+    /// state; with the datapath drained, the controller is idle exactly
+    /// until the manager's next refresh/ZQ obligation.
+    fn activity(&self, now: Cycle) -> Activity {
+        if !self.frontend.is_idle() {
+            return Activity::Busy;
+        }
+        self.ctrl.activity(now)
     }
 }
 

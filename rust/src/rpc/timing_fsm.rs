@@ -21,7 +21,7 @@ use super::manager::{Manager, MgmtOp};
 use super::nsrrp::{NsReq, NsRsp, NsWrDone, Word, FULL_MASK};
 use super::phy::Phy;
 use super::timing::{shared, SharedTiming, TimingParams};
-use crate::sim::{Cycle, Stats};
+use crate::sim::{Activity, Cycle, Stats};
 use std::collections::VecDeque;
 
 /// A scheduled device command awaiting its execution cycle.
@@ -272,6 +272,30 @@ impl Controller {
             }
             let e = self.wr_events.pop_front().unwrap();
             self.wr_done_out.push_back(NsWrDone { tag: e.tag });
+        }
+    }
+
+    /// Next-cycle behavior for the event-horizon scheduler: busy while any
+    /// command/event is scheduled or a claimed management window is being
+    /// retried; otherwise idle exactly until the manager's next obligation
+    /// (refresh / ZQ) — the "RPC refresh" deadline. All scheduling here is
+    /// in absolute cycles, so a jump to the deadline reproduces the
+    /// unelided command stream bit for bit.
+    pub fn activity(&self, now: Cycle) -> Activity {
+        if self.mgmt_claim
+            || !self.sched.is_empty()
+            || !self.rd_events.is_empty()
+            || !self.wr_events.is_empty()
+            || !self.rsp_out.is_empty()
+            || !self.wr_done_out.is_empty()
+        {
+            return Activity::Busy;
+        }
+        let d = self.manager.next_deadline();
+        if d <= now {
+            Activity::Busy
+        } else {
+            Activity::IdleUntil(d)
         }
     }
 

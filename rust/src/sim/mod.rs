@@ -13,9 +13,11 @@
 //! to a consumer ticked earlier in the loop only in cycle *n+1*.
 
 pub mod chan;
+pub mod sched;
 pub mod stats;
 
 pub use chan::{link, Chan, Link};
+pub use sched::{Activity, Component};
 pub use stats::Stats;
 
 /// Simulation time in clock cycles of the single `system` clock domain
@@ -54,6 +56,12 @@ impl Clock {
         self.cycle += 1;
     }
 
+    /// Jump forward `n` cycles in one step (event-horizon fast-forward).
+    #[inline]
+    pub fn advance_by(&mut self, n: u64) {
+        self.cycle += n;
+    }
+
     /// Seconds elapsed since reset at the configured frequency.
     pub fn seconds(&self) -> f64 {
         self.cycle as f64 / self.freq_hz
@@ -78,6 +86,17 @@ mod tests {
         }
         assert_eq!(c.now(), 250);
         assert!((c.seconds() - 2.5e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn advance_by_matches_repeated_advance() {
+        let mut a = Clock::new(1e6);
+        let mut b = Clock::new(1e6);
+        for _ in 0..137 {
+            a.advance();
+        }
+        b.advance_by(137);
+        assert_eq!(a.now(), b.now());
     }
 
     #[test]

@@ -1,0 +1,134 @@
+//! Event-horizon scheduling: the component-activity contract that lets the
+//! platform fast-forward provably idle spans without changing a single
+//! architecturally visible result.
+//!
+//! The cycle kernel (`crate::platform::Soc::tick`) advances every block one
+//! cycle in a fixed, deterministic order. Most wall-clock time in realistic
+//! runs is spent ticking blocks that are *provably idle*: the CPU parked on
+//! `wfi` waiting for a CLINT timer, the RPC controller counting down to its
+//! next refresh, a DSA crunching a tile whose completion cycle is already
+//! known. Each component classifies its next-cycle behavior as an
+//! [`Activity`]; when **every** component reports idle (and every AXI
+//! channel is empty), the scheduler jumps the clock to the earliest pending
+//! deadline in one step, applying per-component [`Component::skip`]
+//! bookkeeping so counters (`mcycle`, `mtime`, `cpu.wfi_cycles`, …) land on
+//! exactly the values an unelided run would have produced.
+//!
+//! The invariant — *elided ≡ unelided, bit for bit* — is enforced by
+//! randomized tests (`tests/proptests.rs`) and a CI report diff; components
+//! buy elision only by honoring the contract below.
+//!
+//! # The contract
+//!
+//! At the instant `activity(now)` is polled (between ticks, with all of the
+//! component's input channels empty):
+//!
+//! * [`Activity::Busy`] — the component may do real work next tick; the
+//!   scheduler must tick normally.
+//! * [`Activity::IdleUntil`]`(d)` — ticks strictly before cycle `d` are
+//!   pure bookkeeping reproducible by `skip`; the tick **at** cycle `d`
+//!   may have an externally visible effect (an interrupt edge, a burst
+//!   issue, a state transition) and must execute for real. `d` may be
+//!   `now` (due immediately — treated like `Busy`).
+//! * [`Activity::Quiescent`] — no tick will *ever* have an externally
+//!   visible effect until new input arrives; any span may be skipped
+//!   (with `skip` bookkeeping).
+//!
+//! `skip(n)` must reproduce the cumulative effect of `n` idle ticks exactly
+//! — including saturating counters and stats — and is only called with `n`
+//! no larger than every reported deadline allows.
+
+use super::stats::Stats;
+use super::Cycle;
+
+/// What a component would do over the coming cycles, polled between ticks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activity {
+    /// Real work may happen next tick: the platform must tick normally.
+    Busy,
+    /// Pure bookkeeping until the given absolute cycle, at which a real
+    /// tick must run (deadline — e.g. CLINT `mtimecmp`, a VGA burst
+    /// becoming due, a DSA completing, an RPC refresh).
+    IdleUntil(Cycle),
+    /// Frozen until new input arrives; skippable without bound.
+    Quiescent,
+}
+
+impl Activity {
+    /// Fold two activity reports: the platform is only as idle as its
+    /// least idle component, and the horizon is the earliest deadline.
+    #[inline]
+    pub fn combine(self, other: Activity) -> Activity {
+        use Activity::*;
+        match (self, other) {
+            (Busy, _) | (_, Busy) => Busy,
+            (IdleUntil(a), IdleUntil(b)) => IdleUntil(a.min(b)),
+            (IdleUntil(a), Quiescent) | (Quiescent, IdleUntil(a)) => IdleUntil(a),
+            (Quiescent, Quiescent) => Quiescent,
+        }
+    }
+
+    /// Whether this report permits elision at all.
+    #[inline]
+    pub fn is_idle(&self) -> bool {
+        !matches!(self, Activity::Busy)
+    }
+}
+
+/// A schedulable block of the platform fabric.
+///
+/// Every manager and subordinate the `Soc` ticks implements this (or the
+/// equivalent methods on [`crate::axi::regbus::RegDevice`] for Regbus
+/// peripherals): `activity` classifies the next cycle, `skip` replays the
+/// bookkeeping of an elided idle span. Ticking itself stays monomorphic on
+/// the `Soc` — the fixed, deterministic tick order *is* the schedule and
+/// the per-block port wiring is heterogeneous — but idleness is uniform.
+pub trait Component {
+    /// Classify the component's next-cycle behavior. Polled between ticks;
+    /// implementations may assume their input channels are empty (the
+    /// scheduler separately requires every AXI channel to be idle before
+    /// eliding anything).
+    fn activity(&self, now: Cycle) -> Activity;
+
+    /// Apply the cumulative bookkeeping of `cycles` elided idle ticks.
+    /// Called only when the preceding `activity` poll returned an idle
+    /// report and `cycles` respects every reported deadline.
+    fn skip(&mut self, _cycles: u64, _stats: &mut Stats) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::Activity::*;
+    use super::*;
+
+    #[test]
+    fn combine_prefers_busy_then_earliest_deadline() {
+        assert_eq!(Busy.combine(Quiescent), Busy);
+        assert_eq!(Quiescent.combine(Busy), Busy);
+        assert_eq!(IdleUntil(10).combine(Busy), Busy);
+        assert_eq!(IdleUntil(10).combine(IdleUntil(7)), IdleUntil(7));
+        assert_eq!(IdleUntil(10).combine(Quiescent), IdleUntil(10));
+        assert_eq!(Quiescent.combine(IdleUntil(3)), IdleUntil(3));
+        assert_eq!(Quiescent.combine(Quiescent), Quiescent);
+    }
+
+    #[test]
+    fn combine_is_commutative_and_associative_on_samples() {
+        let xs = [Busy, IdleUntil(5), IdleUntil(9), Quiescent];
+        for &a in &xs {
+            for &b in &xs {
+                assert_eq!(a.combine(b), b.combine(a));
+                for &c in &xs {
+                    assert_eq!(a.combine(b).combine(c), a.combine(b.combine(c)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn idleness_classification() {
+        assert!(!Busy.is_idle());
+        assert!(IdleUntil(0).is_idle());
+        assert!(Quiescent.is_idle());
+    }
+}

@@ -17,7 +17,7 @@
 //! timer interrupt through `stvec`, and demand-maps pages on fault.
 
 use crate::asm::{reg::*, Asm};
-use crate::platform::memmap::{CLINT_BASE, DMA_BASE, DRAM_BASE, SPM_BASE};
+use crate::platform::memmap::{CLINT_BASE, DMA_BASE, DRAM_BASE, PLIC_BASE, SPM_BASE};
 
 /// WFI: interrupts disabled ⇒ sleeps for the whole measurement window.
 pub fn wfi_program(base: u64) -> Vec<u8> {
@@ -132,12 +132,28 @@ pub fn twomm_program(base: u64, l: &TwoMmLayout) -> Vec<u8> {
     a.finish()
 }
 
-/// MEM: program the DMA to write `reps × len` bursts SPM → DRAM; WFI
-/// between launches (the CPU is freed from data movement, §III-B).
+/// MEM: program the DMA to write `reps × len` bursts SPM → DRAM. The
+/// completion wait is interrupt-driven, not a status spin: the DMA's
+/// `irq` line enters the PLIC (source 1), `mie.MEIE` is armed with
+/// `mstatus.MIE` left clear, and the core parks on `wfi` — which wakes on
+/// a pending-and-enabled interrupt without vectoring (no handler needed),
+/// the privileged-spec idiom for race-free sleep. "The CPU is freed from
+/// data movement" (§III-B) now holds literally: between launches the core
+/// fetches nothing.
 pub fn mem_program(base: u64, len: u32, reps: u32, max_burst: u32) -> Vec<u8> {
     let mut a = Asm::new(base);
     a.li(S0, DMA_BASE as i64);
     a.li(S1, reps as i64); // outer repetitions
+    // PLIC: enable source 1 (the DMA line); default priority 1 beats the
+    // reset threshold 0. S2/S3 keep the enable and claim registers.
+    a.li(S2, (PLIC_BASE + 0x2000) as i64); // enable bitmap
+    a.li(S3, (PLIC_BASE + 0x20_0004) as i64); // claim/complete
+    a.li(T0, 0b10);
+    a.sw(T0, S2, 0);
+    // mie.MEIE on, mstatus.MIE left 0: the external interrupt can wake
+    // `wfi` but is never taken, so no trap handler is required.
+    a.li(T0, 1 << 11);
+    a.csrrw(ZERO, 0x304, T0);
     a.label("again");
     a.li(T0, SPM_BASE as i64);
     a.sw(T0, S0, 0x00);
@@ -154,10 +170,21 @@ pub fn mem_program(base: u64, len: u32, reps: u32, max_burst: u32) -> Vec<u8> {
     a.sw(T0, S0, 0x20);
     a.li(T0, 1);
     a.sw(T0, S0, 0x24); // launch
-    a.label("poll");
+    // sleep until the completion interrupt; the level-triggered line
+    // closes the check-to-sleep race (a done DMA keeps MEIP pending, so
+    // the wfi falls straight through)
+    a.label("wait");
     a.lw(T1, S0, 0x28);
     a.andi(T1, T1, 0b10);
-    a.beq(T1, ZERO, "poll");
+    a.bne(T1, ZERO, "done");
+    a.wfi();
+    a.j("wait");
+    a.label("done");
+    // acknowledge: drop the DMA irq line, then claim + complete at the
+    // PLIC so the next launch re-pends cleanly
+    a.sw(ZERO, S0, 0x2c);
+    a.lw(T1, S3, 0);
+    a.sw(T1, S3, 0);
     a.addi(S1, S1, -1);
     a.bne(S1, ZERO, "again");
     a.ebreak();
@@ -338,9 +365,20 @@ pub fn supervisor_program(base: u64, demand_pages: u32, timer_delta: u32) -> Vec
     a.add(S8, S8, S10);
     a.addi(S9, S9, -1);
     a.bne(S9, ZERO, "demand");
-    // wait for the delegated timer tick
+    // Wait for the delegated timer tick on an interrupt-driven `wfi`
+    // instead of spinning on S5. The check-to-sleep race (tick lands
+    // between the test and the wfi, one-shot relay never fires again) is
+    // closed with the classic idiom: sleep with SIE clear — `wfi` wakes
+    // on pending-and-enabled regardless of the global enable — and take
+    // the interrupt only in the explicit SIE window after waking.
     a.label("wait_irq");
-    a.beq(S5, ZERO, "wait_irq");
+    a.csrrci(ZERO, 0x100, 2); // sstatus.SIE = 0: defer delivery
+    a.bne(S5, ZERO, "irq_seen");
+    a.wfi(); // parks; the MTI relay (M-level, unaffected by SIE) wakes it
+    a.csrrsi(ZERO, 0x100, 2); // delivery window: the pending SSI is taken here
+    a.j("wait_irq");
+    a.label("irq_seen");
+    a.csrrsi(ZERO, 0x100, 2); // leave with interrupts re-enabled
     // publish [magic, irqs, faults, checksum] and halt
     a.li(T0, result as i64);
     a.li(T1, SUPERVISOR_MAGIC as i64);
@@ -487,5 +525,8 @@ mod tests {
         assert!(soc.stats.get("rpc.useful_wr_bytes") >= 8192);
         let got = soc.dram_read(0x80_0000, 16).to_vec();
         assert_eq!(got, (0..16u8).collect::<Vec<_>>());
+        // the completion wait is interrupt-driven, not a status spin: the
+        // core parks on wfi and the PLIC's MEIP (DMA line) wakes it
+        assert!(soc.stats.get("cpu.wfi_cycles") > 0, "core slept through the transfer");
     }
 }

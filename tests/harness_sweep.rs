@@ -82,8 +82,10 @@ fn parallel_and_serial_sweeps_are_bit_identical() {
         let sv: Vec<_> = s.stats.iter().collect();
         assert_eq!(pv, sv, "{}: full stats registries must match", p.name);
     }
-    // and therefore the serialized reports are byte-identical
-    assert_eq!(SweepReport::new(par).to_json(), SweepReport::new(ser).to_json());
+    // and therefore the architectural reports are byte-identical (the
+    // full report also carries host wall-clock throughput, which is
+    // legitimately scheduling-dependent)
+    assert_eq!(SweepReport::new(par).to_json_arch(), SweepReport::new(ser).to_json_arch());
 }
 
 /// The acceptance grid for the Sv39 subsystem: bare-metal × supervisor
@@ -109,7 +111,7 @@ fn supervisor_grid_sweeps_deterministically() {
         let sv: Vec<_> = s.stats.iter().collect();
         assert_eq!(pv, sv, "{}: parallel≡serial stats", p.name);
     }
-    assert_eq!(SweepReport::new(par.clone()).to_json(), SweepReport::new(ser).to_json());
+    assert_eq!(SweepReport::new(par.clone()).to_json_arch(), SweepReport::new(ser).to_json_arch());
 
     // the supervisor scenarios boot to S-mode, survive the timer tick and
     // the demand faults, and halt cleanly on both TLB sizes
@@ -131,6 +133,43 @@ fn supervisor_grid_sweeps_deterministically() {
     for r in par.iter().filter(|r| r.workload == "nop") {
         assert_eq!(r.stats.get("mmu.walks"), 0, "{}", r.name);
     }
+}
+
+/// The event-horizon scheduler's contract at sweep level: a grid run with
+/// elision and one with `--no-elide` produce byte-identical architectural
+/// reports (cycles, halt state, UART-visible behavior, every non-`sched.*`
+/// stat) — the same diff CI performs on every push.
+#[test]
+fn elided_and_unelided_sweeps_agree_architecturally() {
+    let mk = |elide: bool| {
+        let mut base = CheshireConfig::neo();
+        base.elide_idle = elide;
+        let mut g = SweepGrid::new(base);
+        g.workloads = vec![
+            Workload::Wfi { window: 50_000 },
+            Workload::Mem { len: 8 * 1024, reps: 2, max_burst: 2048 },
+            Workload::Supervisor { demand_pages: 2, timer_delta: 30_000 },
+        ];
+        g.backends = vec![MemBackend::Rpc, MemBackend::HyperRam];
+        g.max_cycles = 8_000_000;
+        g
+    };
+    let on = harness::run_parallel(mk(true).scenarios(), 4);
+    let off = harness::run_parallel(mk(false).scenarios(), 4);
+    let wfi_elided: u64 = on
+        .iter()
+        .filter(|r| r.workload == "wfi" || r.workload == "supervisor")
+        .map(|r| r.stats.get("sched.elided_cycles"))
+        .sum();
+    assert!(wfi_elided > 10_000, "idle spans were actually fast-forwarded ({wfi_elided})");
+    for r in &off {
+        assert_eq!(r.stats.get("sched.elided_cycles"), 0, "{}: --no-elide elides nothing", r.name);
+    }
+    assert_eq!(
+        SweepReport::new(on).to_json_arch(),
+        SweepReport::new(off).to_json_arch(),
+        "elided ≡ unelided, bit for bit"
+    );
 }
 
 #[test]

@@ -509,3 +509,101 @@ mod sv39_props {
         });
     }
 }
+
+/// Event-horizon elision equivalence: for random (workload, backend,
+/// TLB-size) points, a run with idle elision and one with the reference
+/// cycle loop must be architecturally indistinguishable — identical UART
+/// output, identical DRAM and SPM contents, identical halt cycle and halt
+/// state, and identical stats modulo the scheduler's own `sched.*`
+/// counters.
+mod elision_equivalence {
+    use cheshire::harness::Workload;
+    use cheshire::platform::config::MemBackend;
+    use cheshire::platform::memmap::DRAM_BASE;
+    use cheshire::platform::{CheshireConfig, Soc};
+    use cheshire::sim::prop::{cases, Rng};
+
+    /// FNV-1a over a byte slice — cheap full-memory fingerprint.
+    fn fnv(bytes: &[u8]) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
+    fn random_point(rng: &mut Rng) -> (Workload, MemBackend, usize) {
+        let wl = match rng.below(5) {
+            0 => Workload::Wfi { window: rng.range(20_000, 60_000) },
+            1 => Workload::Nop { window: rng.range(10_000, 30_000) },
+            2 => Workload::Mem {
+                len: 1 << rng.range(9, 13) as u32,
+                reps: rng.range(1, 3) as u32,
+                max_burst: 2048,
+            },
+            3 => Workload::TwoMm { n: 8 },
+            _ => Workload::Supervisor {
+                demand_pages: rng.range(1, 4) as u32,
+                timer_delta: rng.range(5_000, 60_000) as u32,
+            },
+        };
+        let backend = if rng.bool() { MemBackend::Rpc } else { MemBackend::HyperRam };
+        let tlb = *rng.pick(&[16usize, 4, 2]);
+        (wl, backend, tlb)
+    }
+
+    /// Everything architecturally observable about one finished run.
+    #[derive(Debug, PartialEq)]
+    struct Fingerprint {
+        cycles: u64,
+        halted: bool,
+        uart: String,
+        dram_fnv: u64,
+        spm_fnv: u64,
+        arch_stats: Vec<(&'static str, u64)>,
+    }
+
+    /// One run → (architectural fingerprint, cycles actually elided).
+    fn fingerprint(wl: &Workload, backend: MemBackend, tlb: usize, elide: bool) -> (Fingerprint, u64) {
+        let mut cfg = CheshireConfig::neo();
+        cfg.backend = backend;
+        cfg.tlb_entries = tlb;
+        cfg.elide_idle = elide;
+        let mut soc = Soc::new(cfg);
+        let img = wl.stage(&mut soc);
+        soc.preload(&img, DRAM_BASE);
+        let cycles = match wl.fixed_window() {
+            Some(window) => {
+                soc.run_cycles(window);
+                window
+            }
+            None => soc.run(8_000_000),
+        };
+        let fp = Fingerprint {
+            cycles,
+            halted: soc.cpu.halted,
+            uart: soc.uart.borrow().tx_string(),
+            dram_fnv: fnv(soc.dram_raw()),
+            spm_fnv: fnv(soc.llc.spm_raw()),
+            arch_stats: soc.stats.iter().filter(|(k, _)| !k.starts_with("sched.")).collect(),
+        };
+        (fp, soc.stats.get("sched.elided_cycles"))
+    }
+
+    #[test]
+    fn elided_runs_are_bit_identical_to_reference() {
+        cases(6, 0xE11DE, |rng| {
+            let (wl, backend, tlb) = random_point(rng);
+            let (on, _) = fingerprint(&wl, backend, tlb, true);
+            let (off, off_elided) = fingerprint(&wl, backend, tlb, false);
+            assert_eq!(on, off, "{wl:?}/{backend}/tlb{tlb}: elided ≡ unelided");
+            assert_eq!(off_elided, 0, "--no-elide must elide nothing");
+        });
+        // a known-idle point must actually fast-forward (the equivalence
+        // above would hold vacuously if elision never engaged)
+        let wl = Workload::Wfi { window: 50_000 };
+        let (_, elided) = fingerprint(&wl, MemBackend::Rpc, 16, true);
+        assert!(elided > 10_000, "elision engaged ({elided} cycles)");
+    }
+}
