@@ -1,0 +1,102 @@
+//! Memory-hierarchy bandwidth under mixed-traffic contention — the
+//! non-blocking-hierarchy acceptance bench.
+//!
+//! Runs the `contention` workload (CPU streaming over the SPM while the
+//! DMA engine and the matmul DSA concurrently hammer DRAM through a
+//! half-cache LLC) across the memory-level-parallelism axis:
+//!
+//! * the `--blocking` baseline (single transaction, single fill, single
+//!   outstanding burst at every layer — the pre-MSHR hierarchy), and
+//! * the non-blocking hierarchy at MSHR depths 1, 2, 4, 8.
+//!
+//! The metric is **aggregate DRAM bytes per simulated cycle** (read +
+//! write useful bytes at the memory controller over the whole run).
+//! Functional outputs are bit-identical across all rows (asserted at
+//! tier-1 in `tests/platform_integration.rs`); only timing moves.
+//!
+//! Emits `BENCH_membw.json` (cwd) and enforces the acceptance gate:
+//! non-blocking (mshrs = 8) must reach ≥1.3× the blocking baseline's
+//! bytes/cycle. Override with `MEMBW_BENCH_MIN_SPEEDUP` for throttled
+//! runners (the metric is simulated-time, so it should be exact, but the
+//! knob mirrors the scheduler bench's escape hatch).
+
+use cheshire::harness::{Scenario, ScenarioResult, Workload};
+use cheshire::model::benchkit::{f2, f3, Table};
+use cheshire::platform::CheshireConfig;
+
+fn run_point(blocking: bool, mshrs: usize, outstanding: usize) -> ScenarioResult {
+    let mut cfg = CheshireConfig::neo();
+    cfg.spm_way_mask = 0x0f; // 64 KiB SPM + 64 KiB cache
+    cfg.mem_blocking = blocking;
+    cfg.llc_mshrs = mshrs;
+    cfg.max_outstanding = outstanding;
+    // 32 KiB CPU window + 32 KiB DMA destination fill the SPM exactly;
+    // the DMA's 32 KiB DRAM source and the DSA's three 4 KiB operand
+    // tiles stream through the 64 KiB cache as line fills.
+    let wl = Workload::Contention { dma_kib: 32, tile_n: 32, jobs: 3, spm_kib: 32 };
+    let r = Scenario::new(cfg, wl, 80_000_000).run();
+    assert!(r.halted, "{}: contention must halt", r.name);
+    assert_eq!(r.stats.get("rpc.dev_violations"), 0, "{}", r.name);
+    r
+}
+
+fn main() {
+    let points: Vec<(&str, bool, usize, usize)> = vec![
+        ("blocking", true, 1, 1),
+        ("mshr1", false, 1, 4),
+        ("mshr2", false, 2, 4),
+        ("mshr4", false, 4, 4),
+        ("mshr8", false, 8, 4),
+    ];
+
+    let mut t = Table::new(
+        "Memory-hierarchy bandwidth — contention workload (CPU + DMA + matmul DSA)",
+        &["mode", "cycles", "dram bytes", "B/cyc", "vs blocking"],
+    );
+    let mut json = String::from("{\n  \"points\": [\n");
+    let mut base_bpc = 0.0f64;
+    let mut best_bpc = 0.0f64;
+    for (i, (name, blocking, mshrs, outstanding)) in points.iter().enumerate() {
+        let r = run_point(*blocking, *mshrs, *outstanding);
+        let bpc = r.dram_bytes_per_cycle();
+        if *blocking {
+            base_bpc = bpc;
+        }
+        best_bpc = best_bpc.max(bpc);
+        let speedup = if base_bpc > 0.0 { bpc / base_bpc } else { 1.0 };
+        t.row(&[
+            name.to_string(),
+            r.cycles.to_string(),
+            r.dram_bytes().to_string(),
+            f3(bpc),
+            f2(speedup),
+        ]);
+        json.push_str(&format!(
+            "    {{\"mode\": \"{name}\", \"blocking\": {blocking}, \"mshrs\": {mshrs}, \
+             \"outstanding\": {outstanding}, \"cycles\": {}, \"dram_bytes\": {}, \
+             \"bytes_per_cycle\": {}, \"speedup_vs_blocking\": {}}}{}\n",
+            r.cycles,
+            r.dram_bytes(),
+            bpc,
+            speedup,
+            if i + 1 == points.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    t.print();
+
+    std::fs::write("BENCH_membw.json", &json).expect("write BENCH_membw.json");
+    println!("\nwritten: BENCH_membw.json");
+
+    let gate: f64 = std::env::var("MEMBW_BENCH_MIN_SPEEDUP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.3);
+    let speedup = best_bpc / base_bpc;
+    assert!(
+        speedup >= gate,
+        "non-blocking hierarchy must reach ≥{gate}× the blocking baseline's \
+         aggregate DRAM bytes/cycle (got {speedup:.2}×)"
+    );
+    println!("non-blocking vs blocking aggregate DRAM bandwidth: {speedup:.2}× (gate: ≥{gate}×)");
+}

@@ -4,6 +4,13 @@
 //! latency; used for the SPM path, boot ROM backing, and as the golden
 //! endpoint in interconnect tests. One beat per cycle once the latency has
 //! elapsed — i.e. an idealized SRAM macro behind an AXI interface.
+//!
+//! Reads are *pipelined*: up to `max_reads` bursts may be accepted while a
+//! prior burst is still streaming, each burst's access latency counting
+//! down concurrently (responses stay in request order — the macro has one
+//! read port). Independent read and write bursts always progress
+//! concurrently. `max_reads = 1` restores the old fully blocking read
+//! path (the `--blocking` memory-hierarchy baseline).
 
 use super::port::AxiBus;
 use super::types::{beat_addr, Ar, Aw, Resp, B, R};
@@ -11,10 +18,11 @@ use crate::sim::{Activity, Component, Cycle, Stats};
 use std::collections::VecDeque;
 
 #[derive(Debug)]
-enum RdState {
-    Idle,
-    Latency { ar: Ar, left: u32 },
-    Stream { ar: Ar, beat: u32 },
+struct RdJob {
+    ar: Ar,
+    beat: u32,
+    /// Remaining access-latency cycles (counts down while queued).
+    left: u32,
 }
 
 /// Memory subordinate.
@@ -23,13 +31,16 @@ pub struct MemSub {
     data: Vec<u8>,
     width: usize,
     latency: u32,
-    rd: RdState,
+    /// Pipelined reads in flight, front streaming (in-order responses).
+    rd: VecDeque<RdJob>,
     /// Writes in flight: accepted AW waiting for beats.
     wr: VecDeque<(Aw, u32)>,
     /// A B response that could not be pushed last cycle (backpressure).
     pending_b: Option<B>,
     /// True if this region rejects writes (e.g. boot ROM).
     pub read_only: bool,
+    /// Read bursts that may be in flight at once (1 = blocking baseline).
+    pub max_reads: usize,
     /// Stats key prefix for accounting (e.g. "spm").
     pub stat_key: &'static str,
 }
@@ -41,10 +52,11 @@ impl MemSub {
             data: vec![0; size],
             width,
             latency,
-            rd: RdState::Idle,
+            rd: VecDeque::new(),
             wr: VecDeque::new(),
             pending_b: None,
             read_only: false,
+            max_reads: 4,
             stat_key: "memsub",
         }
     }
@@ -124,48 +136,52 @@ impl MemSub {
             }
         }
 
-        // --- reads: latency then one beat per cycle ---
-        match std::mem::replace(&mut self.rd, RdState::Idle) {
-            RdState::Idle => {
-                let addressed = matches!(bus.ar.borrow().peek(), Some(a) if a.addr >= self.base && a.addr < self.base + self.data.len() as u64);
-                if addressed {
-                    let ar = bus.ar.borrow_mut().pop().unwrap();
-                    self.rd = RdState::Latency { ar, left: self.latency };
-                }
+        // --- reads: pipelined latency, then one beat per cycle in order ---
+        if self.rd.len() < self.max_reads.max(1) {
+            let addressed = matches!(bus.ar.borrow().peek(), Some(a) if a.addr >= self.base && a.addr < self.base + self.data.len() as u64);
+            if addressed {
+                let ar = bus.ar.borrow_mut().pop().unwrap();
+                // +2 reproduces the old Idle→Latency→Stream pacing exactly:
+                // the countdown below runs on the accept tick too, and the
+                // old FSM spent one tick on each state transition, putting
+                // the first beat at accept + latency + 2
+                self.rd.push_back(RdJob { ar, beat: 0, left: self.latency + 2 });
             }
-            RdState::Latency { ar, left } => {
-                if left == 0 {
-                    self.rd = RdState::Stream { ar, beat: 0 };
-                    // fall through next cycle (keeps latency ≥1 honest)
-                } else {
-                    self.rd = RdState::Latency { ar, left: left - 1 };
-                }
-            }
-            RdState::Stream { ar, beat } => {
-                if bus.r.borrow().can_push() {
-                    let addr = beat_addr(ar.addr, ar.size, ar.burst, beat);
-                    let mut data = vec![0u8; self.width];
-                    let resp = if let Some(off) = self.off(addr) {
-                        let n = (1usize << ar.size).min(self.width);
-                        let lane0 = (addr as usize) % self.width;
-                        for i in 0..n {
-                            if off + i < self.data.len() && lane0 + i < self.width {
-                                data[lane0 + i] = self.data[off + i];
-                            }
+        }
+        let mut stream_done = false;
+        if let Some(job) = self.rd.front_mut() {
+            if job.left == 0 && bus.r.borrow().can_push() {
+                let addr = beat_addr(job.ar.addr, job.ar.size, job.ar.burst, job.beat);
+                let mut data = vec![0u8; self.width];
+                let mut resp = Resp::SlvErr;
+                let o = addr.checked_sub(self.base).map(|o| o as usize);
+                if let Some(off) = o.filter(|&o| o < self.data.len()) {
+                    let n = (1usize << job.ar.size).min(self.width);
+                    let lane0 = (addr as usize) % self.width;
+                    for i in 0..n {
+                        if off + i < self.data.len() && lane0 + i < self.width {
+                            data[lane0 + i] = self.data[off + i];
                         }
-                        stats.add("memsub.rd_bytes", n as u64);
-                        Resp::Okay
-                    } else {
-                        Resp::SlvErr
-                    };
-                    let last = beat == ar.len as u32;
-                    bus.r.borrow_mut().push(R { id: ar.id, data, resp, last });
-                    if !last {
-                        self.rd = RdState::Stream { ar, beat: beat + 1 };
                     }
-                } else {
-                    self.rd = RdState::Stream { ar, beat };
+                    stats.add("memsub.rd_bytes", n as u64);
+                    resp = Resp::Okay;
                 }
+                let last = job.beat == job.ar.len as u32;
+                bus.r.borrow_mut().push(R { id: job.ar.id, data, resp, last });
+                if last {
+                    stream_done = true;
+                } else {
+                    job.beat += 1;
+                }
+            }
+        }
+        if stream_done {
+            self.rd.pop_front();
+        }
+        // every queued read's access latency counts down concurrently
+        for job in self.rd.iter_mut() {
+            if job.left > 0 {
+                job.left -= 1;
             }
         }
     }
@@ -176,7 +192,7 @@ impl Component for MemSub {
     /// response remain — new work arrives only via the (separately
     /// checked) AXI channels.
     fn activity(&self, _now: Cycle) -> Activity {
-        if matches!(self.rd, RdState::Idle) && self.wr.is_empty() && self.pending_b.is_none() {
+        if self.rd.is_empty() && self.wr.is_empty() && self.pending_b.is_none() {
             Activity::Quiescent
         } else {
             Activity::Busy
@@ -237,6 +253,37 @@ mod tests {
         }
         assert_eq!(bus.b.borrow_mut().pop().unwrap().resp, Resp::SlvErr);
         assert_eq!(mem.mem()[0], 0);
+    }
+
+    /// Pipelined reads: a second AR is accepted while the first burst's
+    /// latency is still counting, so the two overlap — and responses stay
+    /// in request order. `max_reads = 1` restores the blocking timing.
+    #[test]
+    fn pipelined_reads_overlap_latency_in_order() {
+        let run_mode = |max_reads: usize| -> (u64, Vec<u32>) {
+            let bus = axi_bus(4);
+            let mut mem = MemSub::new(0, 0x100, 8, 10);
+            mem.max_reads = max_reads;
+            let mut stats = Stats::new();
+            bus.ar.borrow_mut().push(Ar { id: 0, addr: 0, len: 0, size: 3, burst: Burst::Incr, qos: 0 });
+            bus.ar.borrow_mut().push(Ar { id: 1, addr: 8, len: 0, size: 3, burst: Burst::Incr, qos: 0 });
+            let mut ids = Vec::new();
+            for t in 0..200u64 {
+                mem.tick(&bus, &mut stats);
+                while let Some(r) = bus.r.borrow_mut().pop() {
+                    ids.push(r.id);
+                }
+                if ids.len() == 2 {
+                    return (t, ids);
+                }
+            }
+            panic!("reads never completed");
+        };
+        let (fast, ids_nb) = run_mode(4);
+        let (slow, ids_blk) = run_mode(1);
+        assert_eq!(ids_nb, vec![0, 1], "in-order responses");
+        assert_eq!(ids_blk, vec![0, 1]);
+        assert!(fast < slow, "pipelined ({fast}) must beat blocking ({slow})");
     }
 
     #[test]

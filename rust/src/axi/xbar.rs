@@ -14,7 +14,8 @@
 
 use super::port::AxiBus;
 use super::types::{Resp, B, R};
-use crate::sim::{Activity, Component, Cycle, Stats};
+use crate::sim::bw::{sub_r_beats_key, sub_w_beats_key};
+use crate::sim::{Activity, BwTracker, Component, Cycle, Stats};
 use std::collections::VecDeque;
 
 /// Bits of manager-local ID space preserved through the crossbar.
@@ -29,8 +30,24 @@ pub struct AddrRange {
 }
 
 impl AddrRange {
+    /// Whether `addr` falls inside this range. Written as a subtraction
+    /// after the lower-bound check so ranges ending at the top of the
+    /// 64-bit address space cannot overflow `base + size`.
     pub fn contains(&self, addr: u64) -> bool {
-        addr >= self.base && addr < self.base + self.size
+        addr >= self.base && addr - self.base < self.size
+    }
+
+    /// Exclusive end of the range, `None` if it reaches past `u64::MAX`.
+    fn end(&self) -> Option<u64> {
+        self.base.checked_add(self.size)
+    }
+
+    /// Whether two ranges share any address (overflow-safe: a range whose
+    /// end wraps extends to the top of the address space).
+    fn overlaps(&self, other: &AddrRange) -> bool {
+        let a_below_b = matches!(self.end(), Some(e) if e <= other.base);
+        let b_below_a = matches!(other.end(), Some(e) if e <= self.base);
+        !(a_below_b || b_below_a)
     }
 }
 
@@ -76,6 +93,8 @@ pub struct Xbar {
     rr_aw: Vec<usize>,
     rr_ar: Vec<usize>,
     err: VecDeque<ErrJob>,
+    /// Per-manager bytes and request-latency accounting (`bw.*` stats).
+    bw: BwTracker,
 }
 
 impl Xbar {
@@ -84,6 +103,23 @@ impl Xbar {
         assert_eq!(cfg.n_subordinates, sub.len());
         for r in &map {
             assert!(r.sub < sub.len(), "address map points past subordinate list");
+        }
+        // Overlapping entries would make `decode` silently pick whichever
+        // comes first — reject them loudly at construction time instead.
+        for (i, a) in map.iter().enumerate() {
+            for b in map.iter().skip(i + 1) {
+                assert!(
+                    !a.overlaps(b),
+                    "crossbar address map entries overlap: \
+                     [{:#x}, +{:#x}) -> sub {} and [{:#x}, +{:#x}) -> sub {}",
+                    a.base,
+                    a.size,
+                    a.sub,
+                    b.base,
+                    b.size,
+                    b.sub
+                );
+            }
         }
         let ns = sub.len();
         let nm = mgr.len();
@@ -97,6 +133,7 @@ impl Xbar {
             rr_aw: vec![0; ns],
             rr_ar: vec![0; ns],
             err: VecDeque::new(),
+            bw: BwTracker::new(),
         }
     }
 
@@ -104,20 +141,21 @@ impl Xbar {
         self.map.iter().find(|r| r.contains(addr)).map(|r| r.sub)
     }
 
-    /// Advance the crossbar by one cycle.
-    pub fn tick(&mut self, stats: &mut Stats) {
-        self.route_aw(stats);
+    /// Advance the crossbar by one cycle. `now` timestamps the bandwidth
+    /// accounting (request-latency histograms are measured here).
+    pub fn tick(&mut self, now: Cycle, stats: &mut Stats) {
+        self.route_aw(now, stats);
         self.route_w(stats);
-        self.route_ar(stats);
-        self.route_b(stats);
-        self.route_r(stats);
+        self.route_ar(now, stats);
+        self.route_b(now, stats);
+        self.route_r(now, stats);
         self.service_errors();
     }
 
     /// AW arbitration: decode each manager's head-of-line AW once (O(M)),
     /// then grant per subordinate round-robin (O(S)) — the restructuring
     /// from O(M×S) peeks is the §Perf L3 hot-path fix.
-    fn route_aw(&mut self, stats: &mut Stats) {
+    fn route_aw(&mut self, now: Cycle, stats: &mut Stats) {
         let nm = self.mgr.len();
         // head-of-line decode per manager: usize::MAX = no AW pending
         let mut want = [usize::MAX; 64];
@@ -146,6 +184,7 @@ impl Xbar {
                 if want[m] == s {
                     let mut a = self.mgr[m].aw.borrow_mut().pop().unwrap();
                     a.id = ((m as u32) << ID_BITS) | (a.id & ((1 << ID_BITS) - 1));
+                    self.bw.write_issued(a.id, m, a.bytes(), now, stats);
                     self.sub[s].aw.borrow_mut().push(a);
                     self.w_route[s].push_back(m);
                     self.w_target[m].push_back(s);
@@ -177,6 +216,7 @@ impl Xbar {
                 let last = beat.last;
                 self.sub[s].w.borrow_mut().push(beat);
                 stats.bump("xbar.w");
+                stats.bump(sub_w_beats_key(s));
                 if last {
                     self.w_route[s].pop_front();
                     self.w_target[m].pop_front();
@@ -186,7 +226,7 @@ impl Xbar {
     }
 
     /// AR arbitration (like AW: O(M) decode + O(S) grant).
-    fn route_ar(&mut self, stats: &mut Stats) {
+    fn route_ar(&mut self, now: Cycle, stats: &mut Stats) {
         let nm = self.mgr.len();
         let mut want = [usize::MAX; 64];
         for m in 0..nm {
@@ -213,6 +253,7 @@ impl Xbar {
                 if want[m] == s {
                     let mut a = self.mgr[m].ar.borrow_mut().pop().unwrap();
                     a.id = ((m as u32) << ID_BITS) | (a.id & ((1 << ID_BITS) - 1));
+                    self.bw.read_issued(a.id, m, a.bytes(), now, stats);
                     self.sub[s].ar.borrow_mut().push(a);
                     self.rr_ar[s] = (m + 1) % nm;
                     stats.bump("xbar.ar");
@@ -223,7 +264,7 @@ impl Xbar {
     }
 
     /// Route B responses back by ID prefix.
-    fn route_b(&mut self, stats: &mut Stats) {
+    fn route_b(&mut self, now: Cycle, stats: &mut Stats) {
         for s in 0..self.sub.len() {
             let Some(m) = self.sub[s].b.borrow().peek().map(|b| (b.id >> ID_BITS) as usize)
             else {
@@ -233,6 +274,7 @@ impl Xbar {
                 continue;
             }
             let mut b = self.sub[s].b.borrow_mut().pop().unwrap();
+            self.bw.write_done(b.id, now, stats);
             b.id &= (1 << ID_BITS) - 1;
             self.mgr[m].b.borrow_mut().push(b);
             stats.bump("xbar.b");
@@ -240,7 +282,7 @@ impl Xbar {
     }
 
     /// Route R beats back by ID prefix.
-    fn route_r(&mut self, stats: &mut Stats) {
+    fn route_r(&mut self, now: Cycle, stats: &mut Stats) {
         for s in 0..self.sub.len() {
             let Some(m) = self.sub[s].r.borrow().peek().map(|r| (r.id >> ID_BITS) as usize)
             else {
@@ -250,9 +292,13 @@ impl Xbar {
                 continue;
             }
             let mut r = self.sub[s].r.borrow_mut().pop().unwrap();
+            if r.last {
+                self.bw.read_done(r.id, now, stats);
+            }
             r.id &= (1 << ID_BITS) - 1;
             self.mgr[m].r.borrow_mut().push(r);
             stats.bump("xbar.r");
+            stats.bump(sub_r_beats_key(s));
         }
     }
 
@@ -356,17 +402,18 @@ mod tests {
         m0.w.borrow_mut().push(W { data: (0..8).collect(), strb: full_strb(8), last: false });
         m0.w.borrow_mut().push(W { data: (8..16).collect(), strb: full_strb(8), last: true });
 
-        for _ in 0..50 {
-            xbar.tick(&mut stats);
+        for now in 0..50 {
+            xbar.tick(now, &mut stats);
             mem.tick(&s0, &mut stats);
         }
         let b = m0.b.borrow_mut().pop().expect("write response");
         assert_eq!(b.id, 1);
         assert_eq!(b.resp, Resp::Okay);
+        assert_eq!(stats.get("bw.wr_reqs"), 1, "write latency recorded");
 
         m0.ar.borrow_mut().push(Ar { id: 2, addr: 0x8000_0100, len: 1, size: 3, burst: Burst::Incr, qos: 0 });
-        for _ in 0..50 {
-            xbar.tick(&mut stats);
+        for now in 50..100 {
+            xbar.tick(now, &mut stats);
             mem.tick(&s0, &mut stats);
         }
         let r0 = m0.r.borrow_mut().pop().expect("first beat");
@@ -399,8 +446,8 @@ mod tests {
                 m.w.borrow_mut().push(W { data: vec![val; 8], strb: full_strb(8), last: i == 3 });
             }
         }
-        for _ in 0..100 {
-            xbar.tick(&mut stats);
+        for now in 0..100 {
+            xbar.tick(now, &mut stats);
             mem.tick(&s0, &mut stats);
         }
         assert!(m0.b.borrow_mut().pop().is_some());
@@ -422,8 +469,8 @@ mod tests {
         );
         let mut stats = Stats::new();
         m0.ar.borrow_mut().push(Ar { id: 5, addr: 0xdead_0000, len: 2, size: 3, burst: Burst::Incr, qos: 0 });
-        for _ in 0..20 {
-            xbar.tick(&mut stats);
+        for now in 0..20 {
+            xbar.tick(now, &mut stats);
         }
         let mut beats = 0;
         let mut last_seen = false;
@@ -453,8 +500,8 @@ mod tests {
         m0.aw.borrow_mut().push(Aw { id: 9, addr: 0xdead_0000, len: 1, size: 3, burst: Burst::Incr, qos: 0 });
         m0.w.borrow_mut().push(W { data: vec![0; 8], strb: 0xff, last: false });
         m0.w.borrow_mut().push(W { data: vec![0; 8], strb: 0xff, last: true });
-        for _ in 0..20 {
-            xbar.tick(&mut stats);
+        for now in 0..20 {
+            xbar.tick(now, &mut stats);
         }
         let b = m0.b.borrow_mut().pop().expect("decerr B");
         assert_eq!(b.resp, Resp::DecErr);
@@ -483,13 +530,72 @@ mod tests {
             m0.aw.borrow_mut().push(Aw { id: 0, addr, len: 0, size: 3, burst: Burst::Incr, qos: 0 });
             m0.w.borrow_mut().push(W { data: vec![v; 8], strb: 0xff, last: true });
         }
-        for _ in 0..100 {
-            xbar.tick(&mut stats);
+        for now in 0..100 {
+            xbar.tick(now, &mut stats);
             mem0.tick(&s0, &mut stats);
             mem1.tick(&s1, &mut stats);
         }
         assert_eq!(mem0.mem()[0], 1);
         assert_eq!(mem1.mem()[0], 2);
         assert_eq!(m0.b.borrow().len(), 2);
+        // per-link busy beats: one W beat landed on each subordinate link
+        assert_eq!(stats.get("bw.s0.w_beats"), 1);
+        assert_eq!(stats.get("bw.s1.w_beats"), 1);
+    }
+
+    /// Regression: a range ending exactly at the top of the 64-bit address
+    /// space must not overflow in `contains` (the old `base + size` form
+    /// panicked in debug builds and wrapped in release).
+    #[test]
+    fn addr_range_at_top_of_address_space() {
+        let r = AddrRange { base: u64::MAX - 0xfff, size: 0x1000, sub: 0 };
+        assert!(r.contains(u64::MAX));
+        assert!(r.contains(u64::MAX - 0xfff));
+        assert!(!r.contains(u64::MAX - 0x1000));
+        assert!(!r.contains(0));
+        // and a low range still behaves
+        let lo = AddrRange { base: 0x1000, size: 0x1000, sub: 0 };
+        assert!(lo.contains(0x1000) && lo.contains(0x1fff));
+        assert!(!lo.contains(0x2000) && !lo.contains(0xfff));
+    }
+
+    /// Overlapping address-map entries are a wiring bug: `decode` would
+    /// silently pick the first match, so construction must reject them.
+    #[test]
+    #[should_panic(expected = "crossbar address map entries overlap")]
+    fn overlapping_map_entries_panic() {
+        let m0 = axi_bus(2);
+        let s0 = axi_bus(2);
+        let s1 = axi_bus(2);
+        let _ = Xbar::new(
+            cfg(1, 2),
+            vec![m0],
+            vec![s0, s1],
+            vec![
+                AddrRange { base: 0x1000, size: 0x2000, sub: 0 },
+                AddrRange { base: 0x2000, size: 0x1000, sub: 1 },
+            ],
+        );
+    }
+
+    /// Adjacent (touching but non-overlapping) entries stay legal, even
+    /// against a range reaching the top of the address space.
+    #[test]
+    fn adjacent_map_entries_are_legal() {
+        let m0 = axi_bus(2);
+        let s0 = axi_bus(2);
+        let s1 = axi_bus(2);
+        let xbar = Xbar::new(
+            cfg(1, 2),
+            vec![m0],
+            vec![s0, s1],
+            vec![
+                AddrRange { base: 0x1000, size: 0x1000, sub: 0 },
+                AddrRange { base: u64::MAX - 0xfff, size: 0x1000, sub: 1 },
+            ],
+        );
+        assert_eq!(xbar.decode(0x1800), Some(0));
+        assert_eq!(xbar.decode(u64::MAX), Some(1));
+        assert_eq!(xbar.decode(0x3000), None);
     }
 }

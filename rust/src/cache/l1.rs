@@ -95,6 +95,28 @@ impl L1Cache {
             .unwrap()
     }
 
+    /// Whether `addr` is present, without touching LRU state or stats —
+    /// used by the LLC's MSHR lookahead, which must not perturb the
+    /// hit/miss accounting of the beats that later consume the line.
+    pub fn lookup(&self, addr: u64) -> bool {
+        self.find(addr).is_some()
+    }
+
+    /// Address, data, and dirtiness of the victim line that
+    /// `refill(addr, …)` will evict — queried *at refill time* so the
+    /// writeback and the eviction pick the same line even when LRU state
+    /// moved while the fill was in flight (hit-under-miss).
+    pub fn victim_info(&self, addr: u64) -> Option<(u64, Vec<u8>, bool)> {
+        let i = self.victim_idx(addr);
+        if !self.lines[i].valid {
+            return None;
+        }
+        let set = self.set_of(addr);
+        let vaddr = (self.lines[i].tag * self.sets as u64 + set as u64) * LINE as u64;
+        let off = i * LINE;
+        Some((vaddr, self.data[off..off + LINE].to_vec(), self.lines[i].dirty))
+    }
+
     /// Address + data of the victim line that `refill(addr, …)` will evict.
     pub fn victim(&self, addr: u64) -> Option<(u64, Vec<u8>)> {
         let i = self.victim_idx(addr);
@@ -211,6 +233,26 @@ mod tests {
         }
         let (vaddr, _) = c.victim((8 * set_stride) as u64).unwrap();
         assert_eq!(vaddr, 0);
+    }
+
+    #[test]
+    fn lookup_and_victim_info_do_not_touch_stats() {
+        let (mut c, mut s) = mk();
+        assert!(!c.lookup(0x40));
+        c.refill(0x40, &[3u8; LINE]);
+        assert!(c.lookup(0x40));
+        assert_eq!(s.get("l1d.hit") + s.get("l1d.miss"), 0, "lookup is stats-free");
+        c.probe(0x40, &mut s);
+        c.write(0x40, &[9u8; 8]);
+        // fill the set so 0x40's set has a dirty victim
+        let set_stride = 32 * 1024 / 8;
+        for k in 1..8 {
+            c.refill((0x40 + k * set_stride) as u64, &[k as u8; LINE]);
+        }
+        let (vaddr, vdata, dirty) = c.victim_info((0x40 + 8 * set_stride) as u64).unwrap();
+        assert_eq!(vaddr, 0x40);
+        assert!(dirty);
+        assert_eq!(&vdata[..8], &[9u8; 8]);
     }
 
     #[test]

@@ -12,20 +12,63 @@
 //! passed through untouched, adding one pipeline cycle — which is how the
 //! Fig. 8 bus-utilization experiments reach the raw controller.
 //!
+//! # Non-blocking operation (MSHRs)
+//!
+//! The LLC is a *non-blocking* cache: a configurable file of miss-status
+//! holding registers (`LlcCfg::mshrs`) keeps up to that many line fills in
+//! flight toward the DRAM controller at once. While fills are pending:
+//!
+//! * **hit-under-miss** — reads and writes that hit in the cache or target
+//!   the SPM window keep being served;
+//! * **miss-under-miss** — further misses allocate additional MSHRs, and a
+//!   burst's remaining lines are *looked ahead* so long transfers pipeline
+//!   their fills instead of discovering them one beat at a time;
+//! * **secondary misses merge** — a miss on a line that already has a fill
+//!   in flight attaches to the existing MSHR (`llc.mshr_merge`) instead of
+//!   issuing a duplicate fill;
+//! * **per-AXI-ID ordering holds** — R beats for a given ID are returned
+//!   in request order (younger transactions may only overtake on *other*
+//!   IDs, which AXI4 permits); writes are processed strictly in order.
+//!   The rule also holds across the pass-through/local boundary:
+//!   in-flight pass-through IDs are tracked, and a local transaction on
+//!   a pending pass-through ID (or vice versa) waits at the port.
+//!
+//! Victim writebacks are selected *at refill time* (so LRU movement during
+//! the fill cannot desynchronize the written-back line from the evicted
+//! one) and drain through a writeback queue; a fill for a line with a
+//! still-queued writeback is held back to preserve read-after-write order
+//! at the memory controller.
+//!
+//! `LlcCfg::blocking` restores the pre-MSHR behavior (one transaction and
+//! one fill at a time) as a reachable baseline — the `--blocking` CLI mode
+//! and the `bench_membw` comparison point.
+//!
 //! Runtime reconfiguration is exposed through a [`LlcRegs`] register file
-//! on the Regbus, like the real Cheshire's LLC config port. Converting a
-//! cache way to SPM writes back its dirty lines; the model charges the
-//! cycles via `stats` ("llc.flush_lines") and performs the writeback
-//! functionally at reconfiguration time.
+//! on the Regbus. Converting ways between cache and SPM first *drains* all
+//! in-flight transactions and MSHRs (new requests stall at the port), then
+//! writes back dirty lines through the writeback queue with back-pressure;
+//! the applied-mask register (offset `0xc`) flips only once the flush has
+//! fully landed, so software can poll for completion.
 
 use crate::axi::port::AxiBus;
-use crate::axi::types::{Ar, Aw, Resp, B, R, W};
+use crate::axi::types::{beat_addr, Ar, Aw, Burst, Resp, B, R, W};
 use crate::cache::l1::{L1Cache, Probe, LINE};
 use crate::mem::Sram;
 use crate::sim::{Activity, Component, Cycle, Stats};
 use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::rc::Rc;
+
+/// Base AXI ID for MSHR line fills on the manager port (slot `i` uses
+/// `FILL_ID_BASE + i`). High enough that crossbar-prefixed pass-through
+/// IDs (`mgr_idx << 8 | id`, ≤ 0x7ff for 8 managers) can never collide.
+const FILL_ID_BASE: u32 = 0x1000;
+/// AXI ID of victim/flush writebacks (fire-and-forget; B is sunk).
+const WB_ID: u32 = 0x1fff;
+
+fn is_fill_id(id: u32) -> bool {
+    (FILL_ID_BASE..FILL_ID_BASE + 64).contains(&id)
+}
 
 /// Static LLC geometry.
 #[derive(Debug, Clone)]
@@ -41,6 +84,11 @@ pub struct LlcCfg {
     pub dram_size: u64,
     /// Initial SPM way mask (bit i = way i is SPM). Neo boots all-SPM.
     pub spm_way_mask: u32,
+    /// Miss-status holding registers: concurrent line fills in flight.
+    pub mshrs: usize,
+    /// Blocking fallback: single transaction, single fill at a time (the
+    /// pre-MSHR baseline; selected by `--blocking`).
+    pub blocking: bool,
 }
 
 impl LlcCfg {
@@ -52,6 +100,8 @@ impl LlcCfg {
             dram_base: 0x8000_0000,
             dram_size: 32 * 1024 * 1024,
             spm_way_mask: 0xff,
+            mshrs: 4,
+            blocking: false,
         }
     }
 
@@ -64,32 +114,69 @@ impl LlcCfg {
 /// [`Llc`] each cycle).
 pub type WayMask = Rc<RefCell<u32>>;
 
+/// An in-flight read transaction.
 #[derive(Debug)]
-enum RdState {
-    Idle,
-    /// Streaming a (possibly cached) read burst.
-    Read { ar: Ar, beat: u32, fill_wait: u32 },
+struct RdTxn {
+    ar: Ar,
+    beat: u32,
+    /// Line this transaction is parked on (fill pending), if any.
+    wait_line: Option<u64>,
 }
 
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum WrKind {
+    /// Served locally (SPM or cached DRAM, per beat).
+    Local,
+    /// Forwarded to the manager port (DRAM with zero cache ways).
+    Pass,
+}
+
+/// An in-flight write transaction (processed strictly in order).
 #[derive(Debug)]
-enum WrState {
-    Idle,
-    Write { aw: Aw, beat: u32, fill_wait: u32 },
+struct WrTxn {
+    aw: Aw,
+    beat: u32,
+    kind: WrKind,
+    wait_line: Option<u64>,
+}
+
+/// One miss-status holding register: a line fill in flight.
+#[derive(Debug)]
+struct Mshr {
+    line: u64,
+    slot: usize,
+    issued: bool,
+    buf: Vec<u8>,
+    done: bool,
+    /// Refill pipeline latency charged after the last beat arrives.
+    delay: u32,
 }
 
 /// The LLC component.
 pub struct Llc {
     pub cfg: LlcCfg,
     mask: WayMask,
+    /// Mask the datapath currently operates with.
     applied_mask: u32,
+    /// MMIO-visible applied mask; flips only after a reconfiguration's
+    /// flush writebacks have fully drained (software polls this).
+    applied_cell: WayMask,
     cache: Option<L1Cache>,
     spm: Sram,
-    rd: RdState,
-    wr: WrState,
-    /// Pass-through in-flight read/write transaction IDs (for stats only).
-    pt_reads: VecDeque<u32>,
-    /// An outstanding line fill: (line address, beats received so far).
-    pending_fill: Option<(u64, Vec<u8>)>,
+    rd_q: VecDeque<RdTxn>,
+    wr_q: VecDeque<WrTxn>,
+    mshrs: Vec<Mshr>,
+    /// Dirty lines awaiting writeback (victim evictions + reconfig flush),
+    /// streamed out with back-pressure.
+    wb_q: VecDeque<(u64, Vec<u8>)>,
+    /// AXI IDs of pass-through reads in flight (completion popped when the
+    /// last R beat is forwarded home). Used to hold back a *local* read on
+    /// the same ID — per-ID order holds across the pass/local boundary.
+    pt_rd_ids: VecDeque<u32>,
+    /// AXI IDs of pass-through writes awaiting their forwarded B.
+    pt_wr_ids: VecDeque<u32>,
+    /// Reconfig flush in progress: cache swapped, wb_q draining.
+    flushing: bool,
     /// Line-fill latency charged per LLC miss, on top of DRAM time.
     pub miss_penalty: u32,
 }
@@ -99,12 +186,16 @@ impl Llc {
         let mask = Rc::new(RefCell::new(cfg.spm_way_mask));
         let llc = Self {
             applied_mask: cfg.spm_way_mask,
+            applied_cell: Rc::new(RefCell::new(cfg.spm_way_mask)),
             cache: Self::mk_cache(&cfg, cfg.spm_way_mask),
             spm: Sram::new(cfg.size, "llc.spm_access"),
-            rd: RdState::Idle,
-            wr: WrState::Idle,
-            pt_reads: VecDeque::new(),
-            pending_fill: None,
+            rd_q: VecDeque::new(),
+            wr_q: VecDeque::new(),
+            mshrs: Vec::new(),
+            wb_q: VecDeque::new(),
+            pt_rd_ids: VecDeque::new(),
+            pt_wr_ids: VecDeque::new(),
+            flushing: false,
             miss_penalty: 2,
             cfg,
             mask: mask.clone(),
@@ -119,9 +210,43 @@ impl Llc {
         })
     }
 
+    /// Shared cell holding the *applied* way mask — what [`LlcRegs`]
+    /// exposes at offset `0xc` so software can poll reconfig completion.
+    pub fn applied_handle(&self) -> WayMask {
+        self.applied_cell.clone()
+    }
+
+    /// Effective MSHR file depth: 1 in blocking mode, otherwise clamped
+    /// to the 64-slot fill-ID window (`FILL_ID_BASE + slot` must stay
+    /// inside the range `is_fill_id` recognizes).
+    fn mshr_cap(&self) -> usize {
+        if self.cfg.blocking {
+            1
+        } else {
+            self.cfg.mshrs.clamp(1, 64)
+        }
+    }
+
+    fn rd_q_cap(&self) -> usize {
+        if self.cfg.blocking {
+            1
+        } else {
+            8
+        }
+    }
+
+    fn wr_q_cap(&self) -> usize {
+        if self.cfg.blocking {
+            1
+        } else {
+            4
+        }
+    }
+
     /// Bytes of SPM currently exposed.
     pub fn spm_bytes(&self) -> usize {
-        (self.applied_mask & ((1 << self.cfg.ways) - 1)).count_ones() as usize * self.cfg.way_bytes()
+        (self.applied_mask & ((1 << self.cfg.ways) - 1)).count_ones() as usize
+            * self.cfg.way_bytes()
     }
 
     fn in_spm(&self, addr: u64) -> bool {
@@ -142,55 +267,75 @@ impl Llc {
         self.spm.raw_mut()
     }
 
-    /// Apply a reconfiguration if the register file changed the mask:
-    /// write back dirty lines of ways that leave cache mode (functionally
-    /// immediate; cycle cost charged to stats).
-    fn maybe_reconfig(&mut self, mgr: &AxiBus, stats: &mut Stats) {
-        let want = *self.mask.borrow();
+    fn want_mask(&self) -> u32 {
+        *self.mask.borrow() & ((1 << self.cfg.ways) - 1)
+    }
+
+    /// Whether a reconfiguration is requested or its flush is draining —
+    /// the port stops accepting new transactions while this holds.
+    fn reconfig_pending(&self) -> bool {
+        self.flushing || self.want_mask() != self.applied_mask
+    }
+
+    /// One cycle of the whole LLC pipeline.
+    pub fn tick(&mut self, sub: &AxiBus, mgr: &AxiBus, stats: &mut Stats) {
+        self.maybe_reconfig(stats);
+        self.forward_responses(sub, mgr, stats);
+        self.collect_fills(mgr);
+        self.complete_mshrs(stats);
+        self.stream_wb(mgr, stats);
+        self.issue_fills(mgr, stats);
+        self.accept(sub, mgr, stats);
+        self.forward_pass_write(sub, mgr);
+        self.write_path(sub, stats);
+        self.read_path(sub, stats);
+        self.lookahead(stats);
+    }
+
+    /// Apply a requested way reconfiguration: drain every in-flight
+    /// transaction and fill, swap the cache, queue dirty lines for
+    /// writeback, and publish the applied mask once the flush lands.
+    fn maybe_reconfig(&mut self, stats: &mut Stats) {
+        if self.flushing {
+            if self.wb_q.is_empty() {
+                self.flushing = false;
+                *self.applied_cell.borrow_mut() = self.applied_mask;
+                stats.bump("llc.reconfig");
+            }
+            return;
+        }
+        let want = self.want_mask();
         if want == self.applied_mask {
             return;
         }
+        // Converting a way to SPM must complete pending MSHRs (and the
+        // transactions parked on them) before the writeback — acceptance
+        // is stalled by `reconfig_pending`, so this drains in finite time.
+        if !(self.rd_q.is_empty()
+            && self.wr_q.is_empty()
+            && self.mshrs.is_empty()
+            && self.wb_q.is_empty())
+        {
+            stats.bump("llc.reconfig_wait");
+            return;
+        }
         if let Some(c) = &self.cache {
-            // Flush: push dirty lines as writes on the manager port over
-            // time would be the faithful path; we account and drop them in
-            // one step (reconfig happens on quiescent systems).
             let dirty = c.dirty_lines();
             stats.add("llc.flush_lines", dirty.len() as u64);
-            for (addr, data) in dirty {
-                // issue as a single-line write on the manager port, fire and forget
-                if mgr.aw.borrow().can_push() {
-                    mgr.aw.borrow_mut().push(Aw { id: 0x3f, addr, len: (LINE / 8 - 1) as u8, size: 3, burst: crate::axi::types::Burst::Incr, qos: 0 });
-                    for i in 0..LINE / 8 {
-                        mgr.w.borrow_mut().push(W {
-                            data: data[i * 8..(i + 1) * 8].to_vec(),
-                            strb: 0xff,
-                            last: i == LINE / 8 - 1,
-                        });
-                    }
-                }
-            }
+            self.wb_q.extend(dirty);
         }
         self.applied_mask = want;
         self.cache = Self::mk_cache(&self.cfg, want);
-        stats.bump("llc.reconfig");
+        self.flushing = true;
     }
 
-    /// One cycle: serve SPM hits, run cached/pass-through DRAM traffic.
-    pub fn tick(&mut self, sub: &AxiBus, mgr: &AxiBus, stats: &mut Stats) {
-        self.maybe_reconfig(mgr, stats);
-        // Drain pass-through responses first (keeps R/B channels moving).
-        self.forward_responses(sub, mgr, stats);
-        self.poll_fill(mgr);
-        self.write_path(sub, mgr, stats);
-        self.read_path(sub, mgr, stats);
-    }
-
+    /// Forward pass-through responses from the manager port back to the
+    /// subordinate port; sink writeback B responses; leave fill R beats
+    /// for `collect_fills`.
     fn forward_responses(&mut self, sub: &AxiBus, mgr: &AxiBus, stats: &mut Stats) {
-        // B responses from DRAM side for pass-through writes (id != 0x3f
-        // flush traffic, which is sunk here).
         loop {
             let drop = match mgr.b.borrow().peek() {
-                Some(b) => b.id == 0x3f,
+                Some(b) => b.id == WB_ID,
                 None => break,
             };
             if drop {
@@ -199,16 +344,17 @@ impl Llc {
             }
             if sub.b.borrow().can_push() {
                 let b = mgr.b.borrow_mut().pop().unwrap();
+                if let Some(pos) = self.pt_wr_ids.iter().position(|&id| id == b.id) {
+                    self.pt_wr_ids.remove(pos);
+                }
                 sub.b.borrow_mut().push(b);
                 stats.bump("llc.pt_b");
             }
             break;
         }
-        // R beats for pass-through reads (fill traffic uses id 0x3e and is
-        // consumed by the read path, not here).
         loop {
             let is_fill = match mgr.r.borrow().peek() {
-                Some(r) => r.id == 0x3e,
+                Some(r) => is_fill_id(r.id),
                 None => break,
             };
             if is_fill {
@@ -216,6 +362,11 @@ impl Llc {
             }
             if sub.r.borrow().can_push() {
                 let r = mgr.r.borrow_mut().pop().unwrap();
+                if r.last {
+                    if let Some(pos) = self.pt_rd_ids.iter().position(|&id| id == r.id) {
+                        self.pt_rd_ids.remove(pos);
+                    }
+                }
                 sub.r.borrow_mut().push(r);
                 stats.bump("llc.pt_r");
             }
@@ -223,256 +374,452 @@ impl Llc {
         }
     }
 
-    /// Fetch a full line synchronously over the manager port is impossible
-    /// in one cycle; we model the miss with a fixed `fill_wait` latency and
-    /// then a functional line read via an 8-beat AR/R exchange primed in
-    /// advance. To keep the state machine tractable the fill is issued and
-    /// the data is consumed when it arrives.
-    fn read_path(&mut self, sub: &AxiBus, mgr: &AxiBus, stats: &mut Stats) {
-        match std::mem::replace(&mut self.rd, RdState::Idle) {
-            RdState::Idle => {
-                let Some(ar) = ({
-                    let peek_ok = { sub.ar.borrow().peek().is_some() };
-                    if peek_ok { sub.ar.borrow_mut().pop() } else { None }
-                }) else {
-                    return;
+    /// Pull returned fill beats into their MSHR buffers.
+    fn collect_fills(&mut self, mgr: &AxiBus) {
+        loop {
+            let id = match mgr.r.borrow().peek() {
+                Some(r) if is_fill_id(r.id) => r.id,
+                _ => break,
+            };
+            let r = mgr.r.borrow_mut().pop().unwrap();
+            let slot = (id - FILL_ID_BASE) as usize;
+            if let Some(m) = self.mshrs.iter_mut().find(|m| m.slot == slot) {
+                m.buf.extend_from_slice(&r.data);
+                if r.last {
+                    m.done = true;
+                }
+            }
+        }
+    }
+
+    /// Retire completed MSHRs: charge the refill latency, write back the
+    /// victim (selected *now*, so hit-under-miss LRU movement can't split
+    /// writeback and eviction), install the line, wake parked transactions.
+    fn complete_mshrs(&mut self, stats: &mut Stats) {
+        let mut retired = false;
+        let mut i = 0;
+        while i < self.mshrs.len() {
+            if !self.mshrs[i].done {
+                i += 1;
+                continue;
+            }
+            if self.mshrs[i].delay > 0 {
+                self.mshrs[i].delay -= 1;
+                i += 1;
+                continue;
+            }
+            let m = self.mshrs.remove(i);
+            let mut line = m.buf;
+            line.resize(LINE, 0);
+            if let Some(c) = self.cache.as_mut() {
+                if let Some((vaddr, vdata, dirty)) = c.victim_info(m.line) {
+                    if dirty {
+                        self.wb_q.push_back((vaddr, vdata));
+                        stats.bump("llc.writeback");
+                    }
+                }
+                c.refill(m.line, &line);
+            }
+            stats.bump("llc.fill_done");
+            for t in self.rd_q.iter_mut() {
+                if t.wait_line == Some(m.line) {
+                    t.wait_line = None;
+                }
+            }
+            for t in self.wr_q.iter_mut() {
+                if t.wait_line == Some(m.line) {
+                    t.wait_line = None;
+                }
+            }
+            retired = true;
+        }
+        if retired {
+            // a slot freed: un-park transactions that were waiting on a
+            // full MSHR file (their line has no MSHR) so they retry
+            for t in self.rd_q.iter_mut() {
+                if matches!(t.wait_line, Some(l) if !self.mshrs.iter().any(|m| m.line == l)) {
+                    t.wait_line = None;
+                }
+            }
+            for t in self.wr_q.iter_mut() {
+                if matches!(t.wait_line, Some(l) if !self.mshrs.iter().any(|m| m.line == l)) {
+                    t.wait_line = None;
+                }
+            }
+        }
+    }
+
+    /// Stream one queued writeback line per cycle onto the manager port.
+    fn stream_wb(&mut self, mgr: &AxiBus, stats: &mut Stats) {
+        if self.wb_q.is_empty() {
+            return;
+        }
+        if !mgr.aw.borrow().can_push() || mgr.w.borrow().space() < LINE / 8 {
+            return;
+        }
+        let (addr, data) = self.wb_q.pop_front().unwrap();
+        mgr.aw.borrow_mut().push(Aw {
+            id: WB_ID,
+            addr,
+            len: (LINE / 8 - 1) as u8,
+            size: 3,
+            burst: Burst::Incr,
+            qos: 0,
+        });
+        for i in 0..LINE / 8 {
+            mgr.w.borrow_mut().push(W {
+                data: data[i * 8..(i + 1) * 8].to_vec(),
+                strb: 0xff,
+                last: i == LINE / 8 - 1,
+            });
+        }
+        stats.bump("llc.wb_bursts");
+    }
+
+    /// Issue one pending fill AR per cycle. A fill whose line still has a
+    /// queued writeback is held back (read-after-write order at the
+    /// controller).
+    fn issue_fills(&mut self, mgr: &AxiBus, stats: &mut Stats) {
+        if !mgr.ar.borrow().can_push() {
+            return;
+        }
+        for m in self.mshrs.iter_mut() {
+            if m.issued {
+                continue;
+            }
+            if self.wb_q.iter().any(|(a, _)| *a == m.line) {
+                continue;
+            }
+            mgr.ar.borrow_mut().push(Ar {
+                id: FILL_ID_BASE + m.slot as u32,
+                addr: m.line,
+                len: (LINE / 8 - 1) as u8,
+                size: 3,
+                burst: Burst::Incr,
+                qos: 0,
+            });
+            m.issued = true;
+            stats.bump("llc.fill");
+            break;
+        }
+    }
+
+    /// Accept new transactions from the subordinate port (stalled while a
+    /// reconfiguration drains). DRAM traffic with zero cache ways is
+    /// forwarded pass-through, as before.
+    fn accept(&mut self, sub: &AxiBus, mgr: &AxiBus, stats: &mut Stats) {
+        if self.reconfig_pending() {
+            return;
+        }
+        if self.rd_q.len() < self.rd_q_cap() {
+            let head = sub.ar.borrow().peek().map(|a| (a.id, a.addr));
+            if let Some((id, addr)) = head {
+                let pass = self.in_dram(addr) && self.cache.is_none();
+                // per-ID order across the pass/local boundary: a local read
+                // may not start while a pass-through on its ID is pending,
+                // and vice versa (beats would reorder on the R channel)
+                let id_clear = if pass {
+                    !self.rd_q.iter().any(|t| t.ar.id == id)
+                } else {
+                    !self.pt_rd_ids.contains(&id)
                 };
-                if self.in_spm(ar.addr) {
-                    self.rd = RdState::Read { ar, beat: 0, fill_wait: 0 };
-                } else if self.in_dram(ar.addr) {
-                    if self.cache.is_none() {
-                        // pass-through
-                        self.pt_reads.push_back(ar.id);
+                if id_clear && (!pass || mgr.ar.borrow().can_push()) {
+                    let ar = sub.ar.borrow_mut().pop().unwrap();
+                    if pass {
+                        self.pt_rd_ids.push_back(ar.id);
                         mgr.ar.borrow_mut().push(ar);
                         stats.bump("llc.pt_ar");
                     } else {
-                        self.rd = RdState::Read { ar, beat: 0, fill_wait: 0 };
-                    }
-                } else {
-                    // outside both windows: SLVERR burst
-                    let beats = ar.beats();
-                    for i in 0..beats {
-                        sub.r.borrow_mut().push(R { id: ar.id, data: vec![0; 8], resp: Resp::SlvErr, last: i + 1 == beats });
+                        self.rd_q.push_back(RdTxn { ar, beat: 0, wait_line: None });
                     }
                 }
             }
-            RdState::Read { ar, beat, fill_wait } => {
-                if fill_wait > 0 {
-                    self.rd = RdState::Read { ar, beat, fill_wait: fill_wait - 1 };
-                    return;
-                }
-                if !sub.r.borrow().can_push() {
-                    self.rd = RdState::Read { ar, beat, fill_wait };
-                    return;
-                }
-                let addr = crate::axi::types::beat_addr(ar.addr, ar.size, ar.burst, beat);
-                let nbytes = 1usize << ar.size;
-                let mut data = vec![0u8; 8.max(nbytes)];
-                if self.in_spm(addr) {
-                    let off = (addr - self.cfg.spm_base) as usize;
-                    let lane0 = (addr as usize) & 0x7;
-                    let mut tmp = vec![0u8; nbytes];
-                    self.spm.read(off, &mut tmp, stats);
-                    data[lane0..lane0 + nbytes].copy_from_slice(&tmp);
+        }
+        if self.wr_q.len() < self.wr_q_cap() {
+            let head = sub.aw.borrow().peek().map(|a| (a.id, a.addr));
+            if let Some((id, addr)) = head {
+                let pass = self.in_dram(addr) && self.cache.is_none();
+                let id_clear = if pass {
+                    !self.wr_q.iter().any(|t| t.aw.id == id && t.kind == WrKind::Local)
                 } else {
-                    // cached DRAM read; wait out any outstanding line fill
-                    if self.pending_fill.is_some() {
-                        self.rd = RdState::Read { ar, beat, fill_wait: 1 };
-                        return;
+                    !self.pt_wr_ids.contains(&id)
+                };
+                if id_clear && (!pass || mgr.aw.borrow().can_push()) {
+                    let aw = sub.aw.borrow_mut().pop().unwrap();
+                    if pass {
+                        self.pt_wr_ids.push_back(aw.id);
+                        mgr.aw.borrow_mut().push(aw.clone());
+                        stats.bump("llc.pt_aw");
+                        self.wr_q.push_back(WrTxn { aw, beat: 0, kind: WrKind::Pass, wait_line: None });
+                    } else {
+                        self.wr_q.push_back(WrTxn { aw, beat: 0, kind: WrKind::Local, wait_line: None });
                     }
+                }
+            }
+        }
+    }
+
+    /// Ensure a fill is (or will be) in flight for `line`. Returns whether
+    /// the line has an MSHR; `false` means the file is full and the caller
+    /// must retry after a completion.
+    fn ensure_mshr(&mut self, line: u64, stats: &mut Stats) -> bool {
+        if self.mshrs.iter().any(|m| m.line == line) {
+            stats.bump("llc.mshr_merge");
+            return true;
+        }
+        if self.alloc_mshr(line) {
+            stats.bump("llc.mshr_alloc");
+            true
+        } else {
+            stats.bump("llc.mshr_full");
+            false
+        }
+    }
+
+    fn alloc_mshr(&mut self, line: u64) -> bool {
+        if self.mshrs.len() >= self.mshr_cap() {
+            return false;
+        }
+        let mut slot = 0usize;
+        while self.mshrs.iter().any(|m| m.slot == slot) {
+            slot += 1;
+        }
+        self.mshrs.push(Mshr {
+            line,
+            slot,
+            issued: false,
+            buf: Vec::with_capacity(LINE),
+            done: false,
+            delay: self.miss_penalty,
+        });
+        true
+    }
+
+    /// Serve the front write transaction (writes are strictly in order).
+    fn write_path(&mut self, sub: &AxiBus, stats: &mut Stats) {
+        let Some(front) = self.wr_q.front() else { return };
+        let kind = front.kind;
+        if kind == WrKind::Pass {
+            return; // beats stream via `forward_pass_write`
+        }
+        if front.wait_line.is_some() {
+            return;
+        }
+        let (addr, nbytes, id) = {
+            let t = self.wr_q.front().unwrap();
+            (
+                beat_addr(t.aw.addr, t.aw.size, t.aw.burst, t.beat),
+                1usize << t.aw.size,
+                t.aw.id,
+            )
+        };
+        let Some((w_last, w_data, w_strb)) = ({
+            sub.w.borrow().peek().map(|w| (w.last, w.data.clone(), w.strb))
+        }) else {
+            return;
+        };
+        if w_last && !sub.b.borrow().can_push() {
+            return;
+        }
+        let lane0 = (addr as usize) & 0x7;
+        if self.in_spm(addr) {
+            sub.w.borrow_mut().pop();
+            let off = (addr - self.cfg.spm_base) as usize;
+            let mut cur = vec![0u8; nbytes];
+            self.spm.read(off, &mut cur, stats);
+            for i in 0..nbytes {
+                let lane = lane0 + i;
+                if lane < w_data.len() && (w_strb >> lane) & 1 == 1 {
+                    cur[i] = w_data[lane];
+                }
+            }
+            self.spm.write(off, &cur, stats);
+            self.finish_write_beat(sub, w_last, id, Resp::Okay);
+        } else if self.in_dram(addr) && self.cache.is_some() {
+            let line = addr & !(LINE as u64 - 1);
+            match self.cache.as_mut().unwrap().probe(addr, stats) {
+                Probe::Hit => {
+                    sub.w.borrow_mut().pop();
                     let cache = self.cache.as_mut().unwrap();
-                    match cache.probe(addr, stats) {
-                        Probe::Hit => {
-                            let lane0 = (addr as usize) & 0x7;
-                            let mut tmp = vec![0u8; nbytes];
-                            cache.read(addr, &mut tmp);
-                            data[lane0..lane0 + nbytes].copy_from_slice(&tmp);
-                        }
-                        Probe::Miss { victim_dirty } => {
-                            // issue writeback + fill on manager port
-                            let line_addr = addr & !(LINE as u64 - 1);
-                            self.issue_fill(mgr, line_addr, victim_dirty, addr, stats);
-                            self.rd = RdState::Read { ar, beat, fill_wait: self.miss_penalty };
-                            return; // retry this beat after fill
-                        }
-                    }
-                }
-                let last = beat == ar.len as u32;
-                sub.r.borrow_mut().push(R { id: ar.id, data, resp: Resp::Okay, last });
-                if !last {
-                    self.rd = RdState::Read { ar, beat: beat + 1, fill_wait: 0 };
-                }
-            }
-        }
-    }
-
-    /// Issue a line fill (and victim writeback) on the manager port, then
-    /// consume the returning beats into the cache. The fill AR goes out
-    /// now; data is polled by `poll_fill`. To bound state we block the LLC
-    /// on the fill (CVA6-style blocking miss).
-    fn issue_fill(&mut self, mgr: &AxiBus, line_addr: u64, victim_dirty: bool, probe_addr: u64, stats: &mut Stats) {
-        let cache = self.cache.as_mut().unwrap();
-        if victim_dirty {
-            if let Some((vaddr, vdata)) = cache.victim(probe_addr) {
-                mgr.aw.borrow_mut().push(Aw { id: 0x3f, addr: vaddr, len: (LINE / 8 - 1) as u8, size: 3, burst: crate::axi::types::Burst::Incr, qos: 0 });
-                for i in 0..LINE / 8 {
-                    mgr.w.borrow_mut().push(W { data: vdata[i * 8..(i + 1) * 8].to_vec(), strb: 0xff, last: i == LINE / 8 - 1 });
-                }
-                stats.bump("llc.writeback");
-            }
-        }
-        mgr.ar.borrow_mut().push(Ar { id: 0x3e, addr: line_addr, len: (LINE / 8 - 1) as u8, size: 3, burst: crate::axi::types::Burst::Incr, qos: 0 });
-        stats.bump("llc.fill");
-        self.pending_fill = Some((line_addr, Vec::with_capacity(LINE)));
-    }
-
-    fn write_path(&mut self, sub: &AxiBus, mgr: &AxiBus, stats: &mut Stats) {
-        match std::mem::replace(&mut self.wr, WrState::Idle) {
-            WrState::Idle => {
-                let Some(aw) = ({
-                    let has = { sub.aw.borrow().peek().is_some() };
-                    if has { sub.aw.borrow_mut().pop() } else { None }
-                }) else {
-                    return;
-                };
-                if self.in_dram(aw.addr) && self.cache.is_none() {
-                    // pass-through write: forward AW now, W beats follow
-                    mgr.aw.borrow_mut().push(aw);
-                    stats.bump("llc.pt_aw");
-                    self.wr = WrState::Write {
-                        aw: Aw { id: u32::MAX, addr: 0, len: 0, size: 0, burst: crate::axi::types::Burst::Incr, qos: 0 },
-                        beat: 0,
-                        fill_wait: 0,
-                    };
-                } else {
-                    self.wr = WrState::Write { aw, beat: 0, fill_wait: 0 };
-                }
-            }
-            WrState::Write { aw, beat, fill_wait } => {
-                if aw.id == u32::MAX {
-                    // pass-through W forwarding until last
-                    if mgr.w.borrow().can_push() {
-                        if let Some(w) = sub.w.borrow_mut().pop() {
-                            let last = w.last;
-                            mgr.w.borrow_mut().push(w);
-                            if last {
-                                return; // back to Idle
-                            }
-                        }
-                    }
-                    self.wr = WrState::Write { aw, beat, fill_wait };
-                    return;
-                }
-                if fill_wait > 0 {
-                    self.wr = WrState::Write { aw, beat, fill_wait: fill_wait - 1 };
-                    return;
-                }
-                let Some(w) = ({
-                    let has = { sub.w.borrow().peek().is_some() };
-                    if has { Some(()) } else { None }
-                }) else {
-                    self.wr = WrState::Write { aw, beat, fill_wait };
-                    return;
-                };
-                let _ = w;
-                let addr = crate::axi::types::beat_addr(aw.addr, aw.size, aw.burst, beat);
-                let nbytes = 1usize << aw.size;
-                let lane0 = (addr as usize) & 0x7;
-                if self.in_spm(addr) {
-                    let w = sub.w.borrow_mut().pop().unwrap();
-                    let off = (addr - self.cfg.spm_base) as usize;
                     let mut cur = vec![0u8; nbytes];
-                    self.spm.read(off, &mut cur, stats);
+                    cache.read(addr, &mut cur);
                     for i in 0..nbytes {
                         let lane = lane0 + i;
-                        if lane < w.data.len() && (w.strb >> lane) & 1 == 1 {
-                            cur[i] = w.data[lane];
+                        if lane < w_data.len() && (w_strb >> lane) & 1 == 1 {
+                            cur[i] = w_data[lane];
                         }
                     }
-                    self.spm.write(off, &cur, stats);
-                    let last = w.last;
-                    if last {
-                        sub.b.borrow_mut().push(B { id: aw.id, resp: Resp::Okay });
-                        return;
-                    }
-                    self.wr = WrState::Write { aw, beat: beat + 1, fill_wait: 0 };
-                } else if self.in_dram(addr) {
-                    // cached write (write-allocate); wait out outstanding fills
-                    if self.pending_fill.is_some() {
-                        self.wr = WrState::Write { aw, beat, fill_wait: 1 };
-                        return;
-                    }
-                    let probe = self.cache.as_mut().unwrap().probe(addr, stats);
-                    match probe {
-                        Probe::Hit => {
-                            let w = sub.w.borrow_mut().pop().unwrap();
-                            let cache = self.cache.as_mut().unwrap();
-                            let mut cur = vec![0u8; nbytes];
-                            cache.read(addr, &mut cur);
-                            for i in 0..nbytes {
-                                let lane = lane0 + i;
-                                if lane < w.data.len() && (w.strb >> lane) & 1 == 1 {
-                                    cur[i] = w.data[lane];
-                                }
-                            }
-                            cache.write(addr, &cur);
-                            let last = w.last;
-                            if last {
-                                sub.b.borrow_mut().push(B { id: aw.id, resp: Resp::Okay });
-                                return;
-                            }
-                            self.wr = WrState::Write { aw, beat: beat + 1, fill_wait: 0 };
-                        }
-                        Probe::Miss { victim_dirty } => {
-                            let line_addr = addr & !(LINE as u64 - 1);
-                            self.issue_fill(mgr, line_addr, victim_dirty, addr, stats);
-                            self.wr = WrState::Write { aw, beat, fill_wait: self.miss_penalty };
-                        }
-                    }
-                } else {
-                    // bad address: drain and error
-                    let w = sub.w.borrow_mut().pop().unwrap();
-                    if w.last {
-                        sub.b.borrow_mut().push(B { id: aw.id, resp: Resp::SlvErr });
-                        return;
-                    }
-                    self.wr = WrState::Write { aw, beat: beat + 1, fill_wait: 0 };
+                    cache.write(addr, &cur);
+                    self.finish_write_beat(sub, w_last, id, Resp::Okay);
                 }
+                Probe::Miss { .. } => {
+                    self.ensure_mshr(line, stats);
+                    // park regardless: a full MSHR file is re-woken on the
+                    // next completion (see `complete_mshrs`)
+                    self.wr_q.front_mut().unwrap().wait_line = Some(line);
+                }
+            }
+        } else {
+            // outside both windows (or DRAM with no cache mid-burst)
+            sub.w.borrow_mut().pop();
+            self.finish_write_beat(sub, w_last, id, Resp::SlvErr);
+        }
+    }
+
+    fn finish_write_beat(&mut self, sub: &AxiBus, last: bool, id: u32, resp: Resp) {
+        if last {
+            sub.b.borrow_mut().push(B { id, resp });
+            self.wr_q.pop_front();
+        } else {
+            self.wr_q.front_mut().unwrap().beat += 1;
+        }
+    }
+
+    /// Forward W beats of a pass-through write at the queue front.
+    fn forward_pass_write(&mut self, sub: &AxiBus, mgr: &AxiBus) {
+        let is_pass = matches!(self.wr_q.front(), Some(t) if t.kind == WrKind::Pass);
+        if !is_pass || !mgr.w.borrow().can_push() {
+            return;
+        }
+        if let Some(w) = sub.w.borrow_mut().pop() {
+            let last = w.last;
+            mgr.w.borrow_mut().push(w);
+            if last {
+                self.wr_q.pop_front();
             }
         }
     }
 
-    /// Consume returning fill beats (id 0x3e) into the pending line; refill
-    /// the cache when complete.
-    fn poll_fill(&mut self, mgr: &AxiBus) {
-        let Some((line_addr, buf)) = &mut self.pending_fill else { return };
-        loop {
-            let is_fill = matches!(mgr.r.borrow().peek(), Some(r) if r.id == 0x3e);
-            if !is_fill {
+    /// Serve one read beat per cycle. The oldest transaction that can make
+    /// progress wins; younger transactions may only bypass a parked one on
+    /// a *different* AXI ID (per-ID in-order rule).
+    fn read_path(&mut self, sub: &AxiBus, stats: &mut Stats) {
+        if self.rd_q.is_empty() {
+            return;
+        }
+        if !sub.r.borrow().can_push() {
+            stats.bump("llc.r_stall");
+            return;
+        }
+        let limit = if self.cfg.blocking { 1 } else { self.rd_q.len() };
+        'txn: for i in 0..limit.min(self.rd_q.len()) {
+            let id = self.rd_q[i].ar.id;
+            for j in 0..i {
+                if self.rd_q[j].ar.id == id {
+                    continue 'txn; // per-ID order: older same-ID txn first
+                }
+            }
+            if self.rd_q[i].wait_line.is_some() {
+                continue;
+            }
+            let (addr, nbytes, last) = {
+                let t = &self.rd_q[i];
+                (
+                    beat_addr(t.ar.addr, t.ar.size, t.ar.burst, t.beat),
+                    1usize << t.ar.size,
+                    t.beat == t.ar.len as u32,
+                )
+            };
+            let lane0 = (addr as usize) & 0x7;
+            let mut data = vec![0u8; 8.max(nbytes)];
+            let resp;
+            if self.in_spm(addr) {
+                let off = (addr - self.cfg.spm_base) as usize;
+                let mut tmp = vec![0u8; nbytes];
+                self.spm.read(off, &mut tmp, stats);
+                data[lane0..lane0 + nbytes].copy_from_slice(&tmp);
+                resp = Resp::Okay;
+            } else if self.in_dram(addr) && self.cache.is_some() {
+                let line = addr & !(LINE as u64 - 1);
+                match self.cache.as_mut().unwrap().probe(addr, stats) {
+                    Probe::Hit => {
+                        let cache = self.cache.as_mut().unwrap();
+                        let mut tmp = vec![0u8; nbytes];
+                        cache.read(addr, &mut tmp);
+                        data[lane0..lane0 + nbytes].copy_from_slice(&tmp);
+                        resp = Resp::Okay;
+                    }
+                    Probe::Miss { .. } => {
+                        self.ensure_mshr(line, stats);
+                        self.rd_q[i].wait_line = Some(line);
+                        continue 'txn; // hit-under-miss: try a younger txn
+                    }
+                }
+            } else {
+                resp = Resp::SlvErr;
+            }
+            sub.r.borrow_mut().push(R { id, data, resp, last });
+            if last {
+                self.rd_q.remove(i);
+            } else {
+                self.rd_q[i].beat += 1;
+            }
+            return; // one beat per cycle
+        }
+    }
+
+    /// Miss-under-miss lookahead: allocate MSHRs for the *remaining* lines
+    /// of queued transactions while free slots exist, so long bursts
+    /// pipeline their fills instead of discovering them beat by beat.
+    fn lookahead(&mut self, stats: &mut Stats) {
+        if self.cfg.blocking || self.cache.is_none() || self.reconfig_pending() {
+            return;
+        }
+        let mut cands: Vec<u64> = Vec::new();
+        {
+            let scan = |ar_addr: u64, bytes: u64, beat: u32, size: u8, burst: Burst,
+                        cands: &mut Vec<u64>| {
+                if burst == Burst::Fixed {
+                    return;
+                }
+                let start = beat_addr(ar_addr, size, burst, beat) & !(LINE as u64 - 1);
+                let end = ar_addr + bytes;
+                let mut l = start;
+                while l < end && cands.len() < 32 {
+                    cands.push(l);
+                    l += LINE as u64;
+                }
+            };
+            for t in self.rd_q.iter() {
+                if self.in_dram(t.ar.addr) {
+                    scan(t.ar.addr, t.ar.bytes(), t.beat, t.ar.size, t.ar.burst, &mut cands);
+                }
+            }
+            if let Some(t) = self.wr_q.front() {
+                if t.kind == WrKind::Local && self.in_dram(t.aw.addr) {
+                    scan(t.aw.addr, t.aw.bytes(), t.beat, t.aw.size, t.aw.burst, &mut cands);
+                }
+            }
+        }
+        for line in cands {
+            if self.mshrs.len() >= self.mshr_cap() {
                 break;
             }
-            let r = mgr.r.borrow_mut().pop().unwrap();
-            buf.extend_from_slice(&r.data);
-            if r.last {
-                let la = *line_addr;
-                let mut line = std::mem::take(buf);
-                line.resize(LINE, 0);
-                self.cache.as_mut().unwrap().refill(la, &line);
-                self.pending_fill = None;
-                break;
+            if !self.in_dram(line) {
+                continue;
+            }
+            if self.cache.as_ref().map(|c| c.lookup(line)).unwrap_or(true) {
+                continue;
+            }
+            if self.mshrs.iter().any(|m| m.line == line) {
+                continue;
+            }
+            if self.alloc_mshr(line) {
+                stats.bump("llc.mshr_lookahead");
             }
         }
     }
 }
 
 impl Component for Llc {
-    /// Idle when both request paths are drained, no line fill is pending,
-    /// and no way reconfiguration is waiting to be applied.
+    /// Idle when both request queues are drained, no fill or writeback is
+    /// in flight, and no way reconfiguration is requested or flushing.
     fn activity(&self, _now: Cycle) -> Activity {
-        let idle = matches!(self.rd, RdState::Idle)
-            && matches!(self.wr, WrState::Idle)
-            && self.pending_fill.is_none()
-            && *self.mask.borrow() == self.applied_mask;
+        let idle = self.rd_q.is_empty()
+            && self.wr_q.is_empty()
+            && self.mshrs.is_empty()
+            && self.wb_q.is_empty()
+            && !self.reconfig_pending();
         if idle {
             Activity::Quiescent
         } else {
@@ -485,15 +832,23 @@ impl Component for Llc {
 ///
 /// reg 0x0: SPM way mask (RW) — bit *i* configures way *i* as SPM.
 /// reg 0x4: way count (RO), reg 0x8: way size in bytes (RO).
+/// reg 0xc: *applied* SPM way mask (RO) — equals reg 0x0 once a requested
+/// reconfiguration (including its dirty-line flush) has fully completed.
 pub struct LlcRegs {
     mask: WayMask,
+    applied: WayMask,
     ways: u32,
     way_bytes: u32,
 }
 
 impl LlcRegs {
-    pub fn new(mask: WayMask, cfg: &LlcCfg) -> Self {
-        Self { mask, ways: cfg.ways as u32, way_bytes: cfg.way_bytes() as u32 }
+    pub fn new(mask: WayMask, applied: WayMask, cfg: &LlcCfg) -> Self {
+        Self {
+            mask,
+            applied,
+            ways: cfg.ways as u32,
+            way_bytes: cfg.way_bytes() as u32,
+        }
     }
 }
 
@@ -503,6 +858,7 @@ impl crate::axi::regbus::RegDevice for LlcRegs {
             0x0 => Ok(*self.mask.borrow()),
             0x4 => Ok(self.ways),
             0x8 => Ok(self.way_bytes),
+            0xc => Ok(*self.applied.borrow()),
             _ => Err(()),
         }
     }
@@ -537,6 +893,10 @@ mod tests {
         (llc, mask, axi_bus(8), axi_bus(16), MemSub::new(0x8000_0000, 0x10000, 8, 2), Stats::new())
     }
 
+    fn ar(id: u32, addr: u64, len: u8) -> Ar {
+        Ar { id, addr, len, size: 3, burst: Burst::Incr, qos: 0 }
+    }
+
     #[test]
     fn spm_write_read_roundtrip() {
         let (mut llc, _mask, sub, mgr, mut mem, mut stats) = neo_llc();
@@ -545,7 +905,7 @@ mod tests {
         sub.w.borrow_mut().push(W { data: vec![0xcd; 8], strb: 0xff, last: true });
         run(&mut llc, &sub, &mgr, &mut mem, &mut stats, 20);
         assert_eq!(sub.b.borrow_mut().pop().unwrap().resp, Resp::Okay);
-        sub.ar.borrow_mut().push(Ar { id: 2, addr: 0x7000_0010, len: 1, size: 3, burst: Burst::Incr, qos: 0 });
+        sub.ar.borrow_mut().push(ar(2, 0x7000_0010, 1));
         run(&mut llc, &sub, &mgr, &mut mem, &mut stats, 20);
         let r0 = sub.r.borrow_mut().pop().unwrap();
         let r1 = sub.r.borrow_mut().pop().unwrap();
@@ -564,7 +924,7 @@ mod tests {
         assert_eq!(mem.mem()[0x40], 0x11);
         assert_eq!(stats.get("llc.pt_aw"), 1);
 
-        sub.ar.borrow_mut().push(Ar { id: 4, addr: 0x8000_0040, len: 0, size: 3, burst: Burst::Incr, qos: 0 });
+        sub.ar.borrow_mut().push(ar(4, 0x8000_0040, 0));
         run(&mut llc, &sub, &mgr, &mut mem, &mut stats, 30);
         let r = sub.r.borrow_mut().pop().unwrap();
         assert_eq!(r.data[0], 0x11);
@@ -576,19 +936,20 @@ mod tests {
         let (mut llc, mask, sub, mgr, mut mem, mut stats) = neo_llc();
         *mask.borrow_mut() = 0x0f; // 4 ways SPM, 4 ways cache
         mem.mem_mut()[0x100..0x108].copy_from_slice(&[9; 8]);
-        sub.ar.borrow_mut().push(Ar { id: 0, addr: 0x8000_0100, len: 0, size: 3, burst: Burst::Incr, qos: 0 });
+        sub.ar.borrow_mut().push(ar(0, 0x8000_0100, 0));
         run(&mut llc, &sub, &mgr, &mut mem, &mut stats, 60);
         let r = sub.r.borrow_mut().pop().expect("read data");
         assert_eq!(r.data, vec![9; 8]);
         assert_eq!(stats.get("llc.miss"), 1);
         // second read: hit, no new fill
-        sub.ar.borrow_mut().push(Ar { id: 0, addr: 0x8000_0100, len: 0, size: 3, burst: Burst::Incr, qos: 0 });
+        sub.ar.borrow_mut().push(ar(0, 0x8000_0100, 0));
         run(&mut llc, &sub, &mgr, &mut mem, &mut stats, 60);
         assert!(sub.r.borrow_mut().pop().is_some());
         // 2 hits: the post-fill retry of read #1 plus read #2 (each is a
         // real tag lookup, so both are counted for the power model)
         assert_eq!(stats.get("llc.hit"), 2);
         assert_eq!(stats.get("llc.fill"), 1);
+        assert_eq!(stats.get("llc.mshr_alloc"), 1);
         // SPM shrank to 4 ways = 64 KiB
         assert_eq!(llc.spm_bytes(), 64 * 1024);
     }
@@ -601,7 +962,7 @@ mod tests {
         sub.w.borrow_mut().push(W { data: vec![0x77; 8], strb: 0xff, last: true });
         run(&mut llc, &sub, &mgr, &mut mem, &mut stats, 60);
         assert_eq!(sub.b.borrow_mut().pop().unwrap().resp, Resp::Okay);
-        sub.ar.borrow_mut().push(Ar { id: 8, addr: 0x8000_0200, len: 0, size: 3, burst: Burst::Incr, qos: 0 });
+        sub.ar.borrow_mut().push(ar(8, 0x8000_0200, 0));
         run(&mut llc, &sub, &mgr, &mut mem, &mut stats, 60);
         assert_eq!(sub.r.borrow_mut().pop().unwrap().data, vec![0x77; 8]);
         // DRAM does not yet have the data (write-back)
@@ -613,12 +974,191 @@ mod tests {
         use crate::axi::regbus::RegDevice;
         let cfg = LlcCfg::neo();
         let (llc, mask) = Llc::new(cfg.clone());
-        let mut regs = LlcRegs::new(mask.clone(), &cfg);
+        let mut regs = LlcRegs::new(mask.clone(), llc.applied_handle(), &cfg);
         assert_eq!(regs.reg_read(0x0).unwrap(), 0xff);
+        assert_eq!(regs.reg_read(0xc).unwrap(), 0xff, "applied == requested at reset");
         regs.reg_write(0x0, 0x0f).unwrap();
         assert_eq!(*mask.borrow(), 0x0f);
+        assert_eq!(regs.reg_read(0xc).unwrap(), 0xff, "applied lags until the LLC drains");
         assert_eq!(regs.reg_read(0x4).unwrap(), 8);
         assert_eq!(regs.reg_read(0x8).unwrap(), 16 * 1024);
         drop(llc);
     }
+
+    /// Hit-under-miss: while a DRAM line fill is in flight (slow backing
+    /// memory), an SPM read on another ID must be served immediately. In
+    /// blocking mode the same sequence strictly serializes.
+    #[test]
+    fn spm_hit_served_under_outstanding_miss() {
+        let order_of_first = |blocking: bool| -> u32 {
+            let mut cfg = LlcCfg { dram_size: 0x10000, ..LlcCfg::neo() };
+            cfg.spm_way_mask = 0x0f;
+            cfg.blocking = blocking;
+            let (mut llc, _mask) = Llc::new(cfg);
+            let (sub, mgr) = (axi_bus(8), axi_bus(16));
+            let mut mem = MemSub::new(0x8000_0000, 0x10000, 8, 30); // slow DRAM
+            let mut stats = Stats::new();
+            sub.ar.borrow_mut().push(ar(1, 0x8000_0400, 0)); // miss → fill
+            sub.ar.borrow_mut().push(ar(2, 0x7000_0020, 0)); // SPM hit
+            for _ in 0..200 {
+                llc.tick(&sub, &mgr, &mut stats);
+                mem.tick(&mgr, &mut stats);
+                if let Some(r) = sub.r.borrow_mut().pop() {
+                    return r.id;
+                }
+            }
+            panic!("no response at all (blocking={blocking})");
+        };
+        assert_eq!(order_of_first(false), 2, "non-blocking: SPM hit bypasses the miss");
+        assert_eq!(order_of_first(true), 1, "blocking: strict order");
+    }
+
+    /// Same-ID transactions never reorder, even when the older one is
+    /// parked on a fill and the younger one would hit.
+    #[test]
+    fn per_id_order_is_preserved() {
+        let mut cfg = LlcCfg { dram_size: 0x10000, ..LlcCfg::neo() };
+        cfg.spm_way_mask = 0x0f;
+        let (mut llc, _mask) = Llc::new(cfg);
+        let (sub, mgr) = (axi_bus(8), axi_bus(16));
+        let mut mem = MemSub::new(0x8000_0000, 0x10000, 8, 30);
+        let mut stats = Stats::new();
+        mem.mem_mut()[0x400] = 0x42;
+        sub.ar.borrow_mut().push(ar(5, 0x8000_0400, 0)); // miss (slow)
+        sub.ar.borrow_mut().push(ar(5, 0x7000_0020, 0)); // same ID, SPM hit
+        let mut got = Vec::new();
+        for _ in 0..300 {
+            llc.tick(&sub, &mgr, &mut stats);
+            mem.tick(&mgr, &mut stats);
+            while let Some(r) = sub.r.borrow_mut().pop() {
+                got.push(r.data[0]);
+            }
+            if got.len() == 2 {
+                break;
+            }
+        }
+        assert_eq!(got.len(), 2, "both reads completed");
+        assert_eq!(got[0], 0x42, "DRAM miss answered first (request order)");
+    }
+
+    /// A secondary miss on a line with a fill already in flight merges
+    /// onto the existing MSHR instead of issuing a second fill.
+    #[test]
+    fn secondary_miss_merges_onto_pending_fill() {
+        let (mut llc, mask, sub, mgr, mut mem, mut stats) = neo_llc();
+        *mask.borrow_mut() = 0x0f;
+        mem.mem_mut()[0x500..0x508].copy_from_slice(&[7; 8]);
+        mem.mem_mut()[0x508..0x510].copy_from_slice(&[8; 8]);
+        sub.ar.borrow_mut().push(ar(1, 0x8000_0500, 0));
+        sub.ar.borrow_mut().push(ar(2, 0x8000_0508, 0)); // same 64 B line
+        run(&mut llc, &sub, &mgr, &mut mem, &mut stats, 100);
+        let r0 = sub.r.borrow_mut().pop().expect("first read");
+        let r1 = sub.r.borrow_mut().pop().expect("second read");
+        assert_eq!(r0.data, vec![7; 8]);
+        assert_eq!(r1.data, vec![8; 8]);
+        assert_eq!(stats.get("llc.fill"), 1, "one fill serves both");
+        assert!(stats.get("llc.mshr_merge") + stats.get("llc.mshr_lookahead") >= 1);
+    }
+
+    /// Miss-under-miss: two independent misses overlap their fills, so the
+    /// non-blocking LLC completes strictly faster than the blocking one.
+    #[test]
+    fn overlapping_fills_beat_blocking_mode() {
+        let run_until_done = |blocking: bool| -> u64 {
+            let mut cfg = LlcCfg { dram_size: 0x10000, ..LlcCfg::neo() };
+            cfg.spm_way_mask = 0x0f;
+            cfg.blocking = blocking;
+            let (mut llc, _mask) = Llc::new(cfg);
+            let (sub, mgr) = (axi_bus(8), axi_bus(16));
+            let mut mem = MemSub::new(0x8000_0000, 0x10000, 8, 25);
+            let mut stats = Stats::new();
+            // 4 reads, 4 distinct lines, distinct IDs
+            for (i, off) in [0x000u64, 0x040, 0x080, 0x0c0].iter().enumerate() {
+                sub.ar.borrow_mut().push(ar(i as u32, 0x8000_1000 + off, 0));
+            }
+            let mut lasts = 0;
+            for t in 0..5000u64 {
+                llc.tick(&sub, &mgr, &mut stats);
+                mem.tick(&mgr, &mut stats);
+                while let Some(r) = sub.r.borrow_mut().pop() {
+                    if r.last {
+                        lasts += 1;
+                    }
+                }
+                if lasts == 4 {
+                    return t;
+                }
+            }
+            panic!("reads never completed (blocking={blocking})");
+        };
+        let nb = run_until_done(false);
+        let blk = run_until_done(true);
+        assert!(nb < blk, "overlapped fills must be faster ({nb} vs {blk} cycles)");
+    }
+
+    /// Satellite: converting ways to SPM while fills are in flight must
+    /// drain the MSHRs (and their parked transactions) before the flush,
+    /// and the dirty data must land in DRAM — nothing lost, applied mask
+    /// published only at the end.
+    #[test]
+    fn reconfig_drains_inflight_fills_before_flush() {
+        let (mut llc, mask, sub, mgr, mut mem, mut stats) = neo_llc();
+        *mask.borrow_mut() = 0x0f;
+        let applied = llc.applied_handle();
+        // settle the reconfig 0xff → 0x0f first
+        run(&mut llc, &sub, &mgr, &mut mem, &mut stats, 10);
+        assert_eq!(*applied.borrow(), 0x0f);
+        // dirty a line through the cache
+        sub.aw.borrow_mut().push(Aw { id: 1, addr: 0x8000_0600, len: 0, size: 3, burst: Burst::Incr, qos: 0 });
+        sub.w.borrow_mut().push(W { data: vec![0x5a; 8], strb: 0xff, last: true });
+        run(&mut llc, &sub, &mgr, &mut mem, &mut stats, 80);
+        assert!(sub.b.borrow_mut().pop().is_some());
+        // start a read miss on another line, and immediately request the
+        // way conversion while its fill is still in flight
+        sub.ar.borrow_mut().push(ar(2, 0x8000_0a00, 0));
+        for _ in 0..3 {
+            llc.tick(&sub, &mgr, &mut stats);
+            mem.tick(&mgr, &mut stats);
+        }
+        *mask.borrow_mut() = 0xff; // all SPM: cache ways must flush
+        assert_eq!(*applied.borrow(), 0x0f, "not applied while the fill is in flight");
+        run(&mut llc, &sub, &mgr, &mut mem, &mut stats, 300);
+        // the parked read completed (fill finished before the swap)
+        let r = sub.r.borrow_mut().pop().expect("read completed through the reconfig");
+        assert!(r.last);
+        // the dirty line was flushed to DRAM, and the mask is applied
+        assert_eq!(&mem.mem()[0x600..0x608], &[0x5a; 8]);
+        assert_eq!(*applied.borrow(), 0xff);
+        assert_eq!(llc.spm_bytes(), 128 * 1024);
+        assert!(stats.get("llc.flush_lines") >= 1);
+        assert_eq!(stats.get("llc.reconfig"), 2, "0xff→0x0f and 0x0f→0xff");
+        assert!(stats.get("llc.reconfig_wait") >= 1, "the drain actually waited");
+    }
+
+    /// A victim writeback followed by a re-fetch of the same line must not
+    /// read stale DRAM: the fill is held until the writeback drains.
+    #[test]
+    fn fill_after_writeback_sees_fresh_data() {
+        let (mut llc, mask, sub, mgr, mut mem, mut stats) = neo_llc();
+        *mask.borrow_mut() = 0xfe; // 1 cache way → eviction pressure
+        run(&mut llc, &sub, &mgr, &mut mem, &mut stats, 10);
+        // way_bytes = 16 KiB, 1 way → sets repeat every 16 KiB
+        let a0 = 0x8000_0000u64 + 0x40;
+        let a1 = a0 + 16 * 1024; // same set, different tag
+        // write a0 (dirty), then read a1 (evicts a0), then read a0 back
+        sub.aw.borrow_mut().push(Aw { id: 1, addr: a0, len: 0, size: 3, burst: Burst::Incr, qos: 0 });
+        sub.w.borrow_mut().push(W { data: vec![0x99; 8], strb: 0xff, last: true });
+        run(&mut llc, &sub, &mgr, &mut mem, &mut stats, 80);
+        sub.ar.borrow_mut().push(ar(2, a1, 0));
+        run(&mut llc, &sub, &mgr, &mut mem, &mut stats, 80);
+        sub.ar.borrow_mut().push(ar(3, a0, 0));
+        run(&mut llc, &sub, &mgr, &mut mem, &mut stats, 120);
+        while sub.r.borrow().len() > 1 {
+            sub.r.borrow_mut().pop();
+        }
+        let r = sub.r.borrow_mut().pop().expect("a0 read back");
+        assert_eq!(r.data, vec![0x99; 8], "dirty data survived the round trip");
+        assert!(stats.get("llc.writeback") >= 1);
+    }
 }
+

@@ -66,6 +66,12 @@ pub struct DmaEngine {
     fifo_cap: usize,
     /// Writes awaiting B responses.
     outstanding_b: u32,
+    /// Read bursts in flight (AR issued, last R not yet seen).
+    outstanding_r: u32,
+    /// Outstanding bursts the engine may keep in flight per direction
+    /// (1 = blocking baseline: wait for each B / last R before the next
+    /// AW / AR).
+    pub max_outstanding: u32,
 }
 
 #[derive(Debug)]
@@ -92,6 +98,8 @@ impl DmaEngine {
                 fifo: VecDeque::new(),
                 fifo_cap: 4096,
                 outstanding_b: 0,
+                outstanding_r: 0,
+                max_outstanding: 4,
             },
             state,
         )
@@ -135,7 +143,11 @@ impl DmaEngine {
             } else {
                 // complete?
                 let mut st = self.state.borrow_mut();
-                if st.busy && self.fifo.is_empty() && self.outstanding_b == 0 {
+                if st.busy
+                    && self.fifo.is_empty()
+                    && self.outstanding_b == 0
+                    && self.outstanding_r == 0
+                {
                     st.busy = false;
                     st.done = true;
                     st.irq = true;
@@ -152,6 +164,9 @@ impl DmaEngine {
             let can = { bus.r.borrow().peek().is_some() && self.fifo.len() + BUS <= self.fifo_cap };
             if can { bus.r.borrow_mut().pop() } else { None }
         } {
+            if r.last {
+                self.outstanding_r -= 1;
+            }
             for b in &r.data {
                 self.fifo.push_back(*b);
             }
@@ -159,9 +174,11 @@ impl DmaEngine {
         }
 
         let Some(cur) = &mut self.cur else { return };
+        let max_out = self.max_outstanding.max(1);
 
-        // issue read bursts ahead (bounded by FIFO headroom)
-        if cur.rd_issued < cur.bytes && bus.ar.borrow().can_push() {
+        // issue read bursts ahead (bounded by the outstanding cap and by
+        // FIFO headroom)
+        if cur.rd_issued < cur.bytes && self.outstanding_r < max_out && bus.ar.borrow().can_push() {
             let a = cur.src + cur.rd_issued;
             let left = cur.bytes - cur.rd_issued;
             let n = burst_bytes(a, left, cur.max_burst);
@@ -170,13 +187,18 @@ impl DmaEngine {
                 let beats = n / BUS as u64; // ≤256
                 bus.ar.borrow_mut().push(Ar { id: 0x10, addr: a, len: (beats - 1) as u8, size: 3, burst: Burst::Incr, qos: 0 });
                 cur.rd_issued += n;
+                self.outstanding_r += 1;
                 stats.bump("dma.ar");
             }
         }
 
         // issue write burst when its data is fully in the FIFO (cut-through
         // per burst: keeps the write stream non-blocking)
-        if cur.wr_beats_left == 0 && cur.wr_issued < cur.bytes && bus.aw.borrow().can_push() {
+        if cur.wr_beats_left == 0
+            && cur.wr_issued < cur.bytes
+            && self.outstanding_b < max_out
+            && bus.aw.borrow().can_push()
+        {
             let a = cur.dst + cur.wr_issued;
             let left = cur.bytes - cur.wr_issued;
             let n = burst_bytes(a, left, cur.max_burst);
@@ -222,7 +244,8 @@ impl Component for DmaEngine {
             && self.cur.is_none()
             && self.rows.is_empty()
             && self.fifo.is_empty()
-            && self.outstanding_b == 0;
+            && self.outstanding_b == 0
+            && self.outstanding_r == 0;
         if idle {
             Activity::Quiescent
         } else {
@@ -357,6 +380,37 @@ mod tests {
         assert!(!dma.busy());
         let want: Vec<u8> = (0..128u8).collect();
         assert_eq!(&mem.mem()[0x2000..0x2080], &want[..]);
+    }
+
+    /// `max_outstanding = 1` (the `--blocking` baseline) still copies
+    /// correctly but strictly slower than the multi-outstanding default
+    /// against a memory with real access latency.
+    #[test]
+    fn outstanding_cap_throttles_but_preserves_data() {
+        let run_mode = |max_outstanding: u32| -> u64 {
+            let bus = axi_bus(8);
+            let mut mem = MemSub::new(0, 0x4000, 8, 8);
+            for i in 0..1024usize {
+                mem.mem_mut()[i] = (i * 7) as u8;
+            }
+            let (mut dma, _st) = DmaEngine::new();
+            dma.max_outstanding = max_outstanding;
+            let mut stats = Stats::new();
+            dma.launch(Descriptor { src: 0, dst: 0x2000, len: 1024, reps: 1, max_burst: 128, ..Default::default() });
+            for t in 0..20_000u64 {
+                dma.tick(&bus, &mut stats);
+                mem.tick(&bus, &mut stats);
+                if !dma.busy() && stats.get("dma.launches") == 1 {
+                    let want: Vec<u8> = (0..1024usize).map(|i| (i * 7) as u8).collect();
+                    assert_eq!(&mem.mem()[0x2000..0x2400], &want[..], "out={max_outstanding}");
+                    return t;
+                }
+            }
+            panic!("copy never completed (out={max_outstanding})");
+        };
+        let fast = run_mode(4);
+        let slow = run_mode(1);
+        assert!(fast < slow, "multi-outstanding ({fast}) must beat blocking ({slow})");
     }
 
     #[test]

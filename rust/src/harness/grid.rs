@@ -24,6 +24,11 @@ pub struct SweepGrid {
     /// workloads go PTW-bound as this shrinks; bare-metal workloads are
     /// insensitive to it).
     pub tlb_entries: Vec<usize>,
+    /// LLC MSHR depths to sweep (the memory-level-parallelism axis:
+    /// `--mshrs`).
+    pub mshrs: Vec<usize>,
+    /// DMA/DSA outstanding-burst caps to sweep (`--outstanding`).
+    pub outstanding: Vec<usize>,
     /// Safety bound handed to every scenario.
     pub max_cycles: u64,
 }
@@ -45,6 +50,8 @@ impl SweepGrid {
     /// A 1×1×1×1×1 grid around `base`: the Neo point, NOP workload.
     pub fn new(base: CheshireConfig) -> Self {
         let tlb = base.tlb_entries;
+        let mshrs = base.llc_mshrs;
+        let outstanding = base.max_outstanding;
         Self {
             base,
             workloads: vec![Workload::Nop { window: 200_000 }],
@@ -52,6 +59,8 @@ impl SweepGrid {
             spm_way_masks: vec![0xff],
             dsa_ports: vec![0],
             tlb_entries: vec![tlb],
+            mshrs: vec![mshrs],
+            outstanding: vec![outstanding],
             max_cycles: 20_000_000,
         }
     }
@@ -68,22 +77,34 @@ impl SweepGrid {
         g
     }
 
-    /// Deduplicated copies of the five axes, in first-occurrence order.
+    /// Deduplicated copies of the seven axes, in first-occurrence order.
     #[allow(clippy::type_complexity)]
-    fn axes(&self) -> (Vec<Workload>, Vec<MemBackend>, Vec<u32>, Vec<usize>, Vec<usize>) {
+    fn axes(
+        &self,
+    ) -> (
+        Vec<Workload>,
+        Vec<MemBackend>,
+        Vec<u32>,
+        Vec<usize>,
+        Vec<usize>,
+        Vec<usize>,
+        Vec<usize>,
+    ) {
         (
             dedup_preserve(&self.workloads),
             dedup_preserve(&self.backends),
             dedup_preserve(&self.spm_way_masks),
             dedup_preserve(&self.dsa_ports),
             dedup_preserve(&self.tlb_entries),
+            dedup_preserve(&self.mshrs),
+            dedup_preserve(&self.outstanding),
         )
     }
 
     /// Number of scenarios the grid expands to (after axis dedup).
     pub fn len(&self) -> usize {
-        let (w, b, m, d, t) = self.axes();
-        w.len() * b.len() * m.len() * d.len() * t.len()
+        let (w, b, m, d, t, ms, o) = self.axes();
+        w.len() * b.len() * m.len() * d.len() * t.len() * ms.len() * o.len()
     }
 
     /// Whether the grid is empty (any axis without values).
@@ -93,19 +114,25 @@ impl SweepGrid {
 
     /// Expand the cartesian product into concrete scenarios.
     pub fn scenarios(&self) -> Vec<Scenario> {
-        let (workloads, backends, masks, dsa_ports, tlbs) = self.axes();
+        let (workloads, backends, masks, dsa_ports, tlbs, mshrs, outs) = self.axes();
         let mut out = Vec::with_capacity(self.len());
         for wl in &workloads {
             for &backend in &backends {
                 for &mask in &masks {
                     for &dsa in &dsa_ports {
                         for &tlb in &tlbs {
-                            let mut cfg = self.base.clone();
-                            cfg.backend = backend;
-                            cfg.spm_way_mask = mask;
-                            cfg.dsa_port_pairs = dsa;
-                            cfg.tlb_entries = tlb;
-                            out.push(Scenario::new(cfg, wl.clone(), self.max_cycles));
+                            for &ms in &mshrs {
+                                for &o in &outs {
+                                    let mut cfg = self.base.clone();
+                                    cfg.backend = backend;
+                                    cfg.spm_way_mask = mask;
+                                    cfg.dsa_port_pairs = dsa;
+                                    cfg.tlb_entries = tlb;
+                                    cfg.llc_mshrs = ms;
+                                    cfg.max_outstanding = o;
+                                    out.push(Scenario::new(cfg, wl.clone(), self.max_cycles));
+                                }
+                            }
                         }
                     }
                 }
@@ -145,9 +172,27 @@ mod tests {
         g.tlb_entries = vec![16, 4, 16]; // duplicate deduped
         assert_eq!(g.len(), 2);
         let scs = g.scenarios();
-        assert!(scs[0].name.ends_with("/tlb16"));
-        assert!(scs[1].name.ends_with("/tlb4"));
+        assert!(scs[0].name.contains("/tlb16/"));
+        assert!(scs[1].name.contains("/tlb4/"));
         assert_eq!(scs[1].cfg.tlb_entries, 4);
+    }
+
+    #[test]
+    fn mshr_and_outstanding_axes_expand() {
+        let mut g = SweepGrid::new(CheshireConfig::neo());
+        g.mshrs = vec![1, 4, 8];
+        g.outstanding = vec![1, 4];
+        assert_eq!(g.len(), 6);
+        let scs = g.scenarios();
+        assert_eq!(scs.len(), 6);
+        assert!(scs[0].name.ends_with("/mshr1/out1"));
+        assert!(scs[5].name.ends_with("/mshr8/out4"));
+        assert_eq!(scs[2].cfg.llc_mshrs, 4);
+        assert_eq!(scs[3].cfg.max_outstanding, 4);
+        let mut names: Vec<_> = scs.iter().map(|s| s.name.clone()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 6, "all scenario names unique");
     }
 
     #[test]

@@ -40,19 +40,11 @@ impl SweepReport {
         Self { results }
     }
 
-    /// Useful external-memory bytes moved, whichever backend ran.
-    fn dram_bytes(r: &ScenarioResult) -> u64 {
-        r.stats.get("rpc.useful_rd_bytes")
-            + r.stats.get("rpc.useful_wr_bytes")
-            + r.stats.get("hyper.useful_rd_bytes")
-            + r.stats.get("hyper.useful_wr_bytes")
-    }
-
     /// Comparative summary table (one row per scenario).
     pub fn table(&self) -> Table {
         let mut t = Table::new(
             "Sweep report — one SoC instance per scenario",
-            &["scenario", "cycles", "halted", "instr", "dram B", "CORE mW", "IO mW", "RAM mW", "TOTAL mW", "Mcyc/s"],
+            &["scenario", "cycles", "halted", "instr", "dram B", "B/cyc", "CORE mW", "IO mW", "RAM mW", "TOTAL mW", "Mcyc/s"],
         );
         for r in &self.results {
             t.row(&[
@@ -60,7 +52,8 @@ impl SweepReport {
                 r.cycles.to_string(),
                 if r.halted { "yes".into() } else { "-".into() },
                 r.stats.get("cpu.instr").to_string(),
-                Self::dram_bytes(r).to_string(),
+                r.dram_bytes().to_string(),
+                format!("{:.3}", r.dram_bytes_per_cycle()),
                 f1(r.power.core_mw),
                 f1(r.power.io_mw),
                 f1(r.power.ram_mw),
@@ -92,6 +85,9 @@ impl SweepReport {
             out.push_str(&format!("      \"spm_way_mask\": {},\n", r.spm_way_mask));
             out.push_str(&format!("      \"dsa_ports\": {},\n", r.dsa_ports));
             out.push_str(&format!("      \"tlb_entries\": {},\n", r.tlb_entries));
+            out.push_str(&format!("      \"mshrs\": {},\n", r.mshrs));
+            out.push_str(&format!("      \"outstanding\": {},\n", r.outstanding));
+            out.push_str(&format!("      \"blocking\": {},\n", r.blocking));
             out.push_str(&format!("      \"freq_hz\": {},\n", r.freq_hz));
             out.push_str(&format!("      \"cycles\": {},\n", r.cycles));
             out.push_str(&format!("      \"halted\": {},\n", r.halted));
@@ -163,6 +159,9 @@ mod tests {
             spm_way_mask: 0xff,
             dsa_ports: 0,
             tlb_entries: 16,
+            mshrs: 4,
+            outstanding: 4,
+            blocking: false,
             freq_hz: 200.0e6,
             cycles,
             halted: false,

@@ -1,6 +1,7 @@
 //! One sweep point: a platform configuration + a workload, run to
 //! completion on a private SoC instance.
 
+use crate::dsa::matmul::MatmulDsa;
 use crate::dsa::traffic::TrafficGen;
 use crate::model::{PowerModel, PowerReport};
 use crate::platform::config::MemBackend;
@@ -46,6 +47,22 @@ pub enum Workload {
         /// CLINT ticks until the (single) timer interrupt.
         timer_delta: u32,
     },
+    /// Mixed-traffic contention: CPU streaming over the SPM while the DMA
+    /// engine and the matmul DSA concurrently hammer DRAM; halts on
+    /// ebreak after flushing the LLC (the non-blocking-hierarchy
+    /// acceptance scenario — `bench_membw` measures it in both modes).
+    Contention {
+        /// Bytes the DMA copies DRAM→SPM, in KiB (clamped so the SPM
+        /// destination fits above the CPU's streaming window).
+        dma_kib: u32,
+        /// Matmul DSA tile dimension (operands are `n×n` f32, in DRAM).
+        tile_n: u32,
+        /// Back-to-back accumulating DSA tile jobs.
+        jobs: u32,
+        /// SPM window the CPU streams over, in KiB (clamped to the
+        /// configured SPM size at staging time).
+        spm_kib: u32,
+    },
 }
 
 impl Workload {
@@ -57,11 +74,12 @@ impl Workload {
             Workload::TwoMm { .. } => "twomm",
             Workload::Mem { .. } => "mem",
             Workload::Supervisor { .. } => "supervisor",
+            Workload::Contention { .. } => "contention",
         }
     }
 
     /// Parse a user-facing workload name with bench-calibrated defaults
-    /// (`wfi` | `nop` | `twomm` | `mem` | `supervisor`).
+    /// (`wfi` | `nop` | `twomm` | `mem` | `supervisor` | `contention`).
     pub fn parse(s: &str) -> Result<Self, String> {
         match s.trim().to_ascii_lowercase().as_str() {
             "wfi" => Ok(Workload::Wfi { window: 200_000 }),
@@ -71,9 +89,12 @@ impl Workload {
             "supervisor" | "sv39" => {
                 Ok(Workload::Supervisor { demand_pages: 8, timer_delta: 20_000 })
             }
-            other => {
-                Err(format!("unknown workload {other:?} (want wfi|nop|twomm|mem|supervisor)"))
+            "contention" => {
+                Ok(Workload::Contention { dma_kib: 32, tile_n: 16, jobs: 2, spm_kib: 32 })
             }
+            other => Err(format!(
+                "unknown workload {other:?} (want wfi|nop|twomm|mem|supervisor|contention)"
+            )),
         }
     }
 
@@ -105,6 +126,49 @@ impl Workload {
                 );
                 workloads::supervisor_program(DRAM_BASE, demand_pages, timer_delta)
             }
+            Workload::Contention { dma_kib, tile_n, jobs, spm_kib } => {
+                assert!(
+                    soc.cfg.dsa_port_pairs >= 1,
+                    "contention workload drives the matmul DSA on port pair 0"
+                );
+                // The CPU streams [SPM_BASE, +window); the DMA lands its
+                // DRAM→SPM copy directly above, so both are clamped to
+                // the configured SPM size (window to at most half of it).
+                let spm_total = soc.llc.spm_bytes();
+                assert!(
+                    spm_total > 0,
+                    "contention workload streams the SPM: spm_way_mask must \
+                     configure at least one way as SPM (got 0 SPM bytes)"
+                );
+                let window = ((spm_kib.max(1) as usize * 1024).min((spm_total / 2).max(64))
+                    / 64
+                    * 64)
+                    .max(64);
+                let dma_bytes = ((dma_kib.max(1) as usize * 1024)
+                    .min(spm_total.saturating_sub(window).max(64))
+                    / 64
+                    * 64)
+                    .max(64);
+                let src: Vec<u8> = (0..dma_bytes as u32)
+                    .map(|i| (i.wrapping_mul(13).wrapping_add(7)) as u8)
+                    .collect();
+                soc.dram_write(workloads::CONTENTION_DMA_SRC_OFF as usize, &src);
+                let n = tile_n.max(1) as usize;
+                let tile = |seed: f32| -> Vec<u8> {
+                    (0..n * n)
+                        .flat_map(|i| (((i as f32 * 0.37 + seed) % 3.0) - 1.5).to_le_bytes())
+                        .collect()
+                };
+                soc.dram_write(workloads::CONTENTION_DSA_A_OFF as usize, &tile(1.0));
+                soc.dram_write(workloads::CONTENTION_DSA_B_OFF as usize, &tile(2.0));
+                workloads::contention_program(
+                    DRAM_BASE,
+                    dma_bytes as u32,
+                    tile_n.max(1),
+                    jobs.max(1),
+                    window as u32,
+                )
+            }
         }
     }
 
@@ -134,15 +198,27 @@ pub struct Scenario {
 
 impl Scenario {
     /// Build a scenario with a generated `name` of the form
-    /// `<workload>/<backend>/spm<mask>/dsa<n>/tlb<e>`.
-    pub fn new(cfg: CheshireConfig, workload: Workload, max_cycles: u64) -> Self {
+    /// `<workload>/<backend>/spm<mask>/dsa<n>/tlb<e>/mshr<m>/out<o>`
+    /// (plus `/blk` when the blocking memory hierarchy is selected).
+    ///
+    /// The `contention` workload needs the matmul DSA on port pair 0, so
+    /// a zero `dsa_port_pairs` is normalized to one *here* — the stored
+    /// config, the scenario name, and the eventual [`ScenarioResult`]
+    /// all describe the configuration that actually runs.
+    pub fn new(mut cfg: CheshireConfig, workload: Workload, max_cycles: u64) -> Self {
+        if matches!(workload, Workload::Contention { .. }) && cfg.dsa_port_pairs == 0 {
+            cfg.dsa_port_pairs = 1;
+        }
         let name = format!(
-            "{}/{}/spm{:02x}/dsa{}/tlb{}",
+            "{}/{}/spm{:02x}/dsa{}/tlb{}/mshr{}/out{}{}",
             workload.name(),
             cfg.backend,
             cfg.spm_way_mask,
             cfg.dsa_port_pairs,
-            cfg.tlb_entries
+            cfg.tlb_entries,
+            cfg.llc_mshrs,
+            cfg.max_outstanding,
+            if cfg.mem_blocking { "/blk" } else { "" }
         );
         Self { name, cfg, workload, max_cycles }
     }
@@ -153,27 +229,38 @@ impl Scenario {
     /// [`TrafficGen`] streaming fixed-seed bursts at the top of DRAM — the
     /// paper's "DSA saturating its attachment point" contention load — so
     /// the `dsa` axis measures interconnect interference, not idle ports.
+    /// The `contention` workload instead puts a [`MatmulDsa`] on port
+    /// pair 0 (guaranteed to exist — [`Scenario::new`] normalizes the
+    /// pair count): its CPU program drives that accelerator's register
+    /// window directly.
     pub fn run(&self) -> ScenarioResult {
-        let mut soc = Soc::new(self.cfg.clone());
-        for i in 0..self.cfg.dsa_port_pairs {
+        let contention = matches!(self.workload, Workload::Contention { .. });
+        let cfg = &self.cfg; // Scenario::new already normalized dsa pairs
+        let mut soc = Soc::new(cfg.clone());
+        let mut first_tg = 0;
+        if contention {
+            soc.plug_dsa(0, Box::new(MatmulDsa::new(None, "matmul_acc")));
+            first_tg = 1;
+        }
+        for i in first_tg..cfg.dsa_port_pairs {
             // 1 KiB bursts, ~50 % writes, one burst per 64 cycles, forever,
             // confined to the top quarter of DRAM — above the MEM
             // workload's fixed DMA destination (offset 8 MiB) for any
             // dram_bytes > ~11 MiB, so the dsa axis measures interconnect
             // interference rather than destination clobbering. Never larger
             // than DRAM itself, so the base stays in-range.
-            let window = (self.cfg.dram_bytes as u64 / 4).max(1);
-            soc.plug_dsa(
-                i,
-                Box::new(TrafficGen::new(
-                    DRAM_BASE + self.cfg.dram_bytes as u64 - window,
-                    window,
-                    1024,
-                    128,
-                    64,
-                    0,
-                )),
+            let window = (cfg.dram_bytes as u64 / 4).max(1);
+            let mut tg = TrafficGen::new(
+                DRAM_BASE + cfg.dram_bytes as u64 - window,
+                window,
+                1024,
+                128,
+                64,
+                0,
             );
+            tg.max_outstanding =
+                if cfg.mem_blocking { 1 } else { cfg.max_outstanding.max(1) as u64 };
+            soc.plug_dsa(i, Box::new(tg));
         }
         let img = self.workload.stage(&mut soc);
         soc.preload(&img, DRAM_BASE);
@@ -200,6 +287,9 @@ impl Scenario {
             spm_way_mask: self.cfg.spm_way_mask,
             dsa_ports: self.cfg.dsa_port_pairs,
             tlb_entries: self.cfg.tlb_entries,
+            mshrs: self.cfg.llc_mshrs,
+            outstanding: self.cfg.max_outstanding,
+            blocking: self.cfg.mem_blocking,
             freq_hz: self.cfg.freq_hz,
             cycles,
             halted,
@@ -228,6 +318,13 @@ pub struct ScenarioResult {
     pub dsa_ports: usize,
     /// I/D TLB entries the CVA6 ran with (the Sv39 VM-pressure axis).
     pub tlb_entries: usize,
+    /// LLC MSHR file depth the scenario ran with (the memory-level
+    /// parallelism axis).
+    pub mshrs: usize,
+    /// DMA/DSA outstanding-burst cap the scenario ran with.
+    pub outstanding: usize,
+    /// Whether the blocking memory-hierarchy fallback was active.
+    pub blocking: bool,
     /// Clock frequency the power numbers are reported at.
     pub freq_hz: f64,
     /// Cycles consumed (the fixed window for wfi/nop, actual for others).
@@ -252,6 +349,20 @@ impl ScenarioResult {
     pub fn sim_cycles_per_sec(&self) -> f64 {
         self.cycles as f64 / self.host_seconds
     }
+
+    /// Useful external-memory bytes moved, whichever backend ran.
+    pub fn dram_bytes(&self) -> u64 {
+        self.stats.get("rpc.useful_rd_bytes")
+            + self.stats.get("rpc.useful_wr_bytes")
+            + self.stats.get("hyper.useful_rd_bytes")
+            + self.stats.get("hyper.useful_wr_bytes")
+    }
+
+    /// Aggregate DRAM bytes per simulated cycle — the `bench_membw`
+    /// metric the non-blocking hierarchy is gated on.
+    pub fn dram_bytes_per_cycle(&self) -> f64 {
+        self.dram_bytes() as f64 / self.cycles.max(1) as f64
+    }
 }
 
 #[cfg(test)]
@@ -260,7 +371,7 @@ mod tests {
 
     #[test]
     fn workload_parse_roundtrips_names() {
-        for name in ["wfi", "nop", "twomm", "mem", "supervisor"] {
+        for name in ["wfi", "nop", "twomm", "mem", "supervisor", "contention"] {
             assert_eq!(Workload::parse(name).unwrap().name(), name);
         }
         assert!(Workload::parse("fft").is_err());
@@ -273,8 +384,30 @@ mod tests {
         cfg.dsa_port_pairs = 1;
         cfg.backend = MemBackend::HyperRam;
         cfg.tlb_entries = 4;
+        let sc = Scenario::new(cfg.clone(), Workload::parse("mem").unwrap(), 1_000_000);
+        assert_eq!(sc.name, "mem/hyperram/spm0f/dsa1/tlb4/mshr4/out4");
+        cfg.llc_mshrs = 8;
+        cfg.max_outstanding = 2;
+        cfg.mem_blocking = true;
         let sc = Scenario::new(cfg, Workload::parse("mem").unwrap(), 1_000_000);
-        assert_eq!(sc.name, "mem/hyperram/spm0f/dsa1/tlb4");
+        assert_eq!(sc.name, "mem/hyperram/spm0f/dsa1/tlb4/mshr8/out2/blk");
+    }
+
+    /// The contention scenario self-provisions its matmul DSA, halts, and
+    /// emits its UART signature — the tier-1 exercise of the non-blocking
+    /// hierarchy under mixed CPU+DMA+DSA traffic.
+    #[test]
+    fn contention_scenario_runs_and_halts() {
+        let mut cfg = CheshireConfig::neo();
+        cfg.spm_way_mask = 0x0f; // half the LLC as cache: MSHRs engage
+        let wl = Workload::Contention { dma_kib: 8, tile_n: 8, jobs: 1, spm_kib: 16 };
+        let sc = Scenario::new(cfg, wl, 10_000_000);
+        let r = sc.run();
+        assert!(r.halted, "{}: contention must halt", r.name);
+        assert!(r.dram_bytes() > 8 * 1024, "DRAM saw real traffic");
+        assert!(r.stats.get("llc.mshr_alloc") + r.stats.get("llc.mshr_lookahead") > 0);
+        assert!(r.stats.get("dsa.jobs") >= 1, "the matmul DSA ran");
+        assert_eq!(r.stats.get("rpc.dev_violations"), 0);
     }
 
     #[test]

@@ -67,15 +67,39 @@ struct HyperOp {
     /// Busy until (current chunk completes).
     busy_until: Cycle,
     chunk_inflight: bool,
+    /// Adoption order (FCFS tiebreak when both slots want the bus).
+    seq: u64,
+}
+
+impl HyperOp {
+    /// Device-relative address range this transaction touches.
+    fn range(&self, base: u64) -> (u64, u64) {
+        let start = self.txn.addr - base;
+        (start, start + ((self.txn.len as u64 + 1) << self.txn.size))
+    }
 }
 
 /// HyperRAM controller + device in one component (self-refreshing device).
+///
+/// The controller holds up to one read and one write transaction
+/// concurrently: a new AR/AW is adopted (in serializer FCFS order) while
+/// the other-direction transaction is still collecting or streaming data,
+/// and their HyperBus chunks interleave on the shared 8 b bus in adoption
+/// order. Transactions with overlapping address ranges never coexist, so
+/// read-after-write order is preserved. `blocking = true` restores the
+/// strict one-transaction-at-a-time baseline.
 pub struct HyperRam {
     base: u64,
     storage: Vec<u8>,
     t: HyperTiming,
     ser: Serializer,
-    op: Option<HyperOp>,
+    rd_op: Option<HyperOp>,
+    wr_op: Option<HyperOp>,
+    /// The shared HyperBus is occupied until this cycle.
+    bus_free_at: Cycle,
+    next_seq: u64,
+    /// Single-transaction fallback (`--blocking`).
+    pub blocking: bool,
     next_refresh: Cycle,
     refresh_until: Cycle,
 }
@@ -88,7 +112,11 @@ impl HyperRam {
             storage: vec![0; size],
             t: HyperTiming::c200(),
             ser: Serializer::new(8),
-            op: None,
+            rd_op: None,
+            wr_op: None,
+            bus_free_at: 0,
+            next_seq: 0,
+            blocking: false,
             next_refresh: 0,
             refresh_until: 0,
         }
@@ -116,86 +144,78 @@ impl HyperRam {
             stats.bump("hyper.self_refresh");
         }
         self.ser.tick(bus);
-        if self.op.is_none() {
-            if let Some(txn) = self.ser.pop() {
-                let bytes = (txn.len as u64 + 1) << txn.size;
-                let mut chunks = VecDeque::new();
-                let mut a = txn.addr - self.base;
-                let mut left = bytes;
-                while left > 0 {
-                    let n = left.min(self.t.max_burst - (a % self.t.max_burst));
-                    chunks.push_back((a, n));
-                    a += n;
-                    left -= n;
-                }
-                stats.bump("hyper.txns");
-                self.op = Some(HyperOp {
-                    chunks,
-                    rbuf: VecDeque::new(),
-                    beat: 0,
-                    wbuf: vec![0; bytes as usize],
-                    wvalid: vec![false; bytes as usize],
-                    collected: 0,
-                    beats_seen: 0,
-                    busy_until: 0,
-                    chunk_inflight: false,
-                    txn,
-                });
-            }
-        }
-        let Some(op) = &mut self.op else { return };
+        self.adopt(stats);
 
         // collect write beats (one per cycle)
-        if op.txn.write && op.beats_seen <= op.txn.len as u32 {
-            if let Some(w) = bus.w.borrow_mut().pop() {
-                let nbytes = 1usize << op.txn.size;
-                let a = beat_addr(op.txn.addr, op.txn.size, crate::axi::types::Burst::Incr, op.beats_seen);
-                let lane0 = (a as usize) & 7;
-                let off = (a - op.txn.addr) as usize;
-                for i in 0..nbytes {
-                    let lane = lane0 + i;
-                    if lane < w.data.len() && (w.strb >> lane) & 1 == 1 {
-                        op.wbuf[off + i] = w.data[lane];
-                        op.wvalid[off + i] = true;
+        if let Some(op) = &mut self.wr_op {
+            if op.beats_seen <= op.txn.len as u32 {
+                if let Some(w) = bus.w.borrow_mut().pop() {
+                    let nbytes = 1usize << op.txn.size;
+                    let a = beat_addr(op.txn.addr, op.txn.size, crate::axi::types::Burst::Incr, op.beats_seen);
+                    let lane0 = (a as usize) & 7;
+                    let off = (a - op.txn.addr) as usize;
+                    for i in 0..nbytes {
+                        let lane = lane0 + i;
+                        if lane < w.data.len() && (w.strb >> lane) & 1 == 1 {
+                            op.wbuf[off + i] = w.data[lane];
+                            op.wvalid[off + i] = true;
+                        }
                     }
+                    op.collected = op.collected.max(off + nbytes);
+                    op.beats_seen += 1;
                 }
-                op.collected = op.collected.max(off + nbytes);
-                op.beats_seen += 1;
             }
         }
 
+        // launch the next chunk on the shared bus: among ops with a ready
+        // chunk, the earlier-adopted one goes first (FCFS)
         let stalled = now < self.refresh_until;
-
-        // launch the next chunk when free
-        if !op.chunk_inflight && !stalled && now >= op.busy_until {
-            if let Some(&(a, n)) = op.chunks.front() {
+        if !stalled && now >= self.bus_free_at {
+            let base = self.base;
+            let ready_seq = |op: &Option<HyperOp>| -> Option<u64> {
+                let op = op.as_ref()?;
+                if op.chunk_inflight {
+                    return None;
+                }
+                let &(a, n) = op.chunks.front()?;
                 let ready = if op.txn.write {
-                    op.collected as u64 >= (a - (op.txn.addr - self.base)) + n
+                    op.collected as u64 >= (a - (op.txn.addr - base)) + n
                 } else {
                     true
                 };
-                if ready {
-                    let data_cycles = (n + self.t.bytes_per_cycle - 1) / self.t.bytes_per_cycle;
-                    let lat = self.t.t_ca + self.t.t_acc + data_cycles;
-                    op.busy_until = now + lat;
-                    op.chunk_inflight = true;
-                    stats.add("hyper.db_data_cycles", data_cycles);
-                    stats.add("hyper.db_cmd_cycles", self.t.t_ca);
-                    stats.add("hyper.io_pad_cycles", (data_cycles + self.t.t_ca) * SWITCHING_IOS as u64);
-                    stats.add(
-                        if op.txn.write { "hyper.useful_wr_bytes" } else { "hyper.useful_rd_bytes" },
-                        n,
-                    );
-                }
+                ready.then_some(op.seq)
+            };
+            let pick_write = match (ready_seq(&self.rd_op), ready_seq(&self.wr_op)) {
+                (None, None) => None,
+                (Some(_), None) => Some(false),
+                (None, Some(_)) => Some(true),
+                (Some(r), Some(w)) => Some(w < r),
+            };
+            if let Some(is_write) = pick_write {
+                let op = if is_write { self.wr_op.as_mut().unwrap() } else { self.rd_op.as_mut().unwrap() };
+                let &(_, n) = op.chunks.front().unwrap();
+                let data_cycles = (n + self.t.bytes_per_cycle - 1) / self.t.bytes_per_cycle;
+                let lat = self.t.t_ca + self.t.t_acc + data_cycles;
+                op.busy_until = now + lat;
+                op.chunk_inflight = true;
+                self.bus_free_at = now + lat;
+                stats.add("hyper.db_data_cycles", data_cycles);
+                stats.add("hyper.db_cmd_cycles", self.t.t_ca);
+                stats.add("hyper.io_pad_cycles", (data_cycles + self.t.t_ca) * SWITCHING_IOS as u64);
+                stats.add(
+                    if is_write { "hyper.useful_wr_bytes" } else { "hyper.useful_rd_bytes" },
+                    n,
+                );
+                stats.bump("bw.dram.bursts");
             }
         }
 
-        // complete a chunk
-        if op.chunk_inflight && now >= op.busy_until {
-            let (a, n) = op.chunks.pop_front().unwrap();
-            op.chunk_inflight = false;
-            let off = a as usize;
-            if op.txn.write {
+        // complete chunks
+        if let Some(op) = &mut self.wr_op {
+            if op.chunk_inflight && now >= op.busy_until {
+                let (a, n) = op.chunks.pop_front().unwrap();
+                op.chunk_inflight = false;
+                let off = a as usize;
                 let rel = (a - (op.txn.addr - self.base)) as usize;
                 for i in 0..n as usize {
                     if op.wvalid[rel + i] {
@@ -205,15 +225,25 @@ impl HyperRam {
                 if op.chunks.is_empty() {
                     bus.b.borrow_mut().push(B { id: op.txn.id, resp: Resp::Okay });
                 }
-            } else {
+            }
+        }
+        if let Some(op) = &mut self.rd_op {
+            if op.chunk_inflight && now >= op.busy_until {
+                let (a, n) = op.chunks.pop_front().unwrap();
+                op.chunk_inflight = false;
+                let off = a as usize;
                 for i in 0..n as usize {
                     op.rbuf.push_back(self.storage[off + i]);
                 }
             }
         }
 
+        // retire the write once all chunks are done
+        if matches!(&self.wr_op, Some(op) if op.chunks.is_empty() && !op.chunk_inflight) {
+            self.wr_op = None;
+        }
         // emit read beats / retire
-        if !op.txn.write {
+        if let Some(op) = &mut self.rd_op {
             let nbytes = 1usize << op.txn.size;
             if op.rbuf.len() >= nbytes && bus.r.borrow().can_push() {
                 let a = beat_addr(op.txn.addr, op.txn.size, crate::axi::types::Burst::Incr, op.beat);
@@ -226,11 +256,65 @@ impl HyperRam {
                 bus.r.borrow_mut().push(R { id: op.txn.id, data, resp: Resp::Okay, last });
                 op.beat += 1;
                 if last {
-                    self.op = None;
+                    self.rd_op = None;
                 }
             }
-        } else if op.chunks.is_empty() && !op.chunk_inflight {
-            self.op = None;
+        }
+    }
+
+    /// Adopt the serializer's front transaction into its direction slot.
+    /// FCFS order is preserved (only the front may be adopted); in
+    /// blocking mode both slots must be empty; transactions overlapping an
+    /// in-flight one of the other direction wait (read-after-write order).
+    fn adopt(&mut self, stats: &mut Stats) {
+        let Some(front) = self.ser.peek() else { return };
+        let write = front.write;
+        let slot_free = if write { self.wr_op.is_none() } else { self.rd_op.is_none() };
+        if !slot_free {
+            return;
+        }
+        if self.blocking && (self.rd_op.is_some() || self.wr_op.is_some()) {
+            return;
+        }
+        let bytes = (front.len as u64 + 1) << front.size;
+        let start = front.addr - self.base;
+        let other = if write { &self.rd_op } else { &self.wr_op };
+        if let Some(o) = other {
+            let (os, oe) = o.range(self.base);
+            if start < oe && os < start + bytes {
+                stats.bump("hyper.hazard_wait");
+                return;
+            }
+        }
+        let txn = self.ser.pop().unwrap();
+        let mut chunks = VecDeque::new();
+        let mut a = start;
+        let mut left = bytes;
+        while left > 0 {
+            let n = left.min(self.t.max_burst - (a % self.t.max_burst));
+            chunks.push_back((a, n));
+            a += n;
+            left -= n;
+        }
+        stats.bump("hyper.txns");
+        let op = HyperOp {
+            chunks,
+            rbuf: VecDeque::new(),
+            beat: 0,
+            wbuf: vec![0; bytes as usize],
+            wvalid: vec![false; bytes as usize],
+            collected: 0,
+            beats_seen: 0,
+            busy_until: 0,
+            chunk_inflight: false,
+            seq: self.next_seq,
+            txn,
+        };
+        self.next_seq += 1;
+        if write {
+            self.wr_op = Some(op);
+        } else {
+            self.rd_op = Some(op);
         }
     }
 }
@@ -241,7 +325,7 @@ impl Component for HyperRam {
     /// (absolute) due cycle is the deadline — the refresh accounting at
     /// that cycle must run for real to keep `hyper.self_refresh` exact.
     fn activity(&self, now: Cycle) -> Activity {
-        if !self.ser.is_empty() || self.op.is_some() {
+        if !self.ser.is_empty() || self.rd_op.is_some() || self.wr_op.is_some() {
             return Activity::Busy;
         }
         if now >= self.next_refresh {
@@ -286,6 +370,85 @@ mod tests {
             beats += 1;
         }
         assert_eq!(beats, 4);
+    }
+
+    /// A read adopted while a prior (disjoint) write is still collecting
+    /// its W beats completes much earlier than in blocking mode, where it
+    /// must wait for the whole write to finish.
+    #[test]
+    fn read_overlaps_slow_write_staging() {
+        let run_mode = |blocking: bool| -> u64 {
+            let mut h = HyperRam::new(0, 0x10000);
+            h.blocking = blocking;
+            for i in 0..8 {
+                h.raw_mut()[0x2000 + i] = 0x60 + i as u8;
+            }
+            let bus = axi_bus(8);
+            let (mut now, mut stats) = (0u64, Stats::new());
+            bus.aw.borrow_mut().push(Aw { id: 1, addr: 0x100, len: 31, size: 3, burst: Burst::Incr, qos: 0 });
+            bus.ar.borrow_mut().push(Ar { id: 2, addr: 0x2000, len: 0, size: 3, burst: Burst::Incr, qos: 0 });
+            let mut w_sent = 0u32;
+            let mut read_done_at = None;
+            let mut write_done = false;
+            for _ in 0..6000 {
+                // W beats dribble in slowly (a busy fabric upstream)
+                if w_sent < 32 && now % 8 == 0 && bus.w.borrow().can_push() {
+                    bus.w.borrow_mut().push(W {
+                        data: vec![w_sent as u8; 8],
+                        strb: full_strb(8),
+                        last: w_sent == 31,
+                    });
+                    w_sent += 1;
+                }
+                h.tick(&bus, now, &mut stats);
+                while let Some(r) = bus.r.borrow_mut().pop() {
+                    assert_eq!(r.id, 2);
+                    assert_eq!(&r.data[..8], &[0x60, 0x61, 0x62, 0x63, 0x64, 0x65, 0x66, 0x67]);
+                    if r.last {
+                        read_done_at = Some(now);
+                    }
+                }
+                if bus.b.borrow_mut().pop().is_some() {
+                    write_done = true;
+                }
+                now += 1;
+                if read_done_at.is_some() && write_done {
+                    break;
+                }
+            }
+            assert!(write_done, "write completed (blocking={blocking})");
+            read_done_at.expect("read completed")
+        };
+        let nb = run_mode(false);
+        let blk = run_mode(true);
+        assert!(nb < blk, "overlapped read ({nb}) must beat blocking ({blk})");
+    }
+
+    /// A read overlapping an in-flight write's address range is held back
+    /// until the write lands — it must observe the written data.
+    #[test]
+    fn same_address_read_after_write_stays_ordered() {
+        let mut h = HyperRam::new(0, 0x1000);
+        let bus = axi_bus(8);
+        let (mut now, mut stats) = (0u64, Stats::new());
+        bus.aw.borrow_mut().push(Aw { id: 1, addr: 0x100, len: 3, size: 3, burst: Burst::Incr, qos: 0 });
+        for i in 0..4u8 {
+            bus.w.borrow_mut().push(W { data: vec![0xc0 + i; 8], strb: full_strb(8), last: i == 3 });
+        }
+        bus.ar.borrow_mut().push(Ar { id: 2, addr: 0x100, len: 3, size: 3, burst: Burst::Incr, qos: 0 });
+        let mut beats = Vec::new();
+        for _ in 0..2000 {
+            h.tick(&bus, now, &mut stats);
+            while let Some(r) = bus.r.borrow_mut().pop() {
+                beats.push(r.data[0]);
+            }
+            now += 1;
+            if beats.len() == 4 {
+                break;
+            }
+        }
+        assert_eq!(beats, vec![0xc0, 0xc1, 0xc2, 0xc3], "read saw the write");
+        assert!(stats.get("hyper.hazard_wait") > 0, "the hazard guard engaged");
     }
 
     /// HyperRAM's peak throughput must stay at its 400 MB/s ceiling:

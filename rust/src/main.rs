@@ -53,15 +53,25 @@ fn load_config_inner(args: &Args, apply_dsa: bool) -> CheshireConfig {
         if let Some(n) = args.get("dsa") {
             cfg.dsa_port_pairs = n.parse().expect("dsa pairs");
         }
+        // for `sweep` these are comma-separated axis lists instead
+        if let Some(n) = args.get("mshrs") {
+            cfg.llc_mshrs = n.parse::<usize>().expect("mshr count").max(1);
+        }
+        if let Some(n) = args.get("outstanding") {
+            cfg.max_outstanding = n.parse::<usize>().expect("outstanding bursts").max(1);
+        }
     }
     if args.flag("no-elide") {
         cfg.elide_idle = false;
+    }
+    if args.flag("blocking") {
+        cfg.mem_blocking = true;
     }
     cfg
 }
 
 fn main() {
-    let args = Args::from_env(&["info", "run", "offload", "boot", "sweep"], &["stats", "serial", "no-elide"]);
+    let args = Args::from_env(&["info", "run", "offload", "boot", "sweep"], &["stats", "serial", "no-elide", "blocking"]);
     match args.subcommand.as_deref() {
         Some("info") => info(&args),
         Some("run") => run(&args),
@@ -70,15 +80,20 @@ fn main() {
         Some("sweep") => sweep(&args),
         _ => {
             eprintln!("usage: cheshire <info|run|offload|boot|sweep> [options]");
-            eprintln!("  run <wfi|nop|twomm|mem|supervisor> [--cycles N] [--freq-mhz F]");
+            eprintln!("  run <wfi|nop|twomm|mem|supervisor|contention> [--cycles N] [--freq-mhz F]");
             eprintln!("      [--demand-pages N] [--timer-delta N]");
+            eprintln!("      [--dma-kib N] [--tile N] [--dsa-jobs N] [--spm-kib N]  (contention)");
+            eprintln!("      [--mshrs N] [--outstanding N]");
             eprintln!("  offload [--n 128] [--tile 64] [--artifacts artifacts/]");
             eprintln!("  boot");
             eprintln!("  sweep [--workloads nop,mem] [--backends rpc,hyperram]");
             eprintln!("        [--spm-masks 0xff,0x0f] [--dsa 0,1] [--tlb 16,4] [--cycles N]");
+            eprintln!("        [--mshrs 1,4,8] [--outstanding 1,4]");
             eprintln!("        [--jobs N] [--serial] [--json sweep.json|-] [--json-arch arch.json]");
             eprintln!("  any subcommand: [--no-elide]  disable event-horizon idle elision");
             eprintln!("                  (architecturally identical, reference cycle loop)");
+            eprintln!("                  [--blocking]  single-outstanding memory hierarchy");
+            eprintln!("                  (pre-MSHR baseline; identical functional outputs)");
             std::process::exit(2);
         }
     }
@@ -126,6 +141,19 @@ fn sweep(args: &Args) {
         s.trim().parse::<usize>().map_err(|e| format!("bad tlb entry count {s:?}: {e}"))
     }) {
         grid.tlb_entries = tlb;
+    }
+    if let Some(mshrs) = parse_axis(args, "mshrs", |s| {
+        s.trim().parse::<usize>().map_err(|e| format!("bad MSHR count {s:?}: {e}")).map(|v| v.max(1))
+    }) {
+        grid.mshrs = mshrs;
+    }
+    if let Some(outs) = parse_axis(args, "outstanding", |s| {
+        s.trim()
+            .parse::<usize>()
+            .map_err(|e| format!("bad outstanding count {s:?}: {e}"))
+            .map(|v| v.max(1))
+    }) {
+        grid.outstanding = outs;
     }
     // `--cycles` is the per-scenario bound for *every* workload: halting
     // workloads get it as their run cap, fixed-window workloads have
@@ -196,7 +224,7 @@ fn info(args: &Args) {
 
 fn run(args: &Args) {
     let which = args.positionals.first().map(|s| s.as_str()).unwrap_or("nop");
-    let cfg = load_config(args);
+    let mut cfg = load_config(args);
     let freq = cfg.freq_hz;
     let cycles = args.get_u64("cycles", 2_000_000);
     // staging lives in harness::Workload so `run` and `sweep` simulate
@@ -210,12 +238,25 @@ fn run(args: &Args) {
             demand_pages: args.get_u64("demand-pages", 8) as u32,
             timer_delta: args.get_u64("timer-delta", 20_000) as u32,
         },
+        "contention" => Workload::Contention {
+            dma_kib: args.get_u64("dma-kib", 32) as u32,
+            tile_n: args.get_u64("tile", 16) as u32,
+            jobs: args.get_u64("dsa-jobs", 2) as u32,
+            spm_kib: args.get_u64("spm-kib", 32) as u32,
+        },
         other => {
             eprintln!("unknown workload {other}");
             std::process::exit(2);
         }
     };
+    // the contention workload drives the matmul DSA on port pair 0
+    if matches!(workload, Workload::Contention { .. }) && cfg.dsa_port_pairs == 0 {
+        cfg.dsa_port_pairs = 1;
+    }
     let mut soc = Soc::new(cfg);
+    if matches!(workload, Workload::Contention { .. }) {
+        soc.plug_dsa(0, Box::new(MatmulDsa::new(None, "matmul_acc")));
+    }
     let img = workload.stage(&mut soc);
     soc.preload(&img, DRAM_BASE);
     let host_t0 = std::time::Instant::now();

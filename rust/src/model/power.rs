@@ -43,6 +43,9 @@ pub struct Energies {
     pub ptw_level: f64,
     /// Per SPM access.
     pub spm_access: f64,
+    /// Per LLC MSHR file operation (allocate / merge / lookahead CAM
+    /// search) — the area/energy price of the non-blocking hierarchy.
+    pub mshr_op: f64,
     /// DMA datapath, per byte moved.
     pub dma_per_byte: f64,
     /// Crossbar switching, per data beat.
@@ -80,6 +83,7 @@ impl Energies {
             tlb_lookup: 18.0,
             ptw_level: 240.0,
             spm_access: 85.0,
+            mshr_op: 22.0,
             dma_per_byte: 14.0,
             xbar_per_beat: 30.0,
             rpc_ctrl_busy_cycle: 200.0,
@@ -138,6 +142,8 @@ impl PowerModel {
                 * (g("mmu.itlb_hit") + g("mmu.itlb_miss") + g("mmu.dtlb_hit") + g("mmu.dtlb_miss"))
             + e.ptw_level * g("mmu.walk_levels")
             + e.spm_access * g("llc.spm_access")
+            + e.mshr_op
+                * (g("llc.mshr_alloc") + g("llc.mshr_merge") + g("llc.mshr_lookahead"))
             + e.dma_per_byte * (g("dma.rd_bytes") + g("dma.wr_bytes"))
             + e.xbar_per_beat * (g("xbar.w") + g("xbar.r"))
             + e.rpc_ctrl_busy_cycle

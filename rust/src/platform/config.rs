@@ -72,6 +72,18 @@ pub struct CheshireConfig {
     /// Initial LLC way mask: set bits are SPM ways, clear bits cache
     /// ways (Neo boots all-SPM, `0xff`).
     pub spm_way_mask: u32,
+    /// LLC miss-status holding registers: line fills that may be in
+    /// flight concurrently (hit-under-miss / miss-under-miss). A sweep
+    /// axis (`--mshrs`).
+    pub llc_mshrs: usize,
+    /// Outstanding bursts the DMA engine and DSA traffic generators may
+    /// keep in flight per direction. A sweep axis (`--outstanding`).
+    pub max_outstanding: usize,
+    /// Blocking memory-hierarchy fallback (`--blocking`): one transaction
+    /// and one fill at a time at every layer — the pre-MSHR baseline the
+    /// `bench_membw` speedup gate compares against. Functional outputs
+    /// are bit-identical to the non-blocking default; only timing moves.
+    pub mem_blocking: bool,
     /// RPC frontend read-buffer size in bytes.
     pub rpc_rd_buf: usize,
     /// RPC frontend write-buffer size in bytes.
@@ -115,6 +127,9 @@ impl CheshireConfig {
             llc_bytes: 128 * 1024,
             llc_ways: 8,
             spm_way_mask: 0xff,
+            llc_mshrs: 4,
+            max_outstanding: 4,
+            mem_blocking: false,
             rpc_rd_buf: 8 * 1024,
             rpc_wr_buf: 8 * 1024,
             dram_bytes: 32 * 1024 * 1024,
@@ -181,6 +196,15 @@ impl CheshireConfig {
         }
         if let Some(v) = get_u("llc.spm_way_mask") {
             c.spm_way_mask = v as u32;
+        }
+        if let Some(v) = get_u("llc.mshrs") {
+            c.llc_mshrs = (v as usize).max(1);
+        }
+        if let Some(v) = get_u("platform.max_outstanding") {
+            c.max_outstanding = (v as usize).max(1);
+        }
+        if let Some(v) = get_b("platform.mem_blocking") {
+            c.mem_blocking = v;
         }
         if let Some(v) = get_u("rpc.rd_buf_kib") {
             c.rpc_rd_buf = v as usize * 1024;
@@ -387,6 +411,25 @@ mod tests {
     fn tlb_entries_load_from_toml() {
         let c = CheshireConfig::from_toml("[platform]\ntlb_entries = 4").unwrap();
         assert_eq!(c.tlb_entries, 4);
+    }
+
+    #[test]
+    fn memory_concurrency_knobs_default_and_load() {
+        let c = CheshireConfig::neo();
+        assert_eq!(c.llc_mshrs, 4, "non-blocking by default");
+        assert_eq!(c.max_outstanding, 4);
+        assert!(!c.mem_blocking);
+        let c = CheshireConfig::from_toml(
+            "[platform]\nmax_outstanding = 8\nmem_blocking = true\n[llc]\nmshrs = 2",
+        )
+        .unwrap();
+        assert_eq!(c.llc_mshrs, 2);
+        assert_eq!(c.max_outstanding, 8);
+        assert!(c.mem_blocking);
+        // zero clamps to one (a zero-depth MSHR file is meaningless)
+        let c = CheshireConfig::from_toml("[llc]\nmshrs = 0\n[platform]\nmax_outstanding = 0").unwrap();
+        assert_eq!(c.llc_mshrs, 1);
+        assert_eq!(c.max_outstanding, 1);
     }
 
     #[test]

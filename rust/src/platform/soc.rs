@@ -162,11 +162,17 @@ impl Soc {
             dram_base: DRAM_BASE,
             dram_size: cfg.dram_bytes as u64,
             spm_way_mask: cfg.spm_way_mask,
+            mshrs: cfg.llc_mshrs,
+            blocking: cfg.mem_blocking,
         });
         let llc_mgr_bus = axi_bus(16);
         let hyperram = match cfg.backend {
             MemBackend::Rpc => None,
-            MemBackend::HyperRam => Some(HyperRam::new(DRAM_BASE, cfg.dram_bytes)),
+            MemBackend::HyperRam => {
+                let mut h = HyperRam::new(DRAM_BASE, cfg.dram_bytes);
+                h.blocking = cfg.mem_blocking;
+                Some(h)
+            }
         };
         // In HyperRAM mode `rpc` stays for API compatibility but is never
         // ticked, so its device shrinks to the minimum legal size — a
@@ -184,6 +190,7 @@ impl Soc {
 
         // --- boot ROM ---
         let mut bootrom = MemSub::new(BOOTROM_BASE, BOOTROM_SIZE as usize, cfg.data_bytes, 1);
+        bootrom.max_reads = if cfg.mem_blocking { 1 } else { 4 };
         bootrom.read_only = true;
         let rom_img = build_bootrom(BOOTROM_BASE, SOC_CTRL_BASE);
         {
@@ -194,7 +201,8 @@ impl Soc {
         }
 
         // --- peripherals on the Regbus ---
-        let (dma, dma_state) = DmaEngine::new();
+        let (mut dma, dma_state) = DmaEngine::new();
+        dma.max_outstanding = if cfg.mem_blocking { 1 } else { cfg.max_outstanding.max(1) as u32 };
         let (vga_scan, vga_state) = VgaScanout::new();
         let clint: Shared<Clint> = Rc::new(RefCell::new(Clint::new()));
         let (plic_raw, _lines) = Plic::new(8);
@@ -208,7 +216,7 @@ impl Soc {
         let mut entries = vec![
             RegMapEntry { base: SOC_CTRL_BASE, size: PERIPH_WIN_SIZE, dev: Box::new(soc_ctrl.clone()) as Box<_> },
             RegMapEntry { base: DMA_BASE, size: PERIPH_WIN_SIZE, dev: Box::new(DmaRegs::new(dma_state.clone())) },
-            RegMapEntry { base: LLC_CFG_BASE, size: PERIPH_WIN_SIZE, dev: Box::new(LlcRegs::new(llc_mask.clone(), &llc.cfg)) },
+            RegMapEntry { base: LLC_CFG_BASE, size: PERIPH_WIN_SIZE, dev: Box::new(LlcRegs::new(llc_mask.clone(), llc.applied_handle(), &llc.cfg)) },
             RegMapEntry { base: RPC_MGR_BASE, size: PERIPH_WIN_SIZE, dev: Box::new(ManagerRegs::new(rpc.ctrl.timing_handle())) },
             RegMapEntry { base: CLINT_BASE, size: CLINT_SIZE, dev: Box::new(clint.clone()) },
             RegMapEntry { base: PLIC_BASE, size: PLIC_SIZE, dev: Box::new(plic.clone()) },
@@ -337,7 +345,7 @@ impl Soc {
         }
 
         // fabric
-        self.xbar.tick(stats);
+        self.xbar.tick(now, stats);
 
         // subordinates
         self.llc.tick(&self.llc_sub_bus, &self.llc_mgr_bus, stats);

@@ -187,6 +187,8 @@ impl Frontend {
         wt.beats_seen += 1;
         self.wr_buf_used += nbytes;
         stats.bump("rpc.fe.w_beats");
+        // per-link busy-beat accounting for the LLC→DRAM link (bw layer)
+        stats.bump("bw.dram.w_beats");
         debug_assert_eq!(w.last, wt.beats_seen == beats, "W last flag mismatch");
     }
 
@@ -384,6 +386,7 @@ impl Frontend {
         let last = s.beat == s.txn.len as u32;
         bus.r.borrow_mut().push(R { id: s.txn.id, data, resp: Resp::Okay, last });
         stats.bump("rpc.fe.r_beats");
+        stats.bump("bw.dram.r_beats");
         s.beat += 1;
         if last {
             self.rd_streams.pop_front();

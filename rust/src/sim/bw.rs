@@ -1,0 +1,258 @@
+//! End-to-end bandwidth and latency accounting.
+//!
+//! The paper's headline numbers are bandwidth numbers (750 MB/s peak RPC
+//! transfer rate, the Fig. 8 bus-utilization sweeps), so the simulator
+//! carries a first-class accounting layer for the memory hierarchy's hot
+//! path: per-manager bytes moved, per-link busy beats, and request-latency
+//! histograms, all surfaced through the ordinary [`Stats`] registry (and
+//! therefore through `ScenarioResult` JSON and the sweep reports).
+//!
+//! Everything here is *passive* bookkeeping: issue cycles are recorded in
+//! absolute time, so the numbers are identical between elided and
+//! unelided runs (the event-horizon invariant) and between the blocking
+//! and non-blocking memory hierarchies' *semantics* — only the latencies
+//! themselves change, which is exactly what the histograms exist to show.
+//!
+//! Measurement point: the crossbar. A read is timed from the cycle its AR
+//! wins arbitration to the cycle its last R beat is routed home; a write
+//! from AW grant to B delivery. The manager index is recovered from the
+//! ID prefix the crossbar already inserts, so attribution is free.
+
+use super::stats::Stats;
+use super::Cycle;
+use std::collections::{HashMap, VecDeque};
+
+/// Per-manager read-byte counters (crossbar manager port index; index 7
+/// absorbs any additional DSA ports beyond the first four).
+const MGR_RD_BYTES: [&str; 8] = [
+    "bw.m0.rd_bytes",
+    "bw.m1.rd_bytes",
+    "bw.m2.rd_bytes",
+    "bw.m3.rd_bytes",
+    "bw.m4.rd_bytes",
+    "bw.m5.rd_bytes",
+    "bw.m6.rd_bytes",
+    "bw.m7.rd_bytes",
+];
+
+/// Per-manager write-byte counters.
+const MGR_WR_BYTES: [&str; 8] = [
+    "bw.m0.wr_bytes",
+    "bw.m1.wr_bytes",
+    "bw.m2.wr_bytes",
+    "bw.m3.wr_bytes",
+    "bw.m4.wr_bytes",
+    "bw.m5.wr_bytes",
+    "bw.m6.wr_bytes",
+    "bw.m7.wr_bytes",
+];
+
+/// Per-subordinate R-channel busy-beat counters (one count per beat the
+/// link actually carried that cycle).
+const SUB_R_BEATS: [&str; 8] = [
+    "bw.s0.r_beats",
+    "bw.s1.r_beats",
+    "bw.s2.r_beats",
+    "bw.s3.r_beats",
+    "bw.s4.r_beats",
+    "bw.s5.r_beats",
+    "bw.s6.r_beats",
+    "bw.s7.r_beats",
+];
+
+/// Per-subordinate W-channel busy-beat counters.
+const SUB_W_BEATS: [&str; 8] = [
+    "bw.s0.w_beats",
+    "bw.s1.w_beats",
+    "bw.s2.w_beats",
+    "bw.s3.w_beats",
+    "bw.s4.w_beats",
+    "bw.s5.w_beats",
+    "bw.s6.w_beats",
+    "bw.s7.w_beats",
+];
+
+/// Read-latency histogram buckets (AR grant → last R routed), log2-spaced.
+const RD_LAT: [&str; 9] = [
+    "bw.rd_lat_le8",
+    "bw.rd_lat_le16",
+    "bw.rd_lat_le32",
+    "bw.rd_lat_le64",
+    "bw.rd_lat_le128",
+    "bw.rd_lat_le256",
+    "bw.rd_lat_le512",
+    "bw.rd_lat_le1024",
+    "bw.rd_lat_gt1024",
+];
+
+/// Write-latency histogram buckets (AW grant → B routed), log2-spaced.
+const WR_LAT: [&str; 9] = [
+    "bw.wr_lat_le8",
+    "bw.wr_lat_le16",
+    "bw.wr_lat_le32",
+    "bw.wr_lat_le64",
+    "bw.wr_lat_le128",
+    "bw.wr_lat_le256",
+    "bw.wr_lat_le512",
+    "bw.wr_lat_le1024",
+    "bw.wr_lat_gt1024",
+];
+
+/// Stats key counting bytes read by crossbar manager `m`.
+pub fn mgr_rd_bytes_key(m: usize) -> &'static str {
+    MGR_RD_BYTES[m.min(MGR_RD_BYTES.len() - 1)]
+}
+
+/// Stats key counting bytes written by crossbar manager `m`.
+pub fn mgr_wr_bytes_key(m: usize) -> &'static str {
+    MGR_WR_BYTES[m.min(MGR_WR_BYTES.len() - 1)]
+}
+
+/// Stats key counting R-channel busy beats on subordinate link `s`.
+pub fn sub_r_beats_key(s: usize) -> &'static str {
+    SUB_R_BEATS[s.min(SUB_R_BEATS.len() - 1)]
+}
+
+/// Stats key counting W-channel busy beats on subordinate link `s`.
+pub fn sub_w_beats_key(s: usize) -> &'static str {
+    SUB_W_BEATS[s.min(SUB_W_BEATS.len() - 1)]
+}
+
+#[inline]
+fn lat_bucket(lat: u64) -> usize {
+    // ≤8 → 0, ≤16 → 1, …, ≤1024 → 7, else 8
+    let mut b = 0usize;
+    let mut bound = 8u64;
+    while b < 8 && lat > bound {
+        bound <<= 1;
+        b += 1;
+    }
+    b
+}
+
+/// Request-latency tracker for one crossbar instance.
+///
+/// Issue cycles are keyed by the *subordinate-side* (prefix-extended) AXI
+/// ID; per-ID response ordering — which the whole fabric preserves — makes
+/// a FIFO per ID exact even with multiple transactions outstanding on the
+/// same ID.
+#[derive(Default)]
+pub struct BwTracker {
+    rd: HashMap<u32, VecDeque<Cycle>>,
+    wr: HashMap<u32, VecDeque<Cycle>>,
+}
+
+impl BwTracker {
+    /// A fresh tracker with nothing in flight.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record an AR winning arbitration for manager `mgr` at cycle `now`.
+    pub fn read_issued(&mut self, id: u32, mgr: usize, bytes: u64, now: Cycle, stats: &mut Stats) {
+        self.rd.entry(id).or_default().push_back(now);
+        stats.add(mgr_rd_bytes_key(mgr), bytes);
+        stats.bump("bw.rd_reqs");
+    }
+
+    /// Record the last R beat of the oldest read on `id` being routed home.
+    pub fn read_done(&mut self, id: u32, now: Cycle, stats: &mut Stats) {
+        if let Some(q) = self.rd.get_mut(&id) {
+            if let Some(t0) = q.pop_front() {
+                let lat = now.saturating_sub(t0);
+                stats.bump(RD_LAT[lat_bucket(lat)]);
+                stats.add("bw.rd_lat_total", lat);
+            }
+            if q.is_empty() {
+                self.rd.remove(&id);
+            }
+        }
+    }
+
+    /// Record an AW winning arbitration for manager `mgr` at cycle `now`.
+    pub fn write_issued(&mut self, id: u32, mgr: usize, bytes: u64, now: Cycle, stats: &mut Stats) {
+        self.wr.entry(id).or_default().push_back(now);
+        stats.add(mgr_wr_bytes_key(mgr), bytes);
+        stats.bump("bw.wr_reqs");
+    }
+
+    /// Record the B response of the oldest write on `id` being routed home.
+    pub fn write_done(&mut self, id: u32, now: Cycle, stats: &mut Stats) {
+        if let Some(q) = self.wr.get_mut(&id) {
+            if let Some(t0) = q.pop_front() {
+                let lat = now.saturating_sub(t0);
+                stats.bump(WR_LAT[lat_bucket(lat)]);
+                stats.add("bw.wr_lat_total", lat);
+            }
+            if q.is_empty() {
+                self.wr.remove(&id);
+            }
+        }
+    }
+
+    /// Whether any request is currently being timed.
+    pub fn is_idle(&self) -> bool {
+        self.rd.is_empty() && self.wr.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_log2_spaced() {
+        assert_eq!(lat_bucket(0), 0);
+        assert_eq!(lat_bucket(8), 0);
+        assert_eq!(lat_bucket(9), 1);
+        assert_eq!(lat_bucket(16), 1);
+        assert_eq!(lat_bucket(100), 4);
+        assert_eq!(lat_bucket(1024), 7);
+        assert_eq!(lat_bucket(5000), 8);
+    }
+
+    #[test]
+    fn read_latency_lands_in_the_right_bucket() {
+        let mut t = BwTracker::new();
+        let mut s = Stats::new();
+        t.read_issued(0x105, 1, 64, 100, &mut s);
+        assert!(!t.is_idle());
+        t.read_done(0x105, 130, &mut s);
+        assert!(t.is_idle());
+        assert_eq!(s.get("bw.rd_lat_le32"), 1);
+        assert_eq!(s.get("bw.rd_lat_total"), 30);
+        assert_eq!(s.get("bw.m1.rd_bytes"), 64);
+        assert_eq!(s.get("bw.rd_reqs"), 1);
+    }
+
+    #[test]
+    fn same_id_requests_complete_fifo() {
+        let mut t = BwTracker::new();
+        let mut s = Stats::new();
+        t.write_issued(7, 0, 8, 10, &mut s);
+        t.write_issued(7, 0, 8, 20, &mut s);
+        t.write_done(7, 30, &mut s); // oldest: 20 cycles
+        t.write_done(7, 30, &mut s); // second: 10 cycles
+        assert_eq!(s.get("bw.wr_lat_total"), 30);
+        assert_eq!(s.get("bw.wr_lat_le16"), 1);
+        assert_eq!(s.get("bw.wr_lat_le8"), 1);
+        assert!(t.is_idle());
+    }
+
+    #[test]
+    fn manager_keys_clamp_past_the_table() {
+        assert_eq!(mgr_rd_bytes_key(0), "bw.m0.rd_bytes");
+        assert_eq!(mgr_rd_bytes_key(12), "bw.m7.rd_bytes");
+        assert_eq!(sub_w_beats_key(2), "bw.s2.w_beats");
+        assert_eq!(sub_r_beats_key(99), "bw.s7.r_beats");
+    }
+
+    #[test]
+    fn completion_without_issue_is_ignored() {
+        let mut t = BwTracker::new();
+        let mut s = Stats::new();
+        t.read_done(42, 10, &mut s);
+        assert_eq!(s.get("bw.rd_lat_total"), 0);
+        assert!(t.is_idle());
+    }
+}

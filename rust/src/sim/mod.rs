@@ -12,10 +12,12 @@
 //! deterministic, RTL-like schedule: a producer's push in cycle *n* is visible
 //! to a consumer ticked earlier in the loop only in cycle *n+1*.
 
+pub mod bw;
 pub mod chan;
 pub mod sched;
 pub mod stats;
 
+pub use bw::BwTracker;
 pub use chan::{link, Chan, Link};
 pub use sched::{Activity, Component};
 pub use stats::Stats;

@@ -17,7 +17,9 @@
 //! timer interrupt through `stvec`, and demand-maps pages on fault.
 
 use crate::asm::{reg::*, Asm};
-use crate::platform::memmap::{CLINT_BASE, DMA_BASE, DRAM_BASE, PLIC_BASE, SPM_BASE};
+use crate::platform::memmap::{
+    CLINT_BASE, DMA_BASE, DRAM_BASE, DSA_BASE, LLC_CFG_BASE, PLIC_BASE, SPM_BASE, UART_BASE,
+};
 
 /// WFI: interrupts disabled ⇒ sleeps for the whole measurement window.
 pub fn wfi_program(base: u64) -> Vec<u8> {
@@ -187,6 +189,155 @@ pub fn mem_program(base: u64, len: u32, reps: u32, max_burst: u32) -> Vec<u8> {
     a.sw(T1, S3, 0);
     a.addi(S1, S1, -1);
     a.bne(S1, ZERO, "again");
+    a.ebreak();
+    a.finish()
+}
+
+/// CONTENTION workload layout: DMA copy source (DRAM offset). The copy
+/// destination is SPM, directly above the CPU's streaming window.
+pub const CONTENTION_DMA_SRC_OFF: u64 = 0x10_0000;
+/// CONTENTION: DSA operand A tile (DRAM offset).
+pub const CONTENTION_DSA_A_OFF: u64 = 0x40_0000;
+/// CONTENTION: DSA operand B tile (DRAM offset).
+pub const CONTENTION_DSA_B_OFF: u64 = 0x41_0000;
+/// CONTENTION: DSA accumulator tile C (DRAM offset; starts zeroed, holds
+/// `jobs · A·B` on completion).
+pub const CONTENTION_DSA_C_OFF: u64 = 0x42_0000;
+
+/// CONTENTION: the mixed-traffic scenario the non-blocking memory
+/// hierarchy is measured on. Three agents hammer the fabric at once:
+///
+/// * the **DMA engine** streams a `dma_bytes` DRAM→SPM copy (destination
+///   at `SPM_BASE + spm_bytes`, directly above the CPU's window) — on a
+///   part-cache LLC its source reads are a wall of line fills;
+/// * the **matmul DSA** (plugged on port pair 0) runs `jobs` back-to-back
+///   accumulating tile jobs with all operands in DRAM;
+/// * the **CPU** streams loads/stores over a `spm_bytes` SPM window at
+///   cache-line stride while polling for completion.
+///
+/// Every agent owns a disjoint address region and all stores are
+/// idempotent functions of their address or of preloaded data, so the
+/// final UART output, DRAM and SPM contents are bit-identical between
+/// the blocking and non-blocking hierarchies — only the cycle count
+/// moves (the `bench_membw` gate). The epilogue runs a fixed full pass
+/// over the SPM window, `fence`s the L1, converts every LLC way to SPM
+/// (flushing dirty lines to DRAM) and polls the applied-mask register,
+/// so no timing-dependent cache residue survives to the final state.
+pub fn contention_program(
+    base: u64,
+    dma_bytes: u32,
+    tile_n: u32,
+    jobs: u32,
+    spm_bytes: u32,
+) -> Vec<u8> {
+    assert!(base == DRAM_BASE, "contention workload is linked for DRAM_BASE");
+    assert!(spm_bytes >= 64 && spm_bytes % 64 == 0, "SPM window is line-strided");
+    assert!(dma_bytes >= 64 && dma_bytes % 64 == 0, "DMA copy is line-granular");
+    let mut a = Asm::new(base);
+    // one chunk of CPU SPM streaming: `iters` line-strided load+store
+    // pairs, values a pure function of the address (idempotent)
+    let mut chunk_id = 0u32;
+    let mut spm_chunk = |a: &mut Asm, iters: i64| {
+        let tag = format!("spmc{chunk_id}");
+        chunk_id += 1;
+        a.li(T2, iters);
+        a.label(&format!("{tag}_top"));
+        a.lw(T0, S2, 0);
+        a.sw(S2, S2, 0); // store low32 of the address itself
+        a.addi(S2, S2, 64);
+        a.blt(S2, S3, &format!("{tag}_nw"));
+        a.mv(S2, S6); // wrap to the window base
+        a.label(&format!("{tag}_nw"));
+        a.addi(T2, T2, -1);
+        a.bne(T2, ZERO, &format!("{tag}_top"));
+    };
+
+    // ---- launch the DMA: DRAM src → SPM dst, one rep, 1 KiB bursts ----
+    a.li(S0, DMA_BASE as i64);
+    a.li(T0, (DRAM_BASE + CONTENTION_DMA_SRC_OFF) as u32 as i64);
+    a.sw(T0, S0, 0x00);
+    a.sw(ZERO, S0, 0x04);
+    a.li(T0, (SPM_BASE + spm_bytes as u64) as u32 as i64);
+    a.sw(T0, S0, 0x08);
+    a.sw(ZERO, S0, 0x0c);
+    a.li(T0, dma_bytes as i64);
+    a.sw(T0, S0, 0x10);
+    a.li(T0, 1);
+    a.sw(T0, S0, 0x1c); // reps
+    a.li(T0, 1024);
+    a.sw(T0, S0, 0x20); // max burst
+    a.li(T0, 1);
+    a.sw(T0, S0, 0x24); // launch
+
+    // ---- program the matmul DSA job (window on port pair 0) ----
+    a.li(S1, DSA_BASE as i64);
+    a.li(T0, (DRAM_BASE + CONTENTION_DSA_A_OFF) as u32 as i64);
+    a.sw(T0, S1, 0x00);
+    a.sw(ZERO, S1, 0x04);
+    a.li(T0, (DRAM_BASE + CONTENTION_DSA_B_OFF) as u32 as i64);
+    a.sw(T0, S1, 0x08);
+    a.sw(ZERO, S1, 0x0c);
+    a.li(T0, (DRAM_BASE + CONTENTION_DSA_C_OFF) as u32 as i64);
+    a.sw(T0, S1, 0x10);
+    a.sw(ZERO, S1, 0x14);
+    a.li(T0, tile_n as i64);
+    a.sw(T0, S1, 0x18);
+    a.li(S4, jobs as i64);
+
+    // ---- SPM stream pointers ----
+    a.li(S6, SPM_BASE as i64);
+    a.li(S3, (SPM_BASE + spm_bytes as u64) as i64);
+    a.mv(S2, S6);
+
+    // ---- run `jobs` DSA tiles, streaming SPM while each one runs ----
+    a.label("dsa_go");
+    a.li(T0, 1);
+    a.sw(T0, S1, 0x1c); // GO
+    a.label("dsa_wait");
+    spm_chunk(&mut a, 16);
+    a.lw(T1, S1, 0x1c);
+    a.andi(T1, T1, 0b10); // done
+    a.beq(T1, ZERO, "dsa_wait");
+    a.addi(S4, S4, -1);
+    a.bne(S4, ZERO, "dsa_go");
+
+    // ---- wait for the DMA, still streaming ----
+    a.label("dma_wait");
+    spm_chunk(&mut a, 16);
+    a.lw(T1, S0, 0x28);
+    a.andi(T1, T1, 0b10); // done
+    a.beq(T1, ZERO, "dma_wait");
+
+    // ---- fixed full SPM pass: erase timing-dependent partial coverage ----
+    a.mv(S2, S6);
+    a.li(S8, spm_bytes as i64 / 64);
+    a.label("final_pass");
+    a.lw(T0, S2, 0);
+    a.sw(S2, S2, 0);
+    a.addi(S2, S2, 64);
+    a.addi(S8, S8, -1);
+    a.bne(S8, ZERO, "final_pass");
+    a.fence(); // write back + invalidate the L1 D-cache
+
+    // ---- flush the LLC: all ways → SPM, poll the applied mask ----
+    a.li(S5, LLC_CFG_BASE as i64);
+    a.lw(T3, S5, 0x4); // way count
+    a.li(T2, 1);
+    a.sll(T2, T2, T3);
+    a.addi(T2, T2, -1); // full SPM mask for this geometry
+    a.sw(T2, S5, 0x0);
+    a.label("flush_poll");
+    a.lw(T1, S5, 0xc); // applied mask
+    a.bne(T1, T2, "flush_poll");
+
+    // ---- signature byte + halt ----
+    a.li(S7, UART_BASE as i64);
+    a.li(T0, b'C' as i64);
+    a.sw(T0, S7, 0);
+    a.label("udrain");
+    a.lw(T1, S7, 0x08);
+    a.andi(T1, T1, 0x20);
+    a.beq(T1, ZERO, "udrain");
     a.ebreak();
     a.finish()
 }

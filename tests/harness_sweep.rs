@@ -172,6 +172,41 @@ fn elided_and_unelided_sweeps_agree_architecturally() {
     );
 }
 
+/// The contention workload in the sweep grid across the new MSHR axis:
+/// parallel ≡ serial bit-identity extends over the non-blocking memory
+/// hierarchy, every point halts, and deeper MSHR files finish the same
+/// work in fewer cycles (memory-level parallelism is real, not a label).
+#[test]
+fn contention_sweeps_deterministically_across_mshr_depths() {
+    let mut g = SweepGrid::new(CheshireConfig::neo());
+    g.workloads = vec![Workload::Contention { dma_kib: 8, tile_n: 8, jobs: 1, spm_kib: 16 }];
+    g.spm_way_masks = vec![0x0f]; // half-cache LLC: fills actually happen
+    g.mshrs = vec![1, 4];
+    g.max_cycles = 20_000_000;
+    assert_eq!(g.len(), 2);
+    let par = harness::run_parallel(g.scenarios(), 2);
+    let ser = harness::run_serial(g.scenarios());
+    for (p, s) in par.iter().zip(&ser) {
+        assert_eq!(p.name, s.name);
+        assert_eq!(p.cycles, s.cycles, "{}: parallel≡serial cycles", p.name);
+        let pv: Vec<_> = p.stats.iter().collect();
+        let sv: Vec<_> = s.stats.iter().collect();
+        assert_eq!(pv, sv, "{}: parallel≡serial stats", p.name);
+        assert!(p.halted, "{}: contention halts", p.name);
+        assert_eq!(p.stats.get("rpc.dev_violations"), 0, "{}", p.name);
+    }
+    let (m1, m4) = (&par[0], &par[1]);
+    assert!(m1.name.contains("/mshr1/"), "grid order: {}", m1.name);
+    assert!(m4.name.contains("/mshr4/"), "grid order: {}", m4.name);
+    assert!(
+        m4.cycles < m1.cycles,
+        "4 MSHRs ({}) must beat 1 MSHR ({})",
+        m4.cycles,
+        m1.cycles
+    );
+    assert!(m4.dram_bytes_per_cycle() > m1.dram_bytes_per_cycle());
+}
+
 #[test]
 fn oversubscribed_thread_count_is_harmless() {
     // more threads than scenarios, and threads == 1, both work

@@ -118,8 +118,8 @@ fn xbar_routes_multi_manager_traffic_exactly_once() {
             mi.w.borrow_mut().push(W { data: val.clone(), strb: full_strb(8), last: true });
             expect.push((sub, addr, val));
         }
-        for _ in 0..2000 {
-            xbar.tick(&mut stats);
+        for now in 0..2000 {
+            xbar.tick(now, &mut stats);
             mem0.tick(&s[0], &mut stats);
             mem1.tick(&s[1], &mut stats);
         }
@@ -220,6 +220,94 @@ fn rpc_timing_clean_under_random_mixed_load() {
         }
         assert_eq!(stats.get("rpc.dev_violations"), 0, "no protocol violations under random load");
     });
+}
+
+/// Satellite: LLC way reconfiguration under load. Random writes/reads
+/// stream through a part-cache LLC while the way mask flips at random
+/// points — including while line fills are in flight — and every access
+/// must still return golden data; the final all-SPM conversion must leave
+/// the backing memory exactly equal to the golden image (the drain +
+/// flush path loses nothing).
+mod llc_reconfig_props {
+    use cheshire::axi::memsub::MemSub;
+    use cheshire::axi::port::axi_bus;
+    use cheshire::axi::types::{full_strb, Ar, Aw, Burst, W};
+    use cheshire::cache::llc::{Llc, LlcCfg};
+    use cheshire::sim::prop::cases;
+    use cheshire::sim::Stats;
+
+    #[test]
+    fn reconfig_under_load_preserves_data() {
+        cases(8, 0x11CC, |rng| {
+            let cfg = LlcCfg {
+                dram_size: 0x8000,
+                spm_way_mask: 0x0f,
+                mshrs: 1 + rng.below(4) as usize,
+                ..LlcCfg::neo()
+            };
+            let (mut llc, mask) = Llc::new(cfg);
+            let sub = axi_bus(8);
+            let mgr = axi_bus(16);
+            let mut mem = MemSub::new(0x8000_0000, 0x8000, 8, rng.range(1, 6) as u32);
+            let mut stats = Stats::new();
+            let mut golden = vec![0u8; 0x8000];
+            let masks = [0x0fu32, 0xff, 0x03];
+            for step in 0..40 {
+                if rng.below(4) == 0 {
+                    *mask.borrow_mut() = *rng.pick(&masks);
+                }
+                if rng.bool() {
+                    // single-beat random write
+                    let off = (rng.below(0x8000 / 8) * 8) as usize;
+                    let addr = 0x8000_0000 + off as u64;
+                    let val = rng.bytes(8);
+                    sub.aw.borrow_mut().push(Aw { id: 1, addr, len: 0, size: 3, burst: Burst::Incr, qos: 0 });
+                    sub.w.borrow_mut().push(W { data: val.clone(), strb: full_strb(8), last: true });
+                    golden[off..off + 8].copy_from_slice(&val);
+                    let mut ok = false;
+                    for _ in 0..5000 {
+                        llc.tick(&sub, &mgr, &mut stats);
+                        mem.tick(&mgr, &mut stats);
+                        if sub.b.borrow_mut().pop().is_some() {
+                            ok = true;
+                            break;
+                        }
+                    }
+                    assert!(ok, "write {step} hung");
+                } else {
+                    // multi-beat read (spans lines → multiple fills), with
+                    // a chance of a mask flip racing the fills
+                    let beats = rng.range(1, 16);
+                    let off = (rng.below(0x6000 / 8) * 8) as usize;
+                    let addr = 0x8000_0000 + off as u64;
+                    sub.ar.borrow_mut().push(Ar { id: 2, addr, len: (beats - 1) as u8, size: 3, burst: Burst::Incr, qos: 0 });
+                    if rng.bool() {
+                        *mask.borrow_mut() = *rng.pick(&masks);
+                    }
+                    let mut got = Vec::new();
+                    for _ in 0..8000 {
+                        llc.tick(&sub, &mgr, &mut stats);
+                        mem.tick(&mgr, &mut stats);
+                        while let Some(r) = sub.r.borrow_mut().pop() {
+                            got.extend_from_slice(&r.data[..8]);
+                        }
+                        if got.len() == beats as usize * 8 {
+                            break;
+                        }
+                    }
+                    assert_eq!(got.len(), beats as usize * 8, "read {step} hung");
+                    assert_eq!(&got[..], &golden[off..off + beats as usize * 8], "read {step}");
+                }
+            }
+            // final conversion to all-SPM: flush everything to DRAM
+            *mask.borrow_mut() = 0xff;
+            for _ in 0..5000 {
+                llc.tick(&sub, &mgr, &mut stats);
+                mem.tick(&mgr, &mut stats);
+            }
+            assert_eq!(mem.mem(), &golden[..], "backing memory equals golden after flush");
+        });
+    }
 }
 
 // ---- Sv39 translation properties ----
@@ -517,6 +605,7 @@ mod sv39_props {
 /// state, and identical stats modulo the scheduler's own `sched.*`
 /// counters.
 mod elision_equivalence {
+    use cheshire::dsa::matmul::MatmulDsa;
     use cheshire::harness::Workload;
     use cheshire::platform::config::MemBackend;
     use cheshire::platform::memmap::DRAM_BASE;
@@ -534,7 +623,7 @@ mod elision_equivalence {
     }
 
     fn random_point(rng: &mut Rng) -> (Workload, MemBackend, usize) {
-        let wl = match rng.below(5) {
+        let wl = match rng.below(6) {
             0 => Workload::Wfi { window: rng.range(20_000, 60_000) },
             1 => Workload::Nop { window: rng.range(10_000, 30_000) },
             2 => Workload::Mem {
@@ -543,6 +632,12 @@ mod elision_equivalence {
                 max_burst: 2048,
             },
             3 => Workload::TwoMm { n: 8 },
+            4 => Workload::Contention {
+                dma_kib: rng.range(2, 8) as u32,
+                tile_n: 8,
+                jobs: rng.range(1, 2) as u32,
+                spm_kib: 8,
+            },
             _ => Workload::Supervisor {
                 demand_pages: rng.range(1, 4) as u32,
                 timer_delta: rng.range(5_000, 60_000) as u32,
@@ -570,7 +665,16 @@ mod elision_equivalence {
         cfg.backend = backend;
         cfg.tlb_entries = tlb;
         cfg.elide_idle = elide;
+        let contention = matches!(wl, Workload::Contention { .. });
+        if contention {
+            // half-cache LLC so the MSHR machinery runs under elision
+            cfg.spm_way_mask = 0x0f;
+            cfg.dsa_port_pairs = 1;
+        }
         let mut soc = Soc::new(cfg);
+        if contention {
+            soc.plug_dsa(0, Box::new(MatmulDsa::new(None, "matmul_acc")));
+        }
         let img = wl.stage(&mut soc);
         soc.preload(&img, DRAM_BASE);
         let cycles = match wl.fixed_window() {
