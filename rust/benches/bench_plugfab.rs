@@ -1,0 +1,135 @@
+//! Plug-in-fabric descriptor throughput — the multi-DSA acceptance bench.
+//!
+//! Runs a fixed budget of CRC32 descriptors (8 KiB payloads staged in
+//! SPM) through the uniform frontend contract on one, two, and four CRC
+//! slots. Descriptors are pre-staged on per-slot rings; the host rings
+//! each doorbell once and the engines chew through their rings
+//! autonomously — descriptor fetch, payload streaming, and result
+//! writes all run through the crossbar/LLC, so the metric measures the
+//! *fabric*, not a model shortcut.
+//!
+//! The metric is **aggregate completed descriptors per kilocycle**.
+//! Emits `BENCH_plugfab.json` (cwd) and enforces the acceptance gate:
+//! two slots must reach ≥1.5× the single-slot aggregate descriptor
+//! throughput (override with `PLUGFAB_BENCH_MIN_SPEEDUP` — the metric is
+//! simulated-time, so it should be exact; the knob mirrors the other
+//! benches' escape hatch).
+
+use cheshire::dsa::frontend::{opcode, regs, DsaDescriptor};
+use cheshire::model::benchkit::{f2, f3, Table};
+use cheshire::platform::config::{DsaKind, DsaSlot};
+use cheshire::platform::memmap::SPM_BASE;
+use cheshire::platform::{CheshireConfig, Soc};
+use cheshire::workloads;
+
+/// Payload bytes per descriptor.
+const CHUNK: usize = 8 * 1024;
+/// Total descriptors per run (split evenly across the slots).
+const TOTAL_DESCS: usize = 32;
+
+/// Run `TOTAL_DESCS` CRC descriptors across `slots` engines; returns
+/// (cycles, aggregate descriptors per kilocycle).
+fn run_point(slots: usize) -> (u64, f64) {
+    assert!(TOTAL_DESCS % slots == 0, "even split");
+    let mut cfg = CheshireConfig::neo();
+    cfg.dsa_slots = vec![DsaSlot::local(DsaKind::Crc); slots];
+    let mut soc = Soc::new(cfg);
+
+    // park the host core: the pipeline is engine-driven
+    let img = workloads::wfi_program(cheshire::platform::memmap::DRAM_BASE);
+    soc.preload(&img, cheshire::platform::memmap::DRAM_BASE);
+    soc.run_cycles(20_000);
+
+    // SPM layout: per-slot payload, ring, and result strip
+    let per = TOTAL_DESCS / slots;
+    for s in 0..slots {
+        let payload: Vec<u8> = (0..CHUNK).map(|i| ((i * 131 + s * 17) >> 2) as u8).collect();
+        let src_off = s * CHUNK;
+        soc.spm_write(src_off, &payload);
+        let ring_off = 0x10000 + s * 0x1000;
+        let res_off = 0x14000 + s * 0x800;
+        for i in 0..per {
+            let d = DsaDescriptor {
+                op: opcode::CRC32,
+                imm: 0,
+                arg0: SPM_BASE + src_off as u64,
+                arg1: SPM_BASE + (res_off + i * 8) as u64,
+                arg2: CHUNK as u64,
+            };
+            soc.spm_write(ring_off + i * 32, &d.to_bytes());
+        }
+        for (off, v) in [
+            (regs::RING_LO, (SPM_BASE + ring_off as u64) as u32),
+            (regs::RING_HI, 0),
+            (regs::RING_SZ, per as u32),
+            (regs::TAIL, per as u32),
+            (regs::DOORBELL, 1),
+        ] {
+            soc.dsa_write_reg(s, off, v);
+            soc.run_cycles(4); // drain the debug-port write
+        }
+    }
+
+    let t0 = soc.clock.now();
+    let deadline = t0 + 200_000_000;
+    loop {
+        let done: u64 = (0..slots).map(|s| soc.dsa_ref(s).unwrap().completed()).sum();
+        if done >= TOTAL_DESCS as u64 {
+            break;
+        }
+        assert!(soc.clock.now() < deadline, "descriptors never completed");
+        soc.advance(deadline);
+    }
+    let cycles = soc.clock.now() - t0;
+    assert_eq!(soc.stats.get("plugfab.descs"), TOTAL_DESCS as u64);
+    (cycles, TOTAL_DESCS as f64 / (cycles as f64 / 1000.0))
+}
+
+fn main() {
+    let points = [1usize, 2, 4];
+    let mut t = Table::new(
+        "Plug-in fabric descriptor throughput — CRC32 engines, 8 KiB payloads",
+        &["slots", "descriptors", "cycles", "desc/kcyc", "vs 1 slot"],
+    );
+    let mut json = String::from("{\n  \"points\": [\n");
+    let mut base_thr = 0.0f64;
+    let mut two_slot_speedup = 0.0f64;
+    for (i, &slots) in points.iter().enumerate() {
+        let (cycles, thr) = run_point(slots);
+        if slots == 1 {
+            base_thr = thr;
+        }
+        let speedup = if base_thr > 0.0 { thr / base_thr } else { 1.0 };
+        if slots == 2 {
+            two_slot_speedup = speedup;
+        }
+        t.row(&[
+            slots.to_string(),
+            TOTAL_DESCS.to_string(),
+            cycles.to_string(),
+            f3(thr),
+            f2(speedup),
+        ]);
+        json.push_str(&format!(
+            "    {{\"slots\": {slots}, \"descriptors\": {TOTAL_DESCS}, \"cycles\": {cycles}, \
+             \"desc_per_kcycle\": {thr}, \"speedup_vs_single\": {speedup}}}{}\n",
+            if i + 1 == points.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    t.print();
+
+    std::fs::write("BENCH_plugfab.json", &json).expect("write BENCH_plugfab.json");
+    println!("\nwritten: BENCH_plugfab.json");
+
+    let gate: f64 = std::env::var("PLUGFAB_BENCH_MIN_SPEEDUP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.5);
+    assert!(
+        two_slot_speedup >= gate,
+        "two DSA slots must reach ≥{gate}× the single-slot aggregate descriptor \
+         throughput (got {two_slot_speedup:.2}×)"
+    );
+    println!("2-slot vs 1-slot aggregate descriptor throughput: {two_slot_speedup:.2}× (gate: ≥{gate}×)");
+}

@@ -24,6 +24,7 @@
 //! `workloads::mem_program` tests.
 
 use crate::dma::Descriptor;
+use crate::dsa::frontend::{opcode, regs, DsaDescriptor};
 use crate::platform::memmap::{DRAM_BASE, SPM_BASE};
 use crate::platform::Soc;
 use crate::sim::Cycle;
@@ -43,11 +44,16 @@ pub struct OffloadReport {
 pub struct OffloadCoordinator {
     /// Tile dimension (matches the compiled Pallas kernel).
     pub tile: usize,
+    /// Descriptors queued on the DSA's ring so far (the ring is
+    /// single-entry: the frontend re-reads the same slot each job).
+    queued: u64,
+    /// Whether the slot-0 ring registers have been programmed.
+    ring_live: bool,
 }
 
 impl OffloadCoordinator {
     pub fn new(tile: usize) -> Self {
-        Self { tile }
+        Self { tile, queued: 0, ring_live: false }
     }
 
     /// SPM layout: A tile at 0, B at tb, C at 2·tb.
@@ -59,6 +65,10 @@ impl OffloadCoordinator {
     }
     fn spm_c(&self) -> u64 {
         SPM_BASE + 2 * (self.tile * self.tile * 4) as u64
+    }
+    /// Single-entry descriptor ring, parked in SPM above the three tiles.
+    fn spm_ring(&self) -> u64 {
+        SPM_BASE + 3 * (self.tile * self.tile * 4) as u64
     }
 
     /// Run a DMA descriptor to completion. Instead of spinning the
@@ -81,22 +91,36 @@ impl OffloadCoordinator {
         soc.clock.now() - t0
     }
 
-    /// Program the DSA (port pair 0) through its register window and wait.
-    /// The compute span is a known completion deadline
-    /// ([`crate::dsa::DsaPlugin::activity`]), so the wait fast-forwards
-    /// straight to it instead of polling `busy()` every cycle.
-    fn dsa_run(&self, soc: &mut Soc, a: u64, b: u64, c: u64) {
-        let n = self.tile as u32;
-        for (off, v) in [
-            (0x00u64, a as u32),
-            (0x04, (a >> 32) as u32),
-            (0x08, b as u32),
-            (0x0c, (b >> 32) as u32),
-            (0x10, c as u32),
-            (0x14, (c >> 32) as u32),
-            (0x18, n),
-            (0x1c, 1),
-        ] {
+    /// Queue one tile job on the DSA's (port pair 0) descriptor ring and
+    /// wait for its completion. The descriptor is staged into SPM
+    /// (debug-module path, zero-time like every control access here) but
+    /// *fetched by the DSA itself* over its manager port; the doorbell
+    /// goes through a real single-beat AXI write. The compute span is a
+    /// known completion deadline ([`crate::dsa::DsaPlugin::activity`]),
+    /// so the wait fast-forwards straight to it instead of polling
+    /// `busy()` every cycle.
+    fn dsa_run(&mut self, soc: &mut Soc, a: u64, b: u64, c: u64) {
+        let desc = DsaDescriptor {
+            op: opcode::MATMUL,
+            imm: self.tile as u64,
+            arg0: a,
+            arg1: b,
+            arg2: c,
+        };
+        let ring_off = (self.spm_ring() - SPM_BASE) as usize;
+        soc.spm_write(ring_off, &desc.to_bytes());
+        let mut reg_writes = Vec::new();
+        if !self.ring_live {
+            reg_writes.extend([
+                (regs::RING_LO, self.spm_ring() as u32),
+                (regs::RING_HI, (self.spm_ring() >> 32) as u32),
+                (regs::RING_SZ, 1),
+            ]);
+            self.ring_live = true;
+        }
+        self.queued += 1;
+        reg_writes.extend([(regs::TAIL, self.queued as u32), (regs::DOORBELL, 1)]);
+        for (off, v) in reg_writes {
             soc.dsa_write_reg(0, off, v);
             // let the register write drain through the subordinate port
             for _ in 0..4 {
@@ -104,7 +128,8 @@ impl OffloadCoordinator {
             }
         }
         let deadline = soc.clock.now() + 100_000_000;
-        while soc.dsa_mut(0).map(|d| d.busy()).unwrap_or(false) {
+        let target = self.queued;
+        while soc.dsa_ref(0).expect("a DSA on port pair 0").completed() < target {
             soc.advance(deadline);
             assert!(soc.clock.now() < deadline, "DSA did not complete");
         }

@@ -1,0 +1,557 @@
+//! The uniform accelerator frontend: one register block + in-memory
+//! descriptor ring shared by every DSA plug-in.
+//!
+//! The paper's plug-in story (§I, Fig. 1) gives each DSA a crossbar port
+//! pair but leaves the programming model to the accelerator. Related
+//! platforms standardize it — HyperCroc's register/IRQ plug-in contract,
+//! X-HEEP's configurable accelerator slots — and this module does the
+//! same for the simulated fabric: every in-tree engine (matmul, traffic,
+//! CRC, reduce/memcpy) exposes the *same* host-facing contract:
+//!
+//! 1. the host writes 32-byte [`DsaDescriptor`]s into a ring anywhere in
+//!    the address map (DRAM or SPM), publishes the producer index in
+//!    `TAIL`, and rings `DOORBELL`;
+//! 2. the engine fetches descriptors over its **own AXI manager port**
+//!    (real fabric traffic — through the crossbar, LLC, and, for a
+//!    D2D-attached slot, the serialized die-to-die link);
+//! 3. each completion advances `HEAD`/`COMPLETED` and, when enabled,
+//!    latches the completion cause and raises the slot's PLIC line — the
+//!    host sleeps in `wfi` instead of polling.
+//!
+//! # Register map (word offsets inside the slot's 16 MiB window)
+//!
+//! | off  | name        | access | meaning |
+//! |------|-------------|--------|---------|
+//! | 0x00 | `CAP`       | RO     | `0x5A << 24 \| class << 8 \| version` |
+//! | 0x04 | `RING_LO`   | RW     | descriptor ring base, low 32 bits |
+//! | 0x08 | `RING_HI`   | RW     | descriptor ring base, high 32 bits |
+//! | 0x0c | `RING_SZ`   | RW     | ring capacity in descriptors |
+//! | 0x10 | `HEAD`      | RO     | consumer index (free-running) |
+//! | 0x14 | `TAIL`      | RW     | producer index shadow (latched by doorbell) |
+//! | 0x18 | `DOORBELL`  | WO     | latch `TAIL`, start fetching |
+//! | 0x1c | `STATUS`    | RO     | bit0 busy, bit1 ring drained, bit2 irq line |
+//! | 0x20 | `IRQ_ENA`   | RW     | bit0: completion interrupt enable |
+//! | 0x24 | `IRQ_CAUSE` | R/W1C  | bit0: descriptor completed |
+//! | 0x28 | `COMPLETED` | RO     | total completions, low 32 bits |
+//! | 0x2c | `COMPLETED_HI` | RO  | total completions, high 32 bits |
+//!
+//! The `TAIL`-shadow/doorbell split is the posted-ring idiom: software
+//! writes descriptors, fences, posts the new tail, and *then* rings the
+//! doorbell — the device never observes a tail whose descriptors might
+//! still be in a write buffer.
+
+use crate::axi::port::AxiBus;
+use crate::axi::types::{full_strb, Ar, Aw, Burst, Resp, B, R, W};
+use crate::sim::{Activity, Link, Stats};
+use std::collections::VecDeque;
+
+/// Descriptor size in bytes (four little-endian u64 words).
+pub const DESC_BYTES: u64 = 32;
+
+/// Upper bound on a descriptor-addressed payload (16 MiB). Descriptor
+/// fields are guest-controlled: engines reject larger (or zero /
+/// misaligned) jobs as malformed — `plugfab.bad_desc` + immediate
+/// completion — rather than panicking or allocating unbounded host
+/// memory on hostile input.
+pub const MAX_JOB_BYTES: u64 = 1 << 24;
+
+/// AXI ID the frontend fetches descriptors with (distinct from the
+/// engine data IDs so R beats demultiplex cleanly on the shared port).
+pub const DESC_FETCH_ID: u32 = 0x03;
+/// AXI ID engines issue operand-read bursts with.
+pub const DATA_RD_ID: u32 = 0x01;
+/// AXI ID engines issue result-write bursts with.
+pub const DATA_WR_ID: u32 = 0x02;
+
+/// Descriptor opcodes understood by the in-tree engines.
+pub mod opcode {
+    /// Accumulating matmul tile: `C ← A·B + C` (`arg0`=A, `arg1`=B,
+    /// `arg2`=C, `imm`=tile dimension n).
+    pub const MATMUL: u16 = 1;
+    /// Streaming CRC32 over `len` bytes (`arg0`=src, `arg1`=dst for the
+    /// 8-byte result word, `arg2`=len).
+    pub const CRC32: u16 = 2;
+    /// Vector reduce: u64 wrapping sum over `len` bytes (`arg0`=src,
+    /// `arg1`=dst for the 8-byte result word, `arg2`=len).
+    pub const REDUCE_SUM: u16 = 3;
+    /// Engine-driven memcpy of `len` bytes (`arg0`=src, `arg1`=dst,
+    /// `arg2`=len).
+    pub const MEMCPY: u16 = 4;
+    /// Synthetic traffic job (`arg0`=window base, `arg1`=window size,
+    /// `arg2` packs burst/write-ratio/period, `imm`=burst count).
+    pub const TRAFFIC: u16 = 5;
+}
+
+/// One 32-byte job descriptor, as fetched from the ring.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DsaDescriptor {
+    /// Operation selector (low 16 bits of word 0).
+    pub op: u16,
+    /// Op-specific immediate (bits 63:16 of word 0).
+    pub imm: u64,
+    /// First operand (word 1) — usually a source address.
+    pub arg0: u64,
+    /// Second operand (word 2) — usually a destination address.
+    pub arg1: u64,
+    /// Third operand (word 3) — usually a length or extra address.
+    pub arg2: u64,
+}
+
+impl DsaDescriptor {
+    /// Serialize to the in-memory layout (what hosts write into the ring).
+    pub fn to_bytes(&self) -> [u8; 32] {
+        let w0 = (self.op as u64) | (self.imm << 16);
+        let mut out = [0u8; 32];
+        for (i, w) in [w0, self.arg0, self.arg1, self.arg2].iter().enumerate() {
+            out[i * 8..(i + 1) * 8].copy_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    /// Parse from the in-memory layout (what the frontend fetches).
+    pub fn from_bytes(b: &[u8]) -> Self {
+        let w = |i: usize| u64::from_le_bytes(b[i * 8..(i + 1) * 8].try_into().unwrap());
+        let w0 = w(0);
+        Self { op: w0 as u16, imm: w0 >> 16, arg0: w(1), arg1: w(2), arg2: w(3) }
+    }
+}
+
+/// Pop the front beat of an R link only if it carries `id` (per-ID
+/// demultiplexing on a shared manager port; per-ID order is preserved by
+/// the crossbar, and descriptor/data phases never overlap).
+pub(crate) fn pop_r_if(r: &Link<R>, id: u32) -> Option<R> {
+    let mine = matches!(r.borrow().peek(), Some(beat) if beat.id == id);
+    if mine {
+        r.borrow_mut().pop()
+    } else {
+        None
+    }
+}
+
+/// Chained read-burst fetcher: streams `total` bytes from `base` into an
+/// internal buffer with up to-2 KiB INCR bursts on [`DATA_RD_ID`].
+#[derive(Debug)]
+pub struct BurstReader {
+    base: u64,
+    total: usize,
+    issued: usize,
+    /// Received bytes (beat-granular; may exceed `total` by tail padding).
+    pub buf: Vec<u8>,
+}
+
+impl BurstReader {
+    /// Start a fetch of `total` bytes at `base`.
+    pub fn new(base: u64, total: usize) -> Self {
+        Self { base, total, issued: 0, buf: Vec::with_capacity(total) }
+    }
+
+    /// One cycle: collect arrived beats, issue the next burst if due.
+    /// Returns `true` once the full range has been received.
+    pub fn tick(&mut self, mgr: &AxiBus, stats: &mut Stats) -> bool {
+        while let Some(r) = pop_r_if(&mgr.r, DATA_RD_ID) {
+            self.buf.extend_from_slice(&r.data);
+        }
+        if self.issued < self.total && mgr.ar.borrow().can_push() {
+            let left = self.total - self.issued;
+            let bytes = left.min(2048);
+            let beats = (bytes / 8).max(1);
+            mgr.ar.borrow_mut().push(Ar {
+                id: DATA_RD_ID,
+                addr: self.base + self.issued as u64,
+                len: (beats - 1) as u8,
+                size: 3,
+                burst: Burst::Incr,
+                qos: 0,
+            });
+            self.issued += beats * 8;
+            stats.bump("dsa.fetch_bursts");
+        }
+        self.buf.len() >= self.total
+    }
+}
+
+/// Chained write-burst streamer: drains a byte buffer to `base` with
+/// one in-flight up-to-2 KiB INCR burst at a time on [`DATA_WR_ID`].
+#[derive(Debug)]
+pub struct BurstWriter {
+    base: u64,
+    data: Vec<u8>,
+    sent: usize,
+    issued: usize,
+    acked: usize,
+}
+
+impl BurstWriter {
+    /// Start writing `data` (length must be a multiple of 8) at `base`.
+    pub fn new(base: u64, data: Vec<u8>) -> Self {
+        debug_assert_eq!(data.len() % 8, 0, "write data is beat-granular");
+        Self { base, data, sent: 0, issued: 0, acked: 0 }
+    }
+
+    /// One cycle: issue the next burst when the previous one has fully
+    /// streamed, push one W beat, collect B acks. Returns `true` once
+    /// every byte is written *and* acknowledged.
+    pub fn tick(&mut self, mgr: &AxiBus, stats: &mut Stats) -> bool {
+        let total = self.data.len();
+        while mgr.b.borrow_mut().pop().is_some() {
+            self.acked += 1;
+        }
+        if self.issued <= self.sent && self.sent < total && mgr.aw.borrow().can_push() {
+            let left = total - self.sent;
+            let bytes = left.min(2048);
+            let beats = bytes / 8;
+            mgr.aw.borrow_mut().push(Aw {
+                id: DATA_WR_ID,
+                addr: self.base + self.sent as u64,
+                len: (beats - 1) as u8,
+                size: 3,
+                burst: Burst::Incr,
+                qos: 0,
+            });
+            self.issued = self.sent + bytes;
+            stats.bump("dsa.write_bursts");
+        }
+        if self.sent < self.issued && mgr.w.borrow().can_push() {
+            let beat = self.data[self.sent..self.sent + 8].to_vec();
+            let last = self.sent + 8 == self.issued;
+            mgr.w.borrow_mut().push(W { data: beat, strb: full_strb(8), last });
+            self.sent += 8;
+        }
+        let bursts = total.div_ceil(2048);
+        self.sent >= total && self.acked >= bursts
+    }
+}
+
+#[derive(Debug)]
+enum Fetch {
+    Idle,
+    /// AR issued; collecting the four descriptor beats.
+    Collect { got: Vec<u8> },
+}
+
+/// The shared per-slot frontend block (see the module docs for the
+/// register map). Engines embed one and delegate their subordinate-port
+/// servicing, descriptor fetch, and completion/IRQ bookkeeping to it.
+#[derive(Debug)]
+pub struct AcceleratorFrontend {
+    class: u16,
+    ring_base: u64,
+    ring_entries: u32,
+    /// Producer index as last posted by software (not yet live).
+    tail_shadow: u32,
+    /// Producer index the device works against (latched by the doorbell).
+    tail: u32,
+    /// Consumer index: descriptors fully completed (free-running).
+    head: u32,
+    completed: u64,
+    irq_ena: u32,
+    irq_cause: u32,
+    /// Engine-busy flag latched each tick (feeds STATUS bit 0).
+    engine_busy: bool,
+    fetch: Fetch,
+    sub_rsp: VecDeque<R>,
+}
+
+impl AcceleratorFrontend {
+    /// A frontend advertising engine `class` in its CAP word.
+    pub fn new(class: u16) -> Self {
+        Self {
+            class,
+            ring_base: 0,
+            ring_entries: 0,
+            tail_shadow: 0,
+            tail: 0,
+            head: 0,
+            completed: 0,
+            irq_ena: 0,
+            irq_cause: 0,
+            engine_busy: false,
+            fetch: Fetch::Idle,
+            sub_rsp: VecDeque::new(),
+        }
+    }
+
+    /// CAP register value: magic, engine class, contract version.
+    pub fn cap(&self) -> u32 {
+        0x5a00_0000 | ((self.class as u32) << 8) | 1
+    }
+
+    /// Total descriptors completed since reset.
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    /// Current completion-interrupt line level (level-triggered: stays
+    /// high until the host W1Cs `IRQ_CAUSE` or clears `IRQ_ENA`).
+    pub fn irq(&self) -> bool {
+        self.irq_cause & self.irq_ena & 1 != 0
+    }
+
+    /// Whether ring work is queued or a descriptor fetch is in flight.
+    pub fn busy(&self) -> bool {
+        !matches!(self.fetch, Fetch::Idle) || self.head != self.tail
+    }
+
+    fn read_reg(&mut self, off: u64) -> u32 {
+        match off & 0xfc {
+            0x00 => self.cap(),
+            0x04 => self.ring_base as u32,
+            0x08 => (self.ring_base >> 32) as u32,
+            0x0c => self.ring_entries,
+            0x10 => self.head,
+            0x14 => self.tail_shadow,
+            0x1c => {
+                let busy = self.engine_busy || self.busy();
+                let drained = !busy;
+                (busy as u32) | ((drained as u32) << 1) | ((self.irq() as u32) << 2)
+            }
+            0x20 => self.irq_ena,
+            0x24 => self.irq_cause,
+            0x28 => self.completed as u32,
+            0x2c => (self.completed >> 32) as u32,
+            _ => 0,
+        }
+    }
+
+    fn write_reg(&mut self, off: u64, v: u32, stats: &mut Stats) {
+        match off & 0xfc {
+            0x04 => self.ring_base = (self.ring_base & !0xffff_ffff) | v as u64,
+            0x08 => self.ring_base = (self.ring_base & 0xffff_ffff) | ((v as u64) << 32),
+            0x0c => self.ring_entries = v,
+            0x14 => self.tail_shadow = v,
+            0x18 => {
+                // the doorbell publishes the posted tail to the device
+                self.tail = self.tail_shadow;
+                stats.bump("plugfab.doorbells");
+            }
+            0x20 => self.irq_ena = v & 1,
+            0x24 => self.irq_cause &= !v, // W1C
+            _ => {}
+        }
+    }
+
+    /// Service host register accesses on the subordinate port (single-beat
+    /// AXI, like every Regbus-class register file). `engine_busy` is the
+    /// embedding engine's current state, reflected in STATUS.
+    pub fn service(&mut self, sub: &AxiBus, engine_busy: bool, stats: &mut Stats) {
+        self.engine_busy = engine_busy;
+        let aw_ready = { sub.aw.borrow().peek().is_some() && sub.w.borrow().peek().is_some() };
+        if aw_ready {
+            let aw = sub.aw.borrow_mut().pop().unwrap();
+            let w = sub.w.borrow_mut().pop().unwrap();
+            let lane0 = (aw.addr as usize) & 7 & !3;
+            let mut v = 0u32;
+            for i in 0..4 {
+                if (w.strb >> (lane0 + i)) & 1 == 1 {
+                    v |= (w.data[lane0 + i] as u32) << (8 * i);
+                }
+            }
+            self.write_reg(aw.addr & 0xff, v, stats);
+            sub.b.borrow_mut().push(B { id: aw.id, resp: Resp::Okay });
+        }
+        let has_ar = { sub.ar.borrow().peek().is_some() };
+        if has_ar {
+            let ar = sub.ar.borrow_mut().pop().unwrap();
+            let v = self.read_reg(ar.addr & 0xff);
+            let lane0 = (ar.addr as usize) & 7 & !3;
+            let mut data = vec![0u8; 8];
+            data[lane0..lane0 + 4].copy_from_slice(&v.to_le_bytes());
+            self.sub_rsp.push_back(R { id: ar.id, data, resp: Resp::Okay, last: true });
+        }
+        if let Some(r) = self.sub_rsp.front() {
+            if sub.r.borrow().can_push() {
+                let r = r.clone();
+                self.sub_rsp.pop_front();
+                sub.r.borrow_mut().push(r);
+            }
+        }
+    }
+
+    /// Advance the descriptor fetcher one cycle. `engine_idle` gates new
+    /// fetches so descriptor and operand traffic never interleave on the
+    /// shared manager port. Returns a descriptor exactly once, when its
+    /// last beat arrives — the engine starts the job that cycle.
+    pub fn poll_desc(&mut self, mgr: &AxiBus, engine_idle: bool, stats: &mut Stats) -> Option<DsaDescriptor> {
+        match &mut self.fetch {
+            Fetch::Collect { got } => {
+                while let Some(r) = pop_r_if(&mgr.r, DESC_FETCH_ID) {
+                    got.extend_from_slice(&r.data);
+                }
+                if got.len() >= DESC_BYTES as usize {
+                    let d = DsaDescriptor::from_bytes(&got[..DESC_BYTES as usize]);
+                    self.fetch = Fetch::Idle;
+                    stats.bump("plugfab.descs");
+                    return Some(d);
+                }
+            }
+            Fetch::Idle => {
+                if engine_idle && self.head != self.tail && mgr.ar.borrow().can_push() {
+                    let entries = self.ring_entries.max(1) as u64;
+                    let slot = (self.head as u64) % entries;
+                    mgr.ar.borrow_mut().push(Ar {
+                        id: DESC_FETCH_ID,
+                        addr: self.ring_base + slot * DESC_BYTES,
+                        len: (DESC_BYTES / 8 - 1) as u8,
+                        size: 3,
+                        burst: Burst::Incr,
+                        qos: 0,
+                    });
+                    self.fetch = Fetch::Collect { got: Vec::with_capacity(DESC_BYTES as usize) };
+                }
+            }
+        }
+        None
+    }
+
+    /// Record one completed descriptor: advance the consumer index, bump
+    /// the completion counter, latch the IRQ cause (the PLIC line rises
+    /// iff the host enabled it).
+    pub fn complete(&mut self, stats: &mut Stats) {
+        self.head = self.head.wrapping_add(1);
+        self.completed += 1;
+        self.irq_cause |= 1;
+        stats.bump("dsa.jobs");
+        if self.irq() {
+            stats.bump("plugfab.irqs");
+        }
+    }
+
+    /// Next-cycle classification of the frontend alone (the embedding
+    /// engine combines its own state on top): pending register responses,
+    /// an in-flight descriptor fetch, or queued ring work all require
+    /// real ticks; an empty ring is quiescent.
+    pub fn activity(&self) -> Activity {
+        if !self.sub_rsp.is_empty() || self.busy() {
+            Activity::Busy
+        } else {
+            Activity::Quiescent
+        }
+    }
+
+    /// The engine-class byte advertised in CAP.
+    pub fn class(&self) -> u16 {
+        self.class
+    }
+}
+
+/// Convenience for hosts/tests: the register-window word offsets.
+pub mod regs {
+    /// Capability/ID word.
+    pub const CAP: u64 = 0x00;
+    /// Ring base, low half.
+    pub const RING_LO: u64 = 0x04;
+    /// Ring base, high half.
+    pub const RING_HI: u64 = 0x08;
+    /// Ring capacity in descriptors.
+    pub const RING_SZ: u64 = 0x0c;
+    /// Consumer index.
+    pub const HEAD: u64 = 0x10;
+    /// Producer index shadow.
+    pub const TAIL: u64 = 0x14;
+    /// Tail latch / go.
+    pub const DOORBELL: u64 = 0x18;
+    /// busy / drained / irq.
+    pub const STATUS: u64 = 0x1c;
+    /// Completion-IRQ enable.
+    pub const IRQ_ENA: u64 = 0x20;
+    /// Completion-IRQ cause (W1C).
+    pub const IRQ_CAUSE: u64 = 0x24;
+    /// Completion count, low half.
+    pub const COMPLETED: u64 = 0x28;
+    /// Completion count, high half.
+    pub const COMPLETED_HI: u64 = 0x2c;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::axi::memsub::MemSub;
+    use crate::axi::port::axi_bus;
+
+    #[test]
+    fn descriptor_roundtrips_through_memory_layout() {
+        let d = DsaDescriptor { op: 7, imm: 0x1234, arg0: 0x8000_0000, arg1: 0x7000_0040, arg2: 4096 };
+        assert_eq!(DsaDescriptor::from_bytes(&d.to_bytes()), d);
+    }
+
+    /// Program a ring through the sub port, let the frontend fetch one
+    /// descriptor from a backing memory, complete it, and observe the
+    /// IRQ + counter flow.
+    #[test]
+    fn ring_fetch_complete_and_irq_flow() {
+        let mut fe = AcceleratorFrontend::new(9);
+        let mgr = axi_bus(8);
+        let sub = axi_bus(4);
+        let mut mem = MemSub::new(0x7000_0000, 0x1000, 8, 1);
+        let mut stats = Stats::new();
+        let d = DsaDescriptor { op: opcode::CRC32, imm: 0, arg0: 1, arg1: 2, arg2: 3 };
+        mem.preload(0x40, &d.to_bytes());
+
+        let write_reg = |sub: &AxiBus, off: u64, v: u32| {
+            sub.aw.borrow_mut().push(Aw { id: 0, addr: off, len: 0, size: 2, burst: Burst::Incr, qos: 0 });
+            let lane0 = (off as usize) & 7 & !3;
+            let mut data = vec![0u8; 8];
+            data[lane0..lane0 + 4].copy_from_slice(&v.to_le_bytes());
+            sub.w.borrow_mut().push(W { data, strb: 0xf << lane0, last: true });
+        };
+        write_reg(&sub, regs::RING_LO, 0x7000_0040);
+        write_reg(&sub, regs::RING_SZ, 4);
+        write_reg(&sub, regs::IRQ_ENA, 1);
+        write_reg(&sub, regs::TAIL, 1);
+        for _ in 0..8 {
+            fe.service(&sub, false, &mut stats);
+        }
+        // tail posted but doorbell not rung: nothing fetches
+        assert!(!fe.busy(), "no doorbell, no work");
+        write_reg(&sub, regs::DOORBELL, 1);
+        let mut got = None;
+        for _ in 0..64 {
+            fe.service(&sub, false, &mut stats);
+            if let Some(d) = fe.poll_desc(&mgr, true, &mut stats) {
+                got = Some(d);
+            }
+            mem.tick(&mgr, &mut stats);
+            if got.is_some() {
+                break;
+            }
+        }
+        assert_eq!(got, Some(d), "descriptor fetched through the fabric");
+        assert!(!fe.irq());
+        fe.complete(&mut stats);
+        assert!(fe.irq(), "completion raises the enabled line");
+        assert_eq!(fe.completed(), 1);
+        assert_eq!(stats.get("dsa.jobs"), 1);
+        assert_eq!(stats.get("plugfab.descs"), 1);
+        assert_eq!(stats.get("plugfab.irqs"), 1);
+        // W1C drops the line
+        write_reg(&sub, regs::IRQ_CAUSE, 1);
+        fe.service(&sub, false, &mut stats);
+        assert!(!fe.irq());
+        assert_eq!(fe.activity(), Activity::Quiescent, "drained ring is quiescent");
+    }
+
+    #[test]
+    fn burst_reader_and_writer_move_bytes() {
+        let mgr = axi_bus(8);
+        let mut mem = MemSub::new(0, 0x4000, 8, 1);
+        let mut stats = Stats::new();
+        let src: Vec<u8> = (0..4096u32).map(|i| (i * 3 + 1) as u8).collect();
+        mem.preload(0, &src);
+        let mut rd = BurstReader::new(0, 4096);
+        for _ in 0..20_000 {
+            if rd.tick(&mgr, &mut stats) {
+                break;
+            }
+            mem.tick(&mgr, &mut stats);
+        }
+        assert_eq!(&rd.buf[..4096], &src[..]);
+        let mut wr = BurstWriter::new(0x2000, rd.buf[..4096].to_vec());
+        for _ in 0..20_000 {
+            if wr.tick(&mgr, &mut stats) {
+                break;
+            }
+            mem.tick(&mgr, &mut stats);
+        }
+        assert_eq!(&mem.mem()[0x2000..0x3000], &src[..]);
+    }
+}

@@ -2,32 +2,33 @@
 //! interface — the paper's heterogeneous plug-in story, exercised.
 //!
 //! Architecture (mirrors PULP-NN-class accelerators [15, 16]):
-//! * Host writes a job descriptor (operand addresses in SPM/DRAM, tile
-//!   size) into the DSA's register window and sets GO.
-//! * The DSA fetches both operand tiles over its **manager** port with
-//!   AXI bursts (beat-accurate traffic through crossbar → LLC → RPC),
-//!   runs the accumulating tile kernel C ← A·B + C, then writes C back.
+//! * Host queues a [`frontend::opcode::MATMUL`] descriptor (operand
+//!   addresses in SPM/DRAM, tile size in the immediate) on the slot's
+//!   descriptor ring and rings the doorbell.
+//! * The engine fetches the descriptor and both operand tiles over its
+//!   **manager** port with AXI bursts (beat-accurate traffic through
+//!   crossbar → LLC → RPC), runs the accumulating tile kernel
+//!   C ← A·B + C, writes C back, and signals completion through the
+//!   frontend (HEAD/COMPLETED advance + per-slot PLIC interrupt).
 //! * Compute is *functionally* executed by the AOT-compiled Pallas
 //!   matmul (`crate::runtime::XlaRuntime`) — Layer 1/2 of the stack —
 //!   while compute *latency* is modeled from the systolic-array shape
 //!   (n³/array_dim MACs/cycle), so power/perf accounting stays
 //!   architectural. Without a loaded runtime the DSA falls back to a
 //!   native f32 matmul (identical numerics, same traffic).
-//!
-//! Register window (word offsets): 0x00 A_LO, 0x04 A_HI, 0x08 B_LO,
-//! 0x0c B_HI, 0x10 C_LO, 0x14 C_HI, 0x18 N (tile dim), 0x1c GO/STATUS
-//! (write 1 = start; read bit0 = busy, bit1 = done).
 
+use super::frontend::{opcode, AcceleratorFrontend, BurstReader, BurstWriter, DsaDescriptor};
 use super::DsaPlugin;
 use crate::axi::port::AxiBus;
-use crate::axi::types::{full_strb, Ar, Aw, Burst, Resp, B, R, W};
 use crate::runtime::XlaRuntime;
 use crate::sim::{Activity, Cycle, Stats};
-use std::collections::VecDeque;
 use std::rc::Rc;
 
 /// MACs per cycle of the modeled systolic array (16×16 PEs).
 const MACS_PER_CYCLE: u64 = 256;
+
+/// CAP class byte advertised by this engine.
+pub const CLASS: u16 = 1;
 
 #[derive(Debug, Clone, Default)]
 struct Job {
@@ -37,30 +38,24 @@ struct Job {
     n: u32,
 }
 
-#[derive(Debug, PartialEq)]
 enum DState {
     Idle,
-    FetchA { got: usize },
-    FetchB { got: usize },
-    FetchC { got: usize },
+    FetchA(BurstReader),
+    FetchB(BurstReader),
+    FetchC(BurstReader),
     Compute { until: Option<Cycle> },
-    WriteC { sent: usize, acked: u32, issued: usize },
-    Done,
+    WriteC(BurstWriter),
 }
 
 pub struct MatmulDsa {
     runtime: Option<Rc<XlaRuntime>>,
     artifact: String,
+    fe: AcceleratorFrontend,
     job: Job,
     state: DState,
     abuf: Vec<u8>,
     bbuf: Vec<u8>,
     cinbuf: Vec<u8>,
-    cbuf: Vec<u8>,
-    /// host register shadow
-    regs: [u32; 8],
-    /// pending single-beat register responses
-    sub_rsp: VecDeque<R>,
     pub jobs_done: u64,
 }
 
@@ -69,14 +64,12 @@ impl MatmulDsa {
         Self {
             runtime,
             artifact: artifact.to_string(),
+            fe: AcceleratorFrontend::new(CLASS),
             job: Job::default(),
             state: DState::Idle,
             abuf: Vec::new(),
             bbuf: Vec::new(),
             cinbuf: Vec::new(),
-            cbuf: Vec::new(),
-            regs: [0; 8],
-            sub_rsp: VecDeque::new(),
             jobs_done: 0,
         }
     }
@@ -85,100 +78,57 @@ impl MatmulDsa {
         (self.job.n * self.job.n * 4) as usize
     }
 
-    /// Handle host register accesses on the subordinate port.
-    fn service_regs(&mut self, sub: &AxiBus, stats: &mut Stats) {
-        // writes
-        let aw_ready = { sub.aw.borrow().peek().is_some() && sub.w.borrow().peek().is_some() };
-        if aw_ready {
-            let aw = sub.aw.borrow_mut().pop().unwrap();
-            let w = sub.w.borrow_mut().pop().unwrap();
-            let off = (aw.addr & 0xff) as usize / 4;
-            let lane0 = (aw.addr as usize) & 7 & !3;
-            let mut v = 0u32;
-            for i in 0..4 {
-                if (w.strb >> (lane0 + i)) & 1 == 1 {
-                    v |= (w.data[lane0 + i] as u32) << (8 * i);
-                }
-            }
-            if off < 8 {
-                self.regs[off] = v;
-            }
-            if off == 7 && v & 1 == 1 && matches!(self.state, DState::Idle | DState::Done) {
-                self.job = Job {
-                    a: (self.regs[0] as u64) | ((self.regs[1] as u64) << 32),
-                    b: (self.regs[2] as u64) | ((self.regs[3] as u64) << 32),
-                    c: (self.regs[4] as u64) | ((self.regs[5] as u64) << 32),
-                    n: self.regs[6].max(1),
-                };
-                self.abuf.clear();
-                self.bbuf.clear();
-                self.cinbuf.clear();
-                self.cbuf.clear();
-                self.state = DState::FetchA { got: 0 };
-                stats.bump("dsa.jobs");
-            }
-            sub.b.borrow_mut().push(B { id: aw.id, resp: Resp::Okay });
+    fn start(&mut self, d: DsaDescriptor, stats: &mut Stats) {
+        // malformed descriptors complete immediately rather than wedging
+        // the ring: the tile dimension must be even (4·n² result bytes
+        // are streamed in 8-byte beats) and array-sized (n ≤ 512 bounds
+        // the host-side tile buffers against guest-controlled input)
+        let n = d.imm;
+        if d.op != opcode::MATMUL || n == 0 || n % 2 != 0 || n > 512 {
+            stats.bump("plugfab.bad_desc");
+            self.fe.complete(stats);
+            return;
         }
-        // reads
-        let has_ar = { sub.ar.borrow().peek().is_some() };
-        if has_ar {
-            let ar = sub.ar.borrow_mut().pop().unwrap();
-            let off = (ar.addr & 0xff) as usize / 4;
-            let v = if off == 7 {
-                match self.state {
-                    DState::Idle => 0,
-                    DState::Done => 0b10,
-                    _ => 0b01,
-                }
-            } else {
-                self.regs.get(off).copied().unwrap_or(0)
-            };
-            let lane0 = (ar.addr as usize) & 7 & !3;
-            let mut data = vec![0u8; 8];
-            data[lane0..lane0 + 4].copy_from_slice(&v.to_le_bytes());
-            self.sub_rsp.push_back(R { id: ar.id, data, resp: Resp::Okay, last: true });
-        }
-        if let Some(r) = self.sub_rsp.front() {
-            if sub.r.borrow().can_push() {
-                let r = r.clone();
-                self.sub_rsp.pop_front();
-                sub.r.borrow_mut().push(r);
-            }
-        }
-        let _ = stats;
+        self.job = Job { a: d.arg0, b: d.arg1, c: d.arg2, n: n as u32 };
+        self.state = DState::FetchA(BurstReader::new(self.job.a, self.tile_bytes()));
     }
 
-    /// Issue a read burst chain for a tile; returns true when fully fetched.
-    fn fetch(mgr: &AxiBus, base: u64, buf: &mut Vec<u8>, total: usize, got: &mut usize, stats: &mut Stats) -> bool {
-        // collect beats
-        while let Some(r) = {
-            let ok = { sub_is_mine(&mgr.r) };
-            if ok { mgr.r.borrow_mut().pop() } else { None }
-        } {
-            buf.extend_from_slice(&r.data);
-        }
-        // issue next burst (256-beat = 2 KiB max)
-        if *got < total && mgr.ar.borrow().can_push() {
-            let left = total - *got;
-            let bytes = left.min(2048);
-            let beats = (bytes / 8).max(1);
-            mgr.ar.borrow_mut().push(Ar {
-                id: 0x01,
-                addr: base + *got as u64,
-                len: (beats - 1) as u8,
-                size: 3,
-                burst: Burst::Incr,
-                qos: 0,
-            });
-            *got += beats * 8;
-            stats.bump("dsa.fetch_bursts");
-        }
-        buf.len() >= total
+    /// Run the tile kernel functionally and return the modeled completion
+    /// cycle of the systolic array.
+    fn compute(&mut self, now: Cycle, stats: &mut Stats) -> (Vec<u8>, Cycle) {
+        let n = self.job.n as usize;
+        let total = self.tile_bytes();
+        let to_f32 = |buf: &[u8]| -> Vec<f32> {
+            buf[..total].chunks(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+        };
+        let a = to_f32(&self.abuf);
+        let b = to_f32(&self.bbuf);
+        let cin = to_f32(&self.cinbuf);
+        // C_out = A·B + C_in (accumulating tile kernel — what makes
+        // k-loop tiling composable at the coordinator)
+        let c = match &self.runtime {
+            Some(rt) if rt.has(&self.artifact) => rt
+                .run_f32(&self.artifact, &[(&a, &[n, n]), (&b, &[n, n]), (&cin, &[n, n])])
+                .expect("pallas tile kernel"),
+            _ => {
+                stats.bump("dsa.native_fallback");
+                let mut c = cin.clone();
+                for i in 0..n {
+                    for k in 0..n {
+                        let aik = a[i * n + k];
+                        for j in 0..n {
+                            c[i * n + j] += aik * b[k * n + j];
+                        }
+                    }
+                }
+                c
+            }
+        };
+        let macs = (self.job.n as u64).pow(3);
+        stats.add("dsa.mac_ops", macs);
+        let bytes = c.iter().flat_map(|v| v.to_le_bytes()).collect();
+        (bytes, now + (macs / MACS_PER_CYCLE).max(1))
     }
-}
-
-fn sub_is_mine(r: &crate::sim::Link<R>) -> bool {
-    matches!(r.borrow().peek(), Some(r) if r.id == 0x01)
 }
 
 impl DsaPlugin for MatmulDsa {
@@ -187,130 +137,88 @@ impl DsaPlugin for MatmulDsa {
     }
 
     fn busy(&self) -> bool {
-        !matches!(self.state, DState::Idle | DState::Done)
+        !matches!(self.state, DState::Idle) || self.fe.busy()
+    }
+
+    fn irq(&self) -> bool {
+        self.fe.irq()
+    }
+
+    fn completed(&self) -> u64 {
+        self.fe.completed()
     }
 
     /// Idle between jobs; during compute the systolic-array completion
     /// cycle is a known deadline (the "DSA completion" event horizon).
     fn activity(&self, now: Cycle) -> Activity {
-        if !self.sub_rsp.is_empty() {
-            return Activity::Busy;
-        }
-        match self.state {
-            DState::Idle | DState::Done => Activity::Quiescent,
-            DState::Compute { until: Some(t) } => {
-                if now >= t {
-                    Activity::Busy
-                } else {
-                    Activity::IdleUntil(t)
-                }
-            }
+        let engine = match &self.state {
+            DState::Idle => Activity::Quiescent,
+            DState::Compute { until: Some(t) } if now < *t => Activity::IdleUntil(*t),
             _ => Activity::Busy,
-        }
+        };
+        engine.combine(self.fe.activity())
     }
 
     fn tick(&mut self, mgr: &AxiBus, sub: &AxiBus, now: Cycle, stats: &mut Stats) {
-        self.service_regs(sub, stats);
+        let engine_busy = !matches!(self.state, DState::Idle);
+        self.fe.service(sub, engine_busy, stats);
+        // new descriptor only while idle (keeps descriptor and operand
+        // traffic from interleaving on the shared manager port)
+        if matches!(self.state, DState::Idle) {
+            if let Some(d) = self.fe.poll_desc(mgr, true, stats) {
+                self.start(d, stats);
+            }
+        }
+        // the kernel runs functionally the cycle operand fetch finishes;
+        // the systolic-array latency is modeled as a completion deadline
+        if matches!(self.state, DState::Compute { until: None }) {
+            let (cbuf, done_at) = self.compute(now, stats);
+            self.cinbuf = cbuf; // result parked until the deadline
+            self.state = DState::Compute { until: Some(done_at) };
+        }
         let total = self.tile_bytes();
+        let (job_b, job_c) = (self.job.b, self.job.c);
+        let mut next: Option<DState> = None;
+        let mut done = false;
         match &mut self.state {
-            DState::Idle | DState::Done => {}
-            DState::FetchA { got } => {
-                let mut g = *got;
-                let done = Self::fetch(mgr, self.job.a, &mut self.abuf, total, &mut g, stats);
-                self.state = if done { DState::FetchB { got: 0 } } else { DState::FetchA { got: g } };
+            DState::Idle => {}
+            DState::FetchA(rd) => {
+                if rd.tick(mgr, stats) {
+                    self.abuf = std::mem::take(&mut rd.buf);
+                    next = Some(DState::FetchB(BurstReader::new(job_b, total)));
+                }
             }
-            DState::FetchB { got } => {
-                let mut g = *got;
-                let done = Self::fetch(mgr, self.job.b, &mut self.bbuf, total, &mut g, stats);
-                self.state = if done { DState::FetchC { got: 0 } } else { DState::FetchB { got: g } };
+            DState::FetchB(rd) => {
+                if rd.tick(mgr, stats) {
+                    self.bbuf = std::mem::take(&mut rd.buf);
+                    next = Some(DState::FetchC(BurstReader::new(job_c, total)));
+                }
             }
-            DState::FetchC { got } => {
-                let mut g = *got;
-                let done = Self::fetch(mgr, self.job.c, &mut self.cinbuf, total, &mut g, stats);
-                if done {
-                    self.state = DState::Compute { until: None };
-                } else {
-                    self.state = DState::FetchC { got: g };
+            DState::FetchC(rd) => {
+                if rd.tick(mgr, stats) {
+                    self.cinbuf = std::mem::take(&mut rd.buf);
+                    next = Some(DState::Compute { until: None });
                 }
             }
             DState::Compute { until } => {
-                if until.is_none() {
-                    // run the kernel now (functional), model the latency
-                    let n = self.job.n as usize;
-                    let a: Vec<f32> = self.abuf[..total]
-                        .chunks(4)
-                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                        .collect();
-                    let b: Vec<f32> = self.bbuf[..total]
-                        .chunks(4)
-                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                        .collect();
-                    let cin: Vec<f32> = self.cinbuf[..total]
-                        .chunks(4)
-                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                        .collect();
-                    // C_out = A·B + C_in (accumulating tile kernel — what
-                    // makes k-loop tiling composable at the coordinator)
-                    let c = match &self.runtime {
-                        Some(rt) if rt.has(&self.artifact) => rt
-                            .run_f32(&self.artifact, &[(&a, &[n, n]), (&b, &[n, n]), (&cin, &[n, n])])
-                            .expect("pallas tile kernel"),
-                        _ => {
-                            stats.bump("dsa.native_fallback");
-                            let mut c = cin.clone();
-                            for i in 0..n {
-                                for k in 0..n {
-                                    let aik = a[i * n + k];
-                                    for j in 0..n {
-                                        c[i * n + j] += aik * b[k * n + j];
-                                    }
-                                }
-                            }
-                            c
-                        }
-                    };
-                    self.cbuf = c.iter().flat_map(|v| v.to_le_bytes()).collect();
-                    let macs = (self.job.n as u64).pow(3);
-                    let cycles = (macs / MACS_PER_CYCLE).max(1);
-                    stats.add("dsa.mac_ops", macs);
-                    *until = Some(now + cycles);
-                } else if now >= until.unwrap() {
-                    self.state = DState::WriteC { sent: 0, acked: 0, issued: 0 };
+                if now >= until.expect("compute deadline set above") {
+                    let data = std::mem::take(&mut self.cinbuf);
+                    next = Some(DState::WriteC(BurstWriter::new(job_c, data)));
                 }
             }
-            DState::WriteC { sent, acked, issued } => {
-                while mgr.b.borrow_mut().pop().is_some() {
-                    *acked += 1;
-                }
-                // issue one burst at a time, stream its beats
-                if *issued <= *sent && *sent < total && mgr.aw.borrow().can_push() {
-                    let left = total - *sent;
-                    let bytes = left.min(2048);
-                    let beats = bytes / 8;
-                    mgr.aw.borrow_mut().push(Aw {
-                        id: 0x02,
-                        addr: self.job.c + *sent as u64,
-                        len: (beats - 1) as u8,
-                        size: 3,
-                        burst: Burst::Incr,
-                        qos: 0,
-                    });
-                    *issued = *sent + bytes;
-                    stats.bump("dsa.write_bursts");
-                }
-                // stream one beat per cycle
-                if *sent < *issued && mgr.w.borrow().can_push() {
-                    let beat = &self.cbuf[*sent..*sent + 8];
-                    let last = *sent + 8 == *issued;
-                    mgr.w.borrow_mut().push(W { data: beat.to_vec(), strb: full_strb(8), last });
-                    *sent += 8;
-                }
-                let bursts = (total + 2047) / 2048;
-                if *sent >= total && *acked as usize >= bursts {
-                    self.jobs_done += 1;
-                    self.state = DState::Done;
+            DState::WriteC(wr) => {
+                if wr.tick(mgr, stats) {
+                    done = true;
+                    next = Some(DState::Idle);
                 }
             }
+        }
+        if done {
+            self.jobs_done += 1;
+            self.fe.complete(stats);
+        }
+        if let Some(s) = next {
+            self.state = s;
         }
     }
 }
@@ -320,9 +228,13 @@ mod tests {
     use super::*;
     use crate::axi::memsub::MemSub;
     use crate::axi::port::axi_bus;
+    use crate::axi::types::{Aw, Burst, W};
+    use crate::dsa::frontend::regs;
 
-    /// Drive the DSA's subordinate port directly (as the CPU would) and
-    /// back its manager port with a plain memory.
+    /// Drive the DSA's subordinate port directly (as the CPU would),
+    /// back its manager port with a plain memory holding the descriptor
+    /// ring and the operands, and run one accumulating tile job through
+    /// the full descriptor/doorbell/IRQ contract.
     #[test]
     fn dsa_runs_a_tile_job_native_fallback() {
         let n = 16usize;
@@ -331,14 +243,22 @@ mod tests {
         let sub = axi_bus(4);
         let mut mem = MemSub::new(0x7000_0000, 0x40000, 8, 1);
         let mut stats = Stats::new();
-        // operands at SPM offsets 0 and tile
+        // operands at SPM offsets 0 and tile; ring high in the window
         let a: Vec<f32> = (0..n * n).map(|i| (i % 5) as f32).collect();
         let b: Vec<f32> = (0..n * n).map(|i| ((i * 7) % 3) as f32).collect();
         let tb = n * n * 4;
         mem.preload(0, &a.iter().flat_map(|v| v.to_le_bytes()).collect::<Vec<_>>());
         mem.preload(tb, &b.iter().flat_map(|v| v.to_le_bytes()).collect::<Vec<_>>());
+        let ring = 0x3_0000u64;
+        let d = DsaDescriptor {
+            op: opcode::MATMUL,
+            imm: n as u64,
+            arg0: 0x7000_0000,
+            arg1: 0x7000_0000 + tb as u64,
+            arg2: 0x7000_0000 + 2 * tb as u64,
+        };
+        mem.preload(ring as usize, &d.to_bytes());
 
-        // program registers through the sub port
         let write_reg = |sub: &AxiBus, off: u64, v: u32| {
             sub.aw.borrow_mut().push(Aw { id: 0, addr: off, len: 0, size: 2, burst: Burst::Incr, qos: 0 });
             let lane0 = (off as usize) & 7 & !3;
@@ -346,24 +266,27 @@ mod tests {
             data[lane0..lane0 + 4].copy_from_slice(&v.to_le_bytes());
             sub.w.borrow_mut().push(W { data, strb: 0xf << lane0, last: true });
         };
-        write_reg(&sub, 0x00, 0x7000_0000);
-        write_reg(&sub, 0x08, 0x7000_0000 + tb as u32);
-        write_reg(&sub, 0x10, 0x7000_0000 + 2 * tb as u32);
-        write_reg(&sub, 0x18, n as u32);
+        write_reg(&sub, regs::RING_LO, 0x7000_0000 + ring as u32);
+        write_reg(&sub, regs::RING_SZ, 1);
+        write_reg(&sub, regs::IRQ_ENA, 1);
+        write_reg(&sub, regs::TAIL, 1);
         for _ in 0..20 {
             dsa.tick(&mgr, &sub, 0, &mut stats);
         }
-        write_reg(&sub, 0x1c, 1); // GO
+        assert!(!dsa.busy(), "no doorbell yet");
+        write_reg(&sub, regs::DOORBELL, 1);
         let mut now = 0;
         for _ in 0..100_000 {
             dsa.tick(&mgr, &sub, now, &mut stats);
             mem.tick(&mgr, &mut stats);
             now += 1;
-            if dsa.jobs_done > 0 {
+            if dsa.jobs_done > 0 && !dsa.busy() {
                 break;
             }
         }
         assert_eq!(dsa.jobs_done, 1, "job must complete");
+        assert_eq!(dsa.completed(), 1);
+        assert!(dsa.irq(), "completion interrupt raised");
         // verify result
         let raw = &mem.mem()[2 * tb..3 * tb];
         let got: Vec<f32> = raw.chunks(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
@@ -374,5 +297,10 @@ mod tests {
             }
         }
         assert!(stats.get("dsa.mac_ops") >= (n * n * n) as u64);
+        assert_eq!(stats.get("plugfab.descs"), 1);
+        // W1C the cause: the line drops
+        write_reg(&sub, regs::IRQ_CAUSE, 1);
+        dsa.tick(&mgr, &sub, now, &mut stats);
+        assert!(!dsa.irq());
     }
 }

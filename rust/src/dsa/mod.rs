@@ -1,4 +1,4 @@
-//! The DSA plug-in interface (the paper's raison d'être).
+//! The DSA plug-in fabric (the paper's raison d'être).
 //!
 //! "a lightweight and modular 64-bit Linux-capable host platform designed
 //! for the seamless plug-in of domain-specific accelerators … The AXI4
@@ -6,29 +6,53 @@
 //! ports toward a DSA." (§I, Fig. 1)
 //!
 //! A [`DsaPlugin`] receives one crossbar port pair:
-//! * a **manager** bus — the DSA masters the fabric (fetches operands,
-//!   writes results, anywhere in the address map), and
+//! * a **manager** bus — the DSA masters the fabric (fetches descriptors
+//!   and operands, writes results, anywhere in the address map), and
 //! * a **subordinate** bus — the host programs the DSA through its
 //!   `0x6000_0000 + pair × 16 MiB` window.
 //!
-//! Two plug-ins ship in-tree:
+//! Since the plug-in-fabric refactor, every in-tree plug-in speaks the
+//! *same* host contract through an embedded
+//! [`frontend::AcceleratorFrontend`]: an in-memory descriptor ring, a
+//! doorbell, and a per-slot PLIC completion interrupt (see the `frontend`
+//! module docs for the register map). Four engines ship in-tree:
+//!
 //! * [`matmul::MatmulDsa`] — a tinyML matrix accelerator in the spirit of
 //!   the PULP-NN / TFLM engines the paper cites as DSA motivation
 //!   [15, 16]. Its *compute* is the AOT-compiled Pallas kernel executed
-//!   through PJRT (`crate::runtime`); its *memory traffic* (operand
-//!   fetch, result drain) runs beat-accurately through the simulated
-//!   fabric. This is the three-layer integration point.
-//! * [`traffic::TrafficGen`] — a synthetic load generator for interconnect
-//!   stress tests and the crossbar-scaling experiments.
+//!   through PJRT (`crate::runtime`); its *memory traffic* (descriptor
+//!   fetch, operand fetch, result drain) runs beat-accurately through
+//!   the simulated fabric.
+//! * [`traffic::TrafficGen`] — a synthetic load generator for
+//!   interconnect stress tests and the crossbar-scaling experiments
+//!   (descriptor-driven, with an autonomous mode for the sweep axis).
+//! * [`crc::CrcEngine`] — a streaming CRC32 checksum engine (the
+//!   canonical "offload a byte-stream scan" accelerator).
+//! * [`reduce::ReduceEngine`] — a vector reduce / engine-driven memcpy
+//!   unit (the canonical "offload a data-movement kernel" accelerator).
+//!
+//! Slots are **config-driven**: `CheshireConfig::dsa_slots` (TOML
+//! `dsa.slots = ["matmul", "crc@d2d", …]`) instantiates engines at SoC
+//! construction, optionally behind the serialized D2D chiplet link.
 
+pub mod crc;
+pub mod frontend;
 pub mod matmul;
+pub mod reduce;
 pub mod traffic;
 
 use crate::axi::port::AxiBus;
 use crate::sim::{Activity, Cycle, Stats};
 
 /// A domain-specific accelerator attached to one crossbar port pair.
+///
+/// Every method is part of the plug-in contract — there are deliberately
+/// no defaults: a plug-in that cannot classify its idleness
+/// ([`DsaPlugin::activity`]) would silently pin the whole platform
+/// unelidable, and one without an interrupt line ([`DsaPlugin::irq`])
+/// would force its host back to polling.
 pub trait DsaPlugin {
+    /// Stable plug-in name (used in diagnostics and double-plug panics).
     fn name(&self) -> &'static str;
     /// Advance one cycle. `mgr` is the DSA's manager port into the fabric,
     /// `sub` the host-facing subordinate port of its register window.
@@ -36,10 +60,14 @@ pub trait DsaPlugin {
     /// True when the accelerator has outstanding work.
     fn busy(&self) -> bool;
     /// Next-cycle behavior for the event-horizon scheduler (see
-    /// [`crate::sim::Component`]). The conservative default keeps any
-    /// plug-in that has not opted in permanently busy — correct, just
-    /// unelidable.
-    fn activity(&self, _now: Cycle) -> Activity {
-        Activity::Busy
-    }
+    /// [`crate::sim::Component`]). Required: every in-tree plug-in
+    /// reports an exact idle deadline (compute-completion cycle, pacing
+    /// slot) or quiescence, so DSA-resident scenarios stay elidable.
+    fn activity(&self, now: Cycle) -> Activity;
+    /// Level-triggered completion-interrupt line, wired to the slot's
+    /// PLIC source (`3 + slot index`).
+    fn irq(&self) -> bool;
+    /// Total descriptors completed since reset (the frontend's
+    /// `COMPLETED` counter — host-side harnesses key progress on it).
+    fn completed(&self) -> u64;
 }

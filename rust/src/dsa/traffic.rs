@@ -5,29 +5,53 @@
 //! issues a configurable mix of read/write bursts at a configurable
 //! intensity through its manager port, modeling a DSA that saturates its
 //! attachment point.
+//!
+//! Two programming paths share one engine:
+//! * **autonomous** — [`TrafficGen::new`] stages a background job from
+//!   constructor parameters that starts at reset (what the sweep
+//!   harness's `dsa` axis plugs in: no host programming required);
+//! * **descriptor-driven** — [`TrafficGen::idle`] builds an empty
+//!   generator behind the standard [`AcceleratorFrontend`] contract; a
+//!   [`opcode::TRAFFIC`] descriptor carries the window, mix, pacing, and
+//!   burst count, and completion raises the slot interrupt like every
+//!   other plug-in.
 
+use super::frontend::{opcode, AcceleratorFrontend, DsaDescriptor};
 use super::DsaPlugin;
 use crate::axi::port::AxiBus;
 use crate::axi::types::{full_strb, Ar, Aw, Burst, W};
 use crate::sim::{Activity, Cycle, Stats};
 use std::collections::VecDeque;
 
-pub struct TrafficGen {
+/// CAP class byte advertised by this engine.
+pub const CLASS: u16 = 2;
+
+/// One traffic job (from the constructor or a descriptor).
+#[derive(Debug, Clone)]
+struct TrafficJob {
     /// Target address window.
-    pub base: u64,
-    pub size: u64,
+    base: u64,
+    size: u64,
     /// Burst bytes (multiple of 8, ≤ 2048).
-    pub burst: u64,
+    burst: u64,
     /// Fraction of writes in [0,256).
-    pub write_ratio: u8,
+    write_ratio: u8,
     /// Issue a new burst every `period` cycles.
-    pub period: u64,
-    /// Total bursts to issue (0 = unlimited).
-    pub count: u64,
+    period: u64,
+    /// Total bursts to issue (0 = unlimited; descriptor jobs are always
+    /// bounded so they can complete).
+    count: u64,
+    issued: u64,
+    /// Whether completion must be reported through the frontend.
+    from_desc: bool,
+}
+
+pub struct TrafficGen {
+    fe: AcceleratorFrontend,
+    job: Option<TrafficJob>,
     /// Bursts the generator may keep in flight (1 = blocking: wait for
     /// each B / last R before the next burst).
     pub max_outstanding: u64,
-    issued: u64,
     inflight: u64,
     next_at: Cycle,
     seed: u64,
@@ -37,26 +61,42 @@ pub struct TrafficGen {
     /// Beats left per granted write burst (front streams first, in AW
     /// order — required by the crossbar's no-interleave W routing).
     w_bursts: VecDeque<u32>,
+    /// Total bursts issued across all jobs.
+    pub issued: u64,
     pub completed_reads: u64,
     pub completed_writes: u64,
 }
 
 impl TrafficGen {
+    /// Autonomous generator: the job starts at reset, no host programming.
     pub fn new(base: u64, size: u64, burst: u64, write_ratio: u8, period: u64, count: u64) -> Self {
-        Self {
+        let mut tg = Self::idle();
+        tg.job = Some(TrafficJob {
             base,
             size,
             burst: burst.clamp(8, 2048) & !7,
             write_ratio,
             period: period.max(1),
             count,
-            max_outstanding: 4,
             issued: 0,
+            from_desc: false,
+        });
+        tg
+    }
+
+    /// Descriptor-driven generator: quiescent until the host queues a
+    /// [`opcode::TRAFFIC`] descriptor through the frontend.
+    pub fn idle() -> Self {
+        Self {
+            fe: AcceleratorFrontend::new(CLASS),
+            job: None,
+            max_outstanding: 4,
             inflight: 0,
             next_at: 0,
             seed: 0x243f_6a88_85a3_08d3,
             pending: None,
             w_bursts: VecDeque::new(),
+            issued: 0,
             completed_reads: 0,
             completed_writes: 0,
         }
@@ -70,6 +110,25 @@ impl TrafficGen {
         self.seed = x;
         x.wrapping_mul(0x2545_f491_4f6c_dd1d)
     }
+
+    fn start(&mut self, d: DsaDescriptor, stats: &mut Stats) {
+        if d.op != opcode::TRAFFIC {
+            stats.bump("plugfab.bad_desc");
+            self.fe.complete(stats);
+            return;
+        }
+        // arg2 packs: [15:0] burst bytes, [23:16] write ratio, [55:24] period
+        self.job = Some(TrafficJob {
+            base: d.arg0,
+            size: d.arg1.max(8),
+            burst: (d.arg2 & 0xffff).clamp(8, 2048) & !7,
+            write_ratio: ((d.arg2 >> 16) & 0xff) as u8,
+            period: ((d.arg2 >> 24) & 0xffff_ffff).max(1),
+            count: d.imm.max(1), // descriptor jobs must terminate
+            issued: 0,
+            from_desc: true,
+        });
+    }
 }
 
 impl DsaPlugin for TrafficGen {
@@ -78,27 +137,39 @@ impl DsaPlugin for TrafficGen {
     }
 
     fn busy(&self) -> bool {
-        self.count == 0 || self.issued < self.count
+        match &self.job {
+            Some(j) => j.count == 0 || j.issued < j.count || self.inflight > 0,
+            None => self.fe.busy(),
+        }
     }
 
-    /// A finished generator is frozen; a paced one is idle until its next
+    fn irq(&self) -> bool {
+        self.fe.irq()
+    }
+
+    fn completed(&self) -> u64 {
+        self.fe.completed()
+    }
+
+    /// A drained generator is frozen; a paced one is idle until its next
     /// issue slot (responses in flight keep the platform busy via the
-    /// owning buses).
+    /// owning buses, and the completion tick runs in the same cycle the
+    /// last response is drained).
     fn activity(&self, now: Cycle) -> Activity {
         if !self.w_bursts.is_empty() || self.pending.is_some() {
             return Activity::Busy;
         }
-        if self.count != 0 && self.issued >= self.count {
-            return Activity::Quiescent;
-        }
-        if now < self.next_at {
-            Activity::IdleUntil(self.next_at)
-        } else {
-            Activity::Busy
-        }
+        let engine = match &self.job {
+            None => Activity::Quiescent,
+            Some(j) if j.count != 0 && j.issued >= j.count => Activity::Quiescent,
+            Some(_) if now < self.next_at => Activity::IdleUntil(self.next_at),
+            Some(_) => Activity::Busy,
+        };
+        engine.combine(self.fe.activity())
     }
 
-    fn tick(&mut self, mgr: &AxiBus, _sub: &AxiBus, now: Cycle, stats: &mut Stats) {
+    fn tick(&mut self, mgr: &AxiBus, sub: &AxiBus, now: Cycle, stats: &mut Stats) {
+        self.fe.service(sub, self.job.is_some(), stats);
         // drain responses
         while let Some(r) = mgr.r.borrow_mut().pop() {
             if r.last {
@@ -121,38 +192,69 @@ impl DsaPlugin for TrafficGen {
                 }
             }
         }
+        // job retirement: a bounded job is done once every burst is
+        // issued, streamed, and answered
+        let retire = match &self.job {
+            Some(j) => {
+                j.count != 0
+                    && j.issued >= j.count
+                    && self.inflight == 0
+                    && self.pending.is_none()
+                    && self.w_bursts.is_empty()
+            }
+            None => false,
+        };
+        if retire {
+            let j = self.job.take().unwrap();
+            if j.from_desc {
+                self.fe.complete(stats);
+            }
+        }
+        // next descriptor only when no job is active (the frontend never
+        // interleaves descriptor fetch with an unfinished job)
+        if self.job.is_none() {
+            if let Some(d) = self.fe.poll_desc(mgr, true, stats) {
+                self.start(d, stats);
+                self.next_at = now; // a fresh job may issue immediately
+            }
+        }
+        let Some(job) = &mut self.job else { return };
         // roll the next burst exactly once per burst index: the address /
         // direction sequence is a pure function of the index, independent
         // of how long channel back-pressure delays the issue
         if self.pending.is_none()
             && now >= self.next_at
-            && (self.count == 0 || self.issued < self.count)
+            && (job.count == 0 || job.issued < job.count)
             && self.inflight < self.max_outstanding.max(1)
         {
-            let max_off = self.size.saturating_sub(self.burst).max(1);
-            let addr = self.base + (self.rand() % max_off) & !7;
-            let write = (self.rand() & 0xff) < self.write_ratio as u64;
+            let max_off = job.size.saturating_sub(job.burst).max(1);
+            let (base, wr_ratio) = (job.base, job.write_ratio);
+            let addr = base + (self.rand() % max_off) & !7;
+            let write = (self.rand() & 0xff) < wr_ratio as u64;
             self.pending = Some((addr, write));
         }
         // issue the staged burst when the channel accepts it
+        let Some(job) = &mut self.job else { return };
         if let Some((addr, write)) = self.pending {
-            let beats = (self.burst / 8) as u8;
+            let beats = (job.burst / 8) as u8;
             if write {
                 if mgr.aw.borrow().can_push() {
                     mgr.aw.borrow_mut().push(Aw { id: 0x05, addr, len: beats - 1, size: 3, burst: Burst::Incr, qos: 0 });
                     self.w_bursts.push_back(beats as u32);
                     self.pending = None;
+                    job.issued += 1;
                     self.issued += 1;
                     self.inflight += 1;
-                    self.next_at = now + self.period;
+                    self.next_at = now + job.period;
                     stats.bump("dsa.traffic_wr");
                 }
             } else if mgr.ar.borrow().can_push() {
                 mgr.ar.borrow_mut().push(Ar { id: 0x05, addr, len: beats - 1, size: 3, burst: Burst::Incr, qos: 0 });
                 self.pending = None;
+                job.issued += 1;
                 self.issued += 1;
                 self.inflight += 1;
-                self.next_at = now + self.period;
+                self.next_at = now + job.period;
                 stats.bump("dsa.traffic_rd");
             }
         }
@@ -183,6 +285,7 @@ mod tests {
         assert_eq!(tg.completed_reads + tg.completed_writes, 50, "all bursts completed");
         assert!(stats.get("dsa.traffic_rd") > 0);
         assert!(stats.get("dsa.traffic_wr") > 0);
+        assert_eq!(stats.get("dsa.jobs"), 0, "autonomous jobs don't touch the ring");
     }
 
     /// The generated (address, direction) sequence is a pure function of
@@ -238,5 +341,58 @@ mod tests {
         }
         assert_eq!(mgr.ar.borrow().len(), 4, "capped at max_outstanding");
         assert_eq!(tg.issued, 4);
+    }
+
+    /// The descriptor-driven path: a TRAFFIC descriptor fetched through
+    /// the ring runs a bounded job and completes with an interrupt — the
+    /// same contract as every other plug-in.
+    #[test]
+    fn descriptor_job_completes_with_irq() {
+        use crate::axi::types::{Aw, Burst, W};
+        use crate::dsa::frontend::regs;
+        let mut tg = TrafficGen::idle();
+        let mgr = axi_bus(8);
+        let sub = axi_bus(4);
+        let mut mem = MemSub::new(0, 0x10000, 8, 1);
+        let mut stats = Stats::new();
+        assert!(!tg.busy(), "idle generator is quiescent");
+        let d = DsaDescriptor {
+            op: opcode::TRAFFIC,
+            imm: 12, // bursts
+            arg0: 0x1000,
+            arg1: 0x4000,
+            arg2: 64 | (128 << 16) | (2 << 24),
+        };
+        mem.preload(0x8000, &d.to_bytes());
+        let write_reg = |sub: &AxiBus, off: u64, v: u32| {
+            sub.aw.borrow_mut().push(Aw { id: 0, addr: off, len: 0, size: 2, burst: Burst::Incr, qos: 0 });
+            let lane0 = (off as usize) & 7 & !3;
+            let mut data = vec![0u8; 8];
+            data[lane0..lane0 + 4].copy_from_slice(&v.to_le_bytes());
+            sub.w.borrow_mut().push(W { data, strb: 0xf << lane0, last: true });
+        };
+        // one register write per tick (depth-4 sub channel; one access
+        // serviced per cycle)
+        for (off, v) in [
+            (regs::RING_LO, 0x8000),
+            (regs::RING_SZ, 1),
+            (regs::IRQ_ENA, 1),
+            (regs::TAIL, 1),
+            (regs::DOORBELL, 1),
+        ] {
+            write_reg(&sub, off, v);
+            tg.tick(&mgr, &sub, 0, &mut stats);
+        }
+        for now in 0..50_000u64 {
+            tg.tick(&mgr, &sub, now, &mut stats);
+            mem.tick(&mgr, &mut stats);
+            if tg.completed() == 1 && !tg.busy() {
+                break;
+            }
+        }
+        assert_eq!(tg.completed(), 1, "descriptor job completed");
+        assert_eq!(tg.issued, 12);
+        assert!(tg.irq(), "completion raised the slot interrupt");
+        assert_eq!(stats.get("dsa.jobs"), 1);
     }
 }

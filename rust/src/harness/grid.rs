@@ -1,7 +1,7 @@
 //! Cartesian sweep-grid builder: axis lists → a flat scenario list.
 
 use super::scenario::{Scenario, Workload};
-use crate::platform::config::MemBackend;
+use crate::platform::config::{DsaSlot, MemBackend};
 use crate::platform::CheshireConfig;
 
 /// A configuration grid. Every axis is a list; [`SweepGrid::scenarios`]
@@ -20,6 +20,11 @@ pub struct SweepGrid {
     pub spm_way_masks: Vec<u32>,
     /// DSA port-pair counts to sweep (0 = host only).
     pub dsa_ports: Vec<usize>,
+    /// Slot topologies to sweep (`--slots matmul+crc,reduce+crc@d2d`):
+    /// each entry is one full `dsa.slots` list, instantiated by
+    /// `Soc::new`. The empty topology (no configured slots) is the
+    /// default single value.
+    pub slot_sets: Vec<Vec<DsaSlot>>,
     /// I/D TLB entry counts to sweep (the VM-pressure axis: supervisor
     /// workloads go PTW-bound as this shrinks; bare-metal workloads are
     /// insensitive to it).
@@ -52,12 +57,14 @@ impl SweepGrid {
         let tlb = base.tlb_entries;
         let mshrs = base.llc_mshrs;
         let outstanding = base.max_outstanding;
+        let slots = base.dsa_slots.clone();
         Self {
             base,
             workloads: vec![Workload::Nop { window: 200_000 }],
             backends: vec![MemBackend::Rpc],
             spm_way_masks: vec![0xff],
             dsa_ports: vec![0],
+            slot_sets: vec![slots],
             tlb_entries: vec![tlb],
             mshrs: vec![mshrs],
             outstanding: vec![outstanding],
@@ -77,7 +84,7 @@ impl SweepGrid {
         g
     }
 
-    /// Deduplicated copies of the seven axes, in first-occurrence order.
+    /// Deduplicated copies of the eight axes, in first-occurrence order.
     #[allow(clippy::type_complexity)]
     fn axes(
         &self,
@@ -86,6 +93,7 @@ impl SweepGrid {
         Vec<MemBackend>,
         Vec<u32>,
         Vec<usize>,
+        Vec<Vec<DsaSlot>>,
         Vec<usize>,
         Vec<usize>,
         Vec<usize>,
@@ -95,6 +103,7 @@ impl SweepGrid {
             dedup_preserve(&self.backends),
             dedup_preserve(&self.spm_way_masks),
             dedup_preserve(&self.dsa_ports),
+            dedup_preserve(&self.slot_sets),
             dedup_preserve(&self.tlb_entries),
             dedup_preserve(&self.mshrs),
             dedup_preserve(&self.outstanding),
@@ -103,8 +112,8 @@ impl SweepGrid {
 
     /// Number of scenarios the grid expands to (after axis dedup).
     pub fn len(&self) -> usize {
-        let (w, b, m, d, t, ms, o) = self.axes();
-        w.len() * b.len() * m.len() * d.len() * t.len() * ms.len() * o.len()
+        let (w, b, m, d, sl, t, ms, o) = self.axes();
+        w.len() * b.len() * m.len() * d.len() * sl.len() * t.len() * ms.len() * o.len()
     }
 
     /// Whether the grid is empty (any axis without values).
@@ -114,23 +123,26 @@ impl SweepGrid {
 
     /// Expand the cartesian product into concrete scenarios.
     pub fn scenarios(&self) -> Vec<Scenario> {
-        let (workloads, backends, masks, dsa_ports, tlbs, mshrs, outs) = self.axes();
+        let (workloads, backends, masks, dsa_ports, slot_sets, tlbs, mshrs, outs) = self.axes();
         let mut out = Vec::with_capacity(self.len());
         for wl in &workloads {
             for &backend in &backends {
                 for &mask in &masks {
                     for &dsa in &dsa_ports {
-                        for &tlb in &tlbs {
-                            for &ms in &mshrs {
-                                for &o in &outs {
-                                    let mut cfg = self.base.clone();
-                                    cfg.backend = backend;
-                                    cfg.spm_way_mask = mask;
-                                    cfg.dsa_port_pairs = dsa;
-                                    cfg.tlb_entries = tlb;
-                                    cfg.llc_mshrs = ms;
-                                    cfg.max_outstanding = o;
-                                    out.push(Scenario::new(cfg, wl.clone(), self.max_cycles));
+                        for slots in &slot_sets {
+                            for &tlb in &tlbs {
+                                for &ms in &mshrs {
+                                    for &o in &outs {
+                                        let mut cfg = self.base.clone();
+                                        cfg.backend = backend;
+                                        cfg.spm_way_mask = mask;
+                                        cfg.dsa_port_pairs = dsa;
+                                        cfg.dsa_slots = slots.clone();
+                                        cfg.tlb_entries = tlb;
+                                        cfg.llc_mshrs = ms;
+                                        cfg.max_outstanding = o;
+                                        out.push(Scenario::new(cfg, wl.clone(), self.max_cycles));
+                                    }
                                 }
                             }
                         }
@@ -193,6 +205,24 @@ mod tests {
         names.sort();
         names.dedup();
         assert_eq!(names.len(), 6, "all scenario names unique");
+    }
+
+    #[test]
+    fn slot_topology_axis_expands_and_names_scenarios() {
+        use crate::platform::config::parse_slots;
+        let mut g = SweepGrid::new(CheshireConfig::neo());
+        g.workloads = vec![Workload::Hetero { kib: 4 }];
+        g.slot_sets = vec![
+            parse_slots("reduce+crc").unwrap(),
+            parse_slots("reduce+crc@d2d").unwrap(),
+            parse_slots("reduce+crc").unwrap(), // duplicate deduped
+        ];
+        assert_eq!(g.len(), 2);
+        let scs = g.scenarios();
+        assert!(scs[0].name.contains("/sl:reduce+crc"), "{}", scs[0].name);
+        assert!(scs[1].name.contains("/sl:reduce+crc@d2d"), "{}", scs[1].name);
+        assert!(scs[1].cfg.dsa_slots[1].remote);
+        assert_eq!(scs[0].cfg.dsa_port_pairs, 2, "pairs grown to fit the topology");
     }
 
     #[test]

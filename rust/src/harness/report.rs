@@ -84,6 +84,7 @@ impl SweepReport {
             out.push_str(&format!("      \"backend\": \"{}\",\n", r.backend));
             out.push_str(&format!("      \"spm_way_mask\": {},\n", r.spm_way_mask));
             out.push_str(&format!("      \"dsa_ports\": {},\n", r.dsa_ports));
+            out.push_str(&format!("      \"dsa_slots\": \"{}\",\n", json_escape(&r.dsa_slots)));
             out.push_str(&format!("      \"tlb_entries\": {},\n", r.tlb_entries));
             out.push_str(&format!("      \"mshrs\": {},\n", r.mshrs));
             out.push_str(&format!("      \"outstanding\": {},\n", r.outstanding));
@@ -158,6 +159,7 @@ mod tests {
             backend: MemBackend::Rpc,
             spm_way_mask: 0xff,
             dsa_ports: 0,
+            dsa_slots: String::new(),
             tlb_entries: 16,
             mshrs: 4,
             outstanding: 4,

@@ -1,10 +1,9 @@
 //! One sweep point: a platform configuration + a workload, run to
 //! completion on a private SoC instance.
 
-use crate::dsa::matmul::MatmulDsa;
 use crate::dsa::traffic::TrafficGen;
 use crate::model::{PowerModel, PowerReport};
-use crate::platform::config::MemBackend;
+use crate::platform::config::{slots_spec, DsaKind, DsaSlot, MemBackend};
 use crate::platform::memmap::DRAM_BASE;
 use crate::platform::{CheshireConfig, Soc};
 use crate::sim::Stats;
@@ -47,6 +46,16 @@ pub enum Workload {
         /// CLINT ticks until the (single) timer interrupt.
         timer_delta: u32,
     },
+    /// Heterogeneous multi-DSA pipeline through the uniform plug-in
+    /// fabric: supervisor-mode software queues descriptors to the reduce
+    /// engine (slot 0) and the CRC engine (slot 1) and sleeps in `wfi`
+    /// until each completion interrupt — zero CPU poll loops; halts on
+    /// ebreak (the plug-in-fabric acceptance scenario — `bench_plugfab`
+    /// measures descriptor throughput on the same engines).
+    Hetero {
+        /// Bytes the pipeline pushes through each stage, in KiB.
+        kib: u32,
+    },
     /// Mixed-traffic contention: CPU streaming over the SPM while the DMA
     /// engine and the matmul DSA concurrently hammer DRAM; halts on
     /// ebreak after flushing the LLC (the non-blocking-hierarchy
@@ -74,6 +83,7 @@ impl Workload {
             Workload::TwoMm { .. } => "twomm",
             Workload::Mem { .. } => "mem",
             Workload::Supervisor { .. } => "supervisor",
+            Workload::Hetero { .. } => "hetero",
             Workload::Contention { .. } => "contention",
         }
     }
@@ -89,11 +99,12 @@ impl Workload {
             "supervisor" | "sv39" => {
                 Ok(Workload::Supervisor { demand_pages: 8, timer_delta: 20_000 })
             }
+            "hetero" => Ok(Workload::Hetero { kib: 16 }),
             "contention" => {
                 Ok(Workload::Contention { dma_kib: 32, tile_n: 16, jobs: 2, spm_kib: 32 })
             }
             other => Err(format!(
-                "unknown workload {other:?} (want wfi|nop|twomm|mem|supervisor|contention)"
+                "unknown workload {other:?} (want wfi|nop|twomm|mem|supervisor|hetero|contention)"
             )),
         }
     }
@@ -125,6 +136,23 @@ impl Workload {
                     "supervisor workload maps 32 MiB of DRAM"
                 );
                 workloads::supervisor_program(DRAM_BASE, demand_pages, timer_delta)
+            }
+            Workload::Hetero { kib } => {
+                assert!(
+                    soc.cfg.dsa_slots.first().map(|s| s.kind) == Some(DsaKind::Reduce)
+                        && soc.cfg.dsa_slots.get(1).map(|s| s.kind) == Some(DsaKind::Crc),
+                    "hetero workload needs dsa.slots starting [reduce, crc] \
+                     (got {:?})",
+                    soc.cfg.dsa_slots
+                );
+                let len = (kib.max(1) * 1024).min((workloads::HETERO_DST_OFF
+                    - workloads::HETERO_SRC_OFF) as u32)
+                    & !7;
+                let src: Vec<u8> = (0..len)
+                    .map(|i| (i.wrapping_mul(2654435761).wrapping_add(11) >> 5) as u8)
+                    .collect();
+                soc.dram_write(workloads::HETERO_SRC_OFF as usize, &src);
+                workloads::hetero_program(DRAM_BASE, len)
             }
             Workload::Contention { dma_kib, tile_n, jobs, spm_kib } => {
                 assert!(
@@ -199,18 +227,25 @@ pub struct Scenario {
 impl Scenario {
     /// Build a scenario with a generated `name` of the form
     /// `<workload>/<backend>/spm<mask>/dsa<n>/tlb<e>/mshr<m>/out<o>`
-    /// (plus `/blk` when the blocking memory hierarchy is selected).
+    /// (plus `/sl:<slots>` when a slot topology is configured and `/blk`
+    /// when the blocking memory hierarchy is selected).
     ///
-    /// The `contention` workload needs the matmul DSA on port pair 0, so
-    /// a zero `dsa_port_pairs` is normalized to one *here* — the stored
-    /// config, the scenario name, and the eventual [`ScenarioResult`]
-    /// all describe the configuration that actually runs.
+    /// Workload-required topologies are normalized *here* — `contention`
+    /// puts the matmul engine on slot 0, `hetero` needs `[reduce, crc]`
+    /// — so the stored config, the scenario name, and the eventual
+    /// [`ScenarioResult`] all describe the configuration that actually
+    /// runs.
     pub fn new(mut cfg: CheshireConfig, workload: Workload, max_cycles: u64) -> Self {
-        if matches!(workload, Workload::Contention { .. }) && cfg.dsa_port_pairs == 0 {
-            cfg.dsa_port_pairs = 1;
+        if matches!(workload, Workload::Contention { .. }) && cfg.dsa_slots.is_empty() {
+            cfg.dsa_slots = vec![DsaSlot::local(DsaKind::Matmul)];
         }
+        if matches!(workload, Workload::Hetero { .. }) && cfg.dsa_slots.is_empty() {
+            cfg.dsa_slots = vec![DsaSlot::local(DsaKind::Reduce), DsaSlot::local(DsaKind::Crc)];
+        }
+        cfg.dsa_port_pairs = cfg.dsa_port_pairs.max(cfg.dsa_slots.len());
+        let slots = slots_spec(&cfg.dsa_slots);
         let name = format!(
-            "{}/{}/spm{:02x}/dsa{}/tlb{}/mshr{}/out{}{}",
+            "{}/{}/spm{:02x}/dsa{}/tlb{}/mshr{}/out{}{}{}",
             workload.name(),
             cfg.backend,
             cfg.spm_way_mask,
@@ -218,6 +253,7 @@ impl Scenario {
             cfg.tlb_entries,
             cfg.llc_mshrs,
             cfg.max_outstanding,
+            if slots.is_empty() { String::new() } else { format!("/sl:{slots}") },
             if cfg.mem_blocking { "/blk" } else { "" }
         );
         Self { name, cfg, workload, max_cycles }
@@ -225,24 +261,16 @@ impl Scenario {
 
     /// Build the SoC, stage the workload, run it, and distill the result.
     ///
-    /// When the configuration has DSA port pairs, each is populated with a
-    /// [`TrafficGen`] streaming fixed-seed bursts at the top of DRAM — the
-    /// paper's "DSA saturating its attachment point" contention load — so
-    /// the `dsa` axis measures interconnect interference, not idle ports.
-    /// The `contention` workload instead puts a [`MatmulDsa`] on port
-    /// pair 0 (guaranteed to exist — [`Scenario::new`] normalizes the
-    /// pair count): its CPU program drives that accelerator's register
-    /// window directly.
+    /// Configured `dsa_slots` are instantiated by [`Soc::new`] itself
+    /// (the config-driven topology path). Any *remaining* port pair of
+    /// the `dsa` axis is populated with an autonomous [`TrafficGen`]
+    /// streaming fixed-seed bursts at the top of DRAM — the paper's "DSA
+    /// saturating its attachment point" contention load — so the axis
+    /// measures interconnect interference, not idle ports.
     pub fn run(&self) -> ScenarioResult {
-        let contention = matches!(self.workload, Workload::Contention { .. });
-        let cfg = &self.cfg; // Scenario::new already normalized dsa pairs
+        let cfg = &self.cfg; // Scenario::new already normalized the topology
         let mut soc = Soc::new(cfg.clone());
-        let mut first_tg = 0;
-        if contention {
-            soc.plug_dsa(0, Box::new(MatmulDsa::new(None, "matmul_acc")));
-            first_tg = 1;
-        }
-        for i in first_tg..cfg.dsa_port_pairs {
+        for i in cfg.dsa_slots.len()..cfg.dsa_port_pairs {
             // 1 KiB bursts, ~50 % writes, one burst per 64 cycles, forever,
             // confined to the top quarter of DRAM — above the MEM
             // workload's fixed DMA destination (offset 8 MiB) for any
@@ -286,6 +314,7 @@ impl Scenario {
             backend: self.cfg.backend,
             spm_way_mask: self.cfg.spm_way_mask,
             dsa_ports: self.cfg.dsa_port_pairs,
+            dsa_slots: slots_spec(&self.cfg.dsa_slots),
             tlb_entries: self.cfg.tlb_entries,
             mshrs: self.cfg.llc_mshrs,
             outstanding: self.cfg.max_outstanding,
@@ -314,8 +343,12 @@ pub struct ScenarioResult {
     pub backend: MemBackend,
     /// LLC way mask configured as SPM.
     pub spm_way_mask: u32,
-    /// Number of DSA port pairs (each carrying a traffic generator).
+    /// Number of DSA port pairs (config-driven slots first, autonomous
+    /// traffic generators on the remainder).
     pub dsa_ports: usize,
+    /// Canonical `+`-joined slot-topology spec (empty when no slots are
+    /// configured).
+    pub dsa_slots: String,
     /// I/D TLB entries the CVA6 ran with (the Sv39 VM-pressure axis).
     pub tlb_entries: usize,
     /// LLC MSHR file depth the scenario ran with (the memory-level
@@ -371,10 +404,27 @@ mod tests {
 
     #[test]
     fn workload_parse_roundtrips_names() {
-        for name in ["wfi", "nop", "twomm", "mem", "supervisor", "contention"] {
+        for name in ["wfi", "nop", "twomm", "mem", "supervisor", "hetero", "contention"] {
             assert_eq!(Workload::parse(name).unwrap().name(), name);
         }
         assert!(Workload::parse("fft").is_err());
+    }
+
+    /// The hetero scenario self-provisions its `[reduce, crc]` topology,
+    /// completes on interrupts alone, and records the slot spec in its
+    /// name and result.
+    #[test]
+    fn hetero_scenario_normalizes_slots_and_halts() {
+        let sc = Scenario::new(CheshireConfig::neo(), Workload::Hetero { kib: 4 }, 8_000_000);
+        assert!(sc.name.contains("/sl:reduce+crc"), "topology in the name: {}", sc.name);
+        assert_eq!(sc.cfg.dsa_port_pairs, 2);
+        let r = sc.run();
+        assert!(r.halted, "{}: hetero must halt", r.name);
+        assert_eq!(r.dsa_slots, "reduce+crc");
+        assert_eq!(r.stats.get("dsa.jobs"), 3, "memcpy + crc + reduce completed");
+        assert_eq!(r.stats.get("plugfab.irqs"), 3);
+        assert!(r.stats.get("cpu.wfi_cycles") > 0, "IRQ-driven, not polled");
+        assert_eq!(r.stats.get("rpc.dev_violations"), 0);
     }
 
     #[test]

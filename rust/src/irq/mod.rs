@@ -15,6 +15,17 @@ use crate::sim::{Activity, Cycle, Stats};
 use std::cell::RefCell;
 use std::rc::Rc;
 
+/// PLIC source index of the UART interrupt.
+pub const PLIC_SRC_UART: usize = 0;
+/// PLIC source index of the DMA-completion interrupt.
+pub const PLIC_SRC_DMA: usize = 1;
+/// PLIC source index of the GPIO edge interrupt.
+pub const PLIC_SRC_GPIO: usize = 2;
+/// PLIC source index of DSA slot 0's completion interrupt; slot `i`
+/// occupies source `PLIC_SRC_DSA0 + i` (claim/complete IDs are 1-based:
+/// slot `i` claims as `PLIC_SRC_DSA0 + i + 1`).
+pub const PLIC_SRC_DSA0: usize = 3;
+
 /// CLINT register layout (offsets): msip@0x0000, mtimecmp@0x4000,
 /// mtime@0xbff8 (each 2×32 b words, little-endian pairs).
 pub struct Clint {

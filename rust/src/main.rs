@@ -54,6 +54,13 @@ fn load_config_inner(args: &Args, apply_dsa: bool) -> CheshireConfig {
             cfg.dsa_port_pairs = n.parse().expect("dsa pairs");
         }
         // for `sweep` these are comma-separated axis lists instead
+        if let Some(spec) = args.get("slots") {
+            cfg.dsa_slots = cheshire::platform::config::parse_slots(spec)
+                .unwrap_or_else(|e| {
+                    eprintln!("--slots: {e}");
+                    std::process::exit(2);
+                });
+        }
         if let Some(n) = args.get("mshrs") {
             cfg.llc_mshrs = n.parse::<usize>().expect("mshr count").max(1);
         }
@@ -80,14 +87,17 @@ fn main() {
         Some("sweep") => sweep(&args),
         _ => {
             eprintln!("usage: cheshire <info|run|offload|boot|sweep> [options]");
-            eprintln!("  run <wfi|nop|twomm|mem|supervisor|contention> [--cycles N] [--freq-mhz F]");
+            eprintln!("  run <wfi|nop|twomm|mem|supervisor|hetero|contention> [--cycles N] [--freq-mhz F]");
             eprintln!("      [--demand-pages N] [--timer-delta N]");
             eprintln!("      [--dma-kib N] [--tile N] [--dsa-jobs N] [--spm-kib N]  (contention)");
+            eprintln!("      [--kib N]  (hetero pipeline bytes)");
+            eprintln!("      [--slots matmul+crc@d2d]  (DSA slot topology; @d2d = chiplet attach)");
             eprintln!("      [--mshrs N] [--outstanding N]");
             eprintln!("  offload [--n 128] [--tile 64] [--artifacts artifacts/]");
             eprintln!("  boot");
             eprintln!("  sweep [--workloads nop,mem] [--backends rpc,hyperram]");
             eprintln!("        [--spm-masks 0xff,0x0f] [--dsa 0,1] [--tlb 16,4] [--cycles N]");
+            eprintln!("        [--slots none,reduce+crc,reduce+crc@d2d]  (topology axis)");
             eprintln!("        [--mshrs 1,4,8] [--outstanding 1,4]");
             eprintln!("        [--jobs N] [--serial] [--json sweep.json|-] [--json-arch arch.json]");
             eprintln!("  any subcommand: [--no-elide]  disable event-horizon idle elision");
@@ -136,6 +146,9 @@ fn sweep(args: &Args) {
         s.trim().parse::<usize>().map_err(|e| format!("bad dsa count {s:?}: {e}"))
     }) {
         grid.dsa_ports = dsa;
+    }
+    if let Some(slot_sets) = parse_axis(args, "slots", cheshire::platform::config::parse_slots) {
+        grid.slot_sets = slot_sets;
     }
     if let Some(tlb) = parse_axis(args, "tlb", |s| {
         s.trim().parse::<usize>().map_err(|e| format!("bad tlb entry count {s:?}: {e}"))
@@ -238,6 +251,7 @@ fn run(args: &Args) {
             demand_pages: args.get_u64("demand-pages", 8) as u32,
             timer_delta: args.get_u64("timer-delta", 20_000) as u32,
         },
+        "hetero" => Workload::Hetero { kib: args.get_u64("kib", 16) as u32 },
         "contention" => Workload::Contention {
             dma_kib: args.get_u64("dma-kib", 32) as u32,
             tile_n: args.get_u64("tile", 16) as u32,
@@ -249,14 +263,16 @@ fn run(args: &Args) {
             std::process::exit(2);
         }
     };
-    // the contention workload drives the matmul DSA on port pair 0
-    if matches!(workload, Workload::Contention { .. }) && cfg.dsa_port_pairs == 0 {
-        cfg.dsa_port_pairs = 1;
+    // workload-required topologies (matmul on slot 0 for contention,
+    // [reduce, crc] for hetero) — same normalization as Scenario::new
+    use cheshire::platform::{DsaKind, DsaSlot};
+    if matches!(workload, Workload::Contention { .. }) && cfg.dsa_slots.is_empty() {
+        cfg.dsa_slots = vec![DsaSlot::local(DsaKind::Matmul)];
+    }
+    if matches!(workload, Workload::Hetero { .. }) && cfg.dsa_slots.is_empty() {
+        cfg.dsa_slots = vec![DsaSlot::local(DsaKind::Reduce), DsaSlot::local(DsaKind::Crc)];
     }
     let mut soc = Soc::new(cfg);
-    if matches!(workload, Workload::Contention { .. }) {
-        soc.plug_dsa(0, Box::new(MatmulDsa::new(None, "matmul_acc")));
-    }
     let img = workload.stage(&mut soc);
     soc.preload(&img, DRAM_BASE);
     let host_t0 = std::time::Instant::now();

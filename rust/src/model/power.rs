@@ -46,6 +46,11 @@ pub struct Energies {
     /// Per LLC MSHR file operation (allocate / merge / lookahead CAM
     /// search) — the area/energy price of the non-blocking hierarchy.
     pub mshr_op: f64,
+    /// Per accelerator-frontend descriptor operation (ring fetch or
+    /// completion/IRQ update) — the control overhead of the plug-in
+    /// fabric (the data traffic itself is charged via xbar/memory
+    /// events).
+    pub desc_op: f64,
     /// DMA datapath, per byte moved.
     pub dma_per_byte: f64,
     /// Crossbar switching, per data beat.
@@ -84,6 +89,7 @@ impl Energies {
             ptw_level: 240.0,
             spm_access: 85.0,
             mshr_op: 22.0,
+            desc_op: 35.0,
             dma_per_byte: 14.0,
             xbar_per_beat: 30.0,
             rpc_ctrl_busy_cycle: 200.0,
@@ -144,6 +150,7 @@ impl PowerModel {
             + e.spm_access * g("llc.spm_access")
             + e.mshr_op
                 * (g("llc.mshr_alloc") + g("llc.mshr_merge") + g("llc.mshr_lookahead"))
+            + e.desc_op * (g("plugfab.descs") + g("plugfab.irqs") + g("plugfab.doorbells"))
             + e.dma_per_byte * (g("dma.rd_bytes") + g("dma.wr_bytes"))
             + e.xbar_per_beat * (g("xbar.w") + g("xbar.r"))
             + e.rpc_ctrl_busy_cycle

@@ -45,6 +45,95 @@ impl std::fmt::Display for MemBackend {
     }
 }
 
+/// Which in-tree engine a DSA slot instantiates (see `crate::dsa`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DsaKind {
+    /// Accumulating matmul tile engine (`crate::dsa::matmul`).
+    Matmul,
+    /// Synthetic traffic generator (`crate::dsa::traffic`).
+    Traffic,
+    /// Streaming CRC32 checksum engine (`crate::dsa::crc`).
+    Crc,
+    /// Vector reduce / engine-driven memcpy (`crate::dsa::reduce`).
+    Reduce,
+}
+
+impl DsaKind {
+    /// Parse a user-facing engine name.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "matmul" => Ok(Self::Matmul),
+            "traffic" => Ok(Self::Traffic),
+            "crc" => Ok(Self::Crc),
+            "reduce" | "memcpy" => Ok(Self::Reduce),
+            other => Err(format!("unknown DSA engine {other:?} (want matmul|traffic|crc|reduce)")),
+        }
+    }
+}
+
+impl std::fmt::Display for DsaKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Matmul => "matmul",
+            Self::Traffic => "traffic",
+            Self::Crc => "crc",
+            Self::Reduce => "reduce",
+        })
+    }
+}
+
+/// One configured accelerator slot: an engine, optionally attached
+/// through the serialized die-to-die link (chiplet integration, §II-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DsaSlot {
+    /// Which engine occupies the slot.
+    pub kind: DsaKind,
+    /// Attach the slot behind the D2D link (`"<engine>@d2d"`).
+    pub remote: bool,
+}
+
+impl DsaSlot {
+    /// An on-die slot of the given engine.
+    pub fn local(kind: DsaKind) -> Self {
+        Self { kind, remote: false }
+    }
+
+    /// Parse `"crc"` / `"crc@d2d"`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let s = s.trim();
+        match s.split_once('@') {
+            Some((kind, "d2d")) => Ok(Self { kind: DsaKind::parse(kind)?, remote: true }),
+            Some((_, loc)) => Err(format!("unknown slot attachment {loc:?} (want @d2d)")),
+            None => Ok(Self { kind: DsaKind::parse(s)?, remote: false }),
+        }
+    }
+}
+
+impl std::fmt::Display for DsaSlot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}{}", self.kind, if self.remote { "@d2d" } else { "" })
+    }
+}
+
+/// Parse a slot-list spec: engine names separated by `+` or `,`
+/// (`"matmul+crc@d2d"`). `"none"`, `"-"` and the empty string mean no
+/// configured slots.
+pub fn parse_slots(s: &str) -> Result<Vec<DsaSlot>, String> {
+    let s = s.trim();
+    if s.is_empty() || s == "none" || s == "-" {
+        return Ok(Vec::new());
+    }
+    s.split(|c| c == '+' || c == ',')
+        .filter(|p| !p.trim().is_empty())
+        .map(DsaSlot::parse)
+        .collect()
+}
+
+/// Render a slot list as its canonical `+`-joined spec (empty → `""`).
+pub fn slots_spec(slots: &[DsaSlot]) -> String {
+    slots.iter().map(|s| s.to_string()).collect::<Vec<_>>().join("+")
+}
+
 /// Full platform configuration (one SoC instance).
 #[derive(Debug, Clone, PartialEq)]
 pub struct CheshireConfig {
@@ -55,7 +144,20 @@ pub struct CheshireConfig {
     /// Crossbar address width in bits.
     pub addr_bits: u32,
     /// DSA manager/subordinate port pairs on the crossbar (Neo: 0).
+    /// Grown automatically to fit `dsa_slots`; pairs beyond the slot
+    /// list stay host-pluggable ([`crate::platform::Soc::plug_dsa`]).
     pub dsa_port_pairs: usize,
+    /// Config-driven accelerator topology: engine per slot, in port-pair
+    /// order, optionally D2D-attached (TOML `dsa.slots = ["matmul",
+    /// "crc@d2d", …]`, CLI `--slots matmul+crc@d2d`). Slots are
+    /// instantiated at SoC construction behind the uniform
+    /// descriptor-ring frontend.
+    pub dsa_slots: Vec<DsaSlot>,
+    /// Serializing lanes of the die-to-die link (DDR, so one beat costs
+    /// `ceil(bits / (lanes × 2))` cycles).
+    pub d2d_lanes: u32,
+    /// Fixed one-way latency of the die-to-die link, in cycles.
+    pub d2d_latency: u64,
     /// CVA6 L1 instruction-cache size in bytes.
     pub icache_bytes: usize,
     /// CVA6 L1 data-cache size in bytes.
@@ -120,6 +222,9 @@ impl CheshireConfig {
             data_bytes: 8,
             addr_bits: 48,
             dsa_port_pairs: 0,
+            dsa_slots: Vec::new(),
+            d2d_lanes: 16,
+            d2d_latency: 8,
             icache_bytes: 32 * 1024,
             dcache_bytes: 32 * 1024,
             l1_ways: 8,
@@ -155,7 +260,7 @@ impl CheshireConfig {
     }
 
     /// Load from the TOML subset: `key = value` lines under `[platform]`,
-    /// `[llc]`, `[rpc]`, `[periph]` sections.
+    /// `[llc]`, `[rpc]`, `[periph]`, `[dsa]`, `[d2d]` sections.
     pub fn from_toml(text: &str) -> Result<Self, String> {
         let kv = parse_toml(text)?;
         let mut c = Self::neo();
@@ -172,6 +277,29 @@ impl CheshireConfig {
         }
         if let Some(v) = get_u("platform.dsa_port_pairs") {
             c.dsa_port_pairs = v as usize;
+        }
+        // dsa.slots accepts a string list or a single separator-joined
+        // string: slots = ["matmul", "crc@d2d"]  |  slots = "matmul,crc"
+        match kv.get("dsa.slots") {
+            Some(Value::List(items)) => {
+                let mut slots = Vec::with_capacity(items.len());
+                for item in items {
+                    let s = item
+                        .as_str()
+                        .ok_or_else(|| format!("dsa.slots: expected string entries, got {item:?}"))?;
+                    slots.push(DsaSlot::parse(s)?);
+                }
+                c.dsa_slots = slots;
+            }
+            Some(Value::Str(s)) => c.dsa_slots = parse_slots(s)?,
+            Some(other) => return Err(format!("dsa.slots: expected a string list, got {other:?}")),
+            None => {}
+        }
+        if let Some(v) = get_u("d2d.lanes") {
+            c.d2d_lanes = (v as u32).max(1);
+        }
+        if let Some(v) = get_u("d2d.latency") {
+            c.d2d_latency = v;
         }
         if let Some(v) = get_u("platform.icache_kib") {
             c.icache_bytes = v as usize * 1024;
@@ -244,6 +372,8 @@ pub enum Value {
     Bool(bool),
     /// Double-quoted string.
     Str(String),
+    /// Single-line array of scalars: `["a", "b"]`, `[1, 2, 3]`.
+    List(Vec<Value>),
 }
 
 impl Value {
@@ -302,29 +432,45 @@ pub fn parse_toml(text: &str) -> Result<HashMap<String, Value>, String> {
             format!("{section}.{}", k.trim())
         };
         let v = v.trim();
-        let val = if v == "true" {
-            Value::Bool(true)
-        } else if v == "false" {
-            Value::Bool(false)
-        } else if let Some(s) = v.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
-            Value::Str(s.to_string())
-        } else if let Some(hex) = v.strip_prefix("0x") {
-            Value::Int(
-                i64::from_str_radix(&hex.replace('_', ""), 16)
-                    .map_err(|e| format!("line {}: {e}", ln + 1))?,
-            )
-        } else if v.contains('.') {
-            Value::Float(v.parse().map_err(|e| format!("line {}: {e}", ln + 1))?)
+        let val = if let Some(body) = v.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            // single-line scalar array
+            let items = body
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(|item| parse_scalar(item, ln))
+                .collect::<Result<Vec<_>, _>>()?;
+            Value::List(items)
         } else {
-            Value::Int(
-                v.replace('_', "")
-                    .parse()
-                    .map_err(|e| format!("line {}: bad value {v:?}: {e}", ln + 1))?,
-            )
+            parse_scalar(v, ln)?
         };
         out.insert(key, val);
     }
     Ok(out)
+}
+
+/// Parse one scalar value of the TOML subset (see [`parse_toml`]).
+fn parse_scalar(v: &str, ln: usize) -> Result<Value, String> {
+    Ok(if v == "true" {
+        Value::Bool(true)
+    } else if v == "false" {
+        Value::Bool(false)
+    } else if let Some(s) = v.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+        Value::Str(s.to_string())
+    } else if let Some(hex) = v.strip_prefix("0x") {
+        Value::Int(
+            i64::from_str_radix(&hex.replace('_', ""), 16)
+                .map_err(|e| format!("line {}: {e}", ln + 1))?,
+        )
+    } else if v.contains('.') {
+        Value::Float(v.parse().map_err(|e| format!("line {}: {e}", ln + 1))?)
+    } else {
+        Value::Int(
+            v.replace('_', "")
+                .parse()
+                .map_err(|e| format!("line {}: bad value {v:?}: {e}", ln + 1))?,
+        )
+    })
 }
 
 #[cfg(test)]
@@ -430,6 +576,55 @@ mod tests {
         let c = CheshireConfig::from_toml("[llc]\nmshrs = 0\n[platform]\nmax_outstanding = 0").unwrap();
         assert_eq!(c.llc_mshrs, 1);
         assert_eq!(c.max_outstanding, 1);
+    }
+
+    #[test]
+    fn toml_lists_parse() {
+        let kv = parse_toml("[dsa]\nslots = [\"matmul\", \"crc@d2d\"]\nnums = [1, 2, 0x10]").unwrap();
+        let Value::List(slots) = &kv["dsa.slots"] else { panic!("expected list") };
+        assert_eq!(slots[0].as_str(), Some("matmul"));
+        assert_eq!(slots[1].as_str(), Some("crc@d2d"));
+        let Value::List(nums) = &kv["dsa.nums"] else { panic!("expected list") };
+        assert_eq!(nums[2].as_u64(), Some(16));
+        assert!(parse_toml("[s]\nx = [zzz]").is_err());
+    }
+
+    #[test]
+    fn dsa_slots_load_from_toml_list_and_string() {
+        let c = CheshireConfig::from_toml("[dsa]\nslots = [\"matmul\", \"crc@d2d\"]").unwrap();
+        assert_eq!(
+            c.dsa_slots,
+            vec![
+                DsaSlot { kind: DsaKind::Matmul, remote: false },
+                DsaSlot { kind: DsaKind::Crc, remote: true },
+            ]
+        );
+        let c = CheshireConfig::from_toml("[dsa]\nslots = \"reduce,traffic\"").unwrap();
+        assert_eq!(c.dsa_slots.len(), 2);
+        assert_eq!(c.dsa_slots[0].kind, DsaKind::Reduce);
+        assert!(CheshireConfig::from_toml("[dsa]\nslots = [\"fft\"]").is_err());
+        assert!(CheshireConfig::from_toml("[dsa]\nslots = [\"crc@chiplet\"]").is_err());
+        assert!(CheshireConfig::neo().dsa_slots.is_empty(), "Neo ships no slots");
+    }
+
+    #[test]
+    fn slot_spec_roundtrips() {
+        let slots = parse_slots("matmul+crc@d2d").unwrap();
+        assert_eq!(slots_spec(&slots), "matmul+crc@d2d");
+        assert_eq!(parse_slots("none").unwrap(), Vec::new());
+        assert_eq!(parse_slots("").unwrap(), Vec::new());
+        assert_eq!(DsaSlot::parse("reduce").unwrap(), DsaSlot::local(DsaKind::Reduce));
+        assert!(DsaSlot::parse("reduce@moon").is_err());
+    }
+
+    #[test]
+    fn d2d_link_params_load_from_toml() {
+        let c = CheshireConfig::neo();
+        assert_eq!(c.d2d_lanes, 16);
+        assert_eq!(c.d2d_latency, 8);
+        let c = CheshireConfig::from_toml("[d2d]\nlanes = 4\nlatency = 20").unwrap();
+        assert_eq!(c.d2d_lanes, 4);
+        assert_eq!(c.d2d_latency, 20);
     }
 
     #[test]

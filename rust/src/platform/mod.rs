@@ -11,5 +11,5 @@ pub mod memmap;
 pub mod soc;
 pub mod cli;
 
-pub use config::{CheshireConfig, MemBackend};
+pub use config::{CheshireConfig, DsaKind, DsaSlot, MemBackend};
 pub use soc::Soc;

@@ -11,15 +11,16 @@ use crate::axi::regbus::{Axi2Reg, RegDemux, RegDevice, RegMapEntry};
 use crate::axi::xbar::{AddrRange, Xbar, XbarCfg};
 use crate::cache::llc::{Llc, LlcCfg, LlcRegs, WayMask};
 use crate::cpu::{Cva6, Cva6Cfg};
+use crate::d2d::D2dLink;
 use crate::dma::{DmaEngine, DmaRegs, SharedDma};
-use crate::dsa::DsaPlugin;
+use crate::dsa::{crc::CrcEngine, matmul::MatmulDsa, reduce::ReduceEngine, traffic::TrafficGen, DsaPlugin};
 use crate::hyperram::HyperRam;
-use crate::irq::{Clint, Plic};
+use crate::irq::{Clint, Plic, PLIC_SRC_DSA0};
 use crate::periph::soc_ctrl::SocCtrl;
 use crate::periph::uart::Uart;
 use crate::periph::vga::{Vga, VgaScanout};
 use crate::periph::{build_bootrom, Gpio, I2cEeprom, SpiHost};
-use crate::platform::config::{CheshireConfig, MemBackend};
+use crate::platform::config::{CheshireConfig, DsaKind, MemBackend};
 use crate::platform::memmap::*;
 use crate::rpc::manager::ManagerRegs;
 use crate::rpc::RpcSubsystem;
@@ -33,6 +34,55 @@ use std::rc::Rc;
 const MIN_ELIDE: u64 = 4;
 
 type Shared<T> = Rc<RefCell<T>>;
+
+/// A D2D-attached ("chiplet") DSA slot: the engine lives on the far die,
+/// its register window and manager port both crossing the serialized
+/// die-to-die link. The completion-interrupt line is a dedicated sideband
+/// wire (like the physical D2D interface's out-of-band signals), so it
+/// reaches the PLIC directly.
+struct RemoteSlot {
+    /// Host→device direction of the register window (plus responses back).
+    sub_link: D2dLink,
+    /// Device→fabric direction of the manager port (plus responses back).
+    mgr_link: D2dLink,
+    /// Far-die side of the subordinate (register-window) port.
+    far_sub: AxiBus,
+    /// Far-die side of the manager port.
+    far_mgr: AxiBus,
+}
+
+impl RemoteSlot {
+    fn new(lanes: u32, latency: Cycle) -> Self {
+        Self {
+            sub_link: D2dLink::new(lanes, latency),
+            mgr_link: D2dLink::new(lanes, latency),
+            far_sub: axi_bus(4),
+            far_mgr: axi_bus(4),
+        }
+    }
+
+    fn is_idle(&self) -> bool {
+        self.sub_link.is_idle()
+            && self.mgr_link.is_idle()
+            && self.far_sub.is_idle()
+            && self.far_mgr.is_idle()
+    }
+}
+
+/// Instantiate the engine for one configured DSA slot.
+fn build_plugin(kind: DsaKind, cfg: &CheshireConfig) -> Box<dyn DsaPlugin> {
+    match kind {
+        DsaKind::Matmul => Box::new(MatmulDsa::new(None, "matmul_acc")),
+        DsaKind::Crc => Box::new(CrcEngine::new()),
+        DsaKind::Reduce => Box::new(ReduceEngine::new()),
+        DsaKind::Traffic => {
+            let mut tg = TrafficGen::idle();
+            tg.max_outstanding =
+                if cfg.mem_blocking { 1 } else { cfg.max_outstanding.max(1) as u64 };
+            Box::new(tg)
+        }
+    }
+}
 
 /// The assembled platform: all managers, the crossbar, all subordinates,
 /// and the shared peripheral handles, advanced one cycle per [`Soc::tick`].
@@ -59,6 +109,8 @@ pub struct Soc {
     dsa: Vec<Option<Box<dyn DsaPlugin>>>,
     dsa_mgr_bus: Vec<AxiBus>,
     dsa_sub_bus: Vec<AxiBus>,
+    /// `Some` for slots attached through the die-to-die link.
+    d2d: Vec<Option<RemoteSlot>>,
 
     // fabric
     xbar: Xbar,
@@ -101,7 +153,16 @@ pub struct Soc {
 
 impl Soc {
     /// Build and wire every block of the platform from `cfg`.
-    pub fn new(cfg: CheshireConfig) -> Self {
+    ///
+    /// Config-driven accelerator topology: every entry of
+    /// `cfg.dsa_slots` is instantiated into its port pair behind the
+    /// uniform descriptor-ring frontend (`crate::dsa::frontend`), with
+    /// `@d2d` slots attached through a serialized die-to-die link. The
+    /// port-pair count grows to fit the slot list; pairs beyond it stay
+    /// empty for [`Soc::plug_dsa`].
+    pub fn new(mut cfg: CheshireConfig) -> Self {
+        cfg.dsa_port_pairs = cfg.dsa_port_pairs.max(cfg.dsa_slots.len());
+        let cfg = cfg;
         let stats = Stats::new();
         let clock = Clock::new(cfg.freq_hz);
 
@@ -205,7 +266,10 @@ impl Soc {
         dma.max_outstanding = if cfg.mem_blocking { 1 } else { cfg.max_outstanding.max(1) as u32 };
         let (vga_scan, vga_state) = VgaScanout::new();
         let clint: Shared<Clint> = Rc::new(RefCell::new(Clint::new()));
-        let (plic_raw, _lines) = Plic::new(8);
+        // fixed sources (UART, DMA, GPIO) + one completion line per DSA
+        // slot; never fewer than 8 so software probing the classic range
+        // keeps working
+        let (plic_raw, _lines) = Plic::new(8.max(PLIC_SRC_DSA0 + cfg.dsa_port_pairs));
         let plic: Shared<Plic> = Rc::new(RefCell::new(plic_raw));
         let uart: Shared<Uart> = Rc::new(RefCell::new(Uart::new()));
         let spi: Shared<SpiHost> = Rc::new(RefCell::new(SpiHost::new(Vec::new())));
@@ -252,6 +316,22 @@ impl Soc {
         let cpu = Cva6::new(cva6_cfg);
 
         let n_dsa = cfg.dsa_port_pairs;
+        // config-driven slots: engines in port-pair order, each either
+        // on-die or behind its own D2D link pair
+        let mut dsa: Vec<Option<Box<dyn DsaPlugin>>> = Vec::with_capacity(n_dsa);
+        let mut d2d: Vec<Option<RemoteSlot>> = Vec::with_capacity(n_dsa);
+        for i in 0..n_dsa {
+            match cfg.dsa_slots.get(i) {
+                Some(slot) => {
+                    dsa.push(Some(build_plugin(slot.kind, &cfg)));
+                    d2d.push(slot.remote.then(|| RemoteSlot::new(cfg.d2d_lanes, cfg.d2d_latency)));
+                }
+                None => {
+                    dsa.push(None);
+                    d2d.push(None);
+                }
+            }
+        }
         Self {
             cfg,
             clock,
@@ -264,9 +344,10 @@ impl Soc {
             vga_scan,
             vga_bus,
             dbg_bus,
-            dsa: (0..n_dsa).map(|_| None).collect(),
+            dsa,
             dsa_mgr_bus,
             dsa_sub_bus,
+            d2d,
             xbar,
             llc,
             llc_mask,
@@ -290,14 +371,37 @@ impl Soc {
     }
 
     /// Attach a DSA plug-in to port pair `idx`.
+    ///
+    /// Panics if the slot is already occupied (a silent replacement used
+    /// to discard the incumbent plug-in's state mid-run): the message
+    /// names both plug-ins so a misconfigured topology is obvious.
     pub fn plug_dsa(&mut self, idx: usize, dsa: Box<dyn DsaPlugin>) {
         assert!(idx < self.cfg.dsa_port_pairs, "no such DSA port pair");
+        if let Some(old) = &self.dsa[idx] {
+            panic!(
+                "DSA port pair {idx} is already occupied by {:?}; refusing to replace it with {:?}",
+                old.name(),
+                dsa.name()
+            );
+        }
         self.dsa[idx] = Some(dsa);
     }
 
-    /// Mutable access to the DSA plugged into port pair `idx`, if any.
-    pub fn dsa_mut(&mut self, idx: usize) -> Option<&mut Box<dyn DsaPlugin>> {
-        self.dsa.get_mut(idx).and_then(|d| d.as_mut())
+    /// Mutable access to the DSA plugged into port pair `idx`, if any
+    /// (the trait object itself — the owning `Box` stays private).
+    pub fn dsa_mut(&mut self, idx: usize) -> Option<&mut dyn DsaPlugin> {
+        self.dsa.get_mut(idx).and_then(|d| d.as_deref_mut())
+    }
+
+    /// Shared access to the DSA plugged into port pair `idx`, if any.
+    pub fn dsa_ref(&self, idx: usize) -> Option<&dyn DsaPlugin> {
+        self.dsa.get(idx).and_then(|d| d.as_deref())
+    }
+
+    /// Whether port pair `idx` already carries a plug-in (config-driven
+    /// or host-plugged).
+    pub fn dsa_occupied(&self, idx: usize) -> bool {
+        self.dsa.get(idx).map(|d| d.is_some()).unwrap_or(false)
     }
 
     /// JTAG-style passive preload: image into DRAM, entry point into the
@@ -340,7 +444,16 @@ impl Soc {
         }
         for (i, d) in self.dsa.iter_mut().enumerate() {
             if let Some(d) = d {
-                d.tick(&self.dsa_mgr_bus[i], &self.dsa_sub_bus[i], now, stats);
+                match &mut self.d2d[i] {
+                    // chiplet slot: the engine sees the far-die buses; the
+                    // two links serialize every beat across the pads
+                    Some(r) => {
+                        d.tick(&r.far_mgr, &r.far_sub, now, stats);
+                        r.sub_link.tick(&self.dsa_sub_bus[i], &r.far_sub, now, stats);
+                        r.mgr_link.tick(&r.far_mgr, &self.dsa_mgr_bus[i], now, stats);
+                    }
+                    None => d.tick(&self.dsa_mgr_bus[i], &self.dsa_sub_bus[i], now, stats),
+                }
             }
         }
 
@@ -362,11 +475,10 @@ impl Soc {
 
         // interrupt fabric: peripheral lines → PLIC, CLINT/PLIC → CPU
         {
-            let levels = self.plic_source_levels();
             let mut plic = self.plic.borrow_mut();
             {
                 let mut lines = plic.lines.borrow_mut();
-                lines[..levels.len()].copy_from_slice(&levels);
+                self.for_each_plic_source(|i, level| lines[i] = level);
             }
             plic.sample();
             let clint = self.clint.borrow();
@@ -376,17 +488,22 @@ impl Soc {
         self.clock.advance();
     }
 
-    /// Current levels of the peripheral interrupt sources wired into the
-    /// PLIC, in source order — the *single* definition of that wiring,
-    /// shared by the tick fabric and the scheduler's settled check (so a
-    /// new source added here is automatically guarded against elision
-    /// sailing past its first edge).
-    fn plic_source_levels(&self) -> [bool; 3] {
-        [
-            self.uart.borrow().irq(),
-            self.dma_state.borrow().irq,
-            self.gpio.borrow().irq(),
-        ]
+    /// Visit the current level of every peripheral interrupt source wired
+    /// into the PLIC, in source order — the *single* definition of that
+    /// wiring, shared by the tick fabric and the scheduler's settled
+    /// check (so a new source added here is automatically guarded against
+    /// elision sailing past its first edge). Sources 0–2 are
+    /// UART/DMA/GPIO (`crate::irq::PLIC_SRC_*`); DSA slot `i`'s
+    /// completion line is source `PLIC_SRC_DSA0 + i` (a sideband wire
+    /// even for D2D slots). Visitor-shaped so the per-cycle hot loop
+    /// never allocates.
+    fn for_each_plic_source(&self, mut f: impl FnMut(usize, bool)) {
+        f(0, self.uart.borrow().irq());
+        f(1, self.dma_state.borrow().irq);
+        f(2, self.gpio.borrow().irq());
+        for (i, d) in self.dsa.iter().enumerate() {
+            f(PLIC_SRC_DSA0 + i, d.as_ref().map(|d| d.irq()).unwrap_or(false));
+        }
     }
 
     /// Whether every AXI channel in the platform is empty — a beat pending
@@ -403,6 +520,7 @@ impl Soc {
             && self.bridge_bus.is_idle()
             && self.dsa_mgr_bus.iter().all(|b| b.is_idle())
             && self.dsa_sub_bus.iter().all(|b| b.is_idle())
+            && self.d2d.iter().flatten().all(|r| r.is_idle())
     }
 
     /// Fold every component's [`Activity`] report (and the bus-idle check)
@@ -450,12 +568,13 @@ impl Soc {
         // pin the platform busy until the fabric has carried it, or a
         // jump could sail past the wake-up.
         let fabric_settled = {
-            let levels = self.plic_source_levels();
             let plic = self.plic.borrow();
             let lines = plic.lines.borrow();
+            let mut lines_settled = true;
+            self.for_each_plic_source(|i, level| lines_settled &= lines[i] == level);
             let clint = self.clint.borrow();
             let mip = self.cpu.core.csr.mip;
-            lines[..levels.len()] == levels[..]
+            lines_settled
                 && (mip >> 3) & 1 == clint.msip as u64
                 && (mip >> 7) & 1 == clint.mtip() as u64
                 && (mip >> 11) & 1 == plic.meip() as u64
@@ -610,6 +729,32 @@ mod tests {
         assert!(soc.cpu.halted, "payload should halt (ran {cycles} cycles, pc={:#x})", soc.cpu.core.pc);
         assert_eq!(soc.uart.borrow().tx_string(), "hi");
         assert_eq!(soc.stats.get("rpc.dev_violations"), 0);
+    }
+
+    /// Config-driven topology: `dsa_slots` instantiates engines at
+    /// construction and grows the port-pair count to fit.
+    #[test]
+    fn dsa_slots_auto_plug_from_config() {
+        use crate::platform::config::{DsaKind, DsaSlot};
+        let mut cfg = CheshireConfig::neo();
+        cfg.dsa_slots = vec![DsaSlot::local(DsaKind::Crc), DsaSlot::local(DsaKind::Reduce)];
+        let soc = Soc::new(cfg);
+        assert_eq!(soc.cfg.dsa_port_pairs, 2, "pairs grow to fit the slot list");
+        assert!(soc.dsa_occupied(0) && soc.dsa_occupied(1));
+        assert_eq!(soc.dsa_ref(0).unwrap().name(), "crc-engine");
+        assert_eq!(soc.dsa_ref(1).unwrap().name(), "reduce-engine");
+        assert!(!soc.dsa_occupied(2), "out-of-range slots read as empty");
+    }
+
+    #[test]
+    #[should_panic(expected = "already occupied")]
+    fn double_plug_panics_with_both_names() {
+        use crate::dsa::matmul::MatmulDsa;
+        use crate::platform::config::{DsaKind, DsaSlot};
+        let mut cfg = CheshireConfig::neo();
+        cfg.dsa_slots = vec![DsaSlot::local(DsaKind::Crc)];
+        let mut soc = Soc::new(cfg);
+        soc.plug_dsa(0, Box::new(MatmulDsa::new(None, "matmul_acc")));
     }
 
     #[test]

@@ -207,6 +207,45 @@ fn contention_sweeps_deterministically_across_mshr_depths() {
     assert!(m4.dram_bytes_per_cycle() > m1.dram_bytes_per_cycle());
 }
 
+/// The plug-in fabric in the sweep grid: the heterogeneous IRQ-driven
+/// workload across the new slot-topology axis (on-die vs D2D-attached
+/// CRC), with the parallel ≡ serial determinism contract extended over
+/// the new scenario class and the topology visible in names and JSON.
+#[test]
+fn hetero_sweeps_deterministically_across_slot_topologies() {
+    use cheshire::platform::config::parse_slots;
+    let mut g = SweepGrid::new(CheshireConfig::neo());
+    g.workloads = vec![Workload::Hetero { kib: 4 }];
+    g.slot_sets = vec![
+        parse_slots("reduce+crc").unwrap(),
+        parse_slots("reduce+crc@d2d").unwrap(),
+    ];
+    g.max_cycles = 20_000_000;
+    assert_eq!(g.len(), 2);
+    let par = harness::run_parallel(g.scenarios(), 2);
+    let ser = harness::run_serial(g.scenarios());
+    for (p, s) in par.iter().zip(&ser) {
+        assert_eq!(p.name, s.name);
+        assert_eq!(p.cycles, s.cycles, "{}: parallel≡serial cycles", p.name);
+        let pv: Vec<_> = p.stats.iter().collect();
+        let sv: Vec<_> = s.stats.iter().collect();
+        assert_eq!(pv, sv, "{}: parallel≡serial stats", p.name);
+        assert!(p.halted, "{}: hetero halts", p.name);
+        assert_eq!(p.stats.get("dsa.jobs"), 3, "{}: all descriptors completed", p.name);
+        assert!(p.stats.get("cpu.wfi_cycles") > 0, "{}: IRQ-driven", p.name);
+        assert_eq!(p.stats.get("rpc.dev_violations"), 0, "{}", p.name);
+    }
+    assert_eq!(SweepReport::new(par.clone()).to_json_arch(), SweepReport::new(ser).to_json_arch());
+    let (ondie, d2d) = (&par[0], &par[1]);
+    assert!(ondie.name.contains("/sl:reduce+crc"), "{}", ondie.name);
+    assert!(d2d.name.contains("/sl:reduce+crc@d2d"), "{}", d2d.name);
+    assert_eq!(d2d.dsa_slots, "reduce+crc@d2d");
+    assert!(d2d.cycles > ondie.cycles, "the D2D attachment costs cycles");
+    assert!(d2d.stats.get("d2d.pad_cycles") > 0 && ondie.stats.get("d2d.pad_cycles") == 0);
+    let json = SweepReport::new(par).to_json();
+    assert!(json.contains("\"dsa_slots\": \"reduce+crc@d2d\""), "topology in the JSON report");
+}
+
 #[test]
 fn oversubscribed_thread_count_is_harmless() {
     // more threads than scenarios, and threads == 1, both work

@@ -1,14 +1,13 @@
 //! Cross-module integration tests on the assembled platform.
 
 use cheshire::asm::{reg::*, Asm};
-use cheshire::dsa::matmul::MatmulDsa;
 use cheshire::dsa::traffic::TrafficGen;
 use cheshire::harness::Workload;
+use cheshire::platform::config::parse_slots;
 use cheshire::platform::memmap::*;
 use cheshire::platform::{CheshireConfig, Soc};
 use cheshire::runtime::XlaRuntime;
 use std::path::PathBuf;
-use std::rc::Rc;
 
 /// FNV-1a fingerprint of a byte slice.
 fn fnv(bytes: &[u8]) -> u64 {
@@ -24,11 +23,10 @@ fn fnv(bytes: &[u8]) -> u64 {
 fn run_contention(blocking: bool) -> (Soc, u64) {
     let mut cfg = CheshireConfig::neo();
     cfg.spm_way_mask = 0x0f; // 64 KiB SPM + 64 KiB cache: MSHRs engage
-    cfg.dsa_port_pairs = 1;
+    cfg.dsa_slots = parse_slots("matmul").unwrap(); // config-driven slot 0
     cfg.mem_blocking = blocking;
     let wl = Workload::Contention { dma_kib: 16, tile_n: 16, jobs: 2, spm_kib: 32 };
     let mut soc = Soc::new(cfg);
-    soc.plug_dsa(0, Box::new(MatmulDsa::new(None, "matmul_acc")));
     let img = wl.stage(&mut soc);
     soc.preload(&img, DRAM_BASE);
     let cycles = soc.run(40_000_000);
@@ -328,6 +326,37 @@ fn blocking_and_nonblocking_hierarchies_agree_functionally() {
         "non-blocking ({nb_cycles}) must beat blocking ({blk_cycles})"
     );
     assert_eq!(blk_soc.stats.get("llc.mshr_lookahead"), 0, "blocking mode has no lookahead");
+}
+
+/// The heterogeneous pipeline with the CRC engine attached through the
+/// die-to-die link: the whole plug-in contract — register window,
+/// descriptor fetch, payload streaming, result write — crosses the
+/// serialized D2D interface, and the run still completes on interrupts
+/// alone with correct results.
+#[test]
+fn hetero_pipeline_with_d2d_attached_crc() {
+    use cheshire::dsa::{crc::crc32, reduce::reduce_sum};
+    use cheshire::workloads::{
+        hetero_program, HETERO_CRC_RES_OFF, HETERO_MAGIC, HETERO_RESULT_OFF, HETERO_SRC_OFF,
+        HETERO_SUM_RES_OFF,
+    };
+    let mut cfg = CheshireConfig::neo();
+    cfg.dsa_slots = parse_slots("reduce+crc@d2d").unwrap();
+    let mut soc = Soc::new(cfg);
+    let len = 2048u32;
+    let src: Vec<u8> = (0..len).map(|i| (i.wrapping_mul(73) >> 3) as u8).collect();
+    soc.dram_write(HETERO_SRC_OFF as usize, &src);
+    soc.preload(&hetero_program(DRAM_BASE, len), DRAM_BASE);
+    soc.run(20_000_000);
+    assert!(soc.cpu.halted, "hetero@d2d must halt (pc={:#x})", soc.cpu.core.pc);
+    soc.run_cycles(5_000); // drain posted writes
+    let word = |off: u64| u64::from_le_bytes(soc.dram_read(off as usize, 8).try_into().unwrap());
+    assert_eq!(word(HETERO_RESULT_OFF), HETERO_MAGIC);
+    assert_eq!(word(HETERO_CRC_RES_OFF) as u32, crc32(&src), "CRC computed across the link");
+    assert_eq!(word(HETERO_SUM_RES_OFF), reduce_sum(&src));
+    assert!(soc.stats.get("d2d.pad_cycles") > 0, "traffic actually crossed the D2D pads");
+    assert_eq!(soc.stats.get("dsa.jobs"), 3);
+    assert_eq!(soc.stats.get("rpc.dev_violations"), 0);
 }
 
 /// Timer-interrupt-driven WFI wake through CLINT registers programmed by
