@@ -1,0 +1,130 @@
+//! SMP hart-scaling — the multi-hart acceptance bench.
+//!
+//! Drives the headline SMP scenario in its multi-round form: every hart
+//! owns a static share of the three DSA slots (matmul/CRC32/reduce) and
+//! re-posts its rings round after round — TAIL bump plus doorbell over
+//! unchanged descriptors — with one tiny job per slot per round. With
+//! payloads this small the engines finish almost immediately, so the
+//! round turnaround is dominated by owner-side software: the per-hart
+//! IRQ relay and the resubmission path. That is exactly the work SMP
+//! parallelizes — a single hart relays and re-posts all three slots
+//! serially, four harts do it concurrently — so aggregate descriptor
+//! throughput scales with the hart count even though the engines
+//! themselves always ran in parallel.
+//!
+//! The metric is **aggregate completed descriptors per kilocycle**.
+//! Emits `BENCH_smp.json` (cwd) and enforces the acceptance gate: four
+//! harts must reach ≥1.8× the single-hart aggregate descriptor
+//! throughput (override with `SMP_BENCH_MIN_SPEEDUP` — the metric is
+//! simulated-time, so it should be exact; the knob mirrors the other
+//! benches' escape hatch).
+
+use cheshire::model::benchkit::{f2, f3, Table};
+use cheshire::platform::config::{DsaKind, DsaSlot};
+use cheshire::platform::memmap::DRAM_BASE;
+use cheshire::platform::{CheshireConfig, Soc};
+use cheshire::workloads::{
+    smp_program_with, SmpParams, SMP_MAGIC, SMP_MAILBOX_TOKEN, SMP_MM_A_OFF, SMP_MM_B_OFF,
+    SMP_RESULT_OFF, SMP_SLOTS, SMP_SRC_OFF,
+};
+
+/// Resubmission rounds per run — enough that per-round turnaround
+/// dominates the constant boot/bring-up prologue at every point.
+const ROUNDS: u32 = 192;
+/// Descriptors per slot per round — one, so every completion costs a
+/// full relay + re-post turnaround on the owning hart.
+const JOBS: u32 = 1;
+/// Shared-buffer payload bytes (CRC/reduce operand) — tiny on purpose.
+const LEN: u32 = 8;
+/// Matmul tile edge — tiny on purpose.
+const MM_N: u32 = 2;
+/// Total descriptors per run, independent of the hart count.
+const TOTAL_DESCS: u32 = ROUNDS * SMP_SLOTS as u32 * JOBS;
+
+/// Run the multi-round SMP scenario on `harts` harts; returns
+/// (cycles, aggregate descriptors per kilocycle).
+fn run_point(harts: usize) -> (u64, f64) {
+    let mut cfg = CheshireConfig::neo();
+    cfg.harts = harts;
+    cfg.dsa_slots = vec![
+        DsaSlot::local(DsaKind::Matmul),
+        DsaSlot::local(DsaKind::Crc),
+        DsaSlot::local(DsaKind::Reduce),
+    ];
+    let mut soc = Soc::new(cfg);
+    soc.dram_write(SMP_SRC_OFF as usize, &[7u8; LEN as usize]);
+    soc.dram_write(SMP_MM_A_OFF as usize, &1.0f32.to_le_bytes().repeat((MM_N * MM_N) as usize));
+    soc.dram_write(SMP_MM_B_OFF as usize, &0.5f32.to_le_bytes().repeat((MM_N * MM_N) as usize));
+    let img = smp_program_with(
+        DRAM_BASE,
+        SmpParams { harts, len: LEN, rounds: ROUNDS, mm_n: MM_N, jobs: JOBS },
+    );
+    soc.preload(&img, DRAM_BASE);
+
+    let cycles = soc.run(80_000_000);
+    assert!(soc.cpu.halted, "smp({harts}) never halted (pc={:#x})", soc.cpu.core.pc);
+    soc.run_cycles(5_000); // drain posted writes to the DRAM device
+
+    // sanity: clean completion, every round counted on every slot
+    let result = soc.dram_read(SMP_RESULT_OFF as usize, 80).to_vec();
+    let word =
+        |i: usize| u64::from_le_bytes(result[i * 8..(i + 1) * 8].try_into().unwrap());
+    assert_eq!(word(0), SMP_MAGIC, "clean completion magic");
+    // mailbox word = token + COMPLETED; at `jobs: 1` that is one per round
+    for s in 0..SMP_SLOTS {
+        let expect = SMP_MAILBOX_TOKEN + (ROUNDS * JOBS) as u64;
+        assert_eq!(word(1 + s), expect, "slot {s} rounds counted");
+    }
+    assert_eq!(soc.stats.get("dsa.jobs"), TOTAL_DESCS as u64, "all descriptors ran");
+
+    (cycles, TOTAL_DESCS as f64 / (cycles as f64 / 1000.0))
+}
+
+fn main() {
+    let points = [1usize, 2, 4];
+    let mut t = Table::new(
+        "SMP hart scaling — 3 DSA slots, 1-job rounds, relay-bound turnaround",
+        &["harts", "descriptors", "cycles", "desc/kcyc", "vs 1 hart"],
+    );
+    let mut json = String::from("{\n  \"points\": [\n");
+    let mut base_thr = 0.0f64;
+    let mut quad_speedup = 0.0f64;
+    for (i, &harts) in points.iter().enumerate() {
+        let (cycles, thr) = run_point(harts);
+        if harts == 1 {
+            base_thr = thr;
+        }
+        let speedup = if base_thr > 0.0 { thr / base_thr } else { 1.0 };
+        if harts == 4 {
+            quad_speedup = speedup;
+        }
+        t.row(&[
+            harts.to_string(),
+            TOTAL_DESCS.to_string(),
+            cycles.to_string(),
+            f3(thr),
+            f2(speedup),
+        ]);
+        json.push_str(&format!(
+            "    {{\"harts\": {harts}, \"descriptors\": {TOTAL_DESCS}, \"cycles\": {cycles}, \
+             \"desc_per_kcycle\": {thr}, \"speedup_vs_single\": {speedup}}}{}\n",
+            if i + 1 == points.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    t.print();
+
+    std::fs::write("BENCH_smp.json", &json).expect("write BENCH_smp.json");
+    println!("\nwritten: BENCH_smp.json");
+
+    let gate: f64 = std::env::var("SMP_BENCH_MIN_SPEEDUP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.8);
+    assert!(
+        quad_speedup >= gate,
+        "four harts must reach ≥{gate}× the single-hart aggregate descriptor \
+         throughput (got {quad_speedup:.2}×)"
+    );
+    println!("4-hart vs 1-hart aggregate descriptor throughput: {quad_speedup:.2}× (gate: ≥{gate}×)");
+}

@@ -134,7 +134,7 @@ fn main() {
     t.row(&["ctrl area vs DDR3 ctrl [25]".into(), "6.3 %".into(), format!("{:.1} %", 100.0 * rpc_area / AreaModel::ddr3_controller_kge())]);
     t.row(&["PHY+FSMs+manager area".into(), "3.5 kGE".into(), "3.5 kGE".into()]);
 
-    let rom = build_bootrom(0x0100_0000, 0x0300_0000);
+    let rom = build_bootrom(0x0100_0000, 0x0300_0000, 0x0204_0000);
     t.row(&["boot ROM size".into(), "≤7.2 KiB".into(), format!("{} B (stub; loader modeled)", rom.len())]);
 
     t.print();

@@ -33,6 +33,9 @@ pub struct Cva6Cfg {
     /// associative). A sweep axis: smaller TLBs turn supervisor
     /// workloads PTW-bound.
     pub tlb_entries: usize,
+    /// This hart's `mhartid` (index into the SMP cluster, `0` for the
+    /// boot hart). Selects the per-hart `cpu{N}.*` stat namespace.
+    pub hartid: usize,
     /// Address ranges the L1s may cache (DRAM, SPM, boot ROM).
     pub cacheable: Vec<(u64, u64)>,
 }
@@ -45,6 +48,7 @@ impl Cva6Cfg {
             dcache_bytes: 32 * 1024,
             ways: 8,
             tlb_entries: 16,
+            hartid: 0,
             cacheable: vec![
                 (0x0100_0000, 0x0004_0000), // boot ROM
                 (0x7000_0000, 0x0002_0000), // SPM window
@@ -53,6 +57,76 @@ impl Cva6Cfg {
         }
     }
 }
+
+/// Per-hart stat-key table. Every key is a `&'static str` literal so the
+/// pointer-interned [`Stats`] fast path applies on the hot path; the hot
+/// sites double-count into both the hart's `cpu{N}.*` namespace and the
+/// legacy `cpu.*` aggregate so existing JSON/power consumers keep seeing
+/// cluster-wide totals (aggregate == sum over harts, bit-exact).
+pub struct HartKeys {
+    pub instr: &'static str,
+    pub instr_m: &'static str,
+    pub instr_s: &'static str,
+    pub instr_u: &'static str,
+    pub active_cycles: &'static str,
+    pub busy_cycles: &'static str,
+    pub wfi_cycles: &'static str,
+    pub miss_cycles: &'static str,
+    pub mmio_cycles: &'static str,
+    pub flush_cycles: &'static str,
+    pub flush_wb: &'static str,
+    pub fence_lines: &'static str,
+    pub irq_taken: &'static str,
+    pub traps: &'static str,
+    pub fp_instr: &'static str,
+    pub writebacks: &'static str,
+    pub spurious_stall: &'static str,
+    pub icache_hit: &'static str,
+    pub icache_miss: &'static str,
+    pub dcache_hit: &'static str,
+    pub dcache_miss: &'static str,
+}
+
+macro_rules! hart_keys {
+    ($n:literal) => {
+        HartKeys {
+            instr: concat!("cpu", $n, ".instr"),
+            instr_m: concat!("cpu", $n, ".instr_m"),
+            instr_s: concat!("cpu", $n, ".instr_s"),
+            instr_u: concat!("cpu", $n, ".instr_u"),
+            active_cycles: concat!("cpu", $n, ".active_cycles"),
+            busy_cycles: concat!("cpu", $n, ".busy_cycles"),
+            wfi_cycles: concat!("cpu", $n, ".wfi_cycles"),
+            miss_cycles: concat!("cpu", $n, ".miss_cycles"),
+            mmio_cycles: concat!("cpu", $n, ".mmio_cycles"),
+            flush_cycles: concat!("cpu", $n, ".flush_cycles"),
+            flush_wb: concat!("cpu", $n, ".flush_wb"),
+            fence_lines: concat!("cpu", $n, ".fence_lines"),
+            irq_taken: concat!("cpu", $n, ".irq_taken"),
+            traps: concat!("cpu", $n, ".traps"),
+            fp_instr: concat!("cpu", $n, ".fp_instr"),
+            writebacks: concat!("cpu", $n, ".writebacks"),
+            spurious_stall: concat!("cpu", $n, ".spurious_stall"),
+            icache_hit: concat!("cpu", $n, ".icache_hit"),
+            icache_miss: concat!("cpu", $n, ".icache_miss"),
+            dcache_hit: concat!("cpu", $n, ".dcache_hit"),
+            dcache_miss: concat!("cpu", $n, ".dcache_miss"),
+        }
+    };
+}
+
+/// One key table per possible hart (see
+/// [`crate::platform::config::MAX_HARTS`]).
+pub static HART_KEYS: [HartKeys; crate::platform::config::MAX_HARTS] = [
+    hart_keys!(0),
+    hart_keys!(1),
+    hart_keys!(2),
+    hart_keys!(3),
+    hart_keys!(4),
+    hart_keys!(5),
+    hart_keys!(6),
+    hart_keys!(7),
+];
 
 /// What the adapter asked the wrapper to do.
 enum MemReq {
@@ -78,6 +152,8 @@ enum CState {
 pub struct Cva6 {
     pub core: CpuCore,
     pub cfg: Cva6Cfg,
+    /// This hart's `cpu{N}.*` stat-key table (static literals).
+    keys: &'static HartKeys,
     icache: L1Cache,
     dcache: L1Cache,
     /// Outgoing writeback beats, streamed one per cycle with back-pressure.
@@ -92,12 +168,16 @@ pub struct Cva6 {
 
 impl Cva6 {
     pub fn new(cfg: Cva6Cfg) -> Self {
-        let mut core = CpuCore::new(cfg.boot_pc, 0);
+        let keys = &HART_KEYS[cfg.hartid];
+        let mut core = CpuCore::new(cfg.boot_pc, cfg.hartid as u64);
         core.mmu = crate::mmu::Mmu::new(cfg.tlb_entries);
         Self {
             core,
-            icache: L1Cache::new(cfg.icache_bytes, cfg.ways, "cpu.icache_hit", "cpu.icache_miss"),
-            dcache: L1Cache::new(cfg.dcache_bytes, cfg.ways, "cpu.dcache_hit", "cpu.dcache_miss"),
+            keys,
+            // the L1s count into the hart's namespace; the Adapter mirrors
+            // every probe into the `cpu.*` aggregate
+            icache: L1Cache::new(cfg.icache_bytes, cfg.ways, keys.icache_hit, keys.icache_miss),
+            dcache: L1Cache::new(cfg.dcache_bytes, cfg.ways, keys.dcache_hit, keys.dcache_miss),
             wb_q: VecDeque::new(),
             state: CState::Run,
             result: None,
@@ -106,9 +186,12 @@ impl Cva6 {
         }
     }
 
-    /// Interrupt lines sampled every cycle (CLINT + PLIC).
-    pub fn set_irqs(&mut self, msip: bool, mtip: bool, meip: bool) {
-        let mut mip = self.core.csr.mip & !((1 << 3) | (1 << 7) | (1 << 11));
+    /// Interrupt lines sampled every cycle (CLINT + PLIC). `msip`/`mtip`
+    /// come from this hart's CLINT bank, `meip`/`seip` from its two PLIC
+    /// contexts (M and S external). Software-writable bits (SSIP, bit 1)
+    /// are left alone.
+    pub fn set_irqs(&mut self, msip: bool, mtip: bool, meip: bool, seip: bool) {
+        let mut mip = self.core.csr.mip & !((1 << 3) | (1 << 7) | (1 << 9) | (1 << 11));
         if msip {
             mip |= 1 << 3;
         }
@@ -117,6 +200,9 @@ impl Cva6 {
         }
         if meip {
             mip |= 1 << 11;
+        }
+        if seip {
+            mip |= 1 << 9;
         }
         self.core.csr.mip = mip;
     }
@@ -156,6 +242,7 @@ impl Cva6 {
         match std::mem::replace(&mut self.state, CState::Run) {
             CState::Wfi => {
                 stats.bump("cpu.wfi_cycles");
+                stats.bump(self.keys.wfi_cycles);
                 if self.core.csr.mip & self.core.csr.mie != 0 {
                     self.state = CState::Run; // wake; interrupt taken next
                 } else {
@@ -164,10 +251,12 @@ impl Cva6 {
             }
             CState::Busy(n) => {
                 stats.bump("cpu.busy_cycles");
+                stats.bump(self.keys.busy_cycles);
                 self.state = if n <= 1 { CState::Run } else { CState::Busy(n - 1) };
             }
             CState::WaitRefill { line, icache, mut got, wb_left, mut b_wait } => {
                 stats.bump("cpu.miss_cycles");
+                stats.bump(self.keys.miss_cycles);
                 if b_wait {
                     if let Some(_b) = bus.b.borrow_mut().pop() {
                         b_wait = false;
@@ -196,6 +285,7 @@ impl Cva6 {
             }
             CState::WaitMmioR => {
                 stats.bump("cpu.mmio_cycles");
+                stats.bump(self.keys.mmio_cycles);
                 let got = {
                     let ok = matches!(bus.r.borrow().peek(), Some(r) if r.id == ID_MMIO_R);
                     if ok { bus.r.borrow_mut().pop() } else { None }
@@ -210,6 +300,7 @@ impl Cva6 {
             }
             CState::WaitMmioB { addr } => {
                 stats.bump("cpu.mmio_cycles");
+                stats.bump(self.keys.mmio_cycles);
                 if bus.b.borrow_mut().pop().is_some() {
                     self.result = Some((addr, 0));
                     self.state = CState::Run;
@@ -219,6 +310,7 @@ impl Cva6 {
             }
             CState::Flush { mut lines, mut beats_left, mut b_wait } => {
                 stats.bump("cpu.flush_cycles");
+                stats.bump(self.keys.flush_cycles);
                 while bus.b.borrow_mut().pop().is_some() {
                     b_wait -= 1;
                 }
@@ -231,6 +323,7 @@ impl Cva6 {
                             }
                             b_wait += 1;
                             stats.bump("cpu.flush_wb");
+                            stats.bump(self.keys.flush_wb);
                         } else {
                             lines.push_front((addr, data));
                         }
@@ -249,6 +342,7 @@ impl Cva6 {
                 // take interrupts at instruction boundary
                 if self.core.maybe_interrupt().is_some() {
                     stats.bump("cpu.irq_taken");
+                    stats.bump(self.keys.irq_taken);
                 }
                 // privilege the *attempted* instruction executes at (a
                 // trap outcome switches prv before we read it back)
@@ -269,14 +363,19 @@ impl Cva6 {
                 match outcome {
                     StepOutcome::Retired { extra_cycles, fp } => {
                         stats.bump("cpu.instr");
-                        stats.bump(match prv {
-                            super::core::PRV_M => "cpu.instr_m",
-                            super::core::PRV_S => "cpu.instr_s",
-                            _ => "cpu.instr_u",
-                        });
+                        stats.bump(self.keys.instr);
+                        let (agg, per) = match prv {
+                            super::core::PRV_M => ("cpu.instr_m", self.keys.instr_m),
+                            super::core::PRV_S => ("cpu.instr_s", self.keys.instr_s),
+                            _ => ("cpu.instr_u", self.keys.instr_u),
+                        };
+                        stats.bump(agg);
+                        stats.bump(per);
                         stats.bump("cpu.active_cycles");
+                        stats.bump(self.keys.active_cycles);
                         if fp {
                             stats.bump("cpu.fp_instr");
+                            stats.bump(self.keys.fp_instr);
                         }
                         // completed page-table walks charge their FSM
                         // cycles on top of functional-unit latency
@@ -287,10 +386,12 @@ impl Cva6 {
                     }
                     StepOutcome::Wfi => {
                         stats.bump("cpu.instr");
+                        stats.bump(self.keys.instr);
                         self.state = CState::Wfi;
                     }
                     StepOutcome::Trapped(t) => {
                         stats.bump("cpu.traps");
+                        stats.bump(self.keys.traps);
                         // a fault mid-walk discards the pending penalty
                         let _ = self.core.mmu.take_walk_penalty();
                         if matches!(t, super::core::Trap::Ebreak) {
@@ -299,6 +400,7 @@ impl Cva6 {
                     }
                     StepOutcome::Stalled => {
                         stats.bump("cpu.active_cycles");
+                        stats.bump(self.keys.active_cycles);
                         match req {
                             Some(MemReq::Refill { line, icache, victim }) => {
                                 let id = if icache { ID_IFILL } else { ID_DFILL };
@@ -311,6 +413,7 @@ impl Cva6 {
                                     }
                                     b_wait = true;
                                     stats.bump("cpu.writebacks");
+                                    stats.bump(self.keys.writebacks);
                                 }
                                 bus.ar.borrow_mut().push(Ar { id, addr: line, len: (LINE / 8 - 1) as u8, size: 3, burst: Burst::Incr, qos: 0 });
                                 self.state = CState::WaitRefill { line, icache, got: Vec::with_capacity(LINE), wb_left, b_wait };
@@ -336,11 +439,13 @@ impl Cva6 {
                             Some(MemReq::Flush) => {
                                 let lines: VecDeque<_> = self.dcache.dirty_lines().into();
                                 stats.add("cpu.fence_lines", lines.len() as u64);
+                                stats.add(self.keys.fence_lines, lines.len() as u64);
                                 self.state = CState::Flush { lines, beats_left: 0, b_wait: 0 };
                             }
                             None => {
                                 // spurious stall (shouldn't happen)
                                 stats.bump("cpu.spurious_stall");
+                                stats.bump(self.keys.spurious_stall);
                             }
                         }
                     }
@@ -380,9 +485,13 @@ impl Component for Cva6 {
     fn skip(&mut self, cycles: u64, stats: &mut Stats) {
         self.core.csr.mcycle = self.core.csr.mcycle.wrapping_add(cycles);
         match &mut self.state {
-            CState::Wfi => stats.add("cpu.wfi_cycles", cycles),
+            CState::Wfi => {
+                stats.add("cpu.wfi_cycles", cycles);
+                stats.add(self.keys.wfi_cycles, cycles);
+            }
             CState::Busy(n) => {
                 stats.add("cpu.busy_cycles", cycles);
+                stats.add(self.keys.busy_cycles, cycles);
                 debug_assert!(cycles <= *n as u64, "skip past a Busy deadline");
                 if cycles >= *n as u64 {
                     self.state = CState::Run;
@@ -419,11 +528,13 @@ impl Bus for Adapter<'_> {
         }
         match self.icache.probe(addr, self.stats) {
             Probe::Hit => {
+                self.stats.bump("cpu.icache_hit");
                 let mut b = [0u8; 4];
                 self.icache.read(addr, &mut b);
                 Ok(u32::from_le_bytes(b))
             }
             Probe::Miss { .. } => {
+                self.stats.bump("cpu.icache_miss");
                 *self.req = Some(MemReq::Refill { line: addr & !(LINE as u64 - 1), icache: true, victim: None });
                 Err(MemErr::Stall)
             }
@@ -434,11 +545,13 @@ impl Bus for Adapter<'_> {
         if self.is_cacheable(addr) {
             match self.dcache.probe(addr, self.stats) {
                 Probe::Hit => {
+                    self.stats.bump("cpu.dcache_hit");
                     let mut b = [0u8; 8];
                     self.dcache.read(addr, &mut b[..size]);
                     Ok(u64::from_le_bytes(b))
                 }
                 Probe::Miss { victim_dirty } => {
+                    self.stats.bump("cpu.dcache_miss");
                     let victim = if victim_dirty { self.dcache.victim(addr) } else { None };
                     *self.req = Some(MemReq::Refill { line: addr & !(LINE as u64 - 1), icache: false, victim });
                     Err(MemErr::Stall)
@@ -459,11 +572,13 @@ impl Bus for Adapter<'_> {
         if self.is_cacheable(addr) {
             match self.dcache.probe(addr, self.stats) {
                 Probe::Hit => {
+                    self.stats.bump("cpu.dcache_hit");
                     let bytes = val.to_le_bytes();
                     self.dcache.write(addr, &bytes[..size]);
                     Ok(())
                 }
                 Probe::Miss { victim_dirty } => {
+                    self.stats.bump("cpu.dcache_miss");
                     let victim = if victim_dirty { self.dcache.victim(addr) } else { None };
                     *self.req = Some(MemReq::Refill { line: addr & !(LINE as u64 - 1), icache: false, victim });
                     Err(MemErr::Stall)
@@ -626,6 +741,41 @@ mod tests {
         assert_eq!(cpu.core.csr.mcycle, 20);
     }
 
+    /// A non-zero hart reads its own `mhartid` and counts into its own
+    /// `cpu{N}.*` namespace while the `cpu.*` aggregate tracks it exactly.
+    #[test]
+    fn hartid_selects_csr_and_stat_namespace() {
+        let mut a = Asm::new(0x8000_0000);
+        a.csrrs(A0, 0xf14, ZERO); // read mhartid
+        a.li(T0, 0x8000_2000);
+        a.sd(A0, T0, 0);
+        a.ld(A1, T0, 0);
+        a.wfi();
+        let img = a.finish();
+        let bus = axi_bus(8);
+        let mut mem = MemSub::new(0x8000_0000, 0x10000, 8, 1);
+        mem.preload(0, &img);
+        let mut cfg = Cva6Cfg::neo(0x8000_0000);
+        cfg.cacheable = vec![(0x8000_0000, 0x10000)];
+        cfg.hartid = 3;
+        let mut cpu = Cva6::new(cfg);
+        let mut stats = Stats::new();
+        for _ in 0..3000 {
+            cpu.tick(&bus, &mut stats);
+            mem.tick(&bus, &mut stats);
+            if cpu.is_wfi() {
+                break;
+            }
+        }
+        assert!(cpu.is_wfi());
+        assert_eq!(cpu.core.x[A0 as usize], 3, "mhartid must read back the configured hart");
+        assert!(stats.get("cpu3.instr") > 0);
+        assert_eq!(stats.get("cpu3.instr"), stats.get("cpu.instr"));
+        assert_eq!(stats.get("cpu3.icache_miss"), stats.get("cpu.icache_miss"));
+        assert_eq!(stats.get("cpu3.dcache_hit"), stats.get("cpu.dcache_hit"));
+        assert_eq!(stats.get("cpu0.instr"), 0, "no hart-0 keys on a hart-3 core");
+    }
+
     #[test]
     fn wfi_wakes_on_timer_interrupt() {
         let mut a = Asm::new(0x8000_0000);
@@ -646,7 +796,7 @@ mod tests {
         let mut fired = false;
         for c in 0..5000 {
             if c == 2000 {
-                cpu.set_irqs(false, true, false);
+                cpu.set_irqs(false, true, false, false);
                 fired = true;
             }
             cpu.tick(&bus, &mut stats);

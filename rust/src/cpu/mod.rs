@@ -30,4 +30,4 @@ pub mod core;
 pub mod cva6;
 
 pub use core::{Bus, CpuCore, StepOutcome, Trap};
-pub use cva6::{Cva6, Cva6Cfg};
+pub use cva6::{Cva6, Cva6Cfg, HartKeys, HART_KEYS};

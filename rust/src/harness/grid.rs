@@ -34,6 +34,8 @@ pub struct SweepGrid {
     pub mshrs: Vec<usize>,
     /// DMA/DSA outstanding-burst caps to sweep (`--outstanding`).
     pub outstanding: Vec<usize>,
+    /// Hart counts to sweep (`--harts`; the SMP cluster-size axis).
+    pub harts: Vec<usize>,
     /// Safety bound handed to every scenario.
     pub max_cycles: u64,
 }
@@ -57,6 +59,7 @@ impl SweepGrid {
         let tlb = base.tlb_entries;
         let mshrs = base.llc_mshrs;
         let outstanding = base.max_outstanding;
+        let harts = base.harts;
         let slots = base.dsa_slots.clone();
         Self {
             base,
@@ -68,6 +71,7 @@ impl SweepGrid {
             tlb_entries: vec![tlb],
             mshrs: vec![mshrs],
             outstanding: vec![outstanding],
+            harts: vec![harts],
             max_cycles: 20_000_000,
         }
     }
@@ -84,7 +88,7 @@ impl SweepGrid {
         g
     }
 
-    /// Deduplicated copies of the eight axes, in first-occurrence order.
+    /// Deduplicated copies of the nine axes, in first-occurrence order.
     #[allow(clippy::type_complexity)]
     fn axes(
         &self,
@@ -94,6 +98,7 @@ impl SweepGrid {
         Vec<u32>,
         Vec<usize>,
         Vec<Vec<DsaSlot>>,
+        Vec<usize>,
         Vec<usize>,
         Vec<usize>,
         Vec<usize>,
@@ -107,13 +112,14 @@ impl SweepGrid {
             dedup_preserve(&self.tlb_entries),
             dedup_preserve(&self.mshrs),
             dedup_preserve(&self.outstanding),
+            dedup_preserve(&self.harts),
         )
     }
 
     /// Number of scenarios the grid expands to (after axis dedup).
     pub fn len(&self) -> usize {
-        let (w, b, m, d, sl, t, ms, o) = self.axes();
-        w.len() * b.len() * m.len() * d.len() * sl.len() * t.len() * ms.len() * o.len()
+        let (w, b, m, d, sl, t, ms, o, h) = self.axes();
+        w.len() * b.len() * m.len() * d.len() * sl.len() * t.len() * ms.len() * o.len() * h.len()
     }
 
     /// Whether the grid is empty (any axis without values).
@@ -123,7 +129,8 @@ impl SweepGrid {
 
     /// Expand the cartesian product into concrete scenarios.
     pub fn scenarios(&self) -> Vec<Scenario> {
-        let (workloads, backends, masks, dsa_ports, slot_sets, tlbs, mshrs, outs) = self.axes();
+        let (workloads, backends, masks, dsa_ports, slot_sets, tlbs, mshrs, outs, harts) =
+            self.axes();
         let mut out = Vec::with_capacity(self.len());
         for wl in &workloads {
             for &backend in &backends {
@@ -133,15 +140,22 @@ impl SweepGrid {
                             for &tlb in &tlbs {
                                 for &ms in &mshrs {
                                     for &o in &outs {
-                                        let mut cfg = self.base.clone();
-                                        cfg.backend = backend;
-                                        cfg.spm_way_mask = mask;
-                                        cfg.dsa_port_pairs = dsa;
-                                        cfg.dsa_slots = slots.clone();
-                                        cfg.tlb_entries = tlb;
-                                        cfg.llc_mshrs = ms;
-                                        cfg.max_outstanding = o;
-                                        out.push(Scenario::new(cfg, wl.clone(), self.max_cycles));
+                                        for &h in &harts {
+                                            let mut cfg = self.base.clone();
+                                            cfg.backend = backend;
+                                            cfg.spm_way_mask = mask;
+                                            cfg.dsa_port_pairs = dsa;
+                                            cfg.dsa_slots = slots.clone();
+                                            cfg.tlb_entries = tlb;
+                                            cfg.llc_mshrs = ms;
+                                            cfg.max_outstanding = o;
+                                            cfg.harts = h;
+                                            out.push(Scenario::new(
+                                                cfg,
+                                                wl.clone(),
+                                                self.max_cycles,
+                                            ));
+                                        }
                                     }
                                 }
                             }
@@ -223,6 +237,27 @@ mod tests {
         assert!(scs[1].name.contains("/sl:reduce+crc@d2d"), "{}", scs[1].name);
         assert!(scs[1].cfg.dsa_slots[1].remote);
         assert_eq!(scs[0].cfg.dsa_port_pairs, 2, "pairs grown to fit the topology");
+    }
+
+    #[test]
+    fn harts_axis_expands_and_names_scenarios() {
+        let mut g = SweepGrid::new(CheshireConfig::neo());
+        g.workloads = vec![Workload::Smp { kib: 2 }];
+        g.harts = vec![1, 2, 4, 2]; // duplicate deduped
+        assert_eq!(g.len(), 3);
+        let scs = g.scenarios();
+        assert!(
+            scs[0].name.ends_with("/sl:matmul+crc+reduce"),
+            "1-hart point keeps the pre-SMP shape: {}",
+            scs[0].name
+        );
+        assert!(scs[1].name.ends_with("/h2"), "{}", scs[1].name);
+        assert!(scs[2].name.ends_with("/h4"), "{}", scs[2].name);
+        assert_eq!(scs[2].cfg.harts, 4);
+        let mut names: Vec<_> = scs.iter().map(|s| s.name.clone()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 3, "all scenario names unique");
     }
 
     #[test]

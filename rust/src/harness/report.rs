@@ -81,6 +81,7 @@ impl SweepReport {
             out.push_str("    {\n");
             out.push_str(&format!("      \"name\": \"{}\",\n", json_escape(&r.name)));
             out.push_str(&format!("      \"workload\": \"{}\",\n", r.workload));
+            out.push_str(&format!("      \"harts\": {},\n", r.harts));
             out.push_str(&format!("      \"backend\": \"{}\",\n", r.backend));
             out.push_str(&format!("      \"spm_way_mask\": {},\n", r.spm_way_mask));
             out.push_str(&format!("      \"dsa_ports\": {},\n", r.dsa_ports));
@@ -156,6 +157,7 @@ mod tests {
         ScenarioResult {
             name: name.to_string(),
             workload: "nop",
+            harts: 1,
             backend: MemBackend::Rpc,
             spm_way_mask: 0xff,
             dsa_ports: 0,

@@ -3,7 +3,7 @@
 
 use crate::dsa::traffic::TrafficGen;
 use crate::model::{PowerModel, PowerReport};
-use crate::platform::config::{slots_spec, DsaKind, DsaSlot, MemBackend};
+use crate::platform::config::{slots_spec, DsaKind, DsaSlot, MemBackend, MAX_HARTS};
 use crate::platform::memmap::DRAM_BASE;
 use crate::platform::{CheshireConfig, Soc};
 use crate::sim::Stats;
@@ -72,6 +72,16 @@ pub enum Workload {
         /// configured SPM size at staging time).
         spm_kib: u32,
     },
+    /// SMP multi-hart headline scenario: hart 0 builds shared Sv39
+    /// tables and releases the secondaries over MSIP IPIs, the harts
+    /// split the `[matmul, crc, reduce]` DSA slots with per-hart PLIC
+    /// IRQ affinity, and results merge through a fenced SPM mailbox —
+    /// architectural output is bit-identical for any hart count; halts
+    /// on ebreak.
+    Smp {
+        /// Bytes the CRC/reduce slots consume, in KiB.
+        kib: u32,
+    },
 }
 
 impl Workload {
@@ -85,6 +95,7 @@ impl Workload {
             Workload::Supervisor { .. } => "supervisor",
             Workload::Hetero { .. } => "hetero",
             Workload::Contention { .. } => "contention",
+            Workload::Smp { .. } => "smp",
         }
     }
 
@@ -103,8 +114,10 @@ impl Workload {
             "contention" => {
                 Ok(Workload::Contention { dma_kib: 32, tile_n: 16, jobs: 2, spm_kib: 32 })
             }
+            "smp" => Ok(Workload::Smp { kib: 4 }),
             other => Err(format!(
-                "unknown workload {other:?} (want wfi|nop|twomm|mem|supervisor|hetero|contention)"
+                "unknown workload {other:?} \
+                 (want wfi|nop|twomm|mem|supervisor|hetero|contention|smp)"
             )),
         }
     }
@@ -197,6 +210,34 @@ impl Workload {
                     window as u32,
                 )
             }
+            Workload::Smp { kib } => {
+                assert!(
+                    soc.cfg.dsa_slots.first().map(|s| s.kind) == Some(DsaKind::Matmul)
+                        && soc.cfg.dsa_slots.get(1).map(|s| s.kind) == Some(DsaKind::Crc)
+                        && soc.cfg.dsa_slots.get(2).map(|s| s.kind) == Some(DsaKind::Reduce),
+                    "smp workload needs dsa.slots starting [matmul, crc, reduce] \
+                     (got {:?})",
+                    soc.cfg.dsa_slots
+                );
+                let len = (kib.max(1) * 1024)
+                    .min((workloads::SMP_MM_A_OFF - workloads::SMP_SRC_OFF) as u32)
+                    & !7;
+                let src: Vec<u8> = (0..len)
+                    .map(|i| (i.wrapping_mul(2246822519).wrapping_add(3) >> 7) as u8)
+                    .collect();
+                soc.dram_write(workloads::SMP_SRC_OFF as usize, &src);
+                let n = workloads::SMP_MM_N;
+                let tile = |seed: f32| -> Vec<u8> {
+                    (0..n * n)
+                        .flat_map(|i| (((i as f32 * 0.53 + seed) % 2.0) - 1.0).to_le_bytes())
+                        .collect()
+                };
+                soc.dram_write(workloads::SMP_MM_A_OFF as usize, &tile(1.0));
+                soc.dram_write(workloads::SMP_MM_B_OFF as usize, &tile(2.0));
+                // soc.cfg.harts is the post-clamp hart count the platform
+                // actually built, so image and topology always agree
+                workloads::smp_program(DRAM_BASE, soc.cfg.harts, len)
+            }
         }
     }
 
@@ -242,10 +283,20 @@ impl Scenario {
         if matches!(workload, Workload::Hetero { .. }) && cfg.dsa_slots.is_empty() {
             cfg.dsa_slots = vec![DsaSlot::local(DsaKind::Reduce), DsaSlot::local(DsaKind::Crc)];
         }
+        if matches!(workload, Workload::Smp { .. }) && cfg.dsa_slots.is_empty() {
+            cfg.dsa_slots = vec![
+                DsaSlot::local(DsaKind::Matmul),
+                DsaSlot::local(DsaKind::Crc),
+                DsaSlot::local(DsaKind::Reduce),
+            ];
+        }
         cfg.dsa_port_pairs = cfg.dsa_port_pairs.max(cfg.dsa_slots.len());
+        // same clamp Soc::new applies, so the name, the stored config and
+        // the built platform all agree on the hart count
+        cfg.harts = cfg.harts.clamp(1, MAX_HARTS);
         let slots = slots_spec(&cfg.dsa_slots);
         let name = format!(
-            "{}/{}/spm{:02x}/dsa{}/tlb{}/mshr{}/out{}{}{}",
+            "{}/{}/spm{:02x}/dsa{}/tlb{}/mshr{}/out{}{}{}{}",
             workload.name(),
             cfg.backend,
             cfg.spm_way_mask,
@@ -254,7 +305,9 @@ impl Scenario {
             cfg.llc_mshrs,
             cfg.max_outstanding,
             if slots.is_empty() { String::new() } else { format!("/sl:{slots}") },
-            if cfg.mem_blocking { "/blk" } else { "" }
+            if cfg.mem_blocking { "/blk" } else { "" },
+            // conditional suffix: every pre-SMP scenario name is unchanged
+            if cfg.harts != 1 { format!("/h{}", cfg.harts) } else { String::new() }
         );
         Self { name, cfg, workload, max_cycles }
     }
@@ -311,6 +364,7 @@ impl Scenario {
         ScenarioResult {
             name: self.name.clone(),
             workload: self.workload.name(),
+            harts: self.cfg.harts,
             backend: self.cfg.backend,
             spm_way_mask: self.cfg.spm_way_mask,
             dsa_ports: self.cfg.dsa_port_pairs,
@@ -339,6 +393,8 @@ pub struct ScenarioResult {
     pub name: String,
     /// Workload short name.
     pub workload: &'static str,
+    /// Hart count of the CVA6 cluster the scenario ran on.
+    pub harts: usize,
     /// Memory backend the scenario ran against.
     pub backend: MemBackend,
     /// LLC way mask configured as SPM.
@@ -404,10 +460,35 @@ mod tests {
 
     #[test]
     fn workload_parse_roundtrips_names() {
-        for name in ["wfi", "nop", "twomm", "mem", "supervisor", "hetero", "contention"] {
+        for name in ["wfi", "nop", "twomm", "mem", "supervisor", "hetero", "contention", "smp"] {
             assert_eq!(Workload::parse(name).unwrap().name(), name);
         }
         assert!(Workload::parse("fft").is_err());
+    }
+
+    /// The smp scenario self-provisions its `[matmul, crc, reduce]`
+    /// topology, encodes the hart count in its name (only when ≠ 1), and
+    /// halts with per-hart stat namespaces populated.
+    #[test]
+    fn smp_scenario_normalizes_slots_and_halts() {
+        let mut cfg = CheshireConfig::neo();
+        cfg.harts = 2;
+        let sc = Scenario::new(cfg, Workload::Smp { kib: 2 }, 20_000_000);
+        assert!(sc.name.contains("/sl:matmul+crc+reduce"), "topology in the name: {}", sc.name);
+        assert!(sc.name.ends_with("/h2"), "hart count in the name: {}", sc.name);
+        assert_eq!(sc.cfg.dsa_port_pairs, 3);
+        let r = sc.run();
+        assert!(r.halted, "{}: smp must halt", r.name);
+        assert_eq!(r.harts, 2);
+        assert!(r.stats.get("cpu0.instr") > 0 && r.stats.get("cpu1.instr") > 0);
+        assert_eq!(r.stats.get("rpc.dev_violations"), 0);
+        // a single-hart smp point keeps the pre-SMP name shape
+        let sc1 = Scenario::new(CheshireConfig::neo(), Workload::Smp { kib: 2 }, 20_000_000);
+        assert!(
+            sc1.name.ends_with("/sl:matmul+crc+reduce"),
+            "no hart suffix at 1 hart: {}",
+            sc1.name
+        );
     }
 
     /// The hetero scenario self-provisions its `[reduce, crc]` topology,

@@ -6,7 +6,8 @@
 //! * `run <workload> [--cycles N] [--freq-mhz F] [--config cfg.toml]` —
 //!   run one of the paper's workloads (wfi | nop | twomm | mem) or the
 //!   Sv39 `supervisor` boot flow on the simulated platform and report
-//!   cycles, stats and the Fig. 11 power split.
+//!   cycles, stats and the Fig. 11 power split. `run smp --harts N`
+//!   boots the N-hart cluster scenario.
 //! * `offload [--n N] [--tile T] [--artifacts DIR]` — tiled matmul through
 //!   the DSA plug-in (DMA + SPM + Pallas-compiled kernel via PJRT).
 //! * `boot` — autonomous SPI-flash GPT boot flow.
@@ -67,6 +68,9 @@ fn load_config_inner(args: &Args, apply_dsa: bool) -> CheshireConfig {
         if let Some(n) = args.get("outstanding") {
             cfg.max_outstanding = n.parse::<usize>().expect("outstanding bursts").max(1);
         }
+        if let Some(n) = args.get("harts") {
+            cfg.harts = n.parse::<usize>().expect("hart count").max(1);
+        }
     }
     if args.flag("no-elide") {
         cfg.elide_idle = false;
@@ -87,18 +91,18 @@ fn main() {
         Some("sweep") => sweep(&args),
         _ => {
             eprintln!("usage: cheshire <info|run|offload|boot|sweep> [options]");
-            eprintln!("  run <wfi|nop|twomm|mem|supervisor|hetero|contention> [--cycles N] [--freq-mhz F]");
+            eprintln!("  run <wfi|nop|twomm|mem|supervisor|hetero|contention|smp> [--cycles N] [--freq-mhz F]");
             eprintln!("      [--demand-pages N] [--timer-delta N]");
             eprintln!("      [--dma-kib N] [--tile N] [--dsa-jobs N] [--spm-kib N]  (contention)");
-            eprintln!("      [--kib N]  (hetero pipeline bytes)");
+            eprintln!("      [--kib N]  (hetero pipeline / smp shared-buffer bytes)");
             eprintln!("      [--slots matmul+crc@d2d]  (DSA slot topology; @d2d = chiplet attach)");
-            eprintln!("      [--mshrs N] [--outstanding N]");
+            eprintln!("      [--mshrs N] [--outstanding N] [--harts N]");
             eprintln!("  offload [--n 128] [--tile 64] [--artifacts artifacts/]");
             eprintln!("  boot");
             eprintln!("  sweep [--workloads nop,mem] [--backends rpc,hyperram]");
             eprintln!("        [--spm-masks 0xff,0x0f] [--dsa 0,1] [--tlb 16,4] [--cycles N]");
             eprintln!("        [--slots none,reduce+crc,reduce+crc@d2d]  (topology axis)");
-            eprintln!("        [--mshrs 1,4,8] [--outstanding 1,4]");
+            eprintln!("        [--mshrs 1,4,8] [--outstanding 1,4] [--harts 1,2,4]");
             eprintln!("        [--jobs N] [--serial] [--json sweep.json|-] [--json-arch arch.json]");
             eprintln!("  any subcommand: [--no-elide]  disable event-horizon idle elision");
             eprintln!("                  (architecturally identical, reference cycle loop)");
@@ -167,6 +171,14 @@ fn sweep(args: &Args) {
             .map(|v| v.max(1))
     }) {
         grid.outstanding = outs;
+    }
+    if let Some(hs) = parse_axis(args, "harts", |s| {
+        s.trim()
+            .parse::<usize>()
+            .map_err(|e| format!("bad hart count {s:?}: {e}"))
+            .map(|v| v.max(1))
+    }) {
+        grid.harts = hs;
     }
     // `--cycles` is the per-scenario bound for *every* workload: halting
     // workloads get it as their run cap, fixed-window workloads have
@@ -252,6 +264,7 @@ fn run(args: &Args) {
             timer_delta: args.get_u64("timer-delta", 20_000) as u32,
         },
         "hetero" => Workload::Hetero { kib: args.get_u64("kib", 16) as u32 },
+        "smp" => Workload::Smp { kib: args.get_u64("kib", 4) as u32 },
         "contention" => Workload::Contention {
             dma_kib: args.get_u64("dma-kib", 32) as u32,
             tile_n: args.get_u64("tile", 16) as u32,
@@ -264,13 +277,21 @@ fn run(args: &Args) {
         }
     };
     // workload-required topologies (matmul on slot 0 for contention,
-    // [reduce, crc] for hetero) — same normalization as Scenario::new
+    // [reduce, crc] for hetero, [matmul, crc, reduce] for smp) — same
+    // normalization as Scenario::new
     use cheshire::platform::{DsaKind, DsaSlot};
     if matches!(workload, Workload::Contention { .. }) && cfg.dsa_slots.is_empty() {
         cfg.dsa_slots = vec![DsaSlot::local(DsaKind::Matmul)];
     }
     if matches!(workload, Workload::Hetero { .. }) && cfg.dsa_slots.is_empty() {
         cfg.dsa_slots = vec![DsaSlot::local(DsaKind::Reduce), DsaSlot::local(DsaKind::Crc)];
+    }
+    if matches!(workload, Workload::Smp { .. }) && cfg.dsa_slots.is_empty() {
+        cfg.dsa_slots = vec![
+            DsaSlot::local(DsaKind::Matmul),
+            DsaSlot::local(DsaKind::Crc),
+            DsaSlot::local(DsaKind::Reduce),
+        ];
     }
     let mut soc = Soc::new(cfg);
     let img = workload.stage(&mut soc);

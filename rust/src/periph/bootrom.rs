@@ -28,19 +28,49 @@ pub const BOOT_TYPE_GUID: [u8; 16] = [
 ];
 
 /// Assemble the boot ROM stub for a platform whose SoC-control Regbus
-/// window sits at `soc_ctrl_base`. Returns the ROM image.
+/// window sits at `soc_ctrl_base` and whose CLINT sits at `clint_base`.
+/// Returns the ROM image.
 ///
-/// Flow: read BOOT_MODE; all modes converge on "wait for BOOT_DONE, then
-/// jump to SCRATCH{1,0}" — for autonomous modes the loader model raises
-/// BOOT_DONE after copying the payload (the real ROM busy-waits on its own
-/// copy loop instead; the architectural effect, a DRAM-resident payload
-/// entered after storage traffic, is identical).
-pub fn build_bootrom(base: u64, soc_ctrl_base: u64) -> Vec<u8> {
+/// Flow, hart 0: read BOOT_MODE; all modes converge on "wait for
+/// BOOT_DONE, then jump to SCRATCH{1,0}" — for autonomous modes the
+/// loader model raises BOOT_DONE after copying the payload (the real ROM
+/// busy-waits on its own copy loop instead; the architectural effect, a
+/// DRAM-resident payload entered after storage traffic, is identical).
+///
+/// Secondary harts (`mhartid != 0`) park in a race-free WFI loop on their
+/// own CLINT `msip` bank (MSIE set locally, `mstatus.MIE` clear, so the
+/// IPI wakes the hart without trapping). On wake they ack the doorbell,
+/// restore `mie = 0`, and converge on the same SCRATCH{1,0} entry jump —
+/// the payload branches on `mhartid` itself. The parked loop is fully
+/// elidable: between IPIs the hart reports quiescent.
+pub fn build_bootrom(base: u64, soc_ctrl_base: u64, clint_base: u64) -> Vec<u8> {
     let mut a = Asm::new(base);
+    a.csrrs(T3, 0xf14, ZERO); // mhartid
+    a.bne(T3, ZERO, "secondary");
+    // --- hart 0: passive-preload / loader path ---
     a.li(S0, soc_ctrl_base as i64);
     a.label("wait");
     a.lw(T0, S0, 0x14); // BOOT_DONE
     a.beq(T0, ZERO, "wait");
+    a.j("enter");
+    // --- harts 1..N: park until hart 0's IPI ---
+    a.label("secondary");
+    a.li(S1, clint_base as i64);
+    a.slli(T4, T3, 2);
+    a.add(S1, S1, T4); // &msip[mhartid]
+    a.li(T0, 1 << 3);
+    a.csrrw(ZERO, 0x304, T0); // mie = MSIE (wake-only; no trap taken)
+    a.label("park");
+    a.lw(T0, S1, 0); // check-before-sleep closes the IPI race
+    a.bne(T0, ZERO, "go");
+    a.wfi();
+    a.j("park");
+    a.label("go");
+    a.sw(ZERO, S1, 0); // ack the doorbell
+    a.csrrw(ZERO, 0x304, ZERO); // hand the payload a reset-clean mie
+    a.li(S0, soc_ctrl_base as i64);
+    // --- all harts: jump to the staged entry point ---
+    a.label("enter");
     a.lwu(T1, S0, 0x0c); // entry lo
     a.lwu(T2, S0, 0x10); // entry hi
     a.slli(T2, T2, 32);
@@ -257,7 +287,7 @@ mod tests {
 
     #[test]
     fn bootrom_stub_is_small_and_valid() {
-        let rom = build_bootrom(0x0100_0000, 0x0300_0000);
+        let rom = build_bootrom(0x0100_0000, 0x0300_0000, 0x0204_0000);
         assert!(rom.len() < 7200, "stub must stay within the 7.2 KiB ROM budget");
         assert!(rom.len() % 4 == 0);
     }

@@ -134,6 +134,10 @@ pub fn slots_spec(slots: &[DsaSlot]) -> String {
     slots.iter().map(|s| s.to_string()).collect::<Vec<_>>().join("+")
 }
 
+/// Hard upper bound on the SMP cluster size (per-hart stat keys and
+/// CLINT/PLIC register banks are sized for this at compile time).
+pub const MAX_HARTS: usize = 8;
+
 /// Full platform configuration (one SoC instance).
 #[derive(Debug, Clone, PartialEq)]
 pub struct CheshireConfig {
@@ -167,6 +171,11 @@ pub struct CheshireConfig {
     /// Entries in each of the CVA6's split I/D TLBs (a sweep axis for
     /// supervisor workloads; CVA6 ships 16, fully associative).
     pub tlb_entries: usize,
+    /// CVA6 harts in the SMP host cluster (TOML `cpu.harts`, CLI
+    /// `--harts`). Hart 0 is the boot hart; secondaries park in the boot
+    /// ROM on a `wfi` loop until released by an MSIP inter-processor
+    /// interrupt. Clamped to `1..=`[`MAX_HARTS`].
+    pub harts: usize,
     /// LLC total size in bytes.
     pub llc_bytes: usize,
     /// LLC associativity (ways), each individually maskable as SPM.
@@ -229,6 +238,7 @@ impl CheshireConfig {
             dcache_bytes: 32 * 1024,
             l1_ways: 8,
             tlb_entries: 16,
+            harts: 1,
             llc_bytes: 128 * 1024,
             llc_ways: 8,
             spm_way_mask: 0xff,
@@ -309,6 +319,9 @@ impl CheshireConfig {
         }
         if let Some(v) = get_u("platform.tlb_entries") {
             c.tlb_entries = v as usize;
+        }
+        if let Some(v) = get_u("cpu.harts") {
+            c.harts = (v as usize).clamp(1, MAX_HARTS);
         }
         if let Some(v) = get_u("platform.dram_mib") {
             c.dram_bytes = v as usize * 1024 * 1024;
@@ -557,6 +570,18 @@ mod tests {
     fn tlb_entries_load_from_toml() {
         let c = CheshireConfig::from_toml("[platform]\ntlb_entries = 4").unwrap();
         assert_eq!(c.tlb_entries, 4);
+    }
+
+    #[test]
+    fn harts_default_and_load_from_toml() {
+        assert_eq!(CheshireConfig::neo().harts, 1, "Neo ships a single CVA6");
+        let c = CheshireConfig::from_toml("[cpu]\nharts = 4").unwrap();
+        assert_eq!(c.harts, 4);
+        // out-of-range counts clamp into 1..=MAX_HARTS
+        let c = CheshireConfig::from_toml("[cpu]\nharts = 0").unwrap();
+        assert_eq!(c.harts, 1);
+        let c = CheshireConfig::from_toml("[cpu]\nharts = 99").unwrap();
+        assert_eq!(c.harts, MAX_HARTS);
     }
 
     #[test]

@@ -20,7 +20,7 @@ use crate::periph::soc_ctrl::SocCtrl;
 use crate::periph::uart::Uart;
 use crate::periph::vga::{Vga, VgaScanout};
 use crate::periph::{build_bootrom, Gpio, I2cEeprom, SpiHost};
-use crate::platform::config::{CheshireConfig, DsaKind, MemBackend};
+use crate::platform::config::{CheshireConfig, DsaKind, MemBackend, MAX_HARTS};
 use crate::platform::memmap::*;
 use crate::rpc::manager::ManagerRegs;
 use crate::rpc::RpcSubsystem;
@@ -95,9 +95,16 @@ pub struct Soc {
     pub stats: Stats,
 
     // managers
-    /// The CVA6 host CPU (core + L1 caches + AXI manager port).
+    /// The boot hart (hart 0): core + L1 caches + AXI manager port.
+    /// Secondary harts live in `extra_harts`; use [`Soc::hart`] for a
+    /// uniform per-hart view.
     pub cpu: Cva6,
     cpu_bus: AxiBus,
+    /// Harts 1..N of the SMP cluster, each with its own manager port.
+    /// Empty at `harts = 1`, so single-hart wiring (and arbitration
+    /// order) is byte-identical to the pre-SMP platform.
+    extra_harts: Vec<Cva6>,
+    extra_cpu_buses: Vec<AxiBus>,
     /// The DMA engine's bus-side half.
     pub dma: DmaEngine,
     /// The DMA engine's register state (shared with its Regbus front door).
@@ -162,6 +169,7 @@ impl Soc {
     /// empty for [`Soc::plug_dsa`].
     pub fn new(mut cfg: CheshireConfig) -> Self {
         cfg.dsa_port_pairs = cfg.dsa_port_pairs.max(cfg.dsa_slots.len());
+        cfg.harts = cfg.harts.clamp(1, MAX_HARTS);
         let cfg = cfg;
         let stats = Stats::new();
         let clock = Clock::new(cfg.freq_hz);
@@ -172,6 +180,9 @@ impl Soc {
         let vga_bus = axi_bus(4);
         let dbg_bus = axi_bus(4); // debug-module system-bus-access port
         let dsa_mgr_bus: Vec<AxiBus> = (0..cfg.dsa_port_pairs).map(|_| axi_bus(4)).collect();
+        // secondary-hart manager ports (appended *after* every existing
+        // manager so hart-0-only arbitration is unchanged at harts = 1)
+        let extra_cpu_buses: Vec<AxiBus> = (1..cfg.harts).map(|_| axi_bus(4)).collect();
 
         // --- subordinate-side buses ---
         let llc_sub_bus = axi_bus(8);
@@ -200,6 +211,7 @@ impl Soc {
 
         let mut mgr_ports = vec![cpu_bus.clone(), dma_bus.clone(), vga_bus.clone(), dbg_bus.clone()];
         mgr_ports.extend(dsa_mgr_bus.iter().cloned());
+        mgr_ports.extend(extra_cpu_buses.iter().cloned());
         let mut sub_ports = vec![llc_sub_bus.clone(), bootrom_bus.clone(), bridge_bus.clone()];
         sub_ports.extend(dsa_sub_bus.iter().cloned());
 
@@ -253,7 +265,7 @@ impl Soc {
         let mut bootrom = MemSub::new(BOOTROM_BASE, BOOTROM_SIZE as usize, cfg.data_bytes, 1);
         bootrom.max_reads = if cfg.mem_blocking { 1 } else { 4 };
         bootrom.read_only = true;
-        let rom_img = build_bootrom(BOOTROM_BASE, SOC_CTRL_BASE);
+        let rom_img = build_bootrom(BOOTROM_BASE, SOC_CTRL_BASE, CLINT_BASE);
         {
             let ro = &mut bootrom;
             ro.read_only = false;
@@ -265,11 +277,11 @@ impl Soc {
         let (mut dma, dma_state) = DmaEngine::new();
         dma.max_outstanding = if cfg.mem_blocking { 1 } else { cfg.max_outstanding.max(1) as u32 };
         let (vga_scan, vga_state) = VgaScanout::new();
-        let clint: Shared<Clint> = Rc::new(RefCell::new(Clint::new()));
+        let clint: Shared<Clint> = Rc::new(RefCell::new(Clint::with_harts(cfg.harts)));
         // fixed sources (UART, DMA, GPIO) + one completion line per DSA
         // slot; never fewer than 8 so software probing the classic range
         // keeps working
-        let (plic_raw, _lines) = Plic::new(8.max(PLIC_SRC_DSA0 + cfg.dsa_port_pairs));
+        let (plic_raw, _lines) = Plic::with_harts(8.max(PLIC_SRC_DSA0 + cfg.dsa_port_pairs), cfg.harts);
         let plic: Shared<Plic> = Rc::new(RefCell::new(plic_raw));
         let uart: Shared<Uart> = Rc::new(RefCell::new(Uart::new()));
         let spi: Shared<SpiHost> = Rc::new(RefCell::new(SpiHost::new(Vec::new())));
@@ -313,7 +325,17 @@ impl Soc {
             (SPM_BASE, cfg.llc_bytes as u64),
             (DRAM_BASE, cfg.dram_bytes as u64),
         ];
-        let cpu = Cva6::new(cva6_cfg);
+        let cpu = Cva6::new(cva6_cfg.clone());
+        // secondary harts: identical timing config, their own `mhartid`
+        // (→ per-hart `cpu{N}.*` stat namespace), all booting from the
+        // shared ROM, which parks them until hart 0's IPI
+        let extra_harts: Vec<Cva6> = (1..cfg.harts)
+            .map(|h| {
+                let mut c = cva6_cfg.clone();
+                c.hartid = h;
+                Cva6::new(c)
+            })
+            .collect();
 
         let n_dsa = cfg.dsa_port_pairs;
         // config-driven slots: engines in port-pair order, each either
@@ -338,6 +360,8 @@ impl Soc {
             stats,
             cpu,
             cpu_bus,
+            extra_harts,
+            extra_cpu_buses,
             dma,
             dma_state,
             dma_bus,
@@ -404,6 +428,29 @@ impl Soc {
         self.dsa.get(idx).map(|d| d.is_some()).unwrap_or(false)
     }
 
+    /// Number of harts in the SMP cluster (≥ 1).
+    pub fn harts(&self) -> usize {
+        1 + self.extra_harts.len()
+    }
+
+    /// Shared view of hart `h` (0 = the boot hart, alias of `self.cpu`).
+    pub fn hart(&self, h: usize) -> &Cva6 {
+        if h == 0 {
+            &self.cpu
+        } else {
+            &self.extra_harts[h - 1]
+        }
+    }
+
+    /// Mutable view of hart `h` (0 = the boot hart).
+    pub fn hart_mut(&mut self, h: usize) -> &mut Cva6 {
+        if h == 0 {
+            &mut self.cpu
+        } else {
+            &mut self.extra_harts[h - 1]
+        }
+    }
+
     /// JTAG-style passive preload: image into DRAM, entry point into the
     /// SoC-control scratch registers, BOOT_DONE raised.
     ///
@@ -436,8 +483,11 @@ impl Soc {
         let now: Cycle = self.clock.now();
         let stats = &mut self.stats;
 
-        // managers
+        // managers (hart 0 first, then secondaries in hart order)
         self.cpu.tick(&self.cpu_bus, stats);
+        for (i, hart) in self.extra_harts.iter_mut().enumerate() {
+            hart.tick(&self.extra_cpu_buses[i], stats);
+        }
         self.dma.tick(&self.dma_bus, stats);
         if self.cfg.vga {
             self.vga_scan.tick(&self.vga_bus, stats);
@@ -482,7 +532,12 @@ impl Soc {
             }
             plic.sample();
             let clint = self.clint.borrow();
-            self.cpu.set_irqs(clint.msip, clint.mtip(), plic.meip());
+            self.cpu
+                .set_irqs(clint.msip(0), clint.mtip(0), plic.meip_hart(0), plic.seip_hart(0));
+            for (i, hart) in self.extra_harts.iter_mut().enumerate() {
+                let h = i + 1;
+                hart.set_irqs(clint.msip(h), clint.mtip(h), plic.meip_hart(h), plic.seip_hart(h));
+            }
         }
 
         self.clock.advance();
@@ -511,6 +566,7 @@ impl Soc {
     /// cycle, so nothing may be elided.
     fn buses_idle(&self) -> bool {
         self.cpu_bus.is_idle()
+            && self.extra_cpu_buses.iter().all(|b| b.is_idle())
             && self.dma_bus.is_idle()
             && self.vga_bus.is_idle()
             && self.dbg_bus.is_idle()
@@ -524,15 +580,24 @@ impl Soc {
     }
 
     /// Fold every component's [`Activity`] report (and the bus-idle check)
-    /// into the platform's combined next-cycle classification. The CPU is
-    /// polled first with an early out: an actively executing core makes
-    /// the platform busy regardless of everything else, which keeps the
-    /// poll overhead negligible on compute-bound workloads.
+    /// into the platform's combined next-cycle classification. The harts
+    /// are polled first with an early out: an actively executing core
+    /// makes the platform busy regardless of everything else, which keeps
+    /// the poll overhead negligible on compute-bound workloads. The
+    /// cluster as a whole is elidable only when *every* hart is parked
+    /// (`wfi` with nothing pending, or a pure latency countdown with an
+    /// exact wake deadline).
     pub fn poll_activity(&self) -> Activity {
         let now = self.clock.now();
         let mut combined = self.cpu.activity(now);
         if combined == Activity::Busy {
             return Activity::Busy;
+        }
+        for hart in &self.extra_harts {
+            combined = combined.combine(hart.activity(now));
+            if combined == Activity::Busy {
+                return Activity::Busy;
+            }
         }
         let parts = [
             self.dma.activity(now),
@@ -573,11 +638,16 @@ impl Soc {
             let mut lines_settled = true;
             self.for_each_plic_source(|i, level| lines_settled &= lines[i] == level);
             let clint = self.clint.borrow();
-            let mip = self.cpu.core.csr.mip;
+            let hart_settled = |hart: &Cva6, h: usize| {
+                let mip = hart.core.csr.mip;
+                (mip >> 3) & 1 == clint.msip(h) as u64
+                    && (mip >> 7) & 1 == clint.mtip(h) as u64
+                    && (mip >> 11) & 1 == plic.meip_hart(h) as u64
+                    && (mip >> 9) & 1 == plic.seip_hart(h) as u64
+            };
             lines_settled
-                && (mip >> 3) & 1 == clint.msip as u64
-                && (mip >> 7) & 1 == clint.mtip() as u64
-                && (mip >> 11) & 1 == plic.meip() as u64
+                && hart_settled(&self.cpu, 0)
+                && self.extra_harts.iter().enumerate().all(|(i, c)| hart_settled(c, i + 1))
         };
         if !fabric_settled {
             return Activity::Busy;
@@ -592,6 +662,9 @@ impl Soc {
     /// loop.
     fn skip_cycles(&mut self, n: u64) {
         self.cpu.skip(n, &mut self.stats);
+        for hart in &mut self.extra_harts {
+            hart.skip(n, &mut self.stats);
+        }
         if self.cfg.vga {
             self.vga_scan.skip(n, &mut self.stats);
         }
@@ -820,6 +893,95 @@ mod tests {
         assert_eq!(c1, c0, "halt cycle must be identical");
         assert_eq!(u1, u0);
         assert!(s1.get("sched.elided_cycles") > 30_000, "the sleep was actually elided");
+        for (k, v) in s0.iter() {
+            assert_eq!(s1.get(k), v, "stat {k} must survive elision");
+        }
+        assert_eq!(
+            s1.iter().filter(|(k, _)| !k.starts_with("sched.")).count(),
+            s0.iter().count(),
+            "elision adds only sched.* keys"
+        );
+    }
+
+    /// Satellite: per-hart WFI wake under elision. A secondary hart parks
+    /// in the boot ROM, hart 0 sleeps on the CLINT (a long elidable span),
+    /// then IPIs the secondary from its timer handler; the secondary posts
+    /// a fenced mailbox through the shared LLC and parks again. The whole
+    /// boot/park/IPI/mailbox sequence must be invisible to the
+    /// event-horizon engine: identical halt cycle, UART output and
+    /// non-`sched.*` stats — while the sleep actually elides.
+    #[test]
+    fn secondary_hart_ipi_wake_is_elision_invariant() {
+        let program = || {
+            let mailbox = (DRAM_BASE + 0x10000) as i64;
+            let mut a = Asm::new(DRAM_BASE);
+            a.csrrs(T3, 0xf14, ZERO);
+            a.bne(T3, ZERO, "hart1");
+            // hart 0: arm a 20k-cycle CLINT sleep, handler does the rest
+            a.la(T0, "handler");
+            a.csrrw(ZERO, 0x305, T0);
+            a.li(S0, (CLINT_BASE + 0xbff8) as i64);
+            a.li(S2, (CLINT_BASE + 0x4000) as i64);
+            a.lw(T1, S0, 0);
+            a.li(T2, 20_000);
+            a.add(T1, T1, T2);
+            a.sw(T1, S2, 0);
+            a.sw(ZERO, S2, 4);
+            a.li(T1, 1 << 7);
+            a.csrrw(ZERO, 0x304, T1); // MTIE
+            a.li(T1, 1 << 3);
+            a.csrrs(ZERO, 0x300, T1); // mstatus.MIE
+            a.wfi();
+            a.label("spin");
+            a.j("spin");
+            a.label("handler");
+            a.li(T1, -1);
+            a.sw(T1, S2, 0); // disarm mtimecmp[0]
+            a.sw(T1, S2, 4);
+            a.li(S1, CLINT_BASE as i64);
+            a.li(T0, 1);
+            a.sw(T0, S1, 4); // IPI: ring hart 1's msip doorbell
+            a.li(S3, mailbox);
+            a.label("wait_mail");
+            a.fence(); // software coherence: drop the stale L1 copy
+            a.ld(T0, S3, 0);
+            a.beq(T0, ZERO, "wait_mail");
+            a.li(S1, UART_BASE as i64);
+            a.li(T0, b'!' as i64);
+            a.sw(T0, S1, 0);
+            a.label("drain");
+            a.lw(T1, S1, 0x08);
+            a.andi(T1, T1, 0x20);
+            a.beq(T1, ZERO, "drain");
+            a.ebreak();
+            // hart 1: post the mailbox through the shared LLC, park again
+            a.label("hart1");
+            a.li(S3, mailbox);
+            a.li(T0, 0x5af3);
+            a.sd(T0, S3, 0);
+            a.fence(); // write back so hart 0's fenced re-read sees it
+            a.label("park");
+            a.wfi();
+            a.j("park");
+            a.finish()
+        };
+        let run_one = |elide: bool| {
+            let mut cfg = CheshireConfig::neo();
+            cfg.harts = 2;
+            cfg.elide_idle = elide;
+            let mut soc = Soc::new(cfg);
+            soc.preload(&program(), DRAM_BASE);
+            let cycles = soc.run(4_000_000);
+            assert!(soc.cpu.halted, "elide={elide}: pc={:#x}", soc.cpu.core.pc);
+            (cycles, soc.uart.borrow().tx_string(), soc.stats.clone())
+        };
+        let (c1, u1, s1) = run_one(true);
+        let (c0, u0, s0) = run_one(false);
+        assert_eq!(c1, c0, "halt cycle must survive elision");
+        assert_eq!(u1, u0);
+        assert_eq!(u1, "!");
+        assert!(s1.get("cpu1.instr") > 0, "the secondary actually ran");
+        assert!(s1.get("sched.elided_cycles") > 10_000, "the sleep actually elided");
         for (k, v) in s0.iter() {
             assert_eq!(s1.get(k), v, "stat {k} must survive elision");
         }

@@ -51,14 +51,40 @@ impl Rng {
     }
 }
 
+/// The effective base seed for a property: `CHESHIRE_PROP_SEED` (decimal
+/// or `0x`-prefixed hex) when set in the environment, else the property's
+/// compiled-in default. Lets a CI failure be replayed locally with the
+/// exact same case stream without recompiling.
+pub fn base_seed(default: u64) -> u64 {
+    match std::env::var("CHESHIRE_PROP_SEED") {
+        Ok(s) => parse_seed(&s)
+            .unwrap_or_else(|e| panic!("CHESHIRE_PROP_SEED={s:?} is not a u64: {e}")),
+        Err(_) => default,
+    }
+}
+
+/// Parse a seed string: decimal, or hex with a `0x` prefix.
+fn parse_seed(s: &str) -> Result<u64, std::num::ParseIntError> {
+    let s = s.trim();
+    match s.strip_prefix("0x") {
+        Some(h) => u64::from_str_radix(h, 16),
+        None => s.parse(),
+    }
+}
+
 /// Run `n` generated cases; panics with the failing seed for replay.
-pub fn cases<F: FnMut(&mut Rng)>(n: u64, base_seed: u64, mut f: F) {
+/// The base seed honors the `CHESHIRE_PROP_SEED` override (see
+/// [`base_seed`]) and is printed alongside the per-case seed on failure.
+pub fn cases<F: FnMut(&mut Rng)>(n: u64, default_base_seed: u64, mut f: F) {
+    let base = base_seed(default_base_seed);
     for i in 0..n {
-        let seed = base_seed.wrapping_add(i).wrapping_mul(0x9e37_79b9_7f4a_7c15) | 1;
+        let seed = base.wrapping_add(i).wrapping_mul(0x9e37_79b9_7f4a_7c15) | 1;
         let mut rng = Rng::new(seed);
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
         if let Err(e) = r {
-            eprintln!("property case {i} failed (seed={seed:#x})");
+            eprintln!(
+                "property case {i} failed (seed={seed:#x}); replay the whole run with CHESHIRE_PROP_SEED={base:#x}"
+            );
             std::panic::resume_unwind(e);
         }
     }
@@ -91,5 +117,13 @@ mod tests {
         let mut count = 0;
         cases(25, 1, |_| count += 1);
         assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn seed_strings_parse_decimal_and_hex() {
+        assert_eq!(parse_seed("42").unwrap(), 42);
+        assert_eq!(parse_seed(" 0xdeadbeef ").unwrap(), 0xdead_beef);
+        assert_eq!(parse_seed("0xFF").unwrap(), 255);
+        assert!(parse_seed("nope").is_err());
     }
 }

@@ -21,6 +21,13 @@
 //! descriptors to multiple DSAs through the uniform ring/doorbell
 //! contract and sleeps in `wfi` until each completion interrupt; zero
 //! CPU poll loops.
+//!
+//! And the **SMP** workload ([`smp_program`]): the multi-hart headline
+//! scenario — hart 0 builds shared Sv39 tables and releases the
+//! secondaries with MSIP IPIs, the harts split the DSA slots with
+//! per-hart PLIC IRQ affinity, and results merge through a fenced SPM
+//! mailbox so the architectural output is bit-identical for any hart
+//! count.
 
 use crate::asm::{reg::*, Asm};
 use crate::platform::memmap::{
@@ -836,6 +843,397 @@ pub fn supervisor_program(base: u64, demand_pages: u32, timer_delta: u32) -> Vec
     a.finish()
 }
 
+/// SMP: shared source buffer for the CRC/reduce slots (DRAM offset).
+pub const SMP_SRC_OFF: u64 = 0x32_0000;
+/// SMP: matmul operand A tile (`n×n` f32, DRAM offset).
+pub const SMP_MM_A_OFF: u64 = 0x34_0000;
+/// SMP: matmul operand B tile (DRAM offset).
+pub const SMP_MM_B_OFF: u64 = 0x34_8000;
+/// SMP: matmul accumulator tile C (DRAM offset; starts zeroed, holds
+/// `rounds · SMP_SLOT_JOBS · A·B` on completion).
+pub const SMP_MM_C_OFF: u64 = 0x35_0000;
+/// SMP: descriptor ring of slot `s` lives at `+ s·0x1000` (DRAM offset).
+pub const SMP_RING_OFF: u64 = 0x36_0000;
+/// SMP: merged result block `[magic, mb0, mb1, mb2]` (DRAM offset).
+pub const SMP_RESULT_OFF: u64 = 0x3a_0000;
+/// SMP: engine-written CRC32 result word (DRAM offset).
+pub const SMP_CRC_RES_OFF: u64 = SMP_RESULT_OFF + 64;
+/// SMP: engine-written reduce-sum result word (DRAM offset).
+pub const SMP_SUM_RES_OFF: u64 = SMP_RESULT_OFF + 72;
+/// SMP: per-hart M-handler save area + completion counter (64 B stride,
+/// DRAM offset).
+const SMP_SCRATCH_OFF: u64 = 0x3c_0000;
+/// SMP: shared Sv39 root page built by hart 0 (DRAM offset).
+const SMP_ROOT_OFF: u64 = 0x3e_0000;
+/// SMP: per-slot mailbox line (64 B stride, SPM offset). Single-writer:
+/// only the slot's owner hart ever stores to its line, so write-back
+/// granularity can never mix two harts' data.
+pub const SMP_MAILBOX_OFF: u64 = 0x800;
+/// Magic the SMP merge publishes on a clean run.
+pub const SMP_MAGIC: u64 = 0x534d_5000;
+/// Base token of a mailbox word (the slot's completion count is added).
+pub const SMP_MAILBOX_TOKEN: u64 = 0x4d42_0000;
+/// Fixed slot topology of the SMP workload: `[matmul, crc, reduce]`.
+pub const SMP_SLOTS: usize = 3;
+/// Matmul tile dimension of the headline workload (operands are `n×n`
+/// f32).
+pub const SMP_MM_N: u32 = 8;
+/// Descriptor jobs every SMP slot retires per submission round (uniform
+/// across slots, so owner-side relay work is proportional to slot
+/// ownership — the quantity the hart-scaling bench measures). Must stay
+/// a power of two: the generated code forms `TAIL` with a shift.
+pub const SMP_SLOT_JOBS: u32 = 2;
+
+/// Descriptor jobs carried by SMP slot `s` per round.
+pub fn smp_slot_jobs(s: usize) -> u32 {
+    let _ = s;
+    SMP_SLOT_JOBS
+}
+
+/// The hart that owns SMP slot `s` when `harts` harts are online
+/// (round-robin, so the work split is a pure function of the hart count).
+pub fn smp_slot_owner(s: usize, harts: usize) -> usize {
+    s % harts.max(1)
+}
+
+/// Mailbox word the owner of slot `s` publishes on completion: the token
+/// plus the slot's architectural `COMPLETED` count after `rounds` rounds.
+pub fn smp_mailbox_word(s: usize, rounds: u32) -> u64 {
+    SMP_MAILBOX_TOKEN + (rounds * smp_slot_jobs(s)) as u64
+}
+
+/// Knobs of the generalized SMP program ([`smp_program_with`]); the
+/// headline workload is `SmpParams::headline(harts, len)`.
+#[derive(Debug, Clone, Copy)]
+pub struct SmpParams {
+    /// Online hart count (1..=8).
+    pub harts: usize,
+    /// CRC/reduce payload bytes (u64-lane granular).
+    pub len: u32,
+    /// Submission rounds per owned slot (1..=1024). Each round re-posts
+    /// the same ring descriptors by bumping `TAIL` and re-ringing the
+    /// doorbell, so total completions per slot are
+    /// `rounds · SMP_SLOT_JOBS` for any hart count.
+    pub rounds: u32,
+    /// Matmul tile dimension (even, 2..=512). The bench shrinks it so
+    /// per-job engine time stays below the per-job relay software time —
+    /// the regime where hart count governs aggregate throughput.
+    pub mm_n: u32,
+    /// Descriptors posted per slot per round (a power of two, 1..=64;
+    /// the generated code forms `TAIL` with a shift). With `jobs: 1` a
+    /// slot's next descriptor is only ever posted after the owner's
+    /// relay counted the previous completion — the shape the bench uses,
+    /// where the owner-side round trip is the unit being measured.
+    pub jobs: u32,
+}
+
+impl SmpParams {
+    /// The headline scenario shape: one round of `SMP_SLOT_JOBS`
+    /// descriptors per slot, `SMP_MM_N` tiles.
+    pub fn headline(harts: usize, len: u32) -> Self {
+        Self { harts, len, rounds: 1, mm_n: SMP_MM_N, jobs: SMP_SLOT_JOBS }
+    }
+}
+
+/// The SMP workload: the multi-hart headline scenario. Hart 0 boots,
+/// builds a *shared* three-gigapage Sv39 identity table, releases the
+/// secondary harts with MSIP IPIs, and every online hart drops to S-mode
+/// under the same root. The three DSA slots (`[matmul, crc, reduce]`)
+/// are divided round-robin among the harts; each owner queues its slots'
+/// descriptors, enables the slots' PLIC sources *only in its own
+/// M context* (per-hart IRQ affinity), and sleeps in the race-free `wfi`
+/// idiom until its own M-mode relay has counted every owned completion.
+///
+/// Results merge through a fenced SPM mailbox: each owner stores one
+/// 64-byte line per owned slot (`token + COMPLETED`), fences, and hart 0
+/// gathers the lines in fixed slot order into the DRAM result block —
+/// so the architectural output (UART signature, result block, mailbox
+/// lines, engine-written tiles) is bit-identical for any hart count.
+/// Secondaries park in `wfi` after publishing; hart 0 halts on `ebreak`.
+///
+/// The split depends only on the hart count, each DSA slot/ring/mailbox
+/// line has exactly one writer, inter-hart ordering is `fence`-based
+/// software coherence over the shared LLC (no A extension), and the
+/// merge order is fixed — the three pillars of the hart-count-invariance
+/// guarantee the determinism battery checks.
+pub fn smp_program(base: u64, harts: usize, len: u32) -> Vec<u8> {
+    smp_program_with(base, SmpParams::headline(harts, len))
+}
+
+/// [`smp_program`] with every knob exposed (see [`SmpParams`]). The
+/// hart-scaling bench uses small tiles/payloads and many rounds, so
+/// per-round owner software (IRQ relay, `TAIL` bump, doorbell) — the
+/// part that parallelizes across harts — dominates engine time.
+pub fn smp_program_with(base: u64, p: SmpParams) -> Vec<u8> {
+    let SmpParams { harts, len, rounds, mm_n, jobs } = p;
+    assert!(base == DRAM_BASE, "smp workload is linked for DRAM_BASE");
+    assert!((1..=8).contains(&harts), "hart count out of range");
+    assert!(len >= 8 && len % 8 == 0, "slot payload is u64-lane granular");
+    assert!((len as u64) <= SMP_MM_A_OFF - SMP_SRC_OFF, "source fits its window");
+    assert!((1..=1024).contains(&rounds), "round count out of range");
+    assert!((2..=512).contains(&mm_n) && mm_n % 2 == 0, "matmul tile must be even");
+    assert!((1..=64).contains(&jobs) && jobs.is_power_of_two(), "jobs per round");
+    let root = base + SMP_ROOT_OFF;
+    let scratch = base + SMP_SCRATCH_OFF;
+    let src = base + SMP_SRC_OFF;
+    let result = base + SMP_RESULT_OFF;
+    let claim_base = (PLIC_BASE + 0x20_0004) as i64;
+    let ring = |s: usize| base + SMP_RING_OFF + s as u64 * 0x1000;
+    let win = |s: usize| DSA_BASE + s as u64 * DSA_WIN_SIZE;
+    let mailbox = |s: usize| SPM_BASE + SMP_MAILBOX_OFF + 64 * s as u64;
+
+    let mut a = Asm::new(base);
+    // ---- entry (every hart): hart 0 runs the platform bring-up; the
+    // secondaries arrive here later, released from the boot-ROM park ----
+    a.csrrs(T3, 0xf14, ZERO); // mhartid
+    a.bne(T3, ZERO, "common");
+    // ---- hart 0 M firmware: the one shared Sv39 identity table ----
+    a.li(S0, root as i64);
+    a.mv(T0, S0);
+    a.li(T1, 0x1000);
+    a.add(T1, T0, T1);
+    a.label("pt_clr");
+    a.sd(ZERO, T0, 0);
+    a.addi(T0, T0, 8);
+    a.blt(T0, T1, "pt_clr");
+    a.li(T0, LEAF as i64); // root[0]: PA 0 (boot ROM, CLINT, Regbus, PLIC)
+    a.sd(T0, S0, 0);
+    a.li(T0, (((0x4000_0000u64 >> 12) << 10) | LEAF as u64) as i64); // SPM + DSA
+    a.sd(T0, S0, 8);
+    a.li(T0, (((0x8000_0000u64 >> 12) << 10) | LEAF as u64) as i64); // DRAM
+    a.sd(T0, S0, 16);
+    a.fence(); // PTEs reach the shared LLC before any secondary walks them
+    // ---- release the secondaries: one MSIP doorbell per hart ----
+    a.li(S1, CLINT_BASE as i64);
+    for h in 1..harts {
+        a.li(T0, 1);
+        a.sw(T0, S1, (4 * h) as i32);
+    }
+    // ---- per-hart M init (every hart; T3 = mhartid) ----
+    a.label("common");
+    a.slli(T0, T3, 6); // 64 B save/counter block per hart
+    a.li(T1, scratch as i64);
+    a.add(T0, T0, T1);
+    a.csrrw(ZERO, 0x340, T0); // mscratch → own block
+    a.sd(ZERO, T0, 32); // completion counter = 0
+    a.li(T0, 1 << 1);
+    a.csrrw(ZERO, 0x303, T0); // mideleg: SSI → S
+    a.la(T0, "m_handler");
+    a.csrrw(ZERO, 0x305, T0); // mtvec
+    a.la(T0, "s_trap");
+    a.csrrw(ZERO, 0x105, T0); // stvec
+    a.la(T0, "s_entry");
+    a.csrrw(ZERO, 0x141, T0); // mepc
+    a.li(T0, (1 << 11) | (1 << 1));
+    a.csrrw(ZERO, 0x304, T0); // mie = MEIE | SSIE
+    a.li(T0, ((8u64 << 60) | (root >> 12)) as i64);
+    a.csrrw(ZERO, 0x180, T0); // satp: hart 0's table, every hart
+    a.sfence_vma(ZERO, ZERO);
+    a.mv(S10, T3); // hartid for S-mode (mhartid is M-only)
+    a.li(T0, (1 << 11) | (1 << 1)); // MPP = S, SIE = 1
+    a.csrrs(ZERO, 0x300, T0);
+    a.mret();
+
+    // ---- M external handler: the per-hart DSA-completion relay. Same
+    // shape as the hetero workload's, except the claim/complete register
+    // is computed from `mhartid` — each hart claims through its *own*
+    // M context (ctx 2·hart), so affinity-routed completions are claimed
+    // exactly once by their owner and counted in the owner's block.
+    a.label("m_handler");
+    a.csrrw(T6, 0x340, T6); // t6 ↔ mscratch (t6 = &own save area)
+    a.sd(T4, T6, 0);
+    a.sd(T5, T6, 8);
+    a.sd(GP, T6, 16);
+    a.csrrs(T4, 0xf14, ZERO);
+    a.slli(T4, T4, 13); // × 0x2000: claim stride of M context 2·hart
+    a.li(T5, claim_base);
+    a.add(T4, T4, T5); // this hart's claim/complete register
+    a.lw(GP, T4, 0); // claim (1-based source id; 0 = spurious)
+    a.beq(GP, ZERO, "mh_out");
+    a.sd(T4, T6, 24); // park the claim address across the W1C
+    a.addi(T5, GP, -4); // slot index (DSA sources start at 3, ids at 4)
+    a.slli(T5, T5, 24); // × DSA_WIN_SIZE (16 MiB)
+    a.li(T4, DSA_BASE as i64);
+    a.add(T5, T5, T4); // slot window base
+    a.li(T4, 1);
+    a.sw(T4, T5, 0x24); // IRQ_CAUSE W1C → level line drops
+    a.ld(T4, T6, 24);
+    a.sw(GP, T4, 0); // complete (line already low: no re-pend)
+    a.ld(T4, T6, 32); // own completions++
+    a.addi(T4, T4, 1);
+    a.sd(T4, T6, 32);
+    a.csrrsi(ZERO, 0x344, 2); // mip.SSIP = 1 → delegated wake for S
+    a.label("mh_out");
+    a.ld(GP, T6, 16);
+    a.ld(T5, T6, 8);
+    a.ld(T4, T6, 0);
+    a.csrrw(T6, 0x340, T6);
+    a.mret();
+
+    // ---- S trap handler: consume the delegated completion wake (the
+    // per-hart counter in memory is authoritative) ----
+    a.label("s_trap");
+    a.csrrci(ZERO, 0x144, 2); // sip.SSIP = 0
+    a.sret();
+
+    // ---- S-mode dispatch: S10 carries the hartid across the mret ----
+    // Register discipline (the M relay may preempt any S code): S main
+    // uses t0/t1 + s-registers only; `li` may scratch t6, which the
+    // relay round-trips through mscratch.
+    a.label("s_entry");
+    for h in 1..harts {
+        a.li(T0, h as i64);
+        a.beq(S10, T0, &format!("work{h}"));
+    }
+    for h in 0..harts {
+        a.label(&format!("work{h}"));
+        let owned: Vec<usize> =
+            (0..SMP_SLOTS).filter(|&s| smp_slot_owner(s, harts) == h).collect();
+        if !owned.is_empty() {
+            // IRQ affinity: owned sources enabled in *this hart's* M
+            // context only (enable word of ctx 2·h)
+            let mask: i64 = owned.iter().map(|&s| 1i64 << (3 + s)).sum();
+            a.li(T0, (PLIC_BASE + 0x2000 + 0x100 * h as u64) as i64);
+            a.li(T1, mask);
+            a.sw(T1, T0, 0);
+            // descriptors for every owned slot (cached stores) ...
+            for &s in &owned {
+                a.li(S1, ring(s) as i64);
+                for j in 0..jobs {
+                    let off = (32 * j) as i32;
+                    match s {
+                        0 => {
+                            // accumulating MATMUL: C ← A·B + C per job
+                            a.li(T0, 1 | ((mm_n as i64) << 16));
+                            a.sd(T0, S1, off);
+                            a.li(T0, (base + SMP_MM_A_OFF) as i64);
+                            a.sd(T0, S1, off + 8);
+                            a.li(T0, (base + SMP_MM_B_OFF) as i64);
+                            a.sd(T0, S1, off + 16);
+                            a.li(T0, (base + SMP_MM_C_OFF) as i64);
+                            a.sd(T0, S1, off + 24);
+                        }
+                        1 => {
+                            a.li(T0, 2); // opcode CRC32
+                            a.sd(T0, S1, off);
+                            a.li(T0, src as i64);
+                            a.sd(T0, S1, off + 8);
+                            a.li(T0, (base + SMP_CRC_RES_OFF) as i64);
+                            a.sd(T0, S1, off + 16);
+                            a.li(T0, len as i64);
+                            a.sd(T0, S1, off + 24);
+                        }
+                        _ => {
+                            a.li(T0, 3); // opcode REDUCE_SUM
+                            a.sd(T0, S1, off);
+                            a.li(T0, src as i64);
+                            a.sd(T0, S1, off + 8);
+                            a.li(T0, (base + SMP_SUM_RES_OFF) as i64);
+                            a.sd(T0, S1, off + 16);
+                            a.li(T0, len as i64);
+                            a.sd(T0, S1, off + 24);
+                        }
+                    }
+                }
+            }
+            a.fence(); // descriptors visible to the engines' ring fetches
+            // ... then static ring registers (uncached MMIO; TAIL and the
+            // doorbell are per-round, below)
+            for &s in &owned {
+                a.li(S0, win(s) as i64);
+                a.li(T0, 1);
+                a.sw(T0, S0, 0x20); // IRQ_ENA
+                a.li(T0, ring(s) as u32 as i64);
+                a.sw(T0, S0, 0x04); // RING_LO
+                a.sw(ZERO, S0, 0x08); // RING_HI
+                a.li(T0, jobs as i64);
+                a.sw(T0, S0, 0x0c); // RING_SZ
+            }
+            // ---- submission rounds: TAIL and HEAD are free-running, so
+            // re-posting the same descriptors is one TAIL bump + doorbell
+            // per slot (the ring wraps modulo RING_SZ). s7 = rounds
+            // issued, s9 = cumulative completion target. ----
+            let shift = jobs.trailing_zeros() as u8;
+            a.li(S7, 0);
+            a.li(S9, 0);
+            a.li(S6, (scratch + 64 * h as u64) as i64);
+            a.label(&format!("round{h}"));
+            a.addi(S7, S7, 1);
+            for &s in &owned {
+                a.li(S0, win(s) as i64);
+                a.slli(T0, S7, shift); // TAIL = rounds · jobs
+                a.sw(T0, S0, 0x14); // TAIL
+                a.sw(T0, S0, 0x18); // DOORBELL
+            }
+            a.addi(S9, S9, owned.len() as i32 * jobs as i32);
+            // sleep until the relay has counted this round's completions
+            // (race-free: SIE clear across the check, wfi wakes on
+            // pending-and-enabled, delivery only in the explicit SIE
+            // window)
+            a.label(&format!("wait{h}"));
+            a.csrrci(ZERO, 0x100, 2);
+            a.ld(T1, S6, 32);
+            a.bge(T1, S9, &format!("wdone{h}"));
+            a.wfi();
+            a.csrrsi(ZERO, 0x100, 2);
+            a.j(&format!("wait{h}"));
+            a.label(&format!("wdone{h}"));
+            a.csrrsi(ZERO, 0x100, 2);
+            a.li(T0, rounds as i64);
+            a.blt(S7, T0, &format!("round{h}"));
+        }
+        // publish one mailbox line per owned slot: token + COMPLETED
+        // (the count is architectural, not timing-dependent), then fence
+        // the lines out of the L1 into the shared LLC
+        for &s in &owned {
+            a.li(S1, win(s) as i64);
+            a.lw(T0, S1, 0x28); // COMPLETED
+            a.li(T1, SMP_MAILBOX_TOKEN as i64);
+            a.add(T0, T0, T1);
+            a.li(S1, mailbox(s) as i64);
+            a.sd(T0, S1, 0);
+        }
+        if !owned.is_empty() {
+            a.fence();
+        }
+        if h == 0 {
+            // ---- hart 0: gather the mailboxes in fixed slot order ----
+            for s in 0..SMP_SLOTS {
+                a.label(&format!("mwait{s}"));
+                a.fence(); // drop stale copies: re-read the line from the LLC
+                a.li(T1, mailbox(s) as i64);
+                a.ld(T0, T1, 0);
+                a.beq(T0, ZERO, &format!("mwait{s}"));
+            }
+            a.li(S1, result as i64);
+            a.li(T0, SMP_MAGIC as i64);
+            a.sd(T0, S1, 0);
+            for s in 0..SMP_SLOTS {
+                a.li(T1, mailbox(s) as i64);
+                a.ld(T0, T1, 0);
+                a.sd(T0, S1, 8 + 8 * s as i32);
+            }
+            a.fence();
+            // UART signature + halt
+            a.li(S1, UART_BASE as i64);
+            a.li(T0, b'S' as i64);
+            a.sw(T0, S1, 0);
+            a.label("udrain");
+            a.lw(T1, S1, 0x08);
+            a.andi(T1, T1, 0x20);
+            a.beq(T1, ZERO, "udrain");
+            a.ebreak();
+        } else {
+            // ---- secondaries: nothing left pending-and-enabled, so the
+            // park is quiescent and the scheduler may elide across it ----
+            a.label(&format!("park{h}"));
+            a.wfi();
+            a.j(&format!("park{h}"));
+        }
+    }
+    a.finish()
+}
+
 /// Reference double-precision 2MM used to verify the simulated run.
 pub fn twomm_reference(n: usize, a: &[f64], b: &[f64], c: &[f64]) -> Vec<f64> {
     let mut e = vec![0.0; n * n];
@@ -972,6 +1370,122 @@ mod tests {
         assert!(soc.stats.get("cpu.wfi_cycles") > 0, "the core slept between stages");
         assert!(soc.stats.get("cpu.instr_s") > 0, "queuing ran in S-mode");
         assert_eq!(soc.stats.get("rpc.dev_violations"), 0);
+    }
+
+    /// The SMP scenario end to end, and the headline guarantee: the
+    /// architectural output (UART signature, merged result block, SPM
+    /// mailbox lines, engine-written tiles/words) is bit-identical for
+    /// 1, 2 and 4 harts, while the secondaries demonstrably did the
+    /// work (per-hart instruction and IRQ stats are non-zero).
+    #[test]
+    fn smp_program_is_hart_count_invariant() {
+        use crate::dsa::{crc::crc32, reduce::reduce_sum};
+        use crate::platform::config::{DsaKind, DsaSlot};
+        let len = 2048u32;
+        let src: Vec<u8> =
+            (0..len).map(|i| (i.wrapping_mul(97).wrapping_add(5) >> 2) as u8).collect();
+        let tile = |seed: f32| -> Vec<u8> {
+            (0..SMP_MM_N * SMP_MM_N)
+                .flat_map(|i| (((i as f32 * 0.43 + seed) % 2.0) - 1.0).to_le_bytes())
+                .collect()
+        };
+        let run = |harts: usize| {
+            let mut cfg = CheshireConfig::neo();
+            cfg.harts = harts;
+            cfg.dsa_slots = vec![
+                DsaSlot::local(DsaKind::Matmul),
+                DsaSlot::local(DsaKind::Crc),
+                DsaSlot::local(DsaKind::Reduce),
+            ];
+            let mut soc = Soc::new(cfg);
+            soc.dram_write(SMP_SRC_OFF as usize, &src);
+            soc.dram_write(SMP_MM_A_OFF as usize, &tile(1.0));
+            soc.dram_write(SMP_MM_B_OFF as usize, &tile(2.0));
+            let img = smp_program(DRAM_BASE, harts, len);
+            soc.preload(&img, DRAM_BASE);
+            soc.run(20_000_000);
+            assert!(soc.cpu.halted, "smp({harts}) must halt (pc={:#x})", soc.cpu.core.pc);
+            soc.run_cycles(5_000); // drain posted writes to the DRAM device
+            (
+                soc.uart.borrow().tx_string(),
+                soc.dram_read(SMP_RESULT_OFF as usize, 80).to_vec(),
+                soc.dram_read(SMP_MM_C_OFF as usize, (SMP_MM_N * SMP_MM_N * 4) as usize)
+                    .to_vec(),
+                soc.spm_read(SMP_MAILBOX_OFF as usize, 64 * SMP_SLOTS).to_vec(),
+                soc.stats.clone(),
+            )
+        };
+        let (u1, r1, c1, m1, s1) = run(1);
+        let word = |r: &[u8], i: usize| {
+            u64::from_le_bytes(r[i * 8..(i + 1) * 8].try_into().unwrap())
+        };
+        assert_eq!(u1, "S", "UART signature");
+        assert_eq!(word(&r1, 0), SMP_MAGIC, "clean completion magic");
+        for s in 0..SMP_SLOTS {
+            assert_eq!(word(&r1, 1 + s), smp_mailbox_word(s, 1), "mailbox word of slot {s}");
+        }
+        assert_eq!(word(&r1, 8), crc32(&src) as u64, "engine CRC");
+        assert_eq!(word(&r1, 9), reduce_sum(&src), "engine sum");
+        assert!(c1.iter().any(|&b| b != 0), "matmul accumulator written");
+        assert_eq!(
+            s1.get("dsa.jobs"),
+            (SMP_SLOTS as u32 * SMP_SLOT_JOBS) as u64,
+            "all descriptors ran"
+        );
+        for harts in [2usize, 4] {
+            let (u, r, c, m, st) = run(harts);
+            assert_eq!(u, u1, "UART identical at {harts} harts");
+            assert_eq!(r, r1, "result block identical at {harts} harts");
+            assert_eq!(c, c1, "matmul tile identical at {harts} harts");
+            assert_eq!(m, m1, "mailboxes identical at {harts} harts");
+            assert_eq!(st.get("dsa.jobs"), s1.get("dsa.jobs"));
+            assert!(st.get("cpu1.instr") > 0, "hart 1 retired work at {harts} harts");
+            assert!(st.get("cpu1.instr_s") > 0, "hart 1 reached S-mode");
+            assert!(
+                st.get("cpu1.irq_taken") > 0,
+                "hart 1 took its affinity-routed completion IRQ"
+            );
+        }
+    }
+
+    /// The multi-round submission path the hart-scaling bench drives:
+    /// each round re-posts the same ring descriptors with a TAIL bump +
+    /// doorbell, so completions (and mailbox words) scale with the round
+    /// count — and the total is still hart-count-invariant.
+    #[test]
+    fn smp_rounds_repost_rings_and_scale_completions() {
+        use crate::platform::config::{DsaKind, DsaSlot};
+        let p = |harts: usize| SmpParams { harts, len: 64, rounds: 3, mm_n: 4, jobs: SMP_SLOT_JOBS };
+        let run = |harts: usize| {
+            let mut cfg = CheshireConfig::neo();
+            cfg.harts = harts;
+            cfg.dsa_slots = vec![
+                DsaSlot::local(DsaKind::Matmul),
+                DsaSlot::local(DsaKind::Crc),
+                DsaSlot::local(DsaKind::Reduce),
+            ];
+            let mut soc = Soc::new(cfg);
+            soc.dram_write(SMP_SRC_OFF as usize, &[7u8; 64]);
+            soc.dram_write(SMP_MM_A_OFF as usize, &1.0f32.to_le_bytes().repeat(16));
+            soc.dram_write(SMP_MM_B_OFF as usize, &0.5f32.to_le_bytes().repeat(16));
+            soc.preload(&smp_program_with(DRAM_BASE, p(harts)), DRAM_BASE);
+            soc.run(20_000_000);
+            assert!(soc.cpu.halted, "smp-rounds({harts}) must halt (pc={:#x})", soc.cpu.core.pc);
+            soc.run_cycles(5_000);
+            (soc.dram_read(SMP_RESULT_OFF as usize, 32).to_vec(), soc.stats.get("dsa.jobs"))
+        };
+        let (r1, jobs1) = run(1);
+        let word = |r: &[u8], i: usize| {
+            u64::from_le_bytes(r[i * 8..(i + 1) * 8].try_into().unwrap())
+        };
+        assert_eq!(word(&r1, 0), SMP_MAGIC);
+        for s in 0..SMP_SLOTS {
+            assert_eq!(word(&r1, 1 + s), smp_mailbox_word(s, 3), "slot {s}: 3 rounds counted");
+        }
+        assert_eq!(jobs1, (3 * SMP_SLOTS as u32 * SMP_SLOT_JOBS) as u64);
+        let (r2, jobs2) = run(2);
+        assert_eq!(r2, r1, "result block is hart-count-invariant across rounds");
+        assert_eq!(jobs2, jobs1);
     }
 
     #[test]

@@ -246,6 +246,42 @@ fn hetero_sweeps_deterministically_across_slot_topologies() {
     assert!(json.contains("\"dsa_slots\": \"reduce+crc@d2d\""), "topology in the JSON report");
 }
 
+/// The SMP cluster in the sweep grid: the multi-hart scenario across the
+/// new `--harts` axis, with the parallel ≡ serial determinism contract
+/// extended over the new scenario class, per-hart stat namespaces
+/// populated, and the hart count visible in names and JSON.
+#[test]
+fn smp_sweeps_deterministically_across_hart_counts() {
+    let mut g = SweepGrid::new(CheshireConfig::neo());
+    g.workloads = vec![Workload::Smp { kib: 2 }];
+    g.harts = vec![1, 2, 4];
+    g.max_cycles = 20_000_000;
+    assert_eq!(g.len(), 3);
+    let par = harness::run_parallel(g.scenarios(), 3);
+    let ser = harness::run_serial(g.scenarios());
+    for (p, s) in par.iter().zip(&ser) {
+        assert_eq!(p.name, s.name);
+        assert_eq!(p.cycles, s.cycles, "{}: parallel≡serial cycles", p.name);
+        let pv: Vec<_> = p.stats.iter().collect();
+        let sv: Vec<_> = s.stats.iter().collect();
+        assert_eq!(pv, sv, "{}: parallel≡serial stats", p.name);
+        assert!(p.halted, "{}: smp halts", p.name);
+        assert_eq!(p.stats.get("dsa.jobs"), 6, "{}: all descriptors completed", p.name);
+        assert_eq!(p.stats.get("rpc.dev_violations"), 0, "{}", p.name);
+    }
+    assert_eq!(SweepReport::new(par.clone()).to_json_arch(), SweepReport::new(ser).to_json_arch());
+    let (h1, h2, h4) = (&par[0], &par[1], &par[2]);
+    assert_eq!(h1.harts, 1);
+    assert!(h2.name.ends_with("/h2"), "{}", h2.name);
+    assert!(h4.name.ends_with("/h4"), "{}", h4.name);
+    // secondaries really ran: per-hart namespaces beyond cpu0 are live
+    assert_eq!(h1.stats.get("cpu1.instr"), 0, "one hart: no cpu1 namespace activity");
+    assert!(h2.stats.get("cpu1.instr") > 0, "two harts: hart 1 retired instructions");
+    assert!(h4.stats.get("cpu2.instr") > 0, "four harts: hart 2 retired instructions");
+    let json = SweepReport::new(par).to_json();
+    assert!(json.contains("\"harts\": 4"), "hart count lands in the JSON report");
+}
+
 #[test]
 fn oversubscribed_thread_count_is_harmless() {
     // more threads than scenarios, and threads == 1, both work

@@ -797,3 +797,141 @@ mod d2d_transparency {
         });
     }
 }
+
+/// The SMP determinism battery: for random (hart-count, payload,
+/// backend, MSHR) points of the `smp` scenario, (a) an elided and an
+/// unelided run are architecturally bit-identical — full DRAM/SPM
+/// images, UART, halt cycle, every non-`sched.*` stat — at that fixed
+/// hart count, and (b) the *architectural output contract* (UART, merged
+/// result block, mailbox lines, engine-written regions) is bit-identical
+/// across hart counts. Full-image identity across hart counts is not
+/// claimed: the program text embeds the hart count and each hart has its
+/// own scratch block.
+mod smp_equivalence {
+    use cheshire::harness::Workload;
+    use cheshire::platform::config::{parse_slots, MemBackend};
+    use cheshire::platform::memmap::DRAM_BASE;
+    use cheshire::platform::{CheshireConfig, Soc};
+    use cheshire::sim::prop::{cases, Rng};
+    use cheshire::workloads::{
+        smp_mailbox_word, SMP_MAGIC, SMP_MAILBOX_OFF, SMP_RESULT_OFF, SMP_SLOTS,
+    };
+
+    /// FNV-1a over a byte slice — cheap full-memory fingerprint.
+    fn fnv(bytes: &[u8]) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
+    /// Everything architecturally observable about one finished run.
+    #[derive(Debug, PartialEq)]
+    struct Fingerprint {
+        cycles: u64,
+        halted: bool,
+        uart: String,
+        dram_fnv: u64,
+        spm_fnv: u64,
+        arch_stats: Vec<(&'static str, u64)>,
+    }
+
+    /// The cross-hart-count output contract: only regions with a
+    /// hart-count-independent single writer.
+    #[derive(Debug, PartialEq)]
+    struct Contract {
+        uart: String,
+        result: Vec<u8>,
+        mailboxes: Vec<u8>,
+    }
+
+    fn run_smp(
+        harts: usize,
+        kib: u32,
+        backend: MemBackend,
+        mshrs: usize,
+        elide: bool,
+    ) -> (Fingerprint, Contract, u64) {
+        let mut cfg = CheshireConfig::neo();
+        cfg.harts = harts;
+        cfg.backend = backend;
+        cfg.llc_mshrs = mshrs;
+        cfg.elide_idle = elide;
+        cfg.dsa_slots = parse_slots("matmul+crc+reduce").unwrap();
+        let wl = Workload::Smp { kib };
+        let mut soc = Soc::new(cfg);
+        let img = wl.stage(&mut soc);
+        soc.preload(&img, DRAM_BASE);
+        let cycles = soc.run(20_000_000);
+        assert!(soc.cpu.halted, "smp({harts}) must halt (pc={:#x})", soc.cpu.core.pc);
+        soc.run_cycles(5_000); // drain posted writes to the DRAM device
+        let fp = Fingerprint {
+            cycles,
+            halted: soc.cpu.halted,
+            uart: soc.uart.borrow().tx_string(),
+            dram_fnv: fnv(soc.dram_raw()),
+            spm_fnv: fnv(soc.llc.spm_raw()),
+            arch_stats: soc.stats.iter().filter(|(k, _)| !k.starts_with("sched.")).collect(),
+        };
+        let contract = Contract {
+            uart: soc.uart.borrow().tx_string(),
+            result: soc.dram_read(SMP_RESULT_OFF as usize, 80).to_vec(),
+            mailboxes: soc.spm_read(SMP_MAILBOX_OFF as usize, 64 * SMP_SLOTS).to_vec(),
+        };
+        (fp, contract, soc.stats.get("sched.elided_cycles"))
+    }
+
+    #[test]
+    fn smp_runs_are_deterministic_across_elision_and_hart_count() {
+        cases(3, 0x53_4d50, |rng: &mut Rng| {
+            let kib = rng.range(1, 4) as u32;
+            let backend = if rng.bool() { MemBackend::Rpc } else { MemBackend::HyperRam };
+            let mshrs = *rng.pick(&[1usize, 4]);
+            let mut contracts = Vec::new();
+            for harts in [1usize, 2, 4] {
+                let (on, c_on, _) = run_smp(harts, kib, backend, mshrs, true);
+                let (off, c_off, off_elided) = run_smp(harts, kib, backend, mshrs, false);
+                assert_eq!(
+                    on, off,
+                    "smp/h{harts}/{backend}/mshr{mshrs}: elided ≡ unelided, bit for bit"
+                );
+                assert_eq!(c_on, c_off);
+                assert_eq!(off_elided, 0, "--no-elide must elide nothing");
+                contracts.push((harts, c_on));
+            }
+            let (_, base) = &contracts[0];
+            for (harts, c) in &contracts[1..] {
+                assert_eq!(
+                    c, base,
+                    "smp output contract at {harts} harts differs from 1 hart"
+                );
+            }
+        });
+        // the battery must not hold vacuously: a multi-hart run with
+        // parked secondaries elides idle spans
+        let (_, _, elided) = run_smp(4, 2, MemBackend::Rpc, 4, true);
+        assert!(elided > 0, "elision engaged on the 4-hart run ({elided} cycles)");
+    }
+
+    /// 1-hart sanity: the scenario collapses to the classic single-core
+    /// flow and still produces the full (correct) output contract.
+    #[test]
+    fn one_hart_smp_produces_the_full_contract() {
+        let (fp, c, _) = run_smp(1, 2, MemBackend::Rpc, 4, true);
+        assert!(fp.halted);
+        assert_eq!(c.uart, "S");
+        let word = |b: &[u8], i: usize| {
+            u64::from_le_bytes(b[i * 8..(i + 1) * 8].try_into().unwrap())
+        };
+        assert_eq!(word(&c.result, 0), SMP_MAGIC);
+        for s in 0..SMP_SLOTS {
+            assert_eq!(word(&c.result, 1 + s), smp_mailbox_word(s, 1), "slot {s}");
+            assert_eq!(word(&c.mailboxes, 8 * s), smp_mailbox_word(s, 1), "mailbox line {s}");
+        }
+        let get = |k: &str| fp.arch_stats.iter().find(|(n, _)| *n == k).map_or(0, |(_, v)| *v);
+        assert_eq!(get("dsa.jobs"), 6, "all six descriptors completed");
+        assert_eq!(get("rpc.dev_violations"), 0);
+    }
+}
