@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Schema checker for the simulator's Chrome/Perfetto trace exports.
+
+Validates that a ``--trace`` output file is well-formed trace-event JSON
+of the shape Perfetto (https://ui.perfetto.dev) loads directly:
+
+* the document is an object with a ``traceEvents`` list;
+* every record is an object with a ``ph`` of ``M`` (metadata), ``i``
+  (instant) or ``X`` (complete span), integer ``pid``/``tid``, and a
+  string ``name``;
+* non-metadata records carry a non-negative numeric ``ts`` (simulated
+  microseconds) and an ``args.cycle`` raw cycle stamp; spans also carry
+  a non-negative ``dur``;
+* metadata names every (pid, tid) the event records use;
+* the event taxonomy covers the platform: each category listed in
+  ``--require-cats`` (default: the subsystems the observability layer
+  instruments) appears at least once.
+
+Stdlib only — the CI container has no third-party packages.
+
+Usage: check_trace.py TRACE.json [TRACE2.json ...]
+                      [--require-cats irq,dsa,llc,cpu,sched]
+"""
+
+import json
+import sys
+
+DEFAULT_REQUIRED_CATS = ["irq", "dsa", "llc", "cpu", "sched"]
+
+
+def fail(path, msg):
+    print(f"check_trace: {path}: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_file(path, required_cats):
+    with open(path, "r", encoding="utf-8") as f:
+        try:
+            doc = json.load(f)
+        except json.JSONDecodeError as e:
+            fail(path, f"not valid JSON: {e}")
+
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        fail(path, "top level must be an object with a traceEvents list")
+    events = doc["traceEvents"]
+    if not isinstance(events, list) or not events:
+        fail(path, "traceEvents must be a non-empty list")
+
+    named = set()  # (pid, tid) pairs given a thread_name metadata record
+    used = set()  # (pid, tid) pairs used by actual events
+    cats = set()
+    for i, e in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(e, dict):
+            fail(path, f"{where}: record is not an object")
+        ph = e.get("ph")
+        if ph not in ("M", "i", "X"):
+            fail(path, f"{where}: ph must be M/i/X, got {ph!r}")
+        if not isinstance(e.get("name"), str) or not e["name"]:
+            fail(path, f"{where}: missing name")
+        for key in ("pid", "tid"):
+            if not isinstance(e.get(key), int) or e[key] < 0:
+                fail(path, f"{where}: {key} must be a non-negative integer")
+        if ph == "M":
+            if e["name"] == "thread_name":
+                named.add((e["pid"], e["tid"]))
+            continue
+        used.add((e["pid"], e["tid"]))
+        cat = e.get("cat")
+        if not isinstance(cat, str) or not cat:
+            fail(path, f"{where}: event records need a non-empty cat")
+        cats.add(cat)
+        ts = e.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            fail(path, f"{where}: ts must be a non-negative number, got {ts!r}")
+        args = e.get("args")
+        if not isinstance(args, dict) or not isinstance(args.get("cycle"), int):
+            fail(path, f"{where}: args.cycle (raw cycle stamp) missing")
+        if ph == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                fail(path, f"{where}: span dur must be a non-negative number")
+
+    unnamed = used - named
+    if unnamed:
+        fail(path, f"threads without thread_name metadata: {sorted(unnamed)}")
+    missing = [c for c in required_cats if c not in cats]
+    if missing:
+        fail(path, f"required categories missing: {missing} (have {sorted(cats)})")
+
+    n = sum(1 for e in events if e.get("ph") != "M")
+    print(f"check_trace: {path}: OK ({n} events, {len(used)} threads, "
+          f"categories: {', '.join(sorted(cats))})")
+
+
+def main(argv):
+    paths = []
+    required = DEFAULT_REQUIRED_CATS
+    it = iter(argv)
+    for a in it:
+        if a == "--require-cats":
+            required = [c for c in next(it, "").split(",") if c]
+        else:
+            paths.append(a)
+    if not paths:
+        print(__doc__, file=sys.stderr)
+        return 2
+    for p in paths:
+        check_file(p, required)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,80 @@
+//! Observability overhead guard — tracing must be free when disabled.
+//!
+//! Runs the hetero pipeline scenario three ways on one configuration:
+//! untraced (the default every sweep/bench runs with), traced, and
+//! untraced again (to bound same-process timing noise). Asserts the
+//! architectural contract — traced and untraced runs retire the same
+//! cycle count with bit-identical stats, and the traced run actually
+//! recorded events — and gates the *untraced* throughput against an
+//! absolute floor so a regression that slips overhead into the
+//! disabled-tracer path (an allocation, a clock read, a format) fails CI.
+//!
+//! Emits `BENCH_trace.json` (cwd): `{cycles, untraced_cps, traced_cps,
+//! trace_events, trace_bytes}`.
+//!
+//! The floor is deliberately generous (1.0 Mcyc/s; the simulator does
+//! tens of Mcyc/s on an idle machine) and overridable for throttled
+//! runners via `TRACE_BENCH_MIN_CPS`.
+
+use cheshire::harness::{Scenario, Workload};
+use cheshire::model::benchkit::{f2, Table};
+use cheshire::platform::config::parse_slots;
+use cheshire::platform::CheshireConfig;
+
+fn scenario() -> Scenario {
+    let mut cfg = CheshireConfig::neo();
+    cfg.dsa_slots = parse_slots("reduce+crc").unwrap();
+    Scenario::new(cfg, Workload::Hetero { kib: 16 }, 20_000_000)
+}
+
+fn main() {
+    let (r_cold, _) = scenario().run_with_trace(false);
+    let (r_traced, trace) = scenario().run_with_trace(true);
+    let (r_warm, _) = scenario().run_with_trace(false);
+    let trace = trace.expect("traced run returns its JSON");
+
+    // architectural contract: tracing is a pure observer
+    assert_eq!(r_cold.cycles, r_traced.cycles, "traced ≡ untraced cycle count");
+    assert_eq!(
+        r_cold.stats.iter().collect::<Vec<_>>(),
+        r_traced.stats.iter().collect::<Vec<_>>(),
+        "traced ≡ untraced stats, bit for bit"
+    );
+    let events = trace.matches("\"ph\": ").count();
+    assert!(events > 0, "the traced run recorded events");
+
+    let untraced_cps = r_cold.sim_cycles_per_sec().max(r_warm.sim_cycles_per_sec());
+    let traced_cps = r_traced.sim_cycles_per_sec();
+    let mut t = Table::new(
+        "Tracing overhead — hetero pipeline, 20 M-cycle cap",
+        &["mode", "cycles", "Mcyc/s"],
+    );
+    t.row(&["untraced".into(), r_cold.cycles.to_string(), f2(untraced_cps / 1e6)]);
+    t.row(&["traced".into(), r_traced.cycles.to_string(), f2(traced_cps / 1e6)]);
+    t.print();
+
+    let json = format!(
+        "{{\n  \"cycles\": {},\n  \"untraced_cps\": {},\n  \"traced_cps\": {},\n  \
+         \"trace_events\": {},\n  \"trace_bytes\": {}\n}}\n",
+        r_cold.cycles,
+        untraced_cps,
+        traced_cps,
+        events,
+        trace.len()
+    );
+    std::fs::write("BENCH_trace.json", &json).expect("write BENCH_trace.json");
+    println!("\nwritten: BENCH_trace.json ({events} trace records)");
+
+    // Wall-clock gate, overridable for heavily loaded/throttled runners
+    // (TRACE_BENCH_MIN_CPS=100000 etc.) without weakening the default.
+    let gate: f64 = std::env::var("TRACE_BENCH_MIN_CPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0e6);
+    assert!(
+        untraced_cps >= gate,
+        "untraced throughput fell below the floor: {untraced_cps:.0} < {gate:.0} cyc/s \
+         (disabled tracing must stay free)"
+    );
+    println!("untraced: {:.1} Mcyc/s (gate: ≥{:.1} Mcyc/s)", untraced_cps / 1e6, gate / 1e6);
+}

@@ -54,7 +54,8 @@ use crate::axi::port::AxiBus;
 use crate::axi::types::{beat_addr, Ar, Aw, Burst, Resp, B, R, W};
 use crate::cache::l1::{L1Cache, Probe, LINE};
 use crate::mem::Sram;
-use crate::sim::{Activity, Component, Cycle, Stats};
+use crate::sim::trace::pid;
+use crate::sim::{Activity, Component, Cycle, Stats, Tracer};
 use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::rc::Rc;
@@ -179,6 +180,8 @@ pub struct Llc {
     flushing: bool,
     /// Line-fill latency charged per LLC miss, on top of DRAM time.
     pub miss_penalty: u32,
+    /// Shared event tracer (disabled by default — emits are no-ops).
+    tracer: Tracer,
 }
 
 impl Llc {
@@ -197,10 +200,16 @@ impl Llc {
             pt_wr_ids: VecDeque::new(),
             flushing: false,
             miss_penalty: 2,
+            tracer: Tracer::default(),
             cfg,
             mask: mask.clone(),
         };
         (llc, mask)
+    }
+
+    /// Attach the platform's shared event tracer.
+    pub fn set_tracer(&mut self, tracer: &Tracer) {
+        self.tracer = tracer.clone();
     }
 
     fn mk_cache(cfg: &LlcCfg, mask: u32) -> Option<L1Cache> {
@@ -409,6 +418,7 @@ impl Llc {
                 continue;
             }
             let m = self.mshrs.remove(i);
+            self.tracer.instant("llc.mshr_retire", "llc", pid::LLC, m.slot as u32, m.line);
             let mut line = m.buf;
             line.resize(LINE, 0);
             if let Some(c) = self.cache.as_mut() {
@@ -563,12 +573,15 @@ impl Llc {
     /// the line has an MSHR; `false` means the file is full and the caller
     /// must retry after a completion.
     fn ensure_mshr(&mut self, line: u64, stats: &mut Stats) -> bool {
-        if self.mshrs.iter().any(|m| m.line == line) {
+        if let Some(m) = self.mshrs.iter().find(|m| m.line == line) {
             stats.bump("llc.mshr_merge");
+            self.tracer.instant("llc.mshr_merge", "llc", pid::LLC, m.slot as u32, line);
             return true;
         }
         if self.alloc_mshr(line) {
             stats.bump("llc.mshr_alloc");
+            let slot = self.mshrs.last().map(|m| m.slot).unwrap_or(0);
+            self.tracer.instant("llc.mshr_alloc", "llc", pid::LLC, slot as u32, line);
             true
         } else {
             stats.bump("llc.mshr_full");

@@ -99,6 +99,41 @@ pub struct Csrs {
     pub mhartid: u64,
     pub mcycle: u64,
     pub minstret: u64,
+    /// Counter-enable for the next-lower privilege: bit *n* of
+    /// `mcounteren` lets S/U read user counter CSR `0xc00 + n`
+    /// (cycle/time/instret/hpmcounter3..). Reset to all-ones in
+    /// [`CpuCore::new`] so firmware that never touches it keeps the
+    /// pre-HPM behavior (counters readable everywhere).
+    pub mcounteren: u64,
+    /// Same gate, S → U (both must be set for a U-mode read).
+    pub scounteren: u64,
+    /// `mhpmcounter3..10`: eight programmable event counters.
+    pub mhpmcounter: [u64; 8],
+    /// `mhpmevent3..10`: event selector per counter (see [`hpm_event`];
+    /// 0 = count nothing, the reset value).
+    pub mhpmevent: [u64; 8],
+    /// Memory-mapped `mtime` mirrored in by the platform each cycle so
+    /// `rdtime` (CSR 0xc01) works without a bus access.
+    pub time: u64,
+}
+
+/// Event selector values for `mhpmevent3..10` — the hardware performance
+/// monitor mux. The encoding is platform-defined (as on real CVA6); these
+/// mirror the per-hart counters the harness already tracks, so guest-side
+/// readings can be cross-checked against `Stats`.
+pub mod hpm_event {
+    /// L1 instruction-cache miss (refill issued).
+    pub const L1I_MISS: u64 = 1;
+    /// L1 data-cache miss (refill issued).
+    pub const L1D_MISS: u64 = 2;
+    /// Instruction TLB miss.
+    pub const ITLB_MISS: u64 = 3;
+    /// Data TLB miss.
+    pub const DTLB_MISS: u64 = 4;
+    /// Page-table walk started.
+    pub const PTW_WALK: u64 = 5;
+    /// Interrupt taken (any cause, any destination privilege).
+    pub const IRQ_TAKEN: u64 = 6;
 }
 
 /// User privilege level.
@@ -159,7 +194,28 @@ impl CpuCore {
             mmu: crate::mmu::Mmu::new(16),
         };
         c.csr.mhartid = hartid;
+        // Counters readable from S/U out of reset; firmware opts *out* by
+        // clearing bits (the priv spec resets these to an unspecified
+        // value — all-ones keeps pre-HPM guests working unchanged).
+        c.csr.mcounteren = !0;
+        c.csr.scounteren = !0;
         c
+    }
+
+    /// Bump every `mhpmcounter` whose `mhpmevent` selector matches
+    /// `event` by `n`. Called by the timing wrapper with values drained
+    /// from the same per-hart counters the harness reports, so guest and
+    /// host views stay consistent by construction.
+    #[inline]
+    pub fn hpm_bump(&mut self, event: u64, n: u64) {
+        if n == 0 || event == 0 {
+            return;
+        }
+        for (sel, ctr) in self.csr.mhpmevent.iter().zip(self.csr.mhpmcounter.iter_mut()) {
+            if *sel == event {
+                *ctr = ctr.wrapping_add(n);
+            }
+        }
     }
 
     #[inline]
@@ -254,8 +310,14 @@ impl CpuCore {
             0x342 => self.csr.mcause,
             0x343 => self.csr.mtval,
             0x344 => self.csr.mip,
+            0x106 => self.csr.scounteren,
+            0x306 => self.csr.mcounteren,
             0xb00 | 0xc00 => self.csr.mcycle,
+            0xc01 => self.csr.time, // rdtime (mirrored from CLINT mtime)
             0xb02 | 0xc02 => self.csr.minstret,
+            a @ 0xb03..=0xb0a => self.csr.mhpmcounter[(a - 0xb03) as usize],
+            a @ 0xc03..=0xc0a => self.csr.mhpmcounter[(a - 0xc03) as usize],
+            a @ 0x323..=0x32a => self.csr.mhpmevent[(a - 0x323) as usize],
             0xf14 => self.csr.mhartid,
             0x301 => 0x8000_0000_0014_112d, // misa: RV64IMFDC-ish + S/U
             _ => return Err(()),
@@ -302,8 +364,13 @@ impl CpuCore {
             0x342 => self.csr.mcause = v,
             0x343 => self.csr.mtval = v,
             0x344 => self.csr.mip = (self.csr.mip & !MIP_WRITABLE) | (v & MIP_WRITABLE),
+            // RV64 counteren registers are 32-bit (priv spec table 7.1)
+            0x106 => self.csr.scounteren = v & 0xffff_ffff,
+            0x306 => self.csr.mcounteren = v & 0xffff_ffff,
             0xb00 => self.csr.mcycle = v,
             0xb02 => self.csr.minstret = v,
+            a @ 0xb03..=0xb0a => self.csr.mhpmcounter[(a - 0xb03) as usize] = v,
+            a @ 0x323..=0x32a => self.csr.mhpmevent[(a - 0x323) as usize] = v,
             _ => return Err(()),
         }
         Ok(())
@@ -757,6 +824,18 @@ impl CpuCore {
                         if self.prv < ((csr >> 8) & 3) as u8 {
                             self.trap_to(2, pc, inst as u64);
                             return StepOutcome::Trapped(Trap::IllegalInstr(inst));
+                        }
+                        // user counters (cycle/time/instret/hpmcounterN)
+                        // are additionally gated by mcounteren (for S and
+                        // U) and scounteren (for U) — priv spec §3.1.11
+                        if (0xc00..=0xc1f).contains(&csr) && self.prv < PRV_M {
+                            let bit = 1u64 << (csr & 0x1f);
+                            let ok = self.csr.mcounteren & bit != 0
+                                && (self.prv == PRV_S || self.csr.scounteren & bit != 0);
+                            if !ok {
+                                self.trap_to(2, pc, inst as u64);
+                                return StepOutcome::Trapped(Trap::IllegalInstr(inst));
+                            }
                         }
                         let old = match self.csr_read(csr) {
                             Ok(v) => v,
@@ -1219,6 +1298,112 @@ mod tests {
         cpu.csr_write(0x144, 0).unwrap();
         assert_eq!(cpu.csr.mip & (1 << 5), 1 << 5, "STIP not S-writable");
         assert_eq!(cpu.csr.mip & (1 << 1), 0, "delegated SSIP cleared");
+    }
+
+    // ---- HPM / counter-enable tests ----
+
+    /// Clearing `mcounteren.CY` makes `rdcycle` from S-mode raise an
+    /// illegal-instruction trap (priv spec §3.1.11), even though the CSR
+    /// address itself encodes U-level accessibility.
+    #[test]
+    fn mcounteren_gates_rdcycle_from_s_mode() {
+        let mut a = Asm::new(0);
+        a.la(T0, "m_handler");
+        a.csrrw(ZERO, 0x305, T0); // mtvec
+        a.la(T0, "s_entry");
+        a.csrrw(ZERO, 0x141, T0); // mepc
+        a.li(T0, 1); // clear mcounteren.CY (bit 0)
+        a.csrrc(ZERO, 0x306, T0);
+        a.li(T0, 1 << 11); // MPP = S
+        a.csrrs(ZERO, 0x300, T0);
+        a.mret();
+        a.label("s_entry");
+        a.csrrs(A0, 0xc00, ZERO); // rdcycle from S → illegal
+        a.label("m_handler");
+        a.csrrs(A1, 0x342, ZERO); // mcause
+        a.wfi();
+        let img = a.finish();
+        let mut mem = Flat { mem: vec![0; 0x10000] };
+        mem.mem[..img.len()].copy_from_slice(&img);
+        let mut cpu = CpuCore::new(0, 0);
+        run_until_wfi(&mut cpu, &mut mem, 100);
+        assert_eq!(cpu.x[A1 as usize], 2, "illegal-instruction trap");
+        assert_eq!(cpu.prv, PRV_M);
+    }
+
+    /// U-mode counter reads need *both* enables: with `mcounteren` fully
+    /// set but `scounteren.IR` cleared, `rdcycle` still works from U while
+    /// `rdinstret` traps.
+    #[test]
+    fn scounteren_gates_rdinstret_from_u_mode() {
+        let mut a = Asm::new(0);
+        a.la(T0, "m_handler");
+        a.csrrw(ZERO, 0x305, T0);
+        a.la(T0, "u_entry");
+        a.csrrw(ZERO, 0x141, T0);
+        a.li(T0, 1 << 2); // clear scounteren.IR (bit 2)
+        a.csrrc(ZERO, 0x106, T0);
+        a.li(T0, 3 << 11); // MPP = U
+        a.csrrc(ZERO, 0x300, T0);
+        a.mret();
+        a.label("u_entry");
+        a.csrrs(A0, 0xc00, ZERO); // rdcycle: both enables set → OK
+        a.csrrs(A2, 0xc02, ZERO); // rdinstret: scounteren.IR clear → trap
+        a.label("m_handler");
+        a.csrrs(A1, 0x342, ZERO);
+        a.wfi();
+        let img = a.finish();
+        let mut mem = Flat { mem: vec![0; 0x10000] };
+        mem.mem[..img.len()].copy_from_slice(&img);
+        let mut cpu = CpuCore::new(0, 0);
+        run_until_wfi(&mut cpu, &mut mem, 100);
+        assert_eq!(cpu.x[A1 as usize], 2, "rdinstret from U trapped");
+        assert_eq!(cpu.x[A2 as usize], 0, "trapped read never wrote rd");
+        assert_eq!(cpu.prv, PRV_M);
+    }
+
+    /// The event mux: only counters whose `mhpmevent` selector matches
+    /// the bumped event advance; selector 0 counts nothing; counters are
+    /// readable through both the machine (0xb03+) and user (0xc03+)
+    /// aliases; `time` (0xc01) is read-only.
+    #[test]
+    fn hpm_event_mux_selects_counters() {
+        let mut cpu = CpuCore::new(0, 0);
+        cpu.csr_write(0x323, hpm_event::DTLB_MISS).unwrap(); // mhpmevent3
+        cpu.csr_write(0x32a, hpm_event::DTLB_MISS).unwrap(); // mhpmevent10
+        cpu.csr_write(0x324, hpm_event::PTW_WALK).unwrap(); // mhpmevent4
+        cpu.hpm_bump(hpm_event::DTLB_MISS, 3);
+        cpu.hpm_bump(hpm_event::PTW_WALK, 2);
+        cpu.hpm_bump(hpm_event::IRQ_TAKEN, 9); // nothing selects this
+        cpu.hpm_bump(0, 5); // selector 0 never counts
+        assert_eq!(cpu.csr_read(0xb03).unwrap(), 3);
+        assert_eq!(cpu.csr_read(0xc03).unwrap(), 3, "user alias reads the same counter");
+        assert_eq!(cpu.csr_read(0xc0a).unwrap(), 3, "two counters may watch one event");
+        assert_eq!(cpu.csr_read(0xb04).unwrap(), 2);
+        assert_eq!(cpu.csr_read(0xb05).unwrap(), 0);
+        assert!(cpu.csr_write(0xc01, 5).is_err(), "time is read-only");
+        cpu.csr.time = 0x1234;
+        assert_eq!(cpu.csr_read(0xc01).unwrap(), 0x1234);
+        // counteren registers are 32-bit WARL on RV64
+        cpu.csr_write(0x306, !0).unwrap();
+        assert_eq!(cpu.csr_read(0x306).unwrap(), 0xffff_ffff);
+    }
+
+    /// `rdinstret` observes the exact architectural retire count: the
+    /// reading instruction itself has not retired yet when it samples.
+    #[test]
+    fn rdinstret_is_exact() {
+        let mut a = Asm::new(0);
+        a.addi(T0, ZERO, 1); // 1st
+        a.addi(T0, T0, 2); // 2nd
+        a.addi(T0, T0, 3); // 3rd
+        a.csrrs(A0, 0xc02, ZERO); // 4th: reads 3
+        a.csrrs(A1, 0xc02, ZERO); // 5th: reads 4
+        a.wfi(); // 6th
+        let (cpu, _) = run(a, 100);
+        assert_eq!(cpu.x[A0 as usize], 3);
+        assert_eq!(cpu.x[A1 as usize], 4);
+        assert_eq!(cpu.csr.minstret, 6, "wfi retires too");
     }
 
     #[test]

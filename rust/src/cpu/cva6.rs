@@ -8,11 +8,12 @@
 //! uncached AXI. WFI parks the core, which is Fig. 11's power baseline
 //! ("idling without fetching or decoding instructions").
 
-use super::core::{Bus, CpuCore, MemErr, StepOutcome};
+use super::core::{hpm_event, Bus, CpuCore, MemErr, StepOutcome};
 use crate::axi::port::AxiBus;
 use crate::axi::types::{full_strb, Ar, Aw, Burst, W};
 use crate::cache::l1::{L1Cache, Probe, LINE};
-use crate::sim::{Activity, Component, Cycle, Stats};
+use crate::sim::trace::pid;
+use crate::sim::{Activity, Component, Cycle, Stats, Tracer};
 use std::collections::VecDeque;
 
 const ID_IFILL: u32 = 0x20;
@@ -161,6 +162,9 @@ pub struct Cva6 {
     state: CState,
     /// Completed MMIO/fence result for instruction retry.
     result: Option<(u64, u64)>,
+    /// Shared event tracer; the default handle is disabled and every
+    /// emit through it is a no-op, so untraced runs pay nothing.
+    tracer: Tracer,
     /// True once the core has executed an instruction that halted the
     /// simulation harness (ebreak) — used by run loops.
     pub halted: bool,
@@ -181,9 +185,21 @@ impl Cva6 {
             wb_q: VecDeque::new(),
             state: CState::Run,
             result: None,
+            tracer: Tracer::default(),
             halted: false,
             cfg,
         }
+    }
+
+    /// Attach the platform's shared event tracer.
+    pub fn set_tracer(&mut self, tracer: &Tracer) {
+        self.tracer = tracer.clone();
+    }
+
+    /// Mirror the CLINT's `mtime` into the core so a guest `rdtime`
+    /// (CSR 0xc01) reads the platform timer without a bus access.
+    pub fn set_time(&mut self, t: u64) {
+        self.core.csr.time = t;
     }
 
     /// Interrupt lines sampled every cycle (CLINT + PLIC). `msip`/`mtip`
@@ -229,6 +245,19 @@ impl Cva6 {
                 stats.add(key, v);
             }
         }
+        // guest-visible HPM mirrors of the same counters
+        self.core.hpm_bump(hpm_event::ITLB_MISS, c.itlb_miss);
+        self.core.hpm_bump(hpm_event::DTLB_MISS, c.dtlb_miss);
+        self.core.hpm_bump(hpm_event::PTW_WALK, c.walks);
+        if self.tracer.is_enabled() {
+            let tid = self.cfg.hartid as u32;
+            if c.walks > 0 {
+                self.tracer.instant("mmu.tlb_walk", "mmu", pid::MMU, tid, c.walks);
+            }
+            if c.faults > 0 {
+                self.tracer.instant("mmu.page_fault", "mmu", pid::MMU, tid, c.faults);
+            }
+        }
     }
 
     /// One clock cycle.
@@ -244,6 +273,13 @@ impl Cva6 {
                 stats.bump("cpu.wfi_cycles");
                 stats.bump(self.keys.wfi_cycles);
                 if self.core.csr.mip & self.core.csr.mie != 0 {
+                    self.tracer.instant(
+                        "cpu.wfi_wake",
+                        "cpu",
+                        pid::CPU,
+                        self.cfg.hartid as u32,
+                        self.core.csr.mip & self.core.csr.mie,
+                    );
                     self.state = CState::Run; // wake; interrupt taken next
                 } else {
                     self.state = CState::Wfi;
@@ -340,9 +376,12 @@ impl Cva6 {
             }
             CState::Run => {
                 // take interrupts at instruction boundary
-                if self.core.maybe_interrupt().is_some() {
+                let prv_before = self.core.prv;
+                if let Some(cause) = self.core.maybe_interrupt() {
                     stats.bump("cpu.irq_taken");
                     stats.bump(self.keys.irq_taken);
+                    self.core.hpm_bump(hpm_event::IRQ_TAKEN, 1);
+                    self.tracer.instant("cpu.irq_take", "cpu", pid::CPU, self.cfg.hartid as u32, cause);
                 }
                 // privilege the *attempted* instruction executes at (a
                 // trap outcome switches prv before we read it back)
@@ -387,6 +426,7 @@ impl Cva6 {
                     StepOutcome::Wfi => {
                         stats.bump("cpu.instr");
                         stats.bump(self.keys.instr);
+                        self.tracer.instant("cpu.wfi_park", "cpu", pid::CPU, self.cfg.hartid as u32, 0);
                         self.state = CState::Wfi;
                     }
                     StepOutcome::Trapped(t) => {
@@ -403,6 +443,10 @@ impl Cva6 {
                         stats.bump(self.keys.active_cycles);
                         match req {
                             Some(MemReq::Refill { line, icache, victim }) => {
+                                self.core.hpm_bump(
+                                    if icache { hpm_event::L1I_MISS } else { hpm_event::L1D_MISS },
+                                    1,
+                                );
                                 let id = if icache { ID_IFILL } else { ID_DFILL };
                                 let wb_left = 0;
                                 let mut b_wait = false;
@@ -449,6 +493,16 @@ impl Cva6 {
                             }
                         }
                     }
+                }
+                if self.core.prv != prv_before {
+                    // privilege transition (trap entry, mret/sret, irq)
+                    self.tracer.instant(
+                        "cpu.prv",
+                        "cpu",
+                        pid::CPU,
+                        self.cfg.hartid as u32,
+                        ((prv_before as u64) << 4) | self.core.prv as u64,
+                    );
                 }
             }
         }

@@ -9,7 +9,8 @@
 //! power model.
 
 use crate::axi::port::AxiBus;
-use crate::sim::{Activity, Component, Cycle, Stats};
+use crate::sim::trace::pid;
+use crate::sim::{Activity, Component, Cycle, Stats, Tracer};
 use std::collections::VecDeque;
 
 /// Serialized payload bits per AXI channel beat (address beats carry the
@@ -49,6 +50,10 @@ pub struct D2dLink {
     ar: Pipe<crate::axi::types::Ar>,
     b: Pipe<crate::axi::types::B>,
     r: Pipe<crate::axi::types::R>,
+    /// Shared event tracer (disabled by default — emits are no-ops).
+    tracer: Tracer,
+    /// Which platform link this is (trace "thread" id).
+    index: u32,
 }
 
 impl D2dLink {
@@ -61,7 +66,16 @@ impl D2dLink {
             ar: Pipe::new(),
             b: Pipe::new(),
             r: Pipe::new(),
+            tracer: Tracer::default(),
+            index: 0,
         }
+    }
+
+    /// Attach the platform's shared event tracer; `index` labels this
+    /// link's trace thread (one D2D link per far DSA slot).
+    pub fn set_tracer(&mut self, index: u32, tracer: &Tracer) {
+        self.index = index;
+        self.tracer = tracer.clone();
     }
 
     /// Cycles the link spends serializing one beat of `bits` payload
@@ -86,13 +100,18 @@ impl D2dLink {
         let lat = self.latency;
         let lanes = self.lanes as u64;
         macro_rules! fwd {
-            ($pipe:expr, $from:expr, $to:expr, $bits:expr) => {
+            ($pipe:expr, $from:expr, $to:expr, $bits:expr, $ev:expr) => {
                 if now >= $pipe.busy_until {
                     if let Some(x) = $from.borrow_mut().pop() {
                         let ser = ($bits as u64).div_ceil(lanes * 2);
                         $pipe.busy_until = now + ser;
                         $pipe.q.push_back((now + ser + lat, x));
                         stats.add("d2d.pad_cycles", ser * lanes);
+                        let ev: Option<&'static str> = $ev;
+                        if let Some(name) = ev {
+                            // arg = cycles this beat occupies the link
+                            self.tracer.instant_at(name, "d2d", pid::D2D, self.index, now, ser + lat);
+                        }
                     }
                 }
                 while let Some((t, _)) = $pipe.q.front() {
@@ -105,11 +124,11 @@ impl D2dLink {
                 }
             };
         }
-        fwd!(self.aw, a.aw, b.aw, beat_bits::ADDR);
-        fwd!(self.w, a.w, b.w, beat_bits::W);
-        fwd!(self.ar, a.ar, b.ar, beat_bits::ADDR);
-        fwd!(self.b, b.b, a.b, beat_bits::B);
-        fwd!(self.r, b.r, a.r, beat_bits::R);
+        fwd!(self.aw, a.aw, b.aw, beat_bits::ADDR, Some("d2d.aw"));
+        fwd!(self.w, a.w, b.w, beat_bits::W, None);
+        fwd!(self.ar, a.ar, b.ar, beat_bits::ADDR, Some("d2d.ar"));
+        fwd!(self.b, b.b, a.b, beat_bits::B, None);
+        fwd!(self.r, b.r, a.r, beat_bits::R, None);
     }
 }
 

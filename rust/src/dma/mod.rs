@@ -21,7 +21,8 @@
 use crate::axi::port::AxiBus;
 use crate::axi::regbus::RegDevice;
 use crate::axi::types::{full_strb, Ar, Aw, Burst, W};
-use crate::sim::{Activity, Component, Cycle, Stats};
+use crate::sim::trace::pid;
+use crate::sim::{Activity, Component, Cycle, Stats, Tracer};
 use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::rc::Rc;
@@ -72,6 +73,8 @@ pub struct DmaEngine {
     /// (1 = blocking baseline: wait for each B / last R before the next
     /// AW / AR).
     pub max_outstanding: u32,
+    /// Shared event tracer (disabled by default — emits are no-ops).
+    tracer: Tracer,
 }
 
 #[derive(Debug)]
@@ -100,9 +103,15 @@ impl DmaEngine {
                 outstanding_b: 0,
                 outstanding_r: 0,
                 max_outstanding: 4,
+                tracer: Tracer::default(),
             },
             state,
         )
+    }
+
+    /// Attach the platform's shared event tracer.
+    pub fn set_tracer(&mut self, tracer: &Tracer) {
+        self.tracer = tracer.clone();
     }
 
     /// Convenience for tests/benches: program + launch directly.
@@ -189,6 +198,7 @@ impl DmaEngine {
                 cur.rd_issued += n;
                 self.outstanding_r += 1;
                 stats.bump("dma.ar");
+                self.tracer.instant("dma.rd_burst", "dma", pid::DMA, 0, n);
             }
         }
 
@@ -211,6 +221,7 @@ impl DmaEngine {
                 cur.wr_beats_left = beats as u32;
                 self.outstanding_b += 1;
                 stats.bump("dma.aw");
+                self.tracer.instant("dma.wr_burst", "dma", pid::DMA, 1, n);
             }
         }
         // stream one W beat per cycle

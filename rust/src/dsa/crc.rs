@@ -17,7 +17,7 @@
 use super::frontend::{opcode, AcceleratorFrontend, BurstReader, BurstWriter, DsaDescriptor};
 use super::DsaPlugin;
 use crate::axi::port::AxiBus;
-use crate::sim::{Activity, Cycle, Stats};
+use crate::sim::{Activity, Cycle, Stats, Tracer};
 
 /// CAP class byte advertised by this engine.
 pub const CLASS: u16 = 3;
@@ -62,13 +62,13 @@ impl CrcEngine {
         Self { fe: AcceleratorFrontend::new(CLASS), state: CState::Idle, dst: 0, len: 0 }
     }
 
-    fn start(&mut self, d: DsaDescriptor, stats: &mut Stats) {
+    fn start(&mut self, d: DsaDescriptor, now: Cycle, stats: &mut Stats) {
         // malformed descriptors (wrong opcode, zero or oversized length)
         // complete immediately instead of wedging the ring or letting a
         // guest-controlled length drive host allocation
         if d.op != opcode::CRC32 || d.arg2 == 0 || d.arg2 > super::frontend::MAX_JOB_BYTES {
             stats.bump("plugfab.bad_desc");
-            self.fe.complete(stats);
+            self.fe.complete(now, stats);
             return;
         }
         self.dst = d.arg1;
@@ -113,8 +113,8 @@ impl DsaPlugin for CrcEngine {
         let engine_busy = !matches!(self.state, CState::Idle);
         self.fe.service(sub, engine_busy, stats);
         if matches!(self.state, CState::Idle) {
-            if let Some(d) = self.fe.poll_desc(mgr, true, stats) {
-                self.start(d, stats);
+            if let Some(d) = self.fe.poll_desc(mgr, true, now, stats) {
+                self.start(d, now, stats);
             }
         }
         let (dst, len) = (self.dst, self.len);
@@ -144,11 +144,15 @@ impl DsaPlugin for CrcEngine {
             }
         }
         if done {
-            self.fe.complete(stats);
+            self.fe.complete(now, stats);
         }
         if let Some(s) = next {
             self.state = s;
         }
+    }
+
+    fn attach_trace(&mut self, slot: usize, tracer: &Tracer) {
+        self.fe.attach_trace(slot, tracer);
     }
 }
 

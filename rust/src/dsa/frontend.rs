@@ -42,7 +42,9 @@
 
 use crate::axi::port::AxiBus;
 use crate::axi::types::{full_strb, Ar, Aw, Burst, Resp, B, R, W};
-use crate::sim::{Activity, Link, Stats};
+use crate::sim::bw::lat_bucket;
+use crate::sim::trace::pid;
+use crate::sim::{Activity, Cycle, Link, Stats, Tracer};
 use std::collections::VecDeque;
 
 /// Descriptor size in bytes (four little-endian u64 words).
@@ -80,6 +82,69 @@ pub mod opcode {
     /// Synthetic traffic job (`arg0`=window base, `arg1`=window size,
     /// `arg2` packs burst/write-ratio/period, `imm`=burst count).
     pub const TRAFFIC: u16 = 5;
+}
+
+/// Per-slot descriptor-completion latency histograms: log2 buckets of
+/// the fetch→complete cycle count, one row per DSA slot. Stats keys must
+/// be `&'static str`, hence the literal table (same idiom as the
+/// crossbar's `bw.m{N}` latency tables in [`crate::sim::bw`]).
+pub static SLOT_LAT: [[&str; 9]; 8] = [
+    [
+        "plugfab.s0.lat_le8", "plugfab.s0.lat_le16", "plugfab.s0.lat_le32",
+        "plugfab.s0.lat_le64", "plugfab.s0.lat_le128", "plugfab.s0.lat_le256",
+        "plugfab.s0.lat_le512", "plugfab.s0.lat_le1024", "plugfab.s0.lat_gt1024",
+    ],
+    [
+        "plugfab.s1.lat_le8", "plugfab.s1.lat_le16", "plugfab.s1.lat_le32",
+        "plugfab.s1.lat_le64", "plugfab.s1.lat_le128", "plugfab.s1.lat_le256",
+        "plugfab.s1.lat_le512", "plugfab.s1.lat_le1024", "plugfab.s1.lat_gt1024",
+    ],
+    [
+        "plugfab.s2.lat_le8", "plugfab.s2.lat_le16", "plugfab.s2.lat_le32",
+        "plugfab.s2.lat_le64", "plugfab.s2.lat_le128", "plugfab.s2.lat_le256",
+        "plugfab.s2.lat_le512", "plugfab.s2.lat_le1024", "plugfab.s2.lat_gt1024",
+    ],
+    [
+        "plugfab.s3.lat_le8", "plugfab.s3.lat_le16", "plugfab.s3.lat_le32",
+        "plugfab.s3.lat_le64", "plugfab.s3.lat_le128", "plugfab.s3.lat_le256",
+        "plugfab.s3.lat_le512", "plugfab.s3.lat_le1024", "plugfab.s3.lat_gt1024",
+    ],
+    [
+        "plugfab.s4.lat_le8", "plugfab.s4.lat_le16", "plugfab.s4.lat_le32",
+        "plugfab.s4.lat_le64", "plugfab.s4.lat_le128", "plugfab.s4.lat_le256",
+        "plugfab.s4.lat_le512", "plugfab.s4.lat_le1024", "plugfab.s4.lat_gt1024",
+    ],
+    [
+        "plugfab.s5.lat_le8", "plugfab.s5.lat_le16", "plugfab.s5.lat_le32",
+        "plugfab.s5.lat_le64", "plugfab.s5.lat_le128", "plugfab.s5.lat_le256",
+        "plugfab.s5.lat_le512", "plugfab.s5.lat_le1024", "plugfab.s5.lat_gt1024",
+    ],
+    [
+        "plugfab.s6.lat_le8", "plugfab.s6.lat_le16", "plugfab.s6.lat_le32",
+        "plugfab.s6.lat_le64", "plugfab.s6.lat_le128", "plugfab.s6.lat_le256",
+        "plugfab.s6.lat_le512", "plugfab.s6.lat_le1024", "plugfab.s6.lat_gt1024",
+    ],
+    [
+        "plugfab.s7.lat_le8", "plugfab.s7.lat_le16", "plugfab.s7.lat_le32",
+        "plugfab.s7.lat_le64", "plugfab.s7.lat_le128", "plugfab.s7.lat_le256",
+        "plugfab.s7.lat_le512", "plugfab.s7.lat_le1024", "plugfab.s7.lat_gt1024",
+    ],
+];
+
+/// Stats key of descriptor-latency bucket `b` for DSA slot `s` (slots
+/// beyond the table alias onto row 7 — the platform caps at 8 slots).
+pub fn slot_lat_key(s: usize, b: usize) -> &'static str {
+    SLOT_LAT[s.min(7)][b]
+}
+
+/// Snapshot slot `s`'s descriptor-latency histogram out of `stats`
+/// (feeds [`crate::sim::bw::percentile_triplet`] in reports).
+pub fn slot_lat_counts(stats: &Stats, s: usize) -> [u64; 9] {
+    let mut c = [0u64; 9];
+    for (b, slot) in c.iter_mut().enumerate() {
+        *slot = stats.get(slot_lat_key(s, b));
+    }
+    c
 }
 
 /// One 32-byte job descriptor, as fetched from the ring.
@@ -250,6 +315,12 @@ pub struct AcceleratorFrontend {
     engine_busy: bool,
     fetch: Fetch,
     sub_rsp: VecDeque<R>,
+    /// Platform slot index (trace "thread" + latency-histogram row).
+    slot: usize,
+    /// Shared event tracer (disabled by default — emits are no-ops).
+    tracer: Tracer,
+    /// Cycle the in-flight descriptor's last beat arrived (latency base).
+    desc_fetched_at: Cycle,
 }
 
 impl AcceleratorFrontend {
@@ -268,7 +339,18 @@ impl AcceleratorFrontend {
             engine_busy: false,
             fetch: Fetch::Idle,
             sub_rsp: VecDeque::new(),
+            slot: 0,
+            tracer: Tracer::default(),
+            desc_fetched_at: 0,
         }
+    }
+
+    /// Attach the platform's shared event tracer and record which slot
+    /// this frontend occupies (labels its trace thread and selects its
+    /// latency-histogram row).
+    pub fn attach_trace(&mut self, slot: usize, tracer: &Tracer) {
+        self.slot = slot;
+        self.tracer = tracer.clone();
     }
 
     /// CAP register value: magic, engine class, contract version.
@@ -323,6 +405,13 @@ impl AcceleratorFrontend {
                 // the doorbell publishes the posted tail to the device
                 self.tail = self.tail_shadow;
                 stats.bump("plugfab.doorbells");
+                self.tracer.instant(
+                    "dsa.desc_post",
+                    "dsa",
+                    pid::DSA,
+                    self.slot as u32,
+                    self.tail as u64,
+                );
             }
             0x20 => self.irq_ena = v & 1,
             0x24 => self.irq_cause &= !v, // W1C
@@ -369,9 +458,17 @@ impl AcceleratorFrontend {
 
     /// Advance the descriptor fetcher one cycle. `engine_idle` gates new
     /// fetches so descriptor and operand traffic never interleave on the
-    /// shared manager port. Returns a descriptor exactly once, when its
-    /// last beat arrives — the engine starts the job that cycle.
-    pub fn poll_desc(&mut self, mgr: &AxiBus, engine_idle: bool, stats: &mut Stats) -> Option<DsaDescriptor> {
+    /// shared manager port. `now` is the platform cycle (stamps trace
+    /// events and anchors the completion-latency histogram). Returns a
+    /// descriptor exactly once, when its last beat arrives — the engine
+    /// starts the job that cycle.
+    pub fn poll_desc(
+        &mut self,
+        mgr: &AxiBus,
+        engine_idle: bool,
+        now: Cycle,
+        stats: &mut Stats,
+    ) -> Option<DsaDescriptor> {
         match &mut self.fetch {
             Fetch::Collect { got } => {
                 while let Some(r) = pop_r_if(&mgr.r, DESC_FETCH_ID) {
@@ -381,6 +478,15 @@ impl AcceleratorFrontend {
                     let d = DsaDescriptor::from_bytes(&got[..DESC_BYTES as usize]);
                     self.fetch = Fetch::Idle;
                     stats.bump("plugfab.descs");
+                    self.desc_fetched_at = now;
+                    self.tracer.instant_at(
+                        "dsa.desc_fetch",
+                        "dsa",
+                        pid::DSA,
+                        self.slot as u32,
+                        now,
+                        d.op as u64,
+                    );
                     return Some(d);
                 }
             }
@@ -405,8 +511,9 @@ impl AcceleratorFrontend {
 
     /// Record one completed descriptor: advance the consumer index, bump
     /// the completion counter, latch the IRQ cause (the PLIC line rises
-    /// iff the host enabled it).
-    pub fn complete(&mut self, stats: &mut Stats) {
+    /// iff the host enabled it), and file the fetch→complete latency in
+    /// the slot's [`SLOT_LAT`] histogram.
+    pub fn complete(&mut self, now: Cycle, stats: &mut Stats) {
         self.head = self.head.wrapping_add(1);
         self.completed += 1;
         self.irq_cause |= 1;
@@ -414,6 +521,17 @@ impl AcceleratorFrontend {
         if self.irq() {
             stats.bump("plugfab.irqs");
         }
+        let lat = now.saturating_sub(self.desc_fetched_at);
+        stats.bump(slot_lat_key(self.slot, lat_bucket(lat)));
+        self.tracer.span(
+            "dsa.desc_complete",
+            "dsa",
+            pid::DSA,
+            self.slot as u32,
+            self.desc_fetched_at,
+            lat,
+            self.completed,
+        );
     }
 
     /// Next-cycle classification of the frontend alone (the embedding
@@ -505,10 +623,12 @@ mod tests {
         assert!(!fe.busy(), "no doorbell, no work");
         write_reg(&sub, regs::DOORBELL, 1);
         let mut got = None;
-        for _ in 0..64 {
+        let mut fetched_at = 0u64;
+        for now in 0..64u64 {
             fe.service(&sub, false, &mut stats);
-            if let Some(d) = fe.poll_desc(&mgr, true, &mut stats) {
+            if let Some(d) = fe.poll_desc(&mgr, true, now, &mut stats) {
                 got = Some(d);
+                fetched_at = now;
             }
             mem.tick(&mgr, &mut stats);
             if got.is_some() {
@@ -517,12 +637,15 @@ mod tests {
         }
         assert_eq!(got, Some(d), "descriptor fetched through the fabric");
         assert!(!fe.irq());
-        fe.complete(&mut stats);
+        fe.complete(fetched_at + 20, &mut stats);
         assert!(fe.irq(), "completion raises the enabled line");
         assert_eq!(fe.completed(), 1);
         assert_eq!(stats.get("dsa.jobs"), 1);
         assert_eq!(stats.get("plugfab.descs"), 1);
         assert_eq!(stats.get("plugfab.irqs"), 1);
+        // 20-cycle fetch→complete latency lands in the ≤32 bucket of the
+        // slot-0 histogram
+        assert_eq!(stats.get("plugfab.s0.lat_le32"), 1);
         // W1C drops the line
         write_reg(&sub, regs::IRQ_CAUSE, 1);
         fe.service(&sub, false, &mut stats);

@@ -21,7 +21,7 @@ use super::frontend::{opcode, AcceleratorFrontend, BurstReader, BurstWriter, Dsa
 use super::DsaPlugin;
 use crate::axi::port::AxiBus;
 use crate::runtime::XlaRuntime;
-use crate::sim::{Activity, Cycle, Stats};
+use crate::sim::{Activity, Cycle, Stats, Tracer};
 use std::rc::Rc;
 
 /// MACs per cycle of the modeled systolic array (16×16 PEs).
@@ -78,7 +78,7 @@ impl MatmulDsa {
         (self.job.n * self.job.n * 4) as usize
     }
 
-    fn start(&mut self, d: DsaDescriptor, stats: &mut Stats) {
+    fn start(&mut self, d: DsaDescriptor, now: Cycle, stats: &mut Stats) {
         // malformed descriptors complete immediately rather than wedging
         // the ring: the tile dimension must be even (4·n² result bytes
         // are streamed in 8-byte beats) and array-sized (n ≤ 512 bounds
@@ -86,7 +86,7 @@ impl MatmulDsa {
         let n = d.imm;
         if d.op != opcode::MATMUL || n == 0 || n % 2 != 0 || n > 512 {
             stats.bump("plugfab.bad_desc");
-            self.fe.complete(stats);
+            self.fe.complete(now, stats);
             return;
         }
         self.job = Job { a: d.arg0, b: d.arg1, c: d.arg2, n: n as u32 };
@@ -165,8 +165,8 @@ impl DsaPlugin for MatmulDsa {
         // new descriptor only while idle (keeps descriptor and operand
         // traffic from interleaving on the shared manager port)
         if matches!(self.state, DState::Idle) {
-            if let Some(d) = self.fe.poll_desc(mgr, true, stats) {
-                self.start(d, stats);
+            if let Some(d) = self.fe.poll_desc(mgr, true, now, stats) {
+                self.start(d, now, stats);
             }
         }
         // the kernel runs functionally the cycle operand fetch finishes;
@@ -215,11 +215,15 @@ impl DsaPlugin for MatmulDsa {
         }
         if done {
             self.jobs_done += 1;
-            self.fe.complete(stats);
+            self.fe.complete(now, stats);
         }
         if let Some(s) = next {
             self.state = s;
         }
+    }
+
+    fn attach_trace(&mut self, slot: usize, tracer: &Tracer) {
+        self.fe.attach_trace(slot, tracer);
     }
 }
 

@@ -42,7 +42,7 @@ pub mod reduce;
 pub mod traffic;
 
 use crate::axi::port::AxiBus;
-use crate::sim::{Activity, Cycle, Stats};
+use crate::sim::{Activity, Cycle, Stats, Tracer};
 
 /// A domain-specific accelerator attached to one crossbar port pair.
 ///
@@ -70,4 +70,11 @@ pub trait DsaPlugin {
     /// Total descriptors completed since reset (the frontend's
     /// `COMPLETED` counter — host-side harnesses key progress on it).
     fn completed(&self) -> u64;
+    /// Attach the platform's shared event tracer, labelling this plug-in
+    /// as `slot`. Defaulted to a no-op so out-of-tree plug-ins without a
+    /// frontend keep compiling; in-tree engines forward to their
+    /// [`frontend::AcceleratorFrontend`].
+    fn attach_trace(&mut self, slot: usize, tracer: &Tracer) {
+        let _ = (slot, tracer);
+    }
 }

@@ -18,7 +18,7 @@
 use super::frontend::{opcode, AcceleratorFrontend, BurstReader, BurstWriter, DsaDescriptor};
 use super::DsaPlugin;
 use crate::axi::port::AxiBus;
-use crate::sim::{Activity, Cycle, Stats};
+use crate::sim::{Activity, Cycle, Stats, Tracer};
 
 /// CAP class byte advertised by this engine.
 pub const CLASS: u16 = 4;
@@ -59,7 +59,7 @@ impl ReduceEngine {
         Self { fe: AcceleratorFrontend::new(CLASS), state: RState::Idle, op: 0, dst: 0, len: 0 }
     }
 
-    fn start(&mut self, d: DsaDescriptor, stats: &mut Stats) {
+    fn start(&mut self, d: DsaDescriptor, now: Cycle, stats: &mut Stats) {
         // malformed descriptors (wrong opcode; zero, beat-misaligned, or
         // oversized length — the write stream is 8-byte-beat granular)
         // complete immediately instead of wedging the ring or panicking
@@ -67,7 +67,7 @@ impl ReduceEngine {
         let bad_len = d.arg2 == 0 || d.arg2 % 8 != 0 || d.arg2 > super::frontend::MAX_JOB_BYTES;
         if (d.op != opcode::REDUCE_SUM && d.op != opcode::MEMCPY) || bad_len {
             stats.bump("plugfab.bad_desc");
-            self.fe.complete(stats);
+            self.fe.complete(now, stats);
             return;
         }
         self.op = d.op;
@@ -113,8 +113,8 @@ impl DsaPlugin for ReduceEngine {
         let engine_busy = !matches!(self.state, RState::Idle);
         self.fe.service(sub, engine_busy, stats);
         if matches!(self.state, RState::Idle) {
-            if let Some(d) = self.fe.poll_desc(mgr, true, stats) {
-                self.start(d, stats);
+            if let Some(d) = self.fe.poll_desc(mgr, true, now, stats) {
+                self.start(d, now, stats);
             }
         }
         let (op, dst, len) = (self.op, self.dst, self.len);
@@ -151,11 +151,15 @@ impl DsaPlugin for ReduceEngine {
             }
         }
         if done {
-            self.fe.complete(stats);
+            self.fe.complete(now, stats);
         }
         if let Some(s) = next {
             self.state = s;
         }
+    }
+
+    fn attach_trace(&mut self, slot: usize, tracer: &Tracer) {
+        self.fe.attach_trace(slot, tracer);
     }
 }
 

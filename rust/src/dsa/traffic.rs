@@ -20,7 +20,7 @@ use super::frontend::{opcode, AcceleratorFrontend, DsaDescriptor};
 use super::DsaPlugin;
 use crate::axi::port::AxiBus;
 use crate::axi::types::{full_strb, Ar, Aw, Burst, W};
-use crate::sim::{Activity, Cycle, Stats};
+use crate::sim::{Activity, Cycle, Stats, Tracer};
 use std::collections::VecDeque;
 
 /// CAP class byte advertised by this engine.
@@ -111,10 +111,10 @@ impl TrafficGen {
         x.wrapping_mul(0x2545_f491_4f6c_dd1d)
     }
 
-    fn start(&mut self, d: DsaDescriptor, stats: &mut Stats) {
+    fn start(&mut self, d: DsaDescriptor, now: Cycle, stats: &mut Stats) {
         if d.op != opcode::TRAFFIC {
             stats.bump("plugfab.bad_desc");
-            self.fe.complete(stats);
+            self.fe.complete(now, stats);
             return;
         }
         // arg2 packs: [15:0] burst bytes, [23:16] write ratio, [55:24] period
@@ -207,14 +207,14 @@ impl DsaPlugin for TrafficGen {
         if retire {
             let j = self.job.take().unwrap();
             if j.from_desc {
-                self.fe.complete(stats);
+                self.fe.complete(now, stats);
             }
         }
         // next descriptor only when no job is active (the frontend never
         // interleaves descriptor fetch with an unfinished job)
         if self.job.is_none() {
-            if let Some(d) = self.fe.poll_desc(mgr, true, stats) {
-                self.start(d, stats);
+            if let Some(d) = self.fe.poll_desc(mgr, true, now, stats) {
+                self.start(d, now, stats);
                 self.next_at = now; // a fresh job may issue immediately
             }
         }
@@ -258,6 +258,10 @@ impl DsaPlugin for TrafficGen {
                 stats.bump("dsa.traffic_rd");
             }
         }
+    }
+
+    fn attach_trace(&mut self, slot: usize, tracer: &Tracer) {
+        self.fe.attach_trace(slot, tracer);
     }
 }
 

@@ -103,6 +103,17 @@ pub fn run_serial(scenarios: Vec<Scenario>) -> Vec<ScenarioResult> {
     scenarios.into_iter().map(|sc| sc.run()).collect()
 }
 
+/// Like [`run_parallel`], but with event tracing enabled in every SoC:
+/// each result is paired with its Chrome/Perfetto trace-event JSON.
+/// Traces cross the thread boundary as plain `String`s — the `Soc` and
+/// its tracer (both `!Send`) never leave the worker that built them.
+pub fn run_parallel_traced(
+    scenarios: Vec<Scenario>,
+    threads: usize,
+) -> Vec<(ScenarioResult, Option<String>)> {
+    par_map(scenarios, threads, |_, sc| sc.run_with_trace(true))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

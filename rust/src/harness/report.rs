@@ -9,6 +9,7 @@
 
 use super::scenario::ScenarioResult;
 use crate::model::benchkit::{f1, Table};
+use crate::sim::bw;
 
 /// Aggregated results of one sweep, in grid order.
 #[derive(Debug, Clone)]
@@ -40,13 +41,19 @@ impl SweepReport {
         Self { results }
     }
 
-    /// Comparative summary table (one row per scenario).
+    /// Comparative summary table (one row per scenario). The
+    /// `rd p50/99/999` column is the fabric-wide read-latency percentile
+    /// triplet (log2-bucket upper bounds, in cycles) from the crossbar's
+    /// latency histograms; `-` when the scenario issued no reads.
     pub fn table(&self) -> Table {
         let mut t = Table::new(
             "Sweep report — one SoC instance per scenario",
-            &["scenario", "cycles", "halted", "instr", "dram B", "B/cyc", "CORE mW", "IO mW", "RAM mW", "TOTAL mW", "Mcyc/s"],
+            &["scenario", "cycles", "halted", "instr", "dram B", "B/cyc", "rd p50/99/999", "CORE mW", "IO mW", "RAM mW", "TOTAL mW", "Mcyc/s"],
         );
         for r in &self.results {
+            let rd_lat = bw::percentile_triplet(&bw::total_rd_lat_counts(&r.stats))
+                .map(|(p50, p99, p999)| format!("{p50}/{p99}/{p999}"))
+                .unwrap_or_else(|| "-".into());
             t.row(&[
                 r.name.clone(),
                 r.cycles.to_string(),
@@ -54,6 +61,7 @@ impl SweepReport {
                 r.stats.get("cpu.instr").to_string(),
                 r.dram_bytes().to_string(),
                 format!("{:.3}", r.dram_bytes_per_cycle()),
+                rd_lat,
                 f1(r.power.core_mw),
                 f1(r.power.io_mw),
                 f1(r.power.ram_mw),
@@ -99,6 +107,29 @@ impl SweepReport {
                     "      \"sim_cycles_per_sec\": {},\n",
                     r.sim_cycles_per_sec()
                 ));
+                // per-crossbar-manager latency percentiles (cycles, log2
+                // bucket upper bounds), derived from the bw.m{N} latency
+                // histograms; managers with no traffic are omitted
+                out.push_str("      \"latency\": {");
+                let mut first = true;
+                for m in 0..8 {
+                    let dirs = [
+                        ("rd", bw::mgr_rd_lat_counts(&r.stats, m)),
+                        ("wr", bw::mgr_wr_lat_counts(&r.stats, m)),
+                    ];
+                    for (dir, counts) in dirs {
+                        if let Some((p50, p99, p999)) = bw::percentile_triplet(&counts) {
+                            if !first {
+                                out.push_str(", ");
+                            }
+                            first = false;
+                            out.push_str(&format!(
+                                "\"m{m}.{dir}\": {{\"p50\": {p50}, \"p99\": {p99}, \"p999\": {p999}}}"
+                            ));
+                        }
+                    }
+                }
+                out.push_str("},\n");
             }
             out.push_str(&format!(
                 "      \"power_mw\": {{\"core\": {}, \"io\": {}, \"ram\": {}, \"total\": {}}},\n",
@@ -209,6 +240,27 @@ mod tests {
         assert!(!arch.contains("sched."));
         assert!(arch.contains("\"cpu.instr\""), "architectural stats survive");
         assert_eq!(arch.matches('{').count(), arch.matches('}').count());
+    }
+
+    /// The full report derives p50/p99/p999 per crossbar manager from the
+    /// latency histograms; the arch variant and traffic-less managers are
+    /// untouched, and the table renders the fabric-wide triplet.
+    #[test]
+    fn full_json_reports_latency_percentiles() {
+        let mut r = fake("a", 1000);
+        r.stats.add("bw.m0.rd_lat_le32", 90);
+        r.stats.add("bw.m0.rd_lat_le256", 10);
+        r.stats.add("bw.rd_lat_le32", 90);
+        r.stats.add("bw.rd_lat_le256", 10);
+        let rep = SweepReport::new(vec![r]);
+        let full = rep.to_json();
+        assert!(
+            full.contains("\"m0.rd\": {\"p50\": 32, \"p99\": 256, \"p999\": 256}"),
+            "latency block present: {full}"
+        );
+        assert!(!full.contains("\"m1.rd\""), "idle managers omitted");
+        assert!(!rep.to_json_arch().contains("\"latency\""));
+        assert!(rep.table().render().contains("32/256/256"));
     }
 
     #[test]

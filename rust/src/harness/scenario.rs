@@ -321,8 +321,20 @@ impl Scenario {
     /// saturating its attachment point" contention load — so the axis
     /// measures interconnect interference, not idle ports.
     pub fn run(&self) -> ScenarioResult {
+        self.run_with_trace(false).0
+    }
+
+    /// Like [`Scenario::run`], optionally with event tracing enabled:
+    /// when `trace` is true the SoC records the platform event stream and
+    /// the second element carries the Chrome/Perfetto trace-event JSON
+    /// (`None` otherwise). Tracing is observation-only, so the
+    /// [`ScenarioResult`] is bit-identical either way.
+    pub fn run_with_trace(&self, trace: bool) -> (ScenarioResult, Option<String>) {
         let cfg = &self.cfg; // Scenario::new already normalized the topology
         let mut soc = Soc::new(cfg.clone());
+        if trace {
+            soc.enable_trace();
+        }
         for i in cfg.dsa_slots.len()..cfg.dsa_port_pairs {
             // 1 KiB bursts, ~50 % writes, one burst per 64 cycles, forever,
             // confined to the top quarter of DRAM — above the MEM
@@ -361,7 +373,8 @@ impl Scenario {
         // cycles.max(1): a degenerate zero-cycle window must not put
         // NaN/inf power values into the JSON report
         let power = PowerModel::neo().power(&soc.stats, cycles.max(1), self.cfg.freq_hz);
-        ScenarioResult {
+        let trace_json = trace.then(|| soc.tracer.export_json(self.cfg.freq_hz));
+        let result = ScenarioResult {
             name: self.name.clone(),
             workload: self.workload.name(),
             harts: self.cfg.harts,
@@ -381,7 +394,8 @@ impl Scenario {
             // cycles/sec throughput metric by zero
             host_seconds: host_t0.elapsed().as_secs_f64().max(1e-9),
             stats: soc.stats.clone(),
-        }
+        };
+        (result, trace_json)
     }
 }
 

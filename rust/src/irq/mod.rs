@@ -19,7 +19,8 @@
 //!   reads 0.
 
 use crate::axi::regbus::RegDevice;
-use crate::sim::{Activity, Cycle, Stats};
+use crate::sim::trace::{pid, IRQ_CTX_TID_BASE};
+use crate::sim::{Activity, Cycle, Stats, Tracer};
 use std::cell::RefCell;
 use std::rc::Rc;
 
@@ -185,6 +186,8 @@ pub struct Plic {
     enabled: Vec<Vec<bool>>,
     /// Per-context priority thresholds.
     threshold: Vec<u32>,
+    /// Shared event tracer (disabled by default — emits are no-ops).
+    tracer: Tracer,
 }
 
 impl Plic {
@@ -205,9 +208,15 @@ impl Plic {
                 claimed: vec![false; n_sources],
                 enabled: vec![vec![false; n_sources]; 2 * harts],
                 threshold: vec![0; 2 * harts],
+                tracer: Tracer::default(),
             },
             lines,
         )
+    }
+
+    /// Attach the platform's shared event tracer.
+    pub fn set_tracer(&mut self, tracer: &Tracer) {
+        self.tracer = tracer.clone();
     }
 
     /// Number of target contexts (2 per hart).
@@ -219,8 +228,9 @@ impl Plic {
     pub fn sample(&mut self) {
         let lines = self.lines.borrow();
         for (i, &l) in lines.iter().enumerate() {
-            if l && !self.claimed[i] {
+            if l && !self.claimed[i] && !self.pending[i] {
                 self.pending[i] = true;
+                self.tracer.instant("irq.raise", "irq", pid::IRQ, i as u32, i as u64);
             }
         }
     }
@@ -301,6 +311,13 @@ impl RegDevice for Plic {
                             Some(i) => {
                                 self.pending[i] = false;
                                 self.claimed[i] = true;
+                                self.tracer.instant(
+                                    "irq.claim",
+                                    "irq",
+                                    pid::IRQ,
+                                    IRQ_CTX_TID_BASE + ctx as u32,
+                                    (i + 1) as u64,
+                                );
                                 (i + 1) as u32 // PLIC sources are 1-based
                             }
                             None => 0,
@@ -340,6 +357,13 @@ impl RegDevice for Plic {
                         let i = v as usize;
                         if i >= 1 && i <= n {
                             self.claimed[i - 1] = false;
+                            self.tracer.instant(
+                                "irq.complete",
+                                "irq",
+                                pid::IRQ,
+                                IRQ_CTX_TID_BASE + ctx as u32,
+                                v as u64,
+                            );
                         }
                     }
                     _ => return Err(()),

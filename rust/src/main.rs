@@ -11,6 +11,9 @@
 //! * `offload [--n N] [--tile T] [--artifacts DIR]` — tiled matmul through
 //!   the DSA plug-in (DMA + SPM + Pallas-compiled kernel via PJRT).
 //! * `boot` — autonomous SPI-flash GPT boot flow.
+//! * `stats <workload> [--filter GLOB] [run options]` — run a workload
+//!   and dump every harness counter, grouped by namespace prefix (the
+//!   key segment before the first `.`). `--filter` takes a `*` glob.
 //! * `sweep [--workloads a,b] [--backends rpc,hyperram] [--spm-masks m,..]
 //!   [--dsa n,..] [--tlb e,..] [--jobs N] [--serial] [--json PATH]` —
 //!   expand the axis lists into a configuration grid, run one SoC
@@ -18,6 +21,12 @@
 //!   the worker count, defaulting to one per core), and emit one
 //!   aggregated table + JSON report. Defaults to the paper's §III-B
 //!   comparison: {nop, mem} × {rpc, hyperram}.
+//!
+//! `run` and `sweep` accept `--trace out.json` to export the platform
+//! event stream (IRQ fabric, descriptor rings, MSHRs, TLB walks,
+//! scheduler fast-forwards) as Chrome/Perfetto trace-event JSON —
+//! load it at <https://ui.perfetto.dev>. `sweep` writes one file per
+//! scenario, inserting `-{index}` before the extension.
 
 use cheshire::asm::reg::*;
 use cheshire::asm::Asm;
@@ -82,15 +91,19 @@ fn load_config_inner(args: &Args, apply_dsa: bool) -> CheshireConfig {
 }
 
 fn main() {
-    let args = Args::from_env(&["info", "run", "offload", "boot", "sweep"], &["stats", "serial", "no-elide", "blocking"]);
+    let args = Args::from_env(
+        &["info", "run", "offload", "boot", "sweep", "stats"],
+        &["stats", "serial", "no-elide", "blocking"],
+    );
     match args.subcommand.as_deref() {
         Some("info") => info(&args),
         Some("run") => run(&args),
         Some("offload") => offload(&args),
         Some("boot") => boot(&args),
         Some("sweep") => sweep(&args),
+        Some("stats") => stats_cmd(&args),
         _ => {
-            eprintln!("usage: cheshire <info|run|offload|boot|sweep> [options]");
+            eprintln!("usage: cheshire <info|run|offload|boot|sweep|stats> [options]");
             eprintln!("  run <wfi|nop|twomm|mem|supervisor|hetero|contention|smp> [--cycles N] [--freq-mhz F]");
             eprintln!("      [--demand-pages N] [--timer-delta N]");
             eprintln!("      [--dma-kib N] [--tile N] [--dsa-jobs N] [--spm-kib N]  (contention)");
@@ -99,11 +112,15 @@ fn main() {
             eprintln!("      [--mshrs N] [--outstanding N] [--harts N]");
             eprintln!("  offload [--n 128] [--tile 64] [--artifacts artifacts/]");
             eprintln!("  boot");
+            eprintln!("  stats <workload> [--filter 'bw.*'] [run options]");
+            eprintln!("      run a workload, then dump every counter grouped by namespace");
             eprintln!("  sweep [--workloads nop,mem] [--backends rpc,hyperram]");
             eprintln!("        [--spm-masks 0xff,0x0f] [--dsa 0,1] [--tlb 16,4] [--cycles N]");
             eprintln!("        [--slots none,reduce+crc,reduce+crc@d2d]  (topology axis)");
             eprintln!("        [--mshrs 1,4,8] [--outstanding 1,4] [--harts 1,2,4]");
             eprintln!("        [--jobs N] [--serial] [--json sweep.json|-] [--json-arch arch.json]");
+            eprintln!("  run/sweep: [--trace out.json]  Perfetto trace-event export");
+            eprintln!("             (sweep writes one file per scenario: out-0.json, out-1.json, ...)");
             eprintln!("  any subcommand: [--no-elide]  disable event-horizon idle elision");
             eprintln!("                  (architecturally identical, reference cycle loop)");
             eprintln!("                  [--blocking]  single-outstanding memory hierarchy");
@@ -207,7 +224,23 @@ fn sweep(args: &Args) {
     };
     eprintln!("sweep: {n} scenarios on {threads} thread(s)");
     let t0 = std::time::Instant::now();
-    let results = harness::run_parallel(scenarios, threads);
+    // with `--trace base.json`, every SoC records its event stream and
+    // each scenario's Perfetto trace lands in its own `base-{i}.json`
+    let results = match args.get("trace") {
+        Some(base) => {
+            let mut results = Vec::with_capacity(n);
+            for (i, (r, trace)) in
+                harness::run_parallel_traced(scenarios, threads).into_iter().enumerate()
+            {
+                let path = trace_path(base, i);
+                std::fs::write(&path, trace.expect("tracing was enabled")).expect("write trace");
+                eprintln!("sweep: trace for {} written to {path}", r.name);
+                results.push(r);
+            }
+            results
+        }
+        None => harness::run_parallel(scenarios, threads),
+    };
     let wall = t0.elapsed().as_secs_f64();
     let report = SweepReport::new(results);
     // with `--json -` the JSON document owns stdout; the table moves to
@@ -247,14 +280,11 @@ fn info(args: &Args) {
     println!("\nArea breakdown (TSMC65, kGE):\n{}", b.table());
 }
 
-fn run(args: &Args) {
-    let which = args.positionals.first().map(|s| s.as_str()).unwrap_or("nop");
-    let mut cfg = load_config(args);
-    let freq = cfg.freq_hz;
-    let cycles = args.get_u64("cycles", 2_000_000);
-    // staging lives in harness::Workload so `run` and `sweep` simulate
-    // identical programs; only the knob defaults differ here
-    let workload = match which {
+/// Translate the `run`/`stats` positional + knob options into a staged
+/// workload. Staging lives in `harness::Workload` so `run` and `sweep`
+/// simulate identical programs; only the knob defaults differ here.
+fn build_workload(args: &Args, which: &str, cycles: u64) -> Workload {
+    match which {
         "wfi" => Workload::Wfi { window: cycles },
         "nop" => Workload::Nop { window: cycles },
         "twomm" => Workload::TwoMm { n: args.get_u64("n", 32) as usize },
@@ -275,25 +305,44 @@ fn run(args: &Args) {
             eprintln!("unknown workload {other}");
             std::process::exit(2);
         }
-    };
-    // workload-required topologies (matmul on slot 0 for contention,
-    // [reduce, crc] for hetero, [matmul, crc, reduce] for smp) — same
-    // normalization as Scenario::new
+    }
+}
+
+/// Workload-required topologies (matmul on slot 0 for contention,
+/// [reduce, crc] for hetero, [matmul, crc, reduce] for smp) — same
+/// normalization as `Scenario::new`.
+fn apply_required_slots(cfg: &mut CheshireConfig, workload: &Workload) {
     use cheshire::platform::{DsaKind, DsaSlot};
-    if matches!(workload, Workload::Contention { .. }) && cfg.dsa_slots.is_empty() {
-        cfg.dsa_slots = vec![DsaSlot::local(DsaKind::Matmul)];
+    if !cfg.dsa_slots.is_empty() {
+        return;
     }
-    if matches!(workload, Workload::Hetero { .. }) && cfg.dsa_slots.is_empty() {
-        cfg.dsa_slots = vec![DsaSlot::local(DsaKind::Reduce), DsaSlot::local(DsaKind::Crc)];
+    match workload {
+        Workload::Contention { .. } => cfg.dsa_slots = vec![DsaSlot::local(DsaKind::Matmul)],
+        Workload::Hetero { .. } => {
+            cfg.dsa_slots = vec![DsaSlot::local(DsaKind::Reduce), DsaSlot::local(DsaKind::Crc)]
+        }
+        Workload::Smp { .. } => {
+            cfg.dsa_slots = vec![
+                DsaSlot::local(DsaKind::Matmul),
+                DsaSlot::local(DsaKind::Crc),
+                DsaSlot::local(DsaKind::Reduce),
+            ]
+        }
+        _ => {}
     }
-    if matches!(workload, Workload::Smp { .. }) && cfg.dsa_slots.is_empty() {
-        cfg.dsa_slots = vec![
-            DsaSlot::local(DsaKind::Matmul),
-            DsaSlot::local(DsaKind::Crc),
-            DsaSlot::local(DsaKind::Reduce),
-        ];
-    }
+}
+
+fn run(args: &Args) {
+    let which = args.positionals.first().map(|s| s.as_str()).unwrap_or("nop");
+    let mut cfg = load_config(args);
+    let freq = cfg.freq_hz;
+    let cycles = args.get_u64("cycles", 2_000_000);
+    let workload = build_workload(args, which, cycles);
+    apply_required_slots(&mut cfg, &workload);
     let mut soc = Soc::new(cfg);
+    if args.get("trace").is_some() {
+        soc.enable_trace();
+    }
     let img = workload.stage(&mut soc);
     soc.preload(&img, DRAM_BASE);
     let host_t0 = std::time::Instant::now();
@@ -321,8 +370,109 @@ fn run(args: &Args) {
         p.ram_mw,
         p.total()
     );
+    if let Some(path) = args.get("trace") {
+        std::fs::write(path, soc.tracer.export_json(freq)).expect("write trace");
+        let dropped = soc.tracer.dropped();
+        println!(
+            "trace: {} events written to {path}{}",
+            soc.tracer.events().len(),
+            if dropped > 0 { format!(" ({dropped} dropped at capacity)") } else { String::new() }
+        );
+    }
     if args.flag("stats") {
         println!("\n{}", soc.stats.report());
+    }
+}
+
+/// `cheshire stats <workload>` — run a workload exactly as `run` would,
+/// then dump the entire counter registry grouped by namespace prefix
+/// (the key segment before the first `.`). `--filter` restricts the
+/// listing with a `*` glob, e.g. `--filter 'plugfab.*.lat_*'`.
+fn stats_cmd(args: &Args) {
+    let which = args.positionals.first().map(|s| s.as_str()).unwrap_or("nop");
+    let mut cfg = load_config(args);
+    let cycles = args.get_u64("cycles", 2_000_000);
+    let workload = build_workload(args, which, cycles);
+    apply_required_slots(&mut cfg, &workload);
+    let mut soc = Soc::new(cfg);
+    let img = workload.stage(&mut soc);
+    soc.preload(&img, DRAM_BASE);
+    let used = match workload.fixed_window() {
+        Some(window) => {
+            soc.run_cycles(window);
+            window
+        }
+        None => soc.run(cycles),
+    };
+    let filter = args.get("filter");
+    println!("workload={which} cycles={used} — counters by namespace");
+    let mut group = "";
+    let mut shown = 0usize;
+    let mut total = 0usize;
+    for (k, v) in soc.stats.iter() {
+        total += 1;
+        if let Some(pat) = filter {
+            if !glob_match(pat, k) {
+                continue;
+            }
+        }
+        let ns = k.split('.').next().unwrap_or(k);
+        if ns != group {
+            group = ns;
+            println!("\n[{ns}]");
+        }
+        println!("  {k:<36} {v}");
+        shown += 1;
+    }
+    match filter {
+        Some(pat) => println!("\n{shown} of {total} counters matched --filter {pat:?}"),
+        None => println!("\n{total} counters"),
+    }
+}
+
+/// Minimal `*` glob: `*` matches any (possibly empty) substring, every
+/// other character matches itself. Enough for `--filter 'bw.*'` without
+/// pulling in a regex crate.
+fn glob_match(pat: &str, s: &str) -> bool {
+    fn inner(p: &[u8], s: &[u8]) -> bool {
+        match p.first() {
+            None => s.is_empty(),
+            Some(b'*') => inner(&p[1..], s) || (!s.is_empty() && inner(p, &s[1..])),
+            Some(c) => s.first() == Some(c) && inner(&p[1..], &s[1..]),
+        }
+    }
+    inner(pat.as_bytes(), s.as_bytes())
+}
+
+/// Per-scenario trace path: insert `-{i}` before the extension
+/// (`out.json` → `out-2.json`), or append when there is none.
+fn trace_path(base: &str, i: usize) -> String {
+    match base.rsplit_once('.') {
+        Some((stem, ext)) if !stem.is_empty() && !ext.contains('/') => format!("{stem}-{i}.{ext}"),
+        _ => format!("{base}-{i}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{glob_match, trace_path};
+
+    #[test]
+    fn glob_matches_star_segments() {
+        assert!(glob_match("bw.*", "bw.rd_lat_le8"));
+        assert!(glob_match("*.lat_*", "plugfab.s0.lat_le32"));
+        assert!(glob_match("cpu.instr", "cpu.instr"));
+        assert!(glob_match("*", ""));
+        assert!(!glob_match("bw.*", "cpu.instr"));
+        assert!(!glob_match("cpu.instr", "cpu.instr2"));
+    }
+
+    #[test]
+    fn trace_paths_index_before_extension() {
+        assert_eq!(trace_path("out.json", 0), "out-0.json");
+        assert_eq!(trace_path("a/b/out.json", 3), "a/b/out-3.json");
+        assert_eq!(trace_path("noext", 1), "noext-1");
+        assert_eq!(trace_path("dir.d/noext", 2), "dir.d/noext-2");
     }
 }
 

@@ -24,7 +24,8 @@ use crate::platform::config::{CheshireConfig, DsaKind, MemBackend, MAX_HARTS};
 use crate::platform::memmap::*;
 use crate::rpc::manager::ManagerRegs;
 use crate::rpc::RpcSubsystem;
-use crate::sim::{Activity, Clock, Component, Cycle, Stats};
+use crate::sim::trace::{pid, DEFAULT_TRACE_CAPACITY};
+use crate::sim::{Activity, Clock, Component, Cycle, Stats, Tracer};
 use std::cell::RefCell;
 use std::rc::Rc;
 
@@ -93,6 +94,10 @@ pub struct Soc {
     pub clock: Clock,
     /// Event-count registry every component bumps.
     pub stats: Stats,
+    /// Shared event tracer. Disabled (all emits are no-ops) unless
+    /// [`Soc::enable_trace`] ran; tracing records architectural events
+    /// but never alters them.
+    pub tracer: Tracer,
 
     // managers
     /// The boot hart (hart 0): core + L1 caches + AXI manager port.
@@ -358,6 +363,7 @@ impl Soc {
             cfg,
             clock,
             stats,
+            tracer: Tracer::default(),
             cpu,
             cpu_bus,
             extra_harts,
@@ -394,12 +400,45 @@ impl Soc {
         }
     }
 
+    /// Switch on platform-wide event tracing: allocate the shared ring
+    /// buffer ([`DEFAULT_TRACE_CAPACITY`] events) and hand the tracer to
+    /// every emitting component. Call once, before running. Tracing is
+    /// observation-only — architectural state, cycle counts, UART output
+    /// and stats are bit-identical with it on or off.
+    pub fn enable_trace(&mut self) {
+        self.attach_tracer(Tracer::enabled(DEFAULT_TRACE_CAPACITY));
+    }
+
+    /// Propagate `tracer` into every component that emits events.
+    fn attach_tracer(&mut self, tracer: Tracer) {
+        self.cpu.set_tracer(&tracer);
+        for hart in &mut self.extra_harts {
+            hart.set_tracer(&tracer);
+        }
+        self.dma.set_tracer(&tracer);
+        self.llc.set_tracer(&tracer);
+        self.plic.borrow_mut().set_tracer(&tracer);
+        for (i, d) in self.dsa.iter_mut().enumerate() {
+            if let Some(d) = d {
+                d.attach_trace(i, &tracer);
+            }
+        }
+        for (i, r) in self.d2d.iter_mut().enumerate() {
+            if let Some(r) = r {
+                // even thread = host→device register link, odd = manager
+                r.sub_link.set_tracer(2 * i as u32, &tracer);
+                r.mgr_link.set_tracer(2 * i as u32 + 1, &tracer);
+            }
+        }
+        self.tracer = tracer;
+    }
+
     /// Attach a DSA plug-in to port pair `idx`.
     ///
     /// Panics if the slot is already occupied (a silent replacement used
     /// to discard the incumbent plug-in's state mid-run): the message
     /// names both plug-ins so a misconfigured topology is obvious.
-    pub fn plug_dsa(&mut self, idx: usize, dsa: Box<dyn DsaPlugin>) {
+    pub fn plug_dsa(&mut self, idx: usize, mut dsa: Box<dyn DsaPlugin>) {
         assert!(idx < self.cfg.dsa_port_pairs, "no such DSA port pair");
         if let Some(old) = &self.dsa[idx] {
             panic!(
@@ -408,6 +447,7 @@ impl Soc {
                 dsa.name()
             );
         }
+        dsa.attach_trace(idx, &self.tracer);
         self.dsa[idx] = Some(dsa);
     }
 
@@ -481,6 +521,7 @@ impl Soc {
     /// Advance the platform one clock cycle.
     pub fn tick(&mut self) {
         let now: Cycle = self.clock.now();
+        self.tracer.set_now(now);
         let stats = &mut self.stats;
 
         // managers (hart 0 first, then secondaries in hart order)
@@ -532,10 +573,15 @@ impl Soc {
             }
             plic.sample();
             let clint = self.clint.borrow();
+            // publish the CLINT timebase as every hart's `time` CSR
+            // (`rdtime` source); unconditional, so traced and untraced
+            // runs stay bit-identical
+            self.cpu.set_time(clint.mtime);
             self.cpu
                 .set_irqs(clint.msip(0), clint.mtip(0), plic.meip_hart(0), plic.seip_hart(0));
             for (i, hart) in self.extra_harts.iter_mut().enumerate() {
                 let h = i + 1;
+                hart.set_time(clint.mtime);
                 hart.set_irqs(clint.msip(h), clint.mtip(h), plic.meip_hart(h), plic.seip_hart(h));
             }
         }
@@ -661,6 +707,7 @@ impl Soc {
     /// `sched.*` counters distinguish an elided run from the reference
     /// loop.
     fn skip_cycles(&mut self, n: u64) {
+        let start = self.clock.now();
         self.cpu.skip(n, &mut self.stats);
         for hart in &mut self.extra_harts {
             hart.skip(n, &mut self.stats);
@@ -669,9 +716,18 @@ impl Soc {
             self.vga_scan.skip(n, &mut self.stats);
         }
         self.regbus.skip(n, &mut self.stats);
+        // keep the harts' `time` CSR in lockstep with the reference loop
+        // (the skip advanced the CLINT prescaler exactly as ticks would)
+        let mtime = self.clint.borrow().mtime;
+        self.cpu.set_time(mtime);
+        for hart in &mut self.extra_harts {
+            hart.set_time(mtime);
+        }
         self.clock.advance_by(n);
         self.stats.add("sched.elided_cycles", n);
         self.stats.bump("sched.fast_forwards");
+        self.tracer.span("sched.fast_forward", "sched", pid::SCHED, 0, start, n, n);
+        self.tracer.set_now(self.clock.now());
     }
 
     /// Advance the platform: one real [`Soc::tick`] whenever any component

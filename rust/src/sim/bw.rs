@@ -118,8 +118,115 @@ pub fn sub_w_beats_key(s: usize) -> &'static str {
     SUB_W_BEATS[s.min(SUB_W_BEATS.len() - 1)]
 }
 
+/// Per-manager read-latency histograms (same log2 buckets as [`RD_LAT`],
+/// attributed to the issuing crossbar manager port; index 7 absorbs any
+/// additional ports, like the byte counters).
+const MGR_RD_LAT: [[&str; 9]; 8] = [
+    ["bw.m0.rd_lat_le8", "bw.m0.rd_lat_le16", "bw.m0.rd_lat_le32", "bw.m0.rd_lat_le64", "bw.m0.rd_lat_le128", "bw.m0.rd_lat_le256", "bw.m0.rd_lat_le512", "bw.m0.rd_lat_le1024", "bw.m0.rd_lat_gt1024"],
+    ["bw.m1.rd_lat_le8", "bw.m1.rd_lat_le16", "bw.m1.rd_lat_le32", "bw.m1.rd_lat_le64", "bw.m1.rd_lat_le128", "bw.m1.rd_lat_le256", "bw.m1.rd_lat_le512", "bw.m1.rd_lat_le1024", "bw.m1.rd_lat_gt1024"],
+    ["bw.m2.rd_lat_le8", "bw.m2.rd_lat_le16", "bw.m2.rd_lat_le32", "bw.m2.rd_lat_le64", "bw.m2.rd_lat_le128", "bw.m2.rd_lat_le256", "bw.m2.rd_lat_le512", "bw.m2.rd_lat_le1024", "bw.m2.rd_lat_gt1024"],
+    ["bw.m3.rd_lat_le8", "bw.m3.rd_lat_le16", "bw.m3.rd_lat_le32", "bw.m3.rd_lat_le64", "bw.m3.rd_lat_le128", "bw.m3.rd_lat_le256", "bw.m3.rd_lat_le512", "bw.m3.rd_lat_le1024", "bw.m3.rd_lat_gt1024"],
+    ["bw.m4.rd_lat_le8", "bw.m4.rd_lat_le16", "bw.m4.rd_lat_le32", "bw.m4.rd_lat_le64", "bw.m4.rd_lat_le128", "bw.m4.rd_lat_le256", "bw.m4.rd_lat_le512", "bw.m4.rd_lat_le1024", "bw.m4.rd_lat_gt1024"],
+    ["bw.m5.rd_lat_le8", "bw.m5.rd_lat_le16", "bw.m5.rd_lat_le32", "bw.m5.rd_lat_le64", "bw.m5.rd_lat_le128", "bw.m5.rd_lat_le256", "bw.m5.rd_lat_le512", "bw.m5.rd_lat_le1024", "bw.m5.rd_lat_gt1024"],
+    ["bw.m6.rd_lat_le8", "bw.m6.rd_lat_le16", "bw.m6.rd_lat_le32", "bw.m6.rd_lat_le64", "bw.m6.rd_lat_le128", "bw.m6.rd_lat_le256", "bw.m6.rd_lat_le512", "bw.m6.rd_lat_le1024", "bw.m6.rd_lat_gt1024"],
+    ["bw.m7.rd_lat_le8", "bw.m7.rd_lat_le16", "bw.m7.rd_lat_le32", "bw.m7.rd_lat_le64", "bw.m7.rd_lat_le128", "bw.m7.rd_lat_le256", "bw.m7.rd_lat_le512", "bw.m7.rd_lat_le1024", "bw.m7.rd_lat_gt1024"],
+];
+
+/// Per-manager write-latency histograms.
+const MGR_WR_LAT: [[&str; 9]; 8] = [
+    ["bw.m0.wr_lat_le8", "bw.m0.wr_lat_le16", "bw.m0.wr_lat_le32", "bw.m0.wr_lat_le64", "bw.m0.wr_lat_le128", "bw.m0.wr_lat_le256", "bw.m0.wr_lat_le512", "bw.m0.wr_lat_le1024", "bw.m0.wr_lat_gt1024"],
+    ["bw.m1.wr_lat_le8", "bw.m1.wr_lat_le16", "bw.m1.wr_lat_le32", "bw.m1.wr_lat_le64", "bw.m1.wr_lat_le128", "bw.m1.wr_lat_le256", "bw.m1.wr_lat_le512", "bw.m1.wr_lat_le1024", "bw.m1.wr_lat_gt1024"],
+    ["bw.m2.wr_lat_le8", "bw.m2.wr_lat_le16", "bw.m2.wr_lat_le32", "bw.m2.wr_lat_le64", "bw.m2.wr_lat_le128", "bw.m2.wr_lat_le256", "bw.m2.wr_lat_le512", "bw.m2.wr_lat_le1024", "bw.m2.wr_lat_gt1024"],
+    ["bw.m3.wr_lat_le8", "bw.m3.wr_lat_le16", "bw.m3.wr_lat_le32", "bw.m3.wr_lat_le64", "bw.m3.wr_lat_le128", "bw.m3.wr_lat_le256", "bw.m3.wr_lat_le512", "bw.m3.wr_lat_le1024", "bw.m3.wr_lat_gt1024"],
+    ["bw.m4.wr_lat_le8", "bw.m4.wr_lat_le16", "bw.m4.wr_lat_le32", "bw.m4.wr_lat_le64", "bw.m4.wr_lat_le128", "bw.m4.wr_lat_le256", "bw.m4.wr_lat_le512", "bw.m4.wr_lat_le1024", "bw.m4.wr_lat_gt1024"],
+    ["bw.m5.wr_lat_le8", "bw.m5.wr_lat_le16", "bw.m5.wr_lat_le32", "bw.m5.wr_lat_le64", "bw.m5.wr_lat_le128", "bw.m5.wr_lat_le256", "bw.m5.wr_lat_le512", "bw.m5.wr_lat_le1024", "bw.m5.wr_lat_gt1024"],
+    ["bw.m6.wr_lat_le8", "bw.m6.wr_lat_le16", "bw.m6.wr_lat_le32", "bw.m6.wr_lat_le64", "bw.m6.wr_lat_le128", "bw.m6.wr_lat_le256", "bw.m6.wr_lat_le512", "bw.m6.wr_lat_le1024", "bw.m6.wr_lat_gt1024"],
+    ["bw.m7.wr_lat_le8", "bw.m7.wr_lat_le16", "bw.m7.wr_lat_le32", "bw.m7.wr_lat_le64", "bw.m7.wr_lat_le128", "bw.m7.wr_lat_le256", "bw.m7.wr_lat_le512", "bw.m7.wr_lat_le1024", "bw.m7.wr_lat_gt1024"],
+];
+
+/// Upper bound (in cycles) of each latency bucket; the `gt1024` overflow
+/// bucket reports the 2048 sentinel.
+pub const LAT_BOUNDS: [u64; 9] = [8, 16, 32, 64, 128, 256, 512, 1024, 2048];
+
+/// Stats key of read-latency bucket `b` for crossbar manager `m`.
+pub fn mgr_rd_lat_key(m: usize, b: usize) -> &'static str {
+    MGR_RD_LAT[m.min(MGR_RD_LAT.len() - 1)][b.min(8)]
+}
+
+/// Stats key of write-latency bucket `b` for crossbar manager `m`.
+pub fn mgr_wr_lat_key(m: usize, b: usize) -> &'static str {
+    MGR_WR_LAT[m.min(MGR_WR_LAT.len() - 1)][b.min(8)]
+}
+
+/// Extract a rank-based percentile from a 9-bucket log2 latency
+/// histogram: the upper bound of the bucket containing the
+/// `ceil(permille · N / 1000)`-th sample (1-indexed), or `None` when the
+/// histogram is empty. Integer-exact and deterministic — CI diffs depend
+/// on it.
+pub fn histogram_percentile(counts: &[u64; 9], permille: u64) -> Option<u64> {
+    let n: u64 = counts.iter().sum();
+    if n == 0 {
+        return None;
+    }
+    let rank = (permille * n).div_ceil(1000).clamp(1, n);
+    let mut seen = 0u64;
+    for (b, &c) in counts.iter().enumerate() {
+        seen += c;
+        if seen >= rank {
+            return Some(LAT_BOUNDS[b]);
+        }
+    }
+    Some(LAT_BOUNDS[8])
+}
+
+/// Read a manager's read-latency histogram out of a [`Stats`] snapshot.
+pub fn mgr_rd_lat_counts(stats: &Stats, m: usize) -> [u64; 9] {
+    let mut c = [0u64; 9];
+    for (b, slot) in c.iter_mut().enumerate() {
+        *slot = stats.get(mgr_rd_lat_key(m, b));
+    }
+    c
+}
+
+/// Read a manager's write-latency histogram out of a [`Stats`] snapshot.
+pub fn mgr_wr_lat_counts(stats: &Stats, m: usize) -> [u64; 9] {
+    let mut c = [0u64; 9];
+    for (b, slot) in c.iter_mut().enumerate() {
+        *slot = stats.get(mgr_wr_lat_key(m, b));
+    }
+    c
+}
+
+/// Read the fabric-wide (all-manager) read-latency histogram.
+pub fn total_rd_lat_counts(stats: &Stats) -> [u64; 9] {
+    let mut c = [0u64; 9];
+    for (b, slot) in c.iter_mut().enumerate() {
+        *slot = stats.get(RD_LAT[b]);
+    }
+    c
+}
+
+/// Read the fabric-wide (all-manager) write-latency histogram.
+pub fn total_wr_lat_counts(stats: &Stats) -> [u64; 9] {
+    let mut c = [0u64; 9];
+    for (b, slot) in c.iter_mut().enumerate() {
+        *slot = stats.get(WR_LAT[b]);
+    }
+    c
+}
+
+/// p50/p99/p999 of a 9-bucket histogram, or `None` when empty.
+pub fn percentile_triplet(counts: &[u64; 9]) -> Option<(u64, u64, u64)> {
+    Some((
+        histogram_percentile(counts, 500)?,
+        histogram_percentile(counts, 990)?,
+        histogram_percentile(counts, 999)?,
+    ))
+}
+
+/// Log2 latency bucket index: ≤8 → 0, ≤16 → 1, …, ≤1024 → 7, else 8.
 #[inline]
-fn lat_bucket(lat: u64) -> usize {
+pub fn lat_bucket(lat: u64) -> usize {
     // ≤8 → 0, ≤16 → 1, …, ≤1024 → 7, else 8
     let mut b = 0usize;
     let mut bound = 8u64;
@@ -160,7 +267,10 @@ impl BwTracker {
         if let Some(q) = self.rd.get_mut(&id) {
             if let Some(t0) = q.pop_front() {
                 let lat = now.saturating_sub(t0);
-                stats.bump(RD_LAT[lat_bucket(lat)]);
+                let b = lat_bucket(lat);
+                stats.bump(RD_LAT[b]);
+                // the manager index is the crossbar's ID prefix
+                stats.bump(mgr_rd_lat_key((id >> 8) as usize, b));
                 stats.add("bw.rd_lat_total", lat);
             }
             if q.is_empty() {
@@ -181,7 +291,9 @@ impl BwTracker {
         if let Some(q) = self.wr.get_mut(&id) {
             if let Some(t0) = q.pop_front() {
                 let lat = now.saturating_sub(t0);
-                stats.bump(WR_LAT[lat_bucket(lat)]);
+                let b = lat_bucket(lat);
+                stats.bump(WR_LAT[b]);
+                stats.bump(mgr_wr_lat_key((id >> 8) as usize, b));
                 stats.add("bw.wr_lat_total", lat);
             }
             if q.is_empty() {
@@ -254,5 +366,49 @@ mod tests {
         t.read_done(42, 10, &mut s);
         assert_eq!(s.get("bw.rd_lat_total"), 0);
         assert!(t.is_idle());
+    }
+
+    #[test]
+    fn per_manager_latency_buckets_follow_the_id_prefix() {
+        let mut t = BwTracker::new();
+        let mut s = Stats::new();
+        t.read_issued(0x305, 3, 64, 100, &mut s);
+        t.read_done(0x305, 120, &mut s); // 20 cycles → le32
+        assert_eq!(s.get("bw.m3.rd_lat_le32"), 1);
+        assert_eq!(s.get("bw.rd_lat_le32"), 1);
+        t.write_issued(0xf01, 7, 8, 0, &mut s); // prefix 0xf clamps to m7
+        t.write_done(0xf01, 5000, &mut s);
+        assert_eq!(s.get("bw.m7.wr_lat_gt1024"), 1);
+    }
+
+    #[test]
+    fn percentiles_are_rank_based_bucket_bounds() {
+        // 90 fast samples (≤8), 9 medium (≤64), 1 slow (>1024)
+        let mut c = [0u64; 9];
+        c[0] = 90;
+        c[3] = 9;
+        c[8] = 1;
+        assert_eq!(histogram_percentile(&c, 500), Some(8), "p50 in the fast bucket");
+        assert_eq!(histogram_percentile(&c, 990), Some(64), "p99 = 99th of 100 samples");
+        assert_eq!(histogram_percentile(&c, 999), Some(2048), "p999 rounds up to the tail");
+        assert_eq!(percentile_triplet(&c), Some((8, 64, 2048)));
+        assert_eq!(histogram_percentile(&[0; 9], 500), None, "empty histogram");
+        // single sample: every percentile is that sample's bucket
+        let mut one = [0u64; 9];
+        one[4] = 1;
+        assert_eq!(percentile_triplet(&one), Some((128, 128, 128)));
+    }
+
+    #[test]
+    fn histogram_snapshots_read_back_from_stats() {
+        let mut s = Stats::new();
+        s.add("bw.m2.rd_lat_le16", 4);
+        s.add("bw.m2.rd_lat_gt1024", 2);
+        s.add("bw.rd_lat_le16", 4);
+        let c = mgr_rd_lat_counts(&s, 2);
+        assert_eq!(c[1], 4);
+        assert_eq!(c[8], 2);
+        assert_eq!(total_rd_lat_counts(&s)[1], 4);
+        assert_eq!(mgr_wr_lat_counts(&s, 2), [0; 9]);
     }
 }

@@ -16,11 +16,13 @@ pub mod bw;
 pub mod chan;
 pub mod sched;
 pub mod stats;
+pub mod trace;
 
 pub use bw::BwTracker;
 pub use chan::{link, Chan, Link};
 pub use sched::{Activity, Component};
 pub use stats::Stats;
+pub use trace::Tracer;
 
 /// Simulation time in clock cycles of the single `system` clock domain
 /// (Neo runs everything from one FLL-generated clock; paper §III-A).

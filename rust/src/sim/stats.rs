@@ -173,6 +173,38 @@ mod tests {
         }
     }
 
+    /// The CI byte-stability contract: merged parallel-worker registries
+    /// serialize in identical (BTreeMap key) order no matter which worker
+    /// touched which counter first or in what interleaving the merges
+    /// happened — `iter()` order is a pure function of the key *set*.
+    #[test]
+    fn merge_order_never_changes_serialization_order() {
+        let mut w1 = Stats::new();
+        w1.add("plugfab.descs", 3);
+        w1.add("cpu.instr", 10);
+        w1.add("bw.rd_reqs", 7);
+        let mut w2 = Stats::new();
+        w2.add("bw.rd_reqs", 1);
+        w2.add("sched.elided_cycles", 99);
+        w2.add("cpu.instr", 5);
+
+        let mut ab = Stats::new();
+        ab.merge(&w1);
+        ab.merge(&w2);
+        let mut ba = Stats::new();
+        ba.merge(&w2);
+        ba.merge(&w1);
+
+        let seq_ab: Vec<(&str, u64)> = ab.iter().collect();
+        let seq_ba: Vec<(&str, u64)> = ba.iter().collect();
+        assert_eq!(seq_ab, seq_ba, "iteration order is interleaving-independent");
+        let keys: Vec<&str> = seq_ab.iter().map(|(k, _)| *k).collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted, "iteration is sorted key order");
+        assert_eq!(ab.report(), ba.report(), "rendered reports are byte-identical");
+    }
+
     #[test]
     fn duplicate_content_different_pointers_share_a_slot() {
         let mut s = Stats::new();

@@ -1,0 +1,414 @@
+//! Deterministic, ring-buffered event tracing with Chrome/Perfetto export.
+//!
+//! The platform's observability layer: components emit typed instants and
+//! spans for the load-bearing events (IRQ raise/claim/complete, descriptor
+//! post/fetch/complete, MSHR allocate/merge/retire, DMA/D2D bursts, TLB
+//! walks and page faults, privilege transitions, `wfi` park/wake, and
+//! scheduler fast-forwards) through a cloneable [`Tracer`] handle that the
+//! [`crate::platform::Soc`] threads through the component tree alongside
+//! [`super::Stats`].
+//!
+//! Design contract (the determinism invariant, asserted by
+//! `tests/proptests.rs`):
+//! * **Zero overhead when disabled** — a disabled `Tracer` is a `None`
+//!   behind one branch; no allocation, no formatting, no clock reads.
+//! * **No architectural feedback** — tracing only *observes*: every emit
+//!   site reads state it was already holding, so cycle counts, UART
+//!   output, and `Stats` are bit-identical with tracing on or off.
+//! * **Deterministic export** — events are stamped in simulated cycles
+//!   (converted to microseconds only at export), the ring-drop policy is
+//!   deterministic, and floats print with Rust's shortest-roundtrip
+//!   formatting, so two identical-seed runs produce byte-identical JSON.
+//!
+//! The export target is the Chrome trace-event format that Perfetto and
+//! `chrome://tracing` load directly: one "process" per component class,
+//! one "thread" per hart/slot/context, timestamps in simulated
+//! microseconds derived from the cycle counter.
+
+use super::Cycle;
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
+
+/// Trace "process" ids — one Perfetto process per component class.
+pub mod pid {
+    /// CVA6 harts (one thread per hart).
+    pub const CPU: u32 = 1;
+    /// Interrupt fabric (PLIC sources and contexts).
+    pub const IRQ: u32 = 2;
+    /// DSA plug-in fabric (one thread per slot).
+    pub const DSA: u32 = 3;
+    /// Last-level cache / MSHR file (one thread per MSHR slot).
+    pub const LLC: u32 = 4;
+    /// The AXI4 DMA engine.
+    pub const DMA: u32 = 5;
+    /// The event-horizon scheduler.
+    pub const SCHED: u32 = 6;
+    /// Die-to-die links (one thread per link direction).
+    pub const D2D: u32 = 7;
+    /// Memory-management units (TLB walks and page faults, per hart).
+    pub const MMU: u32 = 8;
+}
+
+/// On the IRQ process, claim/complete threads are PLIC contexts offset by
+/// this bias so they never collide with per-source raise threads.
+pub const IRQ_CTX_TID_BASE: u32 = 64;
+
+/// One trace event: an instant (`span == false`) or a complete span.
+///
+/// Events carry raw cycle stamps; conversion to microseconds happens only
+/// at export time, so in-memory content is exactly comparable between
+/// runs (the elided ≡ unelided trace-content property keys on this).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    /// Event name (static, e.g. `"irq.raise"`).
+    pub name: &'static str,
+    /// Category (static, e.g. `"irq"`); Perfetto filters on this.
+    pub cat: &'static str,
+    /// Trace process id (see [`pid`]).
+    pub pid: u32,
+    /// Trace thread id within the process (hart, slot, context, …).
+    pub tid: u32,
+    /// Start cycle of the event.
+    pub cycle: Cycle,
+    /// Duration in cycles (0 for instants).
+    pub dur: u64,
+    /// Whether this is a complete span (`ph: "X"`) or an instant (`"i"`).
+    pub span: bool,
+    /// One free-form payload value (source id, line address, byte count…).
+    pub arg: u64,
+}
+
+struct TraceCore {
+    /// The platform's current cycle, refreshed by `Soc::tick` — lets
+    /// emitters without a `now` parameter (PLIC register file, LLC,
+    /// frontend register paths) stamp events without plumbing the clock.
+    now: Cell<Cycle>,
+    buf: RefCell<Vec<Event>>,
+    /// Ring start index once `buf` is at capacity.
+    start: Cell<usize>,
+    capacity: usize,
+    dropped: Cell<u64>,
+}
+
+/// Default event capacity of an enabled tracer's ring buffer.
+pub const DEFAULT_TRACE_CAPACITY: usize = 1 << 20;
+
+/// A cloneable tracing handle. Disabled by default (`Tracer::default()` /
+/// [`Tracer::disabled`]); clones share one ring buffer.
+#[derive(Clone, Default)]
+pub struct Tracer {
+    core: Option<Rc<TraceCore>>,
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.core {
+            None => write!(f, "Tracer(disabled)"),
+            Some(c) => write!(
+                f,
+                "Tracer(enabled, {} events, {} dropped)",
+                c.buf.borrow().len(),
+                c.dropped.get()
+            ),
+        }
+    }
+}
+
+impl Tracer {
+    /// A disabled tracer: every emit is a single-branch no-op.
+    pub fn disabled() -> Self {
+        Self { core: None }
+    }
+
+    /// An enabled tracer with an event ring of `capacity` entries
+    /// (oldest events are overwritten deterministically once full).
+    pub fn enabled(capacity: usize) -> Self {
+        Self {
+            core: Some(Rc::new(TraceCore {
+                now: Cell::new(0),
+                buf: RefCell::new(Vec::new()),
+                start: Cell::new(0),
+                capacity: capacity.max(1),
+                dropped: Cell::new(0),
+            })),
+        }
+    }
+
+    /// Whether events are being recorded.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.core.is_some()
+    }
+
+    /// Refresh the shared "current cycle" cell (called by the platform
+    /// once per tick and after fast-forwards).
+    #[inline]
+    pub fn set_now(&self, cycle: Cycle) {
+        if let Some(c) = &self.core {
+            c.now.set(cycle);
+        }
+    }
+
+    /// The platform cycle as last published via [`Tracer::set_now`]
+    /// (0 when disabled — callers only use this inside emit paths).
+    #[inline]
+    pub fn now(&self) -> Cycle {
+        self.core.as_ref().map(|c| c.now.get()).unwrap_or(0)
+    }
+
+    #[inline]
+    fn push(&self, ev: Event) {
+        if let Some(c) = &self.core {
+            let mut buf = c.buf.borrow_mut();
+            if buf.len() < c.capacity {
+                buf.push(ev);
+            } else {
+                let s = c.start.get();
+                buf[s] = ev;
+                c.start.set((s + 1) % c.capacity);
+                c.dropped.set(c.dropped.get() + 1);
+            }
+        }
+    }
+
+    /// Emit an instant stamped with the shared "current cycle".
+    #[inline]
+    pub fn instant(&self, name: &'static str, cat: &'static str, pid: u32, tid: u32, arg: u64) {
+        if self.core.is_some() {
+            let cycle = self.now();
+            self.push(Event { name, cat, pid, tid, cycle, dur: 0, span: false, arg });
+        }
+    }
+
+    /// Emit an instant with an explicit cycle stamp.
+    #[inline]
+    pub fn instant_at(
+        &self,
+        name: &'static str,
+        cat: &'static str,
+        pid: u32,
+        tid: u32,
+        cycle: Cycle,
+        arg: u64,
+    ) {
+        if self.core.is_some() {
+            self.push(Event { name, cat, pid, tid, cycle, dur: 0, span: false, arg });
+        }
+    }
+
+    /// Emit a complete span `[start, start + dur)`.
+    #[inline]
+    pub fn span(
+        &self,
+        name: &'static str,
+        cat: &'static str,
+        pid: u32,
+        tid: u32,
+        start: Cycle,
+        dur: u64,
+        arg: u64,
+    ) {
+        if self.core.is_some() {
+            self.push(Event { name, cat, pid, tid, cycle: start, dur, span: true, arg });
+        }
+    }
+
+    /// Snapshot the recorded events in emission order (oldest first).
+    pub fn events(&self) -> Vec<Event> {
+        match &self.core {
+            None => Vec::new(),
+            Some(c) => {
+                let buf = c.buf.borrow();
+                let s = c.start.get();
+                let mut out = Vec::with_capacity(buf.len());
+                out.extend_from_slice(&buf[s..]);
+                out.extend_from_slice(&buf[..s]);
+                out
+            }
+        }
+    }
+
+    /// Events overwritten by the ring since tracing started.
+    pub fn dropped(&self) -> u64 {
+        self.core.as_ref().map(|c| c.dropped.get()).unwrap_or(0)
+    }
+
+    /// Export as a Chrome/Perfetto trace-event JSON document.
+    ///
+    /// Timestamps are simulated microseconds (`cycle / freq_mhz`); one
+    /// metadata record names each process and each thread. The output is
+    /// byte-deterministic for a given event sequence and frequency.
+    pub fn export_json(&self, freq_hz: f64) -> String {
+        let events = self.events();
+        let to_us = |cycle: u64| -> f64 { cycle as f64 * 1.0e6 / freq_hz };
+        let mut out = String::from("{\"displayTimeUnit\": \"ms\", \"traceEvents\": [\n");
+        // metadata: processes, then threads, in sorted order
+        let mut pids: Vec<u32> = events.iter().map(|e| e.pid).collect();
+        pids.sort_unstable();
+        pids.dedup();
+        let mut threads: Vec<(u32, u32)> = events.iter().map(|e| (e.pid, e.tid)).collect();
+        threads.sort_unstable();
+        threads.dedup();
+        let mut first = true;
+        let mut emit = |out: &mut String, line: String| {
+            if !first {
+                out.push_str(",\n");
+            }
+            first = false;
+            out.push_str(&line);
+        };
+        for p in &pids {
+            emit(
+                &mut out,
+                format!(
+                    "{{\"ph\": \"M\", \"pid\": {p}, \"tid\": 0, \"name\": \"process_name\", \
+                     \"args\": {{\"name\": \"{}\"}}}}",
+                    process_label(*p)
+                ),
+            );
+        }
+        for (p, t) in &threads {
+            emit(
+                &mut out,
+                format!(
+                    "{{\"ph\": \"M\", \"pid\": {p}, \"tid\": {t}, \"name\": \"thread_name\", \
+                     \"args\": {{\"name\": \"{}\"}}}}",
+                    thread_label(*p, *t)
+                ),
+            );
+        }
+        for e in &events {
+            let line = if e.span {
+                format!(
+                    "{{\"name\": \"{}\", \"cat\": \"{}\", \"ph\": \"X\", \"ts\": {}, \
+                     \"dur\": {}, \"pid\": {}, \"tid\": {}, \
+                     \"args\": {{\"v\": {}, \"cycle\": {}}}}}",
+                    e.name,
+                    e.cat,
+                    to_us(e.cycle),
+                    to_us(e.dur),
+                    e.pid,
+                    e.tid,
+                    e.arg,
+                    e.cycle
+                )
+            } else {
+                format!(
+                    "{{\"name\": \"{}\", \"cat\": \"{}\", \"ph\": \"i\", \"ts\": {}, \
+                     \"s\": \"t\", \"pid\": {}, \"tid\": {}, \
+                     \"args\": {{\"v\": {}, \"cycle\": {}}}}}",
+                    e.name,
+                    e.cat,
+                    to_us(e.cycle),
+                    e.pid,
+                    e.tid,
+                    e.arg,
+                    e.cycle
+                )
+            };
+            emit(&mut out, line);
+        }
+        out.push_str("\n]}\n");
+        out
+    }
+}
+
+/// Human-readable name of a trace process.
+fn process_label(p: u32) -> &'static str {
+    match p {
+        pid::CPU => "cpu",
+        pid::IRQ => "irq",
+        pid::DSA => "dsa",
+        pid::LLC => "llc",
+        pid::DMA => "dma",
+        pid::SCHED => "sched",
+        pid::D2D => "d2d",
+        pid::MMU => "mmu",
+        _ => "other",
+    }
+}
+
+/// Human-readable name of a trace thread within process `p`.
+fn thread_label(p: u32, t: u32) -> String {
+    match p {
+        pid::CPU | pid::MMU => format!("hart{t}"),
+        pid::IRQ if t >= IRQ_CTX_TID_BASE => format!("ctx{}", t - IRQ_CTX_TID_BASE),
+        pid::IRQ => format!("src{t}"),
+        pid::DSA => format!("slot{t}"),
+        pid::LLC => format!("mshr{t}"),
+        pid::D2D => format!("link{t}"),
+        _ => format!("t{t}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::disabled();
+        t.set_now(100);
+        t.instant("x", "c", pid::CPU, 0, 1);
+        t.span("y", "c", pid::CPU, 0, 5, 10, 2);
+        assert!(!t.is_enabled());
+        assert!(t.events().is_empty());
+        assert_eq!(t.dropped(), 0);
+        assert_eq!(t.now(), 0);
+    }
+
+    #[test]
+    fn clones_share_one_buffer_and_now_cell() {
+        let t = Tracer::enabled(16);
+        let u = t.clone();
+        t.set_now(42);
+        assert_eq!(u.now(), 42);
+        u.instant("a", "c", pid::IRQ, 3, 7);
+        let evs = t.events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].cycle, 42);
+        assert_eq!(evs[0].tid, 3);
+        assert_eq!(evs[0].arg, 7);
+        assert!(!evs[0].span);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_deterministically() {
+        let t = Tracer::enabled(4);
+        for i in 0..7u64 {
+            t.instant_at("e", "c", pid::CPU, 0, i, i);
+        }
+        let evs = t.events();
+        assert_eq!(evs.len(), 4);
+        assert_eq!(evs.iter().map(|e| e.arg).collect::<Vec<_>>(), vec![3, 4, 5, 6]);
+        assert_eq!(t.dropped(), 3);
+    }
+
+    #[test]
+    fn export_is_deterministic_and_wellformed() {
+        let t = Tracer::enabled(64);
+        t.instant_at("irq.raise", "irq", pid::IRQ, 1, 200, 1);
+        t.span("sched.fast_forward", "sched", pid::SCHED, 0, 300, 50, 50);
+        let j1 = t.export_json(200.0e6);
+        let j2 = t.export_json(200.0e6);
+        assert_eq!(j1, j2);
+        assert!(j1.contains("\"process_name\""));
+        assert!(j1.contains("\"thread_name\""));
+        assert!(j1.contains("\"irq.raise\""));
+        assert!(j1.contains("\"ph\": \"X\""));
+        assert!(j1.contains("\"ph\": \"i\""));
+        // 200 MHz: cycle 200 = 1 µs
+        assert!(j1.contains("\"ts\": 1,") || j1.contains("\"ts\": 1 "), "µs conversion: {j1}");
+        assert_eq!(j1.matches('{').count(), j1.matches('}').count());
+        assert_eq!(j1.matches('[').count(), j1.matches(']').count());
+    }
+
+    #[test]
+    fn thread_labels_distinguish_irq_sources_and_contexts() {
+        assert_eq!(thread_label(pid::IRQ, 3), "src3");
+        assert_eq!(thread_label(pid::IRQ, IRQ_CTX_TID_BASE + 2), "ctx2");
+        assert_eq!(thread_label(pid::CPU, 1), "hart1");
+        assert_eq!(thread_label(pid::DSA, 0), "slot0");
+        assert_eq!(process_label(pid::SCHED), "sched");
+    }
+}

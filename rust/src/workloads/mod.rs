@@ -626,6 +626,12 @@ pub fn hetero_program(base: u64, len: u32) -> Vec<u8> {
 /// relative to its `base` (= `DRAM_BASE`): `[magic, timer_irqs,
 /// demand_faults, checksum]` as four u64 words.
 pub const SUPERVISOR_RESULT_OFF: u64 = 0x30_0000;
+/// Self-profile block the supervisor publishes right after the result
+/// block: `[rdcycle, rdinstret, rdtime, hpmcounter3 (data-TLB misses),
+/// hpmcounter4 (page-table walks)]` as five u64 words, all read from
+/// S-mode through the user-counter aliases the firmware's `mcounteren`
+/// opened.
+pub const SUPERVISOR_PROFILE_OFF: u64 = SUPERVISOR_RESULT_OFF + 32;
 /// Magic the supervisor writes on a clean run.
 pub const SUPERVISOR_MAGIC: u64 = 0x600D;
 /// Value the supervisor stores into every demand-mapped page; the
@@ -746,6 +752,17 @@ pub fn supervisor_program(base: u64, demand_pages: u32, timer_delta: u32) -> Vec
     a.sw(ZERO, S4, 4);
     a.li(T0, (1 << 7) | (1 << 1));
     a.csrrw(ZERO, 0x304, T0); // mie = MTIE | SSIE
+    // ---- guest-visible counters: mux two HPM events onto the VM
+    // machinery this workload exercises, and open cycle/time/instret +
+    // hpmcounter3/4 to S-mode (mcounteren) and U-mode (scounteren) so
+    // the supervisor can self-profile with plain rdcycle/rdinstret ----
+    a.li(T0, crate::cpu::core::hpm_event::DTLB_MISS as i64);
+    a.csrrw(ZERO, 0x323, T0); // mhpmevent3 = data-TLB miss
+    a.li(T0, crate::cpu::core::hpm_event::PTW_WALK as i64);
+    a.csrrw(ZERO, 0x324, T0); // mhpmevent4 = page-table walk
+    a.li(T0, 0x1f); // CY | TM | IR | HPM3 | HPM4
+    a.csrrw(ZERO, 0x306, T0); // mcounteren
+    a.csrrw(ZERO, 0x106, T0); // scounteren
     // ---- enable Sv39 and drop to S ----
     a.li(T0, ((8u64 << 60) | (root >> 12)) as i64);
     a.csrrw(ZERO, 0x180, T0); // satp
@@ -817,6 +834,20 @@ pub fn supervisor_program(base: u64, demand_pages: u32, timer_delta: u32) -> Vec
     a.sd(S5, T0, 8);
     a.sd(S6, T0, 16);
     a.sd(S11, T0, 24);
+    // self-profile: read the user-counter aliases from S-mode (gated by
+    // the mcounteren bits the firmware opened) and publish them at
+    // [`SUPERVISOR_PROFILE_OFF`] — the harness cross-checks these
+    // guest-side readings against its own `mmu.*`/`cpu.*` stats
+    a.csrrs(T1, 0xc00, ZERO); // rdcycle
+    a.sd(T1, T0, 32);
+    a.csrrs(T1, 0xc02, ZERO); // rdinstret
+    a.sd(T1, T0, 40);
+    a.csrrs(T1, 0xc01, ZERO); // rdtime (CLINT mtime mirror)
+    a.sd(T1, T0, 48);
+    a.csrrs(T1, 0xc03, ZERO); // hpmcounter3 = data-TLB misses
+    a.sd(T1, T0, 56);
+    a.csrrs(T1, 0xc04, ZERO); // hpmcounter4 = page-table walks
+    a.sd(T1, T0, 64);
     a.fence();
     a.ebreak();
 
@@ -856,6 +887,11 @@ pub const SMP_MM_C_OFF: u64 = 0x35_0000;
 pub const SMP_RING_OFF: u64 = 0x36_0000;
 /// SMP: merged result block `[magic, mb0, mb1, mb2]` (DRAM offset).
 pub const SMP_RESULT_OFF: u64 = 0x3a_0000;
+/// SMP: hart 0's guest self-profile `[rdcycle, rdinstret, rdtime,
+/// hpmcounter3 (IRQs taken), hpmcounter4 (L1D refills)]` (DRAM offset).
+/// Sits past the 80-byte merged block on purpose: the profile is
+/// timing-shaped and so exempt from the hart-count-invariance compare.
+pub const SMP_PROFILE_OFF: u64 = SMP_RESULT_OFF + 0x80;
 /// SMP: engine-written CRC32 result word (DRAM offset).
 pub const SMP_CRC_RES_OFF: u64 = SMP_RESULT_OFF + 64;
 /// SMP: engine-written reduce-sum result word (DRAM offset).
@@ -1026,6 +1062,17 @@ pub fn smp_program_with(base: u64, p: SmpParams) -> Vec<u8> {
     a.csrrw(ZERO, 0x141, T0); // mepc
     a.li(T0, (1 << 11) | (1 << 1));
     a.csrrw(ZERO, 0x304, T0); // mie = MEIE | SSIE
+    // guest-visible counters, programmed identically on every hart:
+    // hpmcounter3 counts taken interrupts (the per-hart completion
+    // relays), hpmcounter4 counts L1D refills; cycle/time/instret +
+    // both HPM counters are opened to S-mode via mcounteren
+    a.li(T0, crate::cpu::core::hpm_event::IRQ_TAKEN as i64);
+    a.csrrw(ZERO, 0x323, T0); // mhpmevent3
+    a.li(T0, crate::cpu::core::hpm_event::L1D_MISS as i64);
+    a.csrrw(ZERO, 0x324, T0); // mhpmevent4
+    a.li(T0, 0x1f); // CY | TM | IR | HPM3 | HPM4
+    a.csrrw(ZERO, 0x306, T0); // mcounteren
+    a.csrrw(ZERO, 0x106, T0); // scounteren
     a.li(T0, ((8u64 << 60) | (root >> 12)) as i64);
     a.csrrw(ZERO, 0x180, T0); // satp: hart 0's table, every hart
     a.sfence_vma(ZERO, ZERO);
@@ -1214,6 +1261,21 @@ pub fn smp_program_with(base: u64, p: SmpParams) -> Vec<u8> {
                 a.sd(T0, S1, 8 + 8 * s as i32);
             }
             a.fence();
+            // hart 0's guest self-profile at [`SMP_PROFILE_OFF`] —
+            // deliberately *outside* the 80-byte result block the
+            // hart-count-invariance battery compares, because cycle and
+            // IRQ splits legitimately vary with the hart count
+            a.csrrs(T0, 0xc00, ZERO); // rdcycle
+            a.sd(T0, S1, 0x80);
+            a.csrrs(T0, 0xc02, ZERO); // rdinstret
+            a.sd(T0, S1, 0x88);
+            a.csrrs(T0, 0xc01, ZERO); // rdtime
+            a.sd(T0, S1, 0x90);
+            a.csrrs(T0, 0xc03, ZERO); // hpmcounter3 = IRQs taken
+            a.sd(T0, S1, 0x98);
+            a.csrrs(T0, 0xc04, ZERO); // hpmcounter4 = L1D refills
+            a.sd(T0, S1, 0xa0);
+            a.fence();
             // UART signature + halt
             a.li(S1, UART_BASE as i64);
             a.li(T0, b'S' as i64);
@@ -1332,6 +1394,25 @@ mod tests {
         assert!(soc.stats.get("mmu.walks") > 0);
         assert!(soc.stats.get("mmu.itlb_hit") > 0);
         assert!(soc.stats.get("mmu.page_faults") >= demand_pages as u64);
+        // guest self-profile: every published S-mode counter reading is
+        // non-zero and bounded by the harness's own view of the run
+        let p = soc.dram_read(SUPERVISOR_PROFILE_OFF as usize, 40).to_vec();
+        let pw = |i: usize| u64::from_le_bytes(p[i * 8..(i + 1) * 8].try_into().unwrap());
+        let (cycle, instret, time, dtlb, ptw) = (pw(0), pw(1), pw(2), pw(3), pw(4));
+        assert!(cycle > 0 && cycle <= soc.clock.now(), "rdcycle in range: {cycle}");
+        assert!(
+            instret > 0 && instret <= soc.stats.get("cpu.instr"),
+            "rdinstret ≤ harness retire count: {instret}"
+        );
+        assert!(time > 0 && time <= soc.clock.now(), "rdtime advanced: {time}");
+        assert!(
+            dtlb > 0 && dtlb <= soc.stats.get("mmu.dtlb_miss"),
+            "guest DTLB-miss count ≤ harness: {dtlb}"
+        );
+        assert!(
+            ptw > 0 && ptw <= soc.stats.get("mmu.walks"),
+            "guest PTW count ≤ harness: {ptw}"
+        );
     }
 
     /// The heterogeneous pipeline end to end on the assembled platform:
@@ -1486,6 +1567,51 @@ mod tests {
         let (r2, jobs2) = run(2);
         assert_eq!(r2, r1, "result block is hart-count-invariant across rounds");
         assert_eq!(jobs2, jobs1);
+    }
+
+    /// Hart 0's S-mode self-profile (`SMP_PROFILE_OFF`): with one hart
+    /// online it observes the whole run, so every published counter is
+    /// non-zero and bounded by the harness's own stats — rdinstret by
+    /// the retire count, hpmcounter3 by `cpu.irq_taken` (the mux is
+    /// programmed to IRQ_TAKEN), hpmcounter4 (L1D refills) by the
+    /// stalled-cycle count every refill must pay at least one of.
+    #[test]
+    fn smp_guest_self_profile_matches_harness() {
+        use crate::platform::config::{DsaKind, DsaSlot};
+        let mut cfg = CheshireConfig::neo();
+        cfg.harts = 1;
+        cfg.dsa_slots = vec![
+            DsaSlot::local(DsaKind::Matmul),
+            DsaSlot::local(DsaKind::Crc),
+            DsaSlot::local(DsaKind::Reduce),
+        ];
+        let mut soc = Soc::new(cfg);
+        soc.dram_write(SMP_SRC_OFF as usize, &[9u8; 256]);
+        soc.dram_write(SMP_MM_A_OFF as usize, &1.0f32.to_le_bytes().repeat(16));
+        soc.dram_write(SMP_MM_B_OFF as usize, &2.0f32.to_le_bytes().repeat(16));
+        let p = SmpParams { harts: 1, len: 256, rounds: 2, mm_n: 4, jobs: SMP_SLOT_JOBS };
+        soc.preload(&smp_program_with(DRAM_BASE, p), DRAM_BASE);
+        soc.run(20_000_000);
+        assert!(soc.cpu.halted, "smp must halt (pc={:#x})", soc.cpu.core.pc);
+        soc.run_cycles(5_000);
+        let prof = soc.dram_read(SMP_PROFILE_OFF as usize, 40).to_vec();
+        let pw = |i: usize| u64::from_le_bytes(prof[i * 8..(i + 1) * 8].try_into().unwrap());
+        let (cycle, instret, time, irqs, l1d) = (pw(0), pw(1), pw(2), pw(3), pw(4));
+        assert!(cycle > 0 && cycle <= soc.clock.now(), "rdcycle in range: {cycle}");
+        assert!(
+            instret > 0 && instret <= soc.stats.get("cpu.instr"),
+            "rdinstret ≤ harness retire count: {instret}"
+        );
+        assert!(time > 0 && time <= soc.clock.now(), "rdtime advanced: {time}");
+        assert!(
+            irqs > 0 && irqs <= soc.stats.get("cpu.irq_taken"),
+            "guest IRQ count ≤ harness: {irqs} vs {}",
+            soc.stats.get("cpu.irq_taken")
+        );
+        assert!(
+            l1d > 0 && l1d <= soc.stats.get("cpu.active_cycles"),
+            "guest L1D refill count bounded by stalled cycles: {l1d}"
+        );
     }
 
     #[test]

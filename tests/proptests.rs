@@ -13,7 +13,11 @@
 //! * Sv39 translation: random VA→PA walks over generated page tables
 //!   agree with an independent reference walker, superpage-alignment
 //!   faults are raised, and permission bits are enforced at every
-//!   (privilege, access, SUM/MXR) combination.
+//!   (privilege, access, SUM/MXR) combination;
+//! * observability: tracing never perturbs architectural state (trace-on
+//!   and trace-off runs are bit-identical), the non-scheduler event
+//!   stream is elision-invariant, and identical-seed exports are
+//!   byte-identical.
 
 use cheshire::axi::memsub::MemSub;
 use cheshire::axi::port::axi_bus;
@@ -933,5 +937,186 @@ mod smp_equivalence {
         let get = |k: &str| fp.arch_stats.iter().find(|(n, _)| *n == k).map_or(0, |(_, v)| *v);
         assert_eq!(get("dsa.jobs"), 6, "all six descriptors completed");
         assert_eq!(get("rpc.dev_violations"), 0);
+    }
+}
+
+/// The observability determinism battery: event tracing is a pure
+/// observer. For random workload points, (a) a traced and an untraced
+/// run are architecturally bit-identical — full DRAM/SPM images, UART,
+/// halt cycle, every stat including `sched.*`; (b) the *content* of the
+/// event stream (name, cat, pid, tid, arg — everything but timestamps)
+/// is identical between an elided and an unelided traced run, once the
+/// scheduler's own `sched.*` spans are excluded; and (c) two
+/// identical-seed traced runs export byte-identical Perfetto JSON (the
+/// property CI's `cmp` step relies on).
+mod trace_determinism {
+    use cheshire::harness::Workload;
+    use cheshire::platform::config::{parse_slots, MemBackend};
+    use cheshire::platform::memmap::DRAM_BASE;
+    use cheshire::platform::{CheshireConfig, Soc};
+    use cheshire::sim::prop::{cases, Rng};
+    use cheshire::sim::trace::Event;
+
+    /// FNV-1a over a byte slice — cheap full-memory fingerprint.
+    fn fnv(bytes: &[u8]) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
+    /// Everything architecturally observable about one finished run —
+    /// including `sched.*`, because trace-on vs trace-off runs share the
+    /// elision setting and must match on scheduler behavior too.
+    #[derive(Debug, PartialEq)]
+    struct Fingerprint {
+        cycles: u64,
+        halted: bool,
+        uart: String,
+        dram_fnv: u64,
+        spm_fnv: u64,
+        stats: Vec<(&'static str, u64)>,
+    }
+
+    fn random_point(rng: &mut Rng) -> (Workload, MemBackend) {
+        let wl = match rng.below(4) {
+            0 => Workload::Hetero { kib: rng.range(2, 6) as u32 },
+            1 => Workload::Smp { kib: rng.range(1, 3) as u32 },
+            2 => Workload::Supervisor {
+                demand_pages: rng.range(1, 4) as u32,
+                timer_delta: rng.range(5_000, 40_000) as u32,
+            },
+            _ => Workload::Mem { len: 1 << rng.range(9, 12) as u32, reps: 2, max_burst: 2048 },
+        };
+        let backend = if rng.bool() { MemBackend::Rpc } else { MemBackend::HyperRam };
+        (wl, backend)
+    }
+
+    fn configure(wl: &Workload, backend: MemBackend, elide: bool) -> CheshireConfig {
+        let mut cfg = CheshireConfig::neo();
+        cfg.backend = backend;
+        cfg.elide_idle = elide;
+        if matches!(wl, Workload::Hetero { .. }) {
+            cfg.dsa_slots = parse_slots("reduce+crc").unwrap();
+        }
+        if matches!(wl, Workload::Smp { .. }) {
+            cfg.harts = 2;
+            cfg.dsa_slots = parse_slots("matmul+crc+reduce").unwrap();
+        }
+        cfg
+    }
+
+    /// One run → (architectural fingerprint, recorded events if traced,
+    /// exported JSON if traced).
+    fn run_point(
+        wl: &Workload,
+        backend: MemBackend,
+        elide: bool,
+        trace: bool,
+    ) -> (Fingerprint, Vec<Event>, String) {
+        let cfg = configure(wl, backend, elide);
+        let freq = cfg.freq_hz;
+        let mut soc = Soc::new(cfg);
+        if trace {
+            soc.enable_trace();
+        }
+        let img = wl.stage(&mut soc);
+        soc.preload(&img, DRAM_BASE);
+        let cycles = match wl.fixed_window() {
+            Some(window) => {
+                soc.run_cycles(window);
+                window
+            }
+            None => soc.run(8_000_000),
+        };
+        let fp = Fingerprint {
+            cycles,
+            halted: soc.cpu.halted,
+            uart: soc.uart.borrow().tx_string(),
+            dram_fnv: fnv(soc.dram_raw()),
+            spm_fnv: fnv(soc.llc.spm_raw()),
+            stats: soc.stats.iter().collect(),
+        };
+        (fp, soc.tracer.events(), soc.tracer.export_json(freq))
+    }
+
+    /// The timestamp-free content of a trace, scheduler spans excluded —
+    /// the part the elision invariant promises is identical.
+    fn content(events: &[Event]) -> Vec<(&'static str, &'static str, u32, u32, u64)> {
+        events
+            .iter()
+            .filter(|e| e.cat != "sched")
+            .map(|e| (e.name, e.cat, e.pid, e.tid, e.arg))
+            .collect()
+    }
+
+    #[test]
+    fn tracing_never_perturbs_architectural_state() {
+        cases(4, 0x7ACE, |rng: &mut Rng| {
+            let (wl, backend) = random_point(rng);
+            let (plain, events, _) = run_point(&wl, backend, true, false);
+            let (traced, traced_events, _) = run_point(&wl, backend, true, true);
+            assert!(events.is_empty(), "disabled tracer records nothing");
+            assert_eq!(plain, traced, "{wl:?}/{backend}: trace on ≡ trace off");
+            assert!(
+                !traced_events.is_empty(),
+                "{wl:?}/{backend}: the traced run recorded events (not vacuous)"
+            );
+        });
+    }
+
+    #[test]
+    fn trace_content_is_elision_invariant() {
+        cases(4, 0xE7ACE, |rng: &mut Rng| {
+            let (wl, backend) = random_point(rng);
+            let (_, on, _) = run_point(&wl, backend, true, true);
+            let (_, off, _) = run_point(&wl, backend, false, true);
+            assert!(
+                off.iter().all(|e| e.cat != "sched"),
+                "an unelided run emits no scheduler spans"
+            );
+            assert_eq!(
+                content(&on),
+                content(&off),
+                "{wl:?}/{backend}: non-scheduler event content matches across elision"
+            );
+        });
+    }
+
+    #[test]
+    fn identical_runs_export_byte_identical_json() {
+        cases(3, 0xB17E, |rng: &mut Rng| {
+            let (wl, backend) = random_point(rng);
+            let (_, _, j1) = run_point(&wl, backend, true, true);
+            let (_, _, j2) = run_point(&wl, backend, true, true);
+            assert!(!j1.is_empty());
+            assert_eq!(j1, j2, "{wl:?}/{backend}: identical runs, identical bytes");
+        });
+    }
+
+    /// The trace covers every subsystem the issue names: with a DSA
+    /// workload under elision, IRQ fabric, descriptor ring, MSHR, and
+    /// scheduler events are all present (MMU events come from the
+    /// supervisor/smp points of the random battery above).
+    #[test]
+    fn traced_hetero_covers_the_event_taxonomy() {
+        let wl = Workload::Hetero { kib: 4 };
+        let (_, events, json) = run_point(&wl, MemBackend::Rpc, true, true);
+        for cat in ["irq", "dsa", "llc", "cpu", "sched"] {
+            assert!(
+                events.iter().any(|e| e.cat == cat),
+                "category {cat} missing from the hetero trace"
+            );
+        }
+        for name in
+            ["irq.raise", "irq.claim", "irq.complete", "dsa.desc_post", "dsa.desc_fetch",
+             "dsa.desc_complete", "llc.mshr_alloc", "llc.mshr_retire", "cpu.wfi_park",
+             "cpu.wfi_wake", "sched.fast_forward"]
+        {
+            assert!(events.iter().any(|e| e.name == name), "event {name} missing");
+        }
+        assert!(json.contains("\"traceEvents\""), "Perfetto envelope present");
     }
 }
