@@ -1,0 +1,128 @@
+//! Interpreter hot-loop throughput — the uop-cache/batching gate.
+//!
+//! Runs compute-heavy workloads twice on identical configurations — once
+//! with the decoded-uop cache + basic-block batching (the default) and
+//! once with the per-cycle decode loop (`--no-uop-cache` semantics) —
+//! and reports retired-instructions-per-host-second for both, plus the
+//! speedup. Architectural results are bit-identical by the uop-cache
+//! invariant, asserted here on cycle and instruction counts (the full
+//! fingerprint lives in `tests/proptests.rs::uop_equivalence` and the CI
+//! `--json-arch` diff matrix).
+//!
+//! Emits `BENCH_simspeed.json` (cwd): one record per workload with
+//! `{cycles, instr, host_s, ips, uop_hits, uop_batches}` per mode and
+//! the speedup — the document the acceptance gate reads (`supervisor`
+//! and `contention` speedup ≥ 2×).
+
+use cheshire::harness::{Scenario, Workload};
+use cheshire::model::benchkit::{f1, f2, Table};
+use cheshire::platform::CheshireConfig;
+
+struct Mode {
+    cycles: u64,
+    instr: u64,
+    host_s: f64,
+    ips: f64,
+    hits: u64,
+    batches: u64,
+}
+
+fn run_mode(wl: &Workload, uop: bool, max_cycles: u64) -> Mode {
+    let mut cfg = CheshireConfig::neo();
+    cfg.uop_cache = uop;
+    if matches!(wl, Workload::Smp { .. }) {
+        cfg.harts = 4; // the batcher must hold the 4-hart lockstep together
+    }
+    let r = Scenario::new(cfg, wl.clone(), max_cycles).run();
+    assert!(r.halted, "{}: workload must halt", r.name);
+    Mode {
+        cycles: r.cycles,
+        instr: r.stats.get("cpu.instr"),
+        host_s: r.host_seconds,
+        ips: r.sim_instr_per_sec(),
+        hits: r.stats.get("uop.hits"),
+        batches: r.stats.get("sched.uop_batches"),
+    }
+}
+
+fn main() {
+    // Compute-dominated points: a short timer arm keeps the supervisor
+    // mostly *executing* (the scheduler bench covers the idle-dominated
+    // shape), and the contention/smp/twomm points exercise the batcher
+    // against live DMA/DSA traffic and multi-hart lockstep.
+    let points: Vec<(&str, Workload, u64)> = vec![
+        (
+            "supervisor",
+            Workload::Supervisor { demand_pages: 8, timer_delta: 20_000 },
+            20_000_000,
+        ),
+        (
+            "contention",
+            Workload::Contention { dma_kib: 32, tile_n: 16, jobs: 2, spm_kib: 32 },
+            40_000_000,
+        ),
+        ("twomm", Workload::TwoMm { n: 16 }, 20_000_000),
+        ("smp", Workload::Smp { kib: 4 }, 20_000_000),
+    ];
+
+    let mut t = Table::new(
+        "Uop cache + block batching — retired instructions per host second",
+        &["workload", "cycles", "instr", "Minstr/s (uop)", "Minstr/s (ref)", "hit %", "speedup"],
+    );
+    let mut json = String::from("{\n  \"workloads\": [\n");
+    let mut gated_speedup = f64::INFINITY;
+    for (i, (name, wl, max_cycles)) in points.iter().enumerate() {
+        let on = run_mode(wl, true, *max_cycles);
+        let off = run_mode(wl, false, *max_cycles);
+        assert_eq!(on.cycles, off.cycles, "{name}: cached ≡ uncached cycle count");
+        assert_eq!(on.instr, off.instr, "{name}: cached ≡ uncached instruction count");
+        assert_eq!(off.hits, 0, "{name}: the reference loop hits nothing");
+        assert!(on.hits > 0, "{name}: the uop cache must engage");
+        let speedup = on.ips / off.ips;
+        if matches!(*name, "supervisor" | "contention") {
+            gated_speedup = gated_speedup.min(speedup);
+        }
+        t.row(&[
+            name.to_string(),
+            on.cycles.to_string(),
+            on.instr.to_string(),
+            f2(on.ips / 1e6),
+            f2(off.ips / 1e6),
+            f1(100.0 * on.hits as f64 / on.instr.max(1) as f64),
+            f2(speedup),
+        ]);
+        json.push_str(&format!(
+            "    {{\"workload\": \"{name}\", \"cycles\": {}, \"instr\": {}, \
+             \"uop\": {{\"host_s\": {}, \"sim_instr_per_sec\": {}, \"uop_hits\": {}, \"uop_batches\": {}}}, \
+             \"no_uop\": {{\"host_s\": {}, \"sim_instr_per_sec\": {}}}, \
+             \"speedup\": {}}}{}\n",
+            on.cycles,
+            on.instr,
+            on.host_s,
+            on.ips,
+            on.hits,
+            on.batches,
+            off.host_s,
+            off.ips,
+            speedup,
+            if i + 1 == points.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    t.print();
+
+    std::fs::write("BENCH_simspeed.json", &json).expect("write BENCH_simspeed.json");
+    println!("\nwritten: BENCH_simspeed.json");
+    // Wall-clock gate, overridable for heavily loaded/throttled runners
+    // (SIMSPEED_BENCH_MIN_SPEEDUP=1.2 etc.) without weakening the default.
+    let gate: f64 = std::env::var("SIMSPEED_BENCH_MIN_SPEEDUP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2.0);
+    assert!(
+        gated_speedup >= gate,
+        "supervisor+contention throughput must improve ≥{gate}× with the uop cache \
+         (got {gated_speedup:.2}×)"
+    );
+    println!("supervisor+contention speedup with uop cache: {gated_speedup:.1}× (gate: ≥{gate}×)");
+}

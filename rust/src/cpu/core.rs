@@ -169,6 +169,213 @@ const S_INTS: u64 = (1 << 1) | (1 << 5) | (1 << 9);
 /// (SSIP/MSIP/STIP); MTIP/MEIP come from the CLINT/PLIC wires.
 const MIP_WRITABLE: u64 = (1 << 1) | (1 << 3) | (1 << 5);
 
+/// One predecoded instruction: every field `exec_uop` consumes, extracted
+/// once by [`Uop::decode`] instead of on every execution of the same
+/// instruction word.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Uop {
+    /// The raw instruction word. Every cache hit is revalidated against
+    /// the word the I-cache just returned for the same physical address,
+    /// so a stale entry can never execute (decode is pure in `inst`).
+    pub inst: u32,
+    op: u8,
+    rd: u8,
+    f3: u8,
+    rs1: u8,
+    rs2: u8,
+    f7: u8,
+    imm_i: i32,
+    imm_s: i32,
+    imm_b: i32,
+    imm_u: i32,
+    imm_j: i32,
+}
+
+impl Uop {
+    /// Pure predecode of one RV64 instruction word — the same field
+    /// extraction `exec` used to perform inline on every step.
+    pub fn decode(inst: u32) -> Self {
+        let imm_b = ((((inst >> 31) & 1) << 12)
+            | (((inst >> 7) & 1) << 11)
+            | (((inst >> 25) & 0x3f) << 5)
+            | (((inst >> 8) & 0xf) << 1)) as i32;
+        let imm_j = ((((inst >> 31) & 1) << 20)
+            | (((inst >> 12) & 0xff) << 12)
+            | (((inst >> 20) & 1) << 11)
+            | (((inst >> 21) & 0x3ff) << 1)) as i32;
+        Self {
+            inst,
+            op: (inst & 0x7f) as u8,
+            rd: ((inst >> 7) & 31) as u8,
+            f3: ((inst >> 12) & 7) as u8,
+            rs1: ((inst >> 15) & 31) as u8,
+            rs2: ((inst >> 20) & 31) as u8,
+            f7: (inst >> 25) as u8,
+            imm_i: (inst as i32) >> 20,
+            imm_s: (((inst & 0xfe00_0000) as i32) >> 20) | (((inst >> 7) & 0x1f) as i32),
+            imm_b: (imm_b << 19) >> 19,
+            imm_u: (inst & 0xffff_f000) as i32,
+            imm_j: (imm_j << 11) >> 11,
+        }
+    }
+
+    /// Whether this uop can return [`StepOutcome::Stalled`] after its
+    /// fetch succeeded: only the bus-touching ops (loads, stores, fences,
+    /// FP loads/stores). Everything else completes without a bus access,
+    /// so `step` skips the register-file snapshot for it.
+    #[inline]
+    pub fn may_stall(&self) -> bool {
+        matches!(self.op, 0x03 | 0x23 | 0x0f | 0x07 | 0x27)
+    }
+
+    /// Whether this uop terminates a basic block: branches, jumps,
+    /// system ops and fences (the batch/block statistics boundary).
+    #[inline]
+    pub fn ends_block(&self) -> bool {
+        matches!(self.op, 0x63 | 0x6f | 0x67 | 0x73 | 0x0f)
+    }
+}
+
+/// Event counters the timing wrapper drains into [`crate::sim::Stats`]
+/// (`uop.*` keys). Purely observational: counted at decode level, so the
+/// values are identical with and without elision, batching, or tracing.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct UopCounters {
+    /// Lookups served from the table.
+    pub hits: u64,
+    /// Lookups that decoded fresh (and installed when enabled).
+    pub misses: u64,
+    /// Entries dropped by stores, `fence.i`, `sfence.vma`, `satp` writes.
+    pub invalidations: u64,
+    /// Closed basic blocks.
+    pub blocks: u64,
+    /// Uops retired into closed blocks (`block_instrs / blocks` is the
+    /// mean block length).
+    pub block_instrs: u64,
+}
+
+/// Direct-mapped table slots in a [`UopCache`] (word-indexed).
+const UOP_CACHE_ENTRIES: usize = 4096;
+
+/// Decoded micro-op cache: a direct-mapped table keyed on the *physical*
+/// PC (so Sv39 aliasing — two virtual pages mapping one frame — is safe
+/// by construction).
+///
+/// Correctness does not rest on the invalidation hooks: a hit is used
+/// only when the cached raw word equals the word the I-cache just
+/// returned for that physical address, and decode is a pure function of
+/// the word. Invalidation (store overlap, `fence.i`, `sfence.vma`, `satp`
+/// writes) keeps the table from holding stale tags and makes the
+/// `uop.invalidations` accounting honest.
+#[derive(Debug, Clone)]
+pub struct UopCache {
+    tags: Vec<u64>,
+    uops: Vec<Uop>,
+    enabled: bool,
+    counters: UopCounters,
+    cur_block: u64,
+}
+
+impl UopCache {
+    fn new() -> Self {
+        Self {
+            tags: vec![u64::MAX; UOP_CACHE_ENTRIES],
+            uops: vec![Uop::decode(0); UOP_CACHE_ENTRIES],
+            enabled: true,
+            counters: UopCounters::default(),
+            cur_block: 0,
+        }
+    }
+
+    /// Enable or disable the cache (`--no-uop-cache` reference path).
+    /// Disabled, every lookup decodes fresh and no `uop.*` counter moves.
+    pub fn set_enabled(&mut self, on: bool) {
+        self.enabled = on;
+    }
+
+    /// Whether the cache serves decoded entries.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Return the uop for the word `inst` fetched at physical PC `pa`:
+    /// the cached entry when tag and word both match, a fresh decode
+    /// (installed when enabled) otherwise.
+    #[inline]
+    fn lookup(&mut self, pa: u64, inst: u32) -> Uop {
+        if !self.enabled {
+            return Uop::decode(inst);
+        }
+        let idx = (pa >> 2) as usize & (UOP_CACHE_ENTRIES - 1);
+        if self.tags[idx] == pa && self.uops[idx].inst == inst {
+            self.counters.hits += 1;
+            return self.uops[idx];
+        }
+        self.counters.misses += 1;
+        let u = Uop::decode(inst);
+        self.tags[idx] = pa;
+        self.uops[idx] = u;
+        u
+    }
+
+    /// Drop any cached uop overlapping the stored bytes `[pa, pa + size)`
+    /// — the self-modifying-store hook (at most three words for the
+    /// largest store).
+    #[inline]
+    fn invalidate_range(&mut self, pa: u64, size: u64) {
+        if !self.enabled {
+            return;
+        }
+        let last = (pa + size - 1) & !3;
+        let mut w = pa & !3;
+        while w <= last {
+            let idx = (w >> 2) as usize & (UOP_CACHE_ENTRIES - 1);
+            if self.tags[idx] & !3 == w {
+                self.tags[idx] = u64::MAX;
+                self.counters.invalidations += 1;
+            }
+            w += 4;
+        }
+    }
+
+    /// Drop every cached uop (`fence.i`, `sfence.vma`, `satp` writes).
+    fn invalidate_all(&mut self) {
+        if !self.enabled {
+            return;
+        }
+        for t in &mut self.tags {
+            if *t != u64::MAX {
+                *t = u64::MAX;
+                self.counters.invalidations += 1;
+            }
+        }
+    }
+
+    /// Account one retired uop into the current basic block.
+    #[inline]
+    fn count_retire(&mut self) {
+        if self.enabled {
+            self.cur_block += 1;
+        }
+    }
+
+    /// Close the current basic block (boundary uop, page-crossing
+    /// fall-through, or trap).
+    #[inline]
+    fn end_block(&mut self) {
+        if self.enabled && self.cur_block > 0 {
+            self.counters.blocks += 1;
+            self.counters.block_instrs += self.cur_block;
+            self.cur_block = 0;
+        }
+    }
+
+    /// Drain the event counters (the `uop.*` stats source).
+    pub fn take_counters(&mut self) -> UopCounters {
+        std::mem::take(&mut self.counters)
+    }
+}
+
 /// The architectural core.
 #[derive(Clone)]
 pub struct CpuCore {
@@ -181,6 +388,8 @@ pub struct CpuCore {
     /// Sv39 MMU (TLBs + walker); consulted whenever `prv < M` and
     /// `satp.MODE = Sv39`.
     pub mmu: crate::mmu::Mmu,
+    /// Decoded micro-op cache, keyed on physical PC.
+    pub uops: UopCache,
 }
 
 impl CpuCore {
@@ -192,6 +401,7 @@ impl CpuCore {
             csr: Csrs::default(),
             prv: PRV_M,
             mmu: crate::mmu::Mmu::new(16),
+            uops: UopCache::new(),
         };
         c.csr.mhartid = hartid;
         // Counters readable from S/U out of reset; firmware opts *out* by
@@ -352,6 +562,9 @@ impl CpuCore {
                 if mode == 0 || mode == 8 {
                     self.csr.satp = v & ((0xf << 60) | ((1u64 << 44) - 1));
                     self.mmu.flush();
+                    // address-space switch: cached physical-PC keys may
+                    // now be reached through different virtual PCs
+                    self.uops.invalidate_all();
                 }
             }
             0x300 => self.csr.mstatus = v & MSTATUS_WRITABLE,
@@ -392,22 +605,12 @@ impl CpuCore {
     }
 
     /// Execute one instruction. On `Stalled`, state is unchanged.
+    ///
+    /// Fetch and decode live here: the physical PC indexes the per-hart
+    /// [`UopCache`], so straight-line re-execution skips the bit-field
+    /// extraction entirely while every architectural check (translation,
+    /// I-cache timing, the raw word itself) still runs each step.
     pub fn step(&mut self, bus: &mut dyn Bus) -> StepOutcome {
-        let snap_x = self.x;
-        let snap_f = self.f;
-        let snap_pc = self.pc;
-        let out = self.exec(bus);
-        if matches!(out, StepOutcome::Stalled) {
-            self.x = snap_x;
-            self.f = snap_f;
-            self.pc = snap_pc;
-        } else if !matches!(out, StepOutcome::Trapped(_)) {
-            self.csr.minstret = self.csr.minstret.wrapping_add(1);
-        }
-        out
-    }
-
-    fn exec(&mut self, bus: &mut dyn Bus) -> StepOutcome {
         use crate::mmu::{Access, XlateErr};
         let pc = self.pc;
         let pc_pa = match self.xlate(bus, pc, Access::Exec) {
@@ -415,6 +618,7 @@ impl CpuCore {
             Err(XlateErr::Stall) => return StepOutcome::Stalled,
             Err(XlateErr::PageFault) => {
                 self.trap_to(12, pc, pc);
+                self.uops.end_block();
                 return StepOutcome::Trapped(Trap::InstrPageFault(pc));
             }
         };
@@ -423,28 +627,61 @@ impl CpuCore {
             Err(MemErr::Stall) => return StepOutcome::Stalled,
             Err(MemErr::Fault) => {
                 self.trap_to(1, pc, pc);
+                self.uops.end_block();
                 return StepOutcome::Trapped(Trap::LoadFault(pc));
             }
         };
-        let op = inst & 0x7f;
-        let rd = ((inst >> 7) & 31) as usize;
-        let f3 = (inst >> 12) & 7;
-        let rs1 = ((inst >> 15) & 31) as usize;
-        let rs2 = ((inst >> 20) & 31) as usize;
-        let f7 = inst >> 25;
-        let imm_i = (inst as i32) >> 20;
-        let imm_s = (((inst & 0xfe00_0000) as i32) >> 20) | (((inst >> 7) & 0x1f) as i32);
-        let imm_b = ((((inst >> 31) & 1) << 12)
-            | (((inst >> 7) & 1) << 11)
-            | (((inst >> 25) & 0x3f) << 5)
-            | (((inst >> 8) & 0xf) << 1)) as i32;
-        let imm_b = (imm_b << 19) >> 19;
-        let imm_u = (inst & 0xffff_f000) as i32 as i64;
-        let imm_j = ((((inst >> 31) & 1) << 20)
-            | (((inst >> 12) & 0xff) << 12)
-            | (((inst >> 20) & 1) << 11)
-            | (((inst >> 21) & 0x3ff) << 1)) as i32;
-        let imm_j = (imm_j << 11) >> 11;
+        let u = self.uops.lookup(pc_pa, inst);
+        // Only bus-touching uops can return Stalled past this point, and
+        // none of them mutate x/f/pc before the bus access that stalls —
+        // the snapshot is defense-in-depth, kept only where a stall is
+        // reachable so the common ALU path pays nothing for it.
+        let out = if u.may_stall() {
+            let snap_x = self.x;
+            let snap_f = self.f;
+            let snap_pc = self.pc;
+            let out = self.exec_uop(bus, u);
+            if matches!(out, StepOutcome::Stalled) {
+                self.x = snap_x;
+                self.f = snap_f;
+                self.pc = snap_pc;
+            }
+            out
+        } else {
+            self.exec_uop(bus, u)
+        };
+        match out {
+            StepOutcome::Stalled => {}
+            StepOutcome::Trapped(_) => self.uops.end_block(),
+            _ => {
+                self.csr.minstret = self.csr.minstret.wrapping_add(1);
+                self.uops.count_retire();
+                // boundary uop or fall-through onto the next page: close
+                // the basic block (blocks never span a 4 KiB frame, so a
+                // physical-PC key can't chain across mappings)
+                if u.ends_block() || pc_pa & 0xfff == 0xffc {
+                    self.uops.end_block();
+                }
+            }
+        }
+        out
+    }
+
+    fn exec_uop(&mut self, bus: &mut dyn Bus, u: Uop) -> StepOutcome {
+        use crate::mmu::{Access, XlateErr};
+        let pc = self.pc;
+        let inst = u.inst;
+        let op = u.op as u32;
+        let rd = u.rd as usize;
+        let f3 = u.f3 as u32;
+        let rs1 = u.rs1 as usize;
+        let rs2 = u.rs2 as usize;
+        let f7 = u.f7 as u32;
+        let imm_i = u.imm_i;
+        let imm_s = u.imm_s;
+        let imm_b = u.imm_b;
+        let imm_u = u.imm_u as i64;
+        let imm_j = u.imm_j;
         let mut extra = 0u32;
         let mut next = pc.wrapping_add(4);
 
@@ -481,7 +718,12 @@ impl CpuCore {
                     }
                 };
                 match bus.store(pa, $v, $size) {
-                    Ok(()) => {}
+                    Ok(()) => {
+                        // self-modifying-store hook: drop any decoded uop
+                        // the stored bytes overlap (physical addresses on
+                        // both sides, so aliasing can't hide a match)
+                        self.uops.invalidate_range(pa, $size as u64);
+                    }
                     Err(MemErr::Stall) => return StepOutcome::Stalled,
                     Err(MemErr::Fault) => {
                         self.trap_to(7, pc, va);
@@ -669,7 +911,14 @@ impl CpuCore {
             0x0f => {
                 // fence (f3=0) / fence.i (f3=1): conservative cache sync
                 match bus.fence(f3 == 1) {
-                    Ok(()) => extra = 3,
+                    Ok(()) => {
+                        if f3 == 1 {
+                            // fence.i orders fetches after prior stores:
+                            // every decoded uop is suspect
+                            self.uops.invalidate_all();
+                        }
+                        extra = 3;
+                    }
                     Err(MemErr::Stall) => return StepOutcome::Stalled,
                     Err(MemErr::Fault) => {
                         self.trap_to(5, pc, 0);
@@ -815,6 +1064,9 @@ impl CpuCore {
                             return StepOutcome::Trapped(Trap::IllegalInstr(inst));
                         }
                         self.mmu.flush();
+                        // the PC→physical mapping may have changed under
+                        // every cached entry's key
+                        self.uops.invalidate_all();
                         extra = 4; // CVA6 flushes its pipeline on sfence
                     }
                     _ => {
@@ -1428,5 +1680,87 @@ mod tests {
         cpu.csr.mip |= 1 << 7;
         assert_eq!(cpu.maybe_interrupt(), Some(7));
         assert_eq!(cpu.prv, PRV_M);
+    }
+
+    /// The uop cache serves repeated fetches of the same word, and a
+    /// store over a cached instruction drops exactly that entry.
+    #[test]
+    fn uop_cache_hits_and_store_invalidation() {
+        let mut a = Asm::new(0);
+        a.li(A0, 0);
+        a.li(T0, 1);
+        a.li(T1, 5);
+        a.label("loop");
+        a.add(A0, A0, T0);
+        a.addi(T0, T0, 1);
+        a.bne(T0, T1, "loop");
+        a.wfi();
+        let (mut cpu, _) = run(a, 200);
+        let c = cpu.uops.take_counters();
+        assert!(c.hits > 0, "loop body re-executes from the cache");
+        assert!(c.misses > 0, "first pass decodes fresh");
+        assert!(c.blocks > 0 && c.block_instrs >= c.blocks);
+        // storing over a cached word invalidates it
+        cpu.uops.invalidate_range(0, 4096);
+        let c2 = cpu.uops.take_counters();
+        assert!(c2.invalidations > 0);
+    }
+
+    /// Disabled, the cache decodes fresh every step, moves no counters,
+    /// and the architectural result is identical.
+    #[test]
+    fn uop_cache_disabled_matches_enabled() {
+        let prog = || {
+            let mut a = Asm::new(0);
+            a.li(A0, 0);
+            a.li(T0, 1);
+            a.li(T1, 11);
+            a.label("loop");
+            a.add(A0, A0, T0);
+            a.addi(T0, T0, 1);
+            a.bne(T0, T1, "loop");
+            a.wfi();
+            a
+        };
+        let (on, _) = run(prog(), 300);
+        let img = prog().finish();
+        let mut mem = Flat { mem: vec![0; 0x10000] };
+        mem.mem[..img.len()].copy_from_slice(&img);
+        let mut off = CpuCore::new(0, 0);
+        off.uops.set_enabled(false);
+        for _ in 0..300 {
+            if matches!(off.step(&mut mem), StepOutcome::Wfi) {
+                break;
+            }
+        }
+        assert_eq!(on.x, off.x);
+        assert_eq!(on.csr.minstret, off.csr.minstret);
+        assert_eq!(off.uops.take_counters(), UopCounters::default());
+    }
+
+    /// `Uop::decode` extracts every immediate exactly as the old inline
+    /// decode did (sign extension included).
+    #[test]
+    fn uop_decode_immediates() {
+        // addi x5, x6, -1 → imm_i = -1
+        let u = Uop::decode(0xfff3_0293);
+        assert_eq!(u.imm_i, -1);
+        assert_eq!(u.rd, 5);
+        assert_eq!(u.rs1, 6);
+        // beq x0, x0, -8 → imm_b = -8
+        let mut a = Asm::new(0);
+        a.label("top");
+        a.nop();
+        a.nop();
+        a.beq(ZERO, ZERO, "top");
+        let img = a.finish();
+        let w = u32::from_le_bytes([img[8], img[9], img[10], img[11]]);
+        assert_eq!(Uop::decode(w).imm_b, -8);
+        assert!(Uop::decode(w).ends_block());
+        assert!(!Uop::decode(w).may_stall());
+        // sd (store) may stall and does not end a block
+        let sd = Uop::decode(0x0053_3023);
+        assert!(sd.may_stall());
+        assert!(!sd.ends_block());
     }
 }

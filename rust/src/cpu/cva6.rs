@@ -134,7 +134,9 @@ enum MemReq {
     Refill { line: u64, icache: bool, victim: Option<(u64, Vec<u8>)> },
     MmioLoad { addr: u64, size: usize },
     MmioStore { addr: u64, val: u64, size: usize },
-    Flush,
+    /// Write back dirty D$ lines, then invalidate the D$ (and, for
+    /// `fence.i`, the I$ — so post-fence fetches observe prior stores).
+    Flush { instr: bool },
 }
 
 enum CState {
@@ -146,7 +148,7 @@ enum CState {
     WaitMmioR,
     WaitMmioB { addr: u64 },
     /// Writing back dirty lines for a FENCE, then invalidating.
-    Flush { lines: VecDeque<(u64, Vec<u8>)>, beats_left: u32, b_wait: u32 },
+    Flush { lines: VecDeque<(u64, Vec<u8>)>, beats_left: u32, b_wait: u32, instr: bool },
     Wfi,
 }
 
@@ -227,6 +229,29 @@ impl Cva6 {
         matches!(self.state, CState::Wfi)
     }
 
+    /// Enable or disable this hart's decoded micro-op cache
+    /// (`--no-uop-cache` reference path).
+    pub fn set_uop_cache(&mut self, on: bool) {
+        self.core.uops.set_enabled(on);
+    }
+
+    /// Whether the hart can participate in a harts-only batch this cycle:
+    /// no pending writeback beats (they touch the bus every cycle) and a
+    /// state whose tick reads nothing but the hart's own bus channels
+    /// (`Run`/`Busy` never pop, `Wfi` only samples `mip`). Any memory
+    /// wait state must run under full-system ticks.
+    pub fn batch_ready(&self) -> bool {
+        self.wb_q.is_empty() && matches!(self.state, CState::Run | CState::Busy(_) | CState::Wfi)
+    }
+
+    /// Whether this hart still makes forward progress inside a batch: it
+    /// is executing or counting down latency, or parked with a pending
+    /// enabled interrupt about to wake it. All-harts-parked means the
+    /// event-horizon scheduler (not the batcher) should take over.
+    pub fn batch_active(&self) -> bool {
+        !matches!(self.state, CState::Wfi) || self.core.csr.mip & self.core.csr.mie != 0
+    }
+
     /// Move the MMU's event counters into the global stats registry
     /// (`mmu.*` keys). Bare-metal runs never touch the MMU, so this adds
     /// no keys (and no cost beyond a few zero checks) for them.
@@ -256,6 +281,26 @@ impl Cva6 {
             }
             if c.faults > 0 {
                 self.tracer.instant("mmu.page_fault", "mmu", pid::MMU, tid, c.faults);
+            }
+        }
+    }
+
+    /// Move the uop cache's event counters into the global stats registry
+    /// (`uop.*` keys, cluster aggregate like `mmu.*`). The counters move
+    /// only at decode level, so their values are invariant under elision,
+    /// batching, and tracing; with the cache disabled nothing moves and
+    /// no keys appear.
+    fn drain_uop_stats(&mut self, stats: &mut Stats) {
+        let c = self.core.uops.take_counters();
+        for (key, v) in [
+            ("uop.hits", c.hits),
+            ("uop.misses", c.misses),
+            ("uop.invalidations", c.invalidations),
+            ("uop.blocks", c.blocks),
+            ("uop.block_instrs", c.block_instrs),
+        ] {
+            if v > 0 {
+                stats.add(key, v);
             }
         }
     }
@@ -344,7 +389,7 @@ impl Cva6 {
                     self.state = CState::WaitMmioB { addr };
                 }
             }
-            CState::Flush { mut lines, mut beats_left, mut b_wait } => {
+            CState::Flush { mut lines, mut beats_left, mut b_wait, instr } => {
                 stats.bump("cpu.flush_cycles");
                 stats.bump(self.keys.flush_cycles);
                 while bus.b.borrow_mut().pop().is_some() {
@@ -368,10 +413,15 @@ impl Cva6 {
                 let _ = &mut beats_left;
                 if lines.is_empty() && b_wait == 0 && self.wb_q.is_empty() {
                     self.dcache.invalidate_all();
+                    if instr {
+                        // fence.i: post-fence fetches must refill from
+                        // memory, where the writebacks just landed
+                        self.icache.invalidate_all();
+                    }
                     self.result = Some((FENCE_DONE, 0));
                     self.state = CState::Run;
                 } else {
-                    self.state = CState::Flush { lines, beats_left: 0, b_wait };
+                    self.state = CState::Flush { lines, beats_left: 0, b_wait, instr };
                 }
             }
             CState::Run => {
@@ -399,6 +449,7 @@ impl Cva6 {
                     self.core.step(&mut adapter)
                 };
                 self.drain_mmu_stats(stats);
+                self.drain_uop_stats(stats);
                 match outcome {
                     StepOutcome::Retired { extra_cycles, fp } => {
                         stats.bump("cpu.instr");
@@ -480,11 +531,11 @@ impl Cva6 {
                                 bus.w.borrow_mut().push(W { data, strb, last: true });
                                 self.state = CState::WaitMmioB { addr };
                             }
-                            Some(MemReq::Flush) => {
+                            Some(MemReq::Flush { instr }) => {
                                 let lines: VecDeque<_> = self.dcache.dirty_lines().into();
                                 stats.add("cpu.fence_lines", lines.len() as u64);
                                 stats.add(self.keys.fence_lines, lines.len() as u64);
-                                self.state = CState::Flush { lines, beats_left: 0, b_wait: 0 };
+                                self.state = CState::Flush { lines, beats_left: 0, b_wait: 0, instr };
                             }
                             None => {
                                 // spurious stall (shouldn't happen)
@@ -651,10 +702,6 @@ impl Bus for Adapter<'_> {
     }
 
     fn fence(&mut self, instr: bool) -> Result<(), MemErr> {
-        if instr {
-            self.icache.invalidate_all();
-            return Ok(());
-        }
         if let Some((a, _)) = *self.result {
             if a == FENCE_DONE {
                 self.result.take();
@@ -662,10 +709,16 @@ impl Bus for Adapter<'_> {
             }
         }
         if self.dcache.dirty_lines().is_empty() {
+            // nothing to write back: invalidate in place, no stall.
+            // fence.i additionally drops the I$ so the next fetch of any
+            // self-modified code refills from memory.
             self.dcache.invalidate_all();
+            if instr {
+                self.icache.invalidate_all();
+            }
             return Ok(());
         }
-        *self.req = Some(MemReq::Flush);
+        *self.req = Some(MemReq::Flush { instr });
         Err(MemErr::Stall)
     }
 }
@@ -828,6 +881,62 @@ mod tests {
         assert_eq!(stats.get("cpu3.icache_miss"), stats.get("cpu.icache_miss"));
         assert_eq!(stats.get("cpu3.dcache_hit"), stats.get("cpu.dcache_hit"));
         assert_eq!(stats.get("cpu0.instr"), 0, "no hart-0 keys on a hart-3 core");
+    }
+
+    /// `fence.i` is a real instruction: it writes dirty D$ lines back to
+    /// memory and invalidates the I$, so a store over an already-fetched
+    /// instruction becomes visible to the next fetch. Without the
+    /// writeback (the old nop path) the refill would read the stale word
+    /// from memory and A0 would stay 1.
+    #[test]
+    fn fence_i_makes_self_modifying_code_visible() {
+        let mut a = Asm::new(0x8000_0000);
+        a.la(T0, "target");
+        // addi a0, x0, 42 — overwrites the `addi a0, x0, 1` at target
+        a.li(T1, 0x02a0_0513);
+        a.sw(T1, T0, 0);
+        a.fence_i();
+        a.label("target");
+        a.addi(A0, ZERO, 1);
+        a.wfi();
+        let (mut cpu, bus, mut mem) = mini_system(a);
+        let mut stats = Stats::new();
+        for _ in 0..5000 {
+            cpu.tick(&bus, &mut stats);
+            mem.tick(&bus, &mut stats);
+            if cpu.is_wfi() {
+                break;
+            }
+        }
+        assert!(cpu.is_wfi(), "program should reach WFI");
+        assert_eq!(cpu.core.x[A0 as usize], 42, "fetch after fence.i sees the stored word");
+        assert!(stats.get("cpu.fence_lines") >= 1, "the dirty code line was written back");
+        assert!(stats.get("uop.invalidations") >= 1, "store/fence dropped decoded uops");
+    }
+
+    /// The same program without the fence executes the stale cached copy
+    /// — the negative control proving the SMC test is non-vacuous.
+    #[test]
+    fn self_modifying_code_without_fence_runs_stale() {
+        let mut a = Asm::new(0x8000_0000);
+        a.la(T0, "target");
+        a.li(T1, 0x02a0_0513);
+        a.sw(T1, T0, 0);
+        a.nop(); // keep target's offset aligned with the fenced variant
+        a.label("target");
+        a.addi(A0, ZERO, 1);
+        a.wfi();
+        let (mut cpu, bus, mut mem) = mini_system(a);
+        let mut stats = Stats::new();
+        for _ in 0..5000 {
+            cpu.tick(&bus, &mut stats);
+            mem.tick(&bus, &mut stats);
+            if cpu.is_wfi() {
+                break;
+            }
+        }
+        assert!(cpu.is_wfi());
+        assert_eq!(cpu.core.x[A0 as usize], 1, "stale I$ copy executes without fence.i");
     }
 
     #[test]

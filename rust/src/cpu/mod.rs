@@ -29,5 +29,5 @@
 pub mod core;
 pub mod cva6;
 
-pub use core::{Bus, CpuCore, StepOutcome, Trap};
+pub use core::{Bus, CpuCore, StepOutcome, Trap, Uop, UopCache, UopCounters};
 pub use cva6::{Cva6, Cva6Cfg, HartKeys, HART_KEYS};

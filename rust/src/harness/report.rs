@@ -48,7 +48,7 @@ impl SweepReport {
     pub fn table(&self) -> Table {
         let mut t = Table::new(
             "Sweep report — one SoC instance per scenario",
-            &["scenario", "cycles", "halted", "instr", "dram B", "B/cyc", "rd p50/99/999", "CORE mW", "IO mW", "RAM mW", "TOTAL mW", "Mcyc/s"],
+            &["scenario", "cycles", "halted", "instr", "dram B", "B/cyc", "rd p50/99/999", "CORE mW", "IO mW", "RAM mW", "TOTAL mW", "Mcyc/s", "Minstr/s"],
         );
         for r in &self.results {
             let rd_lat = bw::percentile_triplet(&bw::total_rd_lat_counts(&r.stats))
@@ -67,6 +67,7 @@ impl SweepReport {
                 f1(r.power.ram_mw),
                 f1(r.power.total()),
                 f1(r.sim_cycles_per_sec() / 1e6),
+                f1(r.sim_instr_per_sec() / 1e6),
             ]);
         }
         t
@@ -76,13 +77,15 @@ impl SweepReport {
     ///
     /// `timing` selects between the two report flavors:
     /// * `true` — the full report: includes the host wall-clock
-    ///   (`host_seconds`, `sim_cycles_per_sec`) and the scheduler's own
-    ///   `sched.*` counters. Deterministic in every *architectural* field,
-    ///   but host-dependent in the timing ones.
+    ///   (`host_seconds`, `sim_cycles_per_sec`, `sim_instr_per_sec`) and
+    ///   the simulator's own `sched.*`/`uop.*` counters. Deterministic in
+    ///   every *architectural* field, but host-dependent in the timing
+    ///   ones.
     /// * `false` — the architectural report: drops the timing fields and
-    ///   the `sched.*` counters, leaving exactly the bits the elision
-    ///   invariant (and the parallel ≡ serial contract) promise are
-    ///   byte-identical across elided/unelided and parallel/serial runs.
+    ///   the `sched.*`/`uop.*` counters, leaving exactly the bits the
+    ///   elision and uop-cache invariants (and the parallel ≡ serial
+    ///   contract) promise are byte-identical across elided/`--no-elide`,
+    ///   cached/`--no-uop-cache`, and parallel/serial runs.
     fn render_json(&self, timing: bool) -> String {
         let mut out = String::from("{\n  \"scenarios\": [\n");
         for (i, r) in self.results.iter().enumerate() {
@@ -106,6 +109,10 @@ impl SweepReport {
                 out.push_str(&format!(
                     "      \"sim_cycles_per_sec\": {},\n",
                     r.sim_cycles_per_sec()
+                ));
+                out.push_str(&format!(
+                    "      \"sim_instr_per_sec\": {},\n",
+                    r.sim_instr_per_sec()
                 ));
                 // per-crossbar-manager latency percentiles (cycles, log2
                 // bucket upper bounds), derived from the bw.m{N} latency
@@ -141,7 +148,7 @@ impl SweepReport {
             out.push_str("      \"stats\": {");
             let mut first = true;
             for (k, v) in r.stats.iter() {
-                if !timing && k.starts_with("sched.") {
+                if !timing && (k.starts_with("sched.") || k.starts_with("uop.")) {
                     continue;
                 }
                 if !first {
@@ -158,16 +165,17 @@ impl SweepReport {
     }
 
     /// The full JSON report: architectural results plus host wall-clock
-    /// throughput (`host_seconds`, `sim_cycles_per_sec`) and `sched.*`
-    /// scheduler counters.
+    /// throughput (`host_seconds`, `sim_cycles_per_sec`,
+    /// `sim_instr_per_sec`) and `sched.*`/`uop.*` simulator counters.
     pub fn to_json(&self) -> String {
         self.render_json(true)
     }
 
-    /// The architectural JSON report: timing fields and `sched.*` counters
-    /// stripped. Byte-identical across parallel/serial and (by the
-    /// event-horizon invariant) elided/`--no-elide` runs — the document CI
-    /// diffs to guard the equivalence on every push.
+    /// The architectural JSON report: timing fields and `sched.*`/`uop.*`
+    /// counters stripped. Byte-identical across parallel/serial and (by
+    /// the event-horizon and uop-cache invariants) elided/`--no-elide`
+    /// and cached/`--no-uop-cache` runs — the document CI diffs to guard
+    /// the equivalences on every push.
     pub fn to_json_arch(&self) -> String {
         self.render_json(false)
     }
@@ -185,6 +193,7 @@ mod tests {
         stats.add("cpu.instr", cycles / 2);
         stats.add("rpc.useful_wr_bytes", 4096);
         stats.add("sched.elided_cycles", cycles / 4);
+        stats.add("uop.hits", cycles / 8);
         ScenarioResult {
             name: name.to_string(),
             workload: "nop",
@@ -226,18 +235,22 @@ mod tests {
     }
 
     /// The full report carries the throughput fields; the architectural
-    /// variant strips both them and every `sched.*` counter.
+    /// variant strips both them and every `sched.*`/`uop.*` counter.
     #[test]
     fn arch_json_strips_timing_and_sched_fields() {
         let rep = SweepReport::new(vec![fake("a", 1000)]);
         let full = rep.to_json();
         assert!(full.contains("\"host_seconds\": 0.125"));
         assert!(full.contains("\"sim_cycles_per_sec\": 8000"));
+        assert!(full.contains("\"sim_instr_per_sec\": 4000"));
         assert!(full.contains("sched.elided_cycles"));
+        assert!(full.contains("uop.hits"));
         let arch = rep.to_json_arch();
         assert!(!arch.contains("host_seconds"));
         assert!(!arch.contains("sim_cycles_per_sec"));
+        assert!(!arch.contains("sim_instr_per_sec"));
         assert!(!arch.contains("sched."));
+        assert!(!arch.contains("uop."));
         assert!(arch.contains("\"cpu.instr\""), "architectural stats survive");
         assert_eq!(arch.matches('{').count(), arch.matches('}').count());
     }

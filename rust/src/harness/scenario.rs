@@ -453,6 +453,12 @@ impl ScenarioResult {
         self.cycles as f64 / self.host_seconds
     }
 
+    /// Retired instructions (all harts) per host second — the metric the
+    /// uop-cache/batching work is gated on (`bench_simspeed`).
+    pub fn sim_instr_per_sec(&self) -> f64 {
+        self.stats.get("cpu.instr") as f64 / self.host_seconds
+    }
+
     /// Useful external-memory bytes moved, whichever backend ran.
     pub fn dram_bytes(&self) -> u64 {
         self.stats.get("rpc.useful_rd_bytes")

@@ -82,6 +82,16 @@ impl Clint {
     pub fn mtip(&self, hart: usize) -> bool {
         self.mtimecmp.get(hart).is_some_and(|&cmp| self.mtime >= cmp)
     }
+
+    /// The `mtime` value this CLINT will hold after `ticks` more cycles,
+    /// without mutating anything — the prescaler math of `skip`, read
+    /// ahead of time. The basic-block batcher publishes this as each
+    /// hart's `time` CSR at the end of every batched cycle, exactly
+    /// matching what the reference loop's per-cycle `tick` would expose.
+    pub fn mtime_after(&self, ticks: u64) -> u64 {
+        let d = self.divider.max(1) as u64;
+        self.mtime.wrapping_add((self.phase as u64 + ticks) / d)
+    }
 }
 
 impl Default for Clint {
@@ -450,6 +460,38 @@ mod tests {
                 assert_eq!(ticked.phase, skipped.phase);
                 ticked.tick(&mut s); // the real tick at the deadline
                 assert!(ticked.mtip(0), "mtip fires on the deadline tick");
+            }
+        }
+    }
+
+    /// `mtime_after(k)` predicts exactly what `k` ticks produce, for any
+    /// divider and prescaler phase, without mutating the CLINT.
+    #[test]
+    fn clint_mtime_after_matches_ticking() {
+        for divider in [1u32, 3, 7] {
+            for desync in [0u64, 1, 4] {
+                let mut c = Clint::new();
+                c.divider = divider;
+                let mut s = Stats::new();
+                for _ in 0..desync {
+                    c.tick(&mut s);
+                }
+                let mut ticked = Clint {
+                    msip: vec![false],
+                    mtime: c.mtime,
+                    mtimecmp: c.mtimecmp.clone(),
+                    divider,
+                    phase: c.phase,
+                };
+                for k in 1..=25u64 {
+                    ticked.tick(&mut s);
+                    assert_eq!(
+                        c.mtime_after(k),
+                        ticked.mtime,
+                        "div={divider} desync={desync} k={k}"
+                    );
+                }
+                assert_eq!(c.mtime_after(0), c.mtime);
             }
         }
     }

@@ -84,6 +84,9 @@ fn load_config_inner(args: &Args, apply_dsa: bool) -> CheshireConfig {
     if args.flag("no-elide") {
         cfg.elide_idle = false;
     }
+    if args.flag("no-uop-cache") {
+        cfg.uop_cache = false;
+    }
     if args.flag("blocking") {
         cfg.mem_blocking = true;
     }
@@ -93,7 +96,7 @@ fn load_config_inner(args: &Args, apply_dsa: bool) -> CheshireConfig {
 fn main() {
     let args = Args::from_env(
         &["info", "run", "offload", "boot", "sweep", "stats"],
-        &["stats", "serial", "no-elide", "blocking"],
+        &["stats", "serial", "no-elide", "no-uop-cache", "blocking"],
     );
     match args.subcommand.as_deref() {
         Some("info") => info(&args),
@@ -123,6 +126,8 @@ fn main() {
             eprintln!("             (sweep writes one file per scenario: out-0.json, out-1.json, ...)");
             eprintln!("  any subcommand: [--no-elide]  disable event-horizon idle elision");
             eprintln!("                  (architecturally identical, reference cycle loop)");
+            eprintln!("                  [--no-uop-cache]  disable decoded-uop cache + block batching");
+            eprintln!("                  (architecturally identical, per-cycle decode loop)");
             eprintln!("                  [--blocking]  single-outstanding memory hierarchy");
             eprintln!("                  (pre-MSHR baseline; identical functional outputs)");
             std::process::exit(2);

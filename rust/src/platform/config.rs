@@ -221,6 +221,13 @@ pub struct CheshireConfig {
     /// for bit — enforced by tests); disable with `--no-elide` or
     /// `platform.elide_idle = false` to force the reference cycle loop.
     pub elide_idle: bool,
+    /// Decoded micro-op cache + basic-block batch dispatch in the CPU hot
+    /// loop. Architecturally invisible like elision (cached/batched ≡
+    /// uncached, bit for bit — enforced by tests); disable with
+    /// `--no-uop-cache` or `platform.uop_cache = false` to force
+    /// decode-every-step. Batch dispatch additionally requires
+    /// `elide_idle` (it reuses the same `Activity` bounds).
+    pub uop_cache: bool,
 }
 
 impl CheshireConfig {
@@ -256,6 +263,7 @@ impl CheshireConfig {
             vga: true,
             boot_mode: 0,
             elide_idle: true,
+            uop_cache: true,
         }
     }
 
@@ -369,6 +377,9 @@ impl CheshireConfig {
         }
         if let Some(v) = get_b("platform.elide_idle") {
             c.elide_idle = v;
+        }
+        if let Some(v) = get_b("platform.uop_cache") {
+            c.uop_cache = v;
         }
         Ok(c)
     }
@@ -657,5 +668,13 @@ mod tests {
         assert!(CheshireConfig::neo().elide_idle, "elision is the default");
         let c = CheshireConfig::from_toml("[platform]\nelide_idle = false").unwrap();
         assert!(!c.elide_idle);
+    }
+
+    #[test]
+    fn uop_cache_defaults_on_and_loads_from_toml() {
+        assert!(CheshireConfig::neo().uop_cache, "the uop cache is the default");
+        let c = CheshireConfig::from_toml("[platform]\nuop_cache = false").unwrap();
+        assert!(!c.uop_cache);
+        assert!(c.elide_idle, "unrelated flags untouched");
     }
 }

@@ -34,6 +34,11 @@ use std::rc::Rc;
 /// optimization on top of the reference cycle loop).
 const MIN_ELIDE: u64 = 4;
 
+/// Hart-only batches shorter than this are not worth the entry checks and
+/// closing reconciliation; the engine just ticks (batching, like elision,
+/// is purely an optimization on top of the reference cycle loop).
+const MIN_BATCH: u64 = 8;
+
 type Shared<T> = Rc<RefCell<T>>;
 
 /// A D2D-attached ("chiplet") DSA slot: the engine lives on the far die,
@@ -330,7 +335,8 @@ impl Soc {
             (SPM_BASE, cfg.llc_bytes as u64),
             (DRAM_BASE, cfg.dram_bytes as u64),
         ];
-        let cpu = Cva6::new(cva6_cfg.clone());
+        let mut cpu = Cva6::new(cva6_cfg.clone());
+        cpu.set_uop_cache(cfg.uop_cache);
         // secondary harts: identical timing config, their own `mhartid`
         // (→ per-hart `cpu{N}.*` stat namespace), all booting from the
         // shared ROM, which parks them until hart 0's IPI
@@ -338,7 +344,9 @@ impl Soc {
             .map(|h| {
                 let mut c = cva6_cfg.clone();
                 c.hartid = h;
-                Cva6::new(c)
+                let mut hart = Cva6::new(c);
+                hart.set_uop_cache(cfg.uop_cache);
+                hart
             })
             .collect();
 
@@ -522,13 +530,29 @@ impl Soc {
     pub fn tick(&mut self) {
         let now: Cycle = self.clock.now();
         self.tracer.set_now(now);
-        let stats = &mut self.stats;
+        self.tick_harts();
+        self.tick_rest();
+    }
 
-        // managers (hart 0 first, then secondaries in hart order)
+    /// Tick the hart cluster only (hart 0 first, then secondaries in hart
+    /// order) — the first half of the reference cycle, reused verbatim by
+    /// the basic-block batcher.
+    fn tick_harts(&mut self) {
+        let stats = &mut self.stats;
         self.cpu.tick(&self.cpu_bus, stats);
         for (i, hart) in self.extra_harts.iter_mut().enumerate() {
             hart.tick(&self.extra_cpu_buses[i], stats);
         }
+    }
+
+    /// Tick everything after the harts — DMA onwards through the fabric
+    /// republish — and advance the clock: the second half of the
+    /// reference cycle. A batch abort completes its final cycle with
+    /// exactly this call, so a hart's fresh bus beats are routed at the
+    /// same cycle index the reference loop would route them.
+    fn tick_rest(&mut self) {
+        let now: Cycle = self.clock.now();
+        let stats = &mut self.stats;
         self.dma.tick(&self.dma_bus, stats);
         if self.cfg.vga {
             self.vga_scan.tick(&self.vga_bus, stats);
@@ -645,6 +669,24 @@ impl Soc {
                 return Activity::Busy;
             }
         }
+        combined = combined.combine(self.rest_activity(now));
+        if combined == Activity::Busy || !self.buses_idle() {
+            return Activity::Busy;
+        }
+        if !self.fabric_settled() {
+            return Activity::Busy;
+        }
+        combined
+    }
+
+    /// Combined [`Activity`] of everything *except* the hart cluster —
+    /// the non-hart half of [`Soc::poll_activity`]. An `IdleUntil(d)`
+    /// here is the platform's promise that ticking only the harts for
+    /// cycles strictly before `d` (with idle buses) leaves every other
+    /// component reproducible by its `skip` — the bound the basic-block
+    /// batcher shares with cycle elision.
+    fn rest_activity(&self, now: Cycle) -> Activity {
+        let mut combined = Activity::Quiescent;
         let parts = [
             self.dma.activity(now),
             self.xbar.activity(now),
@@ -669,36 +711,31 @@ impl Soc {
         for d in self.dsa.iter().flatten() {
             combined = combined.combine(d.activity(now));
         }
-        if combined == Activity::Busy || !self.buses_idle() {
-            return Activity::Busy;
-        }
-        // The interrupt fabric runs at the end of every *real* tick:
-        // source levels onto the PLIC lines, CLINT/PLIC levels onto the
-        // CPU's mip wires. An edge that has not propagated yet (e.g. a
-        // host-injected UART RX byte or msip poke between run calls) must
-        // pin the platform busy until the fabric has carried it, or a
-        // jump could sail past the wake-up.
-        let fabric_settled = {
-            let plic = self.plic.borrow();
-            let lines = plic.lines.borrow();
-            let mut lines_settled = true;
-            self.for_each_plic_source(|i, level| lines_settled &= lines[i] == level);
-            let clint = self.clint.borrow();
-            let hart_settled = |hart: &Cva6, h: usize| {
-                let mip = hart.core.csr.mip;
-                (mip >> 3) & 1 == clint.msip(h) as u64
-                    && (mip >> 7) & 1 == clint.mtip(h) as u64
-                    && (mip >> 11) & 1 == plic.meip_hart(h) as u64
-                    && (mip >> 9) & 1 == plic.seip_hart(h) as u64
-            };
-            lines_settled
-                && hart_settled(&self.cpu, 0)
-                && self.extra_harts.iter().enumerate().all(|(i, c)| hart_settled(c, i + 1))
-        };
-        if !fabric_settled {
-            return Activity::Busy;
-        }
         combined
+    }
+
+    /// The interrupt fabric runs at the end of every *real* tick: source
+    /// levels onto the PLIC lines, CLINT/PLIC levels onto the CPU's mip
+    /// wires. An edge that has not propagated yet (e.g. a host-injected
+    /// UART RX byte or msip poke between run calls) must pin the platform
+    /// busy until the fabric has carried it, or a jump could sail past
+    /// the wake-up.
+    fn fabric_settled(&self) -> bool {
+        let plic = self.plic.borrow();
+        let lines = plic.lines.borrow();
+        let mut lines_settled = true;
+        self.for_each_plic_source(|i, level| lines_settled &= lines[i] == level);
+        let clint = self.clint.borrow();
+        let hart_settled = |hart: &Cva6, h: usize| {
+            let mip = hart.core.csr.mip;
+            (mip >> 3) & 1 == clint.msip(h) as u64
+                && (mip >> 7) & 1 == clint.mtip(h) as u64
+                && (mip >> 11) & 1 == plic.meip_hart(h) as u64
+                && (mip >> 9) & 1 == plic.seip_hart(h) as u64
+        };
+        lines_settled
+            && hart_settled(&self.cpu, 0)
+            && self.extra_harts.iter().enumerate().all(|(i, c)| hart_settled(c, i + 1))
     }
 
     /// Fast-forward the clock across `n` provably idle cycles: apply the
@@ -730,6 +767,123 @@ impl Soc {
         self.tracer.set_now(self.clock.now());
     }
 
+    /// Basic-block batch dispatch: while every non-hart component is
+    /// provably idle (same [`Activity`] machinery elision uses), the
+    /// buses are empty, and the interrupt fabric is settled, tick *only*
+    /// the hart cluster each cycle — decoded uops retire back-to-back
+    /// without paying the full-platform tick. The non-hart components are
+    /// reconciled afterwards with the same `skip` bookkeeping
+    /// `skip_cycles` uses, so batched ≡ unbatched is inherited from the
+    /// elision contract (ticks strictly before a deadline are pure
+    /// bookkeeping). The moment a hart touches its bus (miss, MMIO,
+    /// writeback, flush) the batch aborts and that cycle is completed
+    /// with a real [`Soc::tick_rest`], so the beat is routed at exactly
+    /// the cycle the reference loop would route it.
+    ///
+    /// Returns the cycles advanced; 0 means no batch was possible and the
+    /// caller should fall back to a single reference tick.
+    fn try_batch(&mut self, limit: Cycle) -> u64 {
+        let start = self.clock.now();
+        // earliest non-hart deadline = exclusive batch bound: the tick AT
+        // a deadline must run for real, every cycle before it may be
+        // hart-only
+        let bound = match self.rest_activity(start) {
+            Activity::Busy => return 0,
+            Activity::IdleUntil(d) => d.min(limit),
+            Activity::Quiescent => limit,
+        };
+        let k_max = bound.saturating_sub(start);
+        if k_max < MIN_BATCH {
+            return 0;
+        }
+        if !self.buses_idle() || !self.fabric_settled() {
+            return 0;
+        }
+        if !self.cpu.batch_ready() || self.extra_harts.iter().any(|h| !h.batch_ready()) {
+            return 0;
+        }
+        if !self.cpu.batch_active() && self.extra_harts.iter().all(|h| !h.batch_active()) {
+            // every hart parked in WFI with nothing pending: that span
+            // belongs to the event-horizon scheduler, not the batcher
+            return 0;
+        }
+        // Interrupt levels are constant inside the batch: peripheral
+        // state only changes through bus traffic (which aborts) and the
+        // CLINT's next mtip edge is a deadline inside `bound` — so hoist
+        // each hart's lines once and republish them every cycle exactly
+        // as the reference fabric does (mip.MSIP is software-writable
+        // mid-batch, so the republish is not redundant).
+        let hoisted: Vec<(bool, bool, bool, bool)> = {
+            let clint = self.clint.borrow();
+            let plic = self.plic.borrow();
+            (0..self.extra_harts.len() + 1)
+                .map(|h| (clint.msip(h), clint.mtip(h), plic.meip_hart(h), plic.seip_hart(h)))
+                .collect()
+        };
+        let mut i: u64 = 0;
+        while i < k_max && !self.cpu.halted {
+            if !self.cpu.batch_active() && self.extra_harts.iter().all(|h| !h.batch_active()) {
+                break;
+            }
+            self.tracer.set_now(start + i);
+            self.tick_harts();
+            i += 1;
+            if !self.cpu_bus.is_idle() || self.extra_cpu_buses.iter().any(|b| !b.is_idle()) {
+                // a hart pushed beats this cycle: complete the cycle for
+                // real (harts have ticked; tick_rest routes and runs the
+                // end-of-cycle fabric, then advances the clock)
+                self.finish_batch(start, i - 1, true);
+                return i;
+            }
+            // end-of-cycle fabric republish, mirroring the reference tick
+            let mtime = self.clint.borrow().mtime_after(i);
+            let (msip, mtip, meip, seip) = hoisted[0];
+            self.cpu.set_time(mtime);
+            self.cpu.set_irqs(msip, mtip, meip, seip);
+            for (h, hart) in self.extra_harts.iter_mut().enumerate() {
+                let (msip, mtip, meip, seip) = hoisted[h + 1];
+                hart.set_time(mtime);
+                hart.set_irqs(msip, mtip, meip, seip);
+            }
+        }
+        if i == 0 {
+            return 0;
+        }
+        self.finish_batch(start, i, false);
+        i
+    }
+
+    /// Close a batch of `skipped` hart-only cycles that began at `start`:
+    /// reconcile the skip-capable components (VGA pixel debt, register
+    /// bus / CLINT prescaler) exactly as `skip_cycles` would, then either
+    /// complete the aborting cycle with a real [`Soc::tick_rest`]
+    /// (`complete_cycle`) or just republish `mtime` and advance.
+    fn finish_batch(&mut self, start: Cycle, skipped: u64, complete_cycle: bool) {
+        if skipped > 0 {
+            if self.cfg.vga {
+                self.vga_scan.skip(skipped, &mut self.stats);
+            }
+            self.regbus.skip(skipped, &mut self.stats);
+        }
+        self.clock.advance_by(skipped);
+        if complete_cycle {
+            // tracer `now` is already at this cycle (set in the batch
+            // loop); tick_rest re-reads the clock for the routing cycle
+            self.tick_rest();
+        } else {
+            let mtime = self.clint.borrow().mtime;
+            self.cpu.set_time(mtime);
+            for hart in &mut self.extra_harts {
+                hart.set_time(mtime);
+            }
+        }
+        let total = self.clock.now() - start;
+        self.stats.add("sched.uop_batch_cycles", total);
+        self.stats.bump("sched.uop_batches");
+        self.tracer.span("sched.uop_batch", "sched", pid::SCHED, 0, start, total, total);
+        self.tracer.set_now(self.clock.now());
+    }
+
     /// Advance the platform: one real [`Soc::tick`] whenever any component
     /// is (or may be) busy, or an event-horizon jump to the earliest
     /// pending deadline when the whole platform is provably idle. The
@@ -745,7 +899,17 @@ impl Soc {
             return 1;
         }
         let n = match self.poll_activity() {
-            Activity::Busy => 1,
+            Activity::Busy => {
+                // compute-bound: try retiring a whole straight-line batch
+                // of hart cycles before falling back to a reference tick
+                if self.cfg.uop_cache {
+                    let batched = self.try_batch(limit);
+                    if batched > 0 {
+                        return batched;
+                    }
+                }
+                1
+            }
             Activity::IdleUntil(deadline) => deadline.saturating_sub(now).min(limit - now).max(1),
             Activity::Quiescent => limit - now,
         };
@@ -956,6 +1120,64 @@ mod tests {
             s1.iter().filter(|(k, _)| !k.starts_with("sched.")).count(),
             s0.iter().count(),
             "elision adds only sched.* keys"
+        );
+    }
+
+    /// The uop cache + basic-block batcher must be architecturally
+    /// invisible: a compute-bound loop with MMIO (UART) interleaved
+    /// produces the same halt cycle, UART output and non-`uop.*`/
+    /// non-`sched.*` stats with the cache on and off — while batches
+    /// actually dispatch.
+    #[test]
+    fn uop_batching_matches_reference_loop() {
+        let program = || {
+            let mut a = Asm::new(DRAM_BASE);
+            // long straight-line-ish compute: sum of 1..=5000
+            a.li(A0, 0);
+            a.li(T0, 1);
+            a.li(T1, 5001);
+            a.label("loop");
+            a.add(A0, A0, T0);
+            a.addi(T0, T0, 1);
+            a.bne(T0, T1, "loop");
+            // MMIO mid-run: forces batch aborts at the bus boundary
+            a.li(S1, UART_BASE as i64);
+            a.li(T0, b'!' as i64);
+            a.sw(T0, S1, 0);
+            a.label("drain");
+            a.lw(T1, S1, 0x08);
+            a.andi(T1, T1, 0x20);
+            a.beq(T1, ZERO, "drain");
+            a.ebreak();
+            a.finish()
+        };
+        let run_one = |uop: bool| {
+            let mut cfg = CheshireConfig::neo();
+            cfg.uop_cache = uop;
+            let mut soc = Soc::new(cfg);
+            soc.preload(&program(), DRAM_BASE);
+            let cycles = soc.run(4_000_000);
+            assert!(soc.cpu.halted, "uop={uop}: pc={:#x}", soc.cpu.core.pc);
+            assert_eq!(soc.cpu.core.x[10], 5000 * 5001 / 2, "uop={uop}");
+            (cycles, soc.uart.borrow().tx_string(), soc.stats.clone())
+        };
+        let (c1, u1, s1) = run_one(true);
+        let (c0, u0, s0) = run_one(false);
+        assert_eq!(c1, c0, "halt cycle must survive batching");
+        assert_eq!(u1, u0);
+        assert!(s1.get("sched.uop_batches") > 0, "batches actually dispatched");
+        assert!(s1.get("uop.hits") > 0, "the loop body hit the uop cache");
+        assert_eq!(s0.get("uop.hits"), 0, "disabled cache moves no counters");
+        for (k, v) in s0.iter() {
+            if k.starts_with("sched.") {
+                continue; // batching reshapes the scheduler's own counters
+            }
+            assert_eq!(s1.get(k), v, "stat {k} must survive batching");
+        }
+        assert_eq!(
+            s1.iter().filter(|(k, _)| !k.starts_with("sched.") && !k.starts_with("uop.")).count(),
+            s0.iter().filter(|(k, _)| !k.starts_with("sched.")).count(),
+            "batching adds only sched.* and uop.* keys"
         );
     }
 

@@ -715,6 +715,135 @@ mod elision_equivalence {
     }
 }
 
+/// Uop-cache/batching equivalence: for random (workload, backend, MSHR,
+/// hart-count) points, a run with the decoded-uop cache + basic-block
+/// batching and one with the per-cycle decode loop must be
+/// architecturally bit-identical — identical UART output, identical DRAM
+/// and SPM images, identical halt cycle and halt state, and identical
+/// stats modulo the simulator's own `sched.*` and `uop.*` counters —
+/// under *both* the elided and the reference scheduler loop (batching
+/// composes with elision; the cache alone must also be invisible).
+mod uop_equivalence {
+    use cheshire::harness::Workload;
+    use cheshire::platform::config::{parse_slots, MemBackend};
+    use cheshire::platform::memmap::DRAM_BASE;
+    use cheshire::platform::{CheshireConfig, Soc};
+    use cheshire::sim::prop::{cases, Rng};
+
+    /// FNV-1a over a byte slice — cheap full-memory fingerprint.
+    fn fnv(bytes: &[u8]) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
+    fn random_point(rng: &mut Rng) -> (Workload, MemBackend, usize, usize) {
+        let wl = match rng.below(5) {
+            0 => Workload::Mem {
+                len: 1 << rng.range(9, 12) as u32,
+                reps: rng.range(1, 3) as u32,
+                max_burst: 2048,
+            },
+            1 => Workload::TwoMm { n: 8 },
+            2 => Workload::Contention {
+                dma_kib: rng.range(2, 6) as u32,
+                tile_n: 8,
+                jobs: 1,
+                spm_kib: 8,
+            },
+            3 => Workload::Smp { kib: rng.range(1, 3) as u32 },
+            _ => Workload::Supervisor {
+                demand_pages: rng.range(1, 4) as u32,
+                timer_delta: rng.range(5_000, 40_000) as u32,
+            },
+        };
+        let backend = if rng.bool() { MemBackend::Rpc } else { MemBackend::HyperRam };
+        let mshrs = *rng.pick(&[1usize, 4]);
+        let harts = if matches!(wl, Workload::Smp { .. }) { *rng.pick(&[2usize, 4]) } else { 1 };
+        (wl, backend, mshrs, harts)
+    }
+
+    /// Everything architecturally observable about one finished run.
+    #[derive(Debug, PartialEq)]
+    struct Fingerprint {
+        cycles: u64,
+        halted: bool,
+        uart: String,
+        dram_fnv: u64,
+        spm_fnv: u64,
+        arch_stats: Vec<(&'static str, u64)>,
+    }
+
+    /// One run → (fingerprint, `uop.hits`, `sched.uop_batches`).
+    fn fingerprint(
+        wl: &Workload,
+        backend: MemBackend,
+        mshrs: usize,
+        harts: usize,
+        uop: bool,
+        elide: bool,
+    ) -> (Fingerprint, u64, u64) {
+        let mut cfg = CheshireConfig::neo();
+        cfg.backend = backend;
+        cfg.llc_mshrs = mshrs;
+        cfg.harts = harts;
+        cfg.uop_cache = uop;
+        cfg.elide_idle = elide;
+        if matches!(wl, Workload::Contention { .. }) {
+            cfg.spm_way_mask = 0x0f;
+            cfg.dsa_slots = parse_slots("matmul").unwrap();
+        }
+        if matches!(wl, Workload::Smp { .. }) {
+            cfg.dsa_slots = parse_slots("matmul+crc+reduce").unwrap();
+        }
+        let mut soc = Soc::new(cfg);
+        let img = wl.stage(&mut soc);
+        soc.preload(&img, DRAM_BASE);
+        let cycles = soc.run(20_000_000);
+        assert!(soc.cpu.halted, "{wl:?} must halt (pc={:#x})", soc.cpu.core.pc);
+        let fp = Fingerprint {
+            cycles,
+            halted: soc.cpu.halted,
+            uart: soc.uart.borrow().tx_string(),
+            dram_fnv: fnv(soc.dram_raw()),
+            spm_fnv: fnv(soc.llc.spm_raw()),
+            arch_stats: soc
+                .stats
+                .iter()
+                .filter(|(k, _)| !k.starts_with("sched.") && !k.starts_with("uop."))
+                .collect(),
+        };
+        (fp, soc.stats.get("uop.hits"), soc.stats.get("sched.uop_batches"))
+    }
+
+    #[test]
+    fn cached_batched_runs_are_bit_identical_to_decode_loop() {
+        cases(3, 0x00B0_0C0D, |rng| {
+            let (wl, backend, mshrs, harts) = random_point(rng);
+            for elide in [true, false] {
+                let (on, _, _) = fingerprint(&wl, backend, mshrs, harts, true, elide);
+                let (off, off_hits, off_batches) = fingerprint(&wl, backend, mshrs, harts, false, elide);
+                assert_eq!(
+                    on, off,
+                    "{wl:?}/{backend}/mshr{mshrs}/harts{harts}/elide={elide}: cached ≡ uncached"
+                );
+                assert_eq!(off_hits, 0, "--no-uop-cache must hit nothing");
+                assert_eq!(off_batches, 0, "--no-uop-cache must batch nothing");
+            }
+        });
+        // non-vacuity: a known compute-heavy supervisor point must actually
+        // hit the cache and dispatch batches (the equivalence above would
+        // hold vacuously if neither mechanism ever engaged)
+        let wl = Workload::Supervisor { demand_pages: 8, timer_delta: 20_000 };
+        let (_, hits, batches) = fingerprint(&wl, MemBackend::Rpc, 4, 1, true, true);
+        assert!(hits > 0, "uop cache engaged ({hits} hits)");
+        assert!(batches > 0, "block batching engaged ({batches} batches)");
+    }
+}
+
 /// D2D transparency: an accelerator behind the serialized die-to-die
 /// link is *functionally* identical to the same accelerator on-die — the
 /// link may only change timing. For random pipeline lengths, the hetero
