@@ -1,0 +1,148 @@
+//! Design-space explorer acceptance bench — pruning ratio, frontier
+//! recall, and model error on a reference grid.
+//!
+//! Runs the same ≥256-point reference grid twice:
+//!
+//! 1. **exhaustively** through the ordinary parallel harness, computing
+//!    the measured per-workload Pareto frontiers over (cycles/byte,
+//!    pJ/byte, kGE) — the ground truth;
+//! 2. through **`harness::explore`** at default parameters (star
+//!    calibration, analytical prediction, guard-banded pruning,
+//!    simulate-survivors).
+//!
+//! Emits `BENCH_dse.json` (cwd) and enforces the acceptance gates, each
+//! overridable by environment variable:
+//!
+//! * `DSE_BENCH_MIN_RECALL`  (default 1.0)  — every point of the
+//!   exhaustively measured Pareto frontier must be among the points the
+//!   explorer simulated;
+//! * `DSE_BENCH_MAX_SIM_FRAC` (default 0.30) — the explorer must
+//!   simulate at most this fraction of the grid;
+//! * `DSE_BENCH_MAX_MAE`     (default 0.25) — mean absolute relative
+//!   error of predicted cycles over the simulated points.
+
+use cheshire::harness::{self, ExploreParams, SweepGrid, Workload};
+use cheshire::model::benchkit::{f1, f3, Table};
+use cheshire::model::dse::{measured_objectives, pareto_frontier};
+use cheshire::model::AreaModel;
+use cheshire::platform::config::MemBackend;
+use cheshire::platform::CheshireConfig;
+use std::collections::HashSet;
+
+/// The reference grid: 2 workloads × 2 backends × 2 SPM masks × 3 TLB
+/// sizes × 4 MSHR depths × 4 outstanding-burst caps = 384 points.
+fn reference_grid() -> SweepGrid {
+    let mut g = SweepGrid::new(CheshireConfig::neo());
+    g.workloads = vec![
+        Workload::parse("mem").expect("builtin"),
+        Workload::parse("supervisor").expect("builtin"),
+    ];
+    g.backends = vec![MemBackend::Rpc, MemBackend::HyperRam];
+    g.spm_way_masks = vec![0xff, 0x0f];
+    g.tlb_entries = vec![16, 4, 2];
+    g.mshrs = vec![1, 2, 4, 8];
+    g.outstanding = vec![1, 2, 4, 8];
+    g
+}
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let grid = reference_grid();
+    let params = ExploreParams::default();
+    let n = grid.len();
+    assert!(n >= 256, "reference grid must hold at least 256 points (has {n})");
+
+    // ground truth: exhaustive sweep + measured per-workload frontiers
+    let axes = grid.axes_dedup();
+    let indexed = grid.indexed_scenarios();
+    let t0 = std::time::Instant::now();
+    let results =
+        harness::run_parallel(indexed.iter().map(|(_, sc)| sc.clone()).collect(), params.threads);
+    let wall_exhaustive = t0.elapsed().as_secs_f64();
+    let areas: Vec<f64> =
+        indexed.iter().map(|(_, sc)| AreaModel::cheshire(&sc.cfg).total()).collect();
+    let per_w = n / axes.workloads.len();
+    let mut measured_frontier: HashSet<usize> = HashSet::new();
+    for w in 0..axes.workloads.len() {
+        let base = w * per_w;
+        let objs: Vec<_> = (0..per_w)
+            .map(|i| measured_objectives(&results[base + i], areas[base + i]))
+            .collect();
+        for i in pareto_frontier(&objs, params.pareto_quantum) {
+            measured_frontier.insert(base + i);
+        }
+    }
+
+    // the explorer under test
+    let t1 = std::time::Instant::now();
+    let out = harness::explore(&grid, &params);
+    let wall_explore = t1.elapsed().as_secs_f64();
+    let dse = &out.dse;
+
+    let simulated: HashSet<usize> = (0..n).filter(|&i| dse.points[i].measured.is_some()).collect();
+    let hit = measured_frontier.iter().filter(|i| simulated.contains(i)).count();
+    let recall = hit as f64 / measured_frontier.len().max(1) as f64;
+    let sim_frac = dse.sim_fraction();
+    let mae = dse.mae_cycles();
+    let speedup = wall_exhaustive / wall_explore.max(1e-9);
+
+    let mut t = Table::new(
+        "DSE explorer vs exhaustive sweep — reference grid",
+        &["metric", "value"],
+    );
+    t.row(&["grid points".into(), n.to_string()]);
+    t.row(&["simulated".into(), dse.simulated().to_string()]);
+    t.row(&["  calibration".into(), dse.calibration_runs().to_string()]);
+    t.row(&["pruned".into(), (n - dse.simulated()).to_string()]);
+    t.row(&["sim fraction".into(), f3(sim_frac)]);
+    t.row(&["measured frontier".into(), measured_frontier.len().to_string()]);
+    t.row(&["frontier recall".into(), f3(recall)]);
+    t.row(&["MAE cycles %".into(), f1(100.0 * mae)]);
+    t.row(&["MAE energy %".into(), f1(100.0 * dse.mae_energy())]);
+    t.row(&["out-of-band points".into(), dse.out_of_band().to_string()]);
+    t.row(&["wall exhaustive s".into(), f1(wall_exhaustive)]);
+    t.row(&["wall explore s".into(), f1(wall_explore)]);
+    t.row(&["wall speedup".into(), f1(speedup)]);
+    t.print();
+
+    let json = format!(
+        "{{\n  \"grid_points\": {n},\n  \"simulated\": {},\n  \"calibration_runs\": {},\n  \
+         \"pruned\": {},\n  \"sim_fraction\": {sim_frac},\n  \"measured_frontier\": {},\n  \
+         \"frontier_recall\": {recall},\n  \"mae_cycles\": {mae},\n  \"mae_energy\": {},\n  \
+         \"out_of_band\": {},\n  \"wall_exhaustive_s\": {wall_exhaustive},\n  \
+         \"wall_explore_s\": {wall_explore},\n  \"wall_speedup\": {speedup}\n}}\n",
+        dse.simulated(),
+        dse.calibration_runs(),
+        n - dse.simulated(),
+        measured_frontier.len(),
+        dse.mae_energy(),
+        dse.out_of_band(),
+    );
+    std::fs::write("BENCH_dse.json", &json).expect("write BENCH_dse.json");
+    println!("\nwritten: BENCH_dse.json");
+
+    let min_recall = env_f64("DSE_BENCH_MIN_RECALL", 1.0);
+    let max_sim_frac = env_f64("DSE_BENCH_MAX_SIM_FRAC", 0.30);
+    let max_mae = env_f64("DSE_BENCH_MAX_MAE", 0.25);
+    assert!(
+        recall >= min_recall,
+        "explorer must recover ≥{min_recall} of the measured Pareto frontier \
+         (got {recall:.3}: {hit} of {})",
+        measured_frontier.len()
+    );
+    assert!(
+        sim_frac <= max_sim_frac,
+        "explorer must simulate ≤{max_sim_frac} of the grid (got {sim_frac:.3})"
+    );
+    assert!(
+        mae <= max_mae,
+        "predicted-cycles MAE must stay ≤{max_mae} on the simulated points (got {mae:.3})"
+    );
+    println!(
+        "gates OK: recall {recall:.3} ≥ {min_recall}, sim fraction {sim_frac:.3} ≤ {max_sim_frac}, \
+         MAE {mae:.3} ≤ {max_mae}"
+    );
+}

@@ -1,0 +1,642 @@
+//! Model-pruned design-space exploration: calibrate → predict → prune →
+//! simulate only the Pareto candidates.
+//!
+//! [`explore`] is the `cheshire explore` / `cheshire sweep --explore`
+//! engine. Instead of simulating a [`SweepGrid`]'s full cartesian
+//! product, it
+//!
+//! 1. simulates the *star* calibration subset (per `(workload,
+//!    backend)` pair: the anchor point plus one run per off-anchor axis
+//!    value) through the ordinary parallel harness,
+//! 2. fits a [`DsePredictor`] to those results and predicts every grid
+//!    point analytically (microseconds per point),
+//! 3. computes the predicted Pareto frontier per workload over
+//!    (inverse throughput, energy/byte, area), expands it by the
+//!    `--frontier-slack` guard band, and
+//! 4. simulates only the surviving candidates, emitting a [`DseReport`]
+//!    with per-point predicted-vs-measured relative error alongside an
+//!    ordinary [`SweepReport`] of the simulated subset.
+//!
+//! Self-checking: every simulated point's measured cycles/energy/power
+//! are compared against the prediction, and points outside the
+//! `--error-band` are flagged in the report (`in_band: false`) rather
+//! than silently absorbed — model rot shows up as a visible regression
+//! in `BENCH_dse.json` and in any explore output.
+//!
+//! Determinism: calibration and candidate runs go through the same
+//! deterministic [`run_parallel`], the predictor fit is a pure function
+//! of those results, and the report JSON contains no host-timing
+//! fields, so two identical `explore` invocations produce byte-identical
+//! documents (CI diffs them) and the simulated subset is bit-identical
+//! to the same points run via plain `sweep`.
+
+use super::grid::{GridAxes, PointIdx, SweepGrid, AXIS_NAMES, NUM_CFG_AXES};
+use super::report::{json_escape, SweepReport};
+use super::run_parallel;
+use super::scenario::{Scenario, ScenarioResult};
+use crate::model::benchkit::{f1, f3, Table};
+use crate::model::dse::{
+    pareto_frontier, prune, rel_err, DsePredictor, Prediction, PruneOutcome,
+};
+use crate::model::AreaModel;
+use std::collections::HashSet;
+
+/// Tunables of one explore run.
+#[derive(Debug, Clone, Copy)]
+pub struct ExploreParams {
+    /// Guard band around the predicted frontier: a point survives
+    /// pruning if improving its throughput and energy objectives by
+    /// this relative margin would make it non-dominated. Covers the
+    /// model's trusted error — larger keeps more points.
+    pub frontier_slack: f64,
+    /// Relative width of the log-space dominance buckets (sub-quantum
+    /// objective differences cannot decide dominance).
+    pub pareto_quantum: f64,
+    /// Relative error above which a simulated point's
+    /// predicted-vs-measured comparison is flagged out-of-band.
+    pub error_band: f64,
+    /// Worker threads for the simulation batches (0 = one per core).
+    pub threads: usize,
+}
+
+impl Default for ExploreParams {
+    fn default() -> Self {
+        Self { frontier_slack: 0.15, pareto_quantum: 0.01, error_band: 0.25, threads: 0 }
+    }
+}
+
+/// Why a grid point was (or wasn't) simulated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PointStatus {
+    /// Part of the star calibration set (always simulated — the fit
+    /// needs it, whatever the model thinks of its merits).
+    Calibration,
+    /// Survived guard-banded pruning; simulated.
+    Candidate,
+    /// Dominated even after the guard band; not simulated. Carries the
+    /// flat index of the first dominating point.
+    Pruned(usize),
+    /// Bit-equal predicted objectives of an earlier point; not
+    /// simulated. Carries the flat index of the representative.
+    Tied(usize),
+}
+
+impl PointStatus {
+    /// Stable label used in the JSON document and the table.
+    pub fn label(&self) -> &'static str {
+        match self {
+            PointStatus::Calibration => "calibration",
+            PointStatus::Candidate => "candidate",
+            PointStatus::Pruned(_) => "pruned",
+            PointStatus::Tied(_) => "tied",
+        }
+    }
+}
+
+/// Measured outcome and model error of one simulated point.
+#[derive(Debug, Clone)]
+pub struct MeasuredPoint {
+    /// Measured cycles.
+    pub cycles: u64,
+    /// Measured useful DRAM bytes.
+    pub bytes: u64,
+    /// Measured (modeled-from-stats) energy to completion, pJ.
+    pub energy_pj: f64,
+    /// Measured mean power, mW.
+    pub power_mw: f64,
+    /// Relative error of the predicted cycles.
+    pub err_cycles: f64,
+    /// Relative error of the predicted energy.
+    pub err_energy: f64,
+    /// Relative error of the predicted mean power.
+    pub err_power: f64,
+    /// Whether every checked error sits within the configured band
+    /// (cycles and energy; power is derived from them).
+    pub in_band: bool,
+}
+
+/// One grid point in the DSE report.
+#[derive(Debug, Clone)]
+pub struct DsePoint {
+    /// Scenario name (the sweep-report key for simulated points).
+    pub name: String,
+    /// Workload short name.
+    pub workload: &'static str,
+    /// Grid position.
+    pub idx: PointIdx,
+    /// Pruning decision.
+    pub status: PointStatus,
+    /// Analytical prediction.
+    pub predicted: Prediction,
+    /// Exact modeled area of this configuration, kGE.
+    pub area_kge: f64,
+    /// Whether the point is on the *predicted* Pareto frontier of its
+    /// workload.
+    pub frontier: bool,
+    /// Measured outcome (simulated points only).
+    pub measured: Option<MeasuredPoint>,
+}
+
+/// The design-space exploration report: predictions, pruning decisions,
+/// and predicted-vs-measured errors for one grid.
+#[derive(Debug, Clone)]
+pub struct DseReport {
+    /// Guard band used.
+    pub slack: f64,
+    /// Dominance bucket width used.
+    pub quantum: f64,
+    /// Error band used for flagging.
+    pub error_band: f64,
+    /// The grid's deduplicated axes.
+    pub axes: GridAxes,
+    /// The fitted predictor (anchors + multiplier tables).
+    pub predictor: DsePredictor,
+    /// Core clock the grid runs at (predicted power is reported at this
+    /// frequency; every scenario in a grid inherits the base config's
+    /// clock).
+    pub freq_hz: f64,
+    /// Every grid point, in grid order.
+    pub points: Vec<DsePoint>,
+}
+
+/// Result of one explore run: the DSE report plus an ordinary sweep
+/// report over exactly the simulated subset (grid order).
+#[derive(Debug, Clone)]
+pub struct ExploreOutcome {
+    /// Predictions, pruning decisions, and model errors.
+    pub dse: DseReport,
+    /// The simulated subset, as a plain sweep report.
+    pub sweep: SweepReport,
+}
+
+/// The star calibration plan for `axes`: for every `(workload,
+/// backend)` pair, the anchor (all configuration axes at index 0)
+/// followed by one point per off-anchor axis value. Deterministic
+/// order; all members are grid points.
+pub fn star_plan(axes: &GridAxes) -> Vec<PointIdx> {
+    let mut out = Vec::new();
+    for w in 0..axes.workloads.len() {
+        for b in 0..axes.backends.len() {
+            let anchor = PointIdx { workload: w, backend: b, axis: [0; NUM_CFG_AXES] };
+            out.push(anchor);
+            for ax in 0..NUM_CFG_AXES {
+                for v in 1..axes.axis_len(ax) {
+                    let mut idx = anchor;
+                    idx.axis[ax] = v;
+                    out.push(idx);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Explore `grid`: calibrate, predict, prune, simulate the survivors.
+/// See the module docs for the full protocol. Panics on duplicate
+/// scenario names (via [`SweepGrid::indexed_scenarios`]) and on an
+/// inconsistent calibration plan (via [`DsePredictor::fit`]).
+pub fn explore(grid: &SweepGrid, params: &ExploreParams) -> ExploreOutcome {
+    let axes = grid.axes_dedup();
+    let indexed = grid.indexed_scenarios();
+    let n = indexed.len();
+
+    // 1. simulate the star calibration subset
+    let plan = star_plan(&axes);
+    let plan_flat: Vec<usize> = plan.iter().map(|idx| axes.flat_index(idx)).collect();
+    let calib_scs: Vec<Scenario> = plan_flat.iter().map(|&i| indexed[i].1.clone()).collect();
+    let calib_results = run_parallel(calib_scs, params.threads);
+    let calib: Vec<(PointIdx, ScenarioResult)> =
+        plan.iter().copied().zip(calib_results).collect();
+
+    // 2. fit the predictor and evaluate the whole grid analytically
+    let predictor = DsePredictor::fit(&axes, &calib);
+    let predictions: Vec<Prediction> = indexed.iter().map(|(idx, _)| predictor.predict(idx)).collect();
+    let areas: Vec<f64> =
+        indexed.iter().map(|(_, sc)| AreaModel::cheshire(&sc.cfg).total()).collect();
+
+    // 3. per-workload pruning (objectives are only comparable within a
+    // workload — different workloads do different work) over the
+    // contiguous workload-major blocks of the flat grid order
+    let per_w = if axes.workloads.is_empty() { 0 } else { n / axes.workloads.len() };
+    let mut outcome: Vec<PruneOutcome> = Vec::with_capacity(n);
+    let mut frontier: HashSet<usize> = HashSet::new();
+    for w in 0..axes.workloads.len() {
+        let base = w * per_w;
+        let objs: Vec<_> =
+            (0..per_w).map(|i| predictions[base + i].objectives(areas[base + i])).collect();
+        for i in pareto_frontier(&objs, params.pareto_quantum) {
+            frontier.insert(base + i);
+        }
+        for o in prune(&objs, params.pareto_quantum, params.frontier_slack) {
+            outcome.push(match o {
+                PruneOutcome::Kept => PruneOutcome::Kept,
+                PruneOutcome::Tied(j) => PruneOutcome::Tied(base + j),
+                PruneOutcome::Dominated(j) => PruneOutcome::Dominated(base + j),
+            });
+        }
+    }
+
+    // 4. simulate the surviving candidates the calibration didn't cover
+    let calib_set: HashSet<usize> = plan_flat.iter().copied().collect();
+    let candidate_flat: Vec<usize> = (0..n)
+        .filter(|i| !calib_set.contains(i) && matches!(outcome[*i], PruneOutcome::Kept))
+        .collect();
+    let cand_scs: Vec<Scenario> = candidate_flat.iter().map(|&i| indexed[i].1.clone()).collect();
+    let cand_results = run_parallel(cand_scs, params.threads);
+
+    let mut measured: Vec<Option<ScenarioResult>> = vec![None; n];
+    for (idx, r) in &calib {
+        measured[axes.flat_index(idx)] = Some(r.clone());
+    }
+    for (&i, r) in candidate_flat.iter().zip(cand_results) {
+        measured[i] = Some(r);
+    }
+
+    // 5. assemble the reports
+    let mut points = Vec::with_capacity(n);
+    for (i, (idx, sc)) in indexed.iter().enumerate() {
+        let status = if calib_set.contains(&i) {
+            PointStatus::Calibration
+        } else {
+            match outcome[i] {
+                PruneOutcome::Kept => PointStatus::Candidate,
+                PruneOutcome::Tied(j) => PointStatus::Tied(j),
+                PruneOutcome::Dominated(j) => PointStatus::Pruned(j),
+            }
+        };
+        let predicted = predictions[i];
+        let m = measured[i].as_ref().map(|r| {
+            let err_cycles = rel_err(predicted.cycles, r.cycles.max(1) as f64);
+            let err_energy = rel_err(predicted.energy_pj, r.energy_pj());
+            let err_power = rel_err(predicted.power_mw(r.freq_hz), r.power.total());
+            MeasuredPoint {
+                cycles: r.cycles,
+                bytes: r.dram_bytes(),
+                energy_pj: r.energy_pj(),
+                power_mw: r.power.total(),
+                err_cycles,
+                err_energy,
+                err_power,
+                in_band: err_cycles <= params.error_band && err_energy <= params.error_band,
+            }
+        });
+        points.push(DsePoint {
+            name: sc.name.clone(),
+            workload: axes.workloads[idx.workload].name(),
+            idx: *idx,
+            status,
+            predicted,
+            area_kge: areas[i],
+            frontier: frontier.contains(&i),
+            measured: m,
+        });
+    }
+    let freq_hz = indexed.first().map_or(200.0e6, |(_, sc)| sc.cfg.freq_hz);
+    let sweep = SweepReport::new(measured.into_iter().flatten().collect());
+    let dse = DseReport {
+        slack: params.frontier_slack,
+        quantum: params.pareto_quantum,
+        error_band: params.error_band,
+        axes,
+        predictor,
+        freq_hz,
+        points,
+    };
+    ExploreOutcome { dse, sweep }
+}
+
+impl DseReport {
+    /// Number of grid points.
+    pub fn grid_points(&self) -> usize {
+        self.points.len()
+    }
+
+    /// Number of simulated points (calibration + candidates).
+    pub fn simulated(&self) -> usize {
+        self.points.iter().filter(|p| p.measured.is_some()).count()
+    }
+
+    /// Simulated fraction of the grid — the pruning headline.
+    pub fn sim_fraction(&self) -> f64 {
+        self.simulated() as f64 / self.points.len().max(1) as f64
+    }
+
+    /// Number of calibration runs.
+    pub fn calibration_runs(&self) -> usize {
+        self.points.iter().filter(|p| p.status == PointStatus::Calibration).count()
+    }
+
+    /// Size of the predicted Pareto frontier (per-workload union).
+    pub fn frontier_size(&self) -> usize {
+        self.points.iter().filter(|p| p.frontier).count()
+    }
+
+    /// Mean absolute relative error of predicted cycles over simulated
+    /// points (0 when nothing was simulated).
+    pub fn mae_cycles(&self) -> f64 {
+        mean(self.points.iter().filter_map(|p| p.measured.as_ref().map(|m| m.err_cycles)))
+    }
+
+    /// Mean absolute relative error of predicted energy.
+    pub fn mae_energy(&self) -> f64 {
+        mean(self.points.iter().filter_map(|p| p.measured.as_ref().map(|m| m.err_energy)))
+    }
+
+    /// Mean absolute relative error of predicted mean power.
+    pub fn mae_power(&self) -> f64 {
+        mean(self.points.iter().filter_map(|p| p.measured.as_ref().map(|m| m.err_power)))
+    }
+
+    /// Worst per-point cycle error among simulated points.
+    pub fn max_err_cycles(&self) -> f64 {
+        self.points
+            .iter()
+            .filter_map(|p| p.measured.as_ref().map(|m| m.err_cycles))
+            .fold(0.0, f64::max)
+    }
+
+    /// Simulated points whose error exceeds the band — the explicit
+    /// model-rot flags.
+    pub fn out_of_band(&self) -> usize {
+        self.points
+            .iter()
+            .filter(|p| p.measured.as_ref().is_some_and(|m| !m.in_band))
+            .count()
+    }
+
+    /// Comparative table: one row per grid point, predicted next to
+    /// measured with relative errors, pruning status, and the dominator
+    /// of every pruned point.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "Design-space exploration — predicted vs measured",
+            &[
+                "scenario", "status", "pred Mcyc", "meas Mcyc", "err%", "pred mW", "meas mW",
+                "err%", "pred B/cyc", "kGE", "note",
+            ],
+        );
+        for p in &self.points {
+            let (mc, ec, mw, ew) = match &p.measured {
+                Some(m) => (
+                    f3(m.cycles as f64 / 1e6),
+                    f1(m.err_cycles * 100.0),
+                    f1(m.power_mw),
+                    f1(m.err_power * 100.0),
+                ),
+                None => ("-".into(), "-".into(), "-".into(), "-".into()),
+            };
+            let note = match p.status {
+                PointStatus::Pruned(j) => format!("dominated by {}", self.points[j].name),
+                PointStatus::Tied(j) => format!("tied with {}", self.points[j].name),
+                _ if p.measured.as_ref().is_some_and(|m| !m.in_band) => "OUT OF BAND".into(),
+                _ if p.frontier => "frontier".into(),
+                _ => String::new(),
+            };
+            t.row(&[
+                p.name.clone(),
+                p.status.label().into(),
+                f3(p.predicted.cycles / 1e6),
+                mc,
+                ec,
+                f1(p.predicted.power_mw(self.freq_hz)),
+                mw,
+                ew,
+                f3(p.predicted.bytes_per_cycle()),
+                f1(p.area_kge),
+                note,
+            ]);
+        }
+        t
+    }
+
+    /// Serialize the whole report as one deterministic JSON document:
+    /// parameters, summary, per-pair calibration coefficients, and
+    /// per-point predictions with pruning status and measured errors.
+    /// No host-timing fields — two identical explore runs produce
+    /// byte-identical documents (CI diffs them).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!(
+            "  \"params\": {{\"frontier_slack\": {}, \"pareto_quantum\": {}, \"error_band\": {}}},\n",
+            self.slack, self.quantum, self.error_band
+        ));
+        out.push_str(&format!("  \"grid_points\": {},\n", self.grid_points()));
+        out.push_str(&format!("  \"simulated\": {},\n", self.simulated()));
+        out.push_str(&format!("  \"sim_fraction\": {},\n", self.sim_fraction()));
+        out.push_str(&format!("  \"calibration_runs\": {},\n", self.calibration_runs()));
+        out.push_str(&format!("  \"predicted_frontier_size\": {},\n", self.frontier_size()));
+        out.push_str(&format!(
+            "  \"error\": {{\"mae_cycles\": {}, \"mae_energy\": {}, \"mae_power\": {}, \"max_cycles\": {}, \"out_of_band\": {}}},\n",
+            self.mae_cycles(),
+            self.mae_energy(),
+            self.mae_power(),
+            self.max_err_cycles(),
+            self.out_of_band()
+        ));
+        // calibration coefficients per (workload, backend) pair
+        out.push_str("  \"calibration\": [\n");
+        let nb = self.axes.backends.len();
+        let pairs = self.predictor.anchors.len();
+        for k in 0..pairs {
+            let a = &self.predictor.anchors[k];
+            let m = &self.predictor.mults[k];
+            out.push_str("    {\n");
+            out.push_str(&format!(
+                "      \"workload\": \"{}\",\n",
+                self.axes.workloads[k / nb].name()
+            ));
+            out.push_str(&format!("      \"backend\": \"{}\",\n", self.axes.backends[k % nb]));
+            out.push_str(&format!("      \"anchor\": \"{}\",\n", json_escape(&a.name)));
+            out.push_str(&format!("      \"base_cpi\": {},\n", a.base_cpi));
+            out.push_str(&format!("      \"bytes_per_instr\": {},\n", a.bytes_per_instr));
+            out.push_str(&format!("      \"desc_per_kcycle\": {},\n", a.desc_per_kcycle));
+            out.push_str(&format!("      \"rd_lat_p50\": {},\n", a.rd_lat_p50));
+            out.push_str("      \"axes\": [");
+            let mut first = true;
+            for ax in 0..NUM_CFG_AXES {
+                if self.axes.axis_len(ax) < 2 {
+                    continue; // single-valued axes carry no information
+                }
+                if !first {
+                    out.push_str(", ");
+                }
+                first = false;
+                let labels: Vec<String> = (0..self.axes.axis_len(ax))
+                    .map(|v| format!("\"{}\"", json_escape(&self.axes.axis_value_label(ax, v))))
+                    .collect();
+                out.push_str(&format!(
+                    "{{\"axis\": \"{}\", \"values\": [{}], \"cycles\": {}, \"bytes\": {}, \"energy\": {}, \"descs\": {}}}",
+                    AXIS_NAMES[ax],
+                    labels.join(", "),
+                    json_floats(&m.cycles[ax]),
+                    json_floats(&m.bytes[ax]),
+                    json_floats(&m.energy[ax]),
+                    json_floats(&m.descs[ax]),
+                ));
+            }
+            out.push_str("]\n");
+            out.push_str(if k + 1 == pairs { "    }\n" } else { "    },\n" });
+        }
+        out.push_str("  ],\n");
+        // per-point records, grid order
+        out.push_str("  \"points\": [\n");
+        for (i, p) in self.points.iter().enumerate() {
+            out.push_str("    {\n");
+            out.push_str(&format!("      \"name\": \"{}\",\n", json_escape(&p.name)));
+            out.push_str(&format!("      \"workload\": \"{}\",\n", p.workload));
+            out.push_str(&format!("      \"status\": \"{}\",\n", p.status.label()));
+            out.push_str(&format!("      \"frontier\": {},\n", p.frontier));
+            match p.status {
+                PointStatus::Pruned(j) => out.push_str(&format!(
+                    "      \"dominated_by\": \"{}\",\n",
+                    json_escape(&self.points[j].name)
+                )),
+                PointStatus::Tied(j) => out.push_str(&format!(
+                    "      \"tied_with\": \"{}\",\n",
+                    json_escape(&self.points[j].name)
+                )),
+                _ => {}
+            }
+            out.push_str(&format!(
+                "      \"predicted\": {{\"cycles\": {}, \"bytes\": {}, \"energy_pj\": {}, \"power_mw\": {}, \"bytes_per_cycle\": {}, \"area_kge\": {}}}",
+                p.predicted.cycles,
+                p.predicted.bytes,
+                p.predicted.energy_pj,
+                p.predicted.power_mw(self.freq_hz),
+                p.predicted.bytes_per_cycle(),
+                p.area_kge
+            ));
+            if let Some(m) = &p.measured {
+                out.push_str(",\n");
+                out.push_str(&format!(
+                    "      \"measured\": {{\"cycles\": {}, \"bytes\": {}, \"energy_pj\": {}, \"power_mw\": {}}},\n",
+                    m.cycles, m.bytes, m.energy_pj, m.power_mw
+                ));
+                out.push_str(&format!(
+                    "      \"rel_err\": {{\"cycles\": {}, \"energy\": {}, \"power\": {}}},\n",
+                    m.err_cycles, m.err_energy, m.err_power
+                ));
+                out.push_str(&format!("      \"in_band\": {}\n", m.in_band));
+            } else {
+                out.push('\n');
+            }
+            out.push_str(if i + 1 == self.points.len() { "    }\n" } else { "    },\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+/// Mean of an iterator (0 when empty).
+fn mean(it: impl Iterator<Item = f64>) -> f64 {
+    let (mut s, mut c) = (0.0, 0usize);
+    for v in it {
+        s += v;
+        c += 1;
+    }
+    if c == 0 { 0.0 } else { s / c as f64 }
+}
+
+/// Render a float slice as a JSON array.
+fn json_floats(xs: &[f64]) -> String {
+    let cells: Vec<String> = xs.iter().map(|x| x.to_string()).collect();
+    format!("[{}]", cells.join(", "))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::scenario::Workload;
+    use crate::platform::config::{CheshireConfig, MemBackend};
+
+    /// 2 backends × 2 MSHR depths of a fast bare-metal workload — small
+    /// enough for a unit test, structured enough to exercise the fit.
+    fn tiny_grid() -> SweepGrid {
+        let mut g = SweepGrid::new(CheshireConfig::neo());
+        g.workloads = vec![Workload::Nop { window: 20_000 }];
+        g.backends = vec![MemBackend::Rpc, MemBackend::HyperRam];
+        g.mshrs = vec![4, 1];
+        g
+    }
+
+    #[test]
+    fn star_plan_covers_anchor_and_every_off_anchor_value() {
+        let axes = tiny_grid().axes_dedup();
+        let plan = star_plan(&axes);
+        // per backend: anchor + one MSHR star
+        assert_eq!(plan.len(), 4);
+        let flats: HashSet<usize> = plan.iter().map(|p| axes.flat_index(p)).collect();
+        assert_eq!(flats.len(), 4, "plan members are distinct grid points");
+        assert!(flats.iter().all(|&i| i < axes.point_count()));
+        let anchors = plan.iter().filter(|p| p.axis == [0; NUM_CFG_AXES]).count();
+        assert_eq!(anchors, axes.backends.len() * axes.workloads.len());
+    }
+
+    #[test]
+    fn explore_is_deterministic_and_exact_on_a_fully_calibrated_grid() {
+        let g = tiny_grid();
+        let params = ExploreParams::default();
+        let a = explore(&g, &params);
+        let b = explore(&g, &params);
+        assert_eq!(a.dse.to_json(), b.dse.to_json(), "explore JSON must be byte-identical");
+        assert_eq!(
+            a.sweep.to_json_arch(),
+            b.sweep.to_json_arch(),
+            "simulated-subset sweep must be bit-identical"
+        );
+        // the star plan covers this whole 4-point grid
+        assert_eq!(a.dse.grid_points(), 4);
+        assert_eq!(a.dse.calibration_runs(), 4);
+        assert_eq!(a.dse.simulated(), 4);
+        assert!((a.dse.sim_fraction() - 1.0).abs() < 1e-12);
+        assert_eq!(a.sweep.results.len(), 4);
+        // the star fit reproduces its own calibration runs (clamping may
+        // leave a small residue, well inside the band)
+        assert!(a.dse.mae_cycles() <= params.error_band, "mae {}", a.dse.mae_cycles());
+        assert_eq!(a.dse.out_of_band(), 0);
+        for p in &a.dse.points {
+            let m = p.measured.as_ref().expect("everything simulated");
+            assert!(m.in_band, "{} out of band", p.name);
+        }
+        // report sanity: valid shape, frontier non-empty
+        let json = a.dse.to_json();
+        assert!(json.starts_with("{\n") && json.ends_with("}\n"));
+        assert!(json.contains("\"calibration\"") && json.contains("\"points\""));
+        assert!(a.dse.frontier_size() >= 1);
+    }
+
+    /// Structural invariants of the pruning bookkeeping on a grid the
+    /// star plan does *not* fully cover.
+    #[test]
+    fn explore_statuses_partition_the_grid_consistently() {
+        let mut g = tiny_grid();
+        g.outstanding = vec![4, 1];
+        let out = explore(&g, &ExploreParams::default());
+        let dse = &out.dse;
+        assert_eq!(dse.grid_points(), 16);
+        // star: 2 pairs × (anchor + 1 mshr + 1 out) = 6
+        assert_eq!(dse.calibration_runs(), 6);
+        for p in &dse.points {
+            match p.status {
+                PointStatus::Calibration | PointStatus::Candidate => {
+                    assert!(p.measured.is_some(), "{} simulated points carry a measurement", p.name)
+                }
+                PointStatus::Pruned(j) | PointStatus::Tied(j) => {
+                    assert!(j < dse.points.len());
+                    assert!(p.measured.is_none(), "{} was pruned yet simulated", p.name);
+                    assert!(!p.frontier, "frontier points must survive pruning");
+                }
+            }
+        }
+        // the simulated subset and the sweep report agree point for point
+        let simulated: Vec<&str> = dse
+            .points
+            .iter()
+            .filter(|p| p.measured.is_some())
+            .map(|p| p.name.as_str())
+            .collect();
+        let from_sweep: Vec<&str> = out.sweep.results.iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(simulated, from_sweep, "sweep subset in grid order");
+        assert_eq!(dse.simulated(), out.sweep.results.len());
+    }
+}

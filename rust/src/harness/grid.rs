@@ -1,8 +1,159 @@
 //! Cartesian sweep-grid builder: axis lists → a flat scenario list.
 
 use super::scenario::{Scenario, Workload};
-use crate::platform::config::{DsaSlot, MemBackend};
+use crate::platform::config::{slots_spec, DsaSlot, MemBackend};
 use crate::platform::CheshireConfig;
+use std::collections::HashMap;
+
+/// Number of configuration axes beyond workload and backend (the ones a
+/// [`PointIdx`] indexes through its `axis` array).
+pub const NUM_CFG_AXES: usize = 7;
+
+/// `PointIdx::axis` slot of the SPM way-mask axis.
+pub const AX_SPM: usize = 0;
+/// `PointIdx::axis` slot of the DSA port-pair axis.
+pub const AX_DSA: usize = 1;
+/// `PointIdx::axis` slot of the slot-topology axis.
+pub const AX_SLOTS: usize = 2;
+/// `PointIdx::axis` slot of the TLB-entries axis.
+pub const AX_TLB: usize = 3;
+/// `PointIdx::axis` slot of the LLC MSHR-depth axis.
+pub const AX_MSHR: usize = 4;
+/// `PointIdx::axis` slot of the outstanding-burst axis.
+pub const AX_OUT: usize = 5;
+/// `PointIdx::axis` slot of the hart-count axis.
+pub const AX_HARTS: usize = 6;
+
+/// Short names of the seven configuration axes, in `PointIdx::axis`
+/// order (used by diagnostics and the DSE calibration report).
+pub const AXIS_NAMES: [&str; NUM_CFG_AXES] =
+    ["spm", "dsa", "slots", "tlb", "mshr", "out", "harts"];
+
+/// Position of one grid point along every deduplicated axis: which
+/// workload, which backend, and an index per configuration axis (in
+/// [`AXIS_NAMES`] order). Grid order is workload-major, then backend,
+/// then the seven configuration axes in that same order — exactly the
+/// order [`SweepGrid::scenarios`] expands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PointIdx {
+    /// Index into the deduplicated workload axis.
+    pub workload: usize,
+    /// Index into the deduplicated backend axis.
+    pub backend: usize,
+    /// Index into each deduplicated configuration axis.
+    pub axis: [usize; NUM_CFG_AXES],
+}
+
+/// The deduplicated axes of a [`SweepGrid`], in first-occurrence order —
+/// the view the design-space explorer enumerates and calibrates against.
+#[derive(Debug, Clone)]
+pub struct GridAxes {
+    /// Deduplicated workload axis.
+    pub workloads: Vec<Workload>,
+    /// Deduplicated backend axis.
+    pub backends: Vec<MemBackend>,
+    /// Deduplicated SPM way-mask axis.
+    pub spm_way_masks: Vec<u32>,
+    /// Deduplicated DSA port-pair axis.
+    pub dsa_ports: Vec<usize>,
+    /// Deduplicated slot-topology axis.
+    pub slot_sets: Vec<Vec<DsaSlot>>,
+    /// Deduplicated TLB-entries axis.
+    pub tlb_entries: Vec<usize>,
+    /// Deduplicated MSHR-depth axis.
+    pub mshrs: Vec<usize>,
+    /// Deduplicated outstanding-burst axis.
+    pub outstanding: Vec<usize>,
+    /// Deduplicated hart-count axis.
+    pub harts: Vec<usize>,
+}
+
+impl GridAxes {
+    /// Length of configuration axis `ax` (in [`AXIS_NAMES`] order).
+    pub fn axis_len(&self, ax: usize) -> usize {
+        match ax {
+            AX_SPM => self.spm_way_masks.len(),
+            AX_DSA => self.dsa_ports.len(),
+            AX_SLOTS => self.slot_sets.len(),
+            AX_TLB => self.tlb_entries.len(),
+            AX_MSHR => self.mshrs.len(),
+            AX_OUT => self.outstanding.len(),
+            AX_HARTS => self.harts.len(),
+            _ => panic!("axis index {ax} out of range"),
+        }
+    }
+
+    /// Numeric value of position `i` on axis `ax`, for the axes where
+    /// "more" has a physical meaning the model can clamp against (TLB
+    /// entries, MSHR depth, outstanding bursts, hart count). Categorical
+    /// axes (SPM mask, DSA ports, slot topology) return `None`.
+    pub fn numeric_axis_value(&self, ax: usize, i: usize) -> Option<u64> {
+        match ax {
+            AX_TLB => Some(self.tlb_entries[i] as u64),
+            AX_MSHR => Some(self.mshrs[i] as u64),
+            AX_OUT => Some(self.outstanding[i] as u64),
+            AX_HARTS => Some(self.harts[i] as u64),
+            _ => None,
+        }
+    }
+
+    /// Printable label of position `i` on axis `ax`, for diagnostics and
+    /// the DSE calibration tables.
+    pub fn axis_value_label(&self, ax: usize, i: usize) -> String {
+        match ax {
+            AX_SPM => format!("{:#04x}", self.spm_way_masks[i]),
+            AX_DSA => self.dsa_ports[i].to_string(),
+            AX_SLOTS => {
+                let s = slots_spec(&self.slot_sets[i]);
+                if s.is_empty() { "<none>".into() } else { s }
+            }
+            AX_TLB => self.tlb_entries[i].to_string(),
+            AX_MSHR => self.mshrs[i].to_string(),
+            AX_OUT => self.outstanding[i].to_string(),
+            AX_HARTS => self.harts[i].to_string(),
+            _ => panic!("axis index {ax} out of range"),
+        }
+    }
+
+    /// Number of grid points these axes expand to.
+    pub fn point_count(&self) -> usize {
+        let mut n = self.workloads.len() * self.backends.len();
+        for ax in 0..NUM_CFG_AXES {
+            n *= self.axis_len(ax);
+        }
+        n
+    }
+
+    /// Flat grid-order position of `idx` (workload-major, matching the
+    /// expansion order of [`SweepGrid::scenarios`]).
+    pub fn flat_index(&self, idx: &PointIdx) -> usize {
+        let mut flat = idx.workload;
+        flat = flat * self.backends.len() + idx.backend;
+        for ax in 0..NUM_CFG_AXES {
+            flat = flat * self.axis_len(ax) + idx.axis[ax];
+        }
+        flat
+    }
+
+    /// Human-readable description of the axis combination behind `idx`
+    /// (used by the duplicate-name diagnostic, so it must name the *raw*
+    /// axis values, not the normalized scenario).
+    pub fn describe(&self, idx: &PointIdx) -> String {
+        let mut s = format!(
+            "workload={} backend={}",
+            self.workloads[idx.workload].name(),
+            self.backends[idx.backend]
+        );
+        for ax in 0..NUM_CFG_AXES {
+            s.push_str(&format!(
+                " {}={}",
+                AXIS_NAMES[ax],
+                self.axis_value_label(ax, idx.axis[ax])
+            ));
+        }
+        s
+    }
+}
 
 /// A configuration grid. Every axis is a list; [`SweepGrid::scenarios`]
 /// expands the cartesian product in a fixed order (workload-major, then
@@ -88,38 +239,25 @@ impl SweepGrid {
         g
     }
 
-    /// Deduplicated copies of the nine axes, in first-occurrence order.
-    #[allow(clippy::type_complexity)]
-    fn axes(
-        &self,
-    ) -> (
-        Vec<Workload>,
-        Vec<MemBackend>,
-        Vec<u32>,
-        Vec<usize>,
-        Vec<Vec<DsaSlot>>,
-        Vec<usize>,
-        Vec<usize>,
-        Vec<usize>,
-        Vec<usize>,
-    ) {
-        (
-            dedup_preserve(&self.workloads),
-            dedup_preserve(&self.backends),
-            dedup_preserve(&self.spm_way_masks),
-            dedup_preserve(&self.dsa_ports),
-            dedup_preserve(&self.slot_sets),
-            dedup_preserve(&self.tlb_entries),
-            dedup_preserve(&self.mshrs),
-            dedup_preserve(&self.outstanding),
-            dedup_preserve(&self.harts),
-        )
+    /// Deduplicated copies of the nine axes, in first-occurrence order —
+    /// the enumeration the explorer indexes with [`PointIdx`].
+    pub fn axes_dedup(&self) -> GridAxes {
+        GridAxes {
+            workloads: dedup_preserve(&self.workloads),
+            backends: dedup_preserve(&self.backends),
+            spm_way_masks: dedup_preserve(&self.spm_way_masks),
+            dsa_ports: dedup_preserve(&self.dsa_ports),
+            slot_sets: dedup_preserve(&self.slot_sets),
+            tlb_entries: dedup_preserve(&self.tlb_entries),
+            mshrs: dedup_preserve(&self.mshrs),
+            outstanding: dedup_preserve(&self.outstanding),
+            harts: dedup_preserve(&self.harts),
+        }
     }
 
     /// Number of scenarios the grid expands to (after axis dedup).
     pub fn len(&self) -> usize {
-        let (w, b, m, d, sl, t, ms, o, h) = self.axes();
-        w.len() * b.len() * m.len() * d.len() * sl.len() * t.len() * ms.len() * o.len() * h.len()
+        self.axes_dedup().point_count()
     }
 
     /// Whether the grid is empty (any axis without values).
@@ -127,34 +265,51 @@ impl SweepGrid {
         self.len() == 0
     }
 
-    /// Expand the cartesian product into concrete scenarios.
-    pub fn scenarios(&self) -> Vec<Scenario> {
-        let (workloads, backends, masks, dsa_ports, slot_sets, tlbs, mshrs, outs, harts) =
-            self.axes();
-        let mut out = Vec::with_capacity(self.len());
-        for wl in &workloads {
-            for &backend in &backends {
-                for &mask in &masks {
-                    for &dsa in &dsa_ports {
-                        for slots in &slot_sets {
-                            for &tlb in &tlbs {
-                                for &ms in &mshrs {
-                                    for &o in &outs {
-                                        for &h in &harts {
-                                            let mut cfg = self.base.clone();
-                                            cfg.backend = backend;
-                                            cfg.spm_way_mask = mask;
-                                            cfg.dsa_port_pairs = dsa;
-                                            cfg.dsa_slots = slots.clone();
-                                            cfg.tlb_entries = tlb;
-                                            cfg.llc_mshrs = ms;
-                                            cfg.max_outstanding = o;
-                                            cfg.harts = h;
-                                            out.push(Scenario::new(
-                                                cfg,
-                                                wl.clone(),
-                                                self.max_cycles,
-                                            ));
+    /// Instantiate the scenario at one grid position. `axes` must come
+    /// from [`SweepGrid::axes_dedup`] on this same grid.
+    pub fn scenario_at(&self, axes: &GridAxes, idx: &PointIdx) -> Scenario {
+        let mut cfg = self.base.clone();
+        cfg.backend = axes.backends[idx.backend];
+        cfg.spm_way_mask = axes.spm_way_masks[idx.axis[AX_SPM]];
+        cfg.dsa_port_pairs = axes.dsa_ports[idx.axis[AX_DSA]];
+        cfg.dsa_slots = axes.slot_sets[idx.axis[AX_SLOTS]].clone();
+        cfg.tlb_entries = axes.tlb_entries[idx.axis[AX_TLB]];
+        cfg.llc_mshrs = axes.mshrs[idx.axis[AX_MSHR]];
+        cfg.max_outstanding = axes.outstanding[idx.axis[AX_OUT]];
+        cfg.harts = axes.harts[idx.axis[AX_HARTS]];
+        Scenario::new(cfg, axes.workloads[idx.workload].clone(), self.max_cycles)
+    }
+
+    /// Expand the cartesian product into `(position, scenario)` pairs in
+    /// grid order, rejecting name collisions.
+    ///
+    /// # Panics
+    ///
+    /// Two distinct axis combinations can normalize to the *same*
+    /// scenario — `Scenario::new` grows `dsa` to fit a slot topology and
+    /// clamps `harts` — which would silently produce ambiguous report
+    /// rows and corrupt the explorer's predicted-vs-measured pairing.
+    /// A duplicate scenario name therefore panics, naming both colliding
+    /// axis combinations.
+    pub fn indexed_scenarios(&self) -> Vec<(PointIdx, Scenario)> {
+        let axes = self.axes_dedup();
+        let mut out: Vec<(PointIdx, Scenario)> = Vec::with_capacity(axes.point_count());
+        for w in 0..axes.workloads.len() {
+            for b in 0..axes.backends.len() {
+                for spm in 0..axes.spm_way_masks.len() {
+                    for dsa in 0..axes.dsa_ports.len() {
+                        for sl in 0..axes.slot_sets.len() {
+                            for tlb in 0..axes.tlb_entries.len() {
+                                for ms in 0..axes.mshrs.len() {
+                                    for o in 0..axes.outstanding.len() {
+                                        for h in 0..axes.harts.len() {
+                                            let idx = PointIdx {
+                                                workload: w,
+                                                backend: b,
+                                                axis: [spm, dsa, sl, tlb, ms, o, h],
+                                            };
+                                            let sc = self.scenario_at(&axes, &idx);
+                                            out.push((idx, sc));
                                         }
                                     }
                                 }
@@ -164,7 +319,28 @@ impl SweepGrid {
                 }
             }
         }
+        let mut seen: HashMap<String, usize> = HashMap::with_capacity(out.len());
+        for (i, (idx, sc)) in out.iter().enumerate() {
+            if let Some(&j) = seen.get(&sc.name) {
+                panic!(
+                    "duplicate scenario name `{}`: axis combinations \
+                     [{}] and [{}] normalize to the same scenario — drop \
+                     one of the colliding axis values",
+                    sc.name,
+                    axes.describe(&out[j].0),
+                    axes.describe(idx),
+                );
+            }
+            seen.insert(sc.name.clone(), i);
+        }
         out
+    }
+
+    /// Expand the cartesian product into concrete scenarios (grid
+    /// order). Panics on duplicate scenario names — see
+    /// [`SweepGrid::indexed_scenarios`].
+    pub fn scenarios(&self) -> Vec<Scenario> {
+        self.indexed_scenarios().into_iter().map(|(_, sc)| sc).collect()
     }
 }
 
@@ -264,6 +440,74 @@ mod tests {
     fn default_cli_grid_has_four_scenarios() {
         let g = SweepGrid::default_cli(CheshireConfig::neo());
         assert_eq!(g.len(), 4);
+    }
+
+    /// `Scenario::new` grows `dsa_port_pairs` to fit the hetero
+    /// topology's two slots, so the dsa axis values 1 and 2 normalize to
+    /// the same scenario — the grid must refuse, naming both.
+    #[test]
+    #[should_panic(expected = "duplicate scenario name")]
+    fn colliding_dsa_axis_values_panic() {
+        let mut g = SweepGrid::new(CheshireConfig::neo());
+        g.workloads = vec![Workload::Hetero { kib: 4 }];
+        g.dsa_ports = vec![1, 2];
+        g.scenarios();
+    }
+
+    /// Hart counts beyond `MAX_HARTS` clamp, so 8 and 12 collide.
+    #[test]
+    #[should_panic(expected = "duplicate scenario name")]
+    fn colliding_hart_axis_values_panic() {
+        let mut g = SweepGrid::new(CheshireConfig::neo());
+        g.harts = vec![8, 12];
+        g.scenarios();
+    }
+
+    /// The collision diagnostic names both raw axis combinations.
+    #[test]
+    fn collision_panic_names_both_axis_combinations() {
+        let mut g = SweepGrid::new(CheshireConfig::neo());
+        g.workloads = vec![Workload::Hetero { kib: 4 }];
+        g.dsa_ports = vec![1, 2];
+        let err = std::panic::catch_unwind(move || g.scenarios()).unwrap_err();
+        let msg = err.downcast_ref::<String>().expect("panic carries a message");
+        assert!(msg.contains("workload=hetero backend=rpc"), "{msg}");
+        assert!(msg.contains("dsa=1") && msg.contains("dsa=2"), "{msg}");
+    }
+
+    /// `indexed_scenarios` enumerates the same scenarios in the same
+    /// order as `scenarios`, and `flat_index` matches the enumeration.
+    #[test]
+    fn indexed_scenarios_agree_with_flat_expansion() {
+        let mut g = SweepGrid::new(CheshireConfig::neo());
+        g.workloads = vec![Workload::Nop { window: 1000 }, Workload::Wfi { window: 1000 }];
+        g.backends = vec![MemBackend::Rpc, MemBackend::HyperRam];
+        g.mshrs = vec![1, 4];
+        g.harts = vec![1, 2];
+        let axes = g.axes_dedup();
+        let indexed = g.indexed_scenarios();
+        let flat = g.scenarios();
+        assert_eq!(indexed.len(), flat.len());
+        assert_eq!(axes.point_count(), flat.len());
+        for (i, ((idx, sc), plain)) in indexed.iter().zip(&flat).enumerate() {
+            assert_eq!(sc.name, plain.name);
+            assert_eq!(axes.flat_index(idx), i);
+            assert_eq!(g.scenario_at(&axes, idx).name, sc.name);
+        }
+    }
+
+    /// The numeric-value accessor covers exactly the physically ordered
+    /// axes; categorical axes decline.
+    #[test]
+    fn numeric_axis_values_cover_ordered_axes() {
+        let g = SweepGrid::new(CheshireConfig::neo());
+        let axes = g.axes_dedup();
+        assert_eq!(axes.numeric_axis_value(AX_TLB, 0), Some(16));
+        assert_eq!(axes.numeric_axis_value(AX_MSHR, 0), Some(4));
+        assert_eq!(axes.numeric_axis_value(AX_OUT, 0), Some(4));
+        assert_eq!(axes.numeric_axis_value(AX_HARTS, 0), Some(1));
+        assert_eq!(axes.numeric_axis_value(AX_SPM, 0), None);
+        assert_eq!(axes.numeric_axis_value(AX_SLOTS, 0), None);
     }
 
     #[test]

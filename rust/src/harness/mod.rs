@@ -21,10 +21,12 @@
 //!   by the figure benches (`benches/fig8_bus_utilization.rs`,
 //!   `benches/fig11_power.rs`) for their config sweeps.
 
+pub mod explore;
 pub mod grid;
 pub mod report;
 pub mod scenario;
 
+pub use explore::{explore, DseReport, ExploreOutcome, ExploreParams};
 pub use grid::SweepGrid;
 pub use report::SweepReport;
 pub use scenario::{Scenario, ScenarioResult, Workload};

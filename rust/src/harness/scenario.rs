@@ -472,6 +472,19 @@ impl ScenarioResult {
     pub fn dram_bytes_per_cycle(&self) -> f64 {
         self.dram_bytes() as f64 / self.cycles.max(1) as f64
     }
+
+    /// Total modeled energy of the run in picojoules, summed across the
+    /// three supply domains — the same event-energy model that produced
+    /// `power`, so it is a pure function of the architectural stats and
+    /// cycle count (bit-identical across parallel/serial and
+    /// elided/unelided runs). The design-space explorer uses it as the
+    /// energy-to-completion objective: unlike mean power, which for a
+    /// fixed amount of work *rises* as runtime falls, energy orders
+    /// configurations the way a Pareto search needs.
+    pub fn energy_pj(&self) -> f64 {
+        let (core, io, ram) = PowerModel::neo().energy_pj(&self.stats, self.cycles.max(1));
+        core + io + ram
+    }
 }
 
 #[cfg(test)]

@@ -21,6 +21,13 @@
 //!   the worker count, defaulting to one per core), and emit one
 //!   aggregated table + JSON report. Defaults to the paper's §III-B
 //!   comparison: {nop, mem} × {rpc, hyperram}.
+//! * `explore` (also `sweep --explore`) — model-pruned design-space
+//!   exploration over the same axis lists: simulate the star calibration
+//!   subset, fit the analytical predictor, prune everything the model
+//!   proves dominated (with a `--frontier-slack` guard band), simulate
+//!   only the surviving Pareto candidates, and emit a DSE report with
+//!   per-point predicted-vs-measured error next to the ordinary sweep
+//!   report of the simulated subset.
 //!
 //! `run` and `sweep` accept `--trace out.json` to export the platform
 //! event stream (IRQ fabric, descriptor rings, MSHRs, TLB walks,
@@ -32,7 +39,7 @@ use cheshire::asm::reg::*;
 use cheshire::asm::Asm;
 use cheshire::coordinator::OffloadCoordinator;
 use cheshire::dsa::matmul::MatmulDsa;
-use cheshire::harness::{self, SweepGrid, SweepReport, Workload};
+use cheshire::harness::{self, ExploreParams, SweepGrid, SweepReport, Workload};
 use cheshire::model::{AreaModel, PowerModel};
 use cheshire::periph::gpt;
 use cheshire::platform::cli::Args;
@@ -95,18 +102,20 @@ fn load_config_inner(args: &Args, apply_dsa: bool) -> CheshireConfig {
 
 fn main() {
     let args = Args::from_env(
-        &["info", "run", "offload", "boot", "sweep", "stats"],
-        &["stats", "serial", "no-elide", "no-uop-cache", "blocking"],
+        &["info", "run", "offload", "boot", "sweep", "explore", "stats"],
+        &["stats", "serial", "no-elide", "no-uop-cache", "blocking", "explore"],
     );
     match args.subcommand.as_deref() {
         Some("info") => info(&args),
         Some("run") => run(&args),
         Some("offload") => offload(&args),
         Some("boot") => boot(&args),
+        Some("sweep") if args.flag("explore") => explore_cmd(&args),
         Some("sweep") => sweep(&args),
+        Some("explore") => explore_cmd(&args),
         Some("stats") => stats_cmd(&args),
         _ => {
-            eprintln!("usage: cheshire <info|run|offload|boot|sweep|stats> [options]");
+            eprintln!("usage: cheshire <info|run|offload|boot|sweep|explore|stats> [options]");
             eprintln!("  run <wfi|nop|twomm|mem|supervisor|hetero|contention|smp> [--cycles N] [--freq-mhz F]");
             eprintln!("      [--demand-pages N] [--timer-delta N]");
             eprintln!("      [--dma-kib N] [--tile N] [--dsa-jobs N] [--spm-kib N]  (contention)");
@@ -122,6 +131,11 @@ fn main() {
             eprintln!("        [--slots none,reduce+crc,reduce+crc@d2d]  (topology axis)");
             eprintln!("        [--mshrs 1,4,8] [--outstanding 1,4] [--harts 1,2,4]");
             eprintln!("        [--jobs N] [--serial] [--json sweep.json|-] [--json-arch arch.json]");
+            eprintln!("  explore [same axis options as sweep]");
+            eprintln!("        [--frontier-slack 0.15] [--pareto-quantum 0.01] [--error-band 0.25]");
+            eprintln!("        [--json dse.json|-] [--sweep-json subset.json]");
+            eprintln!("        model-pruned Pareto sweep: calibrate, predict, simulate survivors");
+            eprintln!("        (also reachable as `sweep --explore`)");
             eprintln!("  run/sweep: [--trace out.json]  Perfetto trace-event export");
             eprintln!("             (sweep writes one file per scenario: out-0.json, out-1.json, ...)");
             eprintln!("  any subcommand: [--no-elide]  disable event-horizon idle elision");
@@ -156,7 +170,9 @@ fn parse_u32_maybe_hex(s: &str) -> Result<u32, String> {
     }
 }
 
-fn sweep(args: &Args) {
+/// Build the configuration grid shared by `sweep` and `explore` from the
+/// axis-list options. Exits on parse errors or an empty grid.
+fn build_grid(args: &Args) -> SweepGrid {
     let base = load_config_inner(args, false);
     let mut grid = SweepGrid::default_cli(base);
     if let Some(wls) = parse_axis(args, "workloads", Workload::parse) {
@@ -216,17 +232,25 @@ fn sweep(args: &Args) {
         eprintln!("sweep: empty grid (an axis has no values)");
         std::process::exit(2);
     }
+    grid
+}
 
-    let scenarios = grid.scenarios();
-    let n = scenarios.len();
-    // `--jobs N` caps the worker pool (0 / absent → one per core);
-    // `--threads` is kept as an alias for older scripts
-    let threads = if args.flag("serial") {
+/// `--jobs N` caps the worker pool (0 / absent → one per core);
+/// `--threads` is kept as an alias for older scripts.
+fn worker_threads(args: &Args) -> usize {
+    if args.flag("serial") {
         1
     } else {
         let jobs = args.get_u64("jobs", args.get_u64("threads", 0));
         if jobs == 0 { harness::default_threads() } else { jobs as usize }
-    };
+    }
+}
+
+fn sweep(args: &Args) {
+    let grid = build_grid(args);
+    let scenarios = grid.scenarios();
+    let n = scenarios.len();
+    let threads = worker_threads(args);
     eprintln!("sweep: {n} scenarios on {threads} thread(s)");
     let t0 = std::time::Instant::now();
     // with `--trace base.json`, every SoC records its event stream and
@@ -275,6 +299,70 @@ fn sweep(args: &Args) {
     if let Some(path) = args.get("json-arch") {
         std::fs::write(path, report.to_json_arch()).expect("write architectural JSON report");
         eprintln!("sweep: architectural JSON report written to {path}");
+    }
+}
+
+/// `cheshire explore` / `cheshire sweep --explore` — the model-pruned
+/// Pareto sweep: calibrate the analytical predictor on the star subset,
+/// prune everything it proves dominated (guard-banded), simulate only
+/// the surviving candidates, and report predicted vs measured.
+fn explore_cmd(args: &Args) {
+    let grid = build_grid(args);
+    let threads = worker_threads(args);
+    let params = ExploreParams {
+        frontier_slack: args.get_f64("frontier-slack", 0.15),
+        pareto_quantum: args.get_f64("pareto-quantum", 0.01),
+        error_band: args.get_f64("error-band", 0.25),
+        threads,
+    };
+    eprintln!("explore: {} grid points on {} thread(s)", grid.len(), threads);
+    let t0 = std::time::Instant::now();
+    let out = harness::explore(&grid, &params);
+    let wall = t0.elapsed().as_secs_f64();
+    let dse = &out.dse;
+    // with `--json -` the JSON document owns stdout, tables move to stderr
+    let table = format!("{}{}", dse.table().render(), out.sweep.table().render());
+    if args.get("json") == Some("-") {
+        eprint!("{table}");
+    } else {
+        print!("{table}");
+    }
+    eprintln!(
+        "explore: simulated {} of {} points ({:.1}%: {} calibration + {} candidates) in {:.2} s wall",
+        dse.simulated(),
+        dse.grid_points(),
+        100.0 * dse.sim_fraction(),
+        dse.calibration_runs(),
+        dse.simulated() - dse.calibration_runs(),
+        wall
+    );
+    eprintln!(
+        "explore: MAE cycles {:.1}% / energy {:.1}% / power {:.1}%, worst cycles {:.1}%, {} point(s) out of the {:.0}% band",
+        100.0 * dse.mae_cycles(),
+        100.0 * dse.mae_energy(),
+        100.0 * dse.mae_power(),
+        100.0 * dse.max_err_cycles(),
+        dse.out_of_band(),
+        100.0 * dse.error_band
+    );
+    let json = dse.to_json();
+    match args.get("json") {
+        Some("-") => print!("{json}"),
+        Some(path) => {
+            std::fs::write(path, &json).expect("write DSE report");
+            eprintln!("explore: DSE report written to {path}");
+        }
+        None => {
+            std::fs::write("explore.json", &json).expect("write DSE report");
+            eprintln!("explore: DSE report written to explore.json");
+        }
+    }
+    // the simulated subset as an ordinary (architectural) sweep report —
+    // directly diffable against a plain `sweep --json-arch` over the
+    // same scenarios, which is how CI checks pruned ≡ unpruned
+    if let Some(path) = args.get("sweep-json") {
+        std::fs::write(path, out.sweep.to_json_arch()).expect("write subset sweep report");
+        eprintln!("explore: simulated-subset sweep report written to {path}");
     }
 }
 

@@ -81,6 +81,22 @@ impl AreaModel {
         arrays + tags + ctl
     }
 
+    /// LLC MSHR file: per-entry address CAM + burst bookkeeping
+    /// registers, plus fixed allocation/lookahead control — the area
+    /// price of the non-blocking hierarchy's MLP axis.
+    pub fn mshr_file(mshrs: usize) -> f64 {
+        1.2 + 0.45 * mshrs as f64
+    }
+
+    /// One hart's I+D TLB pair: two fully associative CAMs of `entries`
+    /// each (tag match + PPN payload). [`AreaModel::cva6`]'s 2400 kGE
+    /// logic figure already includes the Neo-default 16-entry pair, so
+    /// [`AreaModel::cheshire`] applies this as a delta against that
+    /// baseline.
+    pub fn tlb_cam(entries: usize) -> f64 {
+        2.0 * 0.35 * entries as f64
+    }
+
     /// RPC DRAM interface, split per Fig. 10.
     pub fn rpc_interface(rd_buf: usize, wr_buf: usize) -> Breakdown {
         let buf_bits = ((rd_buf + wr_buf) * 8) as f64;
@@ -96,16 +112,31 @@ impl AreaModel {
     }
 
     /// Full-platform breakdown for a configuration (Fig. 9 bars).
+    ///
+    /// Every sweepable axis with a hardware cost shows up here, so the
+    /// design-space explorer's area objective actually moves along the
+    /// grid: the CVA6 entry replicates per hart and carries the TLB CAM
+    /// delta against the 16-entry Neo baseline already inside
+    /// [`AreaModel::cva6`]'s logic figure, and the LLC entry includes
+    /// the MSHR file. At the Neo point (1 hart, 16 TLB entries) the
+    /// CVA6 entry is numerically identical to the pre-DSE model.
     pub fn cheshire(cfg: &CheshireConfig) -> Breakdown {
         let rpc = Self::rpc_interface(cfg.rpc_rd_buf, cfg.rpc_wr_buf).total();
         // base managers: CVA6 I+D, DMA, VGA, debug; base subordinates:
         // LLC/DRAM, regbus bridge, boot ROM, SPM window, D2D
         let nm = 4 + cfg.dsa_port_pairs;
         let ns = 5 + cfg.dsa_port_pairs;
+        let cva6_one = Self::cva6(cfg.icache_bytes, cfg.dcache_bytes)
+            + Self::tlb_cam(cfg.tlb_entries)
+            - Self::tlb_cam(16);
+        let harts = cfg.harts.clamp(1, crate::platform::config::MAX_HARTS) as f64;
         Breakdown {
             entries: vec![
-                Entry { name: "cva6", kge: Self::cva6(cfg.icache_bytes, cfg.dcache_bytes) },
-                Entry { name: "llc_spm", kge: Self::llc(cfg.llc_bytes, cfg.llc_ways) },
+                Entry { name: "cva6", kge: cva6_one * harts },
+                Entry {
+                    name: "llc_spm",
+                    kge: Self::llc(cfg.llc_bytes, cfg.llc_ways) + Self::mshr_file(cfg.llc_mshrs),
+                },
                 Entry { name: "rpc_ctrl", kge: rpc },
                 Entry { name: "axi_xbar", kge: Self::xbar(nm, ns, cfg.data_bytes) },
                 Entry { name: "rest", kge: 700.0 }, // DMA, peripherals, adapters (paper: "Rest")
@@ -180,6 +211,36 @@ mod tests {
         let rpc = AreaModel::rpc_interface(8 * 1024, 8 * 1024).total();
         let ratio = rpc / AreaModel::ddr3_controller_kge();
         assert!((ratio - 0.063).abs() < 0.01, "controller ≈6.3% of DDR3 ctrl, got {:.3}", ratio);
+    }
+
+    /// The sweepable axes (harts, MSHRs, TLB entries) all move total
+    /// area in the physically sensible direction, and the CVA6 entry at
+    /// the Neo point is unchanged from the pre-DSE model.
+    #[test]
+    fn sweep_axes_move_area_monotonically() {
+        let neo_cfg = CheshireConfig::neo();
+        let neo = AreaModel::cheshire(&neo_cfg);
+        let cva6_neo = AreaModel::cva6(neo_cfg.icache_bytes, neo_cfg.dcache_bytes);
+        let entry = neo.entries.iter().find(|e| e.name == "cva6").unwrap();
+        assert!((entry.kge - cva6_neo).abs() < 1e-9, "Neo CVA6 entry anchored");
+
+        let mut h2 = neo_cfg.clone();
+        h2.harts = 2;
+        let two = AreaModel::cheshire(&h2);
+        assert!(
+            (two.total() - neo.total() - cva6_neo).abs() < 1e-6,
+            "a second hart costs one more CVA6"
+        );
+
+        let mut m8 = neo_cfg.clone();
+        m8.llc_mshrs = 8;
+        assert!(AreaModel::cheshire(&m8).total() > neo.total(), "deeper MSHR file costs area");
+
+        let mut t4 = neo_cfg.clone();
+        t4.tlb_entries = 4;
+        let small_tlb = AreaModel::cheshire(&t4);
+        assert!(small_tlb.total() < neo.total(), "smaller TLB CAM reclaims area");
+        assert!(small_tlb.entries.iter().all(|e| e.kge > 0.0), "no negative components");
     }
 
     #[test]

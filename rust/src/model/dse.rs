@@ -1,0 +1,638 @@
+//! Analytical design-space predictor: calibrated per-workload cost
+//! model + quantized Pareto pruning for the sweep explorer.
+//!
+//! The sweep harness explores Cheshire's configuration space by
+//! brute-force cartesian simulation, which is wall-clock-prohibitive at
+//! the grid sizes the paper's methodology implies (harts × slots ×
+//! MSHRs × TLB × backend × topology is easily 10³+ points). This module
+//! is the cheap first-order model that makes those grids tractable: it
+//! fits per-`(workload, backend)` coefficients from a *star* set of
+//! real calibration runs (one anchor per pair plus one run per
+//! off-anchor axis value), predicts every grid point in microseconds,
+//! and hands the explorer a Pareto-candidate subset to simulate — the
+//! same cost-model-guided search pattern HULK-V uses to pick
+//! heterogeneous-cluster design points before committing to expensive
+//! evaluation.
+//!
+//! Model shape: a separable multiplicative decomposition. The anchor
+//! run (every configuration axis at its first grid value) measures
+//! absolute cycles, DRAM bytes, modeled energy, and descriptor counts;
+//! each star run contributes one per-axis multiplier for each of those
+//! four quantities. A point's prediction is its anchor value times the
+//! product of its axes' multipliers, so every calibration point is
+//! reproduced exactly by construction (up to monotonicity clamping).
+//! Multipliers on the physically ordered axes (TLB entries, MSHR depth,
+//! outstanding bursts, harts) are isotonically clamped so the model is
+//! monotone where physics demands: more MSHRs never predict fewer
+//! bytes per cycle, more harts never predict lower aggregate descriptor
+//! throughput (`tests/proptests.rs` holds the model to this).
+//!
+//! Pareto semantics: objectives are *minimized* — cycles per useful
+//! DRAM byte (inverse throughput), energy per byte, and area. Energy
+//! to completion is used rather than mean power because for a fixed
+//! amount of work mean power *rises* as runtime falls, which would make
+//! every point non-dominated; pJ/B is also the paper's headline Γ
+//! metric. Dominance is evaluated on log-quantized objective values
+//! (bucket width `pareto_quantum`, default 1 %) so sub-noise
+//! differences cannot manufacture frontier members, and the candidate
+//! set is expanded by a guard band: a point survives pruning unless
+//! some other point dominates even its *optimistic* self (throughput
+//! and energy objectives improved by `frontier_slack`; area is exact,
+//! so it gets no slack). Exactly tied predictions (bit-equal objective
+//! triples — e.g. along axes the workload provably never exercises)
+//! collapse to their first-in-grid-order representative.
+
+use crate::harness::grid::{
+    GridAxes, PointIdx, AX_HARTS, AX_MSHR, AX_OUT, AX_TLB, NUM_CFG_AXES,
+};
+use crate::harness::scenario::ScenarioResult;
+use crate::sim::bw;
+
+/// Configuration axes whose numeric value has a guaranteed performance
+/// direction (more is never slower): multipliers along these axes are
+/// isotonically clamped during fitting.
+pub const MONOTONE_AXES: [usize; 4] = [AX_TLB, AX_MSHR, AX_OUT, AX_HARTS];
+
+/// Fitted description of one `(workload, backend)` anchor run: the
+/// absolute quantities the multiplier chains scale, plus the derived
+/// coefficients the report publishes (base CPI, bytes per instruction,
+/// descriptor service rate, read miss penalty).
+#[derive(Debug, Clone)]
+pub struct AnchorFit {
+    /// Scenario name of the anchor run.
+    pub name: String,
+    /// Measured cycles (≥ 1).
+    pub cycles: f64,
+    /// Measured useful DRAM bytes.
+    pub bytes: f64,
+    /// Modeled energy to completion, pJ.
+    pub energy_pj: f64,
+    /// Accelerator descriptors completed.
+    pub descs: f64,
+    /// Cycles per retired instruction.
+    pub base_cpi: f64,
+    /// Useful DRAM bytes per retired instruction.
+    pub bytes_per_instr: f64,
+    /// Descriptors serviced per 1000 cycles.
+    pub desc_per_kcycle: f64,
+    /// Fabric-wide read-latency p50 in cycles (the backend's effective
+    /// miss penalty; 0 when the run issued no reads).
+    pub rd_lat_p50: f64,
+}
+
+impl AnchorFit {
+    /// Distill the published coefficients out of one measured run.
+    pub fn from_result(r: &ScenarioResult) -> Self {
+        let cycles = r.cycles.max(1) as f64;
+        let instr = r.stats.get("cpu.instr").max(1) as f64;
+        let bytes = r.dram_bytes() as f64;
+        let descs = r.stats.get("plugfab.descs") as f64;
+        let rd_lat_p50 = bw::percentile_triplet(&bw::total_rd_lat_counts(&r.stats))
+            .map(|(p50, _, _)| p50 as f64)
+            .unwrap_or(0.0);
+        Self {
+            name: r.name.clone(),
+            cycles,
+            bytes,
+            energy_pj: r.energy_pj(),
+            descs,
+            base_cpi: cycles / instr,
+            bytes_per_instr: bytes / instr,
+            desc_per_kcycle: descs * 1000.0 / cycles,
+            rd_lat_p50,
+        }
+    }
+}
+
+/// Per-axis multiplier tables for one `(workload, backend)` pair. Entry
+/// `[ax][v]` scales the anchor quantity when axis `ax` sits at value
+/// index `v`; index 0 (the anchor's own position) is always exactly 1.
+#[derive(Debug, Clone)]
+pub struct AxisMults {
+    /// Cycle-count multipliers (clamped non-increasing in the numeric
+    /// value of each monotone axis).
+    pub cycles: [Vec<f64>; NUM_CFG_AXES],
+    /// DRAM-byte multipliers (clamped non-decreasing on monotone axes).
+    pub bytes: [Vec<f64>; NUM_CFG_AXES],
+    /// Energy multipliers (unclamped — physics makes no sign promise).
+    pub energy: [Vec<f64>; NUM_CFG_AXES],
+    /// Descriptor-count multipliers (clamped non-decreasing on monotone
+    /// axes).
+    pub descs: [Vec<f64>; NUM_CFG_AXES],
+}
+
+impl AxisMults {
+    /// All-ones tables shaped like `axes`.
+    fn unit(axes: &GridAxes) -> Self {
+        let mk = || std::array::from_fn(|ax| vec![1.0f64; axes.axis_len(ax)]);
+        Self { cycles: mk(), bytes: mk(), energy: mk(), descs: mk() }
+    }
+}
+
+/// One point's predicted absolute quantities.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Prediction {
+    /// Predicted cycles to completion.
+    pub cycles: f64,
+    /// Predicted useful DRAM bytes.
+    pub bytes: f64,
+    /// Predicted energy to completion, pJ.
+    pub energy_pj: f64,
+    /// Predicted accelerator descriptors completed.
+    pub descs: f64,
+}
+
+impl Prediction {
+    /// Predicted mean power in mW at `freq_hz` (energy over runtime).
+    pub fn power_mw(&self, freq_hz: f64) -> f64 {
+        self.energy_pj * 1e-12 * freq_hz / self.cycles.max(1.0) * 1e3
+    }
+
+    /// Predicted DRAM bytes per cycle (the throughput headline).
+    pub fn bytes_per_cycle(&self) -> f64 {
+        self.bytes / self.cycles.max(1.0)
+    }
+
+    /// Predicted aggregate descriptors per kilocycle.
+    pub fn desc_per_kcycle(&self) -> f64 {
+        self.descs * 1000.0 / self.cycles.max(1.0)
+    }
+
+    /// Minimized objective vector for Pareto comparison, given the
+    /// point's exact modeled area.
+    pub fn objectives(&self, area_kge: f64) -> Objectives {
+        Objectives {
+            cyc_per_byte: self.cycles.max(1.0) / self.bytes.max(1.0),
+            pj_per_byte: self.energy_pj / self.bytes.max(1.0),
+            area_kge,
+        }
+    }
+}
+
+/// Measured counterpart of [`Prediction::objectives`] for a finished
+/// run: identical normalization, so predicted and measured vectors are
+/// directly comparable.
+pub fn measured_objectives(r: &ScenarioResult, area_kge: f64) -> Objectives {
+    Objectives {
+        cyc_per_byte: r.cycles.max(1) as f64 / (r.dram_bytes() as f64).max(1.0),
+        pj_per_byte: r.energy_pj() / (r.dram_bytes() as f64).max(1.0),
+        area_kge,
+    }
+}
+
+/// The calibrated predictor: one anchor + multiplier table per
+/// `(workload, backend)` pair of the grid it was fitted on.
+#[derive(Debug, Clone)]
+pub struct DsePredictor {
+    n_backends: usize,
+    /// Anchor fits, indexed `workload * n_backends + backend`.
+    pub anchors: Vec<AnchorFit>,
+    /// Multiplier tables, indexed like `anchors`.
+    pub mults: Vec<AxisMults>,
+}
+
+impl DsePredictor {
+    /// Fit the predictor from a star calibration set: for every
+    /// `(workload, backend)` pair of `axes`, one *anchor* result (all
+    /// configuration axes at index 0) and one *star* result per
+    /// off-anchor axis value (that axis moved, every other axis at 0).
+    /// Results with more than one off-anchor axis are ignored. The fit
+    /// is a pure function of the inputs — deterministic and
+    /// reproducible.
+    ///
+    /// # Panics
+    ///
+    /// If any `(workload, backend)` pair lacks its anchor result — the
+    /// explorer always schedules the full star plan, so a hole means
+    /// the caller paired indices and results inconsistently.
+    pub fn fit(axes: &GridAxes, calib: &[(PointIdx, ScenarioResult)]) -> Self {
+        let nb = axes.backends.len();
+        let pairs = axes.workloads.len() * nb;
+        let mut anchors: Vec<Option<AnchorFit>> = vec![None; pairs];
+        for (idx, r) in calib {
+            if idx.axis.iter().all(|&v| v == 0) {
+                anchors[idx.workload * nb + idx.backend] = Some(AnchorFit::from_result(r));
+            }
+        }
+        let anchors: Vec<AnchorFit> = anchors
+            .into_iter()
+            .enumerate()
+            .map(|(k, a)| {
+                a.unwrap_or_else(|| {
+                    panic!(
+                        "calibration set lacks the anchor run for workload {} backend {}",
+                        axes.workloads[k / nb].name(),
+                        axes.backends[k % nb]
+                    )
+                })
+            })
+            .collect();
+        let mut mults: Vec<AxisMults> = (0..pairs).map(|_| AxisMults::unit(axes)).collect();
+        for (idx, r) in calib {
+            let off: Vec<usize> = (0..NUM_CFG_AXES).filter(|&ax| idx.axis[ax] != 0).collect();
+            if off.len() != 1 {
+                continue; // the anchor (handled above) or not a star run
+            }
+            let ax = off[0];
+            let k = idx.workload * nb + idx.backend;
+            let a = &anchors[k];
+            let v = idx.axis[ax];
+            let m = &mut mults[k];
+            m.cycles[ax][v] = r.cycles.max(1) as f64 / a.cycles;
+            m.bytes[ax][v] = (r.dram_bytes() as f64).max(1.0) / a.bytes.max(1.0);
+            m.energy[ax][v] = r.energy_pj().max(1.0) / a.energy_pj.max(1.0);
+            m.descs[ax][v] = (r.stats.get("plugfab.descs") as f64).max(1.0) / a.descs.max(1.0);
+        }
+        for m in &mut mults {
+            for &ax in &MONOTONE_AXES {
+                let vals: Vec<u64> = (0..axes.axis_len(ax))
+                    .map(|i| axes.numeric_axis_value(ax, i).expect("monotone axis is numeric"))
+                    .collect();
+                clamp_monotone(&vals, &mut m.cycles[ax], Direction::NonIncreasing);
+                clamp_monotone(&vals, &mut m.bytes[ax], Direction::NonDecreasing);
+                clamp_monotone(&vals, &mut m.descs[ax], Direction::NonDecreasing);
+            }
+        }
+        Self { n_backends: nb, anchors, mults }
+    }
+
+    /// Predict one grid point: the pair's anchor quantities scaled by
+    /// the product of its axes' multipliers. Microseconds per call —
+    /// this is what lets `explore` evaluate the whole grid analytically.
+    pub fn predict(&self, idx: &PointIdx) -> Prediction {
+        let k = idx.workload * self.n_backends + idx.backend;
+        let a = &self.anchors[k];
+        let m = &self.mults[k];
+        let mut p = Prediction {
+            cycles: a.cycles,
+            bytes: a.bytes.max(1.0),
+            energy_pj: a.energy_pj,
+            descs: a.descs.max(1.0),
+        };
+        for ax in 0..NUM_CFG_AXES {
+            let v = idx.axis[ax];
+            p.cycles *= m.cycles[ax][v];
+            p.bytes *= m.bytes[ax][v];
+            p.energy_pj *= m.energy[ax][v];
+            p.descs *= m.descs[ax][v];
+        }
+        p
+    }
+}
+
+/// Clamp direction for [`clamp_monotone`].
+#[derive(Clone, Copy, PartialEq)]
+enum Direction {
+    /// Larger axis values must not have larger multipliers (cycles).
+    NonIncreasing,
+    /// Larger axis values must not have smaller multipliers (bytes,
+    /// descriptors).
+    NonDecreasing,
+}
+
+/// Isotonic clamp of `mult` along the numeric axis values `vals`
+/// (aligned by position), preserving the anchor position 0 exactly:
+/// walking upward in numeric value from the anchor, violations are
+/// flattened onto the previous value; walking downward, onto the next.
+/// Measured noise can produce small violations (e.g. 8 MSHRs measuring
+/// fractionally slower than 4 on a saturated workload); the clamp
+/// absorbs them into the model's error band instead of letting the
+/// predictor claim unphysical orderings.
+fn clamp_monotone(vals: &[u64], mult: &mut [f64], dir: Direction) {
+    debug_assert_eq!(vals.len(), mult.len());
+    let mut order: Vec<usize> = (0..vals.len()).collect();
+    order.sort_by_key(|&i| vals[i]);
+    let p = order.iter().position(|&i| i == 0).expect("anchor position present");
+    for s in (p + 1)..order.len() {
+        let prev = mult[order[s - 1]];
+        let cur = &mut mult[order[s]];
+        match dir {
+            Direction::NonIncreasing if *cur > prev => *cur = prev,
+            Direction::NonDecreasing if *cur < prev => *cur = prev,
+            _ => {}
+        }
+    }
+    for s in (0..p).rev() {
+        let next = mult[order[s + 1]];
+        let cur = &mut mult[order[s]];
+        match dir {
+            Direction::NonIncreasing if *cur < next => *cur = next,
+            Direction::NonDecreasing if *cur > next => *cur = next,
+            _ => {}
+        }
+    }
+}
+
+/// Minimized objective vector of one design point: inverse throughput
+/// (cycles per useful DRAM byte), energy per byte, and area. Only
+/// comparable *within* one workload — different workloads do different
+/// work, so the explorer computes frontiers per workload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Objectives {
+    /// Cycles per useful DRAM byte (inverse throughput; equals raw
+    /// cycles for traffic-less workloads, where the byte count clamps
+    /// to 1 uniformly).
+    pub cyc_per_byte: f64,
+    /// Energy per useful DRAM byte, pJ (the paper's Γ).
+    pub pj_per_byte: f64,
+    /// Exact modeled area, kGE.
+    pub area_kge: f64,
+}
+
+impl Objectives {
+    /// Log-quantized vector: each objective mapped to its
+    /// `round(ln x / ln(1 + quantum))` bucket, so values within about
+    /// one `quantum` relative distance share a bucket and sub-noise
+    /// differences cannot decide dominance.
+    pub fn quantized(&self, quantum: f64) -> [i64; 3] {
+        [
+            quantize(self.cyc_per_byte, quantum),
+            quantize(self.pj_per_byte, quantum),
+            quantize(self.area_kge, quantum),
+        ]
+    }
+
+    /// The point's optimistic self for guard-band pruning: throughput
+    /// and energy objectives improved by `slack`, area untouched (the
+    /// area model is exact, so it earns no guard band).
+    pub fn optimistic(&self, slack: f64) -> Self {
+        Self {
+            cyc_per_byte: self.cyc_per_byte / (1.0 + slack.max(0.0)),
+            pj_per_byte: self.pj_per_byte / (1.0 + slack.max(0.0)),
+            area_kge: self.area_kge,
+        }
+    }
+}
+
+/// Log-space bucket index of `x` at relative bucket width `quantum`.
+pub fn quantize(x: f64, quantum: f64) -> i64 {
+    let q = quantum.max(1e-9);
+    (x.max(1e-300).ln() / (1.0 + q).ln()).round() as i64
+}
+
+/// Strict Pareto dominance on quantized vectors: `a` no worse
+/// everywhere and better somewhere.
+fn dominates(a: &[i64; 3], b: &[i64; 3]) -> bool {
+    a.iter().zip(b).all(|(x, y)| x <= y) && a != b
+}
+
+/// Indices of the Pareto frontier of `objs` under quantized dominance.
+/// Exactly tied objective triples (bit-equal `f64`s, not merely the
+/// same buckets) collapse to their lowest-index member, so a frontier
+/// never enumerates interchangeable duplicates.
+pub fn pareto_frontier(objs: &[Objectives], quantum: f64) -> Vec<usize> {
+    let q: Vec<[i64; 3]> = objs.iter().map(|o| o.quantized(quantum)).collect();
+    let mut out = Vec::new();
+    'point: for i in 0..objs.len() {
+        for j in 0..i {
+            if objs[j] == objs[i] {
+                continue 'point; // exact tie → earlier representative
+            }
+        }
+        for (j, qj) in q.iter().enumerate() {
+            if j != i && dominates(qj, &q[i]) {
+                continue 'point;
+            }
+        }
+        out.push(i);
+    }
+    out
+}
+
+/// What pruning decided for one point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PruneOutcome {
+    /// Survives to simulation: nothing dominates even its optimistic
+    /// self.
+    Kept,
+    /// Bit-equal objective triple of an earlier point; index of the
+    /// representative that will be simulated in its stead.
+    Tied(usize),
+    /// Some point dominates its optimistic self; index of the first
+    /// (grid-order) dominator.
+    Dominated(usize),
+}
+
+/// Guard-banded survivor selection over one workload's points: a point
+/// is kept unless it is an exact tie of an earlier point or some other
+/// point's quantized objectives dominate its *optimistic* quantized
+/// objectives (see [`Objectives::optimistic`]). With `slack = 0` this
+/// degenerates to the plain quantized frontier plus its same-bucket
+/// companions; larger `slack` keeps everything whose predicted deficit
+/// is within the model's trusted error.
+pub fn prune(objs: &[Objectives], quantum: f64, slack: f64) -> Vec<PruneOutcome> {
+    let q: Vec<[i64; 3]> = objs.iter().map(|o| o.quantized(quantum)).collect();
+    let opt: Vec<[i64; 3]> = objs.iter().map(|o| o.optimistic(slack).quantized(quantum)).collect();
+    (0..objs.len())
+        .map(|i| {
+            for j in 0..i {
+                if objs[j] == objs[i] {
+                    return PruneOutcome::Tied(j);
+                }
+            }
+            for (j, qj) in q.iter().enumerate() {
+                if j != i && dominates(qj, &opt[i]) {
+                    return PruneOutcome::Dominated(j);
+                }
+            }
+            PruneOutcome::Kept
+        })
+        .collect()
+}
+
+/// Relative error of a prediction against its measurement.
+pub fn rel_err(predicted: f64, measured: f64) -> f64 {
+    (predicted - measured).abs() / measured.abs().max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::grid::{SweepGrid, AX_SPM};
+    use crate::harness::scenario::Workload;
+    use crate::model::PowerReport;
+    use crate::platform::config::{CheshireConfig, MemBackend};
+    use crate::sim::Stats;
+
+    fn obj(c: f64, e: f64, a: f64) -> Objectives {
+        Objectives { cyc_per_byte: c, pj_per_byte: e, area_kge: a }
+    }
+
+    #[test]
+    fn quantize_buckets_relative_differences() {
+        let q = 0.01;
+        assert_eq!(quantize(100.0, q), quantize(100.3, q), "sub-quantum difference merges");
+        assert!(quantize(100.0, q) < quantize(110.0, q), "10% apart separates");
+        assert!(quantize(1.0, q) > quantize(0.5, q));
+    }
+
+    #[test]
+    fn frontier_finds_non_dominated_points() {
+        let pts = vec![
+            obj(10.0, 10.0, 10.0), // dominated by 2
+            obj(20.0, 5.0, 10.0),  // frontier (best energy at this area)
+            obj(5.0, 8.0, 10.0),   // frontier
+            obj(50.0, 50.0, 5.0),  // frontier (smallest area)
+            obj(50.0, 50.0, 50.0), // dominated by everything cheaper
+        ];
+        assert_eq!(pareto_frontier(&pts, 0.01), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn frontier_collapses_exact_ties_to_first_member() {
+        let pts = vec![obj(10.0, 10.0, 10.0), obj(10.0, 10.0, 10.0), obj(9.0, 20.0, 10.0)];
+        assert_eq!(pareto_frontier(&pts, 0.01), vec![0, 2]);
+    }
+
+    #[test]
+    fn same_bucket_non_identical_points_both_survive() {
+        // 0.3% apart: same quantized buckets, not bit-equal — neither
+        // dominates, neither is a tie, so both stay on the frontier.
+        let pts = vec![obj(100.0, 100.0, 10.0), obj(100.3, 100.0, 10.0)];
+        assert_eq!(pareto_frontier(&pts, 0.01), vec![0, 1]);
+    }
+
+    #[test]
+    fn prune_keeps_within_slack_and_names_dominators() {
+        let pts = vec![
+            obj(10.0, 10.0, 10.0),  // frontier
+            obj(11.0, 11.0, 10.0),  // within 15% of the frontier → kept
+            obj(20.0, 20.0, 10.0),  // far outside → dominated by 0
+            obj(10.0, 10.0, 10.0),  // exact tie of 0
+            obj(100.0, 100.0, 5.0), // smaller area → kept regardless
+        ];
+        let out = prune(&pts, 0.01, 0.15);
+        assert_eq!(out[0], PruneOutcome::Kept);
+        assert_eq!(out[1], PruneOutcome::Kept);
+        assert_eq!(out[2], PruneOutcome::Dominated(0));
+        assert_eq!(out[3], PruneOutcome::Tied(0));
+        assert_eq!(out[4], PruneOutcome::Kept);
+    }
+
+    #[test]
+    fn zero_slack_prune_matches_frontier_plus_bucket_ties() {
+        let pts =
+            vec![obj(10.0, 10.0, 10.0), obj(30.0, 30.0, 10.0), obj(5.0, 40.0, 10.0)];
+        let out = prune(&pts, 0.01, 0.0);
+        let frontier = pareto_frontier(&pts, 0.01);
+        for (i, o) in out.iter().enumerate() {
+            assert_eq!(*o == PruneOutcome::Kept, frontier.contains(&i), "point {i}");
+        }
+    }
+
+    #[test]
+    fn clamp_preserves_anchor_and_enforces_order() {
+        // axis values [4, 1, 8] (anchor first, as grids list them):
+        // noisy fit says 8 is *slower* than 4 — clamp flattens it.
+        let vals = [4u64, 1, 8];
+        let mut cyc = [1.0, 1.3, 1.05];
+        clamp_monotone(&vals, &mut cyc, Direction::NonIncreasing);
+        assert_eq!(cyc, [1.0, 1.3, 1.0], "8-MSHR point clamped onto the anchor");
+        // and a fit claiming 1 MSHR is *faster* than the anchor clamps
+        // upward without disturbing the anchor itself
+        let mut cyc2 = [1.0, 0.9, 0.8];
+        clamp_monotone(&vals, &mut cyc2, Direction::NonIncreasing);
+        assert_eq!(cyc2, [1.0, 1.0, 0.8]);
+        let mut bytes = [1.0, 1.2, 0.9];
+        clamp_monotone(&vals, &mut bytes, Direction::NonDecreasing);
+        assert_eq!(bytes, [1.0, 1.0, 1.0], "bytes may not shrink with more MSHRs");
+    }
+
+    fn fake_result(name: &str, cycles: u64, instr: u64, wr_bytes: u64, descs: u64) -> ScenarioResult {
+        let mut stats = Stats::new();
+        stats.add("cpu.instr", instr);
+        stats.add("rpc.useful_wr_bytes", wr_bytes);
+        stats.add("plugfab.descs", descs);
+        stats.add("bw.rd_lat_le64", 10);
+        ScenarioResult {
+            name: name.to_string(),
+            workload: "mem",
+            harts: 1,
+            backend: MemBackend::Rpc,
+            spm_way_mask: 0xff,
+            dsa_ports: 0,
+            dsa_slots: String::new(),
+            tlb_entries: 16,
+            mshrs: 4,
+            outstanding: 4,
+            blocking: false,
+            freq_hz: 200.0e6,
+            cycles,
+            halted: true,
+            power: PowerReport { core_mw: 0.0, io_mw: 0.0, ram_mw: 0.0 },
+            host_seconds: 1e-3,
+            stats,
+        }
+    }
+
+    /// A synthetic star fit reproduces its own calibration points and
+    /// composes multipliers multiplicatively on unseen combinations.
+    #[test]
+    fn fit_reproduces_calibration_and_composes() {
+        let mut g = SweepGrid::new(CheshireConfig::neo());
+        g.workloads = vec![Workload::parse("mem").unwrap()];
+        g.spm_way_masks = vec![0xff, 0x0f];
+        g.mshrs = vec![4, 1];
+        let axes = g.axes_dedup();
+        let anchor = PointIdx { workload: 0, backend: 0, axis: [0; NUM_CFG_AXES] };
+        let mut spm_star = anchor;
+        spm_star.axis[AX_SPM] = 1;
+        let mut mshr_star = anchor;
+        mshr_star.axis[AX_MSHR] = 1;
+        let calib = vec![
+            (anchor, fake_result("a", 1000, 500, 4096, 8)),
+            (spm_star, fake_result("s", 1200, 500, 4096, 8)), // spm0f: 1.2× cycles
+            (mshr_star, fake_result("m", 2000, 500, 2048, 8)), // mshr1: 2× cycles, ½ bytes
+        ];
+        let p = DsePredictor::fit(&axes, &calib);
+        let a = p.predict(&anchor);
+        assert!((a.cycles - 1000.0).abs() < 1e-9);
+        assert!((a.bytes - 4096.0).abs() < 1e-9);
+        assert!((p.predict(&spm_star).cycles - 1200.0).abs() < 1e-9);
+        let m = p.predict(&mshr_star);
+        assert!((m.cycles - 2000.0).abs() < 1e-9, "star reproduced: {}", m.cycles);
+        // bytes clamp: fewer MSHRs may not *gain* bytes, and this fit
+        // says it loses them — 0.5 survives the non-decreasing clamp
+        // upward from the smallest value
+        assert!((m.bytes - 2048.0).abs() < 1e-9);
+        // unseen combination: multiplies both effects
+        let mut both = anchor;
+        both.axis[AX_SPM] = 1;
+        both.axis[AX_MSHR] = 1;
+        let b = p.predict(&both);
+        assert!((b.cycles - 2400.0).abs() < 1e-9, "1.2 × 2.0 composes: {}", b.cycles);
+        assert!(b.bytes_per_cycle() < a.bytes_per_cycle());
+    }
+
+    /// Coefficients derive from the anchor stats, including the
+    /// degenerate-histogram miss penalty.
+    #[test]
+    fn anchor_fit_publishes_coefficients() {
+        let r = fake_result("a", 1000, 500, 4096, 8);
+        let a = AnchorFit::from_result(&r);
+        assert!((a.base_cpi - 2.0).abs() < 1e-9);
+        assert!((a.bytes_per_instr - 8.192).abs() < 1e-9);
+        assert!((a.desc_per_kcycle - 8.0).abs() < 1e-9);
+        // all 10 read samples in le64: single-bucket midpoint, not edge
+        assert!((a.rd_lat_p50 - 48.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "lacks the anchor run")]
+    fn fit_without_anchor_panics() {
+        let g = SweepGrid::new(CheshireConfig::neo());
+        DsePredictor::fit(&g.axes_dedup(), &[]);
+    }
+
+    #[test]
+    fn prediction_derivations_are_consistent() {
+        let p = Prediction { cycles: 2000.0, bytes: 4000.0, energy_pj: 1e6, descs: 4.0 };
+        assert!((p.bytes_per_cycle() - 2.0).abs() < 1e-12);
+        assert!((p.desc_per_kcycle() - 2.0).abs() < 1e-12);
+        // P = E/T: 1e6 pJ over 2000 cycles at 200 MHz = 1e-6 J / 1e-5 s = 0.1 W
+        assert!((p.power_mw(200.0e6) - 100.0).abs() < 1e-9);
+        let o = p.objectives(4500.0);
+        assert!((o.cyc_per_byte - 0.5).abs() < 1e-12);
+        assert!((o.pj_per_byte - 250.0).abs() < 1e-9);
+    }
+}

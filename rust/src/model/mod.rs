@@ -9,8 +9,10 @@
 //! structural and carry the reproduced trends.
 
 pub mod area;
-pub mod power;
 pub mod benchkit;
+pub mod dse;
+pub mod power;
 
 pub use area::{AreaModel, Breakdown};
+pub use dse::{DsePredictor, Objectives, Prediction};
 pub use power::{PowerModel, PowerReport};

@@ -158,15 +158,37 @@ pub fn mgr_wr_lat_key(m: usize, b: usize) -> &'static str {
     MGR_WR_LAT[m.min(MGR_WR_LAT.len() - 1)][b.min(8)]
 }
 
+/// Midpoint (in cycles) of latency bucket `b`: halfway between the
+/// previous bucket's upper bound (0 for the first bucket) and this
+/// bucket's own bound, so `le8 → 4`, `le16 → 12`, …, `gt1024 → 1536`
+/// (against the 2048 overflow sentinel). Integer-exact.
+pub fn bucket_midpoint(b: usize) -> u64 {
+    let b = b.min(8);
+    let lo = if b == 0 { 0 } else { LAT_BOUNDS[b - 1] };
+    (lo + LAT_BOUNDS[b]) / 2
+}
+
 /// Extract a rank-based percentile from a 9-bucket log2 latency
-/// histogram: the upper bound of the bucket containing the
-/// `ceil(permille · N / 1000)`-th sample (1-indexed), or `None` when the
-/// histogram is empty. Integer-exact and deterministic — CI diffs depend
-/// on it.
+/// histogram. Integer-exact and deterministic — CI diffs depend on it.
+///
+/// * Empty histogram → `None` (the only undefined case; callers render
+///   it as `-` / omit the triplet).
+/// * Degenerate histogram (every sample in one bucket — which includes
+///   the single-sample case) → the bucket *midpoint*, a defined central
+///   estimate rather than the bucket's upper edge. With one occupied
+///   bucket the rank walk can only ever land there, and reporting the
+///   edge would bias every percentile of a uniform population upward by
+///   up to 2× (the DSE calibrator consumes these as miss-penalty
+///   estimates, where that bias is a systematic model error).
+/// * Otherwise → the upper bound of the bucket containing the
+///   `ceil(permille · N / 1000)`-th sample (1-indexed), as before.
 pub fn histogram_percentile(counts: &[u64; 9], permille: u64) -> Option<u64> {
     let n: u64 = counts.iter().sum();
     if n == 0 {
         return None;
+    }
+    if let Some(only) = single_occupied_bucket(counts) {
+        return Some(bucket_midpoint(only));
     }
     let rank = (permille * n).div_ceil(1000).clamp(1, n);
     let mut seen = 0u64;
@@ -176,7 +198,23 @@ pub fn histogram_percentile(counts: &[u64; 9], permille: u64) -> Option<u64> {
             return Some(LAT_BOUNDS[b]);
         }
     }
-    Some(LAT_BOUNDS[8])
+    // rank ≤ n and the buckets sum to n, so the walk always terminates.
+    unreachable!("rank {rank} beyond histogram population {n}")
+}
+
+/// Index of the only occupied bucket, or `None` when zero or several
+/// buckets hold samples.
+fn single_occupied_bucket(counts: &[u64; 9]) -> Option<usize> {
+    let mut only = None;
+    for (b, &c) in counts.iter().enumerate() {
+        if c > 0 {
+            if only.is_some() {
+                return None;
+            }
+            only = Some(b);
+        }
+    }
+    only
 }
 
 /// Read a manager's read-latency histogram out of a [`Stats`] snapshot.
@@ -392,11 +430,45 @@ mod tests {
         assert_eq!(histogram_percentile(&c, 990), Some(64), "p99 = 99th of 100 samples");
         assert_eq!(histogram_percentile(&c, 999), Some(2048), "p999 rounds up to the tail");
         assert_eq!(percentile_triplet(&c), Some((8, 64, 2048)));
+    }
+
+    #[test]
+    fn degenerate_histograms_have_defined_percentiles() {
+        // empty: the one genuinely undefined case
         assert_eq!(histogram_percentile(&[0; 9], 500), None, "empty histogram");
+        assert_eq!(percentile_triplet(&[0; 9]), None);
         // single sample: every percentile is that sample's bucket
+        // midpoint, not its upper edge (le128 spans (64, 128] → 96)
         let mut one = [0u64; 9];
         one[4] = 1;
-        assert_eq!(percentile_triplet(&one), Some((128, 128, 128)));
+        assert_eq!(percentile_triplet(&one), Some((96, 96, 96)));
+        // single-bucket population: same midpoint regardless of count
+        let mut uniform = [0u64; 9];
+        uniform[4] = 1_000;
+        assert_eq!(percentile_triplet(&uniform), Some((96, 96, 96)));
+        // first and overflow buckets: (0, 8] → 4, (1024, 2048] → 1536
+        let mut fast = [0u64; 9];
+        fast[0] = 3;
+        assert_eq!(histogram_percentile(&fast, 999), Some(4));
+        let mut slow = [0u64; 9];
+        slow[8] = 7;
+        assert_eq!(histogram_percentile(&slow, 500), Some(1536));
+        // two occupied buckets: no longer degenerate, rank-based upper
+        // bounds apply again even when one bucket holds a single sample
+        let mut two = [0u64; 9];
+        two[0] = 1;
+        two[4] = 1;
+        assert_eq!(percentile_triplet(&two), Some((8, 128, 128)));
+    }
+
+    #[test]
+    fn bucket_midpoints_are_centered_and_clamped() {
+        assert_eq!(bucket_midpoint(0), 4);
+        assert_eq!(bucket_midpoint(1), 12);
+        assert_eq!(bucket_midpoint(4), 96);
+        assert_eq!(bucket_midpoint(7), 768);
+        assert_eq!(bucket_midpoint(8), 1536);
+        assert_eq!(bucket_midpoint(99), 1536, "out-of-range clamps to the tail");
     }
 
     #[test]

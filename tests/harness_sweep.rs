@@ -293,3 +293,103 @@ fn oversubscribed_thread_count_is_harmless() {
         assert_eq!(a.cycles, b.cycles);
     }
 }
+
+/// The design-space explorer at sweep level: deterministic reports, a
+/// simulated subset bit-identical to the same scenarios run through the
+/// plain harness, and bookkeeping that adds up.
+mod explore {
+    use super::*;
+    use cheshire::harness::{explore, ExploreParams};
+
+    /// {mem} × {rpc, hyperram} × mshr {4, 1} × out {4, 1}: eight points,
+    /// of which the star calibration covers six — pruning has real work.
+    fn grid() -> SweepGrid {
+        let mut g = SweepGrid::new(CheshireConfig::neo());
+        g.workloads = vec![Workload::Mem { len: 8 * 1024, reps: 2, max_burst: 2048 }];
+        g.backends = vec![MemBackend::Rpc, MemBackend::HyperRam];
+        g.mshrs = vec![4, 1];
+        g.outstanding = vec![4, 1];
+        g.max_cycles = 8_000_000;
+        g
+    }
+
+    #[test]
+    fn explore_reports_are_byte_identical_across_runs() {
+        let params = ExploreParams::default();
+        let a = explore(&grid(), &params);
+        let b = explore(&grid(), &params);
+        assert_eq!(a.dse.to_json(), b.dse.to_json(), "DSE report must be deterministic");
+        assert_eq!(
+            a.sweep.to_json_arch(),
+            b.sweep.to_json_arch(),
+            "subset sweep must be deterministic"
+        );
+    }
+
+    #[test]
+    fn simulated_subset_is_bit_identical_to_a_plain_sweep() {
+        let g = grid();
+        let out = explore(&g, &ExploreParams::default());
+        // re-run exactly the simulated scenarios through the plain
+        // serial harness — the explorer must not have perturbed them
+        let indexed = g.indexed_scenarios();
+        let subset: Vec<_> = (0..indexed.len())
+            .filter(|&i| out.dse.points[i].measured.is_some())
+            .map(|i| indexed[i].1.clone())
+            .collect();
+        assert_eq!(subset.len(), out.sweep.results.len());
+        let plain = harness::run_serial(subset);
+        for (e, p) in out.sweep.results.iter().zip(&plain) {
+            assert_eq!(e.name, p.name);
+            assert_eq!(e.cycles, p.cycles, "{}: explore ≡ plain sweep cycles", e.name);
+            let ev: Vec<_> = e.stats.iter().collect();
+            let pv: Vec<_> = p.stats.iter().collect();
+            assert_eq!(ev, pv, "{}: explore ≡ plain sweep stats", e.name);
+        }
+        assert_eq!(
+            out.sweep.to_json_arch(),
+            SweepReport::new(plain).to_json_arch(),
+            "subset report ≡ plain sweep report, bit for bit"
+        );
+    }
+
+    #[test]
+    fn explorer_bookkeeping_adds_up() {
+        let out = explore(&grid(), &ExploreParams::default());
+        let dse = &out.dse;
+        assert_eq!(dse.grid_points(), 8);
+        // star plan: 2 pairs × (anchor + 1 mshr star + 1 out star)
+        assert_eq!(dse.calibration_runs(), 6);
+        assert!(dse.simulated() >= dse.calibration_runs());
+        assert_eq!(dse.simulated(), out.sweep.results.len());
+        // every calibration point is reproduced within the error band —
+        // the star fit is exact on its own runs modulo monotone clamping
+        for p in dse.points.iter().filter(|p| p.measured.is_some()) {
+            let m = p.measured.as_ref().unwrap();
+            assert!(
+                m.in_band,
+                "{}: predicted/measured divergence {:.3} beyond the band",
+                p.name, m.err_cycles
+            );
+        }
+        // predicted frontier members are never pruned away
+        assert!(dse.frontier_size() >= 1);
+        for p in dse.points.iter().filter(|p| p.frontier) {
+            assert!(p.measured.is_some(), "{}: frontier point must be simulated", p.name);
+        }
+        // deeper queues must not predict lower throughput than shallow
+        // ones (the clamped-monotone contract, end to end): compare the
+        // out=4 and out=1 points at mshr=4 on RPC
+        let bpc = |needle: &str| {
+            dse.points
+                .iter()
+                .find(|p| p.name.contains(needle))
+                .map(|p| p.predicted.bytes_per_cycle())
+                .unwrap_or_else(|| panic!("missing point {needle}"))
+        };
+        assert!(
+            bpc("mem/rpc/spmff/dsa0/tlb16/mshr4/out4") >= bpc("mem/rpc/spmff/dsa0/tlb16/mshr4/out1"),
+            "more outstanding bursts must never predict lower bytes/cycle"
+        );
+    }
+}

@@ -1249,3 +1249,157 @@ mod trace_determinism {
         assert!(json.contains("\"traceEvents\""), "Perfetto envelope present");
     }
 }
+
+/// Property battery for the analytical design-space predictor: physics-
+/// mandated monotonicity survives calibration on real runs, categorical
+/// orderings match measurement, and the star fit reproduces its own
+/// calibration points.
+mod dse_model {
+    use cheshire::harness::grid::{PointIdx, AX_HARTS, AX_MSHR};
+    use cheshire::harness::{SweepGrid, Workload};
+    use cheshire::model::dse::{rel_err, DsePredictor};
+    use cheshire::platform::config::MemBackend;
+    use cheshire::platform::CheshireConfig;
+    use cheshire::sim::prop::{cases, Rng};
+
+    /// Run every grid point serially and return the indexed results —
+    /// grids here are chosen so the star plan IS the whole grid.
+    fn calibrate(g: &SweepGrid) -> (cheshire::harness::grid::GridAxes, DsePredictor) {
+        let axes = g.axes_dedup();
+        let calib: Vec<_> =
+            g.indexed_scenarios().into_iter().map(|(idx, sc)| (idx, sc.run())).collect();
+        let pred = DsePredictor::fit(&axes, &calib);
+        (axes, pred)
+    }
+
+    /// More MSHRs never predict lower DRAM bytes/cycle: the clamped
+    /// monotone fit holds against real calibration runs of the DMA-bound
+    /// workload, whatever its size.
+    #[test]
+    fn mshr_depth_never_lowers_predicted_bytes_per_cycle() {
+        cases(2, 0xD5E1, |rng: &mut Rng| {
+            let kib = *rng.pick(&[4u32, 8, 16]);
+            let reps = rng.range(1, 3) as u32;
+            let mut g = SweepGrid::new(CheshireConfig::neo());
+            g.workloads = vec![Workload::Mem {
+                len: kib as usize * 1024,
+                reps: reps as usize,
+                max_burst: 2048,
+            }];
+            g.mshrs = vec![1, 2, 4, 8];
+            let (axes, pred) = calibrate(&g);
+            let mut by_value: Vec<(u64, f64)> = (0..axes.mshrs.len())
+                .map(|v| {
+                    let mut idx = PointIdx { workload: 0, backend: 0, axis: [0; 7] };
+                    idx.axis[AX_MSHR] = v;
+                    (axes.mshrs[v] as u64, pred.predict(&idx).bytes_per_cycle())
+                })
+                .collect();
+            by_value.sort_by_key(|&(v, _)| v);
+            for w in by_value.windows(2) {
+                assert!(
+                    w[1].1 >= w[0].1 - 1e-12,
+                    "mem {kib}KiB×{reps}: {} MSHRs predicts {:.4} B/cyc but {} predicts {:.4}",
+                    w[1].0,
+                    w[1].1,
+                    w[0].0,
+                    w[0].1
+                );
+            }
+        });
+    }
+
+    /// More harts never predict lower aggregate descriptor throughput on
+    /// the SMP workload.
+    #[test]
+    fn hart_count_never_lowers_predicted_descriptor_throughput() {
+        cases(2, 0xD5E2, |rng: &mut Rng| {
+            let kib = *rng.pick(&[2u32, 4]);
+            let mut g = SweepGrid::new(CheshireConfig::neo());
+            g.workloads = vec![Workload::Smp { kib }];
+            g.harts = vec![1, 2, 4];
+            let (axes, pred) = calibrate(&g);
+            let thr: Vec<(usize, f64)> = (0..axes.harts.len())
+                .map(|v| {
+                    let mut idx = PointIdx { workload: 0, backend: 0, axis: [0; 7] };
+                    idx.axis[AX_HARTS] = v;
+                    (axes.harts[v], pred.predict(&idx).desc_per_kcycle())
+                })
+                .collect();
+            for w in thr.windows(2) {
+                assert!(
+                    w[1].1 >= w[0].1 - 1e-12,
+                    "smp {kib}KiB: {} harts predicts {:.4} desc/kcyc but {} predicts {:.4}",
+                    w[1].0,
+                    w[1].1,
+                    w[0].0,
+                    w[0].1
+                );
+            }
+        });
+    }
+
+    /// The predicted RPC-vs-HyperRAM ordering matches the calibrated
+    /// runs exactly — backends are anchored independently, so the
+    /// predictor cannot invert a measured categorical ordering.
+    #[test]
+    fn backend_ordering_matches_calibrated_runs() {
+        cases(2, 0xD5E3, |rng: &mut Rng| {
+            let kib = *rng.pick(&[4u32, 8]);
+            let mut g = SweepGrid::new(CheshireConfig::neo());
+            g.workloads =
+                vec![Workload::Mem { len: kib as usize * 1024, reps: 2, max_burst: 2048 }];
+            g.backends = vec![MemBackend::Rpc, MemBackend::HyperRam];
+            let axes = g.axes_dedup();
+            let calib: Vec<_> =
+                g.indexed_scenarios().into_iter().map(|(idx, sc)| (idx, sc.run())).collect();
+            let pred = DsePredictor::fit(&axes, &calib);
+            let measured: Vec<f64> =
+                calib.iter().map(|(_, r)| r.cycles as f64).collect();
+            let predicted: Vec<f64> =
+                calib.iter().map(|(idx, _)| pred.predict(idx).cycles).collect();
+            assert_eq!(
+                measured[0] < measured[1],
+                predicted[0] < predicted[1],
+                "mem {kib}KiB: predicted backend ordering must match measurement \
+                 (measured {measured:?}, predicted {predicted:?})"
+            );
+        });
+    }
+
+    /// The star fit reproduces every one of its own calibration runs
+    /// within the default error band (exactly, except where the monotone
+    /// clamp flattened a physically impossible measured inversion).
+    #[test]
+    fn calibration_points_reproduce_their_own_metrics() {
+        cases(2, 0xD5E4, |rng: &mut Rng| {
+            let kib = *rng.pick(&[4u32, 8]);
+            let mut g = SweepGrid::new(CheshireConfig::neo());
+            g.workloads =
+                vec![Workload::Mem { len: kib as usize * 1024, reps: 1, max_burst: 2048 }];
+            g.mshrs = vec![4, 1];
+            g.outstanding = vec![4, 1];
+            let axes = g.axes_dedup();
+            let indexed = g.indexed_scenarios();
+            // star subset: anchor + one star per off-anchor axis value
+            let star: Vec<_> = indexed
+                .iter()
+                .filter(|(idx, _)| idx.axis.iter().filter(|&&v| v != 0).count() <= 1)
+                .map(|(idx, sc)| (*idx, sc.run()))
+                .collect();
+            let pred = DsePredictor::fit(&axes, &star);
+            for (idx, r) in &star {
+                let p = pred.predict(idx);
+                let err = rel_err(p.cycles, r.cycles.max(1) as f64);
+                assert!(
+                    err <= 0.25,
+                    "{}: calibration run reproduced with {:.1}% error",
+                    r.name,
+                    100.0 * err
+                );
+                let err_e = rel_err(p.energy_pj, r.energy_pj());
+                assert!(err_e <= 0.25, "{}: energy error {:.1}%", r.name, 100.0 * err_e);
+            }
+        });
+    }
+}
