@@ -1,0 +1,131 @@
+//! Chiplet-mesh scaling — the multi-SoC acceptance bench.
+//!
+//! Runs the sharded CRC workload on a four-tile star mesh (tile 0
+//! coordinates, tiles 1–3 each CRC a private shard through their local
+//! DSA engine, results merge over the die-to-die links) twice through
+//! the **same** `Mesh::run` code path: once on the sequential
+//! round-robin reference executor and once on the conservative-lookahead
+//! thread-per-tile parallel executor. The two runs must be bit-identical
+//! (same stop cycle, same architectural fingerprint, same CRC capture);
+//! what differs is host wall-clock.
+//!
+//! The metric is **aggregate simulated tile-cycles per host second** —
+//! four tiles advancing one epoch each is four epochs of simulated work,
+//! so the parallel executor's win shows up directly. Emits
+//! `BENCH_mesh.json` (cwd) and enforces the acceptance gate: the 4-SoC
+//! parallel executor must reach ≥1.8× the sequential-mesh host
+//! throughput (override with `MESH_BENCH_MIN_SPEEDUP` — wall-clock on a
+//! loaded or core-starved CI box is noisy, so the knob matters here more
+//! than in the simulated-time benches).
+
+use std::time::Instant;
+
+use cheshire::harness::scenario::stage_shard_tile;
+use cheshire::model::benchkit::{f2, f3, Table};
+use cheshire::platform::config::{DsaKind, DsaSlot};
+use cheshire::platform::CheshireConfig;
+use cheshire::sim::mesh::{Mesh, MeshResult, MeshRun, MeshTopology};
+use cheshire::workloads::{shard_expected_crcs, shard_expected_merge, SHARD_RESULT_OFF};
+
+/// Tiles in the star (1 coordinator + 3 workers) — the gate's "4-SoC".
+const SOCS: usize = 4;
+/// Shard size per tile in KiB — the maximum the workload supports, so
+/// per-epoch tile work dominates the barrier overhead being measured.
+const KIB: u32 = 64;
+/// Simulated-cycle budget; the run halts well before this.
+const MAX_CYCLES: u64 = 120_000_000;
+
+/// Run the 4-tile shard mesh on the chosen executor; returns the result
+/// and the host seconds the `Mesh::run` call took.
+fn run_mode(parallel: bool) -> (MeshResult, f64) {
+    let mut base = CheshireConfig::neo();
+    base.dsa_slots = vec![DsaSlot::local(DsaKind::Crc)];
+    let topo = MeshTopology::star(SOCS, base);
+    let mesh = Mesh::new(topo).expect("star topology wires");
+    let mut opts = MeshRun::new(MAX_CYCLES);
+    opts.parallel = parallel;
+    opts.capture = Some((SHARD_RESULT_OFF, 64 * (SOCS + 1)));
+    let t0 = Instant::now();
+    let res = mesh.run(&opts, &|tile, soc| stage_shard_tile(soc, tile, SOCS, KIB));
+    let secs = t0.elapsed().as_secs_f64();
+
+    // sanity: clean completion on every tile, exact CRCs at the capture
+    assert!(res.tiles[0].uart.contains('S'), "coordinator signed off");
+    for t in 1..SOCS {
+        assert!(res.tiles[t].uart.contains('w'), "worker {t} signed off");
+    }
+    let cap = &res.tiles[0].capture;
+    let word = |i: usize| u64::from_le_bytes(cap[i * 64..i * 64 + 8].try_into().unwrap());
+    let expect = shard_expected_crcs(SOCS, KIB);
+    for (t, &e) in expect.iter().enumerate() {
+        assert_eq!(word(t), e, "tile {t} CRC matches the host reference");
+    }
+    assert_eq!(word(SOCS), shard_expected_merge(SOCS, KIB), "merged CRC word");
+
+    (res, secs)
+}
+
+fn main() {
+    let mut t = Table::new(
+        "Chiplet-mesh executor scaling — 4-tile star, 64 KiB CRC shards",
+        &["executor", "stop cycle", "tile-cycles", "host s", "Mcyc/s", "vs seq"],
+    );
+
+    let (seq, seq_secs) = run_mode(false);
+    let (par, par_secs) = run_mode(true);
+
+    // The whole point: both executors are the same simulation.
+    assert_eq!(seq.cycles, par.cycles, "stop cycle identical across executors");
+    assert_eq!(
+        seq.fingerprint(),
+        par.fingerprint(),
+        "architectural fingerprint identical across executors"
+    );
+
+    let tile_cycles = seq.cycles * SOCS as u64;
+    let seq_thr = tile_cycles as f64 / seq_secs / 1.0e6;
+    let par_thr = tile_cycles as f64 / par_secs / 1.0e6;
+    let speedup = seq_secs / par_secs;
+
+    t.row(&[
+        "sequential".into(),
+        seq.cycles.to_string(),
+        tile_cycles.to_string(),
+        f3(seq_secs),
+        f2(seq_thr),
+        f2(1.0),
+    ]);
+    t.row(&[
+        "parallel".into(),
+        par.cycles.to_string(),
+        tile_cycles.to_string(),
+        f3(par_secs),
+        f2(par_thr),
+        f2(speedup),
+    ]);
+    t.print();
+
+    let json = format!(
+        "{{\n  \"socs\": {SOCS},\n  \"shard_kib\": {KIB},\n  \"stop_cycle\": {},\n  \
+         \"fingerprint\": \"{:016x}\",\n  \"points\": [\n    \
+         {{\"executor\": \"sequential\", \"host_seconds\": {seq_secs}, \"mcyc_per_s\": {seq_thr}}},\n    \
+         {{\"executor\": \"parallel\", \"host_seconds\": {par_secs}, \"mcyc_per_s\": {par_thr}}}\n  ],\n  \
+         \"speedup\": {speedup}\n}}\n",
+        seq.cycles,
+        seq.fingerprint(),
+    );
+    std::fs::write("BENCH_mesh.json", &json).expect("write BENCH_mesh.json");
+    println!("\nwritten: BENCH_mesh.json");
+
+    let gate: f64 = std::env::var("MESH_BENCH_MIN_SPEEDUP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.8);
+    assert!(
+        speedup >= gate,
+        "4-SoC parallel executor must reach ≥{gate}× the sequential-mesh host \
+         throughput (got {speedup:.2}×; override MESH_BENCH_MIN_SPEEDUP on \
+         core-starved machines)"
+    );
+    println!("parallel vs sequential mesh host throughput: {speedup:.2}× (gate: ≥{gate}×)");
+}

@@ -307,6 +307,13 @@ impl Cva6 {
 
     /// One clock cycle.
     pub fn tick(&mut self, bus: &AxiBus, stats: &mut Stats) {
+        if self.halted {
+            // `ebreak` is end-of-simulation for this hart: it is clock
+            // gated (no `mcycle`, no stats, no fetch from the vectored
+            // trap handler) so a mesh container can keep the rest of the
+            // platform ticking through its post-halt drain window.
+            return;
+        }
         self.core.csr.mcycle = self.core.csr.mcycle.wrapping_add(1);
         // drain pending writeback beats (one per cycle, with back-pressure)
         if !self.wb_q.is_empty() && bus.w.borrow().can_push() {
@@ -569,6 +576,12 @@ impl Component for Cva6 {
         if !self.wb_q.is_empty() {
             return Activity::Busy;
         }
+        if self.halted {
+            // clock gated (see `tick`): nothing left to replay, so idle
+            // spans over a halted hart are elidable regardless of the
+            // state the `ebreak` left behind
+            return Activity::Quiescent;
+        }
         match self.state {
             CState::Wfi => {
                 if self.core.csr.mip & self.core.csr.mie != 0 {
@@ -584,10 +597,14 @@ impl Component for Cva6 {
         }
     }
 
-    /// Replay `cycles` parked/counting ticks: `mcycle` always advances;
+    /// Replay `cycles` parked/counting ticks: `mcycle` advances (unless
+    /// the hart is halted, in which case the whole span is a no-op);
     /// `Wfi` charges `cpu.wfi_cycles`, `Busy` charges `cpu.busy_cycles`
     /// and consumes the countdown — exactly what `tick` would have done.
     fn skip(&mut self, cycles: u64, stats: &mut Stats) {
+        if self.halted {
+            return; // clock gated (see `tick`): nothing to replay
+        }
         self.core.csr.mcycle = self.core.csr.mcycle.wrapping_add(cycles);
         match &mut self.state {
             CState::Wfi => {

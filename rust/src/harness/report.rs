@@ -18,6 +18,23 @@ pub struct SweepReport {
     pub results: Vec<ScenarioResult>,
 }
 
+/// Whether `k` is a simulator-timing counter (`sched.*`/`uop.*`) that
+/// the architectural report must strip — either bare or under a mesh
+/// tile prefix (`t3.sched.*`).
+pub(crate) fn is_timing_stat(k: &str) -> bool {
+    let base = match k.split_once('.') {
+        Some((p, rest))
+            if p.len() > 1
+                && p.starts_with('t')
+                && p[1..].bytes().all(|b| b.is_ascii_digit()) =>
+        {
+            rest
+        }
+        _ => k,
+    };
+    base.starts_with("sched.") || base.starts_with("uop.")
+}
+
 /// Escape a string for inclusion in a JSON document.
 pub(crate) fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
@@ -148,7 +165,7 @@ impl SweepReport {
             out.push_str("      \"stats\": {");
             let mut first = true;
             for (k, v) in r.stats.iter() {
-                if !timing && (k.starts_with("sched.") || k.starts_with("uop.")) {
+                if !timing && is_timing_stat(k) {
                     continue;
                 }
                 if !first {
@@ -234,11 +251,31 @@ mod tests {
         assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
     }
 
+    /// The timing-key classifier covers bare and tile-prefixed
+    /// namespaces without eating architectural keys that merely mention
+    /// them.
+    #[test]
+    fn timing_stat_classifier_handles_tile_prefixes() {
+        assert!(is_timing_stat("sched.elided_cycles"));
+        assert!(is_timing_stat("uop.hits"));
+        assert!(is_timing_stat("t0.sched.fast_forwards"));
+        assert!(is_timing_stat("t12.uop.blocks"));
+        assert!(!is_timing_stat("cpu.instr"));
+        assert!(!is_timing_stat("t0.cpu.instr"));
+        assert!(!is_timing_stat("t0.d2d.t0t1.aw"));
+        assert!(!is_timing_stat("tile.sched.x"), "non-numeric prefix is not a tile");
+    }
+
     /// The full report carries the throughput fields; the architectural
-    /// variant strips both them and every `sched.*`/`uop.*` counter.
+    /// variant strips both them and every `sched.*`/`uop.*` counter —
+    /// including the mesh's tile-prefixed copies.
     #[test]
     fn arch_json_strips_timing_and_sched_fields() {
-        let rep = SweepReport::new(vec![fake("a", 1000)]);
+        let mut r0 = fake("a", 1000);
+        r0.stats.add("t0.sched.elided_cycles", 7);
+        r0.stats.add("t1.uop.hits", 3);
+        r0.stats.add("t1.cpu.instr", 9);
+        let rep = SweepReport::new(vec![r0]);
         let full = rep.to_json();
         assert!(full.contains("\"host_seconds\": 0.125"));
         assert!(full.contains("\"sim_cycles_per_sec\": 8000"));
@@ -252,6 +289,7 @@ mod tests {
         assert!(!arch.contains("sched."));
         assert!(!arch.contains("uop."));
         assert!(arch.contains("\"cpu.instr\""), "architectural stats survive");
+        assert!(arch.contains("\"t1.cpu.instr\""), "tile-prefixed arch stats survive");
         assert_eq!(arch.matches('{').count(), arch.matches('}').count());
     }
 

@@ -6,8 +6,10 @@ use crate::model::{PowerModel, PowerReport};
 use crate::platform::config::{slots_spec, DsaKind, DsaSlot, MemBackend, MAX_HARTS};
 use crate::platform::memmap::DRAM_BASE;
 use crate::platform::{CheshireConfig, Soc};
+use crate::sim::mesh::{Mesh, MeshRun, MeshTopology};
 use crate::sim::Stats;
 use crate::workloads;
+use crate::workloads::SHARD_MAX_TILES;
 
 /// The workloads a scenario can run — the paper's Fig. 11 set, with the
 /// knobs the benches use (window length, matrix size, DMA burst shape).
@@ -82,6 +84,20 @@ pub enum Workload {
         /// Bytes the CRC/reduce slots consume, in KiB.
         kib: u32,
     },
+    /// CRC suite sharded across a chiplet mesh: `socs` SoC tiles in a
+    /// star topology, tile 0 dispatching job tokens over the D2D windows
+    /// and merging the per-tile CRC words through a fenced mailbox. Runs
+    /// on the [`Mesh`] container (thread-per-tile conservative-lookahead
+    /// by default, sequential round-robin with [`Scenario::seq_mesh`]);
+    /// halts when every tile reaches its `ebreak`.
+    Shard {
+        /// Bytes each tile's CRC shard covers, in KiB (1–64).
+        kib: u32,
+        /// Total tile count including the coordinator (2–5: the star
+        /// coordinator has [`crate::platform::config::MAX_MESH_PORTS`]
+        /// windows).
+        socs: usize,
+    },
 }
 
 impl Workload {
@@ -96,6 +112,7 @@ impl Workload {
             Workload::Hetero { .. } => "hetero",
             Workload::Contention { .. } => "contention",
             Workload::Smp { .. } => "smp",
+            Workload::Shard { .. } => "shard",
         }
     }
 
@@ -115,9 +132,10 @@ impl Workload {
                 Ok(Workload::Contention { dma_kib: 32, tile_n: 16, jobs: 2, spm_kib: 32 })
             }
             "smp" => Ok(Workload::Smp { kib: 4 }),
+            "shard" => Ok(Workload::Shard { kib: 16, socs: 2 }),
             other => Err(format!(
                 "unknown workload {other:?} \
-                 (want wfi|nop|twomm|mem|supervisor|hetero|contention|smp)"
+                 (want wfi|nop|twomm|mem|supervisor|hetero|contention|smp|shard)"
             )),
         }
     }
@@ -238,6 +256,12 @@ impl Workload {
                 // actually built, so image and topology always agree
                 workloads::smp_program(DRAM_BASE, soc.cfg.harts, len)
             }
+            Workload::Shard { kib, socs } => {
+                // staging one bare SoC means tile 0 (the full mesh path
+                // stages every tile through `stage_shard_tile`)
+                soc.dram_write(workloads::SHARD_SRC_OFF as usize, &workloads::shard_fill(0, kib));
+                workloads::shard_coordinator_program(DRAM_BASE, socs, kib)
+            }
         }
     }
 
@@ -263,6 +287,12 @@ pub struct Scenario {
     pub workload: Workload,
     /// Safety bound for self-halting workloads.
     pub max_cycles: u64,
+    /// Mesh workloads only: run the sequential round-robin reference
+    /// executor instead of the thread-per-tile parallel one
+    /// (`--seq-mesh`). Architectural output is bit-identical either way
+    /// — the flag is a run mode, not a configuration, so it is *not*
+    /// part of the scenario name and CI can diff the two reports.
+    pub seq_mesh: bool,
 }
 
 impl Scenario {
@@ -276,7 +306,16 @@ impl Scenario {
     /// — so the stored config, the scenario name, and the eventual
     /// [`ScenarioResult`] all describe the configuration that actually
     /// runs.
-    pub fn new(mut cfg: CheshireConfig, workload: Workload, max_cycles: u64) -> Self {
+    pub fn new(mut cfg: CheshireConfig, mut workload: Workload, max_cycles: u64) -> Self {
+        if let Workload::Shard { ref mut socs, ref mut kib } = workload {
+            // clamp here so the name, the staged programs, and the star
+            // topology all agree on the tile count
+            *socs = (*socs).clamp(2, SHARD_MAX_TILES);
+            *kib = (*kib).clamp(1, 64);
+            if cfg.dsa_slots.is_empty() {
+                cfg.dsa_slots = vec![DsaSlot::local(DsaKind::Crc)];
+            }
+        }
         if matches!(workload, Workload::Contention { .. }) && cfg.dsa_slots.is_empty() {
             cfg.dsa_slots = vec![DsaSlot::local(DsaKind::Matmul)];
         }
@@ -309,7 +348,12 @@ impl Scenario {
             // conditional suffix: every pre-SMP scenario name is unchanged
             if cfg.harts != 1 { format!("/h{}", cfg.harts) } else { String::new() }
         );
-        Self { name, cfg, workload, max_cycles }
+        let name = match workload {
+            // tile count is a real axis: it must distinguish report rows
+            Workload::Shard { socs, .. } => format!("{name}/socs{socs}"),
+            _ => name,
+        };
+        Self { name, cfg, workload, max_cycles, seq_mesh: false }
     }
 
     /// Build the SoC, stage the workload, run it, and distill the result.
@@ -330,6 +374,9 @@ impl Scenario {
     /// (`None` otherwise). Tracing is observation-only, so the
     /// [`ScenarioResult`] is bit-identical either way.
     pub fn run_with_trace(&self, trace: bool) -> (ScenarioResult, Option<String>) {
+        if let Workload::Shard { kib, socs } = self.workload {
+            return self.run_mesh(socs, kib, trace);
+        }
         let cfg = &self.cfg; // Scenario::new already normalized the topology
         let mut soc = Soc::new(cfg.clone());
         if trace {
@@ -397,6 +444,98 @@ impl Scenario {
         };
         (result, trace_json)
     }
+
+    /// The mesh execution path behind [`Workload::Shard`]: build a star
+    /// of `socs` copies of this scenario's config, stage every tile with
+    /// [`stage_shard_tile`], and run the [`Mesh`] container
+    /// (thread-per-tile unless [`Scenario::seq_mesh`]; mesh-wide elision
+    /// follows `cfg.elide_idle`).
+    ///
+    /// The result's `stats` hold every tile's counters under a `t{n}.`
+    /// prefix *plus* the unprefixed cross-tile aggregate, so the report
+    /// table's `instr`/`dram B` columns and the power model keep
+    /// working; both views are pure functions of the architectural run.
+    /// `power` sums the per-tile power reports — static power counts
+    /// once per die. `halted` means every tile printed its UART
+    /// signature (coordinator `S`, workers `w`) before `max_cycles`.
+    fn run_mesh(&self, socs: usize, kib: u32, trace: bool) -> (ScenarioResult, Option<String>) {
+        assert!(
+            self.cfg.dsa_slots.first().map(|s| s.kind) == Some(DsaKind::Crc),
+            "shard workload drives the CRC plug-in on slot 0 of every tile \
+             (got {:?})",
+            self.cfg.dsa_slots
+        );
+        let topo = MeshTopology::star(socs, self.cfg.clone());
+        let mesh = Mesh::new(topo).expect("star topologies are always well-formed");
+        let mut opts = MeshRun::new(self.max_cycles);
+        opts.parallel = !self.seq_mesh;
+        opts.elide = self.cfg.elide_idle;
+        opts.trace = trace;
+        opts.capture = Some((workloads::SHARD_RESULT_OFF, 64 * (socs + 1)));
+        let host_t0 = std::time::Instant::now();
+        let res = mesh.run(&opts, &|tile, soc| stage_shard_tile(soc, tile, socs, kib));
+        let host_seconds = host_t0.elapsed().as_secs_f64().max(1e-9);
+        let halted = res.tiles[0].uart.contains('S')
+            && res.tiles.iter().skip(1).all(|t| t.uart.contains('w'));
+        let cycles = res.cycles;
+        let mut stats = res.merged_stats();
+        let mut power = PowerReport { core_mw: 0.0, io_mw: 0.0, ram_mw: 0.0 };
+        for t in &res.tiles {
+            if socs > 1 {
+                stats.merge(&t.stats); // unprefixed aggregate view
+            }
+            let p = PowerModel::neo().power(&t.stats, cycles.max(1), self.cfg.freq_hz);
+            power.core_mw += p.core_mw;
+            power.io_mw += p.io_mw;
+            power.ram_mw += p.ram_mw;
+        }
+        // one JSON object keyed by tile: each value is that tile's own
+        // self-contained Perfetto document
+        let trace_json = trace.then(|| {
+            let mut out = String::from("{\n");
+            for (i, t) in res.tiles.iter().enumerate() {
+                let doc = t.trace_json.as_deref().unwrap_or("{}");
+                out.push_str(&format!("\"t{i}\": {doc}"));
+                out.push_str(if i + 1 == res.tiles.len() { "\n" } else { ",\n" });
+            }
+            out.push('}');
+            out
+        });
+        let result = ScenarioResult {
+            name: self.name.clone(),
+            workload: self.workload.name(),
+            harts: self.cfg.harts,
+            backend: self.cfg.backend,
+            spm_way_mask: self.cfg.spm_way_mask,
+            dsa_ports: self.cfg.dsa_port_pairs,
+            dsa_slots: slots_spec(&self.cfg.dsa_slots),
+            tlb_entries: self.cfg.tlb_entries,
+            mshrs: self.cfg.llc_mshrs,
+            outstanding: self.cfg.max_outstanding,
+            blocking: self.cfg.mem_blocking,
+            freq_hz: self.cfg.freq_hz,
+            cycles,
+            halted,
+            power,
+            host_seconds,
+            stats,
+        };
+        (result, trace_json)
+    }
+}
+
+/// Stage one mesh tile for the SHARD workload: write the tile's
+/// deterministic source fill and preload its role program (coordinator
+/// on tile 0, worker elsewhere). Shared by the scenario path, the mesh
+/// bench, and the property tests so every harness runs the same images.
+pub fn stage_shard_tile(soc: &mut Soc, tile: usize, socs: usize, kib: u32) {
+    soc.dram_write(workloads::SHARD_SRC_OFF as usize, &workloads::shard_fill(tile, kib));
+    let img = if tile == 0 {
+        workloads::shard_coordinator_program(DRAM_BASE, socs, kib)
+    } else {
+        workloads::shard_worker_program(DRAM_BASE, tile, kib)
+    };
+    soc.preload(&img, DRAM_BASE);
 }
 
 /// Everything a sweep needs to compare one finished scenario against the
@@ -493,10 +632,49 @@ mod tests {
 
     #[test]
     fn workload_parse_roundtrips_names() {
-        for name in ["wfi", "nop", "twomm", "mem", "supervisor", "hetero", "contention", "smp"] {
+        for name in
+            ["wfi", "nop", "twomm", "mem", "supervisor", "hetero", "contention", "smp", "shard"]
+        {
             assert_eq!(Workload::parse(name).unwrap().name(), name);
         }
         assert!(Workload::parse("fft").is_err());
+    }
+
+    /// The shard scenario self-provisions its `crc` slot, encodes the
+    /// tile count in its name, runs the mesh container to completion,
+    /// and the sequential round-robin reference produces the identical
+    /// architectural report (CRC values themselves are checked against
+    /// the host reference by `tests/proptests.rs` and `bench_mesh`).
+    #[test]
+    fn shard_scenario_runs_the_mesh_and_modes_agree() {
+        let (socs, kib) = (2, 2);
+        let sc =
+            Scenario::new(CheshireConfig::neo(), Workload::Shard { kib, socs }, 40_000_000);
+        assert!(sc.name.starts_with("shard/"), "{}", sc.name);
+        assert!(sc.name.contains("/sl:crc"), "topology in the name: {}", sc.name);
+        assert!(sc.name.ends_with("/socs2"), "tile count in the name: {}", sc.name);
+        let r = sc.run();
+        assert!(r.halted, "{}: every tile must reach its ebreak", r.name);
+        // per-tile namespaces plus the unprefixed aggregate view
+        assert!(r.stats.get("t0.cpu.instr") > 0 && r.stats.get("t1.cpu.instr") > 0);
+        assert_eq!(
+            r.stats.get("cpu.instr"),
+            r.stats.get("t0.cpu.instr") + r.stats.get("t1.cpu.instr")
+        );
+        assert!(r.stats.get("t0.d2d.t0t1.aw") > 0, "job token crossed the link");
+        assert!(r.stats.get("t0.dsa.crc_bytes") >= u64::from(kib) * 1024);
+        // the sequential reference is architecturally identical
+        let mut seq = sc.clone();
+        seq.seq_mesh = true;
+        let rs = seq.run();
+        assert_eq!(r.cycles, rs.cycles);
+        let arch = |r: &ScenarioResult| {
+            r.stats
+                .iter()
+                .filter(|(k, _)| !k.contains("sched.") && !k.contains("uop."))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(arch(&r), arch(&rs));
     }
 
     /// The smp scenario self-provisions its `[matmul, crc, reduce]`

@@ -102,8 +102,8 @@ fn load_config_inner(args: &Args, apply_dsa: bool) -> CheshireConfig {
 
 fn main() {
     let args = Args::from_env(
-        &["info", "run", "offload", "boot", "sweep", "explore", "stats"],
-        &["stats", "serial", "no-elide", "no-uop-cache", "blocking", "explore"],
+        &["info", "run", "offload", "boot", "sweep", "explore", "stats", "mesh"],
+        &["stats", "serial", "no-elide", "no-uop-cache", "blocking", "explore", "seq-mesh"],
     );
     match args.subcommand.as_deref() {
         Some("info") => info(&args),
@@ -114,22 +114,29 @@ fn main() {
         Some("sweep") => sweep(&args),
         Some("explore") => explore_cmd(&args),
         Some("stats") => stats_cmd(&args),
+        Some("mesh") => mesh_cmd(&args),
         _ => {
-            eprintln!("usage: cheshire <info|run|offload|boot|sweep|explore|stats> [options]");
-            eprintln!("  run <wfi|nop|twomm|mem|supervisor|hetero|contention|smp> [--cycles N] [--freq-mhz F]");
+            eprintln!("usage: cheshire <info|run|offload|boot|sweep|explore|stats|mesh> [options]");
+            eprintln!("  run <wfi|nop|twomm|mem|supervisor|hetero|contention|smp|shard> [--cycles N] [--freq-mhz F]");
             eprintln!("      [--demand-pages N] [--timer-delta N]");
             eprintln!("      [--dma-kib N] [--tile N] [--dsa-jobs N] [--spm-kib N]  (contention)");
-            eprintln!("      [--kib N]  (hetero pipeline / smp shared-buffer bytes)");
+            eprintln!("      [--kib N]  (hetero/smp shared-buffer KiB; shard per-tile shard KiB)");
             eprintln!("      [--slots matmul+crc@d2d]  (DSA slot topology; @d2d = chiplet attach)");
             eprintln!("      [--mshrs N] [--outstanding N] [--harts N]");
+            eprintln!("      [--socs N] [--seq-mesh]  (shard: mesh tile count / reference executor)");
             eprintln!("  offload [--n 128] [--tile 64] [--artifacts artifacts/]");
             eprintln!("  boot");
             eprintln!("  stats <workload> [--filter 'bw.*'] [run options]");
             eprintln!("      run a workload, then dump every counter grouped by namespace");
+            eprintln!("  mesh [--socs N | --topology mesh.toml] [--kib N] [--cycles N]");
+            eprintln!("       [--seq-mesh] [--no-elide] [--trace out.json] [--stats]");
+            eprintln!("       shard a CRC suite across a chiplet mesh of SoC tiles (tile 0");
+            eprintln!("       coordinates over the D2D links) and verify the merged result");
             eprintln!("  sweep [--workloads nop,mem] [--backends rpc,hyperram]");
             eprintln!("        [--spm-masks 0xff,0x0f] [--dsa 0,1] [--tlb 16,4] [--cycles N]");
             eprintln!("        [--slots none,reduce+crc,reduce+crc@d2d]  (topology axis)");
             eprintln!("        [--mshrs 1,4,8] [--outstanding 1,4] [--harts 1,2,4]");
+            eprintln!("        [--socs 2,4]  (shard tile-count axis)  [--kib N] [--seq-mesh]");
             eprintln!("        [--jobs N] [--serial] [--json sweep.json|-] [--json-arch arch.json]");
             eprintln!("  explore [same axis options as sweep]");
             eprintln!("        [--frontier-slack 0.15] [--pareto-quantum 0.01] [--error-band 0.25]");
@@ -218,6 +225,31 @@ fn build_grid(args: &Args) -> SweepGrid {
     }) {
         grid.harts = hs;
     }
+    // `--kib N` resizes every shard workload's per-tile payload (a
+    // scalar knob, not an axis — it never changes the scenario count)
+    if let Some(k) = args.get("kib") {
+        let k = k.parse::<u64>().expect("kib").clamp(1, 64) as u32;
+        for wl in &mut grid.workloads {
+            if let Workload::Shard { kib, .. } = wl {
+                *kib = k;
+            }
+        }
+    }
+    // `--socs 2,4` fans every shard workload out across the tile-count
+    // axis (it rides the workload axis: scenario names gain `/socsN`)
+    if let Some(socs) = parse_axis(args, "socs", |s| {
+        s.trim().parse::<usize>().map_err(|e| format!("bad tile count {s:?}: {e}"))
+    }) {
+        let mut wls = Vec::with_capacity(grid.workloads.len() * socs.len());
+        for wl in &grid.workloads {
+            if let Workload::Shard { kib, .. } = *wl {
+                wls.extend(socs.iter().map(|&n| Workload::Shard { kib, socs: n }));
+            } else {
+                wls.push(wl.clone());
+            }
+        }
+        grid.workloads = wls;
+    }
     // `--cycles` is the per-scenario bound for *every* workload: halting
     // workloads get it as their run cap, fixed-window workloads have
     // their measurement window clamped to it. At least 1 cycle — a
@@ -248,7 +280,15 @@ fn worker_threads(args: &Args) -> usize {
 
 fn sweep(args: &Args) {
     let grid = build_grid(args);
-    let scenarios = grid.scenarios();
+    let mut scenarios = grid.scenarios();
+    if args.flag("seq-mesh") {
+        // run-mode knob, not a config axis: names (and therefore the
+        // architectural report) are unchanged, which is exactly what
+        // lets CI diff a --seq-mesh sweep against a parallel one
+        for sc in &mut scenarios {
+            sc.seq_mesh = true;
+        }
+    }
     let n = scenarios.len();
     let threads = worker_threads(args);
     eprintln!("sweep: {n} scenarios on {threads} thread(s)");
@@ -300,6 +340,131 @@ fn sweep(args: &Args) {
         std::fs::write(path, report.to_json_arch()).expect("write architectural JSON report");
         eprintln!("sweep: architectural JSON report written to {path}");
     }
+}
+
+/// `cheshire mesh` — run the SHARD workload on a chiplet mesh and
+/// verify the coordinator's result table against the host-side CRC
+/// reference. The topology is either a star of `--socs` copies of the
+/// loaded config or a `--topology mesh.toml` file (which must still be
+/// tile-0-centered: link *k* connects tile 0 to tile *k+1*, because the
+/// coordinator program dispatches through its windows in that order).
+fn mesh_cmd(args: &Args) {
+    use cheshire::harness::scenario::stage_shard_tile;
+    use cheshire::platform::{DsaKind, DsaSlot};
+    use cheshire::sim::mesh::{Mesh, MeshRun, MeshTopology};
+    use cheshire::workloads::{
+        shard_expected_crcs, shard_expected_merge, SHARD_MAX_TILES, SHARD_RESULT_OFF,
+    };
+    let kib = args.get_u64("kib", 16).clamp(1, 64) as u32;
+    let mut topo = match args.get("topology") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).expect("read topology file");
+            MeshTopology::from_toml(&text).unwrap_or_else(|e| {
+                eprintln!("--topology: {e}");
+                std::process::exit(2);
+            })
+        }
+        None => {
+            let socs = (args.get_u64("socs", 4) as usize).clamp(2, SHARD_MAX_TILES);
+            MeshTopology::star(socs, load_config(args))
+        }
+    };
+    let socs = topo.tiles.len();
+    if !(2..=SHARD_MAX_TILES).contains(&socs) {
+        eprintln!("mesh: the shard workload needs 2..={SHARD_MAX_TILES} tiles (got {socs})");
+        std::process::exit(2);
+    }
+    for (k, l) in topo.links.iter().enumerate() {
+        if !(l.a == 0 && l.b == k + 1) {
+            eprintln!(
+                "mesh: the shard workload needs a tile-0 star (link {k} must be \
+                 a = 0, b = {}; got a = {}, b = {})",
+                k + 1,
+                l.a,
+                l.b
+            );
+            std::process::exit(2);
+        }
+    }
+    for cfg in &mut topo.tiles {
+        if cfg.dsa_slots.is_empty() {
+            cfg.dsa_slots = vec![DsaSlot::local(DsaKind::Crc)];
+        } else if cfg.dsa_slots[0].kind != DsaKind::Crc {
+            eprintln!("mesh: every tile needs the CRC plug-in on slot 0");
+            std::process::exit(2);
+        }
+        cfg.dsa_port_pairs = cfg.dsa_port_pairs.max(cfg.dsa_slots.len());
+    }
+    let mesh = Mesh::new(topo).unwrap_or_else(|e| {
+        eprintln!("mesh: {e}");
+        std::process::exit(2);
+    });
+    let mut opts = MeshRun::new(args.get_u64("cycles", 50_000_000).max(1));
+    opts.parallel = !args.flag("seq-mesh");
+    opts.elide = !args.flag("no-elide");
+    opts.trace = args.get("trace").is_some();
+    opts.capture = Some((SHARD_RESULT_OFF, 64 * (socs + 1)));
+    eprintln!(
+        "mesh: {socs} tiles, epoch {} cycles, {} executor",
+        mesh.epoch_len(),
+        if opts.parallel { "thread-per-tile" } else { "sequential round-robin" }
+    );
+    let t0 = std::time::Instant::now();
+    let res = mesh.run(&opts, &|tile, soc| stage_shard_tile(soc, tile, socs, kib));
+    let host_s = t0.elapsed().as_secs_f64().max(1e-9);
+    for (i, t) in res.tiles.iter().enumerate() {
+        println!(
+            "  t{i}: cycles={} instr={} crc_bytes={} uart={:?}",
+            t.cycles,
+            t.stats.get("cpu.instr"),
+            t.stats.get("dsa.crc_bytes"),
+            t.uart
+        );
+    }
+    println!(
+        "mesh: {} cycles in {host_s:.2} s host ({:.2} Msim-cycles/s aggregate), fingerprint {:016x}",
+        res.cycles,
+        (res.cycles as f64 * socs as f64) / host_s / 1e6,
+        res.fingerprint()
+    );
+    if let Some(path) = args.get("trace") {
+        let mut out = String::from("{\n");
+        for (i, t) in res.tiles.iter().enumerate() {
+            out.push_str(&format!("\"t{i}\": {}", t.trace_json.as_deref().unwrap_or("{}")));
+            out.push_str(if i + 1 == res.tiles.len() { "\n" } else { ",\n" });
+        }
+        out.push('}');
+        std::fs::write(path, out).expect("write trace");
+        println!("trace: per-tile documents written to {path}");
+    }
+    if args.flag("stats") {
+        println!("\n{}", res.merged_stats().report());
+    }
+    // host-side verification: every result slot and the merged word
+    let word = |t: usize| {
+        let s = &res.tiles[0].capture[64 * t..64 * t + 8];
+        u64::from_le_bytes(s.try_into().expect("8-byte slot"))
+    };
+    let expect = shard_expected_crcs(socs, kib);
+    let mut ok = true;
+    for (t, &want) in expect.iter().enumerate() {
+        if word(t) != want {
+            eprintln!("mesh: tile {t} CRC {:#018x} != expected {want:#018x}", word(t));
+            ok = false;
+        }
+    }
+    if word(socs) != shard_expected_merge(socs, kib) {
+        eprintln!(
+            "mesh: merged word {:#018x} != expected {:#018x}",
+            word(socs),
+            shard_expected_merge(socs, kib)
+        );
+        ok = false;
+    }
+    if !ok {
+        std::process::exit(1);
+    }
+    println!("verification OK ({socs} shard CRCs + merge)");
 }
 
 /// `cheshire explore` / `cheshire sweep --explore` — the model-pruned
@@ -388,6 +553,10 @@ fn build_workload(args: &Args, which: &str, cycles: u64) -> Workload {
         },
         "hetero" => Workload::Hetero { kib: args.get_u64("kib", 16) as u32 },
         "smp" => Workload::Smp { kib: args.get_u64("kib", 4) as u32 },
+        "shard" => Workload::Shard {
+            kib: args.get_u64("kib", 16) as u32,
+            socs: args.get_u64("socs", 2) as usize,
+        },
         "contention" => Workload::Contention {
             dma_kib: args.get_u64("dma-kib", 32) as u32,
             tile_n: args.get_u64("tile", 16) as u32,
@@ -421,6 +590,7 @@ fn apply_required_slots(cfg: &mut CheshireConfig, workload: &Workload) {
                 DsaSlot::local(DsaKind::Reduce),
             ]
         }
+        Workload::Shard { .. } => cfg.dsa_slots = vec![DsaSlot::local(DsaKind::Crc)],
         _ => {}
     }
 }
@@ -432,6 +602,34 @@ fn run(args: &Args) {
     let cycles = args.get_u64("cycles", 2_000_000);
     let workload = build_workload(args, which, cycles);
     apply_required_slots(&mut cfg, &workload);
+    if let Workload::Shard { .. } = workload {
+        // multi-SoC workload: run through the mesh container instead of
+        // a bare Soc (`run shard` ≡ `mesh` with scenario-style output)
+        let mut sc = harness::Scenario::new(cfg, workload, cycles.max(1));
+        sc.seq_mesh = args.flag("seq-mesh");
+        let (r, trace_json) = sc.run_with_trace(args.get("trace").is_some());
+        println!("workload={which} cycles={} freq={:.0} MHz", r.cycles, freq / 1e6);
+        println!(
+            "throughput: {:.2} Msim-cycles/s host (all tiles), halted={}",
+            r.cycles as f64 / r.host_seconds / 1e6,
+            r.halted
+        );
+        println!(
+            "power: CORE {:.1} mW  IO {:.1} mW  RAM {:.1} mW  TOTAL {:.1} mW",
+            r.power.core_mw,
+            r.power.io_mw,
+            r.power.ram_mw,
+            r.power.total()
+        );
+        if let Some(path) = args.get("trace") {
+            std::fs::write(path, trace_json.expect("tracing was enabled")).expect("write trace");
+            println!("trace: per-tile documents written to {path}");
+        }
+        if args.flag("stats") {
+            println!("\n{}", r.stats.report());
+        }
+        return;
+    }
     let mut soc = Soc::new(cfg);
     if args.get("trace").is_some() {
         soc.enable_trace();
@@ -487,22 +685,32 @@ fn stats_cmd(args: &Args) {
     let cycles = args.get_u64("cycles", 2_000_000);
     let workload = build_workload(args, which, cycles);
     apply_required_slots(&mut cfg, &workload);
-    let mut soc = Soc::new(cfg);
-    let img = workload.stage(&mut soc);
-    soc.preload(&img, DRAM_BASE);
-    let used = match workload.fixed_window() {
-        Some(window) => {
-            soc.run_cycles(window);
-            window
-        }
-        None => soc.run(cycles),
+    let (stats, used) = if let Workload::Shard { .. } = workload {
+        // multi-SoC workload: counters come from the mesh container
+        // (per-tile `t{n}.` namespaces plus the unprefixed aggregate)
+        let mut sc = harness::Scenario::new(cfg, workload, cycles.max(1));
+        sc.seq_mesh = args.flag("seq-mesh");
+        let r = sc.run();
+        (r.stats, r.cycles)
+    } else {
+        let mut soc = Soc::new(cfg);
+        let img = workload.stage(&mut soc);
+        soc.preload(&img, DRAM_BASE);
+        let used = match workload.fixed_window() {
+            Some(window) => {
+                soc.run_cycles(window);
+                window
+            }
+            None => soc.run(cycles),
+        };
+        (soc.stats.clone(), used)
     };
     let filter = args.get("filter");
     println!("workload={which} cycles={used} — counters by namespace");
     let mut group = "";
     let mut shown = 0usize;
     let mut total = 0usize;
-    for (k, v) in soc.stats.iter() {
+    for (k, v) in stats.iter() {
         total += 1;
         if let Some(pat) = filter {
             if !glob_match(pat, k) {

@@ -138,6 +138,37 @@ pub fn slots_spec(slots: &[DsaSlot]) -> String {
 /// CLINT/PLIC register banks are sized for this at compile time).
 pub const MAX_HARTS: usize = 8;
 
+/// Hard upper bound on inter-tile mesh ports per SoC (the mesh windows
+/// at [`crate::platform::memmap::MESH_BASE`] are sized for this).
+pub const MAX_MESH_PORTS: usize = 4;
+
+/// One inter-tile mesh port: a serialized die-to-die attachment of this
+/// SoC's crossbar to a *peer* SoC in a [`crate::sim::mesh::Mesh`].
+///
+/// Each port owns one crossbar subordinate window (at
+/// `MESH_BASE + port·MESH_WIN_SIZE`, rewritten to `remote_base` on the
+/// peer) and one crossbar manager port for inbound traffic. The mesh
+/// container fills this list from the topology's `[[link]]` entries;
+/// single-SoC configs leave it empty, which keeps the crossbar layout
+/// (and therefore all architectural output) bit-identical to before the
+/// mesh existed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MeshPort {
+    /// Serializing lanes of the inter-tile link (DDR, as
+    /// [`CheshireConfig::d2d_lanes`]).
+    pub lanes: u32,
+    /// Fixed one-way link latency in cycles. The mesh's conservative
+    /// lookahead: parallel epochs run `min` of these across all links.
+    pub latency: u64,
+    /// Peer-side base address that this port's window maps onto (window
+    /// offsets are rewritten to `remote_base + offset` before crossing).
+    pub remote_base: u64,
+    /// `(this tile, peer tile)` indices, used to derive the per-link
+    /// stat/trace namespace (`d2d.t{a}t{b}.*` via
+    /// [`crate::d2d::D2dNames::for_link`]).
+    pub link: (usize, usize),
+}
+
 /// Full platform configuration (one SoC instance).
 #[derive(Debug, Clone, PartialEq)]
 pub struct CheshireConfig {
@@ -228,6 +259,11 @@ pub struct CheshireConfig {
     /// decode-every-step. Batch dispatch additionally requires
     /// `elide_idle` (it reuses the same `Activity` bounds).
     pub uop_cache: bool,
+    /// Inter-tile mesh ports, in window order (empty on single-SoC
+    /// configs — the default, so standalone behavior is untouched).
+    /// Filled by [`crate::sim::mesh::MeshTopology`] from `[[link]]`
+    /// entries; capped at [`MAX_MESH_PORTS`] by the SoC constructor.
+    pub mesh_ports: Vec<MeshPort>,
 }
 
 impl CheshireConfig {
@@ -264,6 +300,7 @@ impl CheshireConfig {
             boot_mode: 0,
             elide_idle: true,
             uop_cache: true,
+            mesh_ports: Vec::new(),
         }
     }
 
@@ -432,15 +469,31 @@ impl Value {
     }
 }
 
-/// Parse the TOML subset: `[section]` headers, `key = value` pairs,
-/// `#` comments, integers (with `_` separators and `0x` prefix), floats,
-/// booleans, double-quoted strings. Keys are returned as `section.key`.
+/// Parse the TOML subset: `[section]` headers, `[[table]]` arrays of
+/// tables, `key = value` pairs, `#` comments, integers (with `_`
+/// separators and `0x` prefix), floats, booleans, double-quoted strings.
+/// Keys are returned as `section.key`; the i-th `[[name]]` occurrence
+/// maps its keys to `name.{i}.key` (so topology files can repeat
+/// `[[tile]]` / `[[link]]` blocks, device-tree style).
 pub fn parse_toml(text: &str) -> Result<HashMap<String, Value>, String> {
     let mut out = HashMap::new();
     let mut section = String::new();
+    let mut table_counts: HashMap<String, usize> = HashMap::new();
     for (ln, raw) in text.lines().enumerate() {
         let line = raw.split('#').next().unwrap_or("").trim();
         if line.is_empty() {
+            continue;
+        }
+        // `[[name]]` must be matched before `[name]` — the single-bracket
+        // pattern would otherwise strip one bracket pair and accept it.
+        if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            let name = name.trim();
+            if name.is_empty() {
+                return Err(format!("line {}: empty [[table]] name", ln + 1));
+            }
+            let n = table_counts.entry(name.to_string()).or_insert(0);
+            section = format!("{name}.{n}");
+            *n += 1;
             continue;
         }
         if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
@@ -623,6 +676,44 @@ mod tests {
         let Value::List(nums) = &kv["dsa.nums"] else { panic!("expected list") };
         assert_eq!(nums[2].as_u64(), Some(16));
         assert!(parse_toml("[s]\nx = [zzz]").is_err());
+    }
+
+    #[test]
+    fn array_of_tables_index_their_sections() {
+        let t = r#"
+            [mesh]
+            tiles = 3
+            [[tile]]
+            slots = "crc"
+            [[link]]            # first link
+            a = 0
+            b = 1
+            [[tile]]
+            harts = 2
+            [[link]]
+            a = 0
+            b = 2
+            latency = 0x80
+        "#;
+        let kv = parse_toml(t).unwrap();
+        assert_eq!(kv["mesh.tiles"], Value::Int(3));
+        assert_eq!(kv["tile.0.slots"].as_str(), Some("crc"));
+        assert_eq!(kv["tile.1.harts"], Value::Int(2));
+        assert_eq!(kv["link.0.b"], Value::Int(1));
+        assert_eq!(kv["link.1.b"], Value::Int(2));
+        assert_eq!(kv["link.1.latency"].as_u64(), Some(128));
+        assert!(!kv.contains_key("link.0.latency"), "per-table keys stay separate");
+        assert!(parse_toml("[[]]\nx = 1").is_err(), "empty table name rejected");
+    }
+
+    #[test]
+    fn mesh_ports_default_empty() {
+        assert!(CheshireConfig::neo().mesh_ports.is_empty(), "standalone SoCs have no mesh ports");
+        assert!(CheshireConfig::from_toml("[platform]\ndata_bytes = 8").unwrap().mesh_ports.is_empty());
+        let p = MeshPort { lanes: 16, latency: 128, remote_base: 0x8000_0000, link: (0, 1) };
+        let mut c = CheshireConfig::neo();
+        c.mesh_ports.push(p);
+        assert_eq!(c.mesh_ports[0], p);
     }
 
     #[test]

@@ -41,6 +41,14 @@ pub const DSA_BASE: u64 = 0x6000_0000;
 /// Size of each DSA subordinate window.
 pub const DSA_WIN_SIZE: u64 = 0x0100_0000;
 
+/// First inter-tile mesh window (one [`MESH_WIN_SIZE`] window per mesh
+/// port, directly above the DSA windows). Accesses here are uncached
+/// single-beat AXI (the range is outside the CPU's cacheable list) and
+/// are forwarded by a [`crate::d2d::MeshEndpoint`] onto a peer tile.
+pub const MESH_BASE: u64 = 0x6800_0000;
+/// Size of each inter-tile mesh window.
+pub const MESH_WIN_SIZE: u64 = 0x0100_0000;
+
 /// LLC scratchpad (SPM) window base.
 pub const SPM_BASE: u64 = 0x7000_0000;
 
@@ -59,6 +67,7 @@ mod tests {
             (SOC_CTRL_BASE, 9 * PERIPH_WIN_SIZE),
             (PLIC_BASE, PLIC_SIZE),
             (DSA_BASE, 8 * DSA_WIN_SIZE),
+            (MESH_BASE, 4 * MESH_WIN_SIZE),
             (SPM_BASE, 128 * 1024),
             (DRAM_BASE, 32 * 1024 * 1024),
         ];

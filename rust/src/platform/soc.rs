@@ -11,7 +11,7 @@ use crate::axi::regbus::{Axi2Reg, RegDemux, RegDevice, RegMapEntry};
 use crate::axi::xbar::{AddrRange, Xbar, XbarCfg};
 use crate::cache::llc::{Llc, LlcCfg, LlcRegs, WayMask};
 use crate::cpu::{Cva6, Cva6Cfg};
-use crate::d2d::D2dLink;
+use crate::d2d::{D2dLink, D2dNames, D2dPacket, MeshEndpoint};
 use crate::dma::{DmaEngine, DmaRegs, SharedDma};
 use crate::dsa::{crc::CrcEngine, matmul::MatmulDsa, reduce::ReduceEngine, traffic::TrafficGen, DsaPlugin};
 use crate::hyperram::HyperRam;
@@ -20,11 +20,11 @@ use crate::periph::soc_ctrl::SocCtrl;
 use crate::periph::uart::Uart;
 use crate::periph::vga::{Vga, VgaScanout};
 use crate::periph::{build_bootrom, Gpio, I2cEeprom, SpiHost};
-use crate::platform::config::{CheshireConfig, DsaKind, MemBackend, MAX_HARTS};
+use crate::platform::config::{CheshireConfig, DsaKind, MemBackend, MAX_HARTS, MAX_MESH_PORTS};
 use crate::platform::memmap::*;
 use crate::rpc::manager::ManagerRegs;
 use crate::rpc::RpcSubsystem;
-use crate::sim::trace::{pid, DEFAULT_TRACE_CAPACITY};
+use crate::sim::trace::{pid, DEFAULT_TRACE_CAPACITY, MESH_TID_BASE};
 use crate::sim::{Activity, Clock, Component, Cycle, Stats, Tracer};
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -128,6 +128,12 @@ pub struct Soc {
     dsa_sub_bus: Vec<AxiBus>,
     /// `Some` for slots attached through the die-to-die link.
     d2d: Vec<Option<RemoteSlot>>,
+    /// Inter-tile mesh endpoints, one per `cfg.mesh_ports` entry (empty
+    /// on standalone SoCs). Each owns a window subordinate bus and a
+    /// manager port; the mesh container drains/fills them at barriers.
+    mesh_ep: Vec<MeshEndpoint>,
+    mesh_sub_bus: Vec<AxiBus>,
+    mesh_mgr_bus: Vec<AxiBus>,
 
     // fabric
     xbar: Xbar,
@@ -218,12 +224,50 @@ impl Soc {
                 sub: 3 + i,
             });
         }
+        // inter-tile mesh windows, one subordinate + one manager port per
+        // configured mesh port (standalone SoCs configure none, so their
+        // crossbar layout — and arbitration — is untouched)
+        assert!(
+            cfg.mesh_ports.len() <= MAX_MESH_PORTS,
+            "{} mesh ports configured but the window map fits {MAX_MESH_PORTS}",
+            cfg.mesh_ports.len()
+        );
+        let n_mesh = cfg.mesh_ports.len();
+        let mesh_sub_bus: Vec<AxiBus> = (0..n_mesh).map(|_| axi_bus(4)).collect();
+        let mesh_mgr_bus: Vec<AxiBus> = (0..n_mesh).map(|_| axi_bus(4)).collect();
+        for j in 0..n_mesh {
+            map.push(AddrRange {
+                base: MESH_BASE + (j as u64) * MESH_WIN_SIZE,
+                size: MESH_WIN_SIZE,
+                sub: 3 + cfg.dsa_port_pairs + j,
+            });
+        }
+        let mesh_ep: Vec<MeshEndpoint> = cfg
+            .mesh_ports
+            .iter()
+            .enumerate()
+            .map(|(j, p)| {
+                let (a, b) = p.link;
+                MeshEndpoint::new(
+                    mesh_sub_bus[j].clone(),
+                    mesh_mgr_bus[j].clone(),
+                    MESH_BASE + (j as u64) * MESH_WIN_SIZE,
+                    p.remote_base,
+                    p.lanes,
+                    p.latency,
+                    // both endpoints of a pair share one canonical name
+                    D2dNames::for_link(a.min(b), a.max(b)),
+                )
+            })
+            .collect();
 
         let mut mgr_ports = vec![cpu_bus.clone(), dma_bus.clone(), vga_bus.clone(), dbg_bus.clone()];
         mgr_ports.extend(dsa_mgr_bus.iter().cloned());
         mgr_ports.extend(extra_cpu_buses.iter().cloned());
+        mgr_ports.extend(mesh_mgr_bus.iter().cloned());
         let mut sub_ports = vec![llc_sub_bus.clone(), bootrom_bus.clone(), bridge_bus.clone()];
         sub_ports.extend(dsa_sub_bus.iter().cloned());
+        sub_ports.extend(mesh_sub_bus.iter().cloned());
 
         let xbar = Xbar::new(
             XbarCfg {
@@ -386,6 +430,9 @@ impl Soc {
             dsa_mgr_bus,
             dsa_sub_bus,
             d2d,
+            mesh_ep,
+            mesh_sub_bus,
+            mesh_mgr_bus,
             xbar,
             llc,
             llc_mask,
@@ -437,6 +484,11 @@ impl Soc {
                 r.sub_link.set_tracer(2 * i as u32, &tracer);
                 r.mgr_link.set_tracer(2 * i as u32 + 1, &tracer);
             }
+        }
+        // mesh links get their own D2D-row thread band, clear of the
+        // 2-per-slot `@d2d` pairs above
+        for (j, ep) in self.mesh_ep.iter_mut().enumerate() {
+            ep.set_tracer(MESH_TID_BASE + j as u32, &tracer);
         }
         self.tracer = tracer;
     }
@@ -571,6 +623,11 @@ impl Soc {
                 }
             }
         }
+        // mesh endpoints: adopt outbound window beats, deliver due inbound
+        // beats (the xbar tick below then routes the injected requests)
+        for ep in &mut self.mesh_ep {
+            ep.tick(now, stats);
+        }
 
         // fabric
         self.xbar.tick(now, stats);
@@ -647,6 +704,8 @@ impl Soc {
             && self.dsa_mgr_bus.iter().all(|b| b.is_idle())
             && self.dsa_sub_bus.iter().all(|b| b.is_idle())
             && self.d2d.iter().flatten().all(|r| r.is_idle())
+            && self.mesh_sub_bus.iter().all(|b| b.is_idle())
+            && self.mesh_mgr_bus.iter().all(|b| b.is_idle())
     }
 
     /// Fold every component's [`Activity`] report (and the bus-idle check)
@@ -711,6 +770,11 @@ impl Soc {
         for d in self.dsa.iter().flatten() {
             combined = combined.combine(d.activity(now));
         }
+        // due or future-stamped inbound mesh beats pin/deadline the tile;
+        // outbound queues are barrier-drained and need no ticks
+        for ep in &self.mesh_ep {
+            combined = combined.combine(ep.activity(now));
+        }
         combined
     }
 
@@ -742,8 +806,9 @@ impl Soc {
     /// per-component bookkeeping (`mcycle`, CLINT `mtime`, peripheral
     /// countdowns, VGA pixel debt, `cpu.wfi_cycles`) and jump. Only the
     /// `sched.*` counters distinguish an elided run from the reference
-    /// loop.
-    fn skip_cycles(&mut self, n: u64) {
+    /// loop. Crate-visible so the mesh container can apply a mesh-wide
+    /// jump (which it may only do after proving *every* tile idle).
+    pub(crate) fn skip_cycles(&mut self, n: u64) {
         let start = self.clock.now();
         self.cpu.skip(n, &mut self.stats);
         for hart in &mut self.extra_harts {
@@ -941,6 +1006,28 @@ impl Soc {
         while self.clock.now() < end {
             self.advance(end);
         }
+    }
+
+    /// Number of inter-tile mesh ports this SoC was built with.
+    pub fn mesh_port_count(&self) -> usize {
+        self.mesh_ep.len()
+    }
+
+    /// Epoch-barrier drain: every outbound beat parked on mesh port
+    /// `port`, stamped with its peer-side delivery cycle.
+    pub(crate) fn mesh_drain(&mut self, port: usize) -> D2dPacket {
+        self.mesh_ep[port].drain_tx()
+    }
+
+    /// Epoch-barrier fill: beats drained from the peer tile's matching
+    /// port (stamps share the mesh-wide timebase).
+    pub(crate) fn mesh_accept(&mut self, port: usize, pkt: D2dPacket) {
+        self.mesh_ep[port].accept(pkt);
+    }
+
+    /// Whether every mesh port's inbound queue has fully delivered.
+    pub(crate) fn mesh_rx_empty(&self) -> bool {
+        self.mesh_ep.iter().all(|e| e.rx_is_empty())
     }
 
     /// Direct SPM staging (debug-module path).

@@ -1,0 +1,861 @@
+//! Multi-SoC chiplet-mesh container with conservative-lookahead
+//! parallel execution.
+//!
+//! A [`Mesh`] instantiates N independent [`Soc`] tiles from a
+//! device-tree-like topology ([`MeshTopology`]: `[[tile]]` configs plus
+//! `[[link]]` die-to-die attachments) and cross-wires each link's two
+//! [`crate::d2d::MeshEndpoint`]s so a store into a tile's mesh window
+//! (at [`crate::platform::memmap::MESH_BASE`]) lands in the peer tile's
+//! address space after the link's serialization + flight latency.
+//!
+//! # Conservative lookahead
+//!
+//! Every link has a fixed one-way latency `L ≥ 1`; the mesh's *epoch
+//! length* is the minimum `L` over all links. Within one epoch
+//! `[T, T+E)` each tile simulates completely independently: a beat a
+//! tile's endpoint adopts at cycle `c ∈ [T, T+E)` is stamped for
+//! delivery at `c + serialization + L ≥ T + E`, i.e. never inside the
+//! epoch that produced it. Exchanging the accumulated beat queues only
+//! at epoch barriers is therefore *exact*, not approximate — the
+//! parallel schedule is bit-identical to the sequential round-robin
+//! reference, which runs the very same per-tile code with the very same
+//! barriers on one thread.
+//!
+//! # Mesh-wide event-horizon elision
+//!
+//! When every tile reports an idle [`Activity`] at a barrier, the mesh
+//! fast-forwards all tiles at once ([`crate::platform::Soc`]'s
+//! `skip_cycles`). The jump target is rounded **down to the epoch
+//! grid** (`k·E`, anchored at cycle 0): a mid-grid skip would shift all
+//! later barriers, and barrier times feed the halt-detection/stop logic
+//! — so an unaligned jump could change the final cycle count between
+//! the elided and unelided modes. On the grid, the elided barrier
+//! sequence is a subset of the unelided one and the first all-halted
+//! barrier (hence the stop cycle) is identical in both. Idle spans
+//! *inside* an epoch are already elided per tile by
+//! [`crate::platform::config::CheshireConfig::elide_idle`].
+//!
+//! # Halt detection and drain
+//!
+//! A tile is done when its hart 0 executes `ebreak` (the halted hart is
+//! clock gated, see `Cva6::tick`). Once every tile is halted at a
+//! barrier, the mesh runs [`MESH_DRAIN`] further cycles so in-flight
+//! link beats land, then stops. All four modes ({parallel, sequential}
+//! × {elide on, off}) observe the same all-halted barrier and thus stop
+//! at the same cycle with bit-identical architectural output.
+
+use std::sync::{Barrier, Mutex};
+
+use crate::d2d::D2dPacket;
+use crate::platform::config::{parse_slots, parse_toml, CheshireConfig, DsaSlot, MemBackend, MeshPort, Value, MAX_HARTS, MAX_MESH_PORTS};
+use crate::platform::memmap::DRAM_BASE;
+use crate::platform::Soc;
+use crate::sim::stats::{intern, Stats};
+use crate::sim::Activity;
+
+/// Post-halt drain window in cycles: once every tile has halted, the
+/// mesh keeps ticking this much longer so in-flight link beats land.
+/// Halted harts are clock gated, so the drain is architecturally inert
+/// on an idle platform.
+pub const MESH_DRAIN: u64 = 4096;
+
+/// Default serializing lanes for a mesh link (matches
+/// [`CheshireConfig::d2d_lanes`]).
+pub const DEFAULT_MESH_LANES: u32 = 16;
+
+/// Default one-way mesh-link latency in cycles. Deliberately much
+/// larger than the on-package `d2d_latency` (chiplet SerDes vs. on-die
+/// pads) — and, since the latency is also the parallel lookahead, large
+/// enough to amortize the per-epoch barrier cost.
+pub const DEFAULT_MESH_LATENCY: u64 = 128;
+
+/// One die-to-die link between tiles `a` and `b` of a [`MeshTopology`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MeshLink {
+    /// First endpoint tile index.
+    pub a: usize,
+    /// Second endpoint tile index.
+    pub b: usize,
+    /// Serializing lanes (DDR), as [`CheshireConfig::d2d_lanes`].
+    pub lanes: u32,
+    /// One-way flight latency in cycles (`≥ 1`; it is also the
+    /// conservative lookahead this link grants the parallel executor).
+    pub latency: u64,
+    /// Base address *on tile `a`* that tile `b`'s window maps onto.
+    pub a_base: u64,
+    /// Base address *on tile `b`* that tile `a`'s window maps onto.
+    pub b_base: u64,
+}
+
+impl MeshLink {
+    /// A link between `a` and `b` with default lanes/latency and both
+    /// windows mapping the peer's DRAM.
+    pub fn between(a: usize, b: usize) -> Self {
+        Self { a, b, lanes: DEFAULT_MESH_LANES, latency: DEFAULT_MESH_LATENCY, a_base: DRAM_BASE, b_base: DRAM_BASE }
+    }
+}
+
+/// A mesh topology: per-tile platform configs plus the links joining
+/// them. Build one programmatically, via [`MeshTopology::star`], or
+/// from a TOML file via [`MeshTopology::from_toml`].
+#[derive(Debug, Clone)]
+pub struct MeshTopology {
+    /// Per-tile platform configuration (any `mesh_ports` already present
+    /// are ignored; [`Mesh::new`] owns the wiring).
+    pub tiles: Vec<CheshireConfig>,
+    /// Die-to-die links.
+    pub links: Vec<MeshLink>,
+}
+
+impl MeshTopology {
+    /// A star of `n` tiles around tile 0 (the coordinator): links
+    /// `(0,1) … (0,n-1)` in order, default link parameters, every tile
+    /// running a copy of `base`.
+    pub fn star(n: usize, base: CheshireConfig) -> Self {
+        Self { tiles: vec![base; n], links: (1..n).map(|i| MeshLink::between(0, i)).collect() }
+    }
+
+    /// Parse a topology from the TOML subset (see `configs/mesh4.toml`):
+    ///
+    /// ```toml
+    /// [mesh]
+    /// tiles = 4            # optional when [[tile]] entries are present
+    ///
+    /// [[tile]]             # tile 0; omitted tiles default to neo()
+    /// slots = "crc"
+    /// harts = 1
+    /// mshrs = 4
+    /// backend = "rpc"
+    ///
+    /// [[link]]
+    /// a = 0
+    /// b = 1
+    /// latency = 128        # cycles, also the lookahead bound
+    /// lanes = 16
+    /// ```
+    ///
+    /// Tile keys are a curated subset of [`CheshireConfig::from_toml`]:
+    /// `slots`, `harts`, `mshrs`, `backend`, `elide`. Link keys:
+    /// required `a`/`b`, optional `lanes`, `latency`, `a_base`,
+    /// `b_base`.
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        let kv = parse_toml(text)?;
+        let mut n_tiles = kv.get("mesh.tiles").and_then(|v| v.as_u64()).unwrap_or(0) as usize;
+        let mut n_links = 0usize;
+        for key in kv.keys() {
+            if let Some(i) = indexed(key, "tile.") {
+                n_tiles = n_tiles.max(i + 1);
+            }
+            if let Some(k) = indexed(key, "link.") {
+                n_links = n_links.max(k + 1);
+            }
+        }
+        if n_tiles == 0 {
+            return Err("mesh topology: no tiles (set `mesh.tiles` or add [[tile]] entries)".into());
+        }
+        let mut tiles = Vec::with_capacity(n_tiles);
+        for i in 0..n_tiles {
+            let mut cfg = CheshireConfig::neo();
+            let pre = format!("tile.{i}.");
+            if let Some(v) = kv.get(&format!("{pre}harts")).and_then(|v| v.as_u64()) {
+                cfg.harts = (v as usize).clamp(1, MAX_HARTS);
+            }
+            if let Some(v) = kv.get(&format!("{pre}mshrs")).and_then(|v| v.as_u64()) {
+                cfg.llc_mshrs = (v as usize).max(1);
+            }
+            if let Some(v) = kv.get(&format!("{pre}backend")).and_then(|v| v.as_str()) {
+                cfg.backend = MemBackend::parse(v)?;
+            }
+            if let Some(v) = kv.get(&format!("{pre}elide")).and_then(|v| v.as_bool()) {
+                cfg.elide_idle = v;
+            }
+            match kv.get(&format!("{pre}slots")) {
+                Some(Value::List(items)) => {
+                    let mut slots = Vec::with_capacity(items.len());
+                    for item in items {
+                        let s = item.as_str().ok_or_else(|| format!("tile {i} slots: expected string entries, got {item:?}"))?;
+                        slots.push(DsaSlot::parse(s)?);
+                    }
+                    cfg.dsa_slots = slots;
+                }
+                Some(Value::Str(s)) => cfg.dsa_slots = parse_slots(s)?,
+                Some(other) => return Err(format!("tile {i} slots: expected a string list, got {other:?}")),
+                None => {}
+            }
+            tiles.push(cfg);
+        }
+        let mut links = Vec::with_capacity(n_links);
+        for k in 0..n_links {
+            let pre = format!("link.{k}.");
+            let need = |key: &str| kv.get(&format!("{pre}{key}")).and_then(|v| v.as_u64()).ok_or_else(|| format!("link {k}: missing `{key}`"));
+            let mut l = MeshLink::between(need("a")? as usize, need("b")? as usize);
+            if let Some(v) = kv.get(&format!("{pre}lanes")).and_then(|v| v.as_u64()) {
+                l.lanes = v as u32;
+            }
+            if let Some(v) = kv.get(&format!("{pre}latency")).and_then(|v| v.as_u64()) {
+                l.latency = v;
+            }
+            if let Some(v) = kv.get(&format!("{pre}a_base")).and_then(|v| v.as_u64()) {
+                l.a_base = v;
+            }
+            if let Some(v) = kv.get(&format!("{pre}b_base")).and_then(|v| v.as_u64()) {
+                l.b_base = v;
+            }
+            links.push(l);
+        }
+        Ok(Self { tiles, links })
+    }
+}
+
+/// `key` = `"{prefix}{index}.…"` → `Some(index)`.
+fn indexed(key: &str, prefix: &str) -> Option<usize> {
+    key.strip_prefix(prefix)?.split('.').next()?.parse().ok()
+}
+
+/// One tile-side attachment of a link: which global exchange slot this
+/// port transmits into / receives from, and the peer tile index.
+#[derive(Debug, Clone, Copy)]
+struct PortSlots {
+    /// Exchange-slot index this port's drained TX packets go to.
+    tx: usize,
+    /// Exchange-slot index this port accepts RX packets from.
+    rx: usize,
+    /// Peer tile index (for outbound deadline attribution).
+    peer: usize,
+}
+
+/// Execution options for one [`Mesh::run`].
+#[derive(Debug, Clone)]
+pub struct MeshRun {
+    /// Upper bound on simulated cycles (the run usually ends earlier, at
+    /// the all-halted barrier plus [`MESH_DRAIN`]).
+    pub max_cycles: u64,
+    /// Thread-per-tile conservative-lookahead execution; `false` selects
+    /// the sequential round-robin reference (`--seq-mesh`). Both produce
+    /// bit-identical output.
+    pub parallel: bool,
+    /// Mesh-wide event-horizon elision at epoch barriers (grid-aligned;
+    /// see the module docs). Architecturally invisible.
+    pub elide: bool,
+    /// Attach a per-tile [`crate::sim::Tracer`] and return each tile's
+    /// Perfetto JSON in [`TileResult::trace_json`].
+    pub trace: bool,
+    /// `(dram_offset, len)` window to copy out of every tile's DRAM
+    /// after the run ([`TileResult::capture`]).
+    pub capture: Option<(u64, usize)>,
+}
+
+impl MeshRun {
+    /// Defaults: parallel, elided, untraced, no capture.
+    pub fn new(max_cycles: u64) -> Self {
+        Self { max_cycles, parallel: true, elide: true, trace: false, capture: None }
+    }
+}
+
+/// What one tile reports at an epoch barrier (crosses threads, so only
+/// plain data).
+#[derive(Debug, Clone)]
+struct TileReport {
+    /// Hart 0 executed `ebreak`.
+    halted: bool,
+    /// The tile's combined [`Activity`] at the barrier, *before* this
+    /// barrier's inbound packets were accepted (their effect is covered
+    /// by the senders' `outbound` entries instead).
+    activity: Activity,
+    /// `(peer tile, earliest delivery stamp)` for every non-empty packet
+    /// this tile drained at the barrier.
+    outbound: Vec<(usize, u64)>,
+}
+
+/// The barrier decision — computed identically (it is a pure function
+/// of barrier-shared data) by every tile executor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Decision {
+    /// Run the next epoch normally.
+    Continue,
+    /// All tiles idle: fast-forward everyone by this many cycles.
+    Skip(u64),
+    /// Bound reached (all-halted barrier + drain, or `max_cycles`).
+    Stop,
+}
+
+/// Architectural output of one tile after a mesh run.
+#[derive(Debug, Clone)]
+pub struct TileResult {
+    /// Everything the tile's UART transmitted.
+    pub uart: String,
+    /// The tile's final cycle (identical on every tile — all clocks
+    /// stay in lockstep across barriers).
+    pub cycles: u64,
+    /// The tile's full stats registry (unprefixed; see
+    /// [`MeshResult::merged_stats`]).
+    pub stats: Stats,
+    /// Bytes copied from the tile's DRAM per [`MeshRun::capture`].
+    pub capture: Vec<u8>,
+    /// The tile's Perfetto trace (its own JSON document — tiles never
+    /// share a tracer, so process IDs cannot collide across tiles).
+    pub trace_json: Option<String>,
+}
+
+/// Output of one [`Mesh::run`].
+#[derive(Debug, Clone)]
+pub struct MeshResult {
+    /// Final mesh cycle (the stop barrier).
+    pub cycles: u64,
+    /// Per-tile results, in tile order.
+    pub tiles: Vec<TileResult>,
+}
+
+impl MeshResult {
+    /// Merge per-tile stats into one registry. Multi-tile meshes prefix
+    /// every key with `t{i}.` (two tiles can therefore never collide);
+    /// a single-tile mesh merges unprefixed, keeping its output
+    /// key-for-key comparable with a plain [`Soc`] run.
+    pub fn merged_stats(&self) -> Stats {
+        let mut out = Stats::new();
+        if self.tiles.len() == 1 {
+            out.merge(&self.tiles[0].stats);
+            return out;
+        }
+        for (i, t) in self.tiles.iter().enumerate() {
+            for (k, v) in t.stats.iter() {
+                out.add(intern(&format!("t{i}.{k}")), v);
+            }
+        }
+        out
+    }
+
+    /// FNV-1a fingerprint of the full architectural output: final
+    /// cycle, plus every tile's UART stream, capture window, and stats
+    /// — excluding `sched.*`/`uop.*`, which describe *how* the
+    /// simulator got there (elision spans, batch shapes), not what the
+    /// modeled hardware did. Bit-identical across {parallel,
+    /// sequential} × {elide on, off}.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        eat(&self.cycles.to_le_bytes());
+        for t in &self.tiles {
+            eat(t.uart.as_bytes());
+            eat(&[0xff]);
+            eat(&t.capture);
+            eat(&t.cycles.to_le_bytes());
+            for (k, v) in t.stats.iter() {
+                if k.starts_with("sched.") || k.starts_with("uop.") {
+                    continue;
+                }
+                eat(k.as_bytes());
+                eat(&v.to_le_bytes());
+            }
+        }
+        h
+    }
+}
+
+/// The multi-SoC container: wired per-tile configs plus the epoch
+/// machinery. Construction validates the topology; [`Mesh::run`]
+/// instantiates the tiles (each run builds fresh SoCs, so one `Mesh`
+/// can be run repeatedly and in different modes).
+#[derive(Debug, Clone)]
+pub struct Mesh {
+    /// Per-tile configs with `mesh_ports` filled in link order.
+    tiles: Vec<CheshireConfig>,
+    /// Per-tile port wiring (same order as `mesh_ports`).
+    wiring: Vec<Vec<PortSlots>>,
+    /// Epoch length = min link latency (the conservative lookahead).
+    epoch_len: u64,
+    /// Number of packet exchange slots (two per link).
+    n_slots: usize,
+}
+
+impl Mesh {
+    /// Wire a topology into a runnable mesh. Errors on out-of-range or
+    /// self-referential links, zero latency (which admits no lookahead),
+    /// and tiles with more than [`MAX_MESH_PORTS`] attachments.
+    pub fn new(t: MeshTopology) -> Result<Self, String> {
+        let n = t.tiles.len();
+        if n == 0 {
+            return Err("mesh: at least one tile required".into());
+        }
+        let mut tiles = t.tiles;
+        for cfg in &mut tiles {
+            cfg.mesh_ports.clear();
+        }
+        let mut wiring: Vec<Vec<PortSlots>> = vec![Vec::new(); n];
+        let mut min_lat = u64::MAX;
+        for (k, l) in t.links.iter().enumerate() {
+            if l.a >= n || l.b >= n {
+                return Err(format!("link {k}: tile index out of range (a={}, b={}, tiles={n})", l.a, l.b));
+            }
+            if l.a == l.b {
+                return Err(format!("link {k}: self-link on tile {}", l.a));
+            }
+            if l.latency == 0 {
+                return Err(format!("link {k}: latency must be >= 1 (zero-latency links admit no lookahead)"));
+            }
+            let lanes = l.lanes.max(1);
+            tiles[l.a].mesh_ports.push(MeshPort { lanes, latency: l.latency, remote_base: l.b_base, link: (l.a, l.b) });
+            tiles[l.b].mesh_ports.push(MeshPort { lanes, latency: l.latency, remote_base: l.a_base, link: (l.b, l.a) });
+            wiring[l.a].push(PortSlots { tx: 2 * k, rx: 2 * k + 1, peer: l.b });
+            wiring[l.b].push(PortSlots { tx: 2 * k + 1, rx: 2 * k, peer: l.a });
+            min_lat = min_lat.min(l.latency);
+        }
+        for (i, w) in wiring.iter().enumerate() {
+            if w.len() > MAX_MESH_PORTS {
+                return Err(format!("tile {i}: {} mesh ports but the window map fits {MAX_MESH_PORTS}", w.len()));
+            }
+        }
+        let epoch_len = if min_lat == u64::MAX { MESH_DRAIN } else { min_lat }.max(1);
+        Ok(Self { tiles, wiring, epoch_len, n_slots: 2 * t.links.len() })
+    }
+
+    /// Number of tiles.
+    pub fn tile_count(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// The epoch length (= conservative lookahead) in cycles.
+    pub fn epoch_len(&self) -> u64 {
+        self.epoch_len
+    }
+
+    /// The wired config of tile `i` (what its `Soc` will be built from).
+    pub fn tile_config(&self, i: usize) -> &CheshireConfig {
+        &self.tiles[i]
+    }
+
+    /// Run the mesh. `stage` is called once per tile on its freshly
+    /// constructed [`Soc`] (after trace attachment) to preload programs
+    /// and data; under `opts.parallel` it runs concurrently for
+    /// different tiles, hence `Sync`.
+    pub fn run(&self, opts: &MeshRun, stage: &(dyn Fn(usize, &mut Soc) + Sync)) -> MeshResult {
+        if opts.parallel {
+            self.run_parallel(opts, stage)
+        } else {
+            self.run_sequential(opts, stage)
+        }
+    }
+
+    /// Build tile `i`'s SoC: construct, attach tracer, stage.
+    fn build_tile(&self, i: usize, opts: &MeshRun, stage: &(dyn Fn(usize, &mut Soc) + Sync)) -> Soc {
+        let mut soc = Soc::new(self.tiles[i].clone());
+        if opts.trace {
+            soc.enable_trace();
+        }
+        stage(i, &mut soc);
+        soc
+    }
+
+    /// Sequential round-robin reference: one thread, same epochs, same
+    /// barrier points, same decisions — the bit-identity oracle for the
+    /// parallel executor.
+    fn run_sequential(&self, opts: &MeshRun, stage: &(dyn Fn(usize, &mut Soc) + Sync)) -> MeshResult {
+        let n = self.tiles.len();
+        let mut socs: Vec<Soc> = (0..n).map(|i| self.build_tile(i, opts, stage)).collect();
+        let end = opts.max_cycles;
+        let mut now = 0u64;
+        let mut stop_at: Option<u64> = None;
+        loop {
+            let bound = stop_at.map_or(end, |s| s.min(end));
+            let epoch_end = now.saturating_add(self.epoch_len).min(bound);
+            for soc in &mut socs {
+                tile_compute(soc, epoch_end);
+            }
+            now = epoch_end;
+            let mut slots: Vec<Option<D2dPacket>> = (0..self.n_slots).map(|_| None).collect();
+            let mut reports = Vec::with_capacity(n);
+            for (i, soc) in socs.iter_mut().enumerate() {
+                let (pkts, rep) = tile_drain(soc, &self.wiring[i]);
+                for (slot, pkt) in pkts {
+                    slots[slot] = Some(pkt);
+                }
+                reports.push(rep);
+            }
+            for (i, soc) in socs.iter_mut().enumerate() {
+                for (j, w) in self.wiring[i].iter().enumerate() {
+                    if let Some(pkt) = slots[w.rx].take() {
+                        soc.mesh_accept(j, pkt);
+                    }
+                }
+            }
+            match decide(now, end, self.epoch_len, opts.elide, &mut stop_at, &reports) {
+                Decision::Stop => break,
+                Decision::Skip(k) => {
+                    for soc in &mut socs {
+                        soc.skip_cycles(k);
+                    }
+                    now += k;
+                }
+                Decision::Continue => {}
+            }
+        }
+        MeshResult { cycles: now, tiles: socs.into_iter().map(|s| tile_finish(s, opts)).collect() }
+    }
+
+    /// Thread-per-tile conservative-lookahead executor. `Soc` is not
+    /// `Send` (it is a web of `Rc`/`RefCell`), so each thread builds and
+    /// owns its own tile; only plain data ([`D2dPacket`]s, reports,
+    /// results) crosses threads, through mutex slots synchronized by two
+    /// barriers per epoch:
+    ///
+    /// 1. each thread finishes its epoch, drains TX packets into the
+    ///    exchange slots and publishes its [`TileReport`], then waits at
+    ///    barrier A;
+    /// 2. between the barriers every thread reads *all* reports, takes
+    ///    the packets addressed to it, and computes the (identical)
+    ///    barrier [`Decision`];
+    /// 3. barrier B keeps any thread from overwriting slots or reports
+    ///    for the *next* epoch while a peer is still reading this one's.
+    fn run_parallel(&self, opts: &MeshRun, stage: &(dyn Fn(usize, &mut Soc) + Sync)) -> MeshResult {
+        let n = self.tiles.len();
+        let slots: Vec<Mutex<Option<D2dPacket>>> = (0..self.n_slots).map(|_| Mutex::new(None)).collect();
+        let reports: Vec<Mutex<Option<TileReport>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let results: Vec<Mutex<Option<TileResult>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let barrier_a = Barrier::new(n);
+        let barrier_b = Barrier::new(n);
+        std::thread::scope(|scope| {
+            for i in 0..n {
+                let (slots, reports, results) = (&slots, &reports, &results);
+                let (barrier_a, barrier_b) = (&barrier_a, &barrier_b);
+                scope.spawn(move || {
+                    let mut soc = self.build_tile(i, opts, stage);
+                    let end = opts.max_cycles;
+                    let mut now = 0u64;
+                    let mut stop_at: Option<u64> = None;
+                    loop {
+                        let bound = stop_at.map_or(end, |s| s.min(end));
+                        let epoch_end = now.saturating_add(self.epoch_len).min(bound);
+                        tile_compute(&mut soc, epoch_end);
+                        now = epoch_end;
+                        let (pkts, rep) = tile_drain(&mut soc, &self.wiring[i]);
+                        for (slot, pkt) in pkts {
+                            *slots[slot].lock().unwrap() = Some(pkt);
+                        }
+                        *reports[i].lock().unwrap() = Some(rep);
+                        barrier_a.wait();
+                        let all: Vec<TileReport> = reports.iter().map(|m| m.lock().unwrap().clone().expect("every tile reports each epoch")).collect();
+                        for (j, w) in self.wiring[i].iter().enumerate() {
+                            if let Some(pkt) = slots[w.rx].lock().unwrap().take() {
+                                soc.mesh_accept(j, pkt);
+                            }
+                        }
+                        let d = decide(now, end, self.epoch_len, opts.elide, &mut stop_at, &all);
+                        barrier_b.wait();
+                        match d {
+                            Decision::Stop => break,
+                            Decision::Skip(k) => {
+                                soc.skip_cycles(k);
+                                now += k;
+                            }
+                            Decision::Continue => {}
+                        }
+                    }
+                    *results[i].lock().unwrap() = Some(tile_finish(soc, opts));
+                });
+            }
+        });
+        let tiles: Vec<TileResult> = results.iter().map(|m| m.lock().unwrap().take().expect("tile thread finished")).collect();
+        let cycles = tiles.first().map_or(0, |t| t.cycles);
+        MeshResult { cycles, tiles }
+    }
+}
+
+/// Advance one tile to the epoch boundary. `Soc::advance` never
+/// overshoots its limit and always makes progress below it, so this
+/// terminates with the tile's clock exactly at `epoch_end`.
+fn tile_compute(soc: &mut Soc, epoch_end: u64) {
+    while soc.clock.now() < epoch_end {
+        if soc.advance(epoch_end) == 0 {
+            break;
+        }
+    }
+}
+
+/// Barrier bookkeeping for one tile: drain every port's TX queue
+/// (before polling activity — drained beats must not count as local
+/// work) and snapshot the tile's report.
+fn tile_drain(soc: &mut Soc, wiring: &[PortSlots]) -> (Vec<(usize, D2dPacket)>, TileReport) {
+    let mut pkts = Vec::new();
+    let mut outbound = Vec::new();
+    for (j, w) in wiring.iter().enumerate() {
+        let pkt = soc.mesh_drain(j);
+        if let Some(stamp) = pkt.min_stamp() {
+            outbound.push((w.peer, stamp));
+        }
+        if !pkt.is_empty() {
+            pkts.push((w.tx, pkt));
+        }
+    }
+    let rep = TileReport { halted: soc.cpu.halted, activity: soc.poll_activity(), outbound };
+    (pkts, rep)
+}
+
+/// Extract a tile's architectural output and drop the SoC.
+fn tile_finish(soc: Soc, opts: &MeshRun) -> TileResult {
+    let trace_json = opts.trace.then(|| soc.tracer.export_json(soc.clock.freq_hz));
+    let capture = match opts.capture {
+        Some((off, len)) => soc.dram_read(off as usize, len).to_vec(),
+        None => Vec::new(),
+    };
+    TileResult { uart: soc.uart.borrow().tx_string(), cycles: soc.clock.now(), stats: soc.stats.clone(), capture, trace_json }
+}
+
+/// The barrier decision: a pure function of barrier-shared data, so the
+/// parallel executor computes it redundantly per thread with an
+/// identical result (no coordinator, no extra synchronization).
+///
+/// Sets `stop_at` at the first all-halted barrier. With `elide` on and
+/// every tile idle, picks a skip target: the earliest per-tile deadline
+/// — each tile's own `IdleUntil` bound and, for packet destinations,
+/// the earliest inbound delivery stamp — rounded *down* to the epoch
+/// grid so the barrier sequence stays a subset of the unelided one
+/// (jumps to the bound itself are exempt: no barrier follows them).
+fn decide(now: u64, end: u64, epoch_len: u64, elide: bool, stop_at: &mut Option<u64>, reports: &[TileReport]) -> Decision {
+    if stop_at.is_none() && reports.iter().all(|r| r.halted) {
+        *stop_at = Some(now.saturating_add(MESH_DRAIN));
+    }
+    let bound = stop_at.map_or(end, |s| s.min(end));
+    if now >= bound {
+        return Decision::Stop;
+    }
+    if !elide {
+        return Decision::Continue;
+    }
+    let mut deadline = vec![u64::MAX; reports.len()];
+    for (d, r) in deadline.iter_mut().zip(reports) {
+        match r.activity {
+            Activity::Busy => return Decision::Continue,
+            Activity::IdleUntil(t) => *d = t,
+            Activity::Quiescent => {}
+        }
+    }
+    for r in reports {
+        for &(peer, stamp) in &r.outbound {
+            deadline[peer] = deadline[peer].min(stamp);
+        }
+    }
+    let m = deadline.iter().copied().min().unwrap_or(u64::MAX).min(bound);
+    let target = if m >= bound { bound } else { (m / epoch_len) * epoch_len };
+    if target <= now {
+        Decision::Continue
+    } else {
+        Decision::Skip(target - now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::{reg::*, Asm};
+    use crate::platform::memmap::{MESH_BASE, UART_BASE};
+
+    #[test]
+    fn star_wiring_assigns_ports_and_slots() {
+        let mesh = Mesh::new(MeshTopology::star(3, CheshireConfig::neo())).unwrap();
+        assert_eq!(mesh.tile_count(), 3);
+        assert_eq!(mesh.epoch_len(), DEFAULT_MESH_LATENCY);
+        assert_eq!(mesh.tile_config(0).mesh_ports.len(), 2);
+        assert_eq!(mesh.tile_config(1).mesh_ports.len(), 1);
+        assert_eq!(mesh.tile_config(2).mesh_ports.len(), 1);
+        // link naming is (this, peer)
+        assert_eq!(mesh.tile_config(0).mesh_ports[1].link, (0, 2));
+        assert_eq!(mesh.tile_config(2).mesh_ports[0].link, (2, 0));
+        // each link's two sides cross-wire their slots
+        for (i, ws) in mesh.wiring.iter().enumerate() {
+            for w in ws {
+                let back = mesh.wiring[w.peer].iter().find(|p| p.peer == i).unwrap();
+                assert_eq!(w.tx, back.rx);
+                assert_eq!(w.rx, back.tx);
+            }
+        }
+    }
+
+    #[test]
+    fn bad_topologies_are_rejected() {
+        let mut t = MeshTopology::star(2, CheshireConfig::neo());
+        t.links[0].latency = 0;
+        assert!(Mesh::new(t).unwrap_err().contains("latency"));
+        let mut t = MeshTopology::star(2, CheshireConfig::neo());
+        t.links[0].b = 7;
+        assert!(Mesh::new(t).unwrap_err().contains("out of range"));
+        let t = MeshTopology { tiles: vec![CheshireConfig::neo(); 2], links: vec![MeshLink::between(1, 1)] };
+        assert!(Mesh::new(t).unwrap_err().contains("self-link"));
+        assert!(Mesh::new(MeshTopology { tiles: Vec::new(), links: Vec::new() }).is_err());
+    }
+
+    #[test]
+    fn topology_from_toml_parses_tiles_and_links() {
+        let text = r#"
+            [mesh]
+            tiles = 3
+
+            [[tile]]
+            slots = "crc"
+            harts = 2
+
+            [[tile]]
+            mshrs = 8
+            backend = "hyperram"
+
+            [[link]]
+            a = 0
+            b = 1
+            latency = 64
+
+            [[link]]
+            a = 0
+            b = 2
+            lanes = 8
+            a_base = 0x7000_0000
+        "#;
+        let t = MeshTopology::from_toml(text).unwrap();
+        assert_eq!(t.tiles.len(), 3);
+        assert_eq!(t.tiles[0].dsa_slots.len(), 1);
+        assert_eq!(t.tiles[0].harts, 2);
+        assert_eq!(t.tiles[1].llc_mshrs, 8);
+        assert_eq!(t.tiles[1].backend, MemBackend::HyperRam);
+        assert_eq!(t.tiles[2], CheshireConfig::neo()); // beyond [[tile]] entries: default
+        assert_eq!(t.links.len(), 2);
+        assert_eq!((t.links[0].a, t.links[0].b, t.links[0].latency), (0, 1, 64));
+        assert_eq!((t.links[1].lanes, t.links[1].a_base), (8, 0x7000_0000));
+        let mesh = Mesh::new(t).unwrap();
+        assert_eq!(mesh.epoch_len(), 64);
+        assert!(MeshTopology::from_toml("[mesh]\n").is_err(), "no tiles");
+        assert!(MeshTopology::from_toml("[[link]]\na = 0\n").is_err(), "missing link key");
+    }
+
+    #[test]
+    fn grid_aligned_decide_never_splits_the_epoch_grid() {
+        let idle = |d: u64| TileReport { halted: false, activity: Activity::IdleUntil(d), outbound: Vec::new() };
+        let mut stop = None;
+        // deadline mid-epoch: round down to the grid (3*128 = 384, not 400)
+        let d = decide(256, 1 << 20, 128, true, &mut stop, &[idle(400), TileReport { halted: false, activity: Activity::Quiescent, outbound: Vec::new() }]);
+        assert_eq!(d, Decision::Skip(384 - 256));
+        // deadline within the current epoch: nothing to skip
+        assert_eq!(decide(256, 1 << 20, 128, true, &mut stop, &[idle(300)]), Decision::Continue);
+        // a busy tile pins everyone
+        let busy = TileReport { halted: false, activity: Activity::Busy, outbound: Vec::new() };
+        assert_eq!(decide(256, 1 << 20, 128, true, &mut stop, &[idle(4000), busy]), Decision::Continue);
+        // an inbound packet stamp caps the destination's deadline
+        let sender = TileReport { halted: false, activity: Activity::Quiescent, outbound: vec![(0, 500)] };
+        let d = decide(256, 1 << 20, 128, true, &mut stop, &[TileReport { halted: false, activity: Activity::Quiescent, outbound: Vec::new() }, sender]);
+        assert_eq!(d, Decision::Skip((500 / 128) * 128 - 256));
+        // all quiescent, nothing pending: jump straight to the bound
+        let q = TileReport { halted: false, activity: Activity::Quiescent, outbound: Vec::new() };
+        assert_eq!(decide(256, 1000, 128, true, &mut stop, &[q.clone()]), Decision::Skip(1000 - 256));
+        // elide off: never skip
+        assert_eq!(decide(256, 1000, 128, false, &mut stop, &[q]), Decision::Continue);
+        // all halted: arm the drain window, then stop at it
+        let h = TileReport { halted: true, activity: Activity::Quiescent, outbound: Vec::new() };
+        assert_eq!(decide(512, 1 << 20, 128, false, &mut stop, &[h.clone()]), Decision::Continue);
+        assert_eq!(stop, Some(512 + MESH_DRAIN));
+        assert_eq!(decide(512 + MESH_DRAIN, 1 << 20, 128, false, &mut stop, &[h]), Decision::Stop);
+    }
+
+    /// The program every smoke test runs: print a marker over the UART,
+    /// then halt.
+    fn uart_halt_program(marker: u8) -> Vec<u8> {
+        let mut a = Asm::new(DRAM_BASE);
+        a.li(S0, UART_BASE as i64);
+        a.li(T0, marker as i64);
+        a.sw(T0, S0, 0);
+        a.label("drain");
+        a.lw(T1, S0, 0x08);
+        a.andi(T1, T1, 0x20);
+        a.beq(T1, ZERO, "drain");
+        a.ebreak();
+        a.finish()
+    }
+
+    #[test]
+    fn single_tile_mesh_matches_bare_soc() {
+        let mesh = Mesh::new(MeshTopology { tiles: vec![CheshireConfig::neo()], links: Vec::new() }).unwrap();
+        for parallel in [false, true] {
+            let mut opts = MeshRun::new(4_000_000);
+            opts.parallel = parallel;
+            let res = mesh.run(&opts, &|_, s: &mut Soc| s.preload(&uart_halt_program(b'm'), DRAM_BASE));
+            assert_eq!(res.tiles.len(), 1);
+            assert_eq!(res.tiles[0].uart, "m", "parallel={parallel}");
+
+            // a bare SoC run on the same cycle schedule (halt, then idle
+            // through the mesh's drain window — where the clock-gated
+            // hart contributes nothing but e.g. DRAM refreshes continue)
+            // is key-for-key identical, modulo scheduler bookkeeping
+            let mut soc = Soc::new(CheshireConfig::neo());
+            soc.preload(&uart_halt_program(b'm'), DRAM_BASE);
+            soc.run(4_000_000);
+            assert!(soc.cpu.halted);
+            assert!(soc.clock.now() < res.cycles, "mesh runs a post-halt drain");
+            soc.run_cycles(res.cycles - soc.clock.now());
+            let arch = |s: &Stats| s.iter().filter(|(k, _)| !k.starts_with("sched.") && !k.starts_with("uop.")).collect::<Vec<_>>();
+            assert_eq!(arch(&res.merged_stats()), arch(&soc.stats), "parallel={parallel}");
+        }
+    }
+
+    /// Two tiles, one link: tile 0 stores a word through its mesh
+    /// window into tile 1's DRAM; tile 1 fence-polls the location until
+    /// the value lands. Exercises the full endpoint path (adoption,
+    /// serialization, tag allocation, delivery, B response) in all four
+    /// execution modes and pins their outputs together.
+    #[test]
+    fn cross_tile_store_is_delivered_and_modes_agree() {
+        const OFF: u64 = 0x100;
+        const MAGIC: i64 = 0x1234_abcd;
+        let t0 = {
+            let mut a = Asm::new(DRAM_BASE);
+            a.li(S0, MESH_BASE as i64);
+            a.li(T0, MAGIC);
+            a.sw(T0, S0, OFF as i32); // blocks until tile 1's B returns
+            a.ebreak();
+            a.finish()
+        };
+        let t1 = {
+            let mut a = Asm::new(DRAM_BASE);
+            a.li(S0, (DRAM_BASE + OFF) as i64);
+            a.li(T2, MAGIC);
+            a.label("poll");
+            a.fence(); // writeback + D$ invalidate: re-read from the LLC
+            a.lw(T1, S0, 0);
+            a.bne(T1, T2, "poll");
+            a.ebreak();
+            a.finish()
+        };
+        let mesh = Mesh::new(MeshTopology::star(2, CheshireConfig::neo())).unwrap();
+        let stage = |i: usize, s: &mut Soc| s.preload(if i == 0 { &t0 } else { &t1 }, DRAM_BASE);
+        let mut prints = Vec::new();
+        for parallel in [false, true] {
+            for elide in [false, true] {
+                let mut opts = MeshRun::new(4_000_000);
+                opts.parallel = parallel;
+                opts.elide = elide;
+                opts.capture = Some((OFF, 4));
+                let res = mesh.run(&opts, &stage);
+                let tag = format!("parallel={parallel} elide={elide}");
+                assert_eq!(res.tiles[1].capture, (MAGIC as u32).to_le_bytes(), "{tag}");
+                assert!(res.tiles[0].stats.get("d2d.t0t1.pad_cycles") > 0, "{tag}: flits crossed the link");
+                // multi-tile merges are t{i}.-prefixed and collision-free
+                let merged = mesh_key_count(&res);
+                assert_eq!(merged.0, merged.1, "{tag}: merged key count == sum of per-tile counts");
+                prints.push((res.fingerprint(), res.cycles));
+            }
+        }
+        assert!(prints.windows(2).all(|w| w[0] == w[1]), "all four modes bit-identical: {prints:?}");
+    }
+
+    /// (merged key count, sum of per-tile key counts) — equal iff the
+    /// `t{i}.` prefixes kept every key distinct. Also asserts every
+    /// merged key carries a tile prefix.
+    fn mesh_key_count(res: &MeshResult) -> (usize, usize) {
+        let merged = res.merged_stats();
+        let merged_n = merged.iter().count();
+        for (k, _) in merged.iter() {
+            assert!(k.starts_with('t') && k.as_bytes().get(1).is_some_and(u8::is_ascii_digit), "unprefixed merged key {k}");
+        }
+        (merged_n, res.tiles.iter().map(|t| t.stats.iter().count()).sum())
+    }
+}

@@ -14,6 +14,7 @@
 
 pub mod bw;
 pub mod chan;
+pub mod mesh;
 pub mod sched;
 pub mod stats;
 pub mod trace;

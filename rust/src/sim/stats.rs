@@ -15,8 +15,31 @@
 //! simulation from 1.85 to ~3 Mcycle/s (see EXPERIMENTS.md §Perf).
 
 use std::collections::BTreeMap;
+use std::sync::Mutex;
 
 const TABLE: usize = 1024; // power of two, > 4× distinct keys
+
+/// Intern a dynamically built key (e.g. a per-tile `t{n}.…` prefix or a
+/// per-link `d2d.t0t1.…` name) into a `&'static str` usable with
+/// [`Stats::add`]'s pointer-interned fast path and the tracer's
+/// `&'static str` event names.
+///
+/// Content-deduplicated and thread-safe: every caller asking for the same
+/// text gets the *same* leaked allocation, so mesh tiles running on
+/// different threads converge on one pointer per key and the per-registry
+/// fast path stays effective. The table only ever grows (keys are leaked
+/// by design — the set of stat/trace names is small and bounded by the
+/// topology), which is what makes handing out `&'static` sound.
+pub fn intern(s: &str) -> &'static str {
+    static INTERNED: Mutex<BTreeMap<&'static str, ()>> = Mutex::new(BTreeMap::new());
+    let mut table = INTERNED.lock().unwrap();
+    if let Some((&k, _)) = table.get_key_value(s) {
+        return k;
+    }
+    let leaked: &'static str = Box::leak(s.to_string().into_boxed_str());
+    table.insert(leaked, ());
+    leaked
+}
 
 #[derive(Clone, Copy)]
 struct Slot {
@@ -203,6 +226,28 @@ mod tests {
         sorted.sort_unstable();
         assert_eq!(keys, sorted, "iteration is sorted key order");
         assert_eq!(ab.report(), ba.report(), "rendered reports are byte-identical");
+    }
+
+    /// `intern` must be content-deduplicating (same pointer for equal
+    /// text, across threads) so dynamically named keys hit the pointer
+    /// fast path just like literals.
+    #[test]
+    fn intern_deduplicates_across_threads() {
+        let a = intern("mesh.test.key");
+        let b = intern(&format!("mesh.test.{}", "key"));
+        assert_eq!(a, "mesh.test.key");
+        assert!(std::ptr::eq(a, b), "equal text interns to one pointer");
+        let handles: Vec<_> = (0..4)
+            .map(|_| std::thread::spawn(|| intern("mesh.test.threaded")))
+            .collect();
+        let ptrs: Vec<&'static str> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for p in &ptrs {
+            assert!(std::ptr::eq(*p, ptrs[0]), "threads converge on one allocation");
+        }
+        let mut s = Stats::new();
+        s.add(a, 2);
+        s.add(b, 3);
+        assert_eq!(s.get("mesh.test.key"), 5);
     }
 
     #[test]

@@ -53,6 +53,11 @@ pub mod pid {
 /// this bias so they never collide with per-source raise threads.
 pub const IRQ_CTX_TID_BASE: u32 = 64;
 
+/// On the D2D process, inter-tile mesh endpoints get their own thread
+/// band above this bias, clear of the per-slot `@d2d` link pairs (two
+/// threads per slot), so mesh traces stay legible per link.
+pub const MESH_TID_BASE: u32 = 64;
+
 /// One trace event: an instant (`span == false`) or a complete span.
 ///
 /// Events carry raw cycle stamps; conversion to microseconds happens only
@@ -336,6 +341,7 @@ fn thread_label(p: u32, t: u32) -> String {
         pid::IRQ => format!("src{t}"),
         pid::DSA => format!("slot{t}"),
         pid::LLC => format!("mshr{t}"),
+        pid::D2D if t >= MESH_TID_BASE => format!("mesh{}", t - MESH_TID_BASE),
         pid::D2D => format!("link{t}"),
         _ => format!("t{t}"),
     }
@@ -409,6 +415,8 @@ mod tests {
         assert_eq!(thread_label(pid::IRQ, IRQ_CTX_TID_BASE + 2), "ctx2");
         assert_eq!(thread_label(pid::CPU, 1), "hart1");
         assert_eq!(thread_label(pid::DSA, 0), "slot0");
+        assert_eq!(thread_label(pid::D2D, 1), "link1");
+        assert_eq!(thread_label(pid::D2D, MESH_TID_BASE + 2), "mesh2");
         assert_eq!(process_label(pid::SCHED), "sched");
     }
 }

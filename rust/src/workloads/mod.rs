@@ -28,11 +28,19 @@
 //! per-hart PLIC IRQ affinity, and results merge through a fenced SPM
 //! mailbox so the architectural output is bit-identical for any hart
 //! count.
+//!
+//! And the **SHARD** workload ([`shard_coordinator_program`] /
+//! [`shard_worker_program`]): the chiplet-mesh acceptance scenario — a
+//! CRC suite sharded across 2–4 SoCs in a star topology. Tile 0
+//! dispatches job tokens over the D2D windows, every tile runs its
+//! shard through its local CRC plug-in, and workers publish results
+//! back into the coordinator's DRAM where a fenced merge folds them
+//! into one word.
 
 use crate::asm::{reg::*, Asm};
 use crate::platform::memmap::{
-    CLINT_BASE, DMA_BASE, DRAM_BASE, DSA_BASE, DSA_WIN_SIZE, LLC_CFG_BASE, PLIC_BASE, SPM_BASE,
-    UART_BASE,
+    CLINT_BASE, DMA_BASE, DRAM_BASE, DSA_BASE, DSA_WIN_SIZE, LLC_CFG_BASE, MESH_BASE,
+    MESH_WIN_SIZE, PLIC_BASE, SPM_BASE, UART_BASE,
 };
 
 /// WFI: interrupts disabled ⇒ sleeps for the whole measurement window.
@@ -1321,10 +1329,221 @@ pub fn twomm_reference(n: usize, a: &[f64], b: &[f64], c: &[f64]) -> Vec<f64> {
     f
 }
 
+// ---------------------------------------------------------------------------
+// SHARD: CRC suite sharded across a chiplet mesh (star topology)
+// ---------------------------------------------------------------------------
+
+/// SHARD: per-tile source buffer the local CRC plug-in reads (DRAM offset).
+/// The fill region runs to [`SHARD_RING_OFF`], bounding shards at 64 KiB.
+pub const SHARD_SRC_OFF: u64 = 0x46_0000;
+/// SHARD: one-descriptor DSA ring in each tile's DRAM (DRAM offset).
+pub const SHARD_RING_OFF: u64 = 0x47_0000;
+/// SHARD: where each tile's CRC engine writes its 8-byte result word.
+pub const SHARD_CRC_OFF: u64 = 0x47_1000;
+/// SHARD: worker-side job mailbox; the coordinator stores [`SHARD_GO`]
+/// here through the D2D window to release the worker.
+pub const SHARD_JOB_OFF: u64 = 0x47_2000;
+/// SHARD: coordinator-side completion flags, one u64 per worker at
+/// `+ 8 * (tile - 1)`; written remotely by the workers.
+pub const SHARD_DONE_OFF: u64 = 0x47_3000;
+/// SHARD: coordinator-side result table. Slot `tile` lives at
+/// `+ 64 * tile` — one cache line per writer, so the coordinator's own
+/// dirty line (slot 0) can never write back over a remote slot. The
+/// XOR-merged word lands at `+ 64 * socs`.
+pub const SHARD_RESULT_OFF: u64 = 0x47_4000;
+/// SHARD: job token the coordinator stores into each worker's mailbox.
+pub const SHARD_GO: u64 = 0x6d65_7368;
+/// SHARD: largest mesh the star coordinator can drive (its window count).
+pub const SHARD_MAX_TILES: usize = 1 + crate::platform::config::MAX_MESH_PORTS;
+
+/// Deterministic per-tile source fill (xorshift64*, seeded by tile id) —
+/// every shard is distinct so a cross-wired result table cannot pass.
+pub fn shard_fill(tile: usize, kib: u32) -> Vec<u8> {
+    let n = kib as usize * 1024;
+    let mut x = 0x9e37_79b9_7f4a_7c15u64 ^ ((tile as u64 + 1) << 32);
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        v.push((x.wrapping_mul(0x2545_f491_4f6c_dd1d) >> 56) as u8);
+    }
+    v
+}
+
+/// Reference CRC words the result table must hold: slot `t` is tile `t`'s
+/// shard CRC (zero-extended to u64, matching the engine's result word).
+pub fn shard_expected_crcs(socs: usize, kib: u32) -> Vec<u64> {
+    (0..socs)
+        .map(|t| crate::dsa::crc::crc32(&shard_fill(t, kib)) as u64)
+        .collect()
+}
+
+/// Reference XOR-merge of all shard CRCs (the word at `+ 64 * socs`).
+pub fn shard_expected_merge(socs: usize, kib: u32) -> u64 {
+    shard_expected_crcs(socs, kib).iter().fold(0, |a, c| a ^ c)
+}
+
+/// Queue one CRC32 descriptor to the tile-local slot-0 plug-in, poll its
+/// completion counter, and leave the 8-byte result word in `S11`.
+/// Clobbers `S1`, `S8`, `S9`, `T0`, `T1`; defines label `crc_wait`.
+fn emit_shard_crc(a: &mut Asm, kib: u32) {
+    let len = u64::from(kib) * 1024;
+    a.li(S9, (DRAM_BASE + SHARD_RING_OFF) as i64);
+    a.li(T0, crate::dsa::frontend::opcode::CRC32 as i64);
+    a.sd(T0, S9, 0); // word0: op (imm = 0)
+    a.li(T0, (DRAM_BASE + SHARD_SRC_OFF) as i64);
+    a.sd(T0, S9, 8); // arg0: src
+    a.li(T0, (DRAM_BASE + SHARD_CRC_OFF) as i64);
+    a.sd(T0, S9, 16); // arg1: dst
+    a.li(T0, len as i64);
+    a.sd(T0, S9, 24); // arg2: len
+    a.fence(); // descriptor visible before the doorbell
+    a.li(S1, DSA_BASE as i64);
+    a.li(T0, (DRAM_BASE + SHARD_RING_OFF) as i64);
+    a.sw(T0, S1, 0x04); // RING_LO
+    a.sw(ZERO, S1, 0x08); // RING_HI
+    a.li(T0, 1);
+    a.sw(T0, S1, 0x0c); // RING_SZ
+    a.sw(T0, S1, 0x14); // TAIL
+    a.sw(T0, S1, 0x18); // DOORBELL
+    a.label("crc_wait");
+    a.lw(T1, S1, 0x28); // COMPLETED
+    a.beq(T1, ZERO, "crc_wait");
+    a.fence(); // drop any stale D$ line over the engine's result
+    a.li(S8, (DRAM_BASE + SHARD_CRC_OFF) as i64);
+    a.ld(S11, S8, 0);
+}
+
+/// Signature byte + THR-empty drain + halt (defines label `udrain`).
+fn emit_sig_halt(a: &mut Asm, byte: u8) {
+    a.li(S1, UART_BASE as i64);
+    a.li(T0, byte as i64);
+    a.sw(T0, S1, 0);
+    a.label("udrain");
+    a.lw(T1, S1, 0x08);
+    a.andi(T1, T1, 0x20);
+    a.beq(T1, ZERO, "udrain");
+    a.ebreak();
+}
+
+/// SHARD coordinator (tile 0 of a star mesh with `socs` tiles total).
+///
+/// 1. **Dispatch** — store [`SHARD_GO`] into each worker's job mailbox
+///    through D2D window `w - 1` (single-beat blocking stores: each B
+///    response round-trips the link, so dispatch order is architectural).
+/// 2. **Local shard** — run its own CRC job on the tile-local plug-in and
+///    park the result in slot 0 of the result table.
+/// 3. **Collect** — fence-poll each worker's DONE flag (written remotely
+///    into coordinator DRAM; the worker's preceding remote result store is
+///    ordered ahead of it by its B response).
+/// 4. **Merge** — fence, XOR all `socs` result words into `+ 64 * socs`,
+///    fence again so the merged line reaches memory, then signature `'S'`.
+pub fn shard_coordinator_program(base: u64, socs: usize, kib: u32) -> Vec<u8> {
+    assert!(
+        (2..=SHARD_MAX_TILES).contains(&socs),
+        "star coordinator drives 1..={} workers",
+        SHARD_MAX_TILES - 1
+    );
+    assert!((1..=64).contains(&kib), "shard fill region is 64 KiB");
+    let mut a = Asm::new(base);
+
+    // dispatch before touching the local engine: workers overlap with us
+    a.li(T0, SHARD_GO as i64);
+    for w in 1..socs {
+        let mailbox = MESH_BASE + (w as u64 - 1) * MESH_WIN_SIZE + SHARD_JOB_OFF;
+        a.li(S0, mailbox as i64);
+        a.sd(T0, S0, 0);
+    }
+
+    emit_shard_crc(&mut a, kib);
+    a.li(S0, (DRAM_BASE + SHARD_RESULT_OFF) as i64);
+    a.sd(S11, S0, 0); // own slot; own cache line
+
+    for w in 1..socs {
+        let done = DRAM_BASE + SHARD_DONE_OFF + 8 * (w as u64 - 1);
+        a.li(S0, done as i64);
+        a.label(&format!("done{w}"));
+        a.fence(); // invalidate: the flag arrives via the LLC, not the D$
+        a.ld(T1, S0, 0);
+        a.beq(T1, ZERO, &format!("done{w}"));
+    }
+
+    a.fence(); // refetch the remote-written result slots
+    a.li(S0, (DRAM_BASE + SHARD_RESULT_OFF) as i64);
+    a.li(T2, 0);
+    for t in 0..socs {
+        a.ld(T1, S0, 64 * t as i32);
+        a.xor(T2, T2, T1);
+    }
+    a.sd(T2, S0, 64 * socs as i32);
+    a.fence(); // push the merged line out for host readback
+    emit_sig_halt(&mut a, b'S');
+    a.finish()
+}
+
+/// SHARD worker (tile `tile >= 1` of the star mesh).
+///
+/// Fence-polls its job mailbox until the coordinator's [`SHARD_GO`]
+/// lands, runs its shard on the tile-local CRC plug-in, then publishes
+/// result-then-DONE through its single D2D window (two blocking stores,
+/// so the coordinator can never observe DONE before the result).
+pub fn shard_worker_program(base: u64, tile: usize, kib: u32) -> Vec<u8> {
+    assert!((1..SHARD_MAX_TILES).contains(&tile), "workers are tiles 1..");
+    assert!((1..=64).contains(&kib), "shard fill region is 64 KiB");
+    let mut a = Asm::new(base);
+
+    a.li(S0, (DRAM_BASE + SHARD_JOB_OFF) as i64);
+    a.li(T2, SHARD_GO as i64);
+    a.label("job");
+    a.fence();
+    a.ld(T1, S0, 0);
+    a.bne(T1, T2, "job");
+
+    emit_shard_crc(&mut a, kib);
+
+    // result word, then the DONE flag, through window 0 → coordinator
+    a.li(S0, (MESH_BASE + SHARD_RESULT_OFF + 64 * tile as u64) as i64);
+    a.sd(S11, S0, 0);
+    a.li(S0, (MESH_BASE + SHARD_DONE_OFF + 8 * (tile as u64 - 1)) as i64);
+    a.li(T0, 1);
+    a.sd(T0, S0, 0);
+    emit_sig_halt(&mut a, b'w');
+    a.finish()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::platform::{CheshireConfig, Soc};
+
+    #[test]
+    fn shard_fills_are_deterministic_and_tile_distinct() {
+        assert_eq!(shard_fill(0, 4), shard_fill(0, 4));
+        assert_ne!(shard_fill(0, 4), shard_fill(1, 4));
+        assert_eq!(shard_fill(2, 16).len(), 16 * 1024);
+        let crcs = shard_expected_crcs(4, 4);
+        assert_eq!(crcs.len(), 4);
+        assert!(crcs.iter().all(|&c| c != 0 && c <= u64::from(u32::MAX)));
+        assert_eq!(
+            shard_expected_merge(4, 4),
+            crcs.iter().fold(0, |a, c| a ^ c)
+        );
+    }
+
+    #[test]
+    fn shard_programs_assemble_within_bounds() {
+        // programs live at DRAM_BASE and must end well before the fill
+        // region at SHARD_SRC_OFF
+        for socs in 2..=SHARD_MAX_TILES {
+            let c = shard_coordinator_program(DRAM_BASE, socs, 16);
+            assert!(!c.is_empty() && c.len() < SHARD_SRC_OFF as usize);
+            for t in 1..socs {
+                let w = shard_worker_program(DRAM_BASE, t, 16);
+                assert!(!w.is_empty() && w.len() < SHARD_SRC_OFF as usize);
+            }
+        }
+    }
 
     #[test]
     fn wfi_program_parks_the_core() {

@@ -17,7 +17,11 @@
 //! * observability: tracing never perturbs architectural state (trace-on
 //!   and trace-off runs are bit-identical), the non-scheduler event
 //!   stream is elision-invariant, and identical-seed exports are
-//!   byte-identical.
+//!   byte-identical;
+//! * chiplet mesh: for random star topologies running the sharded-CRC
+//!   workload, all four executor modes ({parallel, sequential} ×
+//!   {elision on, off}) are architecturally bit-identical and the
+//!   captured CRCs match a host-side reference.
 
 use cheshire::axi::memsub::MemSub;
 use cheshire::axi::port::axi_bus;
@@ -1399,6 +1403,89 @@ mod dse_model {
                 );
                 let err_e = rel_err(p.energy_pj, r.energy_pj());
                 assert!(err_e <= 0.25, "{}: energy error {:.1}%", r.name, 100.0 * err_e);
+            }
+        });
+    }
+}
+
+/// Mesh executor equivalence: for random star topologies (tile count,
+/// per-tile memory backend/TLB mix, link latency/lanes, shard size) the
+/// sharded-CRC workload must produce a bit-identical architectural
+/// fingerprint across all four execution modes — {parallel, sequential}
+/// × {event-horizon elision on, off} — and the CRC results captured from
+/// the coordinator's result table must equal the host-side reference
+/// (so the equivalence cannot hold vacuously on a wedged protocol).
+mod mesh_equivalence {
+    use cheshire::harness::scenario::stage_shard_tile;
+    use cheshire::platform::config::{DsaKind, DsaSlot, MemBackend};
+    use cheshire::platform::CheshireConfig;
+    use cheshire::sim::mesh::{Mesh, MeshLink, MeshResult, MeshRun, MeshTopology};
+    use cheshire::sim::prop::{cases, Rng};
+    use cheshire::workloads::{shard_expected_crcs, shard_expected_merge, SHARD_RESULT_OFF};
+
+    /// A random star mesh: 2–4 tiles around the coordinator, one
+    /// common link latency (the lookahead must not depend on which
+    /// link is slowest — `Mesh` takes the min — but a shared value
+    /// keeps the runtime bounded), per-tile backend/TLB diversity.
+    fn random_star(rng: &mut Rng) -> (MeshTopology, usize) {
+        let socs = rng.range(2, 4) as usize;
+        let latency = *rng.pick(&[32u64, 64, 128]);
+        let lanes = *rng.pick(&[8u32, 16]);
+        let mut tiles = Vec::new();
+        for _ in 0..socs {
+            let mut cfg = CheshireConfig::neo();
+            cfg.backend = if rng.bool() { MemBackend::Rpc } else { MemBackend::HyperRam };
+            cfg.tlb_entries = *rng.pick(&[16usize, 4]);
+            cfg.dsa_slots = vec![DsaSlot::local(DsaKind::Crc)];
+            tiles.push(cfg);
+        }
+        let links = (1..socs)
+            .map(|i| MeshLink { lanes, latency, ..MeshLink::between(0, i) })
+            .collect();
+        (MeshTopology { tiles, links }, socs)
+    }
+
+    /// One full shard run in the given mode.
+    fn run_mode(topo: &MeshTopology, socs: usize, kib: u32, parallel: bool, elide: bool) -> MeshResult {
+        let mesh = Mesh::new(topo.clone()).expect("random star wires");
+        let mut opts = MeshRun::new(60_000_000);
+        opts.parallel = parallel;
+        opts.elide = elide;
+        opts.capture = Some((SHARD_RESULT_OFF, 64 * (socs + 1)));
+        mesh.run(&opts, &|tile, soc| stage_shard_tile(soc, tile, socs, kib))
+    }
+
+    #[test]
+    fn all_four_executor_modes_are_bit_identical() {
+        cases(4, 0x4D45_5348, |rng| {
+            let (topo, socs) = random_star(rng);
+            let kib = rng.range(1, 4) as u32;
+
+            let reference = run_mode(&topo, socs, kib, false, false);
+            // the protocol actually completed: every tile signed off and
+            // the captured CRC table matches the host-side reference
+            assert!(reference.tiles[0].uart.contains('S'), "coordinator signed off");
+            for t in 1..socs {
+                assert!(reference.tiles[t].uart.contains('w'), "worker {t} signed off");
+            }
+            let cap = &reference.tiles[0].capture;
+            let word = |i: usize| u64::from_le_bytes(cap[i * 64..i * 64 + 8].try_into().unwrap());
+            for (t, &e) in shard_expected_crcs(socs, kib).iter().enumerate() {
+                assert_eq!(word(t), e, "tile {t} CRC == host reference (socs={socs}, kib={kib})");
+            }
+            assert_eq!(word(socs), shard_expected_merge(socs, kib), "merged CRC word");
+            // the links actually carried traffic (dispatch + result merge)
+            assert!(reference.tiles[0].stats.get("d2d.t0t1.aw") > 0, "link 0-1 carried beats");
+
+            let fp = reference.fingerprint();
+            for &(parallel, elide) in &[(false, true), (true, false), (true, true)] {
+                let res = run_mode(&topo, socs, kib, parallel, elide);
+                assert_eq!(res.cycles, reference.cycles, "stop cycle (par={parallel}, elide={elide})");
+                assert_eq!(
+                    res.fingerprint(),
+                    fp,
+                    "architectural fingerprint (par={parallel}, elide={elide}, socs={socs}, kib={kib})"
+                );
             }
         });
     }
